@@ -1,0 +1,160 @@
+//! The paper's `calculate_pi` example (Sec. 3.11): approximate π by
+//! integrating the indicator function of the unit circle on an adaptively
+//! refined mesh — AMR machinery with no hydrodynamics at all, driven by the
+//! base `Driver` abstraction and a task-based global reduction.
+//!
+//! The "physics package" registers one cell-centered variable `in_circle`;
+//! the refinement criterion refines any block crossed by the circle
+//! boundary. Each refinement level halves the error of the area estimate.
+
+use std::collections::HashMap;
+
+use parthenon::comm::{ReduceOp, World};
+use parthenon::config::ParameterInput;
+use parthenon::mesh::{AmrFlag, Mesh, MeshConfig};
+use parthenon::tasks::{TaskRegion, TaskStatus, NONE};
+use parthenon::vars::{FieldDef, Metadata, MetadataFlag};
+
+const RADIUS: f64 = 1.0;
+
+fn fill_in_circle(mesh: &mut Mesh) {
+    let shape = mesh.cfg.index_shape();
+    for b in &mut mesh.blocks {
+        let coords = b.coords;
+        let arr = b.data.get_mut("in_circle").unwrap();
+        for j in shape.is_(1)..shape.ie(1) {
+            for i in shape.is_(0)..shape.ie(0) {
+                let x = coords.center(0, i);
+                let y = coords.center(1, j);
+                let v = if x * x + y * y <= RADIUS * RADIUS { 1.0 } else { 0.0 };
+                arr.set(0, 0, j, i, v);
+            }
+        }
+    }
+}
+
+/// Refine blocks crossed by the circle boundary (mixed 0/1 cells).
+fn refinement_flags(mesh: &Mesh) -> HashMap<parthenon::mesh::LogicalLocation, AmrFlag> {
+    let shape = mesh.cfg.index_shape();
+    let mut flags = HashMap::new();
+    for b in &mesh.blocks {
+        let arr = b.data.get("in_circle").unwrap();
+        let mut any0 = false;
+        let mut any1 = false;
+        for j in shape.is_(1)..shape.ie(1) {
+            for i in shape.is_(0)..shape.ie(0) {
+                if arr.get(0, 0, j, i) > 0.5 {
+                    any1 = true;
+                } else {
+                    any0 = true;
+                }
+            }
+        }
+        let flag = if any0 && any1 { AmrFlag::Refine } else { AmrFlag::Same };
+        flags.insert(b.loc, flag);
+    }
+    flags
+}
+
+fn main() {
+    let nranks = 2;
+    let max_level = 6u8;
+    World::launch(nranks, move |rank, world| {
+        let mut pin = ParameterInput::from_str(
+            "<parthenon/mesh>\nnx1 = 64\nnx2 = 64\nx1min = -1.5\nx1max = 1.5\n\
+             x2min = -1.5\nx2max = 1.5\n<parthenon/meshblock>\nnx1 = 16\nnx2 = 16\n",
+        )
+        .unwrap();
+        let cfg = MeshConfig::from_params(&mut pin).unwrap();
+        let fields = vec![FieldDef {
+            name: "in_circle".into(),
+            metadata: Metadata::new(&[MetadataFlag::Cell, MetadataFlag::Derived]),
+        }];
+        let mut mesh = Mesh::build(cfg, fields, rank, world.size());
+        fill_in_circle(&mut mesh);
+
+        // AMR loop: refine boundary blocks until max_level
+        for _ in 0..max_level {
+            // allgather flags so every rank rebuilds the same tree
+            let comm = world.comm(rank, 3);
+            let mut payload = Vec::new();
+            for (loc, flag) in refinement_flags(&mesh) {
+                let gid = mesh.tree.gid_of(&loc).unwrap() as u64;
+                payload.extend_from_slice(&gid.to_le_bytes());
+                payload.push(matches!(flag, AmrFlag::Refine) as u8);
+            }
+            let gathered = comm.allgather(payload);
+            let mut flags = HashMap::new();
+            for blob in &gathered {
+                for chunk in blob.chunks_exact(9) {
+                    let gid = u64::from_le_bytes(chunk[..8].try_into().unwrap()) as usize;
+                    let loc = mesh.tree.leaves()[gid];
+                    if chunk[8] == 1 {
+                        flags.insert(loc, AmrFlag::Refine);
+                    }
+                }
+            }
+            if flags.is_empty() {
+                break;
+            }
+            let new_tree = mesh.tree.regrid(&flags, max_level);
+            if new_tree.leaves() == mesh.tree.leaves() {
+                break;
+            }
+            mesh.tree = new_tree;
+            let costs = vec![1.0; mesh.tree.nblocks()];
+            mesh.ranks = parthenon::balance::assign_blocks(&costs, world.size());
+            mesh.rebuild_local_blocks();
+            fill_in_circle(&mut mesh); // data is analytic: regenerate
+        }
+
+        // task-based area integration with a regional reduction (Sec. 3.10)
+        let shape = mesh.cfg.index_shape();
+        let nblocks = mesh.blocks.len();
+        struct Ctx {
+            mesh: Mesh,
+            partial: f64,
+            total: f64,
+            world: World,
+            rank: usize,
+        }
+        let mut region: TaskRegion<Ctx> = TaskRegion::new(nblocks.max(1));
+        let mut marks = Vec::new();
+        for bi in 0..nblocks {
+            let id = region.list(bi).add(NONE, move |c: &mut Ctx| {
+                let b = &c.mesh.blocks[bi];
+                let arr = b.data.get("in_circle").unwrap();
+                let da = b.coords.cell_volume();
+                let mut s = 0.0;
+                for j in shape.is_(1)..shape.ie(1) {
+                    for i in shape.is_(0)..shape.ie(0) {
+                        s += arr.get(0, 0, j, i) as f64 * da;
+                    }
+                }
+                c.partial += s;
+                TaskStatus::Complete
+            });
+            marks.push((bi, id));
+        }
+        region.add_regional(marks, |c: &mut Ctx| {
+            let comm = c.world.comm(c.rank, 0);
+            c.total = comm.allreduce(c.partial, ReduceOp::Sum);
+            TaskStatus::Complete
+        });
+        let mut ctx = Ctx { mesh, partial: 0.0, total: 0.0, world: world.clone(), rank };
+        region.execute(&mut ctx, 1000).unwrap();
+
+        if rank == 0 {
+            let pi = ctx.total / (RADIUS * RADIUS);
+            println!(
+                "blocks {} (max level {}), area = {:.8} -> pi ≈ {:.8} (err {:.2e})",
+                ctx.mesh.tree.nblocks(),
+                ctx.mesh.tree.max_level(),
+                ctx.total,
+                pi,
+                (pi - std::f64::consts::PI).abs()
+            );
+            assert!((pi - std::f64::consts::PI).abs() < 5e-3);
+        }
+    });
+}

@@ -1,0 +1,67 @@
+//! Linear-wave convergence study — the automated convergence test the paper
+//! mentions for PARTHENON-HYDRO (Sec. 4.1). Propagates an acoustic wave for
+//! one period at several resolutions and prints the L1 error + measured
+//! convergence order.
+
+use parthenon::comm::World;
+use parthenon::config::ParameterInput;
+use parthenon::driver::{EvolutionDriver, HydroSim};
+use parthenon::hydro::problems::linear_wave_exact;
+use parthenon::hydro::CONS;
+
+fn l1_error(nx: usize) -> f64 {
+    let input = format!(
+        "<parthenon/job>\nproblem = linear_wave\nquiet = true\n\
+         <parthenon/mesh>\nnx1 = {nx}\n<parthenon/meshblock>\nnx1 = {}\n\
+         <parthenon/time>\ntlim = 1.0\nnlim = -1\n\
+         <hydro>\ngamma = 1.4\ncfl = 0.3\n",
+        nx / 2
+    );
+    let err = std::sync::Arc::new(std::sync::Mutex::new(0.0f64));
+    let e2 = err.clone();
+    World::launch(1, move |rank, world| {
+        let pin = ParameterInput::from_str(&input).unwrap();
+        let mut sim = HydroSim::new(pin, rank, world).unwrap();
+        let t_end = 1.0;
+        while sim.time < t_end {
+            if sim.time + sim.dt > t_end {
+                sim.dt = t_end - sim.time;
+            }
+            sim.step().unwrap();
+        }
+        let shape = sim.mesh.cfg.index_shape();
+        let mut e = 0.0f64;
+        let mut cells = 0usize;
+        for b in &sim.mesh.blocks {
+            let arr = b.data.get(CONS).unwrap();
+            for i in shape.is_(0)..shape.ie(0) {
+                let x = b.coords.center(0, i);
+                let exact = linear_wave_exact(x, t_end, 1.4, 1e-3, 1.0, 1.0 / 1.4, 1.0);
+                e += (arr.get(0, 0, 0, i) - exact[0]).abs() as f64;
+                cells += 1;
+            }
+        }
+        *e2.lock().unwrap() = e / cells as f64;
+    });
+    let v = *err.lock().unwrap();
+    v
+}
+
+fn main() {
+    println!("{:>6} {:>12} {:>8}", "nx", "L1(rho)", "order");
+    let mut prev: Option<f64> = None;
+    for nx in [16usize, 32, 64, 128, 256] {
+        let e = l1_error(nx);
+        let order = prev.map(|p| (p / e).log2());
+        match order {
+            Some(o) => println!("{nx:6} {e:12.4e} {o:8.2}"),
+            None => println!("{nx:6} {e:12.4e} {:>8}", "-"),
+        }
+        prev = Some(e);
+    }
+    println!(
+        "\nNOTE: the hot path is f32 (artifact dtype); the error floor near\n\
+         ~2e-6 is amplitude^2 nonlinearity + f32 roundoff, so the measured\n\
+         order falls off at the highest resolutions (see DESIGN.md)."
+    );
+}

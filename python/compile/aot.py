@@ -1,0 +1,184 @@
+"""AOT pipeline: lower every artifact variant to HLO *text* + manifest.json.
+
+HLO text (NOT ``lowered.compiler_ir().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Run as ``python -m compile.aot --out ../artifacts`` (the Makefile
+``artifacts`` target).  Python never runs again after this: the Rust
+coordinator loads the manifest and compiles executables per rank at startup.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import bufspec, model
+
+# ---------------------------------------------------------------------------
+# Variant table.  (kind, dim, n, nb, impl, nbr_idx)
+# ---------------------------------------------------------------------------
+
+KINDS = ("stage", "dt", "pack", "unpack", "fused")
+
+# (dim, block interior size, pack sizes)
+SHAPES_FULL = [
+    # 3D cubes: Fig 8 sweep + Table 1/2 + weak/strong scaling blocks
+    (3, (8, 8, 8), (1, 2, 4, 8, 16)),
+    (3, (16, 16, 16), (1, 2, 4, 8, 16)),
+    (3, (32, 32, 32), (1, 2, 4, 8, 16)),
+    (3, (64, 64, 64), (1, 2, 4)),
+    # 2D squares: quickstart / KH / e2e driver
+    (2, (32, 32, 1), (1, 2, 4, 8, 16)),
+    (2, (64, 64, 1), (1, 2, 4, 8, 16)),
+    (2, (128, 128, 1), (1, 2, 4)),
+    (2, (256, 256, 1), (1, 2)),
+]
+
+SHAPES_QUICK = [
+    (3, (16, 16, 16), (1, 4)),
+    (2, (32, 32, 1), (1, 4)),
+]
+
+# Per-neighbor pack/unpack kernels ("original" one-kernel-per-buffer regime,
+# Fig 8): one launch per buffer per block for both fill and apply.
+PACK1_SHAPES = [(3, (8, 8, 8)), (3, (16, 16, 16)), (3, (32, 32, 32)),
+                (3, (64, 64, 64))]
+PACK1_QUICK = [(3, (16, 16, 16))]
+
+# Pallas-kernel variants (validation + Table 2 device row).
+PALLAS_VARIANTS = [
+    ("stage", 3, (16, 16, 16), 1),
+    ("stage", 3, (16, 16, 16), 4),
+    ("stage", 2, (64, 64, 1), 1),
+    ("fused", 2, (64, 64, 1), 4),
+]
+PALLAS_QUICK = [("stage", 3, (16, 16, 16), 1)]
+
+
+def variant_name(kind, dim, n, nb, impl, nbr_idx=None):
+    nx, ny, nz = n
+    s = f"{kind}_d{dim}_b{nx}x{ny}x{nz}_nb{nb}_{impl}"
+    if nbr_idx is not None:
+        s += f"_n{nbr_idx:02d}"
+    return s
+
+
+def variants(quick=False):
+    shapes = SHAPES_QUICK if quick else SHAPES_FULL
+    out = []
+    for dim, n, nbs in shapes:
+        for nb in nbs:
+            for kind in KINDS:
+                out.append((kind, dim, n, nb, "jnp", None))
+    for dim, n in (PACK1_QUICK if quick else PACK1_SHAPES):
+        for i in range(len(bufspec.neighbors(dim))):
+            out.append(("pack1", dim, n, 1, "jnp", i))
+            out.append(("unpack1", dim, n, 1, "jnp", i))
+    for kind, dim, n, nb in (PALLAS_QUICK if quick else PALLAS_VARIANTS):
+        out.append((kind, dim, n, nb, "pallas", None))
+    return out
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(kind, dim, n, nb, impl, nbr_idx):
+    fn = model.build(kind, nb, dim, n, impl=impl, nbr_idx=nbr_idx)
+    specs = model.arg_specs(kind, nb, dim, n, nbr_idx=nbr_idx)
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def bufspec_tables(quick=False):
+    """Segment tables for every distinct (dim, n), cross-checked by Rust."""
+    seen = {}
+    for kind, dim, n, nb, impl, nbr in variants(quick):
+        key = (dim, n)
+        if key in seen:
+            continue
+        seen[key] = {
+            "dim": dim,
+            "n": list(n),
+            "neighbors": [list(o) for o in bufspec.neighbors(dim)],
+            "seg_lens": bufspec.segment_lengths(n, dim),
+            "buflen": bufspec.buflen(n, dim),
+            "opposite": bufspec.opposite_index(dim),
+            "total_shape": list(bufspec.total_shape(n, dim)),
+        }
+    return list(seen.values())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="small variant subset (CI)")
+    ap.add_argument("--only", default=None,
+                    help="only lower variants whose name starts with this")
+    args = ap.parse_args()
+
+    quick = args.quick or os.environ.get("PARTHENON_AOT_QUICK") == "1"
+    skip_existing = os.environ.get("PARTHENON_AOT_SKIP_EXISTING") == "1"
+
+    os.makedirs(args.out, exist_ok=True)
+    entries = []
+    t0 = time.time()
+    vs = variants(quick)
+    for i, (kind, dim, n, nb, impl, nbr) in enumerate(vs):
+        name = variant_name(kind, dim, n, nb, impl, nbr)
+        fname = name + ".hlo.txt"
+        path = os.path.join(args.out, fname)
+        entry = {
+            "name": name,
+            "kind": kind,
+            "dim": dim,
+            "n": list(n),
+            "nb": nb,
+            "impl": impl,
+            "file": fname,
+            "buflen": bufspec.buflen(n, dim),
+        }
+        if nbr is not None:
+            entry["nbr"] = nbr
+        entries.append(entry)
+        if args.only and not name.startswith(args.only):
+            continue
+        if skip_existing and os.path.exists(path):
+            continue
+        text = lower_variant(kind, dim, n, nb, impl, nbr)
+        with open(path, "w") as f:
+            f.write(text)
+        if (i + 1) % 25 == 0 or i + 1 == len(vs):
+            print(f"[aot] {i + 1}/{len(vs)} ({time.time() - t0:.1f}s) {name}",
+                  flush=True)
+
+    manifest = {
+        "version": 1,
+        "nghost": bufspec.NGHOST,
+        "nvar": bufspec.NVAR,
+        "scal_layout": ["g0", "g1", "beta", "dt", "dx", "dy", "dz", "gamma"],
+        "quick": quick,
+        "artifacts": entries,
+        "bufspec": bufspec_tables(quick),
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(entries)} artifact entries "
+          f"in {time.time() - t0:.1f}s -> {args.out}/manifest.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,120 @@
+"""Boundary-buffer layout contract, mirrored by rust/src/bvals/bufspec.rs.
+
+Same-level ghost-zone exchange between MeshBlocks works on flat, per-block
+buffer vectors.  For a block of interior size (nx, ny, nz) with NGHOST ghost
+cells in every *active* dimension, the buffer vector concatenates one segment
+per neighbor, in the canonical neighbor order defined by :func:`neighbors`.
+
+* The *send* segment for neighbor offset ``o`` holds the interior cells
+  adjacent to that boundary (width NGHOST in each pinched axis, full interior
+  extent in tangential axes), laid out ``[v, z, y, x]`` row-major.
+* The *recv* segment for neighbor offset ``o`` is written into the ghost
+  region on the ``o`` side of the block.
+* Routing (done by the Rust coordinator): block A's send segment for offset
+  ``o`` becomes block B's recv segment for offset ``-o`` where B is A's
+  neighbor in direction ``o``.
+
+This module is authoritative: aot.py embeds the segment table into
+artifacts/manifest.json and the Rust side cross-checks its own table
+against it at startup.
+"""
+
+NGHOST = 2
+NVAR = 5  # rho, mx, my, mz, E
+
+
+def neighbors(dim):
+    """Canonical neighbor offsets (ox1, ox2, ox3), x-fastest lexicographic.
+
+    3D: 26 offsets; 2D: 8 offsets (ox3 == 0); 1D: 2 offsets.
+    """
+    r1 = (-1, 0, 1)
+    r2 = r1 if dim >= 2 else (0,)
+    r3 = r1 if dim >= 3 else (0,)
+    out = []
+    for o3 in r3:
+        for o2 in r2:
+            for o1 in r1:
+                if (o1, o2, o3) != (0, 0, 0):
+                    out.append((o1, o2, o3))
+    return out
+
+
+def _axis_send_range(o, n, active, g=NGHOST):
+    """Index range [lo, hi) along one axis of the full (ghosted) array for
+    the send slab of a neighbor with per-axis offset ``o``."""
+    if not active:
+        return (0, 1)
+    if o == -1:
+        return (g, 2 * g)
+    if o == 1:
+        return (n, n + g)
+    return (g, g + n)
+
+
+def _axis_recv_range(o, n, active, g=NGHOST):
+    """Ghost-region range [lo, hi) along one axis for neighbor offset ``o``."""
+    if not active:
+        return (0, 1)
+    if o == -1:
+        return (0, g)
+    if o == 1:
+        return (g + n, g + n + g)
+    return (g, g + n)
+
+
+def send_slab(offset, n, dim, g=NGHOST):
+    """((xlo,xhi),(ylo,yhi),(zlo,zhi)) send ranges for neighbor ``offset``.
+
+    ``n`` = (nx, ny, nz) interior sizes (nz/ny may be 1 for lower dims).
+    """
+    o1, o2, o3 = offset
+    nx, ny, nz = n
+    return (
+        _axis_send_range(o1, nx, True, g),
+        _axis_send_range(o2, ny, dim >= 2, g),
+        _axis_send_range(o3, nz, dim >= 3, g),
+    )
+
+
+def recv_slab(offset, n, dim, g=NGHOST):
+    """Ghost-region ranges for neighbor ``offset`` (same shape as its
+    opposite send slab)."""
+    o1, o2, o3 = offset
+    nx, ny, nz = n
+    return (
+        _axis_recv_range(o1, nx, True, g),
+        _axis_recv_range(o2, ny, dim >= 2, g),
+        _axis_recv_range(o3, nz, dim >= 3, g),
+    )
+
+
+def slab_len(slab):
+    (x0, x1), (y0, y1), (z0, z1) = slab
+    return (x1 - x0) * (y1 - y0) * (z1 - z0)
+
+
+def segment_lengths(n, dim, nvar=NVAR, g=NGHOST):
+    """Per-neighbor segment lengths (in f32 elements, including nvar)."""
+    return [nvar * slab_len(send_slab(o, n, dim, g)) for o in neighbors(dim)]
+
+
+def buflen(n, dim, nvar=NVAR, g=NGHOST):
+    """Total flat buffer length per block."""
+    return sum(segment_lengths(n, dim, nvar, g))
+
+
+def opposite_index(dim):
+    """Mapping i -> j such that neighbors(dim)[j] == -neighbors(dim)[i]."""
+    ns = neighbors(dim)
+    idx = {o: i for i, o in enumerate(ns)}
+    return [idx[(-o[0], -o[1], -o[2])] for o in ns]
+
+
+def total_shape(n, dim, g=NGHOST):
+    """Full array shape (Z, Y, X) including ghosts in active dims."""
+    nx, ny, nz = n
+    zt = nz + 2 * g if dim >= 3 else 1
+    yt = ny + 2 * g if dim >= 2 else 1
+    xt = nx + 2 * g
+    return (zt, yt, xt)

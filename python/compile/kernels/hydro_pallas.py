@@ -1,0 +1,62 @@
+"""L1: the hydro RK stage as a Pallas kernel.
+
+The kernel body operates on ONE MeshBlock resident in "VMEM" (the Pallas
+block); the pallas grid iterates over the MeshBlockPack dimension ``nb`` —
+exactly the paper's MeshBlockPack picture: one kernel launch covers every
+block in the pack, with the per-block work expressed once.
+
+HARDWARE ADAPTATION (paper targets GPUs; we think in TPU terms per the
+DESIGN.md §Hardware-Adaptation): a whole 16^3 block of 5 conserved variables
+is 5*20^3*4 B ≈ 160 KB — it fits VMEM comfortably, so the natural TPU
+schedule is "one block per grid step, whole-block vector ops", not a
+threadblock tiling.  BlockSpec expresses the HBM->VMEM schedule; the stencil
+arithmetic is plain VPU-style vector work (the Euler update has no matmul,
+so the MXU is idle — the algorithm is bandwidth-bound, matching the paper's
+roofline argument).
+
+Must be lowered with ``interpret=True``: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.  Correctness is pinned to
+``ref.py`` by pytest (see python/tests/test_kernel.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..bufspec import NVAR
+from . import ref
+
+
+def _stage_kernel(dim):
+    """Kernel body: one RK stage on one block held in the Pallas block."""
+
+    def kernel(u_ref, u0_ref, scal_ref, o_ref):
+        u = u_ref[0]        # [NVAR, Z, Y, X] block, resident in "VMEM"
+        u0 = u0_ref[0]
+        scal = scal_ref[...]
+        o_ref[0] = ref.stage(u, u0, scal, dim)
+
+    return kernel
+
+
+def stage_pallas(nb, dim, shape_zyx):
+    """Build the batched stage function backed by the Pallas kernel.
+
+    Returns ``f(u, u0, scal) -> u_new`` for u of shape [nb, NVAR, Z, Y, X].
+    """
+    z, y, x = shape_zyx
+    blk = (1, NVAR, z, y, x)
+    bspec = pl.BlockSpec(blk, lambda b: (b, 0, 0, 0, 0))
+    sspec = pl.BlockSpec((8,), lambda b: (0,))
+
+    def fn(u, u0, scal):
+        return pl.pallas_call(
+            _stage_kernel(dim),
+            grid=(nb,),
+            in_specs=[bspec, bspec, sspec],
+            out_specs=bspec,
+            out_shape=jax.ShapeDtypeStruct((nb, NVAR, z, y, x), jnp.float32),
+            interpret=True,
+        )(u, u0, scal)
+
+    return fn

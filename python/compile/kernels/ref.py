@@ -1,0 +1,266 @@
+"""Pure-jnp single-block hydro oracle (L2 reference and production compute).
+
+All functions operate on ONE block array ``u`` of shape ``[NVAR, Z, Y, X]``
+(f32, ghosts included in active dims, NGHOST = 2).  ``model.py`` batches them
+over the MeshBlockPack dimension with ``jax.vmap``.
+
+The scheme mirrors PARTHENON-HYDRO (paper Sec. 4.1): ideal-gas Euler
+equations, piecewise-linear reconstruction (MC limiter) on primitive
+variables, HLLE Riemann solver, unsplit flux-divergence update, used inside
+a two-stage RK2 integrator.  A stage computes
+
+    u_new = g0 * u0 + g1 * u + beta * dt * L(u)
+
+on interior cells (ghosts are passed through from ``u``; they are refilled
+by boundary communication before the next stage).
+"""
+
+import jax.numpy as jnp
+
+from .. import bufspec
+from ..bufspec import NGHOST, NVAR
+
+IDN, IM1, IM2, IM3, IEN = 0, 1, 2, 3, 4
+# Primitive variable slots (same indexing): rho, vx, vy, vz, p.
+IVX, IVY, IVZ, IPR = 1, 2, 3, 4
+
+PRESSURE_FLOOR = 1.0e-10
+DENSITY_FLOOR = 1.0e-10
+
+# Axis index within a [NVAR, Z, Y, X] array for each direction d=0(x),1(y),2(z)
+_AXIS = {0: 3, 1: 2, 2: 1}
+
+
+def primitives(u, gamma):
+    """Conserved -> primitive: w = [rho, vx, vy, vz, p], with floors."""
+    rho = jnp.maximum(u[IDN], DENSITY_FLOOR)
+    vx = u[IM1] / rho
+    vy = u[IM2] / rho
+    vz = u[IM3] / rho
+    ke = 0.5 * rho * (vx * vx + vy * vy + vz * vz)
+    p = jnp.maximum((gamma - 1.0) * (u[IEN] - ke), PRESSURE_FLOOR)
+    return jnp.stack([rho, vx, vy, vz, p])
+
+
+def conserved(w, gamma):
+    """Primitive -> conserved (used by problem generators / tests)."""
+    rho, vx, vy, vz, p = w[IDN], w[IVX], w[IVY], w[IVZ], w[IPR]
+    e = p / (gamma - 1.0) + 0.5 * rho * (vx * vx + vy * vy + vz * vz)
+    return jnp.stack([rho, rho * vx, rho * vy, rho * vz, e])
+
+
+def sound_speed(w, gamma):
+    return jnp.sqrt(gamma * w[IPR] / w[IDN])
+
+
+def _shift(q, d, s):
+    """q shifted by s cells along direction d: result[..., i] = q[..., i+s].
+
+    Uses roll; the wrapped edge entries are never consumed (stencil stays
+    NGHOST-deep inside the array bounds).
+    """
+    ax = _AXIS[d]
+    return jnp.roll(q, -s, axis=ax)
+
+
+def mc_slopes(w, d):
+    """Monotonized-central limited slopes of primitives along direction d."""
+    dqm = w - _shift(w, d, -1)  # q_i - q_{i-1}
+    dqp = _shift(w, d, 1) - w   # q_{i+1} - q_i
+    prod = dqm * dqp
+    avg = 0.5 * (dqm + dqp)
+    lim = jnp.sign(avg) * jnp.minimum(
+        2.0 * jnp.minimum(jnp.abs(dqm), jnp.abs(dqp)), jnp.abs(avg)
+    )
+    return jnp.where(prod > 0.0, lim, 0.0).astype(w.dtype)
+
+
+def _face_slice(q, d, lo, n_faces):
+    """Cells [lo, lo+n_faces) along direction d of a [NVAR,Z,Y,X] array."""
+    ax = _AXIS[d]
+    idx = [slice(None)] * q.ndim
+    idx[ax] = slice(lo, lo + n_faces)
+    return q[tuple(idx)]
+
+
+def reconstruct(w, d, n_int):
+    """PLM interface states along d.
+
+    Returns (wL, wR) at the n_int+1 faces bounding the interior cells:
+    face f (f = 0..n_int) sits between cells (g-1+f) and (g+f).
+    """
+    g = NGHOST
+    dq = mc_slopes(w, d)
+    nf = n_int + 1
+    w_l = _face_slice(w, d, g - 1, nf) + 0.5 * _face_slice(dq, d, g - 1, nf)
+    w_r = _face_slice(w, d, g, nf) - 0.5 * _face_slice(dq, d, g, nf)
+    return w_l, w_r
+
+
+def euler_flux(w, d, gamma):
+    """Analytic Euler flux of primitive state w along direction d."""
+    rho, p = w[IDN], w[IPR]
+    vn = w[1 + d]
+    e = p / (gamma - 1.0) + 0.5 * rho * (
+        w[IVX] * w[IVX] + w[IVY] * w[IVY] + w[IVZ] * w[IVZ]
+    )
+    f = [rho * vn]
+    for comp in (IVX, IVY, IVZ):
+        mom = rho * w[comp] * vn
+        if comp == 1 + d:
+            mom = mom + p
+        f.append(mom)
+    f.append((e + p) * vn)
+    return jnp.stack(f)
+
+
+def hlle_flux(w_l, w_r, d, gamma):
+    """HLLE flux from left/right primitive interface states along d."""
+    c_l = sound_speed(w_l, gamma)
+    c_r = sound_speed(w_r, gamma)
+    vn_l = w_l[1 + d]
+    vn_r = w_r[1 + d]
+    s_l = jnp.minimum(jnp.minimum(vn_l - c_l, vn_r - c_r), 0.0)
+    s_r = jnp.maximum(jnp.maximum(vn_l + c_l, vn_r + c_r), 0.0)
+    u_l = conserved(w_l, gamma)
+    u_r = conserved(w_r, gamma)
+    f_l = euler_flux(w_l, d, gamma)
+    f_r = euler_flux(w_r, d, gamma)
+    denom = s_r - s_l
+    # s_r >= 0 >= s_l and s_r - s_l >= c_l + c_r > 0: no division hazard.
+    return (s_r * f_l - s_l * f_r + s_l * s_r * (u_r - u_l)) / denom
+
+
+def _interior(shape_zyx, dim, g=NGHOST):
+    """Slices of the interior box for a [NVAR, Z, Y, X] array."""
+    z, y, x = shape_zyx
+    sz = slice(g, z - g) if dim >= 3 else slice(0, 1)
+    sy = slice(g, y - g) if dim >= 2 else slice(0, 1)
+    sx = slice(g, x - g)
+    return (slice(None), sz, sy, sx)
+
+
+def _n_int(shape_zyx, dim, g=NGHOST):
+    zt, yt, xt = shape_zyx
+    return {
+        0: xt - 2 * g,
+        1: (yt - 2 * g) if dim >= 2 else 1,
+        2: (zt - 2 * g) if dim >= 3 else 1,
+    }
+
+
+def rhs(u, dim, dx, dy, dz, gamma):
+    """-div(F) on the interior box. Returns [NVAR, nz, ny, nx]."""
+    w = primitives(u, gamma)
+    g = NGHOST
+    n_int = _n_int(u.shape[1:], dim)
+    inv_d = {0: 1.0 / dx, 1: 1.0 / dy, 2: 1.0 / dz}
+
+    out = None
+    for d in range(dim):
+        w_l, w_r = reconstruct(w, d, n_int[d])
+        f = hlle_flux(w_l, w_r, d, gamma)
+        # f has n_int[d]+1 entries along direction d and FULL (ghosted)
+        # extent along the other directions; restrict those to interior.
+        idx = [slice(None)] * 4
+        for dd in range(dim):
+            if dd != d:
+                idx[_AXIS[dd]] = slice(g, g + n_int[dd])
+        f = f[tuple(idx)]
+        ax = _AXIS[d]
+        lo = [slice(None)] * 4
+        hi = [slice(None)] * 4
+        lo[ax] = slice(0, n_int[d])
+        hi[ax] = slice(1, n_int[d] + 1)
+        div = (f[tuple(hi)] - f[tuple(lo)]) * inv_d[d]
+        out = div if out is None else out + div
+    return -out
+
+
+def stage(u, u0, scal, dim):
+    """One RK stage. scal = [g0, g1, beta, dt, dx, dy, dz, gamma] (f32[8])."""
+    g0, g1, beta, dt = scal[0], scal[1], scal[2], scal[3]
+    dx, dy, dz, gamma = scal[4], scal[5], scal[6], scal[7]
+    dudt = rhs(u, dim, dx, dy, dz, gamma)
+    box = _interior(u.shape[1:], dim)
+    u_new_int = g0 * u0[box] + g1 * u[box] + beta * dt * dudt
+    return u.at[box].set(u_new_int)
+
+
+def min_dt(u, scal, dim):
+    """Per-block CFL limit min_d(dx_d / (|v_d| + c)) over interior cells.
+
+    (The CFL safety factor is applied by the Rust coordinator.)
+    """
+    dx, dy, dz, gamma = scal[4], scal[5], scal[6], scal[7]
+    box = _interior(u.shape[1:], dim)
+    w = primitives(u[box], gamma)
+    c = sound_speed(w, gamma)
+    dt = dx / (jnp.abs(w[IVX]) + c)
+    if dim >= 2:
+        dt = jnp.minimum(dt, dy / (jnp.abs(w[IVY]) + c))
+    if dim >= 3:
+        dt = jnp.minimum(dt, dz / (jnp.abs(w[IVZ]) + c))
+    return jnp.min(dt)
+
+
+# ---------------------------------------------------------------------------
+# Boundary-buffer pack / unpack ("fill-in-one": every segment in one kernel).
+# ---------------------------------------------------------------------------
+
+def _slab_slices(slab):
+    (x0, x1), (y0, y1), (z0, z1) = slab
+    return (slice(None), slice(z0, z1), slice(y0, y1), slice(x0, x1))
+
+
+def pack_buffers(u, dim, n):
+    """Extract all same-level send segments into one flat f32[BUFLEN]."""
+    segs = []
+    for o in bufspec.neighbors(dim):
+        sl = _slab_slices(bufspec.send_slab(o, n, dim))
+        segs.append(u[sl].reshape(-1))
+    return jnp.concatenate(segs)
+
+
+def pack_one_buffer(u, dim, n, nbr_idx):
+    """Extract a single neighbor's send segment (the "original" per-buffer
+    kernel regime of Fig. 8)."""
+    o = bufspec.neighbors(dim)[nbr_idx]
+    sl = _slab_slices(bufspec.send_slab(o, n, dim))
+    return u[sl].reshape(-1)
+
+
+def unpack_one_buffer(u, seg, dim, n, nbr_idx):
+    """Apply a single neighbor's recv segment into its ghost region (the
+    per-buffer unpack regime of Fig. 8)."""
+    o = bufspec.neighbors(dim)[nbr_idx]
+    slab = bufspec.recv_slab(o, n, dim)
+    (x0, x1), (y0, y1), (z0, z1) = slab
+    shp = (NVAR, z1 - z0, y1 - y0, x1 - x0)
+    return u.at[_slab_slices(slab)].set(seg.reshape(shp))
+
+
+def unpack_buffers(u, bufs, dim, n):
+    """Write every recv segment of ``bufs`` into the ghost regions of u."""
+    offset = 0
+    for o in bufspec.neighbors(dim):
+        slab = bufspec.recv_slab(o, n, dim)
+        ln = NVAR * bufspec.slab_len(slab)
+        seg = bufs[offset:offset + ln]
+        offset += ln
+        (x0, x1), (y0, y1), (z0, z1) = slab
+        shp = (NVAR, z1 - z0, y1 - y0, x1 - x0)
+        u = u.at[_slab_slices(slab)].set(seg.reshape(shp))
+    return u
+
+
+def fused_step(u, u0, bufs_in, scal, dim, n):
+    """unpack -> stage -> pack -> dt, one executable (peak launch fusion).
+
+    Returns (u_new, bufs_out, dt_min).
+    """
+    u = unpack_buffers(u, bufs_in, dim, n)
+    u_new = stage(u, u0, scal, dim)
+    bufs_out = pack_buffers(u_new, dim, n)
+    dt = min_dt(u_new, scal, dim)
+    return u_new, bufs_out, dt

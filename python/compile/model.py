@@ -1,0 +1,162 @@
+"""L2: batched (MeshBlockPack) hydro compute graph.
+
+Builds the jitted, AOT-lowerable functions for every artifact kind listed in
+DESIGN.md.  Each function is shaped for a static MeshBlockPack: a leading
+``nb`` dimension over blocks of one fixed block size — the paper's
+MeshBlockPack/"fill-in-one" machinery made concrete as one XLA executable
+per (kind, shape, nb) variant.
+
+All functions take/return f32 and are pure; the Rust coordinator owns all
+state and sequencing.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import bufspec
+from .bufspec import NVAR
+from .kernels import ref
+from .kernels.hydro_pallas import stage_pallas
+
+F32 = jnp.float32
+
+
+def _shape_zyx(n, dim):
+    return bufspec.total_shape(n, dim)
+
+
+def make_stage(nb, dim, n, impl="jnp"):
+    """(u [nb,NVAR,Z,Y,X], u0, scal f32[8]) -> u_new."""
+    zyx = _shape_zyx(n, dim)
+    if impl == "pallas":
+        inner = stage_pallas(nb, dim, zyx)
+
+        def fn(u, u0, scal):
+            return (inner(u, u0, scal),)
+
+        return fn
+
+    def fn(u, u0, scal):
+        return (jax.vmap(lambda a, b: ref.stage(a, b, scal, dim))(u, u0),)
+
+    return fn
+
+
+def make_dt(nb, dim, n):
+    """(u, scal) -> per-block CFL dt, f32[nb]."""
+
+    def fn(u, scal):
+        return (jax.vmap(lambda a: ref.min_dt(a, scal, dim))(u),)
+
+    return fn
+
+
+def make_pack(nb, dim, n):
+    """(u) -> bufs f32[nb, BUFLEN]: every boundary buffer in one launch."""
+
+    def fn(u):
+        return (jax.vmap(lambda a: ref.pack_buffers(a, dim, n))(u),)
+
+    return fn
+
+
+def make_pack1(nb, dim, n, nbr_idx):
+    """(u) -> one neighbor's buffer (the per-buffer-kernel baseline)."""
+
+    def fn(u):
+        return (jax.vmap(lambda a: ref.pack_one_buffer(a, dim, n, nbr_idx))(u),)
+
+    return fn
+
+
+def make_unpack1(nb, dim, n, nbr_idx):
+    """(u, seg) -> u with one neighbor's ghost region applied."""
+
+    def fn(u, seg):
+        return (
+            jax.vmap(lambda a, s: ref.unpack_one_buffer(a, s, dim, n, nbr_idx))(
+                u, seg
+            ),
+        )
+
+    return fn
+
+
+def make_unpack(nb, dim, n):
+    """(u, bufs) -> u with all ghost regions filled, one launch."""
+
+    def fn(u, bufs):
+        return (jax.vmap(lambda a, b: ref.unpack_buffers(a, b, dim, n))(u, bufs),)
+
+    return fn
+
+
+def make_fused(nb, dim, n, impl="jnp"):
+    """(u, u0, bufs_in, scal) -> (u_new, bufs_out, dt[nb]).
+
+    unpack -> stage -> pack -> dt in ONE executable: the steady-state cycle
+    needs exactly one launch per stage per pack.
+    """
+    if impl == "pallas":
+        zyx = _shape_zyx(n, dim)
+        pstage = stage_pallas(nb, dim, zyx)
+
+        def fn(u, u0, bufs_in, scal):
+            u = jax.vmap(lambda a, b: ref.unpack_buffers(a, b, dim, n))(u, bufs_in)
+            u_new = pstage(u, u0, scal)
+            bufs_out = jax.vmap(lambda a: ref.pack_buffers(a, dim, n))(u_new)
+            dt = jax.vmap(lambda a: ref.min_dt(a, scal, dim))(u_new)
+            return u_new, bufs_out, dt
+
+        return fn
+
+    def fn(u, u0, bufs_in, scal):
+        def one(a, b, c):
+            return ref.fused_step(a, b, c, scal, dim, n)
+
+        return jax.vmap(one)(u, u0, bufs_in)
+
+    return fn
+
+
+def arg_specs(kind, nb, dim, n, nbr_idx=None):
+    """ShapeDtypeStructs for jax.jit(...).lower of an artifact kind."""
+    zyx = _shape_zyx(n, dim)
+    u = jax.ShapeDtypeStruct((nb, NVAR) + zyx, F32)
+    scal = jax.ShapeDtypeStruct((8,), F32)
+    bl = bufspec.buflen(n, dim)
+    bufs = jax.ShapeDtypeStruct((nb, bl), F32)
+    if kind == "stage":
+        return (u, u, scal)
+    if kind == "dt":
+        return (u, scal)
+    if kind == "pack" or kind == "pack1":
+        return (u,)
+    if kind == "unpack":
+        return (u, bufs)
+    if kind == "unpack1":
+        seg_len = bufspec.segment_lengths(n, dim)[nbr_idx]
+        seg = jax.ShapeDtypeStruct((nb, seg_len), F32)
+        return (u, seg)
+    if kind == "fused":
+        return (u, u, bufs, scal)
+    raise ValueError(f"unknown artifact kind {kind!r}")
+
+
+def build(kind, nb, dim, n, impl="jnp", nbr_idx=None):
+    """Return the python callable for an artifact variant."""
+    if kind == "stage":
+        return make_stage(nb, dim, n, impl)
+    if kind == "dt":
+        return make_dt(nb, dim, n)
+    if kind == "pack":
+        return make_pack(nb, dim, n)
+    if kind == "pack1":
+        return make_pack1(nb, dim, n, nbr_idx)
+    if kind == "unpack":
+        return make_unpack(nb, dim, n)
+    if kind == "unpack1":
+        return make_unpack1(nb, dim, n, nbr_idx)
+    if kind == "fused":
+        return make_fused(nb, dim, n, impl)
+    raise ValueError(f"unknown artifact kind {kind!r}")

@@ -1,0 +1,55 @@
+"""AOT pipeline: variant table sanity and a real lowering round-trip."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, bufspec
+
+
+def test_variant_names_unique():
+    vs = aot.variants(quick=False)
+    names = [aot.variant_name(k, d, n, nb, impl, nbr)
+             for (k, d, n, nb, impl, nbr) in vs]
+    assert len(names) == len(set(names))
+    assert len(names) > 200  # full set is a real sweep
+
+
+def test_quick_subset_is_subset_shapes():
+    vq = aot.variants(quick=True)
+    assert 0 < len(vq) < len(aot.variants(quick=False))
+
+
+def test_bufspec_tables_complete():
+    tables = aot.bufspec_tables(quick=False)
+    keys = {(t["dim"], tuple(t["n"])) for t in tables}
+    for (k, d, n, nb, impl, nbr) in aot.variants(quick=False):
+        assert (d, tuple(n)) in keys
+    for t in tables:
+        assert t["buflen"] == sum(t["seg_lens"])
+        assert len(t["neighbors"]) == len(t["seg_lens"])
+        assert t["total_shape"] == list(
+            bufspec.total_shape(tuple(t["n"]), t["dim"]))
+
+
+def test_lower_one_variant_produces_hlo_text():
+    text = aot.lower_variant("dt", 3, (8, 8, 8), 1, "jnp", None)
+    assert "ENTRY" in text and "HloModule" in text
+
+
+def test_manifest_on_disk_if_built():
+    """If `make artifacts` has run, the manifest must be self-consistent."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                        "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        m = json.load(f)
+    assert m["nghost"] == bufspec.NGHOST
+    assert m["nvar"] == bufspec.NVAR
+    names = [a["name"] for a in m["artifacts"]]
+    assert len(names) == len(set(names))
+    adir = os.path.dirname(path)
+    for a in m["artifacts"]:
+        assert os.path.exists(os.path.join(adir, a["file"])), a["name"]

@@ -1,0 +1,75 @@
+"""Invariants of the boundary-buffer layout contract (bufspec)."""
+
+import numpy as np
+import pytest
+
+from compile import bufspec
+
+
+@pytest.mark.parametrize("dim,count", [(1, 2), (2, 8), (3, 26)])
+def test_neighbor_count(dim, count):
+    ns = bufspec.neighbors(dim)
+    assert len(ns) == count
+    assert len(set(ns)) == count
+    for o in ns:
+        assert o != (0, 0, 0)
+        if dim < 3:
+            assert o[2] == 0
+        if dim < 2:
+            assert o[1] == 0
+
+
+@pytest.mark.parametrize("dim", [1, 2, 3])
+def test_opposite_is_involution(dim):
+    ns = bufspec.neighbors(dim)
+    opp = bufspec.opposite_index(dim)
+    for i, o in enumerate(ns):
+        assert ns[opp[i]] == (-o[0], -o[1], -o[2])
+        assert opp[opp[i]] == i
+
+
+@pytest.mark.parametrize("dim,n", [(2, (8, 8, 1)), (2, (16, 8, 1)),
+                                   (3, (8, 8, 8)), (3, (16, 8, 4))])
+def test_send_recv_shapes_match(dim, n):
+    """A's send slab for o must be congruent to B's recv slab for -o."""
+    for o in bufspec.neighbors(dim):
+        s = bufspec.send_slab(o, n, dim)
+        r = bufspec.recv_slab((-o[0], -o[1], -o[2]), n, dim)
+        sdims = [hi - lo for lo, hi in s]
+        rdims = [hi - lo for lo, hi in r]
+        assert sdims == rdims, (o, s, r)
+
+
+@pytest.mark.parametrize("dim,n", [(2, (8, 8, 1)), (3, (8, 8, 8)),
+                                   (3, (16, 8, 4))])
+def test_recv_slabs_tile_ghost_shell_exactly(dim, n):
+    """The recv slabs cover every ghost cell exactly once, no interior."""
+    zt, yt, xt = bufspec.total_shape(n, dim)
+    cover = np.zeros((zt, yt, xt), dtype=int)
+    for o in bufspec.neighbors(dim):
+        (x0, x1), (y0, y1), (z0, z1) = bufspec.recv_slab(o, n, dim)
+        cover[z0:z1, y0:y1, x0:x1] += 1
+    g = bufspec.NGHOST
+    # interior must be untouched, ghosts exactly once
+    izlo = g if dim >= 3 else 0
+    izhi = zt - g if dim >= 3 else zt
+    iylo = g if dim >= 2 else 0
+    iyhi = yt - g if dim >= 2 else yt
+    inner = cover[izlo:izhi, iylo:iyhi, g:xt - g]
+    assert (inner == 0).all()
+    total_ghost = zt * yt * xt - inner.size
+    assert int(cover.sum()) == total_ghost
+    assert cover.max() == 1
+
+
+@pytest.mark.parametrize("dim,n", [(2, (8, 8, 1)), (3, (8, 8, 8))])
+def test_buflen_consistency(dim, n):
+    lens = bufspec.segment_lengths(n, dim)
+    assert sum(lens) == bufspec.buflen(n, dim)
+    assert all(l > 0 for l in lens)
+
+
+def test_buflen_known_value():
+    # 3D 16^3, g=2: faces 6*(2*16*16), edges 12*(2*2*16), corners 8*(2*2*2)
+    per_var = 6 * 2 * 16 * 16 + 12 * 4 * 16 + 8 * 8
+    assert bufspec.buflen((16, 16, 16), 3) == 5 * per_var

@@ -1,0 +1,178 @@
+"""L1 Pallas kernel vs pure-jnp oracle — the core correctness signal —
+plus physical invariants of the reference scheme itself."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import bufspec, model
+from compile.kernels import ref
+
+GAMMA = 1.4
+
+
+def random_state(rng, dim, n, nb=1, amp=0.1):
+    zyx = bufspec.total_shape(n, dim)
+    u = np.zeros((nb, 5) + zyx, np.float32)
+    u[:, 0] = 1.0
+    u[:, 4] = 1.0 / (GAMMA - 1.0)
+    u += rng.normal(0.0, amp, u.shape).astype(np.float32)
+    u[:, 0] = np.maximum(u[:, 0], 0.2)
+    u[:, 4] = np.maximum(u[:, 4], 0.5)
+    return u
+
+
+def scal_vec(dt=1e-3, dx=0.1, g0=0.0, g1=1.0, beta=1.0):
+    return np.array([g0, g1, beta, dt, dx, dx, dx, GAMMA], np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Pallas vs ref
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    nx=st.sampled_from([4, 6, 8]),
+    ny=st.sampled_from([4, 8]),
+    nz=st.sampled_from([4, 8]),
+    nb=st.sampled_from([1, 2, 3]),
+)
+def test_pallas_stage_matches_ref_3d(seed, nx, ny, nz, nb):
+    rng = np.random.default_rng(seed)
+    n = (nx, ny, nz)
+    u = random_state(rng, 3, n, nb)
+    scal = scal_vec()
+    f_ref = model.build("stage", nb, 3, n, "jnp")
+    f_pal = model.build("stage", nb, 3, n, "pallas")
+    a = np.asarray(f_ref(u, u, scal)[0])
+    b = np.asarray(f_pal(u, u, scal)[0])
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    nx=st.sampled_from([8, 16]),
+    nb=st.sampled_from([1, 2]),
+)
+def test_pallas_stage_matches_ref_2d(seed, nx, nb):
+    rng = np.random.default_rng(seed)
+    n = (nx, nx, 1)
+    u = random_state(rng, 2, n, nb)
+    scal = scal_vec()
+    a = np.asarray(model.build("stage", nb, 2, n, "jnp")(u, u, scal)[0])
+    b = np.asarray(model.build("stage", nb, 2, n, "pallas")(u, u, scal)[0])
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_pallas_fused_matches_ref_2d():
+    rng = np.random.default_rng(7)
+    n, nb = (64, 64, 1), 4
+    u = random_state(rng, 2, n, nb)
+    bufs = rng.normal(1.0, 0.05, (nb, bufspec.buflen(n, 2))).astype(np.float32)
+    scal = scal_vec()
+    ra = model.build("fused", nb, 2, n, "jnp")(u, u, bufs, scal)
+    rb = model.build("fused", nb, 2, n, "pallas")(u, u, bufs, scal)
+    for a, b in zip(ra, rb):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Physical invariants of the scheme
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dim,n", [(2, (16, 16, 1)), (3, (8, 8, 8))])
+def test_uniform_state_is_stationary(dim, n):
+    zyx = bufspec.total_shape(n, dim)
+    u = np.zeros((5,) + zyx, np.float32)
+    u[0] = 1.3
+    u[1] = 1.3 * 0.5  # uniform velocity is also stationary
+    u[4] = 2.0 + 0.5 * 1.3 * 0.25
+    out = np.asarray(ref.stage(jnp.asarray(u), jnp.asarray(u),
+                               jnp.asarray(scal_vec(dt=1e-2)), dim))
+    np.testing.assert_allclose(out, u, rtol=1e-5, atol=1e-6)
+
+
+def test_identity_when_beta_zero():
+    rng = np.random.default_rng(3)
+    u = random_state(rng, 3, (8, 8, 8))[0]
+    scal = scal_vec(beta=0.0)
+    out = np.asarray(ref.stage(jnp.asarray(u), jnp.asarray(u),
+                               jnp.asarray(scal), 3))
+    np.testing.assert_allclose(out, u, rtol=0, atol=0)
+
+
+def test_mirror_symmetry_x():
+    """Mirroring the state in x and flipping vx must commute with a stage."""
+    rng = np.random.default_rng(11)
+    n = (16, 8, 1)
+    u = random_state(rng, 2, n)[0]
+    scal = scal_vec()
+    out = np.asarray(ref.stage(jnp.asarray(u), jnp.asarray(u),
+                               jnp.asarray(scal), 2))
+    um = u[:, :, :, ::-1].copy()
+    um[1] = -um[1]
+    outm = np.asarray(ref.stage(jnp.asarray(um), jnp.asarray(um),
+                                jnp.asarray(scal), 2))
+    outm_back = outm[:, :, :, ::-1].copy()
+    outm_back[1] = -outm_back[1]
+    np.testing.assert_allclose(out, outm_back, rtol=1e-5, atol=1e-6)
+
+
+def test_dt_positive_and_decreases_with_velocity():
+    rng = np.random.default_rng(5)
+    n = (8, 8, 8)
+    u = random_state(rng, 3, n)[0]
+    scal = scal_vec()
+    dt0 = float(ref.min_dt(jnp.asarray(u), jnp.asarray(scal), 3))
+    assert dt0 > 0
+    u_fast = u.copy()
+    u_fast[1] += 5.0 * u_fast[0]  # add big vx
+    u_fast[4] += 0.5 * 25.0 * u_fast[0]
+    dt1 = float(ref.min_dt(jnp.asarray(u_fast), jnp.asarray(scal), 3))
+    assert dt1 < dt0
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), dim=st.sampled_from([2, 3]))
+def test_pack_unpack_roundtrip(seed, dim):
+    """unpack(pack-permuted periodic self-buffers) == periodic ghost fill."""
+    rng = np.random.default_rng(seed)
+    n = (8, 8, 8) if dim == 3 else (8, 8, 1)
+    u = random_state(rng, dim, n)[0]
+    bufs = np.asarray(ref.pack_buffers(jnp.asarray(u), dim, n))
+    # Route: a single periodic block is its own neighbor in every direction;
+    # the send segment for o lands in the recv slot for o of the same block
+    # (A=B, recv index = index(o) since send o -> B recv at -o, and the
+    # neighbor at o of A is A itself; A receives FROM neighbor at o the data
+    # that neighbor sent towards -o... which is A's own send segment for -o).
+    ns = bufspec.neighbors(dim)
+    opp = bufspec.opposite_index(dim)
+    lens = bufspec.segment_lengths(n, dim)
+    starts = np.concatenate([[0], np.cumsum(lens)]).astype(int)
+    routed = np.zeros_like(bufs)
+    for i in range(len(ns)):
+        j = opp[i]
+        routed[starts[i]:starts[i] + lens[i]] = bufs[starts[j]:starts[j] + lens[j]]
+    out = np.asarray(ref.unpack_buffers(jnp.asarray(u), jnp.asarray(routed),
+                                        dim, n))
+    # Compare against numpy periodic fill of ghost zones
+    g = bufspec.NGHOST
+    nx, ny, nz = n
+    expected = u.copy()
+
+    # periodic wrap via np.take along each active axis
+    def wrap_axis(a, axis, n_int):
+        idx = np.r_[np.arange(n_int, n_int + g),
+                    np.arange(g, g + n_int),
+                    np.arange(g, 2 * g)]
+        return np.take(a, idx, axis=axis)
+    expected = wrap_axis(expected, 3, nx)
+    if dim >= 2:
+        expected = wrap_axis(expected, 2, ny)
+    if dim >= 3:
+        expected = wrap_axis(expected, 1, nz)
+    np.testing.assert_allclose(out, expected, rtol=0, atol=0)

@@ -1,0 +1,135 @@
+"""Tests for the analysis tools: pbin reader + perf comparator."""
+
+import json
+import os
+import struct
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from tools import perf_compare  # noqa: E402
+from tools.pbin_reader import MAGIC, Snapshot  # noqa: E402
+
+
+def make_pbin(path, dim=2, block_nx=(4, 4, 1), leaves=None, time=0.5, cycle=7):
+    """Hand-roll a pbin file matching rust/src/io/mod.rs."""
+    if leaves is None:
+        leaves = [(0, 0, 0, 0), (0, 1, 0, 0)]
+    header = {
+        "time": time,
+        "time_bits": struct.pack(">d", time).hex(),
+        "dt_bits": struct.pack(">d", 1e-3).hex(),
+        "cycle": cycle,
+        "dim": dim,
+        "block_nx": list(block_nx),
+        "leaves": [list(l) for l in leaves],
+        "vars": [{"name": "cons", "ncomp": 5}],
+        "nblocks": len(leaves),
+    }
+    zone = block_nx[0] * (block_nx[1] if dim >= 2 else 1) * (
+        block_nx[2] if dim >= 3 else 1
+    )
+    h = json.dumps(header).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<Q", len(h)))
+        f.write(h)
+        for gid in range(len(leaves)):
+            f.write(struct.pack("<Q", gid))
+            data = np.arange(5 * zone, dtype="<f4") + gid * 1000
+            f.write(data.tobytes())
+    return header
+
+
+def test_reader_roundtrip(tmp_path):
+    path = str(tmp_path / "t.pbin")
+    make_pbin(path)
+    snap = Snapshot(path)
+    assert snap.cycle == 7
+    assert abs(snap.time - 0.5) < 1e-15
+    assert snap.max_level() == 0
+    blk = snap.block_var(1, "cons")
+    assert blk.shape == (5, 1, 4, 4)
+    assert blk[0, 0, 0, 0] == 1000.0
+
+
+def test_assemble_uniform(tmp_path):
+    path = str(tmp_path / "t.pbin")
+    make_pbin(path)
+    snap = Snapshot(path)
+    rho = snap.assemble_uniform("cons", component=0)
+    assert rho.shape == (1, 4, 8)
+    # block 1 occupies x in [4, 8)
+    assert rho[0, 0, 4] == 1000.0
+    assert rho[0, 0, 0] == 0.0
+
+
+def test_conserved_totals_weighting(tmp_path):
+    path = str(tmp_path / "t.pbin")
+    make_pbin(path, leaves=[(0, 0, 0, 0), (1, 2, 0, 0)])
+    snap = Snapshot(path)
+    tot = snap.conserved_totals()
+    # level-1 block contributes 1/4 the volume weight in 2D
+    zone = 16
+    b0 = np.arange(5 * zone, dtype=np.float64).reshape(5, -1).sum(1)
+    b1 = (np.arange(5 * zone, dtype=np.float64) + 1000).reshape(5, -1).sum(1)
+    np.testing.assert_allclose(tot, b0 + 0.25 * b1)
+
+
+def test_reader_rejects_garbage(tmp_path):
+    path = str(tmp_path / "bad.pbin")
+    with open(path, "wb") as f:
+        f.write(b"NOTPBIN")
+    with pytest.raises(ValueError):
+        Snapshot(path)
+
+
+def test_reader_reads_real_output(tmp_path):
+    """If the quickstart example has run, its outputs must parse."""
+    cand = "../out_quickstart"
+    if not os.path.isdir(cand):
+        pytest.skip("quickstart output not present")
+    files = [f for f in os.listdir(cand) if f.endswith(".pbin")]
+    if not files:
+        pytest.skip("no pbin files")
+    snap = Snapshot(os.path.join(cand, sorted(files)[0]))
+    assert len(snap.leaves) > 0
+    tot = snap.conserved_totals()
+    assert np.isfinite(tot).all() and tot[0] > 0
+
+
+def write_results(dirpath, name, labels_tp):
+    os.makedirs(dirpath, exist_ok=True)
+    doc = {
+        "name": name,
+        "samples": [{"label": l, "throughput": t, "median_secs": 1.0,
+                     "mad_secs": 0.0, "work": t, "reps": 3} for l, t in labels_tp],
+    }
+    with open(os.path.join(dirpath, f"{name}.json"), "w") as f:
+        json.dump(doc, f)
+
+
+def test_perf_compare_flags_regressions(tmp_path):
+    base = str(tmp_path / "base")
+    cur = str(tmp_path / "cur")
+    write_results(base, "bench", [("a", 100.0), ("b", 100.0)])
+    write_results(cur, "bench", [("a", 95.0), ("b", 50.0)])
+    regs, imps = perf_compare.compare(base, cur, tol=0.15)
+    assert [k for k, _ in regs] == ["bench/b"]
+    assert not imps
+
+
+def test_perf_compare_cli(tmp_path):
+    base = str(tmp_path / "base")
+    cur = str(tmp_path / "cur")
+    write_results(base, "bench", [("a", 100.0)])
+    write_results(cur, "bench", [("a", 100.0)])
+    r = subprocess.run(
+        [sys.executable, "-m", "tools.perf_compare", base, cur],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr

@@ -1,0 +1,131 @@
+"""Analysis-side reader for parthenon-rs `pbin` snapshots.
+
+The paper ships xdmf/yt frontends so external tools can read outputs
+(Sec. 3.9); this module is the analog for the pbin format: it loads a
+snapshot into numpy arrays and can assemble blocks into a single uniform
+array (uniform meshes) or per-level collections (multilevel).
+
+Usage:
+    from tools.pbin_reader import Snapshot
+    snap = Snapshot("out_quickstart/parthenon.00002.pbin")
+    rho = snap.assemble_uniform("cons", component=0)
+
+CLI: python -m tools.pbin_reader FILE [--var cons] [--comp 0] [--stats]
+"""
+
+import argparse
+import json
+import struct
+import sys
+
+import numpy as np
+
+MAGIC = b"PBIN1\n"
+
+
+class Snapshot:
+    def __init__(self, path):
+        with open(path, "rb") as f:
+            data = f.read()
+        if not data.startswith(MAGIC):
+            raise ValueError(f"{path}: not a pbin file")
+        (hlen,) = struct.unpack_from("<Q", data, len(MAGIC))
+        off = len(MAGIC) + 8
+        self.header = json.loads(data[off:off + hlen].decode())
+        off += hlen
+
+        self.time = self.header["time"]
+        if "time_bits" in self.header:
+            self.time = struct.unpack(
+                ">d", bytes.fromhex(self.header["time_bits"])
+            )[0]
+        self.cycle = self.header["cycle"]
+        self.dim = self.header["dim"]
+        self.block_nx = self.header["block_nx"]
+        self.leaves = [tuple(l) for l in self.header["leaves"]]  # (level,lx1,lx2,lx3)
+        self.vars = [(v["name"], v["ncomp"]) for v in self.header["vars"]]
+
+        zone = 1
+        for d in range(3):
+            n = self.block_nx[d] if (d == 0 or self.dim > d) else 1
+            zone *= max(n, 1)
+        self.zone = zone
+        self._blocks = {}
+        rec = 8 + 4 * sum(nc * zone for _, nc in self.vars)
+        for gid in range(len(self.leaves)):
+            base = off + gid * rec
+            (stored,) = struct.unpack_from("<Q", data, base)
+            if stored != gid:
+                raise ValueError(f"gid mismatch at record {gid}")
+            self._blocks[gid] = base + 8
+        self._data = data
+
+    def block_var(self, gid, var):
+        """[ncomp, nz, ny, nx] interior array of one block."""
+        off = self._blocks[gid]
+        for name, nc in self.vars:
+            nbytes = 4 * nc * self.zone
+            if name == var:
+                arr = np.frombuffer(self._data, dtype="<f4", count=nc * self.zone,
+                                    offset=off)
+                nx = self.block_nx[0]
+                ny = self.block_nx[1] if self.dim >= 2 else 1
+                nz = self.block_nx[2] if self.dim >= 3 else 1
+                return arr.reshape(nc, nz, ny, nx)
+            off += nbytes
+        raise KeyError(var)
+
+    def max_level(self):
+        return max(l[0] for l in self.leaves)
+
+    def assemble_uniform(self, var, component=0):
+        """Stitch a uniform (single-level) mesh into one global array."""
+        if self.max_level() != 0:
+            raise ValueError("mesh is multilevel; use per-block access")
+        nx, ny, nz = self.block_nx
+        lx_max = [max(l[1 + d] for l in self.leaves) + 1 for d in range(3)]
+        gz = max(nz, 1) * (lx_max[2] if self.dim >= 3 else 1)
+        gy = max(ny, 1) * (lx_max[1] if self.dim >= 2 else 1)
+        gx = nx * lx_max[0]
+        out = np.zeros((gz, gy, gx), dtype=np.float32)
+        for gid, (lev, l1, l2, l3) in enumerate(self.leaves):
+            assert lev == 0
+            blk = self.block_var(gid, var)[component]
+            z0 = l3 * max(nz, 1) if self.dim >= 3 else 0
+            y0 = l2 * max(ny, 1) if self.dim >= 2 else 0
+            x0 = l1 * nx
+            out[z0:z0 + blk.shape[0], y0:y0 + blk.shape[1], x0:x0 + blk.shape[2]] = blk
+        return out
+
+    def conserved_totals(self, var="cons"):
+        """Per-component sums over all blocks, volume-weighted per level."""
+        ncomp = dict(self.vars)[var]
+        totals = np.zeros(ncomp, dtype=np.float64)
+        for gid, (lev, *_rest) in enumerate(self.leaves):
+            w = 0.5 ** (self.dim * lev)  # relative cell volume
+            blk = self.block_var(gid, var)
+            totals += blk.reshape(ncomp, -1).sum(axis=1, dtype=np.float64) * w
+        return totals
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("file")
+    ap.add_argument("--var", default="cons")
+    ap.add_argument("--comp", type=int, default=0)
+    ap.add_argument("--stats", action="store_true")
+    args = ap.parse_args()
+    snap = Snapshot(args.file)
+    print(f"time {snap.time:.6e}  cycle {snap.cycle}  dim {snap.dim}  "
+          f"blocks {len(snap.leaves)}  max level {snap.max_level()}")
+    if args.stats:
+        vals = [snap.block_var(g, args.var)[args.comp] for g in range(len(snap.leaves))]
+        allv = np.concatenate([v.ravel() for v in vals])
+        print(f"{args.var}[{args.comp}]: min {allv.min():.6e}  max {allv.max():.6e}  "
+              f"mean {allv.mean():.6e}")
+        print("conserved totals:", snap.conserved_totals(args.var))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

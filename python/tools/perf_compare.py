@@ -1,0 +1,84 @@
+"""Performance-regression comparator — the analog of the paper's Parthenon
+Performance Metrics App (PPMA, Sec. 6.2.3): compare a fresh
+`bench_results/` directory against a stored baseline and flag regressions.
+
+Usage:
+    python -m tools.perf_compare baseline_dir current_dir [--tol 0.15]
+    python -m tools.perf_compare --snapshot bench_results baselines/$(git id)
+
+Exit code 1 if any sample regressed beyond tolerance.
+"""
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+
+def load(dirpath):
+    out = {}
+    for fn in sorted(os.listdir(dirpath)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(dirpath, fn)) as f:
+            doc = json.load(f)
+        for s in doc.get("samples", []):
+            out[f"{doc['name']}/{s['label']}"] = s["throughput"]
+    return out
+
+
+def compare(baseline, current, tol):
+    base = load(baseline)
+    cur = load(current)
+    regressions = []
+    improvements = []
+    for key in sorted(base):
+        if key not in cur:
+            print(f"  MISSING {key}")
+            continue
+        b, c = base[key], cur[key]
+        if b <= 0:
+            continue
+        ratio = c / b
+        marker = ""
+        if ratio < 1.0 - tol:
+            marker = "  <-- REGRESSION"
+            regressions.append((key, ratio))
+        elif ratio > 1.0 + tol:
+            marker = "  (improved)"
+            improvements.append((key, ratio))
+        print(f"  {key:55} {b:10.3e} -> {c:10.3e}  ({ratio:5.2f}x){marker}")
+    return regressions, improvements
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("current", nargs="?")
+    ap.add_argument("--tol", type=float, default=0.15,
+                    help="relative slowdown tolerated before flagging")
+    ap.add_argument("--snapshot", action="store_true",
+                    help="copy baseline(arg1=src) to current(arg2=dst) and exit")
+    args = ap.parse_args()
+
+    if args.snapshot:
+        if args.current is None:
+            ap.error("--snapshot needs src and dst")
+        os.makedirs(args.current, exist_ok=True)
+        for fn in os.listdir(args.baseline):
+            if fn.endswith(".json"):
+                shutil.copy(os.path.join(args.baseline, fn), args.current)
+        print(f"snapshotted {args.baseline} -> {args.current}")
+        return 0
+
+    if args.current is None:
+        ap.error("need baseline and current directories")
+    regressions, improvements = compare(args.baseline, args.current, args.tol)
+    print(f"\n{len(regressions)} regressions, {len(improvements)} improvements "
+          f"(tol {args.tol:.0%})")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

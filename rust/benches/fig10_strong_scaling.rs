@@ -1,0 +1,66 @@
+//! FIG. 10 — Strong scaling on uniform grids.
+//!
+//! Paper: fixed ~1024^3 mesh, node count swept 32x; GPU efficiency drops to
+//! ~35-67% as per-device work shrinks, CPU stays higher.
+//!
+//! Here: fixed 64^3 mesh (8 blocks of 32^3), ranks 1..8 so blocks/rank
+//! shrinks 8 -> 1. On the single-core testbed ideal is constant total
+//! throughput; the measured decline is the growing communication +
+//! synchronization share as per-rank work shrinks — the paper's strong-
+//! scaling efficiency once per-node compute is pinned.
+
+use parthenon::driver::bench::{deck_3d, measure};
+use parthenon::util::benchkit::{fmt_zcps, quick_mode, write_results, Sample, Table};
+
+fn main() {
+    let quick = quick_mode();
+    let meas = if quick { 1 } else { 3 };
+    let mesh = if quick { 32 } else { 64 };
+    let bx = mesh / 2; // 8 blocks
+    let ranks_list: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+
+    println!("== Fig 10: strong scaling, fixed {mesh}^3 mesh ({} blocks) ==\n", 8);
+    let mut samples = Vec::new();
+    let mut table = Table::new(&[
+        "ranks", "blocks/rank", "host zc/s", "host eff", "device zc/s", "device eff",
+    ]);
+
+    let deck = deck_3d(mesh, bx);
+    let mut base = [0.0f64, 0.0];
+    for &r in ranks_list {
+        let host = measure(&deck, &[], r, 1, meas);
+        let dev = measure(
+            &deck,
+            &[
+                "parthenon/exec/space=device",
+                "parthenon/exec/strategy=perpack",
+                "parthenon/exec/pack_size=16",
+            ],
+            r,
+            1,
+            meas,
+        );
+        if r == ranks_list[0] {
+            base = [host.zcps, dev.zcps];
+        }
+        table.row(vec![
+            r.to_string(),
+            format!("{}", 8 / r),
+            fmt_zcps(host.zcps),
+            format!("{:.2}", host.zcps / base[0]),
+            fmt_zcps(dev.zcps),
+            format!("{:.2}", dev.zcps / base[1]),
+        ]);
+        for (name, run) in [("host", &host), ("device", &dev)] {
+            samples.push(Sample {
+                label: format!("strong/{name}/r{r}"),
+                secs: vec![run.wall / run.cycles as f64],
+                work: run.zcps * run.wall / run.cycles as f64,
+            });
+        }
+        eprintln!("  ranks {r}: host {} dev {}", fmt_zcps(host.zcps), fmt_zcps(dev.zcps));
+    }
+    println!();
+    table.print();
+    write_results("fig10_strong_scaling", &samples, vec![("quick", quick.into())]);
+}

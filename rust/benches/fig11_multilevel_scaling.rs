@@ -1,0 +1,54 @@
+//! FIG. 11 — Strong scaling on a multilevel grid.
+//!
+//! Paper: 256^3 root grid, 32^3 blocks, 3 refined levels (24,816 blocks);
+//! the prolongation/restriction + flux-correction machinery is live, so
+//! efficiency is lower than the uniform case (GPU ~59% for 16x on Summit).
+//!
+//! Here: 32^3 root grid, 8^3 blocks, a centrally refined cube (2 levels),
+//! Host path (multilevel; Device is uniform-only — DESIGN.md), ranks 1..8.
+//! Compare the efficiency decline against fig10's uniform host column: the
+//! multilevel mesh pays extra for flux correction + prolong/restrict,
+//! reproducing the paper's uniform-vs-multilevel gap.
+
+use parthenon::driver::bench::{deck_multilevel, measure};
+use parthenon::util::benchkit::{fmt_zcps, quick_mode, write_results, Sample, Table};
+
+fn main() {
+    let quick = quick_mode();
+    let meas = if quick { 1 } else { 3 };
+    let root = if quick { 16 } else { 32 };
+    let levels = if quick { 1 } else { 2 };
+    let ranks_list: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
+
+    let deck = deck_multilevel(root, 8, levels);
+    println!("== Fig 11: multilevel strong scaling (root {root}^3, 8^3 blocks, {levels} levels) ==\n");
+
+    let mut samples = Vec::new();
+    let mut table = Table::new(&["ranks", "blocks", "zc/s", "efficiency"]);
+    let mut base = 0.0f64;
+    for &r in ranks_list {
+        let run = measure(&deck, &[], r, 1, meas);
+        if r == ranks_list[0] {
+            base = run.zcps;
+        }
+        table.row(vec![
+            r.to_string(),
+            run.nblocks.to_string(),
+            fmt_zcps(run.zcps),
+            format!("{:.2}", run.zcps / base),
+        ]);
+        samples.push(Sample {
+            label: format!("multilevel/r{r}"),
+            secs: vec![run.wall / run.cycles as f64],
+            work: run.zcps * run.wall / run.cycles as f64,
+        });
+        eprintln!("  ranks {r}: {} zc/s ({} blocks)", fmt_zcps(run.zcps), run.nblocks);
+    }
+    println!();
+    table.print();
+    write_results(
+        "fig11_multilevel_scaling",
+        &samples,
+        vec![("quick", quick.into()), ("root", (root as i64).into())],
+    );
+}

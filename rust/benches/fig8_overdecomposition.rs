@@ -1,0 +1,101 @@
+//! FIG. 8 — Overdecomposition overhead vs buffer/block packing strategy.
+//!
+//! Paper: fixed 256^3 (GPU) / 128^3 (CPU) mesh, block size swept down to
+//! 16^3 / 8^3; GPU per-buffer kernels degrade ~82x, buffer packing -> ~13x,
+//! +block packing -> ~3.5x, CPU flat ~3.5x.
+//!
+//! Here: fixed 64^3 mesh (32^3 quick), blocks 64^3 -> 8^3 (1 -> 512
+//! blocks). "Device" = PJRT executables, where one execute() call carries
+//! the same fixed launch cost a GPU kernel launch does; "Host" = native
+//! Rust (launch-free), the CPU analog. Reported: performance relative to
+//! the single-block device run (paper's normalization).
+
+use parthenon::driver::bench::{deck_3d, measure};
+use parthenon::util::benchkit::{fmt_zcps, quick_mode, write_results, Sample, Table};
+
+fn main() {
+    let quick = quick_mode();
+    let mesh = if quick { 32 } else { 64 };
+    let blocks: &[usize] = if quick { &[32, 16, 8] } else { &[64, 32, 16, 8] };
+    let meas = if quick { 1 } else { 2 };
+
+    println!("== Fig 8: overdecomposition x packing strategy (mesh {mesh}^3) ==\n");
+    let mut samples: Vec<Sample> = Vec::new();
+    let mut rows: Vec<(String, Vec<f64>, Vec<u64>)> = Vec::new();
+
+    let strategies: &[(&str, &str)] = &[
+        ("device/perbuffer (original)", "perbuffer"),
+        ("device/perblock (buffer packing)", "perblock"),
+        ("device/perpack (+block packing)", "perpack"),
+        ("host/native (CPU analog)", "native"),
+    ];
+
+    for (label, strat) in strategies {
+        let mut zs = Vec::new();
+        let mut launches = Vec::new();
+        for &bx in blocks {
+            // the worst per-buffer configs get very slow; trim cycles there
+            let m = if *strat == "perbuffer" && mesh / bx >= 8 { 1 } else { meas };
+            let deck = deck_3d(mesh, bx);
+            let ovs: Vec<String> = if *strat == "native" {
+                vec!["parthenon/exec/space=host".into()]
+            } else {
+                vec![
+                    "parthenon/exec/space=device".into(),
+                    format!("parthenon/exec/strategy={strat}"),
+                    "parthenon/exec/pack_size=16".into(),
+                ]
+            };
+            let ov_refs: Vec<&str> = ovs.iter().map(|s| s.as_str()).collect();
+            let run = measure(&deck, &ov_refs, 1, 1, m);
+            eprintln!(
+                "  {label:35} block {bx:3}^3 ({:4} blocks): {} zc/s, {} launches",
+                run.nblocks,
+                fmt_zcps(run.zcps),
+                run.launches
+            );
+            zs.push(run.zcps);
+            launches.push(run.launches);
+            samples.push(Sample {
+                label: format!("{label}/b{bx}"),
+                secs: vec![run.wall / run.cycles as f64],
+                work: run.zcps * run.wall / run.cycles as f64,
+            });
+        }
+        rows.push((label.to_string(), zs, launches));
+    }
+
+    // normalize to the single-block device (perpack) run, like the paper
+    let base = rows
+        .iter()
+        .find(|(l, _, _)| l.contains("perpack"))
+        .map(|(_, z, _)| z[0])
+        .unwrap_or(1.0);
+
+    println!("\nRelative performance (1.0 = single-block device run):");
+    let mut headers = vec!["strategy".to_string()];
+    for &bx in blocks {
+        headers.push(format!("{bx}^3"));
+    }
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr_refs);
+    for (label, zs, _) in &rows {
+        let mut cells = vec![label.clone()];
+        for z in zs {
+            cells.push(format!("{:.3}", z / base));
+        }
+        table.row(cells);
+    }
+    table.print();
+
+    println!("\nOverhead factor at max overdecomposition (paper: 82x / 13x / 3.5x / 3.5x):");
+    for (label, zs, _) in &rows {
+        let overhead = zs[0].max(base) / zs[zs.len() - 1];
+        println!("  {label:38} {overhead:7.1}x");
+    }
+
+    write_results("fig8_overdecomposition", &samples, vec![
+        ("mesh", (mesh as i64).into()),
+        ("quick", quick.into()),
+    ]);
+}

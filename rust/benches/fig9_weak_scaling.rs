@@ -1,0 +1,73 @@
+//! FIG. 9 — Weak scaling on uniform grids.
+//!
+//! Paper: zone-cycles/s/node and parallel efficiency from 1 to 9216
+//! Frontier nodes (92% at full machine), fixed work per device.
+//!
+//! Here: fixed 32^3 zones per rank-thread, ranks 1..8 on ONE machine (this
+//! testbed has a single core, so ideal scaling is constant TOTAL
+//! throughput under time-sharing; efficiency below measures the framework's
+//! communication + synchronization overhead growth with rank count — the
+//! quantity the paper's efficiency curve isolates once per-node compute is
+//! pinned). Both execution spaces are swept.
+
+use parthenon::driver::bench::{deck_3d_xyz, measure};
+use parthenon::util::benchkit::{fmt_zcps, quick_mode, write_results, Sample, Table};
+
+fn main() {
+    let quick = quick_mode();
+    let meas = if quick { 1 } else { 3 };
+    let ranks_list: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    let per_rank = 32usize; // 32^3 zones per rank
+
+    println!("== Fig 9: weak scaling, {per_rank}^3 zones/rank ==\n");
+    let mut samples = Vec::new();
+    let mut table = Table::new(&[
+        "ranks", "host zc/s", "host eff", "device zc/s", "device eff",
+    ]);
+
+    let mut base: [f64; 2] = [0.0, 0.0];
+    for &r in ranks_list {
+        // extend the mesh along x: r blocks of 32^3
+        let deck = deck_3d_xyz([per_rank * r, per_rank, per_rank], per_rank);
+        let host = measure(&deck, &[], r, 1, meas);
+        let dev = measure(
+            &deck,
+            &[
+                "parthenon/exec/space=device",
+                "parthenon/exec/strategy=perpack",
+                "parthenon/exec/pack_size=16",
+            ],
+            r,
+            1,
+            meas,
+        );
+        if r == ranks_list[0] {
+            base = [host.zcps, dev.zcps];
+        }
+        // ideal on a time-shared machine: total throughput constant
+        let eff_h = host.zcps / base[0];
+        let eff_d = dev.zcps / base[1];
+        table.row(vec![
+            r.to_string(),
+            fmt_zcps(host.zcps),
+            format!("{:.2}", eff_h),
+            fmt_zcps(dev.zcps),
+            format!("{:.2}", eff_d),
+        ]);
+        for (name, run) in [("host", &host), ("device", &dev)] {
+            samples.push(Sample {
+                label: format!("weak/{name}/r{r}"),
+                secs: vec![run.wall / run.cycles as f64],
+                work: run.zcps * run.wall / run.cycles as f64,
+            });
+        }
+        eprintln!("  ranks {r}: host {} dev {}", fmt_zcps(host.zcps), fmt_zcps(dev.zcps));
+    }
+    println!();
+    table.print();
+    println!(
+        "\n(single-core testbed: ideal = flat total throughput; eff < 1 is\n\
+         the framework's communication/sync overhead — see DESIGN.md)"
+    );
+    write_results("fig9_weak_scaling", &samples, vec![("quick", quick.into())]);
+}

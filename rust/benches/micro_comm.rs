@@ -1,0 +1,155 @@
+//! Micro-benchmarks of the communication substrate: simmpi point-to-point
+//! latency/throughput, collectives, buffer pack/unpack rates (native vs
+//! device executables), and raw executable-launch overhead — the constants
+//! behind Fig 8's regimes.
+
+use parthenon::bvals::bufspec;
+use parthenon::comm::{Payload, ReduceOp, World};
+use parthenon::mesh::IndexShape;
+use parthenon::runtime::{default_artifact_dir, ArtifactKey, Runtime, ScalArgs};
+use parthenon::util::benchkit::{quick_mode, run, write_results, Table};
+use parthenon::NHYDRO;
+
+fn main() {
+    let quick = quick_mode();
+    let reps = if quick { 20 } else { 200 };
+    let mut samples = Vec::new();
+    let mut table = Table::new(&["micro-benchmark", "median", "throughput"]);
+
+    // -- simmpi ping-pong latency ---------------------------------------------
+    {
+        let n = if quick { 200 } else { 2000 };
+        let s = run("pingpong", n as f64, 2, 5, || {
+            World::launch(2, move |rank, world| {
+                let comm = world.comm(rank, 1);
+                for i in 0..n {
+                    if rank == 0 {
+                        comm.isend(1, i, Payload::F32(vec![1.0; 16]));
+                        let _ = comm.recv(1, i);
+                    } else {
+                        let _ = comm.recv(0, i);
+                        comm.isend(0, i, Payload::F32(vec![1.0; 16]));
+                    }
+                }
+            });
+        });
+        table.row(vec![
+            "pingpong (64B) round trip".into(),
+            format!("{:.2} us", s.median_secs() / n as f64 * 1e6),
+            format!("{:.0}/s", s.throughput()),
+        ]);
+        samples.push(s);
+    }
+
+    // -- allreduce ---------------------------------------------------------------
+    {
+        let n = if quick { 100 } else { 1000 };
+        let s = run("allreduce4", n as f64, 2, 5, || {
+            World::launch(4, move |rank, world| {
+                let comm = world.comm(rank, 1);
+                for _ in 0..n {
+                    let _ = comm.allreduce(rank as f64, ReduceOp::Min);
+                }
+            });
+        });
+        table.row(vec![
+            "allreduce (4 ranks)".into(),
+            format!("{:.2} us", s.median_secs() / n as f64 * 1e6),
+            format!("{:.0}/s", s.throughput()),
+        ]);
+        samples.push(s);
+    }
+
+    // -- native pack/unpack rate ---------------------------------------------
+    {
+        let shape = IndexShape::new(3, [16, 16, 16]);
+        let nelem = NHYDRO * shape.ncells_total();
+        let buflen = bufspec::buflen(&shape, NHYDRO);
+        let arr: Vec<f32> = (0..nelem).map(|i| i as f32).collect();
+        let mut bufs = vec![0.0f32; buflen];
+        let s = run("native_pack", (reps * buflen) as f64, 3, 7, || {
+            for _ in 0..reps {
+                bufspec::pack_all(&arr, &shape, NHYDRO, &mut bufs);
+            }
+        });
+        table.row(vec![
+            "native pack_all (16^3 block)".into(),
+            format!("{:.2} us", s.median_secs() / reps as f64 * 1e6),
+            format!("{:.2} GB/s", s.throughput() * 4.0 / 1e9),
+        ]);
+        samples.push(s);
+        let mut arr2 = arr.clone();
+        let s = run("native_unpack", (reps * buflen) as f64, 3, 7, || {
+            for _ in 0..reps {
+                bufspec::unpack_all(&mut arr2, &shape, NHYDRO, &bufs);
+            }
+        });
+        table.row(vec![
+            "native unpack_all (16^3 block)".into(),
+            format!("{:.2} us", s.median_secs() / reps as f64 * 1e6),
+            format!("{:.2} GB/s", s.throughput() * 4.0 / 1e9),
+        ]);
+        samples.push(s);
+    }
+
+    // -- executable-launch overhead (THE Fig-8 constant) -----------------------
+    if default_artifact_dir().join("manifest.json").exists() {
+        let mut rt = Runtime::new(default_artifact_dir()).unwrap();
+        let key = ArtifactKey::new("pack1", 3, [16, 16, 16], 1).with_nbr(0);
+        let nelem = Runtime::block_elems(&key);
+        let u = vec![1.0f32; nelem];
+        rt.pack1(&key, &u).unwrap(); // compile outside the timer
+        let n = if quick { 50 } else { 500 };
+        let s = run("launch_overhead", n as f64, 1, 5, || {
+            for _ in 0..n {
+                let _ = rt.pack1(&key, &u).unwrap();
+            }
+        });
+        table.row(vec![
+            "device launch (tiny pack1 kernel)".into(),
+            format!("{:.1} us", s.median_secs() / n as f64 * 1e6),
+            format!("{:.0}/s", s.throughput()),
+        ]);
+        samples.push(s);
+
+        // and a full fused launch for contrast
+        let key = ArtifactKey::new("fused", 3, [16, 16, 16], 1);
+        let buflen = Runtime::buflen(&key);
+        let mut uu = vec![1.0f32; nelem];
+        for c in 0..nelem / NHYDRO {
+            uu[c] = 1.0;
+            uu[4 * (nelem / NHYDRO) + c] = 2.5;
+        }
+        let bufs_in = vec![1.0f32; buflen];
+        let mut bufs_out = vec![0.0f32; buflen];
+        let scal = ScalArgs {
+            g0: 0.5,
+            g1: 0.5,
+            beta: 0.5,
+            dt: 1e-3,
+            dx: [0.1; 3],
+            gamma: 1.4,
+        };
+        let mut u0 = uu.clone();
+        rt.fused(&key, &mut u0, &uu, &bufs_in, scal, &mut bufs_out).unwrap();
+        let n2 = if quick { 20 } else { 100 };
+        let s = run("fused_launch", n2 as f64, 1, 5, || {
+            let mut uc = uu.clone();
+            for _ in 0..n2 {
+                let _ = rt.fused(&key, &mut uc, &uu, &bufs_in, scal, &mut bufs_out).unwrap();
+            }
+        });
+        table.row(vec![
+            "device launch (fused 16^3 stage)".into(),
+            format!("{:.1} us", s.median_secs() / n2 as f64 * 1e6),
+            format!("{:.0}/s", s.throughput()),
+        ]);
+        samples.push(s);
+    } else {
+        eprintln!("(artifacts not built; skipping launch-overhead rows)");
+    }
+
+    println!();
+    table.print();
+    write_results("micro_comm", &samples, vec![("quick", quick.into())]);
+}

@@ -1,0 +1,95 @@
+//! Micro-benchmarks of the mesh substrate: tree construction, neighbor
+//! resolution, Morton sort, regrid, and load-balance assignment — the
+//! "mesh management overhead" the paper attributes CPU overdecomposition
+//! costs to (Sec. 5.1/5.2).
+
+use std::collections::HashMap;
+
+use parthenon::balance;
+use parthenon::mesh::{AmrFlag, BlockTree};
+use parthenon::util::benchkit::{quick_mode, run, write_results, Table};
+
+fn main() {
+    let quick = quick_mode();
+    let nrb: i64 = if quick { 8 } else { 16 };
+    let mut samples = Vec::new();
+    let mut table = Table::new(&["micro-benchmark", "median", "rate"]);
+
+    // uniform construction
+    let s = run("tree_build", (nrb * nrb * nrb) as f64, 2, 7, || {
+        let t = BlockTree::uniform([nrb, nrb, nrb], 3, [true; 3]);
+        std::hint::black_box(t.nblocks());
+    });
+    table.row(vec![
+        format!("tree build ({0}^3 = {1} blocks)", nrb, nrb * nrb * nrb),
+        format!("{:.2} ms", s.median_secs() * 1e3),
+        format!("{:.1}M blocks/s", s.throughput() / 1e6),
+    ]);
+    samples.push(s);
+
+    // neighbor resolution over the whole tree
+    let tree = BlockTree::uniform([nrb, nrb, nrb], 3, [true; 3]);
+    let nblocks = tree.nblocks();
+    let t2 = tree.clone();
+    let s = run("neighbors", (nblocks * 26) as f64, 2, 7, move || {
+        let mut count = 0usize;
+        for l in t2.leaves() {
+            count += t2.find_neighbors(l).len();
+        }
+        std::hint::black_box(count);
+    });
+    table.row(vec![
+        "neighbor resolution (all leaves)".into(),
+        format!("{:.2} ms", s.median_secs() * 1e3),
+        format!("{:.1}M nbrs/s", s.throughput() / 1e6),
+    ]);
+    samples.push(s);
+
+    // regrid with a refining central region
+    let t3 = tree.clone();
+    let s = run("regrid", nblocks as f64, 1, 5, move || {
+        let mut flags = HashMap::new();
+        for l in t3.leaves() {
+            let c = nrb / 2;
+            let hit = (l.lx[0] - c).abs() <= 1 && (l.lx[1] - c).abs() <= 1 && (l.lx[2] - c).abs() <= 1;
+            flags.insert(*l, if hit { AmrFlag::Refine } else { AmrFlag::Same });
+        }
+        let t = t3.regrid(&flags, 2);
+        std::hint::black_box(t.nblocks());
+    });
+    table.row(vec![
+        "regrid (central cube refines)".into(),
+        format!("{:.2} ms", s.median_secs() * 1e3),
+        format!("{:.1}M blocks/s", s.throughput() / 1e6),
+    ]);
+    samples.push(s);
+
+    // balance assignment
+    let costs: Vec<f64> = (0..nblocks).map(|i| 1.0 + (i % 7) as f64 * 0.1).collect();
+    let s = run("balance", nblocks as f64, 2, 9, move || {
+        let a = balance::assign_blocks(&costs, 64);
+        std::hint::black_box(a.len());
+    });
+    table.row(vec![
+        "balance (64 ranks)".into(),
+        format!("{:.3} ms", s.median_secs() * 1e3),
+        format!("{:.1}M blocks/s", s.throughput() / 1e6),
+    ]);
+    samples.push(s);
+
+    // coverage check (invariant validation cost)
+    let t4 = tree.clone();
+    let s = run("coverage", nblocks as f64, 1, 3, move || {
+        t4.check_coverage().unwrap();
+    });
+    table.row(vec![
+        "coverage check".into(),
+        format!("{:.2} ms", s.median_secs() * 1e3),
+        format!("{:.1}M blocks/s", s.throughput() / 1e6),
+    ]);
+    samples.push(s);
+
+    println!();
+    table.print();
+    write_results("micro_mesh", &samples, vec![("quick", quick.into())]);
+}

@@ -1,0 +1,83 @@
+//! TABLE 1 — Pack sizes, ranks per device, and overdecomposition.
+//!
+//! Paper: performance per node on 16 Summit nodes for a uniform and a
+//! multilevel mesh, varying blocks/device, MeshBlockPacks/rank and ranks/
+//! GPU (via MPS). Packing and more ranks per device each buy ~2x on the
+//! multilevel mesh.
+//!
+//! Here (single machine, DESIGN.md substitution table): ranks = rank
+//! threads sharing the machine, pack size = fused-artifact batch, blocks/
+//! device swept via block size. The multilevel mesh runs on the Host path
+//! (Device = uniform periodic only; its column reports native packing,
+//! which — like the paper's CPU rows — is insensitive to pack size).
+
+use parthenon::driver::bench::{deck_3d, deck_multilevel, measure};
+use parthenon::util::benchkit::{fmt_zcps, quick_mode, write_results, Sample, Table};
+
+fn main() {
+    let quick = quick_mode();
+    let mesh = if quick { 32 } else { 64 };
+    let meas = if quick { 1 } else { 2 };
+
+    println!("== Table 1: pack size x ranks (uniform {mesh}^3 device; multilevel host) ==\n");
+    let mut samples = Vec::new();
+
+    // -- uniform mesh on the Device path -------------------------------------
+    let block_sizes: &[usize] = if quick { &[16] } else { &[32, 16] };
+    let pack_sizes: &[usize] = &[16, 4, 1];
+    let ranks_list: &[usize] = &[1, 2, 4];
+
+    let mut table = Table::new(&["blocks/dev", "packs", "ranks=1", "ranks=2", "ranks=4"]);
+    for &bx in block_sizes {
+        for &ps in pack_sizes {
+            let mut cells = vec![
+                format!("{} ({bx}^3)", (mesh / bx).pow(3)),
+                if ps == 1 { "B".into() } else { format!("nb{ps}") },
+            ];
+            for &r in ranks_list {
+                let deck = deck_3d(mesh, bx);
+                let ovs = vec![
+                    "parthenon/exec/space=device".to_string(),
+                    "parthenon/exec/strategy=perpack".to_string(),
+                    format!("parthenon/exec/pack_size={ps}"),
+                ];
+                let ov_refs: Vec<&str> = ovs.iter().map(|s| s.as_str()).collect();
+                let run = measure(&deck, &ov_refs, r, 1, meas);
+                cells.push(fmt_zcps(run.zcps));
+                samples.push(Sample {
+                    label: format!("uniform/b{bx}/ps{ps}/r{r}"),
+                    secs: vec![run.wall / run.cycles as f64],
+                    work: run.zcps * run.wall / run.cycles as f64,
+                });
+                eprintln!(
+                    "  uniform b{bx} ps{ps} ranks{r}: {} zc/s ({} launches)",
+                    fmt_zcps(run.zcps),
+                    run.launches
+                );
+            }
+            table.row(cells);
+        }
+    }
+    println!("\nUniform mesh (device, zone-cycles/s):");
+    table.print();
+
+    // -- multilevel mesh on the Host path -------------------------------------
+    let mut table2 = Table::new(&["mesh", "ranks=1", "ranks=2", "ranks=4"]);
+    let mut cells = vec!["multilevel (host)".to_string()];
+    for &r in ranks_list {
+        let deck = deck_multilevel(if quick { 16 } else { 32 }, 8, 1);
+        let run = measure(&deck, &[], r, 1, meas);
+        cells.push(fmt_zcps(run.zcps));
+        samples.push(Sample {
+            label: format!("multilevel/r{r}"),
+            secs: vec![run.wall / run.cycles as f64],
+            work: run.zcps * run.wall / run.cycles as f64,
+        });
+        eprintln!("  multilevel ranks{r}: {} zc/s ({} blocks)", fmt_zcps(run.zcps), run.nblocks);
+    }
+    table2.row(cells);
+    println!("\nMultilevel mesh (host path; Device requires uniform — see DESIGN.md):");
+    table2.print();
+
+    write_results("table1_pack_sizes", &samples, vec![("quick", quick.into())]);
+}

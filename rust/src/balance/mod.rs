@@ -1,0 +1,122 @@
+//! Load balancing (paper Sec. 3.8): blocks ordered by the tree's Z-order
+//! (Morton) are split into contiguous, cost-balanced rank segments.
+
+/// Assign each block (in Z-order) to a rank by contiguous cost partition.
+///
+/// For equal costs this reduces to near-equal counts (within one block);
+/// the greedy prefix split keeps segments contiguous in Morton order, which
+/// preserves locality — the property the paper relies on for scalable
+/// boundary communication.
+pub fn assign_blocks(costs: &[f64], nranks: usize) -> Vec<usize> {
+    assert!(nranks > 0);
+    let n = costs.len();
+    let total: f64 = costs.iter().sum();
+    let mut out = vec![0usize; n];
+    if n == 0 {
+        return out;
+    }
+    let target = (total / nranks as f64).max(f64::MIN_POSITIVE);
+    let mut cum = 0.0;
+    let mut prev = 0usize;
+    for (i, &c) in costs.iter().enumerate() {
+        // rank whose cost interval contains this block's midpoint
+        let mid = cum + 0.5 * c;
+        let mut r = ((mid / target) as usize).min(nranks - 1);
+        if n >= nranks {
+            // never give a rank its first block too early (r <= i) and
+            // never starve trailing ranks (enough blocks must remain)
+            r = r.min(i);
+            r = r.max(nranks.saturating_sub(n - i));
+        }
+        r = r.max(prev); // contiguity: non-decreasing in Z-order
+        out[i] = r;
+        prev = r;
+        cum += c;
+    }
+    out
+}
+
+/// Summary statistics of an assignment (used by tests and the CLI).
+pub fn assignment_counts(assign: &[usize], nranks: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; nranks];
+    for &r in assign {
+        counts[r] += 1;
+    }
+    counts
+}
+
+/// The migration plan between two assignments of the *same* block list:
+/// (gid, from_rank, to_rank) for every block that moves.
+pub fn migration_plan(old: &[usize], new: &[usize]) -> Vec<(usize, usize, usize)> {
+    debug_assert_eq!(old.len(), new.len());
+    old.iter()
+        .zip(new.iter())
+        .enumerate()
+        .filter(|(_, (a, b))| a != b)
+        .map(|(gid, (&a, &b))| (gid, a, b))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift;
+    use crate::util::testutil::check;
+
+    #[test]
+    fn equal_costs_near_equal_counts() {
+        for (n, r) in [(8, 2), (7, 3), (100, 7), (5, 5), (3, 8)] {
+            let costs = vec![1.0; n];
+            let a = assign_blocks(&costs, r);
+            let counts = assignment_counts(&a, r);
+            let max = *counts.iter().max().unwrap();
+            let min = *counts.iter().min().unwrap();
+            assert!(
+                max - min <= 1 || n < r,
+                "n={n} r={r} counts={counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn assignment_is_monotone_contiguous() {
+        check("contiguous", 50, |rng: &mut XorShift| {
+            let n = 1 + rng.below(200);
+            let r = 1 + rng.below(16);
+            let costs: Vec<f64> = (0..n).map(|_| 0.5 + rng.next_f64()).collect();
+            let a = assign_blocks(&costs, r);
+            for w in a.windows(2) {
+                assert!(w[1] >= w[0], "ranks must be non-decreasing in Z-order");
+            }
+            assert!(*a.last().unwrap() < r);
+        });
+    }
+
+    #[test]
+    fn every_block_assigned_exactly_once() {
+        check("coverage", 30, |rng: &mut XorShift| {
+            let n = 1 + rng.below(64);
+            let r = 1 + rng.below(8);
+            let costs: Vec<f64> = (0..n).map(|_| 1.0 + rng.next_f64()).collect();
+            let a = assign_blocks(&costs, r);
+            assert_eq!(a.len(), n);
+        });
+    }
+
+    #[test]
+    fn weighted_split_tracks_cost() {
+        // one hot block: it should get its own rank when costs dominate
+        let mut costs = vec![1.0; 10];
+        costs[0] = 100.0;
+        let a = assign_blocks(&costs, 2);
+        assert_eq!(a[0], 0);
+        assert!(a[1..].iter().all(|&r| r == 1), "{a:?}");
+    }
+
+    #[test]
+    fn migration_plan_diffs() {
+        let old = vec![0, 0, 1, 1];
+        let new = vec![0, 1, 1, 1];
+        assert_eq!(migration_plan(&old, &new), vec![(1, 0, 1)]);
+    }
+}

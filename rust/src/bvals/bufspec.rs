@@ -1,0 +1,288 @@
+//! Boundary-buffer layout — the Rust mirror of `python/compile/bufspec.py`.
+//!
+//! The two implementations must agree bit-for-bit: the runtime cross-checks
+//! this table against the one embedded in `artifacts/manifest.json` at
+//! startup, and integration tests round-trip device-packed buffers through
+//! the native unpack (and vice versa).
+
+use crate::mesh::IndexShape;
+use crate::NGHOST;
+
+/// Per-axis index range [lo, hi) into the ghosted array.
+pub type AxisRange = (usize, usize);
+
+/// A box (x, y, z ranges) in the ghosted index space of a block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Slab {
+    pub x: AxisRange,
+    pub y: AxisRange,
+    pub z: AxisRange,
+}
+
+impl Slab {
+    pub fn ncells(&self) -> usize {
+        (self.x.1 - self.x.0) * (self.y.1 - self.y.0) * (self.z.1 - self.z.0)
+    }
+
+    pub fn dims_zyx(&self) -> (usize, usize, usize) {
+        (self.z.1 - self.z.0, self.y.1 - self.y.0, self.x.1 - self.x.0)
+    }
+}
+
+fn axis_send(o: i32, n: usize, active: bool, g: usize) -> AxisRange {
+    if !active {
+        return (0, 1);
+    }
+    match o {
+        -1 => (g, 2 * g),
+        1 => (n, n + g),
+        _ => (g, g + n),
+    }
+}
+
+fn axis_recv(o: i32, n: usize, active: bool, g: usize) -> AxisRange {
+    if !active {
+        return (0, 1);
+    }
+    match o {
+        -1 => (0, g),
+        1 => (g + n, 2 * g + n),
+        _ => (g, g + n),
+    }
+}
+
+/// Send slab (interior cells adjacent to the `offset` boundary).
+pub fn send_slab(offset: [i32; 3], shape: &IndexShape) -> Slab {
+    let g = NGHOST;
+    Slab {
+        x: axis_send(offset[0], shape.n[0], true, g),
+        y: axis_send(offset[1], shape.n[1], shape.dim >= 2, g),
+        z: axis_send(offset[2], shape.n[2], shape.dim >= 3, g),
+    }
+}
+
+/// Recv slab (ghost region on the `offset` side).
+pub fn recv_slab(offset: [i32; 3], shape: &IndexShape) -> Slab {
+    let g = NGHOST;
+    Slab {
+        x: axis_recv(offset[0], shape.n[0], true, g),
+        y: axis_recv(offset[1], shape.n[1], shape.dim >= 2, g),
+        z: axis_recv(offset[2], shape.n[2], shape.dim >= 3, g),
+    }
+}
+
+/// Per-neighbor segment lengths (elements, including `nvar` components).
+pub fn segment_lengths(shape: &IndexShape, nvar: usize) -> Vec<usize> {
+    crate::mesh::tree::neighbor_offsets(shape.dim)
+        .into_iter()
+        .map(|o| nvar * send_slab(o, shape).ncells())
+        .collect()
+}
+
+/// Offsets of each segment in the flat per-block buffer, plus total length.
+pub fn segment_offsets(shape: &IndexShape, nvar: usize) -> (Vec<usize>, usize) {
+    let lens = segment_lengths(shape, nvar);
+    let mut offs = Vec::with_capacity(lens.len());
+    let mut acc = 0usize;
+    for l in &lens {
+        offs.push(acc);
+        acc += l;
+    }
+    (offs, acc)
+}
+
+/// Total flat buffer length per block.
+pub fn buflen(shape: &IndexShape, nvar: usize) -> usize {
+    segment_lengths(shape, nvar).iter().sum()
+}
+
+/// Index of the opposite neighbor offset in canonical order.
+pub fn opposite_index(dim: usize) -> Vec<usize> {
+    let ns = crate::mesh::tree::neighbor_offsets(dim);
+    ns.iter()
+        .map(|o| {
+            let opp = [-o[0], -o[1], -o[2]];
+            ns.iter().position(|x| *x == opp).unwrap()
+        })
+        .collect()
+}
+
+/// Copy a slab of component `v` of `arr` (dims [nvar, Z, Y, X]) into `out`
+/// in [z, y, x] row-major order. Returns elements written.
+pub fn copy_slab_out(
+    arr: &[crate::Real],
+    shape: &IndexShape,
+    v: usize,
+    slab: &Slab,
+    out: &mut [crate::Real],
+) -> usize {
+    let (xt, yt) = (shape.nt(0), shape.nt(1));
+    let plane = xt * yt * shape.nt(2);
+    let base = v * plane;
+    let mut w = 0usize;
+    for k in slab.z.0..slab.z.1 {
+        for j in slab.y.0..slab.y.1 {
+            let row = base + (k * yt + j) * xt;
+            let n = slab.x.1 - slab.x.0;
+            out[w..w + n].copy_from_slice(&arr[row + slab.x.0..row + slab.x.1]);
+            w += n;
+        }
+    }
+    w
+}
+
+/// Inverse of [`copy_slab_out`].
+pub fn copy_slab_in(
+    arr: &mut [crate::Real],
+    shape: &IndexShape,
+    v: usize,
+    slab: &Slab,
+    src: &[crate::Real],
+) -> usize {
+    let (xt, yt) = (shape.nt(0), shape.nt(1));
+    let plane = xt * yt * shape.nt(2);
+    let base = v * plane;
+    let mut r = 0usize;
+    for k in slab.z.0..slab.z.1 {
+        for j in slab.y.0..slab.y.1 {
+            let row = base + (k * yt + j) * xt;
+            let n = slab.x.1 - slab.x.0;
+            arr[row + slab.x.0..row + slab.x.1].copy_from_slice(&src[r..r + n]);
+            r += n;
+        }
+    }
+    r
+}
+
+/// Pack every send segment of a [nvar, Z, Y, X] array into `out`
+/// (native analog of the `pack` artifact; identical layout).
+pub fn pack_all(arr: &[crate::Real], shape: &IndexShape, nvar: usize, out: &mut [crate::Real]) {
+    let mut w = 0usize;
+    for o in crate::mesh::tree::neighbor_offsets(shape.dim) {
+        let slab = send_slab(o, shape);
+        for v in 0..nvar {
+            w += copy_slab_out(arr, shape, v, &slab, &mut out[w..]);
+        }
+    }
+    debug_assert_eq!(w, buflen(shape, nvar));
+}
+
+/// Unpack every recv segment of `src` into the ghost regions of `arr`.
+pub fn unpack_all(arr: &mut [crate::Real], shape: &IndexShape, nvar: usize, src: &[crate::Real]) {
+    let mut r = 0usize;
+    for o in crate::mesh::tree::neighbor_offsets(shape.dim) {
+        let slab = recv_slab(o, shape);
+        for v in 0..nvar {
+            r += copy_slab_in(arr, shape, v, &slab, &src[r..]);
+        }
+    }
+    debug_assert_eq!(r, buflen(shape, nvar));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::tree::neighbor_offsets;
+
+    #[test]
+    fn buflen_known_value_3d() {
+        // matches python/tests/test_bufspec.py::test_buflen_known_value
+        let s = IndexShape::new(3, [16, 16, 16]);
+        let per_var = 6 * 2 * 16 * 16 + 12 * 4 * 16 + 8 * 8;
+        assert_eq!(buflen(&s, 5), 5 * per_var);
+    }
+
+    #[test]
+    fn send_recv_shapes_congruent() {
+        let s = IndexShape::new(3, [16, 8, 4]);
+        for o in neighbor_offsets(3) {
+            let snd = send_slab(o, &s);
+            let rcv = recv_slab([-o[0], -o[1], -o[2]], &s);
+            assert_eq!(snd.dims_zyx(), rcv.dims_zyx(), "offset {o:?}");
+        }
+    }
+
+    #[test]
+    fn recv_slabs_tile_ghost_shell() {
+        let s = IndexShape::new(2, [8, 8, 1]);
+        let mut cover = vec![0u8; s.ncells_total()];
+        for o in neighbor_offsets(2) {
+            let slab = recv_slab(o, &s);
+            for k in slab.z.0..slab.z.1 {
+                for j in slab.y.0..slab.y.1 {
+                    for i in slab.x.0..slab.x.1 {
+                        cover[s.idx3(k, j, i)] += 1;
+                    }
+                }
+            }
+        }
+        for k in 0..s.nt(2) {
+            for j in 0..s.nt(1) {
+                for i in 0..s.nt(0) {
+                    let interior = (s.is_(0)..s.ie(0)).contains(&i)
+                        && (s.is_(1)..s.ie(1)).contains(&j)
+                        && (s.is_(2)..s.ie(2)).contains(&k);
+                    let expected = if interior { 0 } else { 1 };
+                    assert_eq!(cover[s.idx3(k, j, i)], expected, "({k},{j},{i})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_periodic_self_roundtrip() {
+        // single periodic block: routing send segment i to recv slot at
+        // opposite(i) must equal a periodic ghost fill
+        let s = IndexShape::new(2, [8, 8, 1]);
+        let nvar = 2;
+        let n = s.ncells_total();
+        let mut arr = vec![0.0f32; nvar * n];
+        for v in 0..nvar {
+            for j in 0..s.nt(1) {
+                for i in 0..s.nt(0) {
+                    arr[v * n + s.idx3(0, j, i)] =
+                        (v * 10_000 + j * 100 + i) as f32;
+                }
+            }
+        }
+        let mut bufs = vec![0.0f32; buflen(&s, nvar)];
+        pack_all(&arr, &s, nvar, &mut bufs);
+
+        // route
+        let (offs, total) = segment_offsets(&s, nvar);
+        let lens = segment_lengths(&s, nvar);
+        let opp = opposite_index(2);
+        let mut routed = vec![0.0f32; total];
+        for i in 0..lens.len() {
+            let j = opp[i];
+            routed[offs[i]..offs[i] + lens[i]]
+                .copy_from_slice(&bufs[offs[j]..offs[j] + lens[j]]);
+        }
+        let mut out = arr.clone();
+        unpack_all(&mut out, &s, nvar, &routed);
+
+        // periodic expectation
+        let g = crate::NGHOST;
+        let wrap = |i: usize, ni: usize| -> usize {
+            let v = (i as i64 - g as i64).rem_euclid(ni as i64) as usize;
+            v + g
+        };
+        for v in 0..nvar {
+            for j in 0..s.nt(1) {
+                for i in 0..s.nt(0) {
+                    let src = arr[v * n + s.idx3(0, wrap(j, 8), wrap(i, 8))];
+                    assert_eq!(out[v * n + s.idx3(0, j, i)], src, "v{v} j{j} i{i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn segment_offsets_sum() {
+        let s = IndexShape::new(3, [8, 8, 8]);
+        let (offs, total) = segment_offsets(&s, 5);
+        assert_eq!(offs.len(), 26);
+        assert_eq!(total, buflen(&s, 5));
+        assert_eq!(offs[0], 0);
+    }
+}

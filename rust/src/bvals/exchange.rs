@@ -1,0 +1,527 @@
+//! Ghost-zone exchange engine (native path) — paper Sec. 3.7.
+//!
+//! Every FillGhost variable communicates on its own communicator id; each
+//! message is one boundary segment, tagged by (receiving gid, receiving
+//! neighbor slot, sending child code). Same-level segments are raw slabs;
+//! fine->coarse segments are restricted before sending; coarse->fine
+//! segments carry an expanded coarse box that the receiver prolongates.
+//!
+//! The engine is split into post_sends / post_receives / poll so drivers can
+//! express it as tasks and overlap communication with compute; the blocking
+//! wrapper `exchange_blocking` composes the three.
+
+use super::bufspec::{self, Slab};
+use super::prolong;
+use crate::comm::{tags, Comm, Payload};
+use crate::mesh::{
+    BoundaryCondition, IndexShape, LogicalLocation, Mesh, NeighborKind,
+};
+use crate::Real;
+
+/// Device-path buffer packing strategies (paper Fig. 8). `Native` is the
+/// CPU/host path where packing happens in plain copies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PackStrategy {
+    /// One kernel launch per buffer per block (the "original" regime).
+    PerBuffer,
+    /// All buffers of one block in one launch.
+    PerBlock,
+    /// All buffers of all blocks of a pack in one launch.
+    PerPack,
+    /// Host path: plain memcpy packing (no launches).
+    Native,
+}
+
+impl PackStrategy {
+    pub fn parse(s: &str) -> Option<PackStrategy> {
+        match s {
+            "perbuffer" | "per_buffer" => Some(PackStrategy::PerBuffer),
+            "perblock" | "per_block" => Some(PackStrategy::PerBlock),
+            "perpack" | "per_pack" => Some(PackStrategy::PerPack),
+            "native" => Some(PackStrategy::Native),
+            _ => None,
+        }
+    }
+}
+
+/// Child code of a location: packed per-axis parity bits.
+fn child_code(loc: &LogicalLocation) -> usize {
+    ((loc.lx[0] & 1) | ((loc.lx[1] & 1) << 1) | ((loc.lx[2] & 1) << 2)) as usize
+}
+
+/// Fine-side send slab towards a coarser neighbor: depth 2g (restricts to
+/// g coarse), full interior tangentially.
+fn fine_send_slab(offset: [i32; 3], shape: &IndexShape) -> Slab {
+    let g = crate::NGHOST;
+    let axis = |o: i32, n: usize, active: bool| -> (usize, usize) {
+        if !active {
+            return (0, 1);
+        }
+        match o {
+            -1 => (g, g + 2 * g),
+            1 => (g + n - 2 * g, g + n),
+            _ => (g, g + n),
+        }
+    };
+    Slab {
+        x: axis(offset[0], shape.n[0], true),
+        y: axis(offset[1], shape.n[1], shape.dim >= 2),
+        z: axis(offset[2], shape.n[2], shape.dim >= 3),
+    }
+}
+
+/// The unwrapped virtual coarse-block position covering the fine block
+/// `floc`'s neighbor region at `offset` (per-axis parent of floc+offset).
+/// Geometry is always computed in this unwrapped frame so both sides agree
+/// across periodic wraps.
+fn coarse_geom_lx(offset: [i32; 3], floc: &LogicalLocation) -> [i64; 3] {
+    [
+        (floc.lx[0] + offset[0] as i64).div_euclid(2),
+        (floc.lx[1] + offset[1] as i64).div_euclid(2),
+        (floc.lx[2] + offset[2] as i64).div_euclid(2),
+    ]
+}
+
+/// The coarse box sent from a coarse block to fine block `floc` whose
+/// neighbor slot `offset` points at (a region covered by) the coarse block.
+///
+/// Per axis: the fine ghost range in global coarse cells, expanded by one
+/// cell for prolongation slopes, clamped to the coarse block's interior.
+/// Handles faces, edges and corners — including the case where the coarse
+/// block's span *contains* the fine ghost range along an axis (corner
+/// adjacency through the same coarse leaf).
+///
+/// Returns (coarse-local slab in the SENDER's ghosted index space,
+/// global coarse origin `clo` in the RECEIVER's frame, dims). Both sides
+/// compute this identically from (offset, floc, shape).
+fn coarse_prolong_box(
+    offset: [i32; 3],
+    floc: &LogicalLocation,
+    shape: &IndexShape,
+) -> (Slab, [i64; 3], [usize; 3]) {
+    let g = crate::NGHOST as i64;
+    let cg = coarse_geom_lx(offset, floc);
+    let mut local = [(0usize, 1usize); 3];
+    let mut clo = [0i64; 3];
+    let mut dims = [1usize; 3];
+    for d in 0..3 {
+        if d >= shape.dim {
+            continue;
+        }
+        let n = shape.n[d] as i64;
+        let b_lo = floc.lx[d] * n; // fine-global start of the block
+        let b_hi = b_lo + n;
+        // fine ghost range along this axis for `offset`
+        let (flo, fhi) = match offset[d] {
+            -1 => (b_lo - g, b_lo),
+            1 => (b_hi, b_hi + g),
+            _ => (b_lo, b_hi),
+        };
+        // owning coarse cells, expanded for slopes
+        let mut c0 = flo.div_euclid(2) - 1;
+        let mut c1 = (fhi - 1).div_euclid(2) + 2; // exclusive
+        // clamp to the coarse block's interior span
+        let cs = cg[d] * n;
+        let ce = cs + n;
+        c0 = c0.max(cs);
+        c1 = c1.min(ce);
+        debug_assert!(c0 < c1, "empty coarse box along axis {d}");
+        local[d] = (
+            (c0 - cs + g) as usize,
+            (c1 - cs + g) as usize,
+        );
+        clo[d] = c0;
+        dims[d] = (c1 - c0) as usize;
+    }
+    (
+        Slab { x: local[0], y: local[1], z: local[2] },
+        clo,
+        dims,
+    )
+}
+
+/// The sub-box of the coarse block's ghost shell written by fine block
+/// `floc`'s restricted send for `offset` (in the coarse block's ghosted
+/// local index space). Mirrors [`fine_send_slab`] restricted to coarse
+/// resolution.
+fn coarse_recv_restriction_box(
+    offset: [i32; 3],
+    floc: &LogicalLocation,
+    shape: &IndexShape,
+) -> Slab {
+    let g = crate::NGHOST as i64;
+    let cg = coarse_geom_lx(offset, floc);
+    let mut local = [(0usize, 1usize); 3];
+    for d in 0..3 {
+        if d >= shape.dim {
+            continue;
+        }
+        let n = shape.n[d] as i64;
+        let b_lo = floc.lx[d] * n;
+        let b_hi = b_lo + n;
+        // restricted region in global coarse cells (fine_send_slab / 2)
+        let (c0, c1) = match offset[d] {
+            -1 => (b_lo / 2, b_lo / 2 + g),
+            1 => (b_hi / 2 - g, b_hi / 2),
+            _ => (b_lo.div_euclid(2), b_hi.div_euclid(2)),
+        };
+        let cs = cg[d] * n;
+        // offset into the coarse block's ghosted array (+g in active dims)
+        local[d] = ((c0 - cs + g) as usize, (c1 - cs + g) as usize);
+    }
+    Slab { x: local[0], y: local[1], z: local[2] }
+}
+
+/// Extract a dense [nvar, ...] box from an array (row-major v,z,y,x).
+fn extract_box(arr: &[Real], shape: &IndexShape, nvar: usize, slab: &Slab) -> Vec<Real> {
+    let mut out = Vec::with_capacity(nvar * slab.ncells());
+    let n = shape.ncells_total();
+    let (nt0, nt1) = (shape.nt(0), shape.nt(1));
+    for v in 0..nvar {
+        for k in slab.z.0..slab.z.1 {
+            for j in slab.y.0..slab.y.1 {
+                let row = v * n + (k * nt1 + j) * nt0;
+                out.extend_from_slice(&arr[row + slab.x.0..row + slab.x.1]);
+            }
+        }
+    }
+    out
+}
+
+/// Write a dense box into an array.
+fn insert_box(arr: &mut [Real], shape: &IndexShape, nvar: usize, slab: &Slab, src: &[Real]) {
+    let n = shape.ncells_total();
+    let (nt0, nt1) = (shape.nt(0), shape.nt(1));
+    let mut r = 0usize;
+    for v in 0..nvar {
+        for k in slab.z.0..slab.z.1 {
+            for j in slab.y.0..slab.y.1 {
+                let row = v * n + (k * nt1 + j) * nt0;
+                let w = slab.x.1 - slab.x.0;
+                arr[row + slab.x.0..row + slab.x.1].copy_from_slice(&src[r..r + w]);
+                r += w;
+            }
+        }
+    }
+    debug_assert_eq!(r, src.len());
+}
+
+/// A receive we are waiting for.
+enum Pending {
+    /// Same-level slab into the ghost region.
+    Same { block: usize, slab: Slab },
+    /// Restricted data from a finer neighbor into a sub-box.
+    FromFine { block: usize, slab: Slab },
+    /// Coarse box to prolongate into a ghost slab.
+    FromCoarse {
+        block: usize,
+        ghost: Slab,
+        clo: [i64; 3],
+        cdims: [usize; 3],
+        fine_lo: [i64; 3],
+    },
+}
+
+/// Outstanding receives for one exchange phase of one variable.
+pub struct ExchangeState {
+    items: Vec<(Pending, usize, u64)>, // (what, src rank, tag)
+    done: Vec<bool>,
+}
+
+impl ExchangeState {
+    pub fn remaining(&self) -> usize {
+        self.done.iter().filter(|d| !**d).count()
+    }
+}
+
+/// Message classes namespacing the tag space (same tag slot numbers are
+/// reused across classes).
+const CLASS_SAME: usize = 0 << 8;
+const CLASS_RESTRICT: usize = 1 << 8;
+const CLASS_PROLONG: usize = 2 << 8;
+
+/// Every (fine block F, offset o_F) pair whose neighbor region resolves to
+/// the coarse leaf `cloc`. Enumerated identically by the fine side (its own
+/// neighbor list) and the coarse side (this function) so message sets match
+/// exactly — including corner adjacency through the same coarse leaf.
+fn pairs_toward_coarse(
+    mesh: &Mesh,
+    cloc: &LogicalLocation,
+) -> Vec<(LogicalLocation, [i32; 3], usize)> {
+    use std::collections::HashSet;
+    let mut fines: HashSet<LogicalLocation> = HashSet::new();
+    for nb in mesh.tree.find_neighbors(cloc) {
+        if let NeighborKind::Finer(fs) = nb.kind {
+            fines.extend(fs);
+        }
+    }
+    let mut out = Vec::new();
+    for f in fines {
+        for (slot, off) in crate::mesh::neighbor_offsets(mesh.cfg.dim)
+            .into_iter()
+            .enumerate()
+        {
+            if let NeighborKind::Coarser(c) = mesh.tree.resolve_neighbor(&f, off) {
+                if c == *cloc {
+                    out.push((f, off, slot));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Post every outbound boundary segment of `var` for all local blocks.
+pub fn post_sends(mesh: &Mesh, comm: &Comm, var: &str) -> crate::error::Result<()> {
+    let shape = mesh.cfg.index_shape();
+    for b in &mesh.blocks {
+        let arr = b.data.get(var)?;
+        let nvar = arr.dims()[0];
+        let data = arr.as_slice();
+        let mut sent_to_finer = false;
+        for nb in mesh.tree.find_neighbors(&b.loc) {
+            let opp = opposite_offset(nb.offset);
+            match &nb.kind {
+                NeighborKind::Physical => {}
+                NeighborKind::SameLevel(nloc) => {
+                    let slab = bufspec::send_slab(nb.offset, &shape);
+                    let payload = extract_box(data, &shape, nvar, &slab);
+                    let ngid = mesh.tree.gid_of(nloc).unwrap();
+                    let slot = offset_index(mesh.cfg.dim, opp);
+                    let tag = tags::bval_tag(
+                        ngid,
+                        CLASS_SAME | (slot << 3) | child_code(&b.loc),
+                    );
+                    comm.isend(mesh.rank_of(ngid), tag, Payload::F32(payload));
+                }
+                NeighborKind::Coarser(cloc) => {
+                    // restrict and send; tagged by the direction we sent
+                    // through (= -our offset) + our child code
+                    let slab = fine_send_slab(nb.offset, &shape);
+                    let mut payload = Vec::new();
+                    prolong::restrict_slab(data, &shape, nvar, &slab, &mut payload);
+                    let ngid = mesh.tree.gid_of(cloc).unwrap();
+                    let slot = offset_index(mesh.cfg.dim, opp);
+                    let tag = tags::bval_tag(
+                        ngid,
+                        CLASS_RESTRICT | (slot << 3) | child_code(&b.loc),
+                    );
+                    comm.isend(mesh.rank_of(ngid), tag, Payload::F32(payload));
+                }
+                NeighborKind::Finer(_) => {
+                    sent_to_finer = true;
+                }
+            }
+        }
+        if sent_to_finer {
+            // prolongation boxes: one per (fine block, fine offset) pair
+            for (floc, off, fslot) in pairs_toward_coarse(mesh, &b.loc) {
+                let (local, _clo, _dims) = coarse_prolong_box(off, &floc, &shape);
+                let payload = extract_box(data, &shape, nvar, &local);
+                let ngid = mesh.tree.gid_of(&floc).unwrap();
+                let tag = tags::bval_tag(
+                    ngid,
+                    CLASS_PROLONG | (fslot << 3) | child_code(&b.loc),
+                );
+                comm.isend(mesh.rank_of(ngid), tag, Payload::F32(payload));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn opposite_offset(o: [i32; 3]) -> [i32; 3] {
+    [-o[0], -o[1], -o[2]]
+}
+
+fn offset_index(dim: usize, o: [i32; 3]) -> usize {
+    crate::mesh::neighbor_offsets(dim)
+        .iter()
+        .position(|x| *x == o)
+        .expect("offset in canonical set")
+}
+
+/// Register every inbound segment we expect for `var`.
+pub fn post_receives(mesh: &Mesh, _comm: &Comm, _var: &str) -> ExchangeState {
+    let shape = mesh.cfg.index_shape();
+    let mut items = Vec::new();
+    for (bi, b) in mesh.blocks.iter().enumerate() {
+        let mut has_finer = false;
+        for nb in mesh.tree.find_neighbors(&b.loc) {
+            let my_slot = nb.nbr_index;
+            match &nb.kind {
+                NeighborKind::Physical => {}
+                NeighborKind::SameLevel(nloc) => {
+                    let slab = bufspec::recv_slab(nb.offset, &shape);
+                    let tag = tags::bval_tag(
+                        b.gid,
+                        CLASS_SAME | (my_slot << 3) | child_code(nloc),
+                    );
+                    let ngid = mesh.tree.gid_of(nloc).unwrap();
+                    items.push((
+                        Pending::Same { block: bi, slab },
+                        mesh.rank_of(ngid),
+                        tag,
+                    ));
+                }
+                NeighborKind::Coarser(cloc) => {
+                    // we are the fine side: expect a prolongation box
+                    let (_local, clo, cdims) =
+                        coarse_prolong_box(nb.offset, &b.loc, &shape);
+                    let ghost = bufspec::recv_slab(nb.offset, &shape);
+                    let fine_lo = [
+                        b.loc.lx[0] * shape.n[0] as i64,
+                        b.loc.lx[1] * shape.n[1] as i64,
+                        b.loc.lx[2] * shape.n[2] as i64,
+                    ];
+                    let tag = tags::bval_tag(
+                        b.gid,
+                        CLASS_PROLONG | (my_slot << 3) | child_code(cloc),
+                    );
+                    let ngid = mesh.tree.gid_of(cloc).unwrap();
+                    items.push((
+                        Pending::FromCoarse { block: bi, ghost, clo, cdims, fine_lo },
+                        mesh.rank_of(ngid),
+                        tag,
+                    ));
+                }
+                NeighborKind::Finer(_) => {
+                    has_finer = true;
+                }
+            }
+        }
+        if has_finer {
+            // we are the coarse side: expect one restricted box per
+            // (fine block, fine offset) pair pointing at us
+            for (floc, off, fslot) in pairs_toward_coarse(mesh, &b.loc) {
+                let slab = coarse_recv_restriction_box(off, &floc, &shape);
+                // sender tags with the direction it sent through = -off
+                let send_dir = offset_index(mesh.cfg.dim, opposite_offset(off));
+                let _ = fslot;
+                let tag = tags::bval_tag(
+                    b.gid,
+                    CLASS_RESTRICT | (send_dir << 3) | child_code(&floc),
+                );
+                let ngid = mesh.tree.gid_of(&floc).unwrap();
+                items.push((
+                    Pending::FromFine { block: bi, slab },
+                    mesh.rank_of(ngid),
+                    tag,
+                ));
+            }
+        }
+    }
+    let done = vec![false; items.len()];
+    ExchangeState { items, done }
+}
+
+/// Poll inbound segments, applying any that arrived. Returns true when all
+/// are in.
+pub fn poll_receives(
+    mesh: &mut Mesh,
+    comm: &Comm,
+    var: &str,
+    state: &mut ExchangeState,
+) -> crate::error::Result<bool> {
+    let shape = mesh.cfg.index_shape();
+    let mut all = true;
+    for (idx, (pending, src, tag)) in state.items.iter().enumerate() {
+        if state.done[idx] {
+            continue;
+        }
+        let Some(payload) = comm.try_recv(*src, *tag) else {
+            all = false;
+            continue;
+        };
+        let data = payload.into_f32()?;
+        match pending {
+            Pending::Same { block, slab } | Pending::FromFine { block, slab } => {
+                let arr = mesh.blocks[*block].data.get_mut(var)?;
+                let nvar = arr.dims()[0];
+                insert_box(arr.as_mut_slice(), &shape, nvar, slab, &data);
+            }
+            Pending::FromCoarse { block, ghost, clo, cdims, fine_lo } => {
+                let arr = mesh.blocks[*block].data.get_mut(var)?;
+                let nvar = arr.dims()[0];
+                prolong::prolongate_ghost_slab(
+                    arr.as_mut_slice(),
+                    &shape,
+                    nvar,
+                    ghost,
+                    *fine_lo,
+                    &data,
+                    *clo,
+                    *cdims,
+                );
+            }
+        }
+        state.done[idx] = true;
+    }
+    Ok(all)
+}
+
+/// Apply physical BCs on domain edges (after all receives landed).
+pub fn apply_block_physical_bcs(
+    mesh: &mut Mesh,
+    var: &str,
+    vector_comps: Option<[usize; 3]>,
+) -> crate::error::Result<()> {
+    let shape = mesh.cfg.index_shape();
+    let cfg_bcs = mesh.cfg.bcs;
+    let dim = mesh.cfg.dim;
+    let nrb = mesh.cfg.nrb;
+    let locs: Vec<(usize, LogicalLocation)> =
+        mesh.blocks.iter().enumerate().map(|(i, b)| (i, b.loc)).collect();
+    for (bi, loc) in locs {
+        let mut bcs: [[Option<BoundaryCondition>; 2]; 3] = [[None; 2]; 3];
+        let mut any = false;
+        for d in 0..dim {
+            let w = nrb[d] << loc.level;
+            if loc.lx[d] == 0 && cfg_bcs[d][0] != BoundaryCondition::Periodic {
+                bcs[d][0] = Some(cfg_bcs[d][0]);
+                any = true;
+            }
+            if loc.lx[d] == w - 1 && cfg_bcs[d][1] != BoundaryCondition::Periodic {
+                bcs[d][1] = Some(cfg_bcs[d][1]);
+                any = true;
+            }
+        }
+        if !any {
+            continue;
+        }
+        let arr = mesh.blocks[bi].data.get_mut(var)?;
+        let nvar = arr.dims()[0];
+        super::physical::apply_physical_bcs(
+            arr.as_mut_slice(),
+            &shape,
+            &bcs,
+            nvar,
+            vector_comps,
+        );
+    }
+    Ok(())
+}
+
+/// Complete blocking exchange of one variable (sends + receives + BCs).
+pub fn exchange_blocking(
+    mesh: &mut Mesh,
+    comm: &Comm,
+    var: &str,
+    vector_comps: Option<[usize; 3]>,
+) -> crate::error::Result<()> {
+    post_sends(mesh, comm, var)?;
+    let mut state = post_receives(mesh, comm, var);
+    let mut spins = 0u64;
+    while !poll_receives(mesh, comm, var, &mut state)? {
+        spins += 1;
+        if spins > 200_000_000 {
+            return Err(crate::error::Error::Comm(format!(
+                "exchange of {var:?} stalled ({} segments missing)",
+                state.remaining()
+            )));
+        }
+        std::thread::yield_now();
+    }
+    apply_block_physical_bcs(mesh, var, vector_comps)?;
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! Boundary values: buffer layout, ghost-zone exchange engine with the
+//! paper's packing strategies, physical boundary conditions, restriction /
+//! prolongation across levels, and flux correction.
+
+pub mod bufspec;
+mod exchange;
+mod physical;
+mod prolong;
+
+pub use exchange::{
+    apply_block_physical_bcs, exchange_blocking, poll_receives, post_receives,
+    post_sends, ExchangeState, PackStrategy,
+};
+pub use physical::apply_physical_bcs;
+pub use prolong::{
+    prolongate_child_from_parent, prolongate_ghost_slab, restrict_block_into_parent,
+    restrict_slab,
+};

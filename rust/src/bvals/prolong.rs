@@ -1,0 +1,401 @@
+//! Restriction and prolongation between refinement levels.
+//!
+//! * Restriction is conservative averaging of 2^dim fine cells.
+//! * Prolongation is slope-limited (minmod) linear interpolation, evaluated
+//!   at fine cell centers (offsets ±h/4 from the coarse center), with slopes
+//!   clamped to zero at the edges of the available coarse data.
+//!
+//! Used in three places, exactly like the paper (Sec. 3.7/3.8): ghost-zone
+//! exchange at level boundaries (fine data is restricted *before* sending;
+//! coarse data is prolongated *after* receipt), regridding (blocks are
+//! refined/derefined in place), and flux correction (face-flux restriction
+//! lives in the exchange engine).
+
+use super::bufspec::Slab;
+use crate::mesh::IndexShape;
+use crate::Real;
+
+#[inline]
+fn minmod(a: Real, b: Real) -> Real {
+    if a * b > 0.0 {
+        if a.abs() < b.abs() {
+            a
+        } else {
+            b
+        }
+    } else {
+        0.0
+    }
+}
+
+/// Restrict an even-aligned fine-index box of `fine` ([nvar, Z, Y, X],
+/// ghosted) into a dense coarse buffer (dims = box dims halved per active
+/// axis), appended to `out` in [v, z, y, x] order.
+pub fn restrict_slab(
+    fine: &[Real],
+    shape: &IndexShape,
+    nvar: usize,
+    slab: &Slab,
+    out: &mut Vec<Real>,
+) -> [usize; 3] {
+    let dim = shape.dim;
+    let (fz, fy, fx) = slab.dims_zyx();
+    let cx = fx / 2;
+    let cy = if dim >= 2 { fy / 2 } else { fy };
+    let cz = if dim >= 3 { fz / 2 } else { fz };
+    debug_assert!(fx % 2 == 0);
+    debug_assert!(dim < 2 || fy % 2 == 0);
+    debug_assert!(dim < 3 || fz % 2 == 0);
+    let n = shape.ncells_total();
+    let (nt0, nt1) = (shape.nt(0), shape.nt(1));
+    let wsum = match dim {
+        1 => 0.5,
+        2 => 0.25,
+        _ => 0.125,
+    } as Real;
+    for v in 0..nvar {
+        for ck in 0..cz {
+            for cj in 0..cy {
+                for ci in 0..cx {
+                    let k0 = slab.z.0 + if dim >= 3 { 2 * ck } else { ck };
+                    let j0 = slab.y.0 + if dim >= 2 { 2 * cj } else { cj };
+                    let i0 = slab.x.0 + 2 * ci;
+                    let mut s = 0.0;
+                    let kmax = if dim >= 3 { 2 } else { 1 };
+                    let jmax = if dim >= 2 { 2 } else { 1 };
+                    for dk in 0..kmax {
+                        for dj in 0..jmax {
+                            for di in 0..2 {
+                                s += fine[v * n + ((k0 + dk) * nt1 + j0 + dj) * nt0 + i0 + di];
+                            }
+                        }
+                    }
+                    out.push(s * wsum);
+                }
+            }
+        }
+    }
+    [cx, cy, cz]
+}
+
+/// Prolongate coarse data into a fine ghost slab.
+///
+/// * `arr`: the fine block's [nvar, Z, Y, X] array (ghosted).
+/// * `slab`: the ghost box to fill, in local fine (ghosted) indices.
+/// * `fine_lo`: global *fine-cell* index of local cell (is_, is_, is_) — i.e.
+///   `loc.lx[d] * n[d]` per axis; converts local indices to global.
+/// * `coarse`: dense [nvar, cz, cy, cx] coarse data.
+/// * `clo`: global coarse-cell index of coarse[.., 0, 0, 0].
+pub fn prolongate_ghost_slab(
+    arr: &mut [Real],
+    shape: &IndexShape,
+    nvar: usize,
+    slab: &Slab,
+    fine_lo: [i64; 3],
+    coarse: &[Real],
+    clo: [i64; 3],
+    cdims: [usize; 3],
+) {
+    let dim = shape.dim;
+    let n = shape.ncells_total();
+    let (nt0, nt1) = (shape.nt(0), shape.nt(1));
+    let [cx, cy, cz] = cdims;
+    let cplane = cx * cy * cz;
+    let g = shape.is_(0) as i64; // NGHOST in active dims
+
+    let cidx = |v: usize, k: usize, j: usize, i: usize| -> usize {
+        v * cplane + (k * cy + j) * cx + i
+    };
+
+    for v in 0..nvar {
+        for k in slab.z.0..slab.z.1 {
+            for j in slab.y.0..slab.y.1 {
+                for i in slab.x.0..slab.x.1 {
+                    // global fine indices
+                    let gf = [
+                        fine_lo[0] + i as i64 - g,
+                        fine_lo[1] + j as i64 - if dim >= 2 { g } else { 0 },
+                        fine_lo[2] + k as i64 - if dim >= 3 { g } else { 0 },
+                    ];
+                    // owning coarse cell (local to the buffer)
+                    let c = [
+                        (gf[0].div_euclid(2) - clo[0]) as usize,
+                        if dim >= 2 { (gf[1].div_euclid(2) - clo[1]) as usize } else { 0 },
+                        if dim >= 3 { (gf[2].div_euclid(2) - clo[2]) as usize } else { 0 },
+                    ];
+                    debug_assert!(c[0] < cx && c[1] < cy && c[2] < cz);
+                    let center = coarse[cidx(v, c[2], c[1], c[0])];
+                    let mut val = center;
+                    // per-axis limited slope, zero at buffer edges
+                    for d in 0..dim {
+                        let (ext, cc) = match d {
+                            0 => (cx, c[0]),
+                            1 => (cy, c[1]),
+                            _ => (cz, c[2]),
+                        };
+                        let mut slope = 0.0;
+                        if cc > 0 && cc + 1 < ext {
+                            let (km, jm, im, kp, jp, ip) = match d {
+                                0 => (c[2], c[1], c[0] - 1, c[2], c[1], c[0] + 1),
+                                1 => (c[2], c[1] - 1, c[0], c[2], c[1] + 1, c[0]),
+                                _ => (c[2] - 1, c[1], c[0], c[2] + 1, c[1], c[0]),
+                            };
+                            let dm = center - coarse[cidx(v, km, jm, im)];
+                            let dp = coarse[cidx(v, kp, jp, ip)] - center;
+                            slope = minmod(dm, dp);
+                        }
+                        let t: Real = if gf[d].rem_euclid(2) == 0 { -0.25 } else { 0.25 };
+                        val += slope * t;
+                    }
+                    arr[v * n + (k * nt1 + j) * nt0 + i] = val;
+                }
+            }
+        }
+    }
+}
+
+/// On derefinement: restrict a child block's interior into the parent's
+/// octant given the child's per-axis bits (0 = lower half).
+pub fn restrict_block_into_parent(
+    child: &[Real],
+    shape: &IndexShape,
+    nvar: usize,
+    bits: [i64; 3],
+    parent: &mut [Real],
+) {
+    let dim = shape.dim;
+    let interior = Slab {
+        x: (shape.is_(0), shape.ie(0)),
+        y: (shape.is_(1), shape.ie(1)),
+        z: (shape.is_(2), shape.ie(2)),
+    };
+    let mut buf = Vec::with_capacity(nvar * shape.ncells_interior() / (1 << dim));
+    let [cx, cy, cz] = restrict_slab(child, shape, nvar, &interior, &mut buf);
+    let n = shape.ncells_total();
+    let (nt0, nt1) = (shape.nt(0), shape.nt(1));
+    // parent octant origin in parent local (ghosted) indices
+    let ox = shape.is_(0) + bits[0] as usize * shape.n[0] / 2;
+    let oy = shape.is_(1) + if dim >= 2 { bits[1] as usize * shape.n[1] / 2 } else { 0 };
+    let oz = shape.is_(2) + if dim >= 3 { bits[2] as usize * shape.n[2] / 2 } else { 0 };
+    let mut r = 0usize;
+    for v in 0..nvar {
+        for k in 0..cz {
+            for j in 0..cy {
+                for i in 0..cx {
+                    parent[v * n + ((oz + k) * nt1 + oy + j) * nt0 + ox + i] = buf[r];
+                    r += 1;
+                }
+            }
+        }
+    }
+}
+
+/// On refinement: fill a child block's interior by prolongating from the
+/// parent's interior (slope-limited linear; slopes clamped at parent
+/// interior edges).
+pub fn prolongate_child_from_parent(
+    parent: &[Real],
+    shape: &IndexShape,
+    nvar: usize,
+    bits: [i64; 3],
+    child: &mut [Real],
+) {
+    let dim = shape.dim;
+    // Dense copy of parent's interior as the "coarse buffer".
+    let n = shape.ncells_total();
+    let (nt0, nt1) = (shape.nt(0), shape.nt(1));
+    let (px, py, pz) = (shape.n[0], shape.n[1], shape.n[2]);
+    let mut coarse = vec![0.0; nvar * px * py * pz];
+    let mut w = 0usize;
+    for v in 0..nvar {
+        for k in shape.is_(2)..shape.ie(2) {
+            for j in shape.is_(1)..shape.ie(1) {
+                for i in shape.is_(0)..shape.ie(0) {
+                    coarse[w] = parent[v * n + (k * nt1 + j) * nt0 + i];
+                    w += 1;
+                }
+            }
+        }
+    }
+    // Child interior slab, with globals chosen so the child's fine cells
+    // land inside the parent's coarse box: treat parent interior as coarse
+    // cells [0..px) etc., child fine index = bits*n + local.
+    let interior = Slab {
+        x: (shape.is_(0), shape.ie(0)),
+        y: (shape.is_(1), shape.ie(1)),
+        z: (shape.is_(2), shape.ie(2)),
+    };
+    // In the parent's coarse frame, child octant `bits` spans fine cells
+    // [bits*n, bits*n + n) per axis.
+    let fine_lo = [
+        bits[0] * px as i64,
+        if dim >= 2 { bits[1] * py as i64 } else { 0 },
+        if dim >= 3 { bits[2] * pz as i64 } else { 0 },
+    ];
+    prolongate_ghost_slab(
+        child,
+        shape,
+        nvar,
+        &interior,
+        fine_lo,
+        &coarse,
+        [0, 0, 0],
+        [px, py, pz],
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::NGHOST;
+
+    fn fill_linear(shape: &IndexShape, nvar: usize, f: impl Fn(usize, f64, f64, f64) -> f64) -> Vec<Real> {
+        let n = shape.ncells_total();
+        let mut arr = vec![0.0; nvar * n];
+        for v in 0..nvar {
+            for k in 0..shape.nt(2) {
+                for j in 0..shape.nt(1) {
+                    for i in 0..shape.nt(0) {
+                        let x = i as f64;
+                        let y = j as f64;
+                        let z = k as f64;
+                        arr[v * n + (k * shape.nt(1) + j) * shape.nt(0) + i] =
+                            f(v, x, y, z) as Real;
+                    }
+                }
+            }
+        }
+        arr
+    }
+
+    #[test]
+    fn restriction_preserves_constant_and_mean() {
+        let shape = IndexShape::new(2, [8, 8, 1]);
+        let fine = fill_linear(&shape, 1, |_, _, _, _| 3.5);
+        let slab = Slab { x: (2, 10), y: (2, 10), z: (0, 1) };
+        let mut out = Vec::new();
+        let dims = restrict_slab(&fine, &shape, 1, &slab, &mut out);
+        assert_eq!(dims, [4, 4, 1]);
+        assert!(out.iter().all(|&x| (x - 3.5).abs() < 1e-6));
+
+        // mean preservation for arbitrary data
+        let fine2 = fill_linear(&shape, 1, |_, x, y, _| x * 7.0 + y * 0.5 + 1.0);
+        let mut out2 = Vec::new();
+        restrict_slab(&fine2, &shape, 1, &slab, &mut out2);
+        let fine_sum: f64 = (2..10)
+            .flat_map(|j| (2..10).map(move |i| (i as f64 * 7.0 + j as f64 * 0.5 + 1.0)))
+            .sum();
+        let coarse_sum: f64 = out2.iter().map(|&x| x as f64 * 4.0).sum();
+        assert!((fine_sum - coarse_sum).abs() < 1e-3);
+    }
+
+    #[test]
+    fn prolongation_reproduces_linear_fields() {
+        // coarse data linear in x and y -> limited-linear prolongation is
+        // exact away from buffer edges
+        let shape = IndexShape::new(2, [8, 8, 1]);
+        let nvar = 1;
+        let (cx, cy, cz) = (6, 6, 1);
+        let clo = [-1i64, -1, 0];
+        let mut coarse = vec![0.0; cx * cy * cz];
+        for j in 0..cy {
+            for i in 0..cx {
+                let gx = clo[0] + i as i64;
+                let gy = clo[1] + j as i64;
+                coarse[j * cx + i] = (2.0 * gx as f64 + 0.5 * gy as f64) as Real;
+            }
+        }
+        let mut arr = vec![0.0; nvar * shape.ncells_total()];
+        // fill the block interior (fine globals [0,8)x[0,8) = coarse [0,4))
+        let slab = Slab {
+            x: (NGHOST, NGHOST + 8),
+            y: (NGHOST, NGHOST + 8),
+            z: (0, 1),
+        };
+        prolongate_ghost_slab(&mut arr, &shape, nvar, &slab, [0, 0, 0], &coarse, clo, [cx, cy, cz]);
+        // fine cell value should equal the linear field at fine centers:
+        // coarse cell c center = c + 0.5 (coarse units), fine cell gf sits
+        // at (gf + 0.5)/2 coarse units -> field = 2x + 0.5y in coarse coords
+        for j in NGHOST..NGHOST + 8 {
+            for i in NGHOST..NGHOST + 8 {
+                let gfx = (i - NGHOST) as f64;
+                let gfy = (j - NGHOST) as f64;
+                let xc = (gfx + 0.5) / 2.0 - 0.5; // position in coarse index units
+                let yc = (gfy + 0.5) / 2.0 - 0.5;
+                let expect = 2.0 * xc + 0.5 * yc;
+                let got = arr[(j * shape.nt(0)) + i] as f64;
+                assert!(
+                    (got - expect).abs() < 1e-5,
+                    "({i},{j}): {got} vs {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn refine_then_derefine_roundtrips_constant() {
+        let shape = IndexShape::new(2, [8, 8, 1]);
+        let nvar = 2;
+        let parent = fill_linear(&shape, nvar, |v, _, _, _| v as f64 + 1.0);
+        let mut children = Vec::new();
+        for bits in [[0i64, 0, 0], [1, 0, 0], [0, 1, 0], [1, 1, 0]] {
+            let mut child = vec![0.0; nvar * shape.ncells_total()];
+            prolongate_child_from_parent(&parent, &shape, nvar, bits, &mut child);
+            children.push((bits, child));
+        }
+        let mut back = vec![0.0; nvar * shape.ncells_total()];
+        for (bits, child) in &children {
+            restrict_block_into_parent(child, &shape, nvar, *bits, &mut back);
+        }
+        // interiors agree exactly for constants
+        let n = shape.ncells_total();
+        for v in 0..nvar {
+            for j in shape.is_(1)..shape.ie(1) {
+                for i in shape.is_(0)..shape.ie(0) {
+                    let c = v * n + j * shape.nt(0) + i;
+                    assert!((back[c] - parent[c]).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn refine_derefine_conserves_totals() {
+        use crate::util::rng::XorShift;
+        let shape = IndexShape::new(2, [8, 8, 1]);
+        let nvar = 1;
+        let mut rng = XorShift::new(5);
+        let n = shape.ncells_total();
+        let mut parent = vec![0.0; n];
+        for j in shape.is_(1)..shape.ie(1) {
+            for i in shape.is_(0)..shape.ie(0) {
+                parent[j * shape.nt(0) + i] = 1.0 + rng.next_f32();
+            }
+        }
+        let mut total_children = 0.0f64;
+        let mut back = vec![0.0; n];
+        for bits in [[0i64, 0, 0], [1, 0, 0], [0, 1, 0], [1, 1, 0]] {
+            let mut child = vec![0.0; n];
+            prolongate_child_from_parent(&parent, &shape, nvar, bits, &mut child);
+            for j in shape.is_(1)..shape.ie(1) {
+                for i in shape.is_(0)..shape.ie(0) {
+                    // child cell volume = parent/4
+                    total_children += child[j * shape.nt(0) + i] as f64 * 0.25;
+                }
+            }
+            restrict_block_into_parent(&child, &shape, nvar, bits, &mut back);
+        }
+        let mut total_parent = 0.0f64;
+        let mut total_back = 0.0f64;
+        for j in shape.is_(1)..shape.ie(1) {
+            for i in shape.is_(0)..shape.ie(0) {
+                total_parent += parent[j * shape.nt(0) + i] as f64;
+                total_back += back[j * shape.nt(0) + i] as f64;
+            }
+        }
+        // limited-linear prolongation is conservative (slopes cancel in the
+        // 2x2 average), restriction is exact averaging
+        assert!((total_children - total_parent).abs() < 1e-3, "{total_children} vs {total_parent}");
+        assert!((total_back - total_parent).abs() < 1e-3);
+    }
+}

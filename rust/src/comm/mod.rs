@@ -1,0 +1,15 @@
+//! Communication substrate.
+//!
+//! The paper runs on MPI with one-sided, asynchronous, GPU-aware calls and
+//! per-variable communicators. This machine has no MPI, so `simmpi`
+//! implements the same *structure* in-process: rank = OS thread, mailbox =
+//! lock-protected queues keyed by (source, tag), nonblocking send/recv
+//! handles, per-communicator id spaces (so per-variable communicators work
+//! exactly as in Sec. 3.7 — no 32,767 tag-bound problem, but we keep the
+//! same tag-encoding discipline), tree-free allgather and generation-counted
+//! allreduce/barrier collectives.
+
+mod simmpi;
+pub mod tags;
+
+pub use simmpi::{Comm, Payload, RecvHandle, ReduceOp, World};

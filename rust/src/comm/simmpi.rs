@@ -1,0 +1,476 @@
+//! Simulated MPI: threads-as-ranks message passing with MPI-flavored
+//! semantics (nonblocking pt2pt, communicators, collectives).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::error::{Error, Result};
+use crate::Real;
+
+/// Message payloads. `F32` covers field data (zero-conversion), `Bytes`
+/// covers particles/serialized structures.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    F32(Vec<Real>),
+    F64(Vec<f64>),
+    Bytes(Vec<u8>),
+}
+
+impl Payload {
+    pub fn into_f32(self) -> Result<Vec<Real>> {
+        match self {
+            Payload::F32(v) => Ok(v),
+            _ => Err(Error::Comm("payload is not f32".into())),
+        }
+    }
+
+    pub fn into_bytes(self) -> Result<Vec<u8>> {
+        match self {
+            Payload::Bytes(v) => Ok(v),
+            _ => Err(Error::Comm("payload is not bytes".into())),
+        }
+    }
+}
+
+type Key = (usize, u64); // (source rank, tag)
+
+#[derive(Default)]
+struct MailboxInner {
+    queues: HashMap<Key, VecDeque<Payload>>,
+}
+
+struct Mailbox {
+    inner: Mutex<MailboxInner>,
+    cv: Condvar,
+}
+
+/// Reduction operators for collectives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Min,
+    Max,
+    Sum,
+}
+
+impl ReduceOp {
+    fn apply(self, a: f64, b: f64) -> f64 {
+        match self {
+            ReduceOp::Min => a.min(b),
+            ReduceOp::Max => a.max(b),
+            ReduceOp::Sum => a + b,
+        }
+    }
+
+    fn identity(self) -> f64 {
+        match self {
+            ReduceOp::Min => f64::INFINITY,
+            ReduceOp::Max => f64::NEG_INFINITY,
+            ReduceOp::Sum => 0.0,
+        }
+    }
+}
+
+/// Generation-counted state for bulk-synchronous collectives.
+struct CollectiveState {
+    generation: u64,
+    arrived: usize,
+    acc: f64,
+    acc_vec: Vec<f64>,
+    gathered: Vec<Option<Vec<u8>>>,
+    /// snapshot of the finished generation's results
+    done_acc: f64,
+    done_acc_vec: Vec<f64>,
+    done_gathered: Vec<Vec<u8>>,
+}
+
+struct WorldInner {
+    size: usize,
+    mailboxes: Vec<Mailbox>,
+    collective: Mutex<CollectiveState>,
+    collective_cv: Condvar,
+}
+
+/// The "MPI_COMM_WORLD" of one simulation: create once, then derive one
+/// [`Comm`] per rank thread.
+#[derive(Clone)]
+pub struct World {
+    inner: Arc<WorldInner>,
+}
+
+impl World {
+    pub fn new(size: usize) -> World {
+        assert!(size > 0);
+        let mailboxes = (0..size)
+            .map(|_| Mailbox { inner: Mutex::new(MailboxInner::default()), cv: Condvar::new() })
+            .collect();
+        World {
+            inner: Arc::new(WorldInner {
+                size,
+                mailboxes,
+                collective: Mutex::new(CollectiveState {
+                    generation: 0,
+                    arrived: 0,
+                    acc: 0.0,
+                    acc_vec: Vec::new(),
+                    gathered: vec![None; size],
+                    done_acc: 0.0,
+                    done_acc_vec: Vec::new(),
+                    done_gathered: Vec::new(),
+                }),
+                collective_cv: Condvar::new(),
+            }),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.inner.size
+    }
+
+    /// The communication endpoint for `rank`. `comm_id` namespaces tags —
+    /// one id per Variable, mirroring the paper's per-variable
+    /// communicators.
+    pub fn comm(&self, rank: usize, comm_id: u32) -> Comm {
+        assert!(rank < self.inner.size);
+        Comm { world: self.clone(), rank, comm_id }
+    }
+
+    /// Run `f(rank, world)` on `size` threads and join them, propagating
+    /// panics. The standard launcher for multi-rank simulations and tests.
+    pub fn launch<F>(size: usize, f: F) -> World
+    where
+        F: Fn(usize, World) + Send + Sync + 'static,
+    {
+        let world = World::new(size);
+        let f = Arc::new(f);
+        let mut handles = Vec::new();
+        for rank in 0..size {
+            let w = world.clone();
+            let f = f.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("rank{rank}"))
+                    .stack_size(32 * 1024 * 1024)
+                    .spawn(move || f(rank, w))
+                    .expect("spawn rank thread"),
+            );
+        }
+        for h in handles {
+            if let Err(e) = h.join() {
+                std::panic::resume_unwind(e);
+            }
+        }
+        world
+    }
+}
+
+/// A rank's endpoint within one communicator.
+#[derive(Clone)]
+pub struct Comm {
+    world: World,
+    rank: usize,
+    comm_id: u32,
+}
+
+/// Nonblocking receive handle (MPI_Irecv analog).
+pub struct RecvHandle {
+    comm: Comm,
+    src: usize,
+    tag: u64,
+}
+
+impl Comm {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.world.inner.size
+    }
+
+    #[inline]
+    fn key(&self, tag: u64) -> u64 {
+        // namespace the tag with the communicator id
+        ((self.comm_id as u64) << 48) | (tag & 0xFFFF_FFFF_FFFF)
+    }
+
+    /// Nonblocking, eager send (MPI_Isend with buffered completion — the
+    /// "one-sided" flavor of the paper: the sender never blocks).
+    pub fn isend(&self, dst: usize, tag: u64, payload: Payload) {
+        let mb = &self.world.inner.mailboxes[dst];
+        let mut inner = mb.inner.lock().unwrap();
+        inner
+            .queues
+            .entry((self.rank, self.key(tag)))
+            .or_default()
+            .push_back(payload);
+        mb.cv.notify_all();
+    }
+
+    /// Nonblocking receive: returns a handle to poll.
+    pub fn irecv(&self, src: usize, tag: u64) -> RecvHandle {
+        RecvHandle { comm: self.clone(), src, tag: self.key(tag) }
+    }
+
+    /// Immediate poll (MPI_Test + receive).
+    pub fn try_recv(&self, src: usize, tag: u64) -> Option<Payload> {
+        let mb = &self.world.inner.mailboxes[self.rank];
+        let mut inner = mb.inner.lock().unwrap();
+        inner
+            .queues
+            .get_mut(&(src, self.key(tag)))
+            .and_then(|q| q.pop_front())
+    }
+
+    /// Blocking receive (MPI_Recv).
+    pub fn recv(&self, src: usize, tag: u64) -> Payload {
+        let key = (src, self.key(tag));
+        let mb = &self.world.inner.mailboxes[self.rank];
+        let mut inner = mb.inner.lock().unwrap();
+        loop {
+            if let Some(p) = inner.queues.get_mut(&key).and_then(|q| q.pop_front()) {
+                return p;
+            }
+            inner = mb.cv.wait(inner).unwrap();
+        }
+    }
+
+    // -- collectives (bulk-synchronous, generation-counted) -----------------
+
+    fn collective<FEnter, FSnap, T>(&self, enter: FEnter, snap: FSnap) -> T
+    where
+        FEnter: FnOnce(&mut CollectiveState),
+        FSnap: FnOnce(&CollectiveState) -> T,
+    {
+        let w = &self.world.inner;
+        let mut st = w.collective.lock().unwrap();
+        let my_gen = st.generation;
+        enter(&mut st);
+        st.arrived += 1;
+        if st.arrived == w.size {
+            // last arrival publishes results and advances the generation
+            st.done_acc = st.acc;
+            st.done_acc_vec = std::mem::take(&mut st.acc_vec);
+            st.done_gathered = st
+                .gathered
+                .iter_mut()
+                .map(|g| g.take().unwrap_or_default())
+                .collect();
+            st.arrived = 0;
+            st.generation += 1;
+            w.collective_cv.notify_all();
+        } else {
+            while st.generation == my_gen {
+                st = w.collective_cv.wait(st).unwrap();
+            }
+        }
+        snap(&st)
+    }
+
+    /// All-reduce a scalar.
+    pub fn allreduce(&self, value: f64, op: ReduceOp) -> f64 {
+        self.collective(
+            |st| {
+                if st.arrived == 0 {
+                    st.acc = op.identity();
+                }
+                st.acc = op.apply(st.acc, value);
+            },
+            |st| st.done_acc,
+        )
+    }
+
+    /// Element-wise all-reduce of a vector (all ranks pass equal lengths).
+    pub fn allreduce_vec(&self, values: &[f64], op: ReduceOp) -> Vec<f64> {
+        let vals = values.to_vec();
+        self.collective(
+            move |st| {
+                if st.arrived == 0 {
+                    st.acc_vec = vec![op.identity(); vals.len()];
+                }
+                assert_eq!(st.acc_vec.len(), vals.len(), "allreduce_vec length mismatch");
+                for (a, v) in st.acc_vec.iter_mut().zip(&vals) {
+                    *a = op.apply(*a, *v);
+                }
+            },
+            |st| st.done_acc_vec.clone(),
+        )
+    }
+
+    /// Gather one byte blob from every rank, delivered to all (MPI_Allgatherv).
+    pub fn allgather(&self, bytes: Vec<u8>) -> Vec<Vec<u8>> {
+        let rank = self.rank;
+        self.collective(
+            move |st| {
+                st.gathered[rank] = Some(bytes);
+            },
+            |st| st.done_gathered.clone(),
+        )
+    }
+
+    /// Barrier.
+    pub fn barrier(&self) {
+        let _ = self.allreduce(0.0, ReduceOp::Sum);
+    }
+}
+
+impl RecvHandle {
+    /// Poll for completion; consumes the message when available.
+    pub fn test(&self) -> Option<Payload> {
+        let mb = &self.comm.world.inner.mailboxes[self.comm.rank];
+        let mut inner = mb.inner.lock().unwrap();
+        inner
+            .queues
+            .get_mut(&(self.src, self.tag))
+            .and_then(|q| q.pop_front())
+    }
+
+    /// Block until the message arrives.
+    pub fn wait(&self) -> Payload {
+        let key = (self.src, self.tag);
+        let mb = &self.comm.world.inner.mailboxes[self.comm.rank];
+        let mut inner = mb.inner.lock().unwrap();
+        loop {
+            if let Some(p) = inner.queues.get_mut(&key).and_then(|q| q.pop_front()) {
+                return p;
+            }
+            inner = mb.cv.wait(inner).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pt2pt_roundtrip() {
+        World::launch(2, |rank, world| {
+            let comm = world.comm(rank, 0);
+            if rank == 0 {
+                comm.isend(1, 7, Payload::F32(vec![1.0, 2.0]));
+                let back = comm.recv(1, 8).into_f32().unwrap();
+                assert_eq!(back, vec![3.0]);
+            } else {
+                let got = comm.recv(0, 7).into_f32().unwrap();
+                assert_eq!(got, vec![1.0, 2.0]);
+                comm.isend(0, 8, Payload::F32(vec![3.0]));
+            }
+        });
+    }
+
+    #[test]
+    fn fifo_per_source_tag() {
+        World::launch(2, |rank, world| {
+            let comm = world.comm(rank, 0);
+            if rank == 0 {
+                for i in 0..50 {
+                    comm.isend(1, 1, Payload::F32(vec![i as f32]));
+                }
+            } else {
+                for i in 0..50 {
+                    let v = comm.recv(0, 1).into_f32().unwrap();
+                    assert_eq!(v[0], i as f32, "messages must stay ordered");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn communicators_do_not_collide() {
+        World::launch(2, |rank, world| {
+            let a = world.comm(rank, 1);
+            let b = world.comm(rank, 2);
+            if rank == 0 {
+                b.isend(1, 5, Payload::F32(vec![2.0]));
+                a.isend(1, 5, Payload::F32(vec![1.0]));
+            } else {
+                // same tag, different communicator: no cross-talk
+                let va = a.recv(0, 5).into_f32().unwrap();
+                let vb = b.recv(0, 5).into_f32().unwrap();
+                assert_eq!(va, vec![1.0]);
+                assert_eq!(vb, vec![2.0]);
+            }
+        });
+    }
+
+    #[test]
+    fn irecv_poll() {
+        World::launch(2, |rank, world| {
+            let comm = world.comm(rank, 0);
+            if rank == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                comm.isend(1, 3, Payload::Bytes(vec![9u8]));
+            } else {
+                let h = comm.irecv(0, 3);
+                let mut polls = 0;
+                let payload = loop {
+                    if let Some(p) = h.test() {
+                        break p;
+                    }
+                    polls += 1;
+                    std::thread::yield_now();
+                };
+                assert_eq!(payload.into_bytes().unwrap(), vec![9u8]);
+                assert!(polls > 0 || true);
+            }
+        });
+    }
+
+    #[test]
+    fn allreduce_ops() {
+        World::launch(4, |rank, world| {
+            let comm = world.comm(rank, 0);
+            let v = (rank + 1) as f64;
+            assert_eq!(comm.allreduce(v, ReduceOp::Sum), 10.0);
+            assert_eq!(comm.allreduce(v, ReduceOp::Min), 1.0);
+            assert_eq!(comm.allreduce(v, ReduceOp::Max), 4.0);
+        });
+    }
+
+    #[test]
+    fn allreduce_vec_elementwise() {
+        World::launch(3, |rank, world| {
+            let comm = world.comm(rank, 0);
+            let v = vec![rank as f64, 10.0 * rank as f64];
+            let r = comm.allreduce_vec(&v, ReduceOp::Sum);
+            assert_eq!(r, vec![3.0, 30.0]);
+        });
+    }
+
+    #[test]
+    fn allgather_delivers_everyone() {
+        World::launch(3, |rank, world| {
+            let comm = world.comm(rank, 0);
+            let got = comm.allgather(vec![rank as u8; rank + 1]);
+            assert_eq!(got.len(), 3);
+            for (r, blob) in got.iter().enumerate() {
+                assert_eq!(blob, &vec![r as u8; r + 1]);
+            }
+        });
+    }
+
+    #[test]
+    fn repeated_collectives_stay_in_sync() {
+        static COUNT: AtomicUsize = AtomicUsize::new(0);
+        World::launch(4, |rank, world| {
+            let comm = world.comm(rank, 0);
+            for i in 0..100 {
+                let s = comm.allreduce(i as f64, ReduceOp::Sum);
+                assert_eq!(s, 4.0 * i as f64);
+            }
+            COUNT.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(COUNT.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rank_panic_propagates() {
+        World::launch(2, |rank, _| {
+            if rank == 1 {
+                panic!("boom");
+            }
+        });
+    }
+}

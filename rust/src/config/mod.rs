@@ -1,0 +1,18 @@
+//! Runtime configuration: Athena/Parthenon-style input files.
+//!
+//! ```text
+//! <parthenon/mesh>
+//! nx1 = 64          # root grid cells
+//! x1min = -0.5
+//! x1max = 0.5
+//!
+//! <parthenon/meshblock>
+//! nx1 = 16
+//! ```
+//!
+//! Keys can be overridden from the command line as `block/key=value`
+//! (see [`ParameterInput::apply_override`]), mirroring Parthenon's CLI.
+
+mod parameter_input;
+
+pub use parameter_input::ParameterInput;

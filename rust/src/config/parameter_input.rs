@@ -1,0 +1,248 @@
+//! The `ParameterInput` store: parsed input blocks with typed getters.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Parsed input file: `<block>` sections of `key = value` pairs.
+///
+/// Getter methods with an `_or` suffix record the default into the store so
+/// that the effective configuration (including defaulted values) can be
+/// dumped into outputs — the same trick Parthenon/Athena++ use to make runs
+/// reproducible from their output headers.
+#[derive(Debug, Clone, Default)]
+pub struct ParameterInput {
+    blocks: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl ParameterInput {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            Error::config(format!("cannot read {:?}: {e}", path.as_ref()))
+        })?;
+        Self::from_str(&text)
+    }
+
+    #[allow(clippy::should_implement_trait)]
+    pub fn from_str(text: &str) -> Result<Self> {
+        let mut pin = Self::new();
+        let mut block = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('<') {
+                let name = name.strip_suffix('>').ok_or_else(|| {
+                    Error::config(format!("line {}: malformed block header", lineno + 1))
+                })?;
+                block = name.trim().to_string();
+                pin.blocks.entry(block.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            if block.is_empty() {
+                return Err(Error::config(format!(
+                    "line {}: key before any <block>",
+                    lineno + 1
+                )));
+            }
+            pin.blocks
+                .get_mut(&block)
+                .unwrap()
+                .insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(pin)
+    }
+
+    /// Apply a CLI override of the form `block/key=value`.
+    pub fn apply_override(&mut self, spec: &str) -> Result<()> {
+        let (path, value) = spec
+            .split_once('=')
+            .ok_or_else(|| Error::config(format!("bad override {spec:?}")))?;
+        let (block, key) = path
+            .rsplit_once('/')
+            .ok_or_else(|| Error::config(format!("bad override path {path:?}")))?;
+        self.set(block, key, value);
+        Ok(())
+    }
+
+    pub fn set(&mut self, block: &str, key: &str, value: impl ToString) {
+        self.blocks
+            .entry(block.to_string())
+            .or_default()
+            .insert(key.to_string(), value.to_string());
+    }
+
+    pub fn has(&self, block: &str, key: &str) -> bool {
+        self.blocks
+            .get(block)
+            .map(|b| b.contains_key(key))
+            .unwrap_or(false)
+    }
+
+    pub fn get_str(&self, block: &str, key: &str) -> Option<&str> {
+        self.blocks.get(block)?.get(key).map(|s| s.as_str())
+    }
+
+    fn parse<T: std::str::FromStr>(&self, block: &str, key: &str) -> Result<Option<T>> {
+        match self.get_str(block, key) {
+            None => Ok(None),
+            Some(s) => s.parse::<T>().map(Some).map_err(|_| {
+                Error::config(format!("cannot parse <{block}> {key} = {s:?}"))
+            }),
+        }
+    }
+
+    pub fn get_real(&self, block: &str, key: &str) -> Result<Option<f64>> {
+        self.parse(block, key)
+    }
+
+    pub fn get_int(&self, block: &str, key: &str) -> Result<Option<i64>> {
+        self.parse(block, key)
+    }
+
+    pub fn get_bool(&self, block: &str, key: &str) -> Result<Option<bool>> {
+        match self.get_str(block, key) {
+            None => Ok(None),
+            Some(s) => match s.to_ascii_lowercase().as_str() {
+                "true" | "1" | "yes" | "on" => Ok(Some(true)),
+                "false" | "0" | "no" | "off" => Ok(Some(false)),
+                _ => Err(Error::config(format!("cannot parse bool <{block}> {key} = {s:?}"))),
+            },
+        }
+    }
+
+    // -- getters that record the applied default ----------------------------
+
+    pub fn real_or(&mut self, block: &str, key: &str, default: f64) -> f64 {
+        match self.get_real(block, key) {
+            Ok(Some(v)) => v,
+            _ => {
+                self.set(block, key, default);
+                default
+            }
+        }
+    }
+
+    pub fn int_or(&mut self, block: &str, key: &str, default: i64) -> i64 {
+        match self.get_int(block, key) {
+            Ok(Some(v)) => v,
+            _ => {
+                self.set(block, key, default);
+                default
+            }
+        }
+    }
+
+    pub fn bool_or(&mut self, block: &str, key: &str, default: bool) -> bool {
+        match self.get_bool(block, key) {
+            Ok(Some(v)) => v,
+            _ => {
+                self.set(block, key, default);
+                default
+            }
+        }
+    }
+
+    pub fn str_or(&mut self, block: &str, key: &str, default: &str) -> String {
+        match self.get_str(block, key) {
+            Some(v) => v.to_string(),
+            None => {
+                self.set(block, key, default);
+                default.to_string()
+            }
+        }
+    }
+
+    /// Dump the effective configuration back to input-file syntax.
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        for (block, kv) in &self.blocks {
+            s.push_str(&format!("<{block}>\n"));
+            for (k, v) in kv {
+                s.push_str(&format!("{k} = {v}\n"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn block_names(&self) -> impl Iterator<Item = &str> {
+        self.blocks.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a comment
+<parthenon/mesh>
+nx1 = 64    # trailing comment
+x1min = -0.5
+x1max = 0.5
+periodic = true
+
+<hydro>
+gamma = 1.4
+eos = adiabatic
+"#;
+
+    #[test]
+    fn parses_blocks_and_values() {
+        let pin = ParameterInput::from_str(SAMPLE).unwrap();
+        assert_eq!(pin.get_int("parthenon/mesh", "nx1").unwrap(), Some(64));
+        assert_eq!(pin.get_real("parthenon/mesh", "x1min").unwrap(), Some(-0.5));
+        assert_eq!(pin.get_bool("parthenon/mesh", "periodic").unwrap(), Some(true));
+        assert_eq!(pin.get_str("hydro", "eos"), Some("adiabatic"));
+    }
+
+    #[test]
+    fn defaults_are_recorded() {
+        let mut pin = ParameterInput::from_str(SAMPLE).unwrap();
+        assert_eq!(pin.int_or("parthenon/mesh", "nx2", 1), 1);
+        // second read sees the recorded default
+        assert_eq!(pin.get_int("parthenon/mesh", "nx2").unwrap(), Some(1));
+        assert!(pin.dump().contains("nx2 = 1"));
+    }
+
+    #[test]
+    fn overrides() {
+        let mut pin = ParameterInput::from_str(SAMPLE).unwrap();
+        pin.apply_override("parthenon/mesh/nx1=128").unwrap();
+        assert_eq!(pin.get_int("parthenon/mesh", "nx1").unwrap(), Some(128));
+        assert!(pin.apply_override("garbage").is_err());
+        assert!(pin.apply_override("noslash=3").is_err());
+    }
+
+    #[test]
+    fn error_paths() {
+        assert!(ParameterInput::from_str("<unclosed\nx=1").is_err());
+        assert!(ParameterInput::from_str("x = 1").is_err()); // key before block
+        let pin = ParameterInput::from_str("<b>\nx = abc").unwrap();
+        assert!(pin.get_int("b", "x").is_err());
+    }
+
+    #[test]
+    fn roundtrip_dump() {
+        let pin = ParameterInput::from_str(SAMPLE).unwrap();
+        let pin2 = ParameterInput::from_str(&pin.dump()).unwrap();
+        assert_eq!(pin2.get_int("parthenon/mesh", "nx1").unwrap(), Some(64));
+    }
+}

@@ -1,0 +1,113 @@
+//! Bench support: timed multi-rank simulation runs with warmup, used by the
+//! `cargo bench` harnesses that regenerate the paper's tables and figures.
+
+use std::sync::{Arc, Mutex};
+
+use super::HydroSim;
+use crate::comm::World;
+use crate::config::ParameterInput;
+use crate::driver::EvolutionDriver;
+
+
+/// Result of one measured configuration.
+#[derive(Debug, Clone)]
+pub struct BenchRun {
+    /// Global zone-cycles/s (mean of the per-rank measurements, each of
+    /// which counts all global zones).
+    pub zcps: f64,
+    /// Total executable launches across ranks (device path only).
+    pub launches: u64,
+    /// Cycles measured (after warmup).
+    pub cycles: u64,
+    /// Total blocks in the mesh.
+    pub nblocks: usize,
+    /// Wall seconds of the measured window (max across ranks).
+    pub wall: f64,
+}
+
+/// Run `deck` on `nranks` rank-threads: `warm` untimed cycles, then `meas`
+/// timed cycles. Panics on simulation errors (benches should be loud).
+pub fn measure(deck: &str, overrides: &[&str], nranks: usize, warm: u64, meas: u64) -> BenchRun {
+    let out: Arc<Mutex<Vec<(f64, u64, usize, f64)>>> =
+        Arc::new(Mutex::new(vec![(0.0, 0, 0, 0.0); nranks]));
+    let o2 = out.clone();
+    let deck = deck.to_string();
+    let overrides: Vec<String> = overrides.iter().map(|s| s.to_string()).collect();
+    World::launch(nranks, move |rank, world| {
+        let mut pin = ParameterInput::from_str(&deck).expect("bench deck parses");
+        for ov in &overrides {
+            pin.apply_override(ov).expect("bench override");
+        }
+        // never stop early
+        pin.set("parthenon/time", "tlim", 1e30);
+        pin.set("parthenon/time", "nlim", -1);
+        let mut sim = HydroSim::new(pin, rank, world).expect("bench sim");
+        for _ in 0..warm {
+            sim.step().expect("warm step");
+        }
+        sim.zc.reset();
+        let launches0 = sim.device.as_ref().map(|d| d.rt.launches).unwrap_or(0);
+        for _ in 0..meas {
+            sim.step().expect("meas step");
+        }
+        let launches = sim.device.as_ref().map(|d| d.rt.launches).unwrap_or(0) - launches0;
+        o2.lock().unwrap()[rank] = (
+            sim.zc.zcps(),
+            launches,
+            sim.mesh.tree.nblocks(),
+            sim.zc.wall_secs,
+        );
+    });
+    let v = out.lock().unwrap();
+    BenchRun {
+        zcps: v.iter().map(|x| x.0).sum::<f64>() / nranks as f64,
+        launches: v.iter().map(|x| x.1).sum(),
+        cycles: meas,
+        nblocks: v[0].2,
+        wall: v.iter().map(|x| x.3).fold(0.0, f64::max),
+    }
+}
+
+/// Standard 3D benchmark deck: periodic uniform flow on an nx^3 mesh split
+/// into bx^3 blocks.
+pub fn deck_3d(nx: usize, bx: usize) -> String {
+    format!(
+        "<parthenon/job>\nproblem = uniform\nquiet = true\n\
+         <parthenon/mesh>\nnx1 = {nx}\nnx2 = {nx}\nnx3 = {nx}\n\
+         <parthenon/meshblock>\nnx1 = {bx}\nnx2 = {bx}\nnx3 = {bx}\n\
+         <parthenon/time>\ntlim = 1e30\n\
+         <hydro>\ngamma = 1.4\ncfl = 0.3\n\
+         <problem>\nvx = 0.1\nvy = 0.05\n"
+    )
+}
+
+/// 3D deck with independent per-axis mesh extents.
+pub fn deck_3d_xyz(nx: [usize; 3], bx: usize) -> String {
+    format!(
+        "<parthenon/job>\nproblem = uniform\nquiet = true\n\
+         <parthenon/mesh>\nnx1 = {}\nnx2 = {}\nnx3 = {}\n\
+         <parthenon/meshblock>\nnx1 = {bx}\nnx2 = {bx}\nnx3 = {bx}\n\
+         <parthenon/time>\ntlim = 1e30\n\
+         <hydro>\ngamma = 1.4\ncfl = 0.3\n\
+         <problem>\nvx = 0.1\nvy = 0.05\n",
+        nx[0], nx[1], nx[2]
+    )
+}
+
+/// Multilevel deck: root grid nx^3 in bx^3 blocks with a statically refined
+/// central cube (the paper's Table 1 / Fig 11 mesh shape, scaled down).
+pub fn deck_multilevel(nx: usize, bx: usize, levels: u8) -> String {
+    let mut s = format!(
+        "<parthenon/job>\nproblem = blast\nquiet = true\n\
+         <parthenon/mesh>\nnx1 = {nx}\nnx2 = {nx}\nnx3 = {nx}\nrefinement = static\n\
+         <parthenon/meshblock>\nnx1 = {bx}\nnx2 = {bx}\nnx3 = {bx}\n\
+         <parthenon/time>\ntlim = 1e30\n\
+         <hydro>\ngamma = 1.4\ncfl = 0.3\n\
+         <problem>\nradius = 0.2\np_in = 2.0\np_out = 1.0\n"
+    );
+    s.push_str(&format!(
+        "<parthenon/static_refinement0>\nlevel = {levels}\n\
+         x1min = 0.3\nx1max = 0.7\nx2min = 0.3\nx2max = 0.7\nx3min = 0.3\nx3max = 0.7\n"
+    ));
+    s
+}

@@ -1,0 +1,401 @@
+//! Device execution path: MeshBlockPacks staged through PJRT artifacts,
+//! with the paper's three buffer-packing strategies (Fig. 8):
+//!
+//! * `PerBuffer` — one launch per boundary buffer per block (pack1/unpack1
+//!   artifacts) + one stage launch per block: the "original" regime.
+//! * `PerBlock`  — unpack/stage/pack launches per block (3/block/stage).
+//! * `PerPack`   — ONE fused launch (unpack+stage+pack+dt) per MeshBlockPack
+//!   per stage: the paper's full packing optimization.
+//!
+//! Requires a uniform, fully periodic mesh — the configuration of every
+//! performance experiment in the paper. AMR/multilevel runs use the Host
+//! path (see DESIGN.md §limitations).
+
+use super::HydroSim;
+use crate::bvals::{bufspec, PackStrategy};
+use crate::comm::{tags, Comm, Payload};
+use crate::error::{Error, Result};
+use crate::hydro::native::{StageCoeffs, RK2_STAGES};
+use crate::hydro::CONS;
+use crate::mesh::{IndexShape, Mesh, NeighborKind};
+use crate::runtime::{default_artifact_dir, plan_packs, ArtifactKey, Runtime, ScalArgs};
+use crate::{Real, NHYDRO};
+
+/// Routing entry for one (block, neighbor slot).
+#[derive(Debug, Clone)]
+struct NbrEntry {
+    dst_rank: usize,
+    send_tag: u64,
+    recv_src: usize,
+    recv_tag: u64,
+}
+
+/// One MeshBlockPack's staging storage.
+struct DevPack {
+    nb: usize,
+    /// Index into the flat local-block order (first block).
+    first: usize,
+    u: Vec<Real>,
+    u0: Vec<Real>,
+    bufs_in: Vec<Real>,
+    bufs_out: Vec<Real>,
+}
+
+/// Per-rank device state.
+pub struct DeviceState {
+    pub rt: Runtime,
+    shape: IndexShape,
+    strategy: PackStrategy,
+    impl_: String,
+    packs: Vec<DevPack>,
+    /// Per local block (flat order): routing per neighbor slot.
+    routes: Vec<Vec<NbrEntry>>,
+    seg_offs: Vec<usize>,
+    seg_lens: Vec<usize>,
+    buflen: usize,
+    block_elems: usize,
+    last_dts: Vec<Real>,
+    comm: Comm,
+    tmp: Vec<Real>,
+    gamma: Real,
+}
+
+impl DeviceState {
+    pub fn new(sim: &HydroSim) -> Result<DeviceState> {
+        let mesh = &sim.mesh;
+        if mesh.tree.max_level() != 0 {
+            return Err(Error::Runtime(
+                "Device exec space requires a uniform mesh (use Host for AMR)".into(),
+            ));
+        }
+        if mesh.cfg.periodic_flags()[..mesh.cfg.dim].iter().any(|p| !p) {
+            return Err(Error::Runtime(
+                "Device exec space requires fully periodic boundaries".into(),
+            ));
+        }
+        let shape = mesh.cfg.index_shape();
+        let rt = Runtime::new(default_artifact_dir())?;
+
+        let strategy = sim.sp.strategy;
+        let dim = mesh.cfg.dim;
+        let n = mesh.cfg.block_nx;
+        // Pack plan: fused sizes for PerPack, single blocks otherwise.
+        let nlocal = mesh.blocks.len();
+        let plan = match strategy {
+            PackStrategy::PerPack => {
+                let avail = rt.manifest().pack_sizes("fused", dim, n, &sim.sp.impl_);
+                let avail = if avail.is_empty() {
+                    rt.manifest().pack_sizes("fused", dim, n, "jnp")
+                } else {
+                    avail
+                };
+                if avail.is_empty() {
+                    return Err(Error::Artifact(format!(
+                        "no fused artifacts for dim={dim} n={n:?}"
+                    )));
+                }
+                plan_packs(nlocal, &avail, sim.sp.pack_size)
+            }
+            _ => vec![1; nlocal],
+        };
+
+        let block_elems = NHYDRO * shape.ncells_total();
+        let buflen = bufspec::buflen(&shape, NHYDRO);
+        let (seg_offs, _) = bufspec::segment_offsets(&shape, NHYDRO);
+        let seg_lens = bufspec::segment_lengths(&shape, NHYDRO);
+
+        let mut packs = Vec::new();
+        let mut first = 0usize;
+        for nb in plan {
+            packs.push(DevPack {
+                nb,
+                first,
+                u: vec![0.0; nb * block_elems],
+                u0: vec![0.0; nb * block_elems],
+                bufs_in: vec![0.0; nb * buflen],
+                bufs_out: vec![0.0; nb * buflen],
+            });
+            first += nb;
+        }
+
+        // Routing tables.
+        let opp = bufspec::opposite_index(dim);
+        let mut routes = Vec::with_capacity(nlocal);
+        for b in &mesh.blocks {
+            let mut entries = Vec::new();
+            for nb in mesh.tree.find_neighbors(&b.loc) {
+                let NeighborKind::SameLevel(nloc) = &nb.kind else {
+                    return Err(Error::Runtime("device mesh must be uniform".into()));
+                };
+                let ngid = mesh.tree.gid_of(nloc).unwrap();
+                let my_child = child_code_of(&b.loc);
+                let nbr_child = child_code_of(nloc);
+                entries.push(NbrEntry {
+                    dst_rank: mesh.rank_of(ngid),
+                    send_tag: tags::bval_tag(
+                        ngid,
+                        (opp[nb.nbr_index] << 3) | my_child,
+                    ),
+                    recv_src: mesh.rank_of(ngid),
+                    recv_tag: tags::bval_tag(b.gid, (nb.nbr_index << 3) | nbr_child),
+                });
+            }
+            routes.push(entries);
+        }
+
+        let comm = sim.world.comm(mesh.my_rank, tags::COMM_BVALS_BASE + 1);
+        let mut dev = DeviceState {
+            rt,
+            shape,
+            strategy,
+            impl_: sim.sp.impl_.clone(),
+            packs,
+            routes,
+            seg_offs,
+            seg_lens,
+            buflen,
+            block_elems,
+            last_dts: vec![0.0; nlocal],
+            comm,
+            tmp: vec![0.0; block_elems],
+            gamma: sim.pkg.gamma,
+        };
+
+        dev.sync_from_blocks(mesh)?;
+        // Bootstrap: fill bufs_in once (pack + route) and compute dt.
+        dev.bootstrap(mesh)?;
+        Ok(dev)
+    }
+
+    fn key(&self, kind: &str, nb: usize) -> ArtifactKey {
+        let mut k = ArtifactKey::new(kind, self.shape.dim, self.shape_n(), nb);
+        // pallas impl only exists for some variants; fall back to jnp
+        if self.impl_ == "pallas" {
+            let kp = k.clone().with_impl("pallas");
+            if self.rt.manifest().has(&kp) {
+                return kp;
+            }
+        }
+        k.impl_ = "jnp".to_string();
+        k
+    }
+
+    fn shape_n(&self) -> [usize; 3] {
+        self.shape.n
+    }
+
+    /// Gather authoritative state from MeshBlock containers into staging.
+    pub fn sync_from_blocks(&mut self, mesh: &Mesh) -> Result<()> {
+        for p in &mut self.packs {
+            for bi in 0..p.nb {
+                let arr = mesh.blocks[p.first + bi].data.get(CONS)?;
+                p.u[bi * self.block_elems..(bi + 1) * self.block_elems]
+                    .copy_from_slice(arr.as_slice());
+            }
+        }
+        Ok(())
+    }
+
+    /// Scatter staging back into MeshBlock containers (for IO / regrid).
+    pub fn sync_to_blocks(&self, mesh: &mut Mesh) -> Result<()> {
+        for p in &self.packs {
+            for bi in 0..p.nb {
+                let arr = mesh.blocks[p.first + bi].data.get_mut(CONS)?;
+                arr.as_mut_slice()
+                    .copy_from_slice(&p.u[bi * self.block_elems..(bi + 1) * self.block_elems]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Initial buffer fill + dt (uses nb=1 pack/dt artifacts; not timed).
+    fn bootstrap(&mut self, mesh: &Mesh) -> Result<()> {
+        let kp = self.key("pack", 1);
+        for pi in 0..self.packs.len() {
+            for bi in 0..self.packs[pi].nb {
+                let (u_slice, mut seg) = {
+                    let p = &self.packs[pi];
+                    (
+                        p.u[bi * self.block_elems..(bi + 1) * self.block_elems].to_vec(),
+                        vec![0.0; self.buflen],
+                    )
+                };
+                self.rt.pack(&kp, &u_slice, &mut seg)?;
+                self.packs[pi].bufs_out[bi * self.buflen..(bi + 1) * self.buflen]
+                    .copy_from_slice(&seg);
+            }
+        }
+        self.route_and_receive(mesh)?;
+        // initial dt
+        let kdt = self.key("dt", 1);
+        let scal = self.scal(RK2_STAGES[0], 0.0, mesh);
+        for pi in 0..self.packs.len() {
+            for bi in 0..self.packs[pi].nb {
+                let u_slice = self.packs[pi].u
+                    [bi * self.block_elems..(bi + 1) * self.block_elems]
+                    .to_vec();
+                let dts = self.rt.dt(&kdt, &u_slice, scal)?;
+                self.last_dts[self.packs[pi].first + bi] = dts[0];
+            }
+        }
+        Ok(())
+    }
+
+    fn scal(&self, co: StageCoeffs, dt: Real, mesh: &Mesh) -> ScalArgs {
+        let c = &mesh.blocks[0].coords;
+        ScalArgs {
+            g0: co.g0,
+            g1: co.g1,
+            beta: co.beta,
+            dt,
+            dx: [c.dx[0] as Real, c.dx[1] as Real, c.dx[2] as Real],
+            gamma: self.gamma,
+        }
+    }
+
+    /// Raw min CFL dt across local blocks (times the caller's CFL factor).
+    pub fn last_dt_local(&self, cfl: f64) -> f64 {
+        let m = self
+            .last_dts
+            .iter()
+            .fold(Real::INFINITY, |a, &b| a.min(b));
+        cfl * m as f64
+    }
+
+    /// Send every block's outbound segments and (blocking) receive inbound
+    /// segments into bufs_in.
+    fn route_and_receive(&mut self, mesh: &Mesh) -> Result<()> {
+        // sends
+        for p in &self.packs {
+            for bi in 0..p.nb {
+                let flat = p.first + bi;
+                let base = bi * self.buflen;
+                for (slot, e) in self.routes[flat].iter().enumerate() {
+                    let seg = &p.bufs_out
+                        [base + self.seg_offs[slot]..base + self.seg_offs[slot] + self.seg_lens[slot]];
+                    self.comm
+                        .isend(e.dst_rank, e.send_tag, Payload::F32(seg.to_vec()));
+                }
+            }
+        }
+        let _ = mesh;
+        // receives (blocking; messages already in flight)
+        for p in &mut self.packs {
+            for bi in 0..p.nb {
+                let flat = p.first + bi;
+                let base = bi * self.buflen;
+                for (slot, e) in self.routes[flat].iter().enumerate() {
+                    let data = self
+                        .comm
+                        .recv(e.recv_src, e.recv_tag)
+                        .into_f32()?;
+                    p.bufs_in
+                        [base + self.seg_offs[slot]..base + self.seg_offs[slot] + self.seg_lens[slot]]
+                        .copy_from_slice(&data);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One full cycle (2 RK stages) on the device path.
+    pub fn step(&mut self, sim: &mut HydroSim, dt: Real) -> Result<()> {
+        // u0 <- u
+        for p in &mut self.packs {
+            p.u0.copy_from_slice(&p.u);
+        }
+        for (si, co) in RK2_STAGES.iter().enumerate() {
+            let scal = self.scal(*co, dt, &sim.mesh);
+            match self.strategy {
+                PackStrategy::PerPack => self.stage_perpack(scal, si)?,
+                PackStrategy::PerBlock => self.stage_perblock(scal, si)?,
+                PackStrategy::PerBuffer => self.stage_perbuffer(scal, si)?,
+                PackStrategy::Native => {
+                    return Err(Error::Runtime(
+                        "strategy=native is the Host path".into(),
+                    ))
+                }
+            }
+            self.route_and_receive(&sim.mesh)?;
+        }
+        Ok(())
+    }
+
+    /// One fused launch per pack per stage.
+    fn stage_perpack(&mut self, scal: ScalArgs, si: usize) -> Result<()> {
+        let keys: Vec<ArtifactKey> =
+            self.packs.iter().map(|p| self.key("fused", p.nb)).collect();
+        let DeviceState { rt, packs, last_dts, .. } = self;
+        for (pi, p) in packs.iter_mut().enumerate() {
+            let dts =
+                rt.fused(&keys[pi], &mut p.u, &p.u0, &p.bufs_in, scal, &mut p.bufs_out)?;
+            if si == 1 {
+                for (bi, d) in dts.iter().enumerate() {
+                    last_dts[p.first + bi] = *d;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// unpack + stage + pack (+ dt at stage 2) per block.
+    fn stage_perblock(&mut self, scal: ScalArgs, si: usize) -> Result<()> {
+        let kun = self.key("unpack", 1);
+        let kst = self.key("stage", 1);
+        let kpk = self.key("pack", 1);
+        let kdt = self.key("dt", 1);
+        let DeviceState { rt, packs, last_dts, tmp, .. } = self;
+        for p in packs.iter_mut() {
+            debug_assert_eq!(p.nb, 1);
+            rt.unpack(&kun, &p.u, &p.bufs_in, tmp)?;
+            p.u.copy_from_slice(tmp);
+            rt.stage(&kst, &p.u, &p.u0, scal, tmp)?;
+            p.u.copy_from_slice(tmp);
+            rt.pack(&kpk, &p.u, &mut p.bufs_out)?;
+            if si == 1 {
+                let dts = rt.dt(&kdt, &p.u, scal)?;
+                last_dts[p.first] = dts[0];
+            }
+        }
+        Ok(())
+    }
+
+    /// The "original" regime: one launch per buffer (unpack1/pack1) plus the
+    /// per-block stage launch.
+    fn stage_perbuffer(&mut self, scal: ScalArgs, si: usize) -> Result<()> {
+        let kst = self.key("stage", 1);
+        let kdt = self.key("dt", 1);
+        let nslots = self.seg_lens.len();
+        let kun1: Vec<ArtifactKey> =
+            (0..nslots).map(|s| self.key("unpack1", 1).with_nbr(s)).collect();
+        let kpk1: Vec<ArtifactKey> =
+            (0..nslots).map(|s| self.key("pack1", 1).with_nbr(s)).collect();
+        let DeviceState { rt, packs, last_dts, tmp, seg_offs, seg_lens, .. } = self;
+        for p in packs.iter_mut() {
+            debug_assert_eq!(p.nb, 1);
+            // apply each inbound buffer with its own launch
+            for slot in 0..nslots {
+                let seg = &p.bufs_in[seg_offs[slot]..seg_offs[slot] + seg_lens[slot]];
+                rt.unpack1(&kun1[slot], &p.u, seg, tmp)?;
+                p.u.copy_from_slice(tmp);
+            }
+            rt.stage(&kst, &p.u, &p.u0, scal, tmp)?;
+            p.u.copy_from_slice(tmp);
+            // fill each outbound buffer with its own launch
+            for slot in 0..nslots {
+                let seg = rt.pack1(&kpk1[slot], &p.u)?;
+                p.bufs_out[seg_offs[slot]..seg_offs[slot] + seg_lens[slot]]
+                    .copy_from_slice(&seg);
+            }
+            if si == 1 {
+                let dts = rt.dt(&kdt, &p.u, scal)?;
+                last_dts[p.first] = dts[0];
+            }
+        }
+        Ok(())
+    }
+}
+
+fn child_code_of(loc: &crate::mesh::LogicalLocation) -> usize {
+    ((loc.lx[0] & 1) | ((loc.lx[1] & 1) << 1) | ((loc.lx[2] & 1) << 2)) as usize
+}

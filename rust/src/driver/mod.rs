@@ -1,0 +1,736 @@
+//! Drivers (paper Sec. 3.11): the base [`Driver`] trait, the evolution loop,
+//! and [`HydroSim`] — the PARTHENON-HYDRO application driver that weaves
+//! package tasks into task collections, reduces the timestep, runs AMR and
+//! load balancing, and writes outputs.
+//!
+//! Two execution spaces:
+//! * `Host`  — native Rust solver; supports everything (AMR, multilevel
+//!   meshes with flux correction, all BCs).
+//! * `Device` — PJRT artifacts; uniform periodic meshes (the configuration
+//!   of every performance experiment in the paper), with the three buffer
+//!   packing strategies of Fig. 8.
+
+pub mod bench;
+mod device;
+pub mod regrid;
+
+pub use device::DeviceState;
+
+use crate::bvals::{self, PackStrategy};
+use crate::comm::{tags, Comm, Payload, ReduceOp, World};
+use crate::config::ParameterInput;
+use crate::error::{Error, Result};
+use crate::hydro::native::{self, FluxArrays, Scratch, StageCoeffs, RK2_STAGES};
+use crate::hydro::problems::{self, Problem};
+use crate::hydro::{HydroPackage, CONS};
+use crate::mesh::{Mesh, MeshConfig, NeighborKind};
+use crate::metrics::{Timers, ZoneCycles};
+use crate::tasks::{TaskRegion, TaskStatus, NONE};
+use crate::vars::{resolve_packages, Package};
+use crate::Real;
+
+/// Where the hydro stage executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecSpace {
+    Host,
+    Device,
+}
+
+/// Base driver abstraction (paper Sec. 3.11): applications implement
+/// `execute`; [`EvolutionDriver`] adds the time loop; [`MultiStageDriver`]
+/// is realized by [`HydroSim`]'s per-stage task collections.
+pub trait Driver {
+    fn execute(&mut self) -> Result<()>;
+}
+
+/// Drivers that advance a solution in time.
+pub trait EvolutionDriver: Driver {
+    fn time(&self) -> f64;
+    fn cycle(&self) -> u64;
+    /// Advance one timestep.
+    fn step(&mut self) -> Result<()>;
+}
+
+/// Multi-stage (RK) drivers: one task collection per stage.
+pub trait MultiStageDriver: EvolutionDriver {
+    fn num_stages(&self) -> usize;
+}
+
+/// Simulation parameters parsed from the input file + CLI.
+#[derive(Debug, Clone)]
+pub struct SimParams {
+    pub problem: Problem,
+    pub tlim: f64,
+    pub nlim: i64,
+    pub exec: ExecSpace,
+    pub strategy: PackStrategy,
+    pub pack_size: usize,
+    pub impl_: String,
+    pub output_dt: f64,
+    pub history_dt: f64,
+    pub out_dir: String,
+    pub quiet: bool,
+}
+
+impl SimParams {
+    pub fn from_input(pin: &mut ParameterInput) -> Result<SimParams> {
+        let problem_s = pin.str_or("parthenon/job", "problem", "uniform");
+        let problem = Problem::parse(&problem_s)
+            .ok_or_else(|| Error::config(format!("unknown problem {problem_s:?}")))?;
+        let exec = match pin.str_or("parthenon/exec", "space", "host").as_str() {
+            "host" => ExecSpace::Host,
+            "device" => ExecSpace::Device,
+            other => return Err(Error::config(format!("unknown exec space {other:?}"))),
+        };
+        let strategy_s = pin.str_or(
+            "parthenon/exec",
+            "strategy",
+            if exec == ExecSpace::Device { "perpack" } else { "native" },
+        );
+        let strategy = PackStrategy::parse(&strategy_s)
+            .ok_or_else(|| Error::config(format!("unknown strategy {strategy_s:?}")))?;
+        Ok(SimParams {
+            problem,
+            tlim: pin.real_or("parthenon/time", "tlim", 1.0),
+            nlim: pin.int_or("parthenon/time", "nlim", -1),
+            exec,
+            strategy,
+            pack_size: pin.int_or("parthenon/exec", "pack_size", 16) as usize,
+            impl_: pin.str_or("parthenon/exec", "impl", "jnp"),
+            output_dt: pin.real_or("parthenon/output0", "dt", -1.0),
+            history_dt: pin.real_or("parthenon/history", "dt", -1.0),
+            out_dir: pin.str_or("parthenon/job", "out_dir", "."),
+            quiet: pin.bool_or("parthenon/job", "quiet", false),
+        })
+    }
+}
+
+/// Pending flux-correction receive on a coarse block.
+struct FluxRecv {
+    block: usize,
+    src: usize,
+    tag: u64,
+    d: usize,
+    face_idx: usize,
+    t_start: [usize; 3], // tangential coarse start (per axis; normal unused)
+    t_len: [usize; 3],
+}
+
+/// The PARTHENON-HYDRO application driver for one rank.
+pub struct HydroSim {
+    pub pin: ParameterInput,
+    pub mesh: Mesh,
+    pub pkg: HydroPackage,
+    pub sp: SimParams,
+    pub world: World,
+    comm_cons: Comm,
+    comm_flux: Comm,
+    comm_coll: Comm,
+    pub device: Option<DeviceState>,
+    // native per-block work buffers (same order as mesh.blocks)
+    flux: Vec<FluxArrays>,
+    scratch: Scratch,
+    u0: Vec<Vec<Real>>,
+    unew: Vec<Vec<Real>>,
+    flux_pending: Vec<FluxRecv>,
+    pub time: f64,
+    pub cycle: u64,
+    pub dt: f64,
+    pub timers: Timers,
+    pub zc: ZoneCycles,
+    output_idx: usize,
+    next_output: f64,
+    next_history: f64,
+}
+
+impl HydroSim {
+    pub fn new(mut pin: ParameterInput, rank: usize, world: World) -> Result<HydroSim> {
+        let cfg = MeshConfig::from_params(&mut pin)?;
+        let pkg = HydroPackage::initialize(&mut pin);
+        let sp = SimParams::from_input(&mut pin)?;
+        let fields = resolve_packages(&[pkg.descriptor()])?;
+        let mut mesh = Mesh::build(cfg, fields, rank, world.size());
+
+        // Problem generation on every local block.
+        for mb in &mut mesh.blocks {
+            problems::generate(sp.problem, mb, &mut pin, pkg.gamma)?;
+        }
+
+        let comm_cons = world.comm(rank, tags::COMM_BVALS_BASE);
+        let comm_flux = world.comm(rank, tags::COMM_FLUX);
+        let comm_coll = world.comm(rank, 0);
+
+        let mut sim = HydroSim {
+            pin,
+            mesh,
+            pkg,
+            sp,
+            world,
+            comm_cons,
+            comm_flux,
+            comm_coll,
+            device: None,
+            flux: Vec::new(),
+            scratch: Scratch::default(),
+            u0: Vec::new(),
+            unew: Vec::new(),
+            flux_pending: Vec::new(),
+            time: 0.0,
+            cycle: 0,
+            dt: 0.0,
+            timers: Timers::default(),
+            zc: ZoneCycles::default(),
+            output_idx: 0,
+            next_output: 0.0,
+            next_history: 0.0,
+        };
+        sim.rebuild_work_buffers();
+
+        // Initial ghost fill + derived fill.
+        bvals::exchange_blocking(
+            &mut sim.mesh,
+            &sim.comm_cons,
+            CONS,
+            Some([native::IM1, native::IM2, native::IM3]),
+        )?;
+        sim.fill_derived();
+
+        if sim.sp.exec == ExecSpace::Device {
+            sim.device = Some(DeviceState::new(&sim)?);
+        }
+
+        // Initial timestep.
+        sim.dt = sim.reduce_dt();
+        Ok(sim)
+    }
+
+    /// Restore state from a snapshot (restart; paper Sec. 3.9). The mesh is
+    /// rebuilt from the snapshot's leaves and redistributed over the CURRENT
+    /// rank count by the load balancer, exactly like Parthenon's restart.
+    pub fn restore_snapshot(&mut self, snap: &crate::io::Snapshot) -> Result<()> {
+        use crate::balance;
+        let tree = crate::mesh::BlockTree::from_leaves(
+            self.mesh.cfg.nrb,
+            self.mesh.cfg.dim,
+            self.mesh.cfg.periodic_flags(),
+            snap.leaves.clone(),
+        );
+        let costs = vec![1.0; tree.nblocks()];
+        self.mesh.ranks = balance::assign_blocks(&costs, self.mesh.nranks);
+        self.mesh.tree = tree;
+        self.mesh.rebuild_local_blocks();
+        self.rebuild_work_buffers();
+        snap.restore_into(&mut self.mesh)?;
+        self.time = snap.time;
+        self.cycle = snap.cycle;
+        self.dt = snap.dt;
+        bvals::exchange_blocking(
+            &mut self.mesh,
+            &self.comm_cons,
+            CONS,
+            Some([native::IM1, native::IM2, native::IM3]),
+        )?;
+        self.fill_derived();
+        if self.sp.exec == ExecSpace::Device {
+            self.device = Some(DeviceState::new(self)?);
+        }
+        Ok(())
+    }
+
+    /// Write a restart snapshot of the current state.
+    pub fn write_restart(&mut self, path: &str) -> Result<()> {
+        if let Some(dev) = &self.device {
+            dev.sync_to_blocks(&mut self.mesh)?;
+        }
+        crate::io::write_snapshot(
+            &self.mesh,
+            &self.comm_coll,
+            self.time,
+            self.cycle,
+            self.dt,
+            &[CONS.to_string()],
+            path,
+        )
+    }
+
+    /// Resize per-block native work buffers after mesh changes.
+    pub(crate) fn rebuild_work_buffers(&mut self) {
+        let shape = self.mesh.cfg.index_shape();
+        let nelem = crate::NHYDRO * shape.ncells_total();
+        self.flux = self.mesh.blocks.iter().map(|_| FluxArrays::new(&shape)).collect();
+        self.u0 = self.mesh.blocks.iter().map(|_| vec![0.0; nelem]).collect();
+        self.unew = self.mesh.blocks.iter().map(|_| vec![0.0; nelem]).collect();
+    }
+
+    pub fn fill_derived(&mut self) {
+        for mb in &mut self.mesh.blocks {
+            self.pkg.fill_derived(&mut mb.data, &mb.coords);
+        }
+    }
+
+    /// Global zones (interior cells) across all ranks' blocks.
+    pub fn global_zones(&self) -> u64 {
+        (self.mesh.tree.nblocks() * self.mesh.cfg.index_shape().ncells_interior()) as u64
+    }
+
+    /// CFL timestep: package estimate per block, min-reduced across ranks.
+    pub fn reduce_dt(&mut self) -> f64 {
+        let local = if let Some(dev) = &self.device {
+            dev.last_dt_local((self.pkg.cfl) as f64)
+        } else {
+            self.mesh
+                .blocks
+                .iter()
+                .map(|b| self.pkg.estimate_dt(&b.data, &b.coords))
+                .fold(f64::INFINITY, f64::min)
+        };
+        self.comm_coll.allreduce(local, ReduceOp::Min)
+    }
+
+    // -- flux correction (native, multilevel) --------------------------------
+
+    fn is_multilevel(&self) -> bool {
+        self.mesh.tree.max_level() > 0
+    }
+
+    /// Fine side: restrict boundary face fluxes and send to the coarse
+    /// neighbor (paper Sec. 3.7).
+    fn flux_corr_send(&mut self, bi: usize) {
+        let shape = self.mesh.cfg.index_shape();
+        let dim = shape.dim;
+        let loc = self.mesh.blocks[bi].loc;
+        for nb in self.mesh.tree.find_neighbors(&loc) {
+            // faces only
+            let nonzero = (0..3).filter(|&d| nb.offset[d] != 0).count();
+            if nonzero != 1 {
+                continue;
+            }
+            let NeighborKind::Coarser(cloc) = &nb.kind else { continue };
+            let d = (0..3).find(|&d| nb.offset[d] != 0).unwrap();
+            let side = if nb.offset[d] < 0 { 0 } else { 1 };
+            let fx = &self.flux[bi];
+            let face_idx = if side == 0 { 0 } else { shape.n[d] };
+            // restrict tangentially: coarse (tj, tk) <- mean of fine 2x2 (or
+            // 2 in 2D). Tangential axes = all active axes != d.
+            let mut payload = Vec::new();
+            let tdims: Vec<usize> = (0..dim).filter(|&a| a != d).collect();
+            let tlen: Vec<usize> =
+                tdims.iter().map(|&a| shape.n[a] / 2).collect();
+            for v in 0..crate::NHYDRO {
+                match dim {
+                    1 => payload.push(fx.f[d][fx.idx(d, v, 0, 0, face_idx)]),
+                    2 => {
+                        let a = tdims[0];
+                        for t in 0..tlen[0] {
+                            let mut s = 0.0;
+                            for dt in 0..2 {
+                                let tt = 2 * t + dt;
+                                let (k, j, i) = match (d, a) {
+                                    (0, 1) => (0, tt, face_idx),
+                                    (1, 0) => (0, face_idx, tt),
+                                    _ => unreachable!(),
+                                };
+                                s += fx.f[d][fx.idx(d, v, k, j, i)];
+                            }
+                            payload.push(s * 0.5);
+                        }
+                    }
+                    _ => {
+                        // 3D: tangential axes in ascending order (a1 < a2)
+                        let (a1, a2) = (tdims[0], tdims[1]);
+                        for t2 in 0..tlen[1] {
+                            for t1 in 0..tlen[0] {
+                                let mut s = 0.0;
+                                for d2 in 0..2 {
+                                    for d1 in 0..2 {
+                                        let u1 = 2 * t1 + d1;
+                                        let u2 = 2 * t2 + d2;
+                                        let mut kji = [0usize; 3]; // (i,j,k)
+                                        kji[d] = face_idx;
+                                        kji[a1] = u1;
+                                        kji[a2] = u2;
+                                        s += fx.f[d]
+                                            [fx.idx(d, v, kji[2], kji[1], kji[0])];
+                                    }
+                                }
+                                payload.push(s * 0.25);
+                            }
+                        }
+                    }
+                }
+            }
+            let cgid = self.mesh.tree.gid_of(cloc).unwrap();
+            let face = 2 * d + (1 - side); // coarse block's face (opposite side)
+            let child = ((loc.lx[0] & 1)
+                | ((loc.lx[1] & 1) << 1)
+                | ((loc.lx[2] & 1) << 2)) as usize;
+            let tag = tags::flux_tag(cgid, face, child);
+            self.comm_flux
+                .isend(self.mesh.rank_of(cgid), tag, Payload::F32(payload));
+        }
+    }
+
+    /// Coarse side: register expected flux corrections for this stage.
+    fn flux_corr_post_recvs(&mut self) {
+        self.flux_pending.clear();
+        let shape = self.mesh.cfg.index_shape();
+        let dim = shape.dim;
+        for (bi, b) in self.mesh.blocks.iter().enumerate() {
+            for nb in self.mesh.tree.find_neighbors(&b.loc) {
+                let nonzero = (0..3).filter(|&d| nb.offset[d] != 0).count();
+                if nonzero != 1 {
+                    continue;
+                }
+                let NeighborKind::Finer(fines) = &nb.kind else { continue };
+                let d = (0..3).find(|&d| nb.offset[d] != 0).unwrap();
+                let side = if nb.offset[d] < 0 { 0 } else { 1 };
+                let face_idx = if side == 0 { 0 } else { shape.n[d] };
+                let face = 2 * d + side;
+                for floc in fines {
+                    let child = ((floc.lx[0] & 1)
+                        | ((floc.lx[1] & 1) << 1)
+                        | ((floc.lx[2] & 1) << 2)) as usize;
+                    let mut t_start = [0usize; 3];
+                    let mut t_len = [1usize; 3];
+                    for a in 0..dim {
+                        if a == d {
+                            continue;
+                        }
+                        let bit = (floc.lx[a] & 1) as usize;
+                        t_start[a] = bit * shape.n[a] / 2;
+                        t_len[a] = shape.n[a] / 2;
+                    }
+                    let fgid = self.mesh.tree.gid_of(floc).unwrap();
+                    self.flux_pending.push(FluxRecv {
+                        block: bi,
+                        src: self.mesh.rank_of(fgid),
+                        tag: tags::flux_tag(b.gid, face, child),
+                        d,
+                        face_idx,
+                        t_start,
+                        t_len,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Poll flux corrections; apply arrivals. True when done.
+    fn flux_corr_poll(&mut self) -> Result<bool> {
+        let dim = self.mesh.cfg.dim;
+        let mut i = 0;
+        while i < self.flux_pending.len() {
+            let p = &self.flux_pending[i];
+            if let Some(payload) = self.comm_flux.try_recv(p.src, p.tag) {
+                let data = payload.into_f32()?;
+                let p = self.flux_pending.swap_remove(i);
+                apply_flux_correction(&mut self.flux[p.block], &p, dim, &data);
+            } else {
+                i += 1;
+            }
+        }
+        Ok(self.flux_pending.is_empty())
+    }
+
+    // -- native stage ---------------------------------------------------------
+
+    /// One RK stage on the Host path, woven as a task region per block
+    /// (compute fluxes -> flux-correction send/recv -> apply) followed by
+    /// the mesh-wide ghost exchange.
+    fn native_stage(&mut self, co: StageCoeffs, dt: Real) -> Result<()> {
+        let multilevel = self.is_multilevel();
+        let nblocks = self.mesh.blocks.len();
+        if multilevel {
+            self.flux_corr_post_recvs();
+        }
+
+        let mut region: TaskRegion<HydroSim> = TaskRegion::new(nblocks.max(1));
+        for bi in 0..nblocks {
+            let list = region.list(bi);
+            let t_flux = list.add(NONE, move |sim: &mut HydroSim| {
+                sim.compute_fluxes_block(bi);
+                TaskStatus::Complete
+            });
+            let t_send = list.add(&[t_flux], move |sim: &mut HydroSim| {
+                if sim.is_multilevel() {
+                    sim.flux_corr_send(bi);
+                }
+                TaskStatus::Complete
+            });
+            // flux receives are mesh-wide; the first list carries the poll
+            if bi == 0 && multilevel {
+                let t_recv = list.add(&[t_send], move |sim: &mut HydroSim| {
+                    match sim.flux_corr_poll() {
+                        Ok(true) => TaskStatus::Complete,
+                        Ok(false) => TaskStatus::Incomplete,
+                        Err(_) => TaskStatus::Incomplete,
+                    }
+                });
+                let _ = t_recv;
+            }
+        }
+        region.execute(self, 500_000_000)?;
+
+        // All corrections are in (region completed) -> apply updates.
+        for bi in 0..nblocks {
+            self.apply_stage_block(bi, co, dt);
+        }
+
+        // Ghost exchange of the updated state.
+        bvals::exchange_blocking(
+            &mut self.mesh,
+            &self.comm_cons,
+            CONS,
+            Some([native::IM1, native::IM2, native::IM3]),
+        )?;
+        Ok(())
+    }
+
+    fn compute_fluxes_block(&mut self, bi: usize) {
+        let shape = self.mesh.cfg.index_shape();
+        let gamma = self.pkg.gamma;
+        let arr = self.mesh.blocks[bi].data.get(CONS).expect("cons");
+        native::compute_fluxes(arr.as_slice(), &shape, gamma, &mut self.flux[bi], &mut self.scratch);
+    }
+
+    fn apply_stage_block(&mut self, bi: usize, co: StageCoeffs, dt: Real) {
+        let shape = self.mesh.cfg.index_shape();
+        let dx = {
+            let c = &self.mesh.blocks[bi].coords;
+            [c.dx[0] as Real, c.dx[1] as Real, c.dx[2] as Real]
+        };
+        let arr = self.mesh.blocks[bi].data.get_mut(CONS).expect("cons");
+        native::apply_stage(
+            arr.as_slice(),
+            &self.u0[bi],
+            &self.flux[bi],
+            &shape,
+            co,
+            dt,
+            dx,
+            &mut self.unew[bi],
+        );
+        arr.as_mut_slice().copy_from_slice(&self.unew[bi]);
+    }
+
+    /// Save cycle-start state u0.
+    fn save_u0(&mut self) {
+        for (bi, b) in self.mesh.blocks.iter().enumerate() {
+            self.u0[bi].copy_from_slice(b.data.get(CONS).expect("cons").as_slice());
+        }
+    }
+
+    // -- outputs --------------------------------------------------------------
+
+    fn maybe_output(&mut self, force: bool) -> Result<()> {
+        if self.sp.output_dt > 0.0 && (force || self.time + 1e-12 >= self.next_output) {
+            if let Some(dev) = &self.device {
+                dev.sync_to_blocks(&mut self.mesh)?;
+            }
+            self.fill_derived();
+            let path = format!(
+                "{}/{}.{:05}.pbin",
+                self.sp.out_dir, "parthenon", self.output_idx
+            );
+            crate::io::write_snapshot(
+                &self.mesh,
+                &self.comm_coll,
+                self.time,
+                self.cycle,
+                self.dt,
+                &[CONS.to_string()],
+                &path,
+            )?;
+            self.output_idx += 1;
+            while self.next_output <= self.time {
+                self.next_output += self.sp.output_dt;
+            }
+        }
+        if self.sp.history_dt > 0.0 && (force || self.time + 1e-12 >= self.next_history) {
+            let sums = self.history_sums();
+            let glob = self.comm_coll.allreduce_vec(&sums, ReduceOp::Sum);
+            if self.mesh.my_rank == 0 {
+                let path = format!("{}/parthenon.hst", self.sp.out_dir);
+                crate::io::append_history(&path, self.time, self.cycle, &glob)?;
+            }
+            while self.next_history <= self.time {
+                self.next_history += self.sp.history_dt;
+            }
+        }
+        Ok(())
+    }
+
+    /// Volume-integrated (mass, momx, KE, total E) over local blocks.
+    pub fn history_sums(&self) -> Vec<f64> {
+        let shape = self.mesh.cfg.index_shape();
+        let mut out = vec![0.0f64; 4];
+        for b in &self.mesh.blocks {
+            let vol = b.coords.cell_volume();
+            let arr = b.data.get(CONS).expect("cons");
+            let u = arr.as_slice();
+            let n = shape.ncells_total();
+            let (nt0, nt1) = (shape.nt(0), shape.nt(1));
+            for k in shape.is_(2)..shape.ie(2) {
+                for j in shape.is_(1)..shape.ie(1) {
+                    for i in shape.is_(0)..shape.ie(0) {
+                        let c = (k * nt1 + j) * nt0 + i;
+                        let rho = u[c] as f64;
+                        let mx = u[n + c] as f64;
+                        let my = u[2 * n + c] as f64;
+                        let mz = u[3 * n + c] as f64;
+                        let e = u[4 * n + c] as f64;
+                        out[0] += rho * vol;
+                        out[1] += mx * vol;
+                        out[2] += 0.5 * (mx * mx + my * my + mz * mz) / rho.max(1e-30) * vol;
+                        out[3] += e * vol;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Apply one received flux correction to a coarse block's flux array.
+fn apply_flux_correction(fx: &mut FluxArrays, p: &FluxRecv, dim: usize, data: &[Real]) {
+    let d = p.d;
+    let mut r = 0usize;
+    let tdims: Vec<usize> = (0..dim).filter(|&a| a != d).collect();
+    for v in 0..crate::NHYDRO {
+        match dim {
+            1 => {
+                let idx = fx.idx(d, v, 0, 0, p.face_idx);
+                fx.f[d][idx] = data[r];
+                r += 1;
+            }
+            2 => {
+                let a = tdims[0];
+                for t in 0..p.t_len[a] {
+                    let tt = p.t_start[a] + t;
+                    let (k, j, i) = match (d, a) {
+                        (0, 1) => (0, tt, p.face_idx),
+                        (1, 0) => (0, p.face_idx, tt),
+                        _ => unreachable!(),
+                    };
+                    let idx = fx.idx(d, v, k, j, i);
+                    fx.f[d][idx] = data[r];
+                    r += 1;
+                }
+            }
+            _ => {
+                let (a1, a2) = (tdims[0], tdims[1]);
+                for t2 in 0..p.t_len[a2] {
+                    for t1 in 0..p.t_len[a1] {
+                        let mut kji = [0usize; 3]; // (i,j,k)
+                        kji[d] = p.face_idx;
+                        kji[a1] = p.t_start[a1] + t1;
+                        kji[a2] = p.t_start[a2] + t2;
+                        let idx = fx.idx(d, v, kji[2], kji[1], kji[0]);
+                        fx.f[d][idx] = data[r];
+                        r += 1;
+                    }
+                }
+            }
+        }
+    }
+    debug_assert_eq!(r, data.len());
+}
+
+impl Driver for HydroSim {
+    fn execute(&mut self) -> Result<()> {
+        self.maybe_output(true)?;
+        while self.time < self.sp.tlim
+            && (self.sp.nlim < 0 || (self.cycle as i64) < self.sp.nlim)
+        {
+            self.step()?;
+            self.maybe_output(false)?;
+            if !self.sp.quiet && self.mesh.my_rank == 0 && self.cycle % 50 == 0 {
+                eprintln!(
+                    "cycle {:6}  time {:.5e}  dt {:.5e}  blocks {}",
+                    self.cycle,
+                    self.time,
+                    self.dt,
+                    self.mesh.tree.nblocks()
+                );
+            }
+        }
+        self.maybe_output(true)?;
+        Ok(())
+    }
+}
+
+impl EvolutionDriver for HydroSim {
+    fn time(&self) -> f64 {
+        self.time
+    }
+
+    fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    fn step(&mut self) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        let dt = self.dt as Real;
+
+        if self.device.is_some() {
+            // Device path: delegated (strategy-dependent launches).
+            let mut dev = self.device.take().unwrap();
+            dev.step(self, dt)?;
+            self.device = Some(dev);
+        } else {
+            self.save_u0();
+            for co in RK2_STAGES {
+                self.native_stage(co, dt)?;
+            }
+        }
+
+        self.time += self.dt;
+        self.cycle += 1;
+        self.dt = self.reduce_dt();
+
+        // AMR
+        if self.mesh.cfg.adaptive
+            && self.device.is_none()
+            && self.cycle % self.mesh.cfg.check_interval as u64 == 0
+        {
+            regrid::check_and_regrid(self)?;
+        }
+
+        self.zc
+            .record_cycle(self.global_zones(), t0.elapsed().as_secs_f64());
+        Ok(())
+    }
+}
+
+impl MultiStageDriver for HydroSim {
+    fn num_stages(&self) -> usize {
+        2
+    }
+}
+
+/// Launch an N-rank simulation of `input`, returning per-rank zone-cycles/s
+/// (joined). The standard entry point for the CLI, examples and benches.
+pub fn run_simulation(
+    input: &str,
+    overrides: &[String],
+    nranks: usize,
+) -> Result<Vec<f64>> {
+    use std::sync::Mutex;
+    let results: std::sync::Arc<Mutex<Vec<f64>>> =
+        std::sync::Arc::new(Mutex::new(vec![0.0; nranks]));
+    let input = input.to_string();
+    let overrides = overrides.to_vec();
+    let res2 = results.clone();
+    World::launch(nranks, move |rank, world| {
+        let mut pin = ParameterInput::from_str(&input).expect("parse input");
+        for ov in &overrides {
+            pin.apply_override(ov).expect("override");
+        }
+        let mut sim = HydroSim::new(pin, rank, world).expect("build sim");
+        sim.execute().expect("run sim");
+        res2.lock().unwrap()[rank] = sim.zc.zcps();
+    });
+    Ok(std::sync::Arc::try_unwrap(results)
+        .map(|m| m.into_inner().unwrap())
+        .unwrap_or_default())
+}

@@ -1,0 +1,244 @@
+//! AMR regrid + load balancing (paper Sec. 3.8): gather refinement flags,
+//! rebuild the tree deterministically on every rank, recompute the Z-order
+//! distribution, and migrate block data (derefining before sending and
+//! refining on the receiving rank, to minimize transfer size).
+
+use std::collections::HashMap;
+
+use super::HydroSim;
+use crate::balance;
+use crate::bvals::{self, prolongate_child_from_parent, restrict_block_into_parent};
+use crate::comm::{tags, Payload};
+use crate::error::Result;
+use crate::hydro::native;
+use crate::hydro::CONS;
+use crate::mesh::{AmrFlag, LogicalLocation};
+use crate::vars::Package;
+use crate::{Real, NHYDRO};
+
+/// Check refinement criteria, and regrid + rebalance if anything changed.
+/// Returns true if the mesh changed.
+pub fn check_and_regrid(sim: &mut HydroSim) -> Result<bool> {
+    // 1. local flags
+    let mut payload = Vec::new();
+    for b in &sim.mesh.blocks {
+        let flag = sim.pkg.check_refinement(&b.data, &b.coords);
+        let f: i8 = match flag {
+            AmrFlag::Refine => 1,
+            AmrFlag::Derefine => -1,
+            AmrFlag::Same => 0,
+        };
+        payload.extend_from_slice(&(b.gid as u64).to_le_bytes());
+        payload.push(f as u8);
+    }
+
+    // 2. allgather flags -> identical flag map on every rank
+    let gathered = sim.world.comm(sim.mesh.my_rank, 3).allgather(payload);
+    let mut flags: HashMap<LogicalLocation, AmrFlag> = HashMap::new();
+    for blob in &gathered {
+        for chunk in blob.chunks_exact(9) {
+            let gid = u64::from_le_bytes(chunk[..8].try_into().unwrap()) as usize;
+            let f = chunk[8] as i8;
+            let loc = sim.mesh.tree.leaves()[gid];
+            let flag = match f {
+                1 => AmrFlag::Refine,
+                -1 => AmrFlag::Derefine,
+                _ => AmrFlag::Same,
+            };
+            flags.insert(loc, flag);
+        }
+    }
+
+    // 3. deterministic tree rebuild
+    let new_tree = sim.mesh.tree.regrid(&flags, sim.mesh.cfg.max_level);
+    if new_tree.leaves() == sim.mesh.tree.leaves() {
+        return Ok(false);
+    }
+    apply_new_tree(sim, new_tree)?;
+    Ok(true)
+}
+
+/// Swap in a new tree: recompute ranks, migrate data, rebuild local blocks.
+pub fn apply_new_tree(sim: &mut HydroSim, new_tree: crate::mesh::BlockTree) -> Result<()> {
+    let shape = sim.mesh.cfg.index_shape();
+    let nelem = NHYDRO * shape.ncells_total();
+    let old_map = sim.mesh.location_map(); // loc -> (old gid, old rank)
+    let me = sim.mesh.my_rank;
+    let comm = sim.world.comm(me, tags::COMM_MIGRATE);
+
+    let costs = vec![1.0; new_tree.nblocks()];
+    let new_ranks = balance::assign_blocks(&costs, sim.mesh.nranks);
+
+    // Stash local old block data by location.
+    let mut stash: HashMap<LogicalLocation, Vec<Real>> = HashMap::new();
+    for b in &sim.mesh.blocks {
+        stash.insert(b.loc, b.data.get(CONS)?.as_slice().to_vec());
+    }
+
+    // -- send phase -----------------------------------------------------------
+    let dim = sim.mesh.cfg.dim;
+    for (new_gid, loc) in new_tree.leaves().iter().enumerate() {
+        let dst = new_ranks[new_gid];
+        // (a) same location existed
+        if let Some((_, old_rank)) = old_map.get(loc) {
+            if *old_rank == me && dst != me {
+                let data = stash.get(loc).unwrap();
+                comm.isend(
+                    dst,
+                    tags::migrate_tag(new_gid, 0),
+                    Payload::F32(data.clone()),
+                );
+            }
+            continue;
+        }
+        // (b) refinement: the parent existed -> parent owner sends its block
+        if loc.level > 0 {
+            if let Some((_, old_rank)) = old_map.get(&loc.parent()) {
+                if *old_rank == me && dst != me {
+                    let data = stash.get(&loc.parent()).unwrap();
+                    comm.isend(
+                        dst,
+                        tags::migrate_tag(new_gid, 0),
+                        Payload::F32(data.clone()),
+                    );
+                }
+                continue;
+            }
+        }
+        // (c) derefinement: children existed -> each child owner restricts
+        //     its quadrant before sending (transfer-size optimization).
+        for child in loc.children(dim) {
+            if let Some((_, old_rank)) = old_map.get(&child) {
+                if *old_rank == me {
+                    let bits = child.child_bits();
+                    let piece = (bits[0] | (bits[1] << 1) | (bits[2] << 2)) as usize;
+                    if dst == me {
+                        continue; // local: restricted in the fill phase
+                    }
+                    let data = stash.get(&child).unwrap();
+                    let mut restricted = Vec::new();
+                    let interior = crate::bvals::bufspec::Slab {
+                        x: (shape.is_(0), shape.ie(0)),
+                        y: (shape.is_(1), shape.ie(1)),
+                        z: (shape.is_(2), shape.ie(2)),
+                    };
+                    bvals::restrict_slab(data, &shape, NHYDRO, &interior, &mut restricted);
+                    comm.isend(
+                        dst,
+                        tags::migrate_tag(new_gid, 1 + piece),
+                        Payload::F32(restricted),
+                    );
+                }
+            }
+        }
+    }
+
+    // -- rebuild local blocks --------------------------------------------------
+    sim.mesh.tree = new_tree;
+    sim.mesh.ranks = new_ranks;
+    sim.mesh.rebuild_local_blocks();
+    sim.rebuild_work_buffers();
+
+    // -- fill phase -------------------------------------------------------------
+    for bi in 0..sim.mesh.blocks.len() {
+        let (loc, gid) = (sim.mesh.blocks[bi].loc, sim.mesh.blocks[bi].gid);
+        // (a) direct move / receive
+        if let Some((_, old_rank)) = old_map.get(&loc) {
+            let data = if *old_rank == me {
+                stash.get(&loc).unwrap().clone()
+            } else {
+                comm.recv(*old_rank, tags::migrate_tag(gid, 0)).into_f32()?
+            };
+            sim.mesh.blocks[bi]
+                .data
+                .get_mut(CONS)?
+                .as_mut_slice()
+                .copy_from_slice(&data);
+            continue;
+        }
+        // (b) refined from parent
+        if loc.level > 0 {
+            if let Some((_, old_rank)) = old_map.get(&loc.parent()) {
+                let parent_data = if *old_rank == me {
+                    stash.get(&loc.parent()).unwrap().clone()
+                } else {
+                    comm.recv(*old_rank, tags::migrate_tag(gid, 0)).into_f32()?
+                };
+                let bits = loc.child_bits();
+                let mut child = vec![0.0; nelem];
+                prolongate_child_from_parent(&parent_data, &shape, NHYDRO, bits, &mut child);
+                sim.mesh.blocks[bi]
+                    .data
+                    .get_mut(CONS)?
+                    .as_mut_slice()
+                    .copy_from_slice(&child);
+                continue;
+            }
+        }
+        // (c) derefined from children
+        let mut parent = vec![0.0; nelem];
+        for child in loc.children(dim) {
+            let (_, old_rank) = old_map
+                .get(&child)
+                .expect("new coarse leaf must come from old children");
+            let bits = child.child_bits();
+            if *old_rank == me {
+                let data = stash.get(&child).unwrap();
+                restrict_block_into_parent(data, &shape, NHYDRO, bits, &mut parent);
+            } else {
+                let piece = (bits[0] | (bits[1] << 1) | (bits[2] << 2)) as usize;
+                let restricted = comm
+                    .recv(*old_rank, tags::migrate_tag(gid, 1 + piece))
+                    .into_f32()?;
+                place_restricted_quadrant(&restricted, &shape, bits, &mut parent);
+            }
+        }
+        sim.mesh.blocks[bi]
+            .data
+            .get_mut(CONS)?
+            .as_mut_slice()
+            .copy_from_slice(&parent);
+    }
+
+    // fresh ghosts + derived everywhere
+    let comm_cons = sim.world.comm(me, tags::COMM_BVALS_BASE);
+    bvals::exchange_blocking(
+        &mut sim.mesh,
+        &comm_cons,
+        CONS,
+        Some([native::IM1, native::IM2, native::IM3]),
+    )?;
+    sim.fill_derived();
+    Ok(())
+}
+
+/// Place a restricted child interior (dense [nvar, nz/2, ny/2, nx/2] in
+/// active dims) into the parent's octant.
+fn place_restricted_quadrant(
+    data: &[Real],
+    shape: &crate::mesh::IndexShape,
+    bits: [i64; 3],
+    parent: &mut [Real],
+) {
+    let dim = shape.dim;
+    let n = shape.ncells_total();
+    let (nt0, nt1) = (shape.nt(0), shape.nt(1));
+    let cx = shape.n[0] / 2;
+    let cy = if dim >= 2 { shape.n[1] / 2 } else { 1 };
+    let cz = if dim >= 3 { shape.n[2] / 2 } else { 1 };
+    let ox = shape.is_(0) + bits[0] as usize * cx;
+    let oy = shape.is_(1) + if dim >= 2 { bits[1] as usize * cy } else { 0 };
+    let oz = shape.is_(2) + if dim >= 3 { bits[2] as usize * cz } else { 0 };
+    let mut r = 0usize;
+    for v in 0..NHYDRO {
+        for k in 0..cz {
+            for j in 0..cy {
+                for i in 0..cx {
+                    parent[v * n + ((oz + k) * nt1 + oy + j) * nt0 + ox + i] = data[r];
+                    r += 1;
+                }
+            }
+        }
+    }
+    debug_assert_eq!(r, data.len());
+}

@@ -1,0 +1,58 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by the framework.
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("mesh error: {0}")]
+    Mesh(String),
+
+    #[error("package error: {0}")]
+    Package(String),
+
+    #[error("variable error: {0}")]
+    Variable(String),
+
+    #[error("communication error: {0}")]
+    Comm(String),
+
+    #[error("task error: {0}")]
+    Task(String),
+
+    #[error("runtime (PJRT) error: {0}")]
+    Runtime(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json error: {0}")]
+    Json(String),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Shorthand constructor helpers.
+impl Error {
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn mesh(msg: impl Into<String>) -> Self {
+        Error::Mesh(msg.into())
+    }
+}

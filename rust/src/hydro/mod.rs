@@ -1,0 +1,10 @@
+//! PARTHENON-HYDRO: the paper's miniapp (Sec. 4.1) as a package —
+//! compressible Euler equations, RK2 + PLM + HLLE, on 1/2/3D (static or
+//! adaptive) meshes, with a native (Host) solver and a Device path through
+//! the AOT artifacts.
+
+pub mod native;
+mod package;
+pub mod problems;
+
+pub use package::{HydroPackage, CONS, PRIM};

@@ -1,0 +1,547 @@
+//! Native (Host execution space) hydro solver — the CPU twin of the AOT
+//! artifacts: ideal-gas Euler equations, PLM (MC limiter) reconstruction on
+//! primitives, HLLE Riemann solver, unsplit flux-divergence RK stage.
+//!
+//! Numerics mirror `python/compile/kernels/ref.py` operation-for-operation
+//! in f32; Host-vs-Device equivalence is pinned by
+//! rust/tests/device_equivalence.rs.  Unlike the monolithic device stage,
+//! the native path exposes *fluxes* explicitly, which is what enables flux
+//! correction at fine-coarse boundaries (paper Sec. 3.7).
+
+use crate::mesh::IndexShape;
+use crate::{Real, NHYDRO};
+
+pub const IDN: usize = 0;
+pub const IM1: usize = 1;
+pub const IM2: usize = 2;
+pub const IM3: usize = 3;
+pub const IEN: usize = 4;
+pub const IVX: usize = 1;
+pub const IVY: usize = 2;
+pub const IVZ: usize = 3;
+pub const IPR: usize = 4;
+
+pub const PRESSURE_FLOOR: Real = 1.0e-10;
+pub const DENSITY_FLOOR: Real = 1.0e-10;
+
+/// RK stage coefficients: u_new = g0*u0 + g1*u + beta*dt*L(u).
+#[derive(Debug, Clone, Copy)]
+pub struct StageCoeffs {
+    pub g0: Real,
+    pub g1: Real,
+    pub beta: Real,
+}
+
+/// Two-stage RK2 as in PARTHENON-HYDRO.
+pub const RK2_STAGES: [StageCoeffs; 2] = [
+    StageCoeffs { g0: 0.0, g1: 1.0, beta: 1.0 },
+    StageCoeffs { g0: 0.5, g1: 0.5, beta: 0.5 },
+];
+
+/// Flux storage for one block: one face-centered array per direction.
+/// Direction d has interior extent +1 along d, interior extent elsewhere.
+#[derive(Debug, Clone, Default)]
+pub struct FluxArrays {
+    pub f: [Vec<Real>; 3],
+    pub dims: [[usize; 3]; 3], // per direction: (nx_f, ny_f, nz_f)
+}
+
+impl FluxArrays {
+    pub fn new(shape: &IndexShape) -> Self {
+        let mut fa = FluxArrays::default();
+        for d in 0..shape.dim {
+            let mut dims = [shape.n[0], shape.n[1], shape.n[2]];
+            dims[d] += 1;
+            fa.dims[d] = dims;
+            fa.f[d] = vec![0.0; NHYDRO * dims[0] * dims[1] * dims[2]];
+        }
+        fa
+    }
+
+    /// Flux element (v, k, j, i) for direction d (face-indexed along d).
+    #[inline]
+    pub fn idx(&self, d: usize, v: usize, k: usize, j: usize, i: usize) -> usize {
+        let [nx, ny, _] = self.dims[d];
+        ((v * self.dims[d][2] + k) * ny + j) * nx + i
+    }
+}
+
+/// Reusable scratch to keep the hot loop allocation-free.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    w: Vec<Real>,
+    dq: Vec<Real>,
+}
+
+impl Scratch {
+    pub fn ensure(&mut self, shape: &IndexShape) {
+        let n = NHYDRO * shape.ncells_total();
+        if self.w.len() != n {
+            self.w = vec![0.0; n];
+            self.dq = vec![0.0; n];
+        }
+    }
+}
+
+/// Conserved -> primitive over the whole (ghosted) array.
+pub fn primitives(u: &[Real], shape: &IndexShape, gamma: Real, w: &mut [Real]) {
+    let n = shape.ncells_total();
+    for c in 0..n {
+        let rho = u[IDN * n + c].max(DENSITY_FLOOR);
+        let vx = u[IM1 * n + c] / rho;
+        let vy = u[IM2 * n + c] / rho;
+        let vz = u[IM3 * n + c] / rho;
+        let ke = 0.5 * rho * (vx * vx + vy * vy + vz * vz);
+        let p = ((gamma - 1.0) * (u[IEN * n + c] - ke)).max(PRESSURE_FLOOR);
+        w[IDN * n + c] = rho;
+        w[IVX * n + c] = vx;
+        w[IVY * n + c] = vy;
+        w[IVZ * n + c] = vz;
+        w[IPR * n + c] = p;
+    }
+}
+
+#[inline]
+fn mc_limit(dqm: Real, dqp: Real) -> Real {
+    if dqm * dqp > 0.0 {
+        let avg = 0.5 * (dqm + dqp);
+        let lim = (2.0 * dqm.abs().min(dqp.abs())).min(avg.abs());
+        lim * avg.signum()
+    } else {
+        0.0
+    }
+}
+
+/// MC-limited slopes of `w` along direction d.
+///
+/// Only the cells the reconstruction actually consumes are computed:
+/// along d the stencil needs [g-1, g+n+1); tangentially only the interior
+/// rows are read — skipping ghost rows cuts ~1/3 of the work on small
+/// blocks (see EXPERIMENTS.md §Perf).
+fn slopes(w: &[Real], shape: &IndexShape, d: usize, dq: &mut [Real]) {
+    let n = shape.ncells_total();
+    let stride = match d {
+        0 => 1usize,
+        1 => shape.nt(0),
+        _ => shape.nt(0) * shape.nt(1),
+    };
+    let (nt0, nt1) = (shape.nt(0), shape.nt(1));
+    let g = crate::NGHOST;
+    // per-axis [lo, hi) ranges: stencil extent along d, interior tangentially
+    let range = |a: usize| -> (usize, usize) {
+        if a == d {
+            (shape.is_(a).saturating_sub(1).max(1), (shape.ie(a) + 1).min(shape.nt(a) - 1))
+        } else {
+            (shape.is_(a), shape.ie(a))
+        }
+    };
+    let _ = g;
+    let (ilo, ihi) = range(0);
+    let (jlo, jhi) = range(1);
+    let (klo, khi) = range(2);
+    for v in 0..NHYDRO {
+        for k in klo..khi {
+            for j in jlo..jhi {
+                let row = v * n + (k * nt1 + j) * nt0;
+                for c in row + ilo..row + ihi {
+                    let dqm = w[c] - w[c - stride];
+                    let dqp = w[c + stride] - w[c];
+                    dq[c] = mc_limit(dqm, dqp);
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+fn sound_speed(rho: Real, p: Real, gamma: Real) -> Real {
+    (gamma * p / rho).sqrt()
+}
+
+/// HLLE flux for primitive states wl/wr ([5]) along direction d.
+#[inline]
+pub fn hlle(wl: &[Real; 5], wr: &[Real; 5], d: usize, gamma: Real) -> [Real; 5] {
+    let cl = sound_speed(wl[IDN], wl[IPR], gamma);
+    let cr = sound_speed(wr[IDN], wr[IPR], gamma);
+    let vnl = wl[1 + d];
+    let vnr = wr[1 + d];
+    let sl = (vnl - cl).min(vnr - cr).min(0.0);
+    let sr = (vnl + cl).max(vnr + cr).max(0.0);
+
+    let cons = |w: &[Real; 5]| -> [Real; 5] {
+        let ke = 0.5 * w[IDN] * (w[IVX] * w[IVX] + w[IVY] * w[IVY] + w[IVZ] * w[IVZ]);
+        [
+            w[IDN],
+            w[IDN] * w[IVX],
+            w[IDN] * w[IVY],
+            w[IDN] * w[IVZ],
+            w[IPR] / (gamma - 1.0) + ke,
+        ]
+    };
+    let flux = |w: &[Real; 5]| -> [Real; 5] {
+        let vn = w[1 + d];
+        let e = {
+            let ke =
+                0.5 * w[IDN] * (w[IVX] * w[IVX] + w[IVY] * w[IVY] + w[IVZ] * w[IVZ]);
+            w[IPR] / (gamma - 1.0) + ke
+        };
+        let mut f = [
+            w[IDN] * vn,
+            w[IDN] * w[IVX] * vn,
+            w[IDN] * w[IVY] * vn,
+            w[IDN] * w[IVZ] * vn,
+            (e + w[IPR]) * vn,
+        ];
+        f[1 + d] += w[IPR];
+        f
+    };
+
+    let ul = cons(wl);
+    let ur = cons(wr);
+    let fl = flux(wl);
+    let fr = flux(wr);
+    let denom = sr - sl;
+    let mut out = [0.0; 5];
+    for v in 0..5 {
+        out[v] = (sr * fl[v] - sl * fr[v] + sl * sr * (ur[v] - ul[v])) / denom;
+    }
+    out
+}
+
+/// Compute HLLE fluxes at every interior face, all directions.
+pub fn compute_fluxes(
+    u: &[Real],
+    shape: &IndexShape,
+    gamma: Real,
+    fx: &mut FluxArrays,
+    scratch: &mut Scratch,
+) {
+    scratch.ensure(shape);
+    let n = shape.ncells_total();
+    // w reused across directions
+    primitives(u, shape, gamma, &mut scratch.w);
+    let g = crate::NGHOST;
+    let (nt0, nt1) = (shape.nt(0), shape.nt(1));
+
+    for d in 0..shape.dim {
+        slopes(&scratch.w, shape, d, &mut scratch.dq);
+        let stride = match d {
+            0 => 1usize,
+            1 => nt0,
+            _ => nt0 * nt1,
+        };
+        let [nfx, nfy, nfz] = fx.dims[d];
+        for k in 0..nfz {
+            for j in 0..nfy {
+                for i in 0..nfx {
+                    // face f between cells (c - stride) and c, where the
+                    // face index maps to ghosted cell coordinates:
+                    let ci = if d == 0 { i + g } else { i + shape.is_(0) };
+                    let cj = if d == 1 { j + g } else { j + shape.is_(1) };
+                    let ck = if d == 2 { k + g } else { k + shape.is_(2) };
+                    let c = (ck * nt1 + cj) * nt0 + ci;
+                    let cm = c - stride;
+                    let mut wl = [0.0; 5];
+                    let mut wr = [0.0; 5];
+                    for v in 0..NHYDRO {
+                        wl[v] = scratch.w[v * n + cm] + 0.5 * scratch.dq[v * n + cm];
+                        wr[v] = scratch.w[v * n + c] - 0.5 * scratch.dq[v * n + c];
+                    }
+                    let f = hlle(&wl, &wr, d, gamma);
+                    for v in 0..NHYDRO {
+                        let ix = fx.idx(d, v, k, j, i);
+                        fx.f[d][ix] = f[v];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Apply the stage combine: u_new = g0*u0 + g1*u + beta*dt*(-div F) on the
+/// interior. Ghosts of `out` are copied from `u`.
+pub fn apply_stage(
+    u: &[Real],
+    u0: &[Real],
+    fx: &FluxArrays,
+    shape: &IndexShape,
+    co: StageCoeffs,
+    dt: Real,
+    dx: [Real; 3],
+    out: &mut [Real],
+) {
+    out.copy_from_slice(u);
+    let n = shape.ncells_total();
+    let (nt0, nt1) = (shape.nt(0), shape.nt(1));
+    let inv = [1.0 / dx[0], 1.0 / dx[1], 1.0 / dx[2]];
+    for v in 0..NHYDRO {
+        for kk in 0..shape.n[2] {
+            for jj in 0..shape.n[1] {
+                for ii in 0..shape.n[0] {
+                    let mut div = 0.0;
+                    for d in 0..shape.dim {
+                        let (fi, fj, fk) = (ii, jj, kk);
+                        let lo = fx.f[d][fx.idx(d, v, fk, fj, fi)];
+                        let hi = match d {
+                            0 => fx.f[d][fx.idx(d, v, fk, fj, fi + 1)],
+                            1 => fx.f[d][fx.idx(d, v, fk, fj + 1, fi)],
+                            _ => fx.f[d][fx.idx(d, v, fk + 1, fj, fi)],
+                        };
+                        div += (hi - lo) * inv[d];
+                    }
+                    let c = ((kk + shape.is_(2)) * nt1 + (jj + shape.is_(1))) * nt0
+                        + ii + shape.is_(0);
+                    out[v * n + c] =
+                        co.g0 * u0[v * n + c] + co.g1 * u[v * n + c] - co.beta * dt * div;
+                }
+            }
+        }
+    }
+}
+
+/// One full RK stage (fluxes + combine) — the native analog of the `stage`
+/// artifact.
+#[allow(clippy::too_many_arguments)]
+pub fn stage(
+    u: &[Real],
+    u0: &[Real],
+    shape: &IndexShape,
+    co: StageCoeffs,
+    dt: Real,
+    dx: [Real; 3],
+    gamma: Real,
+    fx: &mut FluxArrays,
+    scratch: &mut Scratch,
+    out: &mut [Real],
+) {
+    compute_fluxes(u, shape, gamma, fx, scratch);
+    apply_stage(u, u0, fx, shape, co, dt, dx, out);
+}
+
+/// Per-block CFL limit min_d(dx_d / (|v_d| + c)) over interior cells.
+pub fn min_dt(u: &[Real], shape: &IndexShape, dx: [Real; 3], gamma: Real) -> Real {
+    let n = shape.ncells_total();
+    let (nt0, nt1) = (shape.nt(0), shape.nt(1));
+    let mut dt = Real::INFINITY;
+    for k in shape.is_(2)..shape.ie(2) {
+        for j in shape.is_(1)..shape.ie(1) {
+            for i in shape.is_(0)..shape.ie(0) {
+                let c = (k * nt1 + j) * nt0 + i;
+                let rho = u[IDN * n + c].max(DENSITY_FLOOR);
+                let vx = u[IM1 * n + c] / rho;
+                let vy = u[IM2 * n + c] / rho;
+                let vz = u[IM3 * n + c] / rho;
+                let ke = 0.5 * rho * (vx * vx + vy * vy + vz * vz);
+                let p = ((gamma - 1.0) * (u[IEN * n + c] - ke)).max(PRESSURE_FLOOR);
+                let cs = sound_speed(rho, p, gamma);
+                dt = dt.min(dx[0] / (vx.abs() + cs));
+                if shape.dim >= 2 {
+                    dt = dt.min(dx[1] / (vy.abs() + cs));
+                }
+                if shape.dim >= 3 {
+                    dt = dt.min(dx[2] / (vz.abs() + cs));
+                }
+            }
+        }
+    }
+    dt
+}
+
+/// Conserved state from primitive values (problem generators).
+pub fn cons_from_prim(w: [Real; 5], gamma: Real) -> [Real; 5] {
+    let ke = 0.5 * w[IDN] * (w[IVX] * w[IVX] + w[IVY] * w[IVY] + w[IVZ] * w[IVZ]);
+    [
+        w[IDN],
+        w[IDN] * w[IVX],
+        w[IDN] * w[IVY],
+        w[IDN] * w[IVZ],
+        w[IPR] / (gamma - 1.0) + ke,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift;
+
+    fn uniform_state(shape: &IndexShape, gamma: Real) -> Vec<Real> {
+        let n = shape.ncells_total();
+        let mut u = vec![0.0; NHYDRO * n];
+        for c in 0..n {
+            u[IDN * n + c] = 1.0;
+            u[IEN * n + c] = 1.0 / (gamma - 1.0);
+        }
+        u
+    }
+
+    fn random_state(shape: &IndexShape, gamma: Real, seed: u64) -> Vec<Real> {
+        let mut rng = XorShift::new(seed);
+        let n = shape.ncells_total();
+        let mut u = uniform_state(shape, gamma);
+        for c in 0..n {
+            u[IDN * n + c] += 0.2 * (rng.next_f32() - 0.5);
+            u[IM1 * n + c] += 0.2 * (rng.next_f32() - 0.5);
+            u[IM2 * n + c] += 0.2 * (rng.next_f32() - 0.5);
+            u[IEN * n + c] += 0.2 * rng.next_f32();
+        }
+        u
+    }
+
+    #[test]
+    fn uniform_state_is_stationary() {
+        let shape = IndexShape::new(2, [8, 8, 1]);
+        let gamma = 1.4;
+        let u = uniform_state(&shape, gamma);
+        let mut fx = FluxArrays::new(&shape);
+        let mut sc = Scratch::default();
+        let mut out = vec![0.0; u.len()];
+        stage(
+            &u,
+            &u,
+            &shape,
+            RK2_STAGES[0],
+            0.01,
+            [0.1, 0.1, 0.1],
+            gamma,
+            &mut fx,
+            &mut sc,
+            &mut out,
+        );
+        for (a, b) in u.iter().zip(out.iter()) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn beta_zero_is_identity_with_g_combination() {
+        let shape = IndexShape::new(3, [4, 4, 4]);
+        let gamma = 1.4;
+        let u = random_state(&shape, gamma, 3);
+        let mut fx = FluxArrays::new(&shape);
+        let mut sc = Scratch::default();
+        let mut out = vec![0.0; u.len()];
+        let co = StageCoeffs { g0: 0.0, g1: 1.0, beta: 0.0 };
+        stage(&u, &u, &shape, co, 0.1, [0.1; 3], gamma, &mut fx, &mut sc, &mut out);
+        assert_eq!(u, out);
+    }
+
+    #[test]
+    fn interior_conservation_with_periodic_ghosts() {
+        let shape = IndexShape::new(2, [8, 8, 1]);
+        let gamma = 1.4;
+        let mut u = random_state(&shape, gamma, 7);
+        // impose periodic ghosts
+        let n = shape.ncells_total();
+        let g = crate::NGHOST;
+        let (nt0, nt1) = (shape.nt(0), shape.nt(1));
+        let wrap = |x: usize, ni: usize| ((x as i64 - g as i64).rem_euclid(ni as i64)) as usize + g;
+        for v in 0..NHYDRO {
+            for j in 0..nt1 {
+                for i in 0..nt0 {
+                    let src = v * n + (wrap(j, 8) * nt0 + wrap(i, 8));
+                    let dst = v * n + (j * nt0 + i);
+                    let val = u[src];
+                    u[dst] = val;
+                }
+            }
+        }
+        let mut fx = FluxArrays::new(&shape);
+        let mut sc = Scratch::default();
+        let mut out = vec![0.0; u.len()];
+        stage(
+            &u,
+            &u,
+            &shape,
+            RK2_STAGES[0],
+            1e-3,
+            [0.05, 0.05, 0.05],
+            gamma,
+            &mut fx,
+            &mut sc,
+            &mut out,
+        );
+        for v in [IDN, IM1, IEN] {
+            let mut before = 0.0f64;
+            let mut after = 0.0f64;
+            for j in g..g + 8 {
+                for i in g..g + 8 {
+                    before += u[v * n + j * nt0 + i] as f64;
+                    after += out[v * n + j * nt0 + i] as f64;
+                }
+            }
+            assert!(
+                (before - after).abs() <= 2e-5 * before.abs().max(1.0),
+                "var {v}: {before} -> {after}"
+            );
+        }
+    }
+
+    #[test]
+    fn dt_positive_and_velocity_sensitive() {
+        let shape = IndexShape::new(3, [4, 4, 4]);
+        let gamma = 1.4;
+        let mut u = uniform_state(&shape, gamma);
+        let dt0 = min_dt(&u, &shape, [0.1; 3], gamma);
+        assert!(dt0 > 0.0 && dt0.is_finite());
+        let n = shape.ncells_total();
+        for c in 0..n {
+            u[IM1 * n + c] = 5.0;
+            u[IEN * n + c] += 0.5 * 25.0;
+        }
+        let dt1 = min_dt(&u, &shape, [0.1; 3], gamma);
+        assert!(dt1 < dt0);
+    }
+
+    #[test]
+    fn hlle_upwinds_supersonic() {
+        // supersonic flow to the right: flux must equal left analytic flux
+        let gamma = 1.4;
+        let wl = [1.0, 5.0, 0.0, 0.0, 1.0];
+        let wr = [0.5, 5.0, 0.0, 0.0, 0.8];
+        let f = hlle(&wl, &wr, 0, gamma);
+        // analytic left flux
+        let e = wl[IPR] / (gamma - 1.0) + 0.5 * wl[IDN] * wl[IVX] * wl[IVX];
+        assert!((f[IDN] - wl[IDN] * wl[IVX]).abs() < 1e-5);
+        assert!((f[IM1] - (wl[IDN] * wl[IVX] * wl[IVX] + wl[IPR])).abs() < 1e-4);
+        assert!((f[IEN] - (e + wl[IPR]) * wl[IVX]).abs() < 1e-4);
+    }
+
+    #[test]
+    fn mirror_symmetry_x() {
+        let shape = IndexShape::new(2, [8, 4, 1]);
+        let gamma = 1.4;
+        let u = random_state(&shape, gamma, 11);
+        let n = shape.ncells_total();
+        let (nt0, nt1) = (shape.nt(0), shape.nt(1));
+        // mirrored state
+        let mut um = u.clone();
+        for v in 0..NHYDRO {
+            for j in 0..nt1 {
+                for i in 0..nt0 {
+                    let s = v * n + j * nt0 + (nt0 - 1 - i);
+                    um[v * n + j * nt0 + i] = if v == IM1 { -u[s] } else { u[s] };
+                }
+            }
+        }
+        let mut fx = FluxArrays::new(&shape);
+        let mut sc = Scratch::default();
+        let mut out = vec![0.0; u.len()];
+        let mut outm = vec![0.0; u.len()];
+        let co = RK2_STAGES[0];
+        stage(&u, &u, &shape, co, 1e-3, [0.1; 3], gamma, &mut fx, &mut sc, &mut out);
+        stage(&um, &um, &shape, co, 1e-3, [0.1; 3], gamma, &mut fx, &mut sc, &mut outm);
+        for v in 0..NHYDRO {
+            for j in 0..nt1 {
+                for i in 0..nt0 {
+                    let a = out[v * n + j * nt0 + i];
+                    let s = v * n + j * nt0 + (nt0 - 1 - i);
+                    let b = if v == IM1 { -outm[s] } else { outm[s] };
+                    assert!(
+                        (a - b).abs() < 1e-5 * a.abs().max(1.0),
+                        "v{v} j{j} i{i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}

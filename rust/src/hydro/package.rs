@@ -1,0 +1,245 @@
+//! The hydro package: registers the conserved/primitive fields, params, and
+//! the package hooks (dt estimate, derived fill, AMR criterion).
+
+use super::native;
+use crate::config::ParameterInput;
+use crate::mesh::{AmrFlag, Coords, IndexShape};
+use crate::vars::{
+    MeshBlockData, Metadata, MetadataFlag, Package, ParamValue, StateDescriptor,
+};
+use crate::{Real, NHYDRO};
+
+/// Canonical variable names.
+pub const CONS: &str = "cons";
+pub const PRIM: &str = "prim";
+
+/// AMR tagging criterion for hydro.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RefineCriterion {
+    None,
+    /// Max relative density gradient.
+    DensityGradient,
+    /// Max relative pressure gradient.
+    PressureGradient,
+}
+
+pub struct HydroPackage {
+    desc: StateDescriptor,
+    pub gamma: Real,
+    pub cfl: Real,
+    pub criterion: RefineCriterion,
+    pub refine_tol: Real,
+    pub derefine_tol: Real,
+}
+
+impl HydroPackage {
+    /// The package Initialize function (paper Listing 5 analog).
+    pub fn initialize(pin: &mut ParameterInput) -> Self {
+        let gamma = pin.real_or("hydro", "gamma", 5.0 / 3.0) as Real;
+        let cfl = pin.real_or("hydro", "cfl", 0.3) as Real;
+        let crit = match pin.str_or("hydro", "refine_criterion", "none").as_str() {
+            "density_gradient" => RefineCriterion::DensityGradient,
+            "pressure_gradient" => RefineCriterion::PressureGradient,
+            _ => RefineCriterion::None,
+        };
+        let refine_tol = pin.real_or("hydro", "refine_tol", 0.3) as Real;
+        let derefine_tol = pin.real_or("hydro", "derefine_tol", 0.03) as Real;
+
+        let mut desc = StateDescriptor::new("hydro");
+        desc.add_field(
+            CONS,
+            Metadata::new(&[
+                MetadataFlag::Cell,
+                MetadataFlag::Independent,
+                MetadataFlag::FillGhost,
+                MetadataFlag::WithFluxes,
+                MetadataFlag::Provides,
+            ])
+            .with_shape(vec![NHYDRO]),
+        );
+        desc.add_field(
+            PRIM,
+            Metadata::new(&[
+                MetadataFlag::Cell,
+                MetadataFlag::Derived,
+                MetadataFlag::Provides,
+            ])
+            .with_shape(vec![NHYDRO]),
+        );
+        desc.params.add("gamma", ParamValue::Real(gamma as f64));
+        desc.params.add("cfl", ParamValue::Real(cfl as f64));
+
+        HydroPackage {
+            desc,
+            gamma,
+            cfl,
+            criterion: crit,
+            refine_tol,
+            derefine_tol,
+        }
+    }
+
+    /// Max relative central-difference gradient of one component over the
+    /// interior (the AMR indicator).
+    fn max_rel_gradient(data: &MeshBlockData, shape: &IndexShape, comp: usize) -> Real {
+        let Ok(arr) = data.get(CONS) else { return 0.0 };
+        let u = arr.as_slice();
+        let n = shape.ncells_total();
+        let (nt0, nt1) = (shape.nt(0), shape.nt(1));
+        let strides = [1usize, nt0, nt0 * nt1];
+        let mut gmax: Real = 0.0;
+        for k in shape.is_(2)..shape.ie(2) {
+            for j in shape.is_(1)..shape.ie(1) {
+                for i in shape.is_(0)..shape.ie(0) {
+                    let c = comp * n + (k * nt1 + j) * nt0 + i;
+                    let q = u[c].abs().max(1e-12);
+                    for (d, &s) in strides.iter().enumerate().take(shape.dim) {
+                        let _ = d;
+                        let g = 0.5 * (u[c + s] - u[c - s]).abs() / q;
+                        gmax = gmax.max(g);
+                    }
+                }
+            }
+        }
+        gmax
+    }
+}
+
+impl Package for HydroPackage {
+    fn descriptor(&self) -> &StateDescriptor {
+        &self.desc
+    }
+
+    fn check_refinement(&self, data: &MeshBlockData, _coords: &Coords) -> AmrFlag {
+        if self.criterion == RefineCriterion::None {
+            return AmrFlag::Same;
+        }
+        let Some(shape) = data.shape else { return AmrFlag::Same };
+        let comp = match self.criterion {
+            RefineCriterion::DensityGradient => native::IDN,
+            RefineCriterion::PressureGradient => native::IEN,
+            RefineCriterion::None => unreachable!(),
+        };
+        let g = Self::max_rel_gradient(data, &shape, comp);
+        if g > self.refine_tol {
+            AmrFlag::Refine
+        } else if g < self.derefine_tol {
+            AmrFlag::Derefine
+        } else {
+            AmrFlag::Same
+        }
+    }
+
+    fn estimate_dt(&self, data: &MeshBlockData, coords: &Coords) -> f64 {
+        let Some(shape) = data.shape else { return f64::INFINITY };
+        let Ok(arr) = data.get(CONS) else { return f64::INFINITY };
+        let dx = [coords.dx[0] as Real, coords.dx[1] as Real, coords.dx[2] as Real];
+        (self.cfl * native::min_dt(arr.as_slice(), &shape, dx, self.gamma)) as f64
+    }
+
+    fn fill_derived(&self, data: &mut MeshBlockData, _coords: &Coords) {
+        let Some(shape) = data.shape else { return };
+        if data.index_of(PRIM).is_none() {
+            return;
+        }
+        let Ok((cons, prim)) = data.get2_mut(CONS, PRIM) else { return };
+        native::primitives(cons.as_slice(), &shape, self.gamma, prim.as_mut_slice());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::LogicalLocation;
+    use crate::mesh::RegionSize;
+    use crate::vars::resolve_packages;
+
+    fn make_data() -> (MeshBlockData, Coords) {
+        let mut pin = ParameterInput::new();
+        let pkg = HydroPackage::initialize(&mut pin);
+        let fields = resolve_packages(&[pkg.descriptor()]).unwrap();
+        let shape = IndexShape::new(2, [8, 8, 1]);
+        let data = MeshBlockData::from_fields(&fields, shape);
+        let coords = Coords::from_location(
+            &LogicalLocation::new(0, 0, 0, 0),
+            [8, 8, 1],
+            [1, 1, 1],
+            &RegionSize::unit_cube(),
+            2,
+            crate::NGHOST,
+        );
+        (data, coords)
+    }
+
+    #[test]
+    fn registers_cons_and_prim() {
+        let (data, _) = make_data();
+        assert_eq!(data.get(CONS).unwrap().dims()[0], NHYDRO);
+        assert_eq!(data.get(PRIM).unwrap().dims()[0], NHYDRO);
+    }
+
+    #[test]
+    fn fill_derived_computes_primitives() {
+        let (mut data, coords) = make_data();
+        let mut pin = ParameterInput::new();
+        let pkg = HydroPackage::initialize(&mut pin);
+        {
+            let cons = data.get_mut(CONS).unwrap();
+            let n = cons.dims()[1] * cons.dims()[2] * cons.dims()[3];
+            for c in 0..n {
+                cons.as_mut_slice()[c] = 2.0; // rho
+                cons.as_mut_slice()[4 * n + c] = 5.0; // E
+            }
+        }
+        pkg.fill_derived(&mut data, &coords);
+        let prim = data.get(PRIM).unwrap();
+        assert!((prim.get(0, 0, 2, 2) - 2.0).abs() < 1e-6);
+        let p_expect = (pkg.gamma - 1.0) * 5.0;
+        assert!((prim.get(4, 0, 2, 2) - p_expect).abs() < 1e-5);
+    }
+
+    #[test]
+    fn dt_estimate_finite_positive() {
+        let (mut data, coords) = make_data();
+        let mut pin = ParameterInput::new();
+        let pkg = HydroPackage::initialize(&mut pin);
+        {
+            let cons = data.get_mut(CONS).unwrap();
+            let n = cons.dims()[1] * cons.dims()[2] * cons.dims()[3];
+            for c in 0..n {
+                cons.as_mut_slice()[c] = 1.0;
+                cons.as_mut_slice()[4 * n + c] = 2.5;
+            }
+        }
+        let dt = pkg.estimate_dt(&data, &coords);
+        assert!(dt > 0.0 && dt.is_finite());
+    }
+
+    #[test]
+    fn refinement_flags_on_sharp_gradient() {
+        let (mut data, coords) = make_data();
+        let mut pin = ParameterInput::new();
+        pin.set("hydro", "refine_criterion", "density_gradient");
+        let pkg = HydroPackage::initialize(&mut pin);
+        {
+            let cons = data.get_mut(CONS).unwrap();
+            let dims = cons.dims();
+            let n = dims[1] * dims[2] * dims[3];
+            for c in 0..n {
+                cons.as_mut_slice()[c] = 1.0;
+                cons.as_mut_slice()[4 * n + c] = 2.5;
+            }
+        }
+        assert_eq!(pkg.check_refinement(&data, &coords), AmrFlag::Derefine);
+        {
+            let cons = data.get_mut(CONS).unwrap();
+            // density step in the middle
+            for j in 0..cons.dims()[2] {
+                for i in 6..cons.dims()[3] {
+                    cons.set(0, 0, j, i, 5.0);
+                }
+            }
+        }
+        assert_eq!(pkg.check_refinement(&data, &coords), AmrFlag::Refine);
+    }
+}

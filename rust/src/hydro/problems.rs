@@ -1,0 +1,247 @@
+//! Problem generators for PARTHENON-HYDRO (paper Sec. 4.1): linear wave
+//! (convergence testing), spherical blast wave, Kelvin-Helmholtz
+//! instability, plus a uniform-flow generator for benchmarks.
+
+use super::native::{cons_from_prim, IDN, IEN, IM1, IM2, IM3};
+use super::package::CONS;
+use crate::config::ParameterInput;
+use crate::error::Result;
+use crate::mesh::MeshBlock;
+use crate::Real;
+
+/// Known problem generators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Problem {
+    LinearWave,
+    Blast,
+    KelvinHelmholtz,
+    Uniform,
+}
+
+impl Problem {
+    pub fn parse(s: &str) -> Option<Problem> {
+        match s {
+            "linear_wave" => Some(Problem::LinearWave),
+            "blast" => Some(Problem::Blast),
+            "kh" | "kelvin_helmholtz" => Some(Problem::KelvinHelmholtz),
+            "uniform" => Some(Problem::Uniform),
+            _ => None,
+        }
+    }
+}
+
+/// Fill a block's conserved state from a primitive-valued function of the
+/// physical cell-center position (ghosts included; they are overwritten by
+/// the initial exchange anyway, but a full fill keeps everything defined).
+pub fn init_block(
+    mb: &mut MeshBlock,
+    gamma: Real,
+    f: impl Fn([f64; 3]) -> [Real; 5],
+) -> Result<()> {
+    let shape = mb.shape;
+    let coords = mb.coords;
+    let arr = mb.data.get_mut(CONS)?;
+    let n = shape.ncells_total();
+    let (nt0, nt1, nt2) = (shape.nt(0), shape.nt(1), shape.nt(2));
+    for k in 0..nt2 {
+        for j in 0..nt1 {
+            for i in 0..nt0 {
+                let x = [coords.center(0, i), coords.center(1, j), coords.center(2, k)];
+                let u = cons_from_prim(f(x), gamma);
+                let c = (k * nt1 + j) * nt0 + i;
+                let s = arr.as_mut_slice();
+                s[IDN * n + c] = u[0];
+                s[IM1 * n + c] = u[1];
+                s[IM2 * n + c] = u[2];
+                s[IM3 * n + c] = u[3];
+                s[IEN * n + c] = u[4];
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Dispatch a problem generator using its `<problem>` input block.
+pub fn generate(problem: Problem, mb: &mut MeshBlock, pin: &mut ParameterInput, gamma: Real) -> Result<()> {
+    match problem {
+        Problem::LinearWave => linear_wave(mb, pin, gamma),
+        Problem::Blast => blast(mb, pin, gamma),
+        Problem::KelvinHelmholtz => kelvin_helmholtz(mb, pin, gamma),
+        Problem::Uniform => uniform(mb, pin, gamma),
+    }
+}
+
+/// Acoustic linear wave along x: exact solution translates at the sound
+/// speed, so the L1 error after one period measures convergence order.
+pub fn linear_wave(mb: &mut MeshBlock, pin: &mut ParameterInput, gamma: Real) -> Result<()> {
+    let amp = pin.real_or("problem", "amp", 1e-3) as Real;
+    let rho0 = pin.real_or("problem", "rho0", 1.0) as Real;
+    let p0 = pin.real_or("problem", "p0", 1.0 / (gamma as f64)) as Real;
+    let wavelength = pin.real_or("problem", "wavelength", 1.0);
+    let cs = (gamma * p0 / rho0).sqrt();
+    let k = (2.0 * std::f64::consts::PI / wavelength) as Real;
+    init_block(mb, gamma, |x| {
+        let s = (k * x[0] as Real).sin();
+        [
+            rho0 * (1.0 + amp * s),
+            cs * amp * s,
+            0.0,
+            0.0,
+            p0 * (1.0 + gamma * amp * s),
+        ]
+    })
+}
+
+/// Exact (linearized) solution of the linear wave at time t (for error
+/// measurement by examples/tests).
+pub fn linear_wave_exact(
+    x: f64,
+    t: f64,
+    gamma: Real,
+    amp: Real,
+    rho0: Real,
+    p0: Real,
+    wavelength: f64,
+) -> [Real; 5] {
+    let cs = (gamma * p0 / rho0).sqrt();
+    let k = 2.0 * std::f64::consts::PI / wavelength;
+    let s = ((k * (x - cs as f64 * t)) as Real).sin();
+    [
+        rho0 * (1.0 + amp * s),
+        cs * amp * s,
+        0.0,
+        0.0,
+        p0 * (1.0 + gamma * amp * s),
+    ]
+}
+
+/// Spherical blast wave: over-pressured region at the domain center.
+pub fn blast(mb: &mut MeshBlock, pin: &mut ParameterInput, gamma: Real) -> Result<()> {
+    let p_in = pin.real_or("problem", "p_in", 10.0) as Real;
+    let p_out = pin.real_or("problem", "p_out", 0.1) as Real;
+    let rho = pin.real_or("problem", "rho", 1.0) as Real;
+    let radius = pin.real_or("problem", "radius", 0.1);
+    let cx = pin.real_or("problem", "x0", 0.5);
+    let cy = pin.real_or("problem", "y0", 0.5);
+    let cz = pin.real_or("problem", "z0", 0.5);
+    let dim = mb.shape.dim;
+    init_block(mb, gamma, |x| {
+        let mut r2 = (x[0] - cx) * (x[0] - cx);
+        if dim >= 2 {
+            r2 += (x[1] - cy) * (x[1] - cy);
+        }
+        if dim >= 3 {
+            r2 += (x[2] - cz) * (x[2] - cz);
+        }
+        let p = if r2.sqrt() < radius { p_in } else { p_out };
+        [rho, 0.0, 0.0, 0.0, p]
+    })
+}
+
+/// Kelvin-Helmholtz instability (2D): shear layers with a density contrast
+/// and a sinusoidal transverse seed — the paper's AMR demo problem.
+pub fn kelvin_helmholtz(mb: &mut MeshBlock, pin: &mut ParameterInput, gamma: Real) -> Result<()> {
+    let vflow = pin.real_or("problem", "vflow", 0.5) as Real;
+    let drho = pin.real_or("problem", "drho", 1.0) as Real;
+    let amp = pin.real_or("problem", "amp", 0.01) as Real;
+    let p0 = pin.real_or("problem", "p0", 2.5) as Real;
+    let a = pin.real_or("problem", "shear_width", 0.02);
+    let sigma = pin.real_or("problem", "seed_width", 0.2);
+    init_block(mb, gamma, |x| {
+        // two shear layers at y = 0.25 and y = 0.75 (periodic unit square)
+        let y = x[1];
+        let prof = |y0: f64| ((y - y0) / a).tanh() as Real;
+        let shear = 0.5 * (prof(0.25) - prof(0.75)); // +1 in the band
+        let rho = 1.0 + 0.5 * drho * (1.0 + shear);
+        let vx = vflow * shear;
+        let seed = amp
+            * (2.0 * std::f64::consts::PI * x[0]).sin() as Real
+            * ((-((y - 0.25) / sigma).powi(2)).exp() + (-((y - 0.75) / sigma).powi(2)).exp())
+                as Real;
+        [rho, vx, seed, 0.0, p0]
+    })
+}
+
+/// Uniform flow — the benchmark workload (every cell costs the same, so
+/// zone-cycles/s is workload-independent, like the paper's setup).
+pub fn uniform(mb: &mut MeshBlock, pin: &mut ParameterInput, gamma: Real) -> Result<()> {
+    let rho = pin.real_or("problem", "rho", 1.0) as Real;
+    let vx = pin.real_or("problem", "vx", 0.1) as Real;
+    let vy = pin.real_or("problem", "vy", 0.05) as Real;
+    let p = pin.real_or("problem", "p", 1.0) as Real;
+    init_block(mb, gamma, |_| [rho, vx, vy, 0.0, p])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::{Mesh, MeshConfig};
+    use crate::vars::resolve_packages;
+    use crate::vars::Package;
+
+    fn mesh_2d() -> (Mesh, ParameterInput) {
+        let mut pin = ParameterInput::from_str(
+            "<parthenon/mesh>\nnx1 = 16\nnx2 = 16\n<parthenon/meshblock>\nnx1 = 8\nnx2 = 8\n",
+        )
+        .unwrap();
+        let cfg = MeshConfig::from_params(&mut pin).unwrap();
+        let pkg = crate::hydro::HydroPackage::initialize(&mut pin);
+        let fields = resolve_packages(&[pkg.descriptor()]).unwrap();
+        (Mesh::build(cfg, fields, 0, 1), pin)
+    }
+
+    #[test]
+    fn generators_produce_positive_density_pressure() {
+        let (mut mesh, mut pin) = mesh_2d();
+        let gamma = 1.4;
+        for prob in [
+            Problem::LinearWave,
+            Problem::Blast,
+            Problem::KelvinHelmholtz,
+            Problem::Uniform,
+        ] {
+            for mb in &mut mesh.blocks {
+                generate(prob, mb, &mut pin, gamma).unwrap();
+                let shape = mb.shape;
+                let arr = mb.data.get(CONS).unwrap();
+                let n = shape.ncells_total();
+                for c in 0..n {
+                    let rho = arr.as_slice()[c];
+                    let e = arr.as_slice()[4 * n + c];
+                    assert!(rho > 0.0, "{prob:?}: rho {rho}");
+                    assert!(e > 0.0, "{prob:?}: E {e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn linear_wave_exact_is_initial_at_t0() {
+        let gamma = 1.4f32;
+        let w = linear_wave_exact(0.3, 0.0, gamma, 1e-3, 1.0, 1.0 / 1.4, 1.0);
+        let s = (2.0 * std::f64::consts::PI * 0.3).sin() as f32;
+        assert!((w[0] - (1.0 + 1e-3 * s)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn blast_has_overpressure_only_inside() {
+        let (mut mesh, mut pin) = mesh_2d();
+        let gamma = 1.4;
+        let mb = &mut mesh.blocks[0];
+        blast(mb, &mut pin, gamma).unwrap();
+        // block 0 covers [0, 0.5)^2; center (0.5, 0.5) has the hot region
+        let shape = mb.shape;
+        let arr = mb.data.get(CONS).unwrap();
+        let n = shape.ncells_total();
+        // far corner cell (low x, low y) must be cold
+        let c = shape.idx3(0, shape.is_(1), shape.is_(0));
+        let e_cold = arr.as_slice()[4 * n + c];
+        assert!(e_cold < 1.0);
+    }
+
+    #[test]
+    fn problem_parse() {
+        assert_eq!(Problem::parse("kh"), Some(Problem::KelvinHelmholtz));
+        assert_eq!(Problem::parse("nope"), None);
+    }
+}

@@ -1,0 +1,305 @@
+//! IO (paper Sec. 3.9): pbin snapshot/restart files and history output.
+//!
+//! The paper uses parallel HDF5 with per-block chunking; this environment
+//! has no HDF5, so `pbin` keeps the same *structure*: a self-describing
+//! header (JSON) listing the mesh leaves and variables, followed by one
+//! chunk per (block, variable) of raw little-endian f32 interior data, in
+//! gid (Z-)order.  Restarts are bitwise exact (state is f32 on disk and in
+//! memory; time/dt are stored as f64 bit patterns) and may be read back on
+//! a different rank count — the load balancer redistributes on load, just
+//! like the paper's restart path.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::comm::Comm;
+use crate::error::{Error, Result};
+use crate::hydro::CONS;
+use crate::mesh::{LogicalLocation, Mesh};
+use crate::util::json::{obj, Json};
+use crate::Real;
+
+const MAGIC: &[u8] = b"PBIN1\n";
+
+/// Write a snapshot: every rank contributes its blocks (interior of each
+/// listed variable); rank 0 assembles in gid order and writes one file.
+pub fn write_snapshot(
+    mesh: &Mesh,
+    comm: &Comm,
+    time: f64,
+    cycle: u64,
+    dt: f64,
+    vars: &[String],
+    path: &str,
+) -> Result<()> {
+    let shape = mesh.cfg.index_shape();
+    // serialize local contribution: [gid u64][var data...] per block
+    let mut local = Vec::new();
+    for b in &mesh.blocks {
+        local.extend_from_slice(&(b.gid as u64).to_le_bytes());
+        for var in vars {
+            let arr = b.data.get(var)?;
+            let ncomp = arr.dims()[0];
+            let n = shape.ncells_total();
+            for v in 0..ncomp {
+                for k in shape.is_(2)..shape.ie(2) {
+                    for j in shape.is_(1)..shape.ie(1) {
+                        for i in shape.is_(0)..shape.ie(0) {
+                            let val = arr.as_slice()[v * n + shape.idx3(k, j, i)];
+                            local.extend_from_slice(&val.to_le_bytes());
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let gathered = comm.allgather(local);
+    if mesh.my_rank != 0 {
+        return Ok(());
+    }
+
+    // header
+    let leaves: Vec<Json> = mesh
+        .tree
+        .leaves()
+        .iter()
+        .map(|l| {
+            Json::Arr(vec![
+                (l.level as i64).into(),
+                l.lx[0].into(),
+                l.lx[1].into(),
+                l.lx[2].into(),
+            ])
+        })
+        .collect();
+    let var_descs: Vec<Json> = vars
+        .iter()
+        .map(|v| {
+            let ncomp = mesh
+                .blocks
+                .first()
+                .and_then(|b| b.data.get(v).ok())
+                .map(|a| a.dims()[0])
+                .unwrap_or(crate::NHYDRO);
+            obj(vec![("name", v.as_str().into()), ("ncomp", ncomp.into())])
+        })
+        .collect();
+    let header = obj(vec![
+        ("time", time.into()),
+        ("time_bits", format!("{:016x}", time.to_bits()).into()),
+        ("dt_bits", format!("{:016x}", dt.to_bits()).into()),
+        ("cycle", (cycle as i64).into()),
+        ("dim", mesh.cfg.dim.into()),
+        (
+            "block_nx",
+            Json::Arr(vec![
+                mesh.cfg.block_nx[0].into(),
+                mesh.cfg.block_nx[1].into(),
+                mesh.cfg.block_nx[2].into(),
+            ]),
+        ),
+        ("leaves", Json::Arr(leaves)),
+        ("vars", Json::Arr(var_descs)),
+        ("nblocks", mesh.tree.nblocks().into()),
+    ]);
+
+    // per-block payload size
+    let zone = shape.ncells_interior();
+    let var_elems: usize = vars
+        .iter()
+        .map(|v| {
+            mesh.blocks
+                .first()
+                .and_then(|b| b.data.get(v).ok())
+                .map(|a| a.dims()[0])
+                .unwrap_or(crate::NHYDRO)
+                * zone
+        })
+        .sum();
+    let rec = 8 + 4 * var_elems;
+
+    // assemble blocks in gid order
+    let mut by_gid: Vec<Option<&[u8]>> = vec![None; mesh.tree.nblocks()];
+    for blob in &gathered {
+        let mut off = 0usize;
+        while off + rec <= blob.len() {
+            let gid =
+                u64::from_le_bytes(blob[off..off + 8].try_into().unwrap()) as usize;
+            by_gid[gid] = Some(&blob[off + 8..off + rec]);
+            off += rec;
+        }
+    }
+
+    if let Some(dir) = Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    let h = header.dump();
+    f.write_all(&(h.len() as u64).to_le_bytes())?;
+    f.write_all(h.as_bytes())?;
+    for (gid, blob) in by_gid.iter().enumerate() {
+        let blob = blob.ok_or_else(|| {
+            Error::Io(std::io::Error::other(format!("missing block {gid}")))
+        })?;
+        f.write_all(&(gid as u64).to_le_bytes())?;
+        f.write_all(blob)?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// Parsed snapshot/restart file.
+pub struct Snapshot {
+    pub time: f64,
+    pub dt: f64,
+    pub cycle: u64,
+    pub dim: usize,
+    pub block_nx: [usize; 3],
+    pub leaves: Vec<LogicalLocation>,
+    pub vars: Vec<(String, usize)>,
+    data: Vec<u8>,
+    data_start: usize,
+    rec: usize,
+    zone: usize,
+}
+
+impl Snapshot {
+    pub fn read(path: &str) -> Result<Snapshot> {
+        let data = std::fs::read(path)?;
+        if !data.starts_with(MAGIC) {
+            return Err(Error::Io(std::io::Error::other("bad pbin magic")));
+        }
+        let hlen = u64::from_le_bytes(data[6..14].try_into().unwrap()) as usize;
+        let header = Json::parse(std::str::from_utf8(&data[14..14 + hlen]).map_err(
+            |e| Error::Io(std::io::Error::other(format!("bad header utf8: {e}"))),
+        )?)?;
+        let time = match header.get("time_bits").and_then(|v| v.as_str()) {
+            Some(hex) => f64::from_bits(u64::from_str_radix(hex, 16).unwrap_or(0)),
+            None => header.req("time")?.as_f64().unwrap_or(0.0),
+        };
+        let dt = match header.get("dt_bits").and_then(|v| v.as_str()) {
+            Some(hex) => f64::from_bits(u64::from_str_radix(hex, 16).unwrap_or(0)),
+            None => 0.0,
+        };
+        let cycle = header.req("cycle")?.as_i64().unwrap_or(0) as u64;
+        let dim = header.req("dim")?.as_usize().unwrap_or(1);
+        let bn = header.req("block_nx")?.as_arr().unwrap_or(&[]);
+        let block_nx = [
+            bn[0].as_usize().unwrap_or(1),
+            bn[1].as_usize().unwrap_or(1),
+            bn[2].as_usize().unwrap_or(1),
+        ];
+        let leaves: Vec<LogicalLocation> = header
+            .req("leaves")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|l| {
+                let a = l.as_arr().unwrap();
+                LogicalLocation::new(
+                    a[0].as_i64().unwrap_or(0) as u8,
+                    a[1].as_i64().unwrap_or(0),
+                    a[2].as_i64().unwrap_or(0),
+                    a[3].as_i64().unwrap_or(0),
+                )
+            })
+            .collect();
+        let vars: Vec<(String, usize)> = header
+            .req("vars")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|v| {
+                (
+                    v.req("name").unwrap().as_str().unwrap_or("").to_string(),
+                    v.req("ncomp").unwrap().as_usize().unwrap_or(1),
+                )
+            })
+            .collect();
+        let shape = crate::mesh::IndexShape::new(dim, block_nx);
+        let zone = shape.ncells_interior();
+        let var_elems: usize = vars.iter().map(|(_, nc)| nc * zone).sum();
+        let rec = 8 + 4 * var_elems;
+        Ok(Snapshot {
+            time,
+            dt,
+            cycle,
+            dim,
+            block_nx,
+            leaves,
+            vars,
+            data,
+            data_start: 14 + hlen,
+            rec,
+            zone,
+        })
+    }
+
+    /// Interior data of (gid, var) as f32s (components fused).
+    pub fn block_var(&self, gid: usize, var: &str) -> Result<Vec<Real>> {
+        let mut off = self.data_start + gid * self.rec;
+        let stored_gid =
+            u64::from_le_bytes(self.data[off..off + 8].try_into().unwrap()) as usize;
+        if stored_gid != gid {
+            return Err(Error::Io(std::io::Error::other(format!(
+                "gid mismatch: {stored_gid} != {gid}"
+            ))));
+        }
+        off += 8;
+        for (name, ncomp) in &self.vars {
+            let elems = ncomp * self.zone;
+            if name == var {
+                let mut out = Vec::with_capacity(elems);
+                for e in 0..elems {
+                    let b = &self.data[off + 4 * e..off + 4 * e + 4];
+                    out.push(Real::from_le_bytes(b.try_into().unwrap()));
+                }
+                return Ok(out);
+            }
+            off += 4 * elems;
+        }
+        Err(Error::Variable(format!("var {var:?} not in snapshot")))
+    }
+
+    /// Load a snapshot's CONS data into a freshly built mesh (restart).
+    /// Ghosts must be refilled by the caller via exchange.
+    pub fn restore_into(&self, mesh: &mut Mesh) -> Result<()> {
+        let shape = mesh.cfg.index_shape();
+        let n = shape.ncells_total();
+        for bi in 0..mesh.blocks.len() {
+            let gid = mesh.blocks[bi].gid;
+            let data = self.block_var(gid, CONS)?;
+            let arr = mesh.blocks[bi].data.get_mut(CONS)?;
+            let ncomp = arr.dims()[0];
+            let s = arr.as_mut_slice();
+            let mut r = 0usize;
+            for v in 0..ncomp {
+                for k in shape.is_(2)..shape.ie(2) {
+                    for j in shape.is_(1)..shape.ie(1) {
+                        for i in shape.is_(0)..shape.ie(0) {
+                            s[v * n + shape.idx3(k, j, i)] = data[r];
+                            r += 1;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Append one history line (rank 0 only).
+pub fn append_history(path: &str, time: f64, cycle: u64, sums: &[f64]) -> Result<()> {
+    if let Some(dir) = Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let exists = Path::new(path).exists();
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    if !exists {
+        writeln!(f, "# time cycle mass mom_x kinetic_e total_e")?;
+    }
+    let cols: Vec<String> = sums.iter().map(|s| format!("{s:.10e}")).collect();
+    writeln!(f, "{time:.10e} {cycle} {}", cols.join(" "))?;
+    Ok(())
+}

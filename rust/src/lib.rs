@@ -1,0 +1,53 @@
+//! # parthenon-rs
+//!
+//! A performance-portable block-structured adaptive mesh refinement (AMR)
+//! framework — a reproduction of *"Parthenon — a performance portable
+//! block-structured adaptive mesh refinement framework"* (Grete et al. 2022)
+//! as a three-layer Rust + JAX/Pallas (AOT via PJRT) stack.
+//!
+//! Layer map (see DESIGN.md):
+//! * **L3 (this crate)** — the framework: mesh/tree, variables/packages,
+//!   boundary communication with buffer/block packing, simulated MPI,
+//!   tasking, load balancing, drivers, IO, particles.
+//! * **L2/L1 (python/compile)** — the PARTHENON-HYDRO compute hot path
+//!   (RK2 + PLM + HLLE) as a JAX graph / Pallas kernel, AOT-lowered to HLO
+//!   text and executed from [`runtime`] through the PJRT CPU client.
+//!
+//! Python never runs on the request path: after `make artifacts` the Rust
+//! binary is self-contained.
+
+pub mod balance;
+pub mod bvals;
+pub mod comm;
+pub mod config;
+pub mod driver;
+pub mod error;
+pub mod hydro;
+pub mod io;
+pub mod mesh;
+pub mod metrics;
+pub mod particles;
+pub mod runtime;
+pub mod tasks;
+pub mod util;
+pub mod vars;
+
+/// Floating-point type of the compute hot path (matches artifact dtype).
+pub type Real = f32;
+
+/// Number of ghost cells in every active dimension (PLM stencil depth).
+pub const NGHOST: usize = 2;
+
+/// Number of conserved hydro variables (rho, mx, my, mz, E).
+pub const NHYDRO: usize = 5;
+
+pub use error::{Error, Result};
+
+/// Commonly used items, one `use` away.
+pub mod prelude {
+    pub use crate::config::ParameterInput;
+    pub use crate::error::{Error, Result};
+    pub use crate::mesh::{LogicalLocation, Mesh, MeshBlock};
+    pub use crate::vars::{Metadata, MetadataFlag, Params, StateDescriptor};
+    pub use crate::{Real, NGHOST, NHYDRO};
+}

@@ -1,0 +1,137 @@
+//! Coordinates. Uniform Cartesian only (like the paper, Sec. 7), but kept
+//! behind one class so other systems can slot in.
+
+use super::domain::RegionSize;
+use super::logical_location::LogicalLocation;
+
+/// Uniform Cartesian coordinates of one MeshBlock.
+#[derive(Debug, Clone, Copy)]
+pub struct Coords {
+    /// Physical lower corner of the block (cell face).
+    pub xmin: [f64; 3],
+    /// Cell width per dimension.
+    pub dx: [f64; 3],
+    /// Interior cells per dimension.
+    pub n: [usize; 3],
+    pub dim: usize,
+    ng: usize,
+}
+
+impl Coords {
+    /// Coordinates of block `loc` of interior size `n` on root grid `nrb`
+    /// spanning `domain`.
+    pub fn from_location(
+        loc: &LogicalLocation,
+        n: [usize; 3],
+        nrb: [i64; 3],
+        domain: &RegionSize,
+        dim: usize,
+        ng: usize,
+    ) -> Self {
+        let mut xmin = [0.0; 3];
+        let mut dx = [1.0; 3];
+        for d in 0..3 {
+            if d < dim {
+                let nblocks = (nrb[d] << loc.level) as f64;
+                let bw = domain.width(d) / nblocks;
+                xmin[d] = domain.xmin[d] + loc.lx[d] as f64 * bw;
+                dx[d] = bw / n[d] as f64;
+            } else {
+                xmin[d] = domain.xmin[d];
+                dx[d] = domain.width(d).max(1.0);
+            }
+        }
+        Coords { xmin, dx, n, dim, ng }
+    }
+
+    /// Cell-center coordinate along dimension d for (possibly ghost) index i
+    /// of the ghosted array.
+    #[inline]
+    pub fn center(&self, d: usize, i: usize) -> f64 {
+        let ioff = if d < self.dim { i as f64 - self.ng as f64 } else { 0.0 };
+        self.xmin[d] + (ioff + 0.5) * self.dx[d]
+    }
+
+    /// Face coordinate along dimension d (face i is the lower face of cell i).
+    #[inline]
+    pub fn face(&self, d: usize, i: usize) -> f64 {
+        let ioff = if d < self.dim { i as f64 - self.ng as f64 } else { 0.0 };
+        self.xmin[d] + ioff * self.dx[d]
+    }
+
+    /// Cell volume (area in 2D, length in 1D).
+    pub fn cell_volume(&self) -> f64 {
+        (0..self.dim).map(|d| self.dx[d]).product()
+    }
+
+    /// Physical upper corner of the block interior.
+    pub fn xmax(&self, d: usize) -> f64 {
+        if d < self.dim {
+            self.xmin[d] + self.dx[d] * self.n[d] as f64
+        } else {
+            self.xmin[d] + self.dx[d]
+        }
+    }
+
+    /// True if physical point x lies inside this block's interior.
+    pub fn contains(&self, x: [f64; 3]) -> bool {
+        (0..self.dim).all(|d| x[d] >= self.xmin[d] && x[d] < self.xmax(d))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::NGHOST;
+
+    #[test]
+    fn root_block_coords() {
+        let dom = RegionSize { xmin: [-0.5, 0.0, 0.0], xmax: [0.5, 1.0, 1.0] };
+        let loc = LogicalLocation::new(0, 0, 0, 0);
+        let c = Coords::from_location(&loc, [16, 16, 1], [2, 2, 1], &dom, 2, NGHOST);
+        assert!((c.xmin[0] - -0.5).abs() < 1e-14);
+        assert!((c.dx[0] - 0.5 / 16.0).abs() < 1e-14);
+        // first interior cell center
+        assert!((c.center(0, NGHOST) - (-0.5 + 0.5 * c.dx[0])).abs() < 1e-14);
+        // ghost cell center sits left of the block
+        assert!(c.center(0, 0) < -0.5);
+    }
+
+    #[test]
+    fn refined_block_is_half_size() {
+        let dom = RegionSize::unit_cube();
+        let coarse = Coords::from_location(
+            &LogicalLocation::new(0, 0, 0, 0),
+            [8, 8, 8],
+            [1, 1, 1],
+            &dom,
+            3,
+            NGHOST,
+        );
+        let fine = Coords::from_location(
+            &LogicalLocation::new(1, 1, 0, 0),
+            [8, 8, 8],
+            [1, 1, 1],
+            &dom,
+            3,
+            NGHOST,
+        );
+        assert!((fine.dx[0] - coarse.dx[0] / 2.0).abs() < 1e-14);
+        assert!((fine.xmin[0] - 0.5).abs() < 1e-14);
+    }
+
+    #[test]
+    fn containment() {
+        let dom = RegionSize::unit_cube();
+        let c = Coords::from_location(
+            &LogicalLocation::new(1, 0, 1, 0),
+            [4, 4, 1],
+            [2, 2, 1],
+            &dom,
+            2,
+            NGHOST,
+        );
+        assert!(c.contains([0.1, 0.3, 0.0]));
+        assert!(!c.contains([0.3, 0.3, 0.0]));
+    }
+}

@@ -1,0 +1,142 @@
+//! Index-space conventions (interior vs entire domains) and the physical
+//! region descriptor.
+
+use crate::NGHOST;
+
+/// Physical extent of the computational domain.
+#[derive(Debug, Clone, Copy)]
+pub struct RegionSize {
+    pub xmin: [f64; 3],
+    pub xmax: [f64; 3],
+}
+
+impl RegionSize {
+    pub fn unit_cube() -> Self {
+        RegionSize { xmin: [0.0; 3], xmax: [1.0; 3] }
+    }
+
+    pub fn width(&self, d: usize) -> f64 {
+        self.xmax[d] - self.xmin[d]
+    }
+}
+
+/// Per-block index shape: interior cell counts `n` (inactive dims are 1),
+/// ghost width, and dimensionality. Arrays carry ghosts in active dims only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IndexShape {
+    pub dim: usize,
+    /// Interior cells (nx1, nx2, nx3); trailing inactive dims are 1.
+    pub n: [usize; 3],
+    pub ng: usize,
+}
+
+impl IndexShape {
+    pub fn new(dim: usize, n: [usize; 3]) -> Self {
+        debug_assert!((1..=3).contains(&dim));
+        debug_assert!(n[0] >= 1);
+        debug_assert!(dim < 2 || n[1] >= 1);
+        debug_assert!(dim < 3 || n[2] >= 1);
+        let mut n = n;
+        if dim < 2 {
+            n[1] = 1;
+        }
+        if dim < 3 {
+            n[2] = 1;
+        }
+        IndexShape { dim, n, ng: NGHOST }
+    }
+
+    #[inline]
+    pub fn active(&self, d: usize) -> bool {
+        d < self.dim
+    }
+
+    /// Total cells along dimension d, ghosts included.
+    #[inline]
+    pub fn nt(&self, d: usize) -> usize {
+        if self.active(d) {
+            self.n[d] + 2 * self.ng
+        } else {
+            1
+        }
+    }
+
+    /// First interior index along d.
+    #[inline]
+    pub fn is_(&self, d: usize) -> usize {
+        if self.active(d) {
+            self.ng
+        } else {
+            0
+        }
+    }
+
+    /// One past the last interior index along d.
+    #[inline]
+    pub fn ie(&self, d: usize) -> usize {
+        self.is_(d) + self.n[d]
+    }
+
+    /// Total cell count including ghosts.
+    pub fn ncells_total(&self) -> usize {
+        self.nt(0) * self.nt(1) * self.nt(2)
+    }
+
+    /// Interior cell count.
+    pub fn ncells_interior(&self) -> usize {
+        self.n[0] * self.n[1] * self.n[2]
+    }
+
+    /// Flat index of (k, j, i) in a [Z, Y, X] row-major array.
+    #[inline]
+    pub fn idx3(&self, k: usize, j: usize, i: usize) -> usize {
+        (k * self.nt(1) + j) * self.nt(0) + i
+    }
+
+    /// Flat index of (v, k, j, i) in a [V, Z, Y, X] row-major array.
+    #[inline]
+    pub fn idx4(&self, v: usize, k: usize, j: usize, i: usize) -> usize {
+        ((v * self.nt(2) + k) * self.nt(1) + j) * self.nt(0) + i
+    }
+
+    /// Shape as (Z, Y, X) totals — matches the artifact layout.
+    pub fn total_zyx(&self) -> (usize, usize, usize) {
+        (self.nt(2), self.nt(1), self.nt(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_3d() {
+        let s = IndexShape::new(3, [16, 8, 4]);
+        assert_eq!(s.nt(0), 20);
+        assert_eq!(s.nt(1), 12);
+        assert_eq!(s.nt(2), 8);
+        assert_eq!(s.is_(0), 2);
+        assert_eq!(s.ie(0), 18);
+        assert_eq!(s.ncells_total(), 20 * 12 * 8);
+        assert_eq!(s.ncells_interior(), 16 * 8 * 4);
+    }
+
+    #[test]
+    fn shapes_2d_inactive_z() {
+        let s = IndexShape::new(2, [16, 16, 9]);
+        assert_eq!(s.n[2], 1, "inactive dim forced to 1");
+        assert_eq!(s.nt(2), 1);
+        assert_eq!(s.is_(2), 0);
+        assert_eq!(s.ie(2), 1);
+        assert_eq!(s.total_zyx(), (1, 20, 20));
+    }
+
+    #[test]
+    fn idx_row_major() {
+        let s = IndexShape::new(2, [4, 4, 1]);
+        assert_eq!(s.idx3(0, 0, 0), 0);
+        assert_eq!(s.idx3(0, 0, 1), 1);
+        assert_eq!(s.idx3(0, 1, 0), 8);
+        assert_eq!(s.idx4(1, 0, 0, 0), 64);
+    }
+}

@@ -1,0 +1,152 @@
+//! Logical block locations in the refinement hierarchy and Morton keys.
+
+/// Position of a MeshBlock in the tree: refinement `level` and per-dimension
+/// integer coordinates `lx` in units of blocks at that level.
+///
+/// At level `l` the valid range of `lx[d]` is `[0, nrb[d] << l)` where `nrb`
+/// is the root-grid block count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LogicalLocation {
+    pub level: u8,
+    pub lx: [i64; 3],
+}
+
+/// Maximum refinement level supported by the Morton normalization.
+pub const MAX_LEVEL: u8 = 24;
+
+impl LogicalLocation {
+    pub fn new(level: u8, lx1: i64, lx2: i64, lx3: i64) -> Self {
+        LogicalLocation { level, lx: [lx1, lx2, lx3] }
+    }
+
+    /// Parent location (one level coarser).
+    pub fn parent(&self) -> LogicalLocation {
+        debug_assert!(self.level > 0);
+        LogicalLocation {
+            level: self.level - 1,
+            lx: [self.lx[0] >> 1, self.lx[1] >> 1, self.lx[2] >> 1],
+        }
+    }
+
+    /// The `2^dim` children (one level finer), in Z-order.
+    pub fn children(&self, dim: usize) -> Vec<LogicalLocation> {
+        let b2: i64 = if dim >= 2 { 2 } else { 1 };
+        let b3: i64 = if dim >= 3 { 2 } else { 1 };
+        let mut out = Vec::with_capacity((2 * b2 * b3) as usize);
+        for k in 0..b3 {
+            for j in 0..b2 {
+                for i in 0..2i64 {
+                    out.push(LogicalLocation {
+                        level: self.level + 1,
+                        lx: [
+                            2 * self.lx[0] + i,
+                            2 * self.lx[1] + j,
+                            2 * self.lx[2] + k,
+                        ],
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Which child of its parent this block is, per dimension (0 or 1).
+    pub fn child_bits(&self) -> [i64; 3] {
+        [self.lx[0] & 1, self.lx[1] & 1, self.lx[2] & 1]
+    }
+
+    /// True if `self` (must be finer or equal level) lies inside `other`.
+    pub fn is_contained_in(&self, other: &LogicalLocation) -> bool {
+        if self.level < other.level {
+            return false;
+        }
+        let shift = self.level - other.level;
+        (0..3).all(|d| (self.lx[d] >> shift) == other.lx[d])
+    }
+
+    /// Morton (Z-order) key at the finest normalization level, used to order
+    /// leaves for distribution. Tie-broken by level so a parent sorts before
+    /// its first child (tree-traversal order).
+    pub fn morton(&self) -> (u128, u8) {
+        debug_assert!(self.level <= MAX_LEVEL);
+        let shift = (MAX_LEVEL - self.level) as u32;
+        let f = [
+            (self.lx[0] as u64) << shift,
+            (self.lx[1] as u64) << shift,
+            (self.lx[2] as u64) << shift,
+        ];
+        (interleave3(f[0], f[1], f[2]), self.level)
+    }
+}
+
+/// Interleave the low 42 bits of three u64s: bit i of x lands at 3i, of y at
+/// 3i+1, of z at 3i+2.
+fn interleave3(x: u64, y: u64, z: u64) -> u128 {
+    let mut out: u128 = 0;
+    for i in 0..42 {
+        out |= (((x >> i) & 1) as u128) << (3 * i);
+        out |= (((y >> i) & 1) as u128) << (3 * i + 1);
+        out |= (((z >> i) & 1) as u128) << (3 * i + 2);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parent_child_roundtrip() {
+        let loc = LogicalLocation::new(2, 5, 3, 1);
+        for c in loc.children(3) {
+            assert_eq!(c.parent(), loc);
+            assert!(c.is_contained_in(&loc));
+        }
+        assert_eq!(loc.children(3).len(), 8);
+        assert_eq!(loc.children(2).len(), 4);
+        assert_eq!(loc.children(1).len(), 2);
+    }
+
+    #[test]
+    fn morton_orders_children_in_z_order() {
+        let loc = LogicalLocation::new(0, 0, 0, 0);
+        let kids = loc.children(3);
+        let keys: Vec<_> = kids.iter().map(|c| c.morton()).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted, "children are generated in Z-order");
+    }
+
+    #[test]
+    fn morton_parent_sorts_before_children() {
+        let p = LogicalLocation::new(1, 1, 0, 0);
+        for c in p.children(3) {
+            assert!(p.morton() <= c.morton());
+        }
+        // and strictly before the first child via the level tiebreak
+        assert!(p.morton() < p.children(3)[0].morton() || {
+            let (k1, l1) = p.morton();
+            let (k2, l2) = p.children(3)[0].morton();
+            k1 == k2 && l1 < l2
+        });
+    }
+
+    #[test]
+    fn morton_locality() {
+        // adjacent blocks at same level differ less in key than distant ones
+        let a = LogicalLocation::new(3, 0, 0, 0).morton().0;
+        let b = LogicalLocation::new(3, 1, 0, 0).morton().0;
+        let c = LogicalLocation::new(3, 7, 7, 7).morton().0;
+        assert!(b - a < c - a);
+    }
+
+    #[test]
+    fn containment() {
+        let root = LogicalLocation::new(0, 0, 0, 0);
+        let deep = LogicalLocation::new(3, 7, 5, 2);
+        assert!(deep.is_contained_in(&root));
+        let other_root = LogicalLocation::new(0, 1, 0, 0);
+        assert!(!deep.is_contained_in(&other_root));
+        assert!(!root.is_contained_in(&deep));
+    }
+}

@@ -1,0 +1,368 @@
+//! The distributed Mesh: global tree + rank assignment + local MeshBlocks.
+//!
+//! Every rank holds the full (cheap) leaf list and the per-leaf rank
+//! assignment — exactly like Parthenon/ATHENA++ — while block *data* exists
+//! only on the owning rank.
+
+use std::collections::HashMap;
+
+use super::coords::Coords;
+use super::domain::{IndexShape, RegionSize};
+use super::logical_location::LogicalLocation;
+use super::meshblock::MeshBlock;
+use super::tree::BlockTree;
+use crate::balance;
+use crate::config::ParameterInput;
+use crate::error::{Error, Result};
+use crate::vars::{FieldDef, MeshBlockData};
+
+/// Per-face physical boundary condition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BoundaryCondition {
+    Periodic,
+    Outflow,
+    Reflect,
+}
+
+impl BoundaryCondition {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "periodic" => Ok(BoundaryCondition::Periodic),
+            "outflow" => Ok(BoundaryCondition::Outflow),
+            "reflecting" | "reflect" => Ok(BoundaryCondition::Reflect),
+            _ => Err(Error::config(format!("unknown boundary condition {s:?}"))),
+        }
+    }
+}
+
+/// Static mesh configuration parsed from `<parthenon/mesh>` +
+/// `<parthenon/meshblock>`.
+#[derive(Debug, Clone)]
+pub struct MeshConfig {
+    pub dim: usize,
+    /// Root grid cells per dimension.
+    pub nx: [usize; 3],
+    /// MeshBlock interior cells per dimension.
+    pub block_nx: [usize; 3],
+    /// Root grid in blocks.
+    pub nrb: [i64; 3],
+    pub domain: RegionSize,
+    /// [dim][side: 0 = inner, 1 = outer]
+    pub bcs: [[BoundaryCondition; 2]; 3],
+    /// Adaptive refinement enabled.
+    pub adaptive: bool,
+    pub max_level: u8,
+    /// Cycles between AMR checks (derefinement throttle, paper Sec. 3.8).
+    pub check_interval: usize,
+    /// Static refinement regions: (lo, hi in logical [0,1] units, level).
+    pub static_regions: Vec<([f64; 3], [f64; 3], u8)>,
+}
+
+impl MeshConfig {
+    pub fn from_params(pin: &mut ParameterInput) -> Result<Self> {
+        let mb = "parthenon/meshblock";
+        let m = "parthenon/mesh";
+        let nx = [
+            pin.int_or(m, "nx1", 64) as usize,
+            pin.int_or(m, "nx2", 1) as usize,
+            pin.int_or(m, "nx3", 1) as usize,
+        ];
+        let dim = if nx[2] > 1 { 3 } else if nx[1] > 1 { 2 } else { 1 };
+        let block_nx = [
+            pin.int_or(mb, "nx1", nx[0] as i64) as usize,
+            pin.int_or(mb, "nx2", nx[1] as i64) as usize,
+            pin.int_or(mb, "nx3", nx[2] as i64) as usize,
+        ];
+        let mut nrb = [1i64; 3];
+        for d in 0..dim {
+            if block_nx[d] == 0 || nx[d] % block_nx[d] != 0 {
+                return Err(Error::mesh(format!(
+                    "mesh nx{} = {} not divisible by block nx{} = {}",
+                    d + 1,
+                    nx[d],
+                    d + 1,
+                    block_nx[d]
+                )));
+            }
+            nrb[d] = (nx[d] / block_nx[d]) as i64;
+        }
+        let domain = RegionSize {
+            xmin: [
+                pin.real_or(m, "x1min", 0.0),
+                pin.real_or(m, "x2min", 0.0),
+                pin.real_or(m, "x3min", 0.0),
+            ],
+            xmax: [
+                pin.real_or(m, "x1max", 1.0),
+                pin.real_or(m, "x2max", 1.0),
+                pin.real_or(m, "x3max", 1.0),
+            ],
+        };
+        let mut bcs = [[BoundaryCondition::Periodic; 2]; 3];
+        for d in 0..3 {
+            let keys = [format!("ix{}_bc", d + 1), format!("ox{}_bc", d + 1)];
+            for (side, key) in keys.iter().enumerate() {
+                let v = pin.str_or(m, key, "periodic");
+                bcs[d][side] = BoundaryCondition::parse(&v)?;
+            }
+        }
+        let refinement = pin.str_or(m, "refinement", "none");
+        let adaptive = refinement == "adaptive";
+        let max_level = pin.int_or(m, "numlevel", 1).max(1) as u8 - 1;
+        let check_interval = pin.int_or(m, "check_refine_interval", 5) as usize;
+
+        let mut static_regions = Vec::new();
+        for idx in 0.. {
+            let blk = format!("parthenon/static_refinement{idx}");
+            if !pin.has(&blk, "level") {
+                break;
+            }
+            let level = pin.int_or(&blk, "level", 1) as u8;
+            let lo = [
+                pin.real_or(&blk, "x1min", 0.0),
+                pin.real_or(&blk, "x2min", 0.0),
+                pin.real_or(&blk, "x3min", 0.0),
+            ];
+            let hi = [
+                pin.real_or(&blk, "x1max", 1.0),
+                pin.real_or(&blk, "x2max", 1.0),
+                pin.real_or(&blk, "x3max", 1.0),
+            ];
+            // convert physical to logical [0,1] units
+            let mut llo = [0.0; 3];
+            let mut lhi = [1.0; 3];
+            for d in 0..dim {
+                llo[d] = (lo[d] - domain.xmin[d]) / domain.width(d);
+                lhi[d] = (hi[d] - domain.xmin[d]) / domain.width(d);
+            }
+            static_regions.push((llo, lhi, level));
+        }
+
+        Ok(MeshConfig {
+            dim,
+            nx,
+            block_nx,
+            nrb,
+            domain,
+            bcs,
+            adaptive,
+            max_level,
+            check_interval,
+            static_regions,
+        })
+    }
+
+    pub fn periodic_flags(&self) -> [bool; 3] {
+        let mut p = [false; 3];
+        for d in 0..self.dim {
+            p[d] = self.bcs[d][0] == BoundaryCondition::Periodic
+                && self.bcs[d][1] == BoundaryCondition::Periodic;
+        }
+        p
+    }
+
+    pub fn index_shape(&self) -> IndexShape {
+        IndexShape::new(self.dim, self.block_nx)
+    }
+
+    /// Build the initial tree (uniform + static refinement regions).
+    pub fn initial_tree(&self) -> BlockTree {
+        let mut tree = BlockTree::uniform(self.nrb, self.dim, self.periodic_flags());
+        for (lo, hi, level) in &self.static_regions {
+            tree = tree.refine_region(*lo, *hi, *level);
+        }
+        tree
+    }
+}
+
+/// The mesh as seen by one rank.
+#[derive(Debug)]
+pub struct Mesh {
+    pub cfg: MeshConfig,
+    pub tree: BlockTree,
+    /// Rank owning each leaf (index = gid).
+    pub ranks: Vec<usize>,
+    /// Resolved field list shared by all blocks.
+    pub fields: Vec<FieldDef>,
+    /// Blocks owned by this rank.
+    pub blocks: Vec<MeshBlock>,
+    pub my_rank: usize,
+    pub nranks: usize,
+}
+
+impl Mesh {
+    /// Construct the mesh for `my_rank`, building the local blocks.
+    pub fn build(
+        cfg: MeshConfig,
+        fields: Vec<FieldDef>,
+        my_rank: usize,
+        nranks: usize,
+    ) -> Mesh {
+        let tree = cfg.initial_tree();
+        let costs = vec![1.0; tree.nblocks()];
+        let ranks = balance::assign_blocks(&costs, nranks);
+        let mut mesh = Mesh {
+            cfg,
+            tree,
+            ranks,
+            fields,
+            blocks: Vec::new(),
+            my_rank,
+            nranks,
+        };
+        mesh.rebuild_local_blocks();
+        mesh
+    }
+
+    /// (Re)create the local MeshBlocks from tree + rank assignment. Fresh
+    /// containers — callers migrate/restore data as needed.
+    pub fn rebuild_local_blocks(&mut self) {
+        self.blocks.clear();
+        let shape = self.cfg.index_shape();
+        for (gid, loc) in self.tree.leaves().iter().enumerate() {
+            if self.ranks[gid] != self.my_rank {
+                continue;
+            }
+            self.blocks.push(self.make_block(gid, *loc, shape));
+        }
+    }
+
+    pub fn make_block(&self, gid: usize, loc: LogicalLocation, shape: IndexShape) -> MeshBlock {
+        let coords = Coords::from_location(
+            &loc,
+            self.cfg.block_nx,
+            self.cfg.nrb,
+            &self.cfg.domain,
+            self.cfg.dim,
+            crate::NGHOST,
+        );
+        MeshBlock {
+            gid,
+            loc,
+            coords,
+            shape,
+            data: MeshBlockData::from_fields(&self.fields, shape),
+            swarms: HashMap::new(),
+            cost: 1.0,
+        }
+    }
+
+    pub fn rank_of(&self, gid: usize) -> usize {
+        self.ranks[gid]
+    }
+
+    pub fn num_local_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn local_block(&self, gid: usize) -> Option<&MeshBlock> {
+        self.blocks.iter().find(|b| b.gid == gid)
+    }
+
+    pub fn local_block_mut(&mut self, gid: usize) -> Option<&mut MeshBlock> {
+        self.blocks.iter_mut().find(|b| b.gid == gid)
+    }
+
+    /// Interior zones across local blocks.
+    pub fn local_zones(&self) -> usize {
+        self.blocks.iter().map(|b| b.num_zones()).sum()
+    }
+
+    /// Map from location to (gid, rank) — used when diffing trees on regrid.
+    pub fn location_map(&self) -> HashMap<LogicalLocation, (usize, usize)> {
+        self.tree
+            .leaves()
+            .iter()
+            .enumerate()
+            .map(|(gid, loc)| (*loc, (gid, self.ranks[gid])))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pin_2d() -> ParameterInput {
+        ParameterInput::from_str(
+            r#"
+<parthenon/mesh>
+nx1 = 32
+nx2 = 32
+x1min = -0.5
+x1max = 0.5
+<parthenon/meshblock>
+nx1 = 16
+nx2 = 16
+"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn config_parses() {
+        let mut pin = pin_2d();
+        let cfg = MeshConfig::from_params(&mut pin).unwrap();
+        assert_eq!(cfg.dim, 2);
+        assert_eq!(cfg.nrb, [2, 2, 1]);
+        assert!((cfg.domain.width(0) - 1.0).abs() < 1e-14);
+        assert_eq!(cfg.periodic_flags(), [true, true, false]);
+    }
+
+    #[test]
+    fn indivisible_block_size_rejected() {
+        let mut pin = pin_2d();
+        pin.apply_override("parthenon/meshblock/nx1=10").unwrap();
+        assert!(MeshConfig::from_params(&mut pin).is_err());
+    }
+
+    #[test]
+    fn build_distributes_blocks() {
+        let mut pin = pin_2d();
+        let cfg = MeshConfig::from_params(&mut pin).unwrap();
+        let m0 = Mesh::build(cfg.clone(), vec![], 0, 2);
+        let m1 = Mesh::build(cfg, vec![], 1, 2);
+        assert_eq!(m0.tree.nblocks(), 4);
+        assert_eq!(m0.num_local_blocks() + m1.num_local_blocks(), 4);
+        assert_eq!(m0.num_local_blocks(), 2);
+        // gids are disjoint and ranks agree between the two views
+        for b in &m0.blocks {
+            assert_eq!(m1.rank_of(b.gid), 0);
+        }
+    }
+
+    #[test]
+    fn static_refinement_from_input() {
+        let mut pin = pin_2d();
+        pin.set("parthenon/mesh", "refinement", "static");
+        pin.set("parthenon/static_refinement0", "level", 1);
+        pin.set("parthenon/static_refinement0", "x1min", -0.25);
+        pin.set("parthenon/static_refinement0", "x1max", 0.0);
+        pin.set("parthenon/static_refinement0", "x2min", 0.25);
+        pin.set("parthenon/static_refinement0", "x2max", 0.5);
+        let cfg = MeshConfig::from_params(&mut pin).unwrap();
+        let tree = cfg.initial_tree();
+        assert!(tree.max_level() == 1);
+        assert!(tree.is_properly_nested());
+        assert!(tree.nblocks() > 4);
+    }
+
+    #[test]
+    fn boundary_condition_parsing() {
+        let mut pin = pin_2d();
+        pin.set("parthenon/mesh", "ix1_bc", "outflow");
+        pin.set("parthenon/mesh", "ox1_bc", "reflecting");
+        let cfg = MeshConfig::from_params(&mut pin).unwrap();
+        assert_eq!(cfg.bcs[0][0], BoundaryCondition::Outflow);
+        assert_eq!(cfg.bcs[0][1], BoundaryCondition::Reflect);
+        assert_eq!(cfg.periodic_flags()[0], false);
+        let tree = cfg.initial_tree();
+        assert_eq!(
+            tree.resolve_neighbor(
+                &LogicalLocation::new(0, 0, 0, 0),
+                [-1, 0, 0]
+            ),
+            crate::mesh::NeighborKind::Physical
+        );
+    }
+}

@@ -1,0 +1,31 @@
+//! One MeshBlock: location, coordinates, and its data container.
+
+use std::collections::HashMap;
+
+use super::coords::Coords;
+use super::domain::IndexShape;
+use super::logical_location::LogicalLocation;
+use crate::particles::Swarm;
+use crate::vars::MeshBlockData;
+
+/// A MeshBlock — the unit of work, communication and distribution.
+#[derive(Debug, Clone)]
+pub struct MeshBlock {
+    /// Global id = index of the leaf in Z-order (renumbered on regrid).
+    pub gid: usize,
+    pub loc: LogicalLocation,
+    pub coords: Coords,
+    pub shape: IndexShape,
+    pub data: MeshBlockData,
+    /// Particle swarms living on this block.
+    pub swarms: HashMap<String, Swarm>,
+    /// Load-balancing weight (1.0 = nominal).
+    pub cost: f64,
+}
+
+impl MeshBlock {
+    /// Interior zone count (the paper's "zones" for zone-cycles/s).
+    pub fn num_zones(&self) -> usize {
+        self.shape.ncells_interior()
+    }
+}

@@ -1,0 +1,22 @@
+//! The mesh: logical block locations, the (bin/quad/oct-)tree of MeshBlocks,
+//! index-space conventions, coordinates, and the distributed `Mesh` object.
+//!
+//! Follows the block-structured AMR of ATHENA++/Parthenon (paper Sec. 2.1):
+//! fixed-size MeshBlocks tile the domain, arranged in a tree; any location is
+//! covered by exactly one leaf; neighbors are found by logical-coordinate
+//! arithmetic; leaves are ordered by Morton (Z-order) keys for distribution;
+//! the tree is rebuilt on every (de)refinement.
+
+mod coords;
+mod domain;
+mod logical_location;
+mod mesh_impl;
+mod meshblock;
+pub mod tree;
+
+pub use coords::Coords;
+pub use domain::{IndexShape, RegionSize};
+pub use logical_location::LogicalLocation;
+pub use mesh_impl::{BoundaryCondition, Mesh, MeshConfig};
+pub use meshblock::MeshBlock;
+pub use tree::{neighbor_offsets, AmrFlag, BlockTree, NeighborInfo, NeighborKind};

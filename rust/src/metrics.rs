@@ -1,0 +1,89 @@
+//! Performance accounting: zone-cycles/s (the paper's headline metric),
+//! per-region timers, and launch counts.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Wall-clock accumulator per named region.
+#[derive(Debug, Default)]
+pub struct Timers {
+    acc: BTreeMap<String, Duration>,
+    open: BTreeMap<String, Instant>,
+}
+
+impl Timers {
+    pub fn start(&mut self, name: &str) {
+        self.open.insert(name.to_string(), Instant::now());
+    }
+
+    pub fn stop(&mut self, name: &str) {
+        if let Some(t0) = self.open.remove(name) {
+            *self.acc.entry(name.to_string()).or_default() += t0.elapsed();
+        }
+    }
+
+    pub fn seconds(&self, name: &str) -> f64 {
+        self.acc.get(name).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+    }
+
+    pub fn report(&self) -> Vec<(String, f64)> {
+        self.acc.iter().map(|(k, v)| (k.clone(), v.as_secs_f64())).collect()
+    }
+}
+
+/// Throughput accounting over a measured window.
+#[derive(Debug, Clone, Default)]
+pub struct ZoneCycles {
+    pub zones_updated: u64,
+    pub cycles: u64,
+    pub wall_secs: f64,
+}
+
+impl ZoneCycles {
+    pub fn record_cycle(&mut self, zones: u64, secs: f64) {
+        self.zones_updated += zones;
+        self.cycles += 1;
+        self.wall_secs += secs;
+    }
+
+    /// zone-cycles per second (the paper's unit).
+    pub fn zcps(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.zones_updated as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    pub fn reset(&mut self) {
+        *self = ZoneCycles::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_accumulates() {
+        let mut t = Timers::default();
+        t.start("a");
+        std::thread::sleep(Duration::from_millis(5));
+        t.stop("a");
+        t.start("a");
+        t.stop("a");
+        assert!(t.seconds("a") >= 0.005);
+        assert_eq!(t.seconds("missing"), 0.0);
+    }
+
+    #[test]
+    fn zcps_math() {
+        let mut z = ZoneCycles::default();
+        z.record_cycle(1000, 0.5);
+        z.record_cycle(1000, 0.5);
+        assert_eq!(z.zcps(), 2000.0);
+        assert_eq!(z.cycles, 2);
+        z.reset();
+        assert_eq!(z.zcps(), 0.0);
+    }
+}

@@ -1,0 +1,159 @@
+//! Particle communication (paper Sec. 3.5): after a position update,
+//! particles that left their MeshBlock are sent to the owning neighbor
+//! (periodic boundaries wrap coordinates, outflow boundaries absorb).
+//!
+//! One transport *round* moves particles by at most one block; algorithms
+//! whose particles cross several blocks per step call [`transport_round`]
+//! repeatedly until the globally-reduced moved-count reaches zero — the
+//! paper's "blocking TaskRegion repeatedly called until a global stop
+//! criterion is met".
+//!
+//! Like Parthenon ("only communication to neighboring meshblocks is
+//! supported"), transport is supported on uniform meshes; every (block,
+//! neighbor-slot) edge carries exactly one message per round, so the
+//! receive set is deterministic and deadlock-free even under periodic
+//! self-adjacency.
+
+use crate::comm::{tags, Comm, Payload, ReduceOp};
+use crate::error::{Error, Result};
+use crate::mesh::{Mesh, NeighborKind};
+
+/// One transport round for `swarm` on every local block. Returns the number
+/// of particles this rank sent (reduce across ranks to detect completion).
+pub fn transport_round(mesh: &mut Mesh, comm: &Comm, swarm: &str) -> Result<usize> {
+    if mesh.tree.max_level() != 0 {
+        return Err(Error::Comm(
+            "particle transport requires a uniform mesh".into(),
+        ));
+    }
+    let dim = mesh.cfg.dim;
+    let domain = mesh.cfg.domain;
+    let _bcs = mesh.cfg.bcs;
+    let periodic = mesh.cfg.periodic_flags();
+    let opp = crate::bvals::bufspec::opposite_index(dim);
+
+    let mut moved = 0usize;
+
+    // -- classify & send: one message per (block, slot) edge -------------------
+    for bi in 0..mesh.blocks.len() {
+        let loc = mesh.blocks[bi].loc;
+        let coords = mesh.blocks[bi].coords;
+        let neighbors = mesh.tree.find_neighbors(&loc);
+        let nslots = neighbors.len();
+        let mut outbound: Vec<Vec<usize>> = vec![Vec::new(); nslots];
+
+        if let Some(sw) = mesh.blocks[bi].swarms.get_mut(swarm) {
+            for idx in sw.active_indices() {
+                let mut off = [0i32; 3];
+                let mut gone = false;
+                let pos = [
+                    sw.real_field("x")?[idx] as f64,
+                    sw.real_field("y")?[idx] as f64,
+                    sw.real_field("z")?[idx] as f64,
+                ];
+                for d in 0..dim {
+                    if pos[d] < coords.xmin[d] {
+                        off[d] = -1;
+                    } else if pos[d] >= coords.xmax(d) {
+                        off[d] = 1;
+                    }
+                    if off[d] != 0 {
+                        let below = pos[d] < domain.xmin[d];
+                        let above = pos[d] >= domain.xmax[d];
+                        if below || above {
+                            if periodic[d] {
+                                let w = domain.width(d) as f32;
+                                let name = ["x", "y", "z"][d];
+                                let f = sw.real_field_mut(name)?;
+                                if below {
+                                    f[idx] += w;
+                                } else {
+                                    f[idx] -= w;
+                                }
+                            } else {
+                                // outflow/reflect domain edges absorb
+
+                                gone = true;
+                            }
+                        }
+                    }
+                }
+                if gone {
+                    sw.remove(idx);
+                    continue;
+                }
+                if off != [0, 0, 0] {
+                    let slot = neighbors
+                        .iter()
+                        .position(|n| n.offset == off)
+                        .expect("offset must be a neighbor slot");
+                    outbound[slot].push(idx);
+                }
+            }
+        } else {
+            continue;
+        }
+
+        for (slot, idxs) in outbound.iter().enumerate() {
+            let nloc = match &neighbors[slot].kind {
+                NeighborKind::SameLevel(l) => l,
+                NeighborKind::Physical => {
+                    debug_assert!(idxs.is_empty(), "physical-slot particles must be absorbed");
+                    continue;
+                }
+                _ => unreachable!("uniform mesh"),
+            };
+            let sw = mesh.blocks[bi].swarms.get_mut(swarm).unwrap();
+            let bytes = sw.extract(idxs);
+            moved += idxs.len();
+            let ngid = mesh.tree.gid_of(nloc).unwrap();
+            // the receiver's slot is the opposite offset of ours
+            comm.isend(
+                mesh.ranks[ngid],
+                tags::particle_tag(ngid, opp[slot]),
+                Payload::Bytes(bytes),
+            );
+        }
+    }
+
+    // -- receive: exactly one message per (block, slot) edge -------------------
+    for bi in 0..mesh.blocks.len() {
+        let loc = mesh.blocks[bi].loc;
+        let gid = mesh.blocks[bi].gid;
+        let neighbors = mesh.tree.find_neighbors(&loc);
+        for (slot, nb) in neighbors.iter().enumerate() {
+            let NeighborKind::SameLevel(nloc) = &nb.kind else { continue };
+            let sgid = mesh.tree.gid_of(nloc).unwrap();
+            let payload = comm
+                .recv(mesh.ranks[sgid], tags::particle_tag(gid, slot))
+                .into_bytes()?;
+            if payload.is_empty() {
+                continue;
+            }
+            if let Some(sw) = mesh.blocks[bi].swarms.get_mut(swarm) {
+                sw.insert_bytes(&payload)?;
+            }
+        }
+    }
+
+    Ok(moved)
+}
+
+/// Transport until globally quiescent (max `max_rounds` to bound runaways).
+pub fn transport_until_done(
+    mesh: &mut Mesh,
+    comm: &Comm,
+    swarm: &str,
+    max_rounds: usize,
+) -> Result<usize> {
+    let mut total = 0usize;
+    for _ in 0..max_rounds {
+        let moved = transport_round(mesh, comm, swarm)?;
+        total += moved;
+        let global = comm.allreduce(moved as f64, ReduceOp::Sum);
+        if global == 0.0 {
+            return Ok(total);
+        }
+    }
+    Ok(total)
+}

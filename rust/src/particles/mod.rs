@@ -1,0 +1,9 @@
+//! Particles: Swarms (paper Sec. 3.5) — struct-of-arrays particle storage
+//! per MeshBlock with dynamic pools, defragmentation, and neighbor-block
+//! communication.
+
+pub mod comm;
+mod swarm;
+
+pub use comm::{transport_round, transport_until_done};
+pub use swarm::{ParticleData, Swarm, SwarmField};

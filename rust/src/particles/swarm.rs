@@ -1,0 +1,359 @@
+//! The Swarm: SoA particle storage with a x2-growing memory pool, a free
+//! list, masked validity, Defrag, and byte (de)serialization for migration.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::Real;
+
+/// One particle field: real- or integer-valued, one entry per pool slot.
+#[derive(Debug, Clone)]
+pub enum ParticleData {
+    Real(Vec<Real>),
+    Int(Vec<i64>),
+}
+
+impl ParticleData {
+    fn resize(&mut self, n: usize) {
+        match self {
+            ParticleData::Real(v) => v.resize(n, 0.0),
+            ParticleData::Int(v) => v.resize(n, 0),
+        }
+    }
+
+    fn copy_within(&mut self, from: usize, to: usize) {
+        match self {
+            ParticleData::Real(v) => v[to] = v[from],
+            ParticleData::Int(v) => v[to] = v[from],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            ParticleData::Real(v) => v.len(),
+            ParticleData::Int(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Field registration: name + kind.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SwarmField {
+    Real(String),
+    Int(String),
+}
+
+/// A swarm of particles on one MeshBlock.
+///
+/// Always carries the real-valued fields `x`, `y`, `z`; packages enroll
+/// additional fields at creation. Slots are reused through a free list; the
+/// pool grows by factors of two; `defrag` compacts storage on demand.
+#[derive(Debug, Clone)]
+pub struct Swarm {
+    pub name: String,
+    fields: BTreeMap<String, ParticleData>,
+    mask: Vec<bool>,
+    free: Vec<usize>,
+    nactive: usize,
+}
+
+pub const INITIAL_POOL: usize = 16;
+
+impl Swarm {
+    pub fn new(name: &str, extra_fields: &[SwarmField]) -> Self {
+        let mut fields = BTreeMap::new();
+        for coord in ["x", "y", "z"] {
+            fields.insert(coord.to_string(), ParticleData::Real(vec![0.0; INITIAL_POOL]));
+        }
+        for f in extra_fields {
+            match f {
+                SwarmField::Real(n) => {
+                    fields.insert(n.clone(), ParticleData::Real(vec![0.0; INITIAL_POOL]));
+                }
+                SwarmField::Int(n) => {
+                    fields.insert(n.clone(), ParticleData::Int(vec![0; INITIAL_POOL]));
+                }
+            }
+        }
+        Swarm {
+            name: name.to_string(),
+            fields,
+            mask: vec![false; INITIAL_POOL],
+            free: (0..INITIAL_POOL).rev().collect(),
+            nactive: 0,
+        }
+    }
+
+    pub fn pool_size(&self) -> usize {
+        self.mask.len()
+    }
+
+    pub fn num_active(&self) -> usize {
+        self.nactive
+    }
+
+    pub fn field_names(&self) -> impl Iterator<Item = &str> {
+        self.fields.keys().map(|s| s.as_str())
+    }
+
+    /// Request `n` new particles; returns their slot indices. Free slots are
+    /// consumed first, then the pool doubles until it fits (paper Sec. 3.5).
+    pub fn add_particles(&mut self, n: usize) -> Vec<usize> {
+        while self.free.len() < n {
+            let old = self.pool_size();
+            let new = (old * 2).max(INITIAL_POOL);
+            for f in self.fields.values_mut() {
+                f.resize(new);
+            }
+            self.mask.resize(new, false);
+            for idx in (old..new).rev() {
+                self.free.push(idx);
+            }
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let idx = self.free.pop().unwrap();
+            self.mask[idx] = true;
+            out.push(idx);
+        }
+        self.nactive += n;
+        out
+    }
+
+    /// Remove one particle (slot becomes reusable).
+    pub fn remove(&mut self, idx: usize) {
+        if self.mask[idx] {
+            self.mask[idx] = false;
+            self.free.push(idx);
+            self.nactive -= 1;
+        }
+    }
+
+    pub fn is_active(&self, idx: usize) -> bool {
+        self.mask[idx]
+    }
+
+    /// Iterate active slot indices.
+    pub fn active_indices(&self) -> Vec<usize> {
+        (0..self.pool_size()).filter(|&i| self.mask[i]).collect()
+    }
+
+    pub fn real_field(&self, name: &str) -> Result<&[Real]> {
+        match self.fields.get(name) {
+            Some(ParticleData::Real(v)) => Ok(v),
+            Some(_) => Err(Error::Variable(format!("swarm field {name:?} is not real"))),
+            None => Err(Error::Variable(format!("no swarm field {name:?}"))),
+        }
+    }
+
+    pub fn real_field_mut(&mut self, name: &str) -> Result<&mut [Real]> {
+        match self.fields.get_mut(name) {
+            Some(ParticleData::Real(v)) => Ok(v),
+            Some(_) => Err(Error::Variable(format!("swarm field {name:?} is not real"))),
+            None => Err(Error::Variable(format!("no swarm field {name:?}"))),
+        }
+    }
+
+    pub fn int_field_mut(&mut self, name: &str) -> Result<&mut [i64]> {
+        match self.fields.get_mut(name) {
+            Some(ParticleData::Int(v)) => Ok(v),
+            Some(_) => Err(Error::Variable(format!("swarm field {name:?} is not int"))),
+            None => Err(Error::Variable(format!("no swarm field {name:?}"))),
+        }
+    }
+
+    pub fn int_field(&self, name: &str) -> Result<&[i64]> {
+        match self.fields.get(name) {
+            Some(ParticleData::Int(v)) => Ok(v),
+            Some(_) => Err(Error::Variable(format!("swarm field {name:?} is not int"))),
+            None => Err(Error::Variable(format!("no swarm field {name:?}"))),
+        }
+    }
+
+    /// Compact storage: move every active particle into the leading slots
+    /// (deep per-field copies, as in the paper's Defrag).
+    pub fn defrag(&mut self) {
+        let mut dst = 0usize;
+        for src in 0..self.pool_size() {
+            if self.mask[src] {
+                if src != dst {
+                    for f in self.fields.values_mut() {
+                        f.copy_within(src, dst);
+                    }
+                    self.mask[dst] = true;
+                    self.mask[src] = false;
+                }
+                dst += 1;
+            }
+        }
+        self.free = (dst..self.pool_size()).rev().collect();
+        debug_assert_eq!(self.nactive, dst);
+    }
+
+    /// True if the active particles occupy a contiguous prefix.
+    pub fn is_contiguous(&self) -> bool {
+        let mut seen_hole = false;
+        for &m in &self.mask {
+            if !m {
+                seen_hole = true;
+            } else if seen_hole {
+                return false;
+            }
+        }
+        true
+    }
+
+    // -- migration ----------------------------------------------------------
+
+    /// Serialize the given particles into bytes (field order = BTreeMap
+    /// order, so both sides agree) and remove them from this swarm.
+    pub fn extract(&mut self, indices: &[usize]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(indices.len() * self.fields.len() * 8);
+        for &idx in indices {
+            debug_assert!(self.mask[idx]);
+            for f in self.fields.values() {
+                match f {
+                    ParticleData::Real(v) => out.extend_from_slice(&v[idx].to_le_bytes()),
+                    ParticleData::Int(v) => out.extend_from_slice(&v[idx].to_le_bytes()),
+                }
+            }
+        }
+        for &idx in indices {
+            self.remove(idx);
+        }
+        out
+    }
+
+    /// Bytes per particle in the wire format.
+    pub fn particle_wire_size(&self) -> usize {
+        self.fields
+            .values()
+            .map(|f| match f {
+                ParticleData::Real(_) => std::mem::size_of::<Real>(),
+                ParticleData::Int(_) => 8,
+            })
+            .sum()
+    }
+
+    /// Deserialize particles received from a neighbor into this swarm.
+    pub fn insert_bytes(&mut self, bytes: &[u8]) -> Result<Vec<usize>> {
+        let psize = self.particle_wire_size();
+        if psize == 0 || bytes.len() % psize != 0 {
+            return Err(Error::Comm(format!(
+                "swarm {}: bad particle payload size {} (particle = {psize}B)",
+                self.name,
+                bytes.len()
+            )));
+        }
+        let n = bytes.len() / psize;
+        let slots = self.add_particles(n);
+        let mut off = 0usize;
+        for &slot in &slots {
+            for f in self.fields.values_mut() {
+                match f {
+                    ParticleData::Real(v) => {
+                        let sz = std::mem::size_of::<Real>();
+                        let mut b = [0u8; 4];
+                        b.copy_from_slice(&bytes[off..off + sz]);
+                        v[slot] = Real::from_le_bytes(b);
+                        off += sz;
+                    }
+                    ParticleData::Int(v) => {
+                        let mut b = [0u8; 8];
+                        b.copy_from_slice(&bytes[off..off + 8]);
+                        v[slot] = i64::from_le_bytes(b);
+                        off += 8;
+                    }
+                }
+            }
+        }
+        Ok(slots)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn swarm() -> Swarm {
+        Swarm::new("tracers", &[SwarmField::Real("w".into()), SwarmField::Int("id".into())])
+    }
+
+    #[test]
+    fn pool_grows_by_doubling() {
+        let mut s = swarm();
+        assert_eq!(s.pool_size(), INITIAL_POOL);
+        s.add_particles(INITIAL_POOL + 1);
+        assert_eq!(s.pool_size(), 2 * INITIAL_POOL);
+        assert_eq!(s.num_active(), INITIAL_POOL + 1);
+        s.add_particles(2 * INITIAL_POOL);
+        assert_eq!(s.pool_size(), 4 * INITIAL_POOL, "doubles until it fits");
+    }
+
+    #[test]
+    fn free_slots_reused_before_growth() {
+        let mut s = swarm();
+        let idx = s.add_particles(4);
+        s.remove(idx[1]);
+        s.remove(idx[2]);
+        let idx2 = s.add_particles(2);
+        assert_eq!(s.pool_size(), INITIAL_POOL);
+        assert!(idx2.contains(&idx[1]) && idx2.contains(&idx[2]));
+    }
+
+    #[test]
+    fn defrag_compacts() {
+        let mut s = swarm();
+        let idx = s.add_particles(6);
+        let xs = s.real_field_mut("x").unwrap();
+        for (n, &i) in idx.iter().enumerate() {
+            xs[i] = n as Real;
+        }
+        s.remove(idx[0]);
+        s.remove(idx[2]);
+        s.remove(idx[4]);
+        assert!(!s.is_contiguous() || s.num_active() == 0);
+        s.defrag();
+        assert!(s.is_contiguous());
+        assert_eq!(s.num_active(), 3);
+        let survivors: Vec<Real> = s
+            .active_indices()
+            .iter()
+            .map(|&i| s.real_field("x").unwrap()[i])
+            .collect();
+        let mut sorted = survivors.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(sorted, vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn extract_insert_roundtrip() {
+        let mut a = swarm();
+        let idx = a.add_particles(3);
+        for (n, &i) in idx.iter().enumerate() {
+            a.real_field_mut("x").unwrap()[i] = 0.5 + n as Real;
+            a.real_field_mut("w").unwrap()[i] = 10.0 * n as Real;
+            a.int_field_mut("id").unwrap()[i] = 100 + n as i64;
+        }
+        let bytes = a.extract(&[idx[0], idx[2]]);
+        assert_eq!(a.num_active(), 1);
+
+        let mut b = swarm();
+        let got = b.insert_bytes(&bytes).unwrap();
+        assert_eq!(got.len(), 2);
+        let xs: Vec<Real> = got.iter().map(|&i| b.real_field("x").unwrap()[i]).collect();
+        assert_eq!(xs, vec![0.5, 2.5]);
+        let ids: Vec<i64> = got.iter().map(|&i| b.int_field("id").unwrap()[i]).collect();
+        assert_eq!(ids, vec![100, 102]);
+    }
+
+    #[test]
+    fn insert_rejects_ragged_payload() {
+        let mut s = swarm();
+        assert!(s.insert_bytes(&[0u8; 7]).is_err());
+    }
+}

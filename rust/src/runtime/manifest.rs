@@ -1,0 +1,226 @@
+//! Artifact manifest: what python/compile/aot.py produced.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::bvals::bufspec;
+use crate::error::{Error, Result};
+use crate::mesh::IndexShape;
+use crate::util::json::Json;
+
+/// Identity of one compiled artifact variant.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ArtifactKey {
+    /// stage | dt | pack | unpack | fused | pack1
+    pub kind: String,
+    pub dim: usize,
+    /// Block interior size (nx, ny, nz).
+    pub n: [usize; 3],
+    /// Pack size (leading batch dimension).
+    pub nb: usize,
+    /// jnp | pallas
+    pub impl_: String,
+    /// Neighbor index for `pack1` variants.
+    pub nbr: Option<usize>,
+}
+
+impl ArtifactKey {
+    pub fn new(kind: &str, dim: usize, n: [usize; 3], nb: usize) -> Self {
+        ArtifactKey {
+            kind: kind.to_string(),
+            dim,
+            n,
+            nb,
+            impl_: "jnp".to_string(),
+            nbr: None,
+        }
+    }
+
+    pub fn with_impl(mut self, impl_: &str) -> Self {
+        self.impl_ = impl_.to_string();
+        self
+    }
+
+    pub fn with_nbr(mut self, nbr: usize) -> Self {
+        self.nbr = Some(nbr);
+        self
+    }
+}
+
+/// Parsed manifest.json.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub nghost: usize,
+    pub nvar: usize,
+    files: HashMap<ArtifactKey, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {path:?} (run `make artifacts` first): {e}"
+            ))
+        })?;
+        let doc = Json::parse(&text)?;
+        let nghost = doc.req("nghost")?.as_usize().unwrap_or(0);
+        let nvar = doc.req("nvar")?.as_usize().unwrap_or(0);
+        if nghost != crate::NGHOST || nvar != crate::NHYDRO {
+            return Err(Error::Artifact(format!(
+                "manifest nghost/nvar = {nghost}/{nvar} do not match build \
+                 ({}/{})",
+                crate::NGHOST,
+                crate::NHYDRO
+            )));
+        }
+
+        let mut files = HashMap::new();
+        for a in doc.req("artifacts")?.as_arr().unwrap_or(&[]) {
+            let kind = a.req("kind")?.as_str().unwrap_or("").to_string();
+            let narr = a.req("n")?.as_arr().unwrap_or(&[]);
+            let n = [
+                narr[0].as_usize().unwrap_or(1),
+                narr[1].as_usize().unwrap_or(1),
+                narr[2].as_usize().unwrap_or(1),
+            ];
+            let key = ArtifactKey {
+                kind,
+                dim: a.req("dim")?.as_usize().unwrap_or(0),
+                n,
+                nb: a.req("nb")?.as_usize().unwrap_or(1),
+                impl_: a.req("impl")?.as_str().unwrap_or("jnp").to_string(),
+                nbr: a.get("nbr").and_then(|v| v.as_usize()),
+            };
+            files.insert(key, a.req("file")?.as_str().unwrap_or("").to_string());
+        }
+
+        let m = Manifest { dir, nghost, nvar, files };
+        m.cross_check_bufspec(&doc)?;
+        Ok(m)
+    }
+
+    /// Verify the python bufspec tables embedded in the manifest agree with
+    /// the native implementation (segment lengths, opposite map, shapes).
+    fn cross_check_bufspec(&self, doc: &Json) -> Result<()> {
+        for t in doc.req("bufspec")?.as_arr().unwrap_or(&[]) {
+            let dim = t.req("dim")?.as_usize().unwrap_or(0);
+            let narr = t.req("n")?.as_arr().unwrap_or(&[]);
+            let n = [
+                narr[0].as_usize().unwrap_or(1),
+                narr[1].as_usize().unwrap_or(1),
+                narr[2].as_usize().unwrap_or(1),
+            ];
+            let shape = IndexShape::new(dim, n);
+            let ours: Vec<usize> = bufspec::segment_lengths(&shape, self.nvar);
+            let theirs: Vec<usize> = t
+                .req("seg_lens")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect();
+            if ours != theirs {
+                return Err(Error::Artifact(format!(
+                    "bufspec mismatch for dim={dim} n={n:?}: rust {ours:?} vs \
+                     python {theirs:?}"
+                )));
+            }
+            let opp: Vec<usize> = t
+                .req("opposite")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect();
+            if opp != bufspec::opposite_index(dim) {
+                return Err(Error::Artifact(format!(
+                    "opposite-index mismatch for dim={dim}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn has(&self, key: &ArtifactKey) -> bool {
+        self.files.contains_key(key)
+    }
+
+    pub fn path(&self, key: &ArtifactKey) -> Result<PathBuf> {
+        self.files
+            .get(key)
+            .map(|f| self.dir.join(f))
+            .ok_or_else(|| Error::Artifact(format!("no artifact for {key:?}")))
+    }
+
+    /// Available pack sizes for a (kind, dim, n, impl), ascending.
+    pub fn pack_sizes(&self, kind: &str, dim: usize, n: [usize; 3], impl_: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .files
+            .keys()
+            .filter(|k| k.kind == kind && k.dim == dim && k.n == n && k.impl_ == impl_)
+            .map(|k| k.nb)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &ArtifactKey> {
+        self.files.keys()
+    }
+}
+
+/// Locate the artifacts directory: $PARTHENON_ARTIFACTS or ./artifacts
+/// (walking up from cwd so tests/benches work from target dirs).
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("PARTHENON_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        default_artifact_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn load_real_manifest_and_cross_check() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(default_artifact_dir()).unwrap();
+        assert_eq!(m.nghost, crate::NGHOST);
+        // the canonical Table-1 variants exist
+        let key = ArtifactKey::new("stage", 3, [16, 16, 16], 1);
+        assert!(m.has(&key), "stage 16^3 nb=1 must exist");
+        assert!(m.path(&key).unwrap().exists());
+        let sizes = m.pack_sizes("stage", 3, [16, 16, 16], "jnp");
+        assert!(sizes.contains(&1) && sizes.contains(&16), "{sizes:?}");
+        // pack1 per-neighbor variants
+        let k1 = ArtifactKey::new("pack1", 3, [16, 16, 16], 1).with_nbr(0);
+        assert!(m.has(&k1));
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

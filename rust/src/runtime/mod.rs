@@ -1,0 +1,13 @@
+//! Device execution space: the PJRT runtime that loads AOT artifacts
+//! (HLO text lowered by python/compile/aot.py) and executes them from the
+//! coordinator hot path.
+//!
+//! One [`Runtime`] per rank thread (the `xla` crate's client is not `Send`);
+//! executables are compiled lazily per (kind, shape, pack-size) key and
+//! cached — mirroring "one compiled kernel per MeshBlockPack variant".
+
+mod manifest;
+mod pjrt;
+
+pub use manifest::{default_artifact_dir, ArtifactKey, Manifest};
+pub use pjrt::{plan_packs, Runtime, ScalArgs};

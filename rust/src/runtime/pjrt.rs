@@ -1,0 +1,366 @@
+//! PJRT client wrapper: compile HLO-text artifacts once per rank, execute
+//! them with flat f32 staging buffers.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::manifest::{ArtifactKey, Manifest};
+use crate::bvals::bufspec;
+use crate::error::Result;
+use crate::mesh::IndexShape;
+use crate::{Real, NHYDRO};
+
+/// Scalar argument vector of the artifacts:
+/// [g0, g1, beta, dt, dx, dy, dz, gamma].
+#[derive(Debug, Clone, Copy)]
+pub struct ScalArgs {
+    pub g0: Real,
+    pub g1: Real,
+    pub beta: Real,
+    pub dt: Real,
+    pub dx: [Real; 3],
+    pub gamma: Real,
+}
+
+impl ScalArgs {
+    pub fn to_vec(self) -> Vec<Real> {
+        vec![
+            self.g0, self.g1, self.beta, self.dt, self.dx[0], self.dx[1], self.dx[2],
+            self.gamma,
+        ]
+    }
+}
+
+/// Per-rank device runtime: PJRT CPU client + lazily compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Arc<Manifest>,
+    cache: HashMap<ArtifactKey, xla::PjRtLoadedExecutable>,
+    /// Number of executable invocations ("kernel launches") so far.
+    pub launches: u64,
+}
+
+impl Runtime {
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        Self::with_manifest(Arc::new(Manifest::load(dir)?))
+    }
+
+    pub fn with_manifest(manifest: Arc<Manifest>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, cache: HashMap::new(), launches: 0 })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch cached) the executable for `key`.
+    fn exe(&mut self, key: &ArtifactKey) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(key) {
+            let path = self.manifest.path(key)?;
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(self.cache.get(key).unwrap())
+    }
+
+    /// Eagerly compile an artifact (startup warmup, outside timed regions).
+    pub fn warmup(&mut self, key: &ArtifactKey) -> Result<()> {
+        self.exe(key).map(|_| ())
+    }
+
+    pub fn num_compiled(&self) -> usize {
+        self.cache.len()
+    }
+
+    // -- shape helpers -------------------------------------------------------
+
+    fn u_dims(key: &ArtifactKey) -> [usize; 5] {
+        let shape = IndexShape::new(key.dim, key.n);
+        let (zt, yt, xt) = shape.total_zyx();
+        [key.nb, NHYDRO, zt, yt, xt]
+    }
+
+    /// Elements in one block's [NVAR, Z, Y, X] slab.
+    pub fn block_elems(key: &ArtifactKey) -> usize {
+        let shape = IndexShape::new(key.dim, key.n);
+        NHYDRO * shape.ncells_total()
+    }
+
+    /// Flat boundary-buffer length per block.
+    pub fn buflen(key: &ArtifactKey) -> usize {
+        let shape = IndexShape::new(key.dim, key.n);
+        bufspec::buflen(&shape, NHYDRO)
+    }
+
+    /// Upload a host slice directly to a device buffer (single copy; the
+    /// Literal::vec1 + reshape route costs two — see EXPERIMENTS.md §Perf).
+    fn buf(&self, data: &[Real], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    fn run_b(
+        &mut self,
+        key: &ArtifactKey,
+        inputs: &[xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        self.launches += 1;
+        let exe = self.exe(key)?;
+        let result = exe.execute_b::<xla::PjRtBuffer>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    // -- artifact entry points ------------------------------------------------
+
+    /// `stage`: (u, u0, scal) -> u_new (written into `out`).
+    pub fn stage(
+        &mut self,
+        key: &ArtifactKey,
+        u: &[Real],
+        u0: &[Real],
+        scal: ScalArgs,
+        out: &mut [Real],
+    ) -> Result<()> {
+        let dims = Self::u_dims(key);
+        let inputs = [
+            self.buf(u, &dims)?,
+            self.buf(u0, &dims)?,
+            self.buf(&scal.to_vec(), &[8])?,
+        ];
+        let outs = self.run_b(key, &inputs)?;
+        outs[0].copy_raw_to(out)?;
+        Ok(())
+    }
+
+    /// `dt`: (u, scal) -> per-block CFL dt [nb].
+    pub fn dt(&mut self, key: &ArtifactKey, u: &[Real], scal: ScalArgs) -> Result<Vec<Real>> {
+        let dims = Self::u_dims(key);
+        let inputs = [self.buf(u, &dims)?, self.buf(&scal.to_vec(), &[8])?];
+        let outs = self.run_b(key, &inputs)?;
+        Ok(outs[0].to_vec::<Real>()?)
+    }
+
+    /// `pack`: u -> all boundary buffers [nb, BUFLEN] (into `bufs`).
+    pub fn pack(&mut self, key: &ArtifactKey, u: &[Real], bufs: &mut [Real]) -> Result<()> {
+        let dims = Self::u_dims(key);
+        let inputs = [self.buf(u, &dims)?];
+        let outs = self.run_b(key, &inputs)?;
+        outs[0].copy_raw_to(bufs)?;
+        Ok(())
+    }
+
+    /// `pack1` (per-neighbor): u -> one buffer segment.
+    pub fn pack1(&mut self, key: &ArtifactKey, u: &[Real]) -> Result<Vec<Real>> {
+        let dims = Self::u_dims(key);
+        let inputs = [self.buf(u, &dims)?];
+        let outs = self.run_b(key, &inputs)?;
+        Ok(outs[0].to_vec::<Real>()?)
+    }
+
+    /// `unpack1` (per-neighbor): (u, seg) -> u with one ghost region applied.
+    pub fn unpack1(
+        &mut self,
+        key: &ArtifactKey,
+        u: &[Real],
+        seg: &[Real],
+        out: &mut [Real],
+    ) -> Result<()> {
+        let dims = Self::u_dims(key);
+        let sdims = [key.nb, seg.len() / key.nb];
+        let inputs = [self.buf(u, &dims)?, self.buf(seg, &sdims)?];
+        let outs = self.run_b(key, &inputs)?;
+        outs[0].copy_raw_to(out)?;
+        Ok(())
+    }
+
+    /// `unpack`: (u, bufs) -> u with ghosts filled (written into `out`).
+    pub fn unpack(
+        &mut self,
+        key: &ArtifactKey,
+        u: &[Real],
+        bufs: &[Real],
+        out: &mut [Real],
+    ) -> Result<()> {
+        let dims = Self::u_dims(key);
+        let bdims = [key.nb, Self::buflen(key)];
+        let inputs = [self.buf(u, &dims)?, self.buf(bufs, &bdims)?];
+        let outs = self.run_b(key, &inputs)?;
+        outs[0].copy_raw_to(out)?;
+        Ok(())
+    }
+
+    /// `fused`: (u, u0, bufs_in, scal) -> (u_new, bufs_out, dt[nb]).
+    /// u is updated in place; bufs_out overwritten; returns per-block dts.
+    pub fn fused(
+        &mut self,
+        key: &ArtifactKey,
+        u: &mut [Real],
+        u0: &[Real],
+        bufs_in: &[Real],
+        scal: ScalArgs,
+        bufs_out: &mut [Real],
+    ) -> Result<Vec<Real>> {
+        let dims = Self::u_dims(key);
+        let bdims = [key.nb, Self::buflen(key)];
+        let inputs = [
+            self.buf(u, &dims)?,
+            self.buf(u0, &dims)?,
+            self.buf(bufs_in, &bdims)?,
+            self.buf(&scal.to_vec(), &[8])?,
+        ];
+        let outs = self.run_b(key, &inputs)?;
+        outs[0].copy_raw_to(u)?;
+        outs[1].copy_raw_to(bufs_out)?;
+        Ok(outs[2].to_vec::<Real>()?)
+    }
+}
+
+/// Decompose `nblocks` into pack sizes drawn from `available` (ascending),
+/// capped at `desired`: greedy largest-first. The compiled variants always
+/// include nb = 1, so this cannot fail.
+pub fn plan_packs(nblocks: usize, available: &[usize], desired: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut left = nblocks;
+    while left > 0 {
+        let pick = available
+            .iter()
+            .rev()
+            .find(|&&s| s <= left && s <= desired)
+            .copied()
+            .unwrap_or(1);
+        out.push(pick);
+        left -= pick;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifact_dir;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::new(dir).unwrap())
+    }
+
+    #[test]
+    fn plan_packs_decomposes() {
+        let avail = vec![1, 2, 4, 8, 16];
+        assert_eq!(plan_packs(16, &avail, 16), vec![16]);
+        assert_eq!(plan_packs(7, &avail, 16), vec![4, 2, 1]);
+        assert_eq!(plan_packs(9, &avail, 4), vec![4, 4, 1]);
+        assert_eq!(plan_packs(3, &avail, 1), vec![1, 1, 1]);
+        assert!(plan_packs(0, &avail, 4).is_empty());
+        assert_eq!(plan_packs(5, &avail, 16).iter().sum::<usize>(), 5);
+    }
+
+    #[test]
+    fn stage_uniform_is_stationary_on_device() {
+        let Some(mut rt) = runtime() else { return };
+        let key = ArtifactKey::new("stage", 3, [8, 8, 8], 1);
+        let nelem = Runtime::block_elems(&key);
+        let ncell = nelem / NHYDRO;
+        let mut u = vec![0.0f32; nelem];
+        for c in 0..ncell {
+            u[c] = 1.0; // rho
+            u[4 * ncell + c] = 2.5; // E
+        }
+        let scal = ScalArgs {
+            g0: 0.0,
+            g1: 1.0,
+            beta: 1.0,
+            dt: 1e-3,
+            dx: [0.1; 3],
+            gamma: 1.4,
+        };
+        let mut out = vec![0.0f32; nelem];
+        rt.stage(&key, &u, &u, scal, &mut out).unwrap();
+        for (a, b) in u.iter().zip(out.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert_eq!(rt.launches, 1);
+        assert_eq!(rt.num_compiled(), 1);
+    }
+
+    #[test]
+    fn device_matches_native_stage() {
+        let Some(mut rt) = runtime() else { return };
+        use crate::hydro::native;
+        use crate::util::rng::XorShift;
+        let shape = IndexShape::new(3, [8, 8, 8]);
+        let key = ArtifactKey::new("stage", 3, [8, 8, 8], 1);
+        let nelem = Runtime::block_elems(&key);
+        let ncell = shape.ncells_total();
+        let mut rng = XorShift::new(42);
+        let mut u = vec![0.0f32; nelem];
+        for c in 0..ncell {
+            u[c] = 1.0 + 0.1 * (rng.next_f32() - 0.5);
+            u[ncell + c] = 0.1 * (rng.next_f32() - 0.5);
+            u[4 * ncell + c] = 2.5 + 0.1 * rng.next_f32();
+        }
+        let scal = ScalArgs {
+            g0: 0.5,
+            g1: 0.5,
+            beta: 0.5,
+            dt: 1e-3,
+            dx: [0.05; 3],
+            gamma: 1.4,
+        };
+        let mut dev = vec![0.0f32; nelem];
+        rt.stage(&key, &u, &u, scal, &mut dev).unwrap();
+
+        let mut fx = native::FluxArrays::new(&shape);
+        let mut sc = native::Scratch::default();
+        let mut nat = vec![0.0f32; nelem];
+        native::stage(
+            &u,
+            &u,
+            &shape,
+            native::StageCoeffs { g0: 0.5, g1: 0.5, beta: 0.5 },
+            1e-3,
+            [0.05; 3],
+            1.4,
+            &mut fx,
+            &mut sc,
+            &mut nat,
+        );
+        crate::util::testutil::assert_allclose(&dev, &nat, 2e-4, 2e-5);
+    }
+
+    #[test]
+    fn device_pack_matches_native_pack() {
+        let Some(mut rt) = runtime() else { return };
+        let shape = IndexShape::new(3, [8, 8, 8]);
+        let key = ArtifactKey::new("pack", 3, [8, 8, 8], 1);
+        let nelem = Runtime::block_elems(&key);
+        let u: Vec<f32> = (0..nelem).map(|i| (i % 9973) as f32).collect();
+        let mut dev = vec![0.0f32; Runtime::buflen(&key)];
+        rt.pack(&key, &u, &mut dev).unwrap();
+        let mut nat = vec![0.0f32; dev.len()];
+        bufspec::pack_all(&u, &shape, NHYDRO, &mut nat);
+        assert_eq!(dev, nat, "device and native pack layouts must be identical");
+    }
+
+    #[test]
+    fn device_unpack_roundtrip() {
+        let Some(mut rt) = runtime() else { return };
+        let shape = IndexShape::new(3, [8, 8, 8]);
+        let key = ArtifactKey::new("unpack", 3, [8, 8, 8], 1);
+        let nelem = Runtime::block_elems(&key);
+        let u: Vec<f32> = vec![1.0; nelem];
+        let bufs: Vec<f32> = (0..Runtime::buflen(&key)).map(|i| i as f32).collect();
+        let mut dev = vec![0.0f32; nelem];
+        rt.unpack(&key, &u, &bufs, &mut dev).unwrap();
+        let mut nat = u.clone();
+        bufspec::unpack_all(&mut nat, &shape, NHYDRO, &bufs);
+        assert_eq!(dev, nat);
+    }
+}

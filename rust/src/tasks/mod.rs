@@ -1,0 +1,389 @@
+//! Task infrastructure (paper Sec. 3.10).
+//!
+//! Tasks are organized as `TaskCollection` → `TaskRegion` → `TaskList`:
+//! regions run sequentially; the lists inside one region are polled
+//! round-robin so tasks of different lists interleave ("concurrent" in the
+//! paper's single-thread-per-rank sense) — this is what lets boundary
+//! communication hide behind compute: a task that returns
+//! [`TaskStatus::Incomplete`] (e.g. a receive that has not arrived) is
+//! retried on the next sweep while other lists make progress.
+//!
+//! Global (cross-list) reductions are expressed as *regional* tasks: every
+//! list marks a dependency task, and a single once-only task runs when all
+//! marks are complete (paper's "shared dependency" reductions).
+
+use crate::error::{Error, Result};
+
+/// Status returned by a task body.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskStatus {
+    /// Done; dependents may run.
+    Complete,
+    /// Not ready (e.g. message not arrived); poll again later.
+    Incomplete,
+    /// Alias of Incomplete kept for Parthenon API parity (iterative tasking
+    /// is driven by re-executing a region until a stop criterion holds).
+    Iterate,
+}
+
+/// Handle to a task within its list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TaskId(usize);
+
+/// Sentinel for "no dependencies".
+pub const NONE: &[TaskId] = &[];
+
+struct Task<C> {
+    deps: Vec<TaskId>,
+    body: Box<dyn FnMut(&mut C) -> TaskStatus + Send>,
+    done: bool,
+}
+
+/// An ordered set of dependent tasks over one unit of work (a block or a
+/// pack of blocks).
+pub struct TaskList<C> {
+    tasks: Vec<Task<C>>,
+}
+
+impl<C> Default for TaskList<C> {
+    fn default() -> Self {
+        TaskList { tasks: Vec::new() }
+    }
+}
+
+impl<C> TaskList<C> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a task depending on `deps`; returns its id.
+    pub fn add(
+        &mut self,
+        deps: &[TaskId],
+        body: impl FnMut(&mut C) -> TaskStatus + Send + 'static,
+    ) -> TaskId {
+        let id = TaskId(self.tasks.len());
+        self.tasks.push(Task { deps: deps.to_vec(), body: Box::new(body), done: false });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    fn is_done(&self, id: TaskId) -> bool {
+        self.tasks[id.0].done
+    }
+
+    fn all_done(&self) -> bool {
+        self.tasks.iter().all(|t| t.done)
+    }
+
+    /// Run every ready task once; returns true if anything completed.
+    fn sweep(&mut self, ctx: &mut C) -> bool {
+        let mut progressed = false;
+        for i in 0..self.tasks.len() {
+            if self.tasks[i].done {
+                continue;
+            }
+            let ready = self.tasks[i]
+                .deps
+                .iter()
+                .all(|d| self.tasks[d.0].done);
+            if !ready {
+                continue;
+            }
+            let status = (self.tasks[i].body)(ctx);
+            if status == TaskStatus::Complete {
+                self.tasks[i].done = true;
+                progressed = true;
+            }
+        }
+        progressed
+    }
+
+    /// Reset all completion state (lists are rebuilt per stage in drivers;
+    /// reset supports reuse).
+    pub fn reset(&mut self) {
+        for t in &mut self.tasks {
+            t.done = false;
+        }
+    }
+}
+
+/// A regional (cross-list) task: runs once after every (list, task) mark
+/// completes. Used for task-based global reductions.
+struct RegionalTask<C> {
+    marks: Vec<(usize, TaskId)>,
+    body: Box<dyn FnMut(&mut C) -> TaskStatus + Send>,
+    done: bool,
+}
+
+/// Lists that execute concurrently (interleaved) within one region.
+pub struct TaskRegion<C> {
+    pub lists: Vec<TaskList<C>>,
+    regional: Vec<RegionalTask<C>>,
+}
+
+impl<C> Default for TaskRegion<C> {
+    fn default() -> Self {
+        TaskRegion { lists: Vec::new(), regional: Vec::new() }
+    }
+}
+
+impl<C> TaskRegion<C> {
+    pub fn new(nlists: usize) -> Self {
+        let mut r = Self::default();
+        for _ in 0..nlists {
+            r.lists.push(TaskList::new());
+        }
+        r
+    }
+
+    pub fn list(&mut self, i: usize) -> &mut TaskList<C> {
+        &mut self.lists[i]
+    }
+
+    /// Add a once-only task gated on marks across lists (global reduction).
+    pub fn add_regional(
+        &mut self,
+        marks: Vec<(usize, TaskId)>,
+        body: impl FnMut(&mut C) -> TaskStatus + Send + 'static,
+    ) {
+        self.regional.push(RegionalTask { marks, body: Box::new(body), done: false });
+    }
+
+    /// Poll lists round-robin until every task (incl. regional) completes.
+    ///
+    /// `max_sweeps` bounds spinning (a sweep with zero global progress only
+    /// yields the thread — progress may depend on other ranks delivering
+    /// messages).
+    pub fn execute(&mut self, ctx: &mut C, max_sweeps: usize) -> Result<()> {
+        let mut sweeps = 0usize;
+        loop {
+            let mut progressed = false;
+            for l in &mut self.lists {
+                progressed |= l.sweep(ctx);
+            }
+            for r in &mut self.regional {
+                if r.done {
+                    continue;
+                }
+                let ready = r
+                    .marks
+                    .iter()
+                    .all(|(li, id)| self.lists[*li].is_done(*id));
+                if ready && (r.body)(ctx) == TaskStatus::Complete {
+                    r.done = true;
+                    progressed = true;
+                }
+            }
+            let all = self.lists.iter().all(|l| l.all_done())
+                && self.regional.iter().all(|r| r.done);
+            if all {
+                return Ok(());
+            }
+            if !progressed {
+                sweeps += 1;
+                if sweeps > max_sweeps {
+                    return Err(Error::Task(format!(
+                        "region stalled after {max_sweeps} idle sweeps \
+                         (deadlock or lost message?)"
+                    )));
+                }
+                std::thread::yield_now();
+            } else {
+                sweeps = 0;
+            }
+        }
+    }
+}
+
+/// Regions executed in order — one per algorithm phase (paper Fig. 3).
+pub struct TaskCollection<C> {
+    pub regions: Vec<TaskRegion<C>>,
+}
+
+impl<C> Default for TaskCollection<C> {
+    fn default() -> Self {
+        TaskCollection { regions: Vec::new() }
+    }
+}
+
+impl<C> TaskCollection<C> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_region(&mut self, nlists: usize) -> &mut TaskRegion<C> {
+        self.regions.push(TaskRegion::new(nlists));
+        self.regions.last_mut().unwrap()
+    }
+
+    pub fn execute(&mut self, ctx: &mut C, max_sweeps: usize) -> Result<()> {
+        for r in &mut self.regions {
+            r.execute(ctx, max_sweeps)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Default)]
+    struct Ctx {
+        log: Vec<&'static str>,
+        counter: usize,
+    }
+
+    #[test]
+    fn dependencies_order_execution() {
+        let mut list = TaskList::<Ctx>::new();
+        let a = list.add(NONE, |c: &mut Ctx| {
+            c.log.push("a");
+            TaskStatus::Complete
+        });
+        let b = list.add(&[a], |c: &mut Ctx| {
+            c.log.push("b");
+            TaskStatus::Complete
+        });
+        let _c = list.add(&[a, b], |c: &mut Ctx| {
+            c.log.push("c");
+            TaskStatus::Complete
+        });
+        let mut region = TaskRegion { lists: vec![list], regional: vec![] };
+        let mut ctx = Ctx::default();
+        region.execute(&mut ctx, 10).unwrap();
+        assert_eq!(ctx.log, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn incomplete_retries_until_ready() {
+        let mut list = TaskList::<Ctx>::new();
+        list.add(NONE, |c: &mut Ctx| {
+            c.counter += 1;
+            if c.counter >= 3 {
+                TaskStatus::Complete
+            } else {
+                TaskStatus::Incomplete
+            }
+        });
+        let mut region = TaskRegion { lists: vec![list], regional: vec![] };
+        let mut ctx = Ctx::default();
+        region.execute(&mut ctx, 100).unwrap();
+        assert_eq!(ctx.counter, 3);
+    }
+
+    #[test]
+    fn lists_interleave() {
+        // list 0 waits for a flag only list 1 sets -> requires interleaving
+        let mut region = TaskRegion::<Ctx>::new(2);
+        region.list(0).add(NONE, |c: &mut Ctx| {
+            if c.counter > 0 {
+                c.log.push("waiter");
+                TaskStatus::Complete
+            } else {
+                TaskStatus::Incomplete
+            }
+        });
+        region.list(1).add(NONE, |c: &mut Ctx| {
+            c.counter = 1;
+            c.log.push("setter");
+            TaskStatus::Complete
+        });
+        let mut ctx = Ctx::default();
+        region.execute(&mut ctx, 10).unwrap();
+        assert_eq!(ctx.log, vec!["setter", "waiter"]);
+    }
+
+    #[test]
+    fn regional_runs_once_after_marks() {
+        let mut region = TaskRegion::<Ctx>::new(2);
+        let mut marks = Vec::new();
+        for li in 0..2 {
+            let id = region.list(li).add(NONE, |c: &mut Ctx| {
+                c.counter += 1;
+                TaskStatus::Complete
+            });
+            marks.push((li, id));
+        }
+        region.add_regional(marks, |c: &mut Ctx| {
+            c.log.push("reduce");
+            assert_eq!(c.counter, 2, "runs after all marks");
+            TaskStatus::Complete
+        });
+        let mut ctx = Ctx::default();
+        region.execute(&mut ctx, 10).unwrap();
+        assert_eq!(ctx.log, vec!["reduce"]);
+    }
+
+    #[test]
+    fn stall_detected() {
+        let mut region = TaskRegion::<Ctx>::new(1);
+        region.list(0).add(NONE, |_: &mut Ctx| TaskStatus::Incomplete);
+        let mut ctx = Ctx::default();
+        assert!(region.execute(&mut ctx, 5).is_err());
+    }
+
+    #[test]
+    fn collection_runs_regions_in_order() {
+        let mut coll = TaskCollection::<Ctx>::new();
+        coll.add_region(1).list(0).add(NONE, |c: &mut Ctx| {
+            c.log.push("r0");
+            TaskStatus::Complete
+        });
+        coll.add_region(1).list(0).add(NONE, |c: &mut Ctx| {
+            c.log.push("r1");
+            TaskStatus::Complete
+        });
+        let mut ctx = Ctx::default();
+        coll.execute(&mut ctx, 10).unwrap();
+        assert_eq!(ctx.log, vec!["r0", "r1"]);
+    }
+
+    #[test]
+    fn random_dags_respect_deps() {
+        use crate::util::rng::XorShift;
+        use crate::util::testutil::check;
+        use std::sync::{Arc, Mutex};
+
+        check("task dag", 20, |rng: &mut XorShift| {
+            let n = 2 + rng.below(20);
+            let mut list = TaskList::<Ctx>::new();
+            let order: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+            let mut ids: Vec<TaskId> = Vec::new();
+            let mut deps_of: Vec<Vec<usize>> = Vec::new();
+            for i in 0..n {
+                let ndeps = rng.below(i.min(3) + 1);
+                let mut deps = Vec::new();
+                for _ in 0..ndeps {
+                    deps.push(rng.below(i.max(1)));
+                }
+                deps.dedup();
+                let dep_ids: Vec<TaskId> = deps.iter().map(|&d| ids[d]).collect();
+                let ord = order.clone();
+                ids.push(list.add(&dep_ids, move |_: &mut Ctx| {
+                    ord.lock().unwrap().push(i);
+                    TaskStatus::Complete
+                }));
+                deps_of.push(deps);
+            }
+            let mut region = TaskRegion { lists: vec![list], regional: vec![] };
+            region.execute(&mut Ctx::default(), 10).unwrap();
+            let seq = order.lock().unwrap();
+            let pos: std::collections::HashMap<usize, usize> =
+                seq.iter().enumerate().map(|(p, &t)| (t, p)).collect();
+            for (i, deps) in deps_of.iter().enumerate() {
+                for &d in deps {
+                    assert!(pos[&d] < pos[&i], "dep {d} must precede {i}");
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,228 @@
+//! Hand-rolled benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated timed runs with median/MAD statistics, a
+//! paper-style table printer, and JSON result dumps under `bench_results/`.
+//! Every `cargo bench` target builds its harness from these pieces.
+
+use std::time::{Duration, Instant};
+
+use super::json::{obj, Json};
+
+/// One measured configuration.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub label: String,
+    /// Wall-clock per repetition, seconds.
+    pub secs: Vec<f64>,
+    /// Work units per repetition (e.g. zone-updates), for throughput.
+    pub work: f64,
+}
+
+impl Sample {
+    pub fn median_secs(&self) -> f64 {
+        let mut s = self.secs.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        }
+    }
+
+    /// Median absolute deviation (robust spread).
+    pub fn mad_secs(&self) -> f64 {
+        let m = self.median_secs();
+        let mut d: Vec<f64> = self.secs.iter().map(|s| (s - m).abs()).collect();
+        d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = d.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        if n % 2 == 1 {
+            d[n / 2]
+        } else {
+            0.5 * (d[n / 2 - 1] + d[n / 2])
+        }
+    }
+
+    /// Work units per second (throughput) at the median.
+    pub fn throughput(&self) -> f64 {
+        self.work / self.median_secs()
+    }
+}
+
+/// Time `f` with `warmup` untimed + `reps` timed repetitions.
+pub fn run<F: FnMut()>(label: &str, work: f64, warmup: usize, reps: usize, mut f: F) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut secs = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        secs.push(t0.elapsed().as_secs_f64());
+    }
+    Sample {
+        label: label.to_string(),
+        secs,
+        work,
+    }
+}
+
+/// Time a closure that reports its own work units (e.g. cycles actually run).
+pub fn run_with_work<F: FnMut() -> f64>(
+    label: &str,
+    warmup: usize,
+    reps: usize,
+    mut f: F,
+) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut secs = Vec::with_capacity(reps);
+    let mut work = 0.0;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        work = f();
+        secs.push(t0.elapsed().as_secs_f64());
+    }
+    Sample {
+        label: label.to_string(),
+        secs,
+        work,
+    }
+}
+
+/// True when PARTHENON_BENCH_QUICK=1: shrink workloads for CI runs.
+pub fn quick_mode() -> bool {
+    std::env::var("PARTHENON_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Simple fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let ncol = self.headers.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>width$} | ", c, width = w[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        println!(
+            "|{}|",
+            w.iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+}
+
+/// Write bench samples to bench_results/<name>.json.
+pub fn write_results(name: &str, samples: &[Sample], extra: Vec<(&str, Json)>) {
+    let dir = std::path::Path::new("bench_results");
+    let _ = std::fs::create_dir_all(dir);
+    let mut items = Vec::new();
+    for s in samples {
+        items.push(obj(vec![
+            ("label", s.label.as_str().into()),
+            ("median_secs", s.median_secs().into()),
+            ("mad_secs", s.mad_secs().into()),
+            ("work", s.work.into()),
+            ("throughput", s.throughput().into()),
+            ("reps", s.secs.len().into()),
+        ]));
+    }
+    let mut fields = vec![
+        ("name", Json::from(name)),
+        ("samples", Json::Arr(items)),
+    ];
+    fields.extend(extra);
+    let doc = obj(fields);
+    let path = dir.join(format!("{name}.json"));
+    if let Err(e) = std::fs::write(&path, doc.dump()) {
+        eprintln!("benchkit: failed to write {path:?}: {e}");
+    } else {
+        println!("[benchkit] wrote {path:?}");
+    }
+}
+
+/// Format zone-cycles/s compactly (3 significant figures).
+pub fn fmt_zcps(zcps: f64) -> String {
+    format!("{zcps:.3e}")
+}
+
+/// Busy-sleep helper for calibration tests.
+pub fn spin_for(d: Duration) {
+    let t0 = Instant::now();
+    while t0.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        let s = Sample { label: "x".into(), secs: vec![3.0, 1.0, 2.0], work: 6.0 };
+        assert_eq!(s.median_secs(), 2.0);
+        let s2 = Sample { label: "x".into(), secs: vec![1.0, 2.0, 3.0, 4.0], work: 1.0 };
+        assert_eq!(s2.median_secs(), 2.5);
+    }
+
+    #[test]
+    fn throughput_uses_median() {
+        let s = Sample { label: "x".into(), secs: vec![2.0, 2.0, 2.0], work: 10.0 };
+        assert_eq!(s.throughput(), 5.0);
+    }
+
+    #[test]
+    fn run_measures() {
+        let s = run("spin", 1.0, 1, 3, || spin_for(Duration::from_millis(2)));
+        assert!(s.median_secs() >= 0.002);
+        assert_eq!(s.secs.len(), 3);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print(); // just exercise formatting
+    }
+}

@@ -1,0 +1,7 @@
+//! Substrate utilities built from scratch (serde/criterion/proptest are not
+//! available in this offline environment — see DESIGN.md §3.17).
+
+pub mod benchkit;
+pub mod json;
+pub mod rng;
+pub mod testutil;

@@ -1,0 +1,82 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` random seeds;
+//! on failure it reports the failing seed so the case can be replayed as a
+//! deterministic regression (`replay(seed, f)`).
+
+use super::rng::XorShift;
+
+/// Run `f` for `cases` pseudo-random cases. Panics with the failing seed.
+pub fn check<F: FnMut(&mut XorShift)>(name: &str, cases: usize, mut f: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = XorShift::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property {name:?} failed at case {case} (seed {seed:#x}); \
+                 replay with testutil::replay({seed:#x}, f)"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Replay one failing case.
+pub fn replay<F: FnMut(&mut XorShift)>(seed: u64, mut f: F) {
+    let mut rng = XorShift::new(seed);
+    f(&mut rng);
+}
+
+/// Assert two f32 slices are close (absolute + relative tolerance).
+#[track_caller]
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "element {i}: {x} vs {y} (|diff|={}, tol={tol})",
+            (x - y).abs()
+        );
+    }
+}
+
+/// Max absolute difference between two slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("count", 25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failure() {
+        check("fail", 10, |rng| assert!(rng.next_f64() < 0.5));
+    }
+
+    #[test]
+    fn allclose_accepts_equal() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn allclose_rejects_far() {
+        assert_allclose(&[1.0], &[1.1], 1e-5, 1e-6);
+    }
+}

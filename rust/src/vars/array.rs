@@ -1,0 +1,123 @@
+//! `Array4` — the ParArrayND analog: a rank-4 row-major array of `Real`
+//! with shape [V, Z, Y, X]. Scalars/vectors/tensors are flattened into the
+//! leading component axis exactly like ParArrayND flattens higher ranks.
+
+use crate::Real;
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Array4 {
+    dims: [usize; 4],
+    data: Vec<Real>,
+}
+
+impl Array4 {
+    pub fn zeros(dims: [usize; 4]) -> Self {
+        Array4 { dims, data: vec![0.0; dims.iter().product()] }
+    }
+
+    pub fn empty() -> Self {
+        Array4 { dims: [0; 4], data: Vec::new() }
+    }
+
+    #[inline]
+    pub fn dims(&self) -> [usize; 4] {
+        self.dims
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn idx(&self, v: usize, k: usize, j: usize, i: usize) -> usize {
+        debug_assert!(v < self.dims[0] && k < self.dims[1] && j < self.dims[2] && i < self.dims[3]);
+        ((v * self.dims[1] + k) * self.dims[2] + j) * self.dims[3] + i
+    }
+
+    #[inline]
+    pub fn get(&self, v: usize, k: usize, j: usize, i: usize) -> Real {
+        self.data[self.idx(v, k, j, i)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, v: usize, k: usize, j: usize, i: usize, val: Real) {
+        let ix = self.idx(v, k, j, i);
+        self.data[ix] = val;
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, v: usize, k: usize, j: usize, i: usize) -> &mut Real {
+        let ix = self.idx(v, k, j, i);
+        &mut self.data[ix]
+    }
+
+    pub fn as_slice(&self) -> &[Real] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [Real] {
+        &mut self.data
+    }
+
+    /// Contiguous slice of one component plane [Z, Y, X].
+    pub fn comp(&self, v: usize) -> &[Real] {
+        let n = self.dims[1] * self.dims[2] * self.dims[3];
+        &self.data[v * n..(v + 1) * n]
+    }
+
+    pub fn comp_mut(&mut self, v: usize) -> &mut [Real] {
+        let n = self.dims[1] * self.dims[2] * self.dims[3];
+        &mut self.data[v * n..(v + 1) * n]
+    }
+
+    pub fn fill(&mut self, val: Real) {
+        self.data.fill(val);
+    }
+
+    /// Deep copy of another array (dims must match).
+    pub fn copy_from(&mut self, other: &Array4) {
+        debug_assert_eq!(self.dims, other.dims);
+        self.data.copy_from_slice(&other.data);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_layout_is_row_major_x_fastest() {
+        let mut a = Array4::zeros([2, 3, 4, 5]);
+        a.set(0, 0, 0, 1, 1.0);
+        a.set(0, 0, 1, 0, 2.0);
+        a.set(0, 1, 0, 0, 3.0);
+        a.set(1, 0, 0, 0, 4.0);
+        assert_eq!(a.as_slice()[1], 1.0);
+        assert_eq!(a.as_slice()[5], 2.0);
+        assert_eq!(a.as_slice()[20], 3.0);
+        assert_eq!(a.as_slice()[60], 4.0);
+    }
+
+    #[test]
+    fn comp_slices() {
+        let mut a = Array4::zeros([2, 1, 2, 2]);
+        a.comp_mut(1).fill(7.0);
+        assert!(a.comp(0).iter().all(|&x| x == 0.0));
+        assert!(a.comp(1).iter().all(|&x| x == 7.0));
+    }
+
+    #[test]
+    fn copy_from() {
+        let mut a = Array4::zeros([1, 1, 2, 2]);
+        let mut b = Array4::zeros([1, 1, 2, 2]);
+        b.fill(3.0);
+        a.copy_from(&b);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,233 @@
+//! `MeshBlockData` — the per-block container holding every resolved variable
+//! (paper Sec. 3.6).
+
+use std::collections::HashMap;
+
+use super::array::Array4;
+use super::metadata::MetadataFlag;
+use super::package::FieldDef;
+use super::Variable;
+use crate::error::{Error, Result};
+use crate::mesh::IndexShape;
+
+/// All variables of one MeshBlock.
+#[derive(Debug, Clone, Default)]
+pub struct MeshBlockData {
+    pub shape: Option<IndexShape>,
+    vars: Vec<Variable>,
+    by_name: HashMap<String, usize>,
+}
+
+impl MeshBlockData {
+    /// Build from the resolved field list. Dense variables are allocated
+    /// immediately; sparse ones stay empty until
+    /// [`MeshBlockData::allocate_sparse`].
+    pub fn from_fields(fields: &[FieldDef], shape: IndexShape) -> Self {
+        let mut c = MeshBlockData { shape: Some(shape), ..Default::default() };
+        let (zt, yt, xt) = shape.total_zyx();
+        for f in fields {
+            let sparse = f.metadata.has(MetadataFlag::Sparse);
+            let dims = [f.metadata.ncomp(), zt, yt, xt];
+            let data = if sparse { Array4::empty() } else { Array4::zeros(dims) };
+            let idx = c.vars.len();
+            c.by_name.insert(f.name.clone(), idx);
+            c.vars.push(Variable {
+                name: f.name.clone(),
+                metadata: f.metadata.clone(),
+                data,
+                allocated: !sparse,
+            });
+        }
+        c
+    }
+
+    pub fn nvars(&self) -> usize {
+        self.vars.len()
+    }
+
+    pub fn var_names(&self) -> impl Iterator<Item = &str> {
+        self.vars.iter().map(|v| v.name.as_str())
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn var(&self, name: &str) -> Result<&Variable> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.vars[i])
+            .ok_or_else(|| Error::Variable(format!("no variable {name:?}")))
+    }
+
+    pub fn var_mut(&mut self, name: &str) -> Result<&mut Variable> {
+        match self.by_name.get(name) {
+            Some(&i) => Ok(&mut self.vars[i]),
+            None => Err(Error::Variable(format!("no variable {name:?}"))),
+        }
+    }
+
+    pub fn var_by_index(&self, idx: usize) -> &Variable {
+        &self.vars[idx]
+    }
+
+    pub fn var_by_index_mut(&mut self, idx: usize) -> &mut Variable {
+        &mut self.vars[idx]
+    }
+
+    /// Data array of a variable (must exist and be allocated).
+    pub fn get(&self, name: &str) -> Result<&Array4> {
+        let v = self.var(name)?;
+        if !v.allocated {
+            return Err(Error::Variable(format!("variable {name:?} not allocated")));
+        }
+        Ok(&v.data)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Array4> {
+        let shape = self.shape;
+        let v = self.var_mut(name)?;
+        if !v.allocated {
+            let _ = shape;
+            return Err(Error::Variable(format!("variable {name:?} not allocated")));
+        }
+        Ok(&mut v.data)
+    }
+
+    /// Two distinct variables mutably at once (for update kernels).
+    pub fn get2_mut(&mut self, a: &str, b: &str) -> Result<(&mut Array4, &mut Array4)> {
+        let ia = self
+            .index_of(a)
+            .ok_or_else(|| Error::Variable(format!("no variable {a:?}")))?;
+        let ib = self
+            .index_of(b)
+            .ok_or_else(|| Error::Variable(format!("no variable {b:?}")))?;
+        if ia == ib {
+            return Err(Error::Variable(format!("get2_mut of same variable {a:?}")));
+        }
+        let (lo, hi, swap) = if ia < ib { (ia, ib, false) } else { (ib, ia, true) };
+        let (left, right) = self.vars.split_at_mut(hi);
+        let (x, y) = (&mut left[lo].data, &mut right[0].data);
+        Ok(if swap { (y, x) } else { (x, y) })
+    }
+
+    /// Allocate a sparse variable on this block.
+    pub fn allocate_sparse(&mut self, name: &str) -> Result<()> {
+        let shape = self
+            .shape
+            .ok_or_else(|| Error::Variable("container has no shape".into()))?;
+        let (zt, yt, xt) = shape.total_zyx();
+        let v = self.var_mut(name)?;
+        if !v.metadata.has(MetadataFlag::Sparse) {
+            return Err(Error::Variable(format!("{name:?} is not sparse")));
+        }
+        if !v.allocated {
+            v.data = Array4::zeros([v.metadata.ncomp(), zt, yt, xt]);
+            v.allocated = true;
+        }
+        Ok(())
+    }
+
+    /// Deallocate a sparse variable (frees storage).
+    pub fn deallocate_sparse(&mut self, name: &str) -> Result<()> {
+        let v = self.var_mut(name)?;
+        if !v.metadata.has(MetadataFlag::Sparse) {
+            return Err(Error::Variable(format!("{name:?} is not sparse")));
+        }
+        v.data = Array4::empty();
+        v.allocated = false;
+        Ok(())
+    }
+
+    /// Names of variables whose metadata matches every given flag
+    /// (allocated ones only).
+    pub fn names_by_flags(&self, flags: &[MetadataFlag]) -> Vec<String> {
+        self.vars
+            .iter()
+            .filter(|v| v.allocated && flags.iter().all(|f| v.metadata.has(*f)))
+            .map(|v| v.name.clone())
+            .collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Variable> {
+        self.vars.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vars::{Metadata, MetadataFlag};
+
+    fn fields() -> Vec<FieldDef> {
+        vec![
+            FieldDef {
+                name: "cons".into(),
+                metadata: Metadata::new(&[
+                    MetadataFlag::Cell,
+                    MetadataFlag::Independent,
+                    MetadataFlag::FillGhost,
+                ])
+                .with_shape(vec![5]),
+            },
+            FieldDef {
+                name: "prim".into(),
+                metadata: Metadata::new(&[MetadataFlag::Cell, MetadataFlag::Derived])
+                    .with_shape(vec![5]),
+            },
+            FieldDef {
+                name: "vf_3".into(),
+                metadata: Metadata::new(&[MetadataFlag::Cell]).with_sparse_id(3),
+            },
+        ]
+    }
+
+    fn shape() -> IndexShape {
+        IndexShape::new(2, [8, 8, 1])
+    }
+
+    #[test]
+    fn dense_allocated_sparse_not() {
+        let c = MeshBlockData::from_fields(&fields(), shape());
+        assert_eq!(c.nvars(), 3);
+        assert!(c.get("cons").is_ok());
+        assert!(c.get("vf_3").is_err());
+    }
+
+    #[test]
+    fn sparse_allocate_deallocate() {
+        let mut c = MeshBlockData::from_fields(&fields(), shape());
+        c.allocate_sparse("vf_3").unwrap();
+        assert!(c.get("vf_3").is_ok());
+        assert_eq!(c.get("vf_3").unwrap().dims()[0], 1);
+        c.deallocate_sparse("vf_3").unwrap();
+        assert!(c.get("vf_3").is_err());
+        assert!(c.allocate_sparse("cons").is_err(), "dense is not sparse");
+    }
+
+    #[test]
+    fn flag_queries() {
+        let mut c = MeshBlockData::from_fields(&fields(), shape());
+        assert_eq!(c.names_by_flags(&[MetadataFlag::FillGhost]), vec!["cons"]);
+        assert!(c.names_by_flags(&[MetadataFlag::Sparse]).is_empty(), "unallocated hidden");
+        c.allocate_sparse("vf_3").unwrap();
+        assert_eq!(c.names_by_flags(&[MetadataFlag::Sparse]), vec!["vf_3"]);
+    }
+
+    #[test]
+    fn get2_mut_disjoint() {
+        let mut c = MeshBlockData::from_fields(&fields(), shape());
+        let (a, b) = c.get2_mut("cons", "prim").unwrap();
+        a.fill(1.0);
+        b.fill(2.0);
+        assert_eq!(c.get("cons").unwrap().as_slice()[0], 1.0);
+        assert_eq!(c.get("prim").unwrap().as_slice()[0], 2.0);
+        assert!(c.get2_mut("cons", "cons").is_err());
+    }
+
+    #[test]
+    fn dims_include_ghosts() {
+        let c = MeshBlockData::from_fields(&fields(), shape());
+        assert_eq!(c.get("cons").unwrap().dims(), [5, 1, 12, 12]);
+    }
+}

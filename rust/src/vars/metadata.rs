@@ -1,0 +1,153 @@
+//! Variable metadata: flags and shape (paper Sec. 3.4).
+
+/// Metadata flags. A variable carries a set of these (bitmask).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u32)]
+pub enum MetadataFlag {
+    // -- topology ------------------------------------------------------------
+    /// Cell-centered field.
+    Cell = 1 << 0,
+    /// Face-centered field (allocation/indexing only; comm not yet wired,
+    /// matching the paper's Sec. 7 status).
+    Face = 1 << 1,
+    /// Edge-centered field (reserved).
+    Edge = 1 << 2,
+    /// Not tied to the mesh.
+    None = 1 << 3,
+
+    // -- role ----------------------------------------------------------------
+    /// Evolved state: included in restarts and prolong/restrict on regrid.
+    Independent = 1 << 4,
+    /// Recomputed from independent data (not communicated or restarted).
+    Derived = 1 << 5,
+
+    // -- dependency resolution (paper Sec. 3.3) -------------------------------
+    /// Package owns and provides this variable.
+    Provides = 1 << 6,
+    /// Package needs this variable but does not create it.
+    Requires = 1 << 7,
+    /// Package can provide it but defers to another provider.
+    Overridable = 1 << 8,
+    /// Private to the registering package (name is namespaced).
+    Private = 1 << 9,
+
+    // -- behavior ------------------------------------------------------------
+    /// Ghost zones are filled by boundary communication.
+    FillGhost = 1 << 10,
+    /// Flux storage is allocated; participates in flux correction.
+    WithFluxes = 1 << 11,
+    /// Advected by the hydro package.
+    Advected = 1 << 12,
+    /// Force inclusion in restart outputs.
+    Restart = 1 << 13,
+    /// Sparse: allocated per-block on demand.
+    Sparse = 1 << 14,
+    /// Vector: components transform like a vector under reflection.
+    Vector = 1 << 15,
+    /// Tensor (flattened components).
+    Tensor = 1 << 16,
+}
+
+/// Metadata for one variable: flag set plus component shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Metadata {
+    flags: u32,
+    /// Component shape (empty = scalar). E.g. [3] = vector, [3,3] = tensor.
+    pub shape: Vec<usize>,
+    /// Sparse id when the variable belongs to a sparse pool.
+    pub sparse_id: Option<usize>,
+}
+
+impl Metadata {
+    pub fn new(flags: &[MetadataFlag]) -> Self {
+        let mut m = Metadata { flags: 0, shape: Vec::new(), sparse_id: None };
+        for f in flags {
+            m.flags |= *f as u32;
+        }
+        m
+    }
+
+    pub fn with_shape(mut self, shape: Vec<usize>) -> Self {
+        self.shape = shape;
+        self
+    }
+
+    pub fn with_sparse_id(mut self, id: usize) -> Self {
+        self.sparse_id = Some(id);
+        self.set(MetadataFlag::Sparse);
+        self
+    }
+
+    #[inline]
+    pub fn has(&self, f: MetadataFlag) -> bool {
+        self.flags & (f as u32) != 0
+    }
+
+    pub fn set(&mut self, f: MetadataFlag) {
+        self.flags |= f as u32;
+    }
+
+    pub fn unset(&mut self, f: MetadataFlag) {
+        self.flags &= !(f as u32);
+    }
+
+    /// Flattened number of components.
+    pub fn ncomp(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    /// Exactly one of Provides / Requires / Overridable / Private (defaults
+    /// to Provides when none set).
+    pub fn role(&self) -> MetadataFlag {
+        for f in [
+            MetadataFlag::Requires,
+            MetadataFlag::Overridable,
+            MetadataFlag::Private,
+            MetadataFlag::Provides,
+        ] {
+            if self.has(f) {
+                return f;
+            }
+        }
+        MetadataFlag::Provides
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_roundtrip() {
+        let mut m = Metadata::new(&[MetadataFlag::Cell, MetadataFlag::Independent]);
+        assert!(m.has(MetadataFlag::Cell));
+        assert!(!m.has(MetadataFlag::FillGhost));
+        m.set(MetadataFlag::FillGhost);
+        assert!(m.has(MetadataFlag::FillGhost));
+        m.unset(MetadataFlag::FillGhost);
+        assert!(!m.has(MetadataFlag::FillGhost));
+    }
+
+    #[test]
+    fn ncomp() {
+        assert_eq!(Metadata::new(&[]).ncomp(), 1);
+        assert_eq!(Metadata::new(&[]).with_shape(vec![3]).ncomp(), 3);
+        assert_eq!(Metadata::new(&[]).with_shape(vec![3, 3]).ncomp(), 9);
+    }
+
+    #[test]
+    fn role_defaults_to_provides() {
+        assert_eq!(Metadata::new(&[MetadataFlag::Cell]).role(), MetadataFlag::Provides);
+        assert_eq!(
+            Metadata::new(&[MetadataFlag::Requires]).role(),
+            MetadataFlag::Requires
+        );
+    }
+
+    #[test]
+    fn sparse_builder() {
+        let m = Metadata::new(&[MetadataFlag::Cell]).with_sparse_id(4);
+        assert!(m.has(MetadataFlag::Sparse));
+        assert_eq!(m.sparse_id, Some(4));
+    }
+}

@@ -1,0 +1,35 @@
+//! Variables, metadata, packages (StateDescriptors), containers and packs —
+//! the paper's Sec. 3.3-3.6 abstractions.
+
+mod array;
+mod container;
+mod metadata;
+mod pack;
+mod package;
+mod sparse;
+
+pub use array::Array4;
+pub use container::MeshBlockData;
+pub use metadata::{Metadata, MetadataFlag};
+pub use pack::{PackDescriptor, VariablePack};
+pub use package::{
+    resolve_packages, FieldDef, Package, ParamValue, Params, StateDescriptor,
+};
+pub use sparse::SparsePool;
+
+/// A variable: metadata plus per-block data (and optional flux storage).
+#[derive(Debug, Clone)]
+pub struct Variable {
+    pub name: String,
+    pub metadata: Metadata,
+    /// [ncomp, Z, Y, X] data, ghosts included. Empty if unallocated (sparse).
+    pub data: Array4,
+    /// True once storage is allocated (always true for dense variables).
+    pub allocated: bool,
+}
+
+impl Variable {
+    pub fn ncomp(&self) -> usize {
+        self.metadata.ncomp()
+    }
+}

@@ -1,0 +1,162 @@
+//! Variable packs: bundling many variables (and, at the MeshData level,
+//! many blocks) into contiguous staging storage so the device path can
+//! touch them in a single kernel launch (paper Sec. 3.6).
+//!
+//! On the Rust side a pack is (a) a selection of variables resolved to
+//! component planes and (b) gather/scatter into a caller-owned contiguous
+//! buffer laid out `[v, z, y, x]` per block — the exact input layout of the
+//! AOT artifacts. MeshBlockPacks add the leading `b` index by stacking
+//! per-block gathers at fixed strides.
+
+use super::container::MeshBlockData;
+use super::metadata::MetadataFlag;
+use crate::error::{Error, Result};
+use crate::Real;
+
+/// What to pack: resolved variable names, in pack order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackDescriptor {
+    pub var_names: Vec<String>,
+}
+
+impl PackDescriptor {
+    pub fn by_names(names: &[&str]) -> Self {
+        PackDescriptor { var_names: names.iter().map(|s| s.to_string()).collect() }
+    }
+
+    /// Select every allocated variable matching all `flags`.
+    pub fn by_flags(data: &MeshBlockData, flags: &[MetadataFlag]) -> Self {
+        PackDescriptor { var_names: data.names_by_flags(flags) }
+    }
+}
+
+/// A pack bound to one container: flattened (var, comp) list.
+#[derive(Debug, Clone)]
+pub struct VariablePack {
+    entries: Vec<(usize, usize)>, // (var index, component)
+    plane_len: usize,
+}
+
+impl VariablePack {
+    pub fn new(data: &MeshBlockData, desc: &PackDescriptor) -> Result<Self> {
+        let shape = data
+            .shape
+            .ok_or_else(|| Error::Variable("container has no shape".into()))?;
+        let plane_len = shape.ncells_total();
+        let mut entries = Vec::new();
+        for name in &desc.var_names {
+            let idx = data
+                .index_of(name)
+                .ok_or_else(|| Error::Variable(format!("no variable {name:?}")))?;
+            let v = data.var_by_index(idx);
+            if !v.allocated {
+                continue; // sparse & unallocated: skipped, like Parthenon
+            }
+            for c in 0..v.ncomp() {
+                entries.push((idx, c));
+            }
+        }
+        Ok(VariablePack { entries, plane_len })
+    }
+
+    /// Total flattened components (the pack's `v` extent).
+    pub fn ncomp(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Elements required in the staging buffer.
+    pub fn staging_len(&self) -> usize {
+        self.ncomp() * self.plane_len
+    }
+
+    /// Copy pack data into `out` (layout [v, z, y, x]).
+    pub fn gather(&self, data: &MeshBlockData, out: &mut [Real]) {
+        debug_assert_eq!(out.len(), self.staging_len());
+        for (slot, (vi, c)) in self.entries.iter().enumerate() {
+            let src = data.var_by_index(*vi).data.comp(*c);
+            out[slot * self.plane_len..(slot + 1) * self.plane_len].copy_from_slice(src);
+        }
+    }
+
+    /// Copy staging data back into the variables.
+    pub fn scatter(&self, data: &mut MeshBlockData, src: &[Real]) {
+        debug_assert_eq!(src.len(), self.staging_len());
+        for (slot, (vi, c)) in self.entries.iter().enumerate() {
+            let dst = data.var_by_index_mut(*vi).data.comp_mut(*c);
+            dst.copy_from_slice(&src[slot * self.plane_len..(slot + 1) * self.plane_len]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::IndexShape;
+    use crate::vars::package::FieldDef;
+    use crate::vars::Metadata;
+
+    fn container() -> MeshBlockData {
+        let fields = vec![
+            FieldDef {
+                name: "a".into(),
+                metadata: Metadata::new(&[MetadataFlag::Cell]).with_shape(vec![2]),
+            },
+            FieldDef {
+                name: "b".into(),
+                metadata: Metadata::new(&[MetadataFlag::Cell, MetadataFlag::FillGhost]),
+            },
+            FieldDef {
+                name: "s_1".into(),
+                metadata: Metadata::new(&[MetadataFlag::Cell]).with_sparse_id(1),
+            },
+        ];
+        MeshBlockData::from_fields(&fields, IndexShape::new(1, [4, 1, 1]))
+    }
+
+    #[test]
+    fn pack_flattens_components() {
+        let data = container();
+        let pack = VariablePack::new(&data, &PackDescriptor::by_names(&["a", "b"])).unwrap();
+        assert_eq!(pack.ncomp(), 3);
+        assert_eq!(pack.staging_len(), 3 * 8);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut data = container();
+        data.get_mut("a").unwrap().comp_mut(1).fill(5.0);
+        data.get_mut("b").unwrap().fill(-2.0);
+        let pack = VariablePack::new(&data, &PackDescriptor::by_names(&["a", "b"])).unwrap();
+        let mut buf = vec![0.0; pack.staging_len()];
+        pack.gather(&data, &mut buf);
+        assert!(buf[8..16].iter().all(|&x| x == 5.0));
+        assert!(buf[16..24].iter().all(|&x| x == -2.0));
+        for x in buf.iter_mut() {
+            *x += 1.0;
+        }
+        pack.scatter(&mut data, &buf);
+        assert!(data.get("a").unwrap().comp(1).iter().all(|&x| x == 6.0));
+        assert!(data.get("b").unwrap().comp(0).iter().all(|&x| x == -1.0));
+    }
+
+    #[test]
+    fn unallocated_sparse_skipped() {
+        let data = container();
+        let pack =
+            VariablePack::new(&data, &PackDescriptor::by_names(&["b", "s_1"])).unwrap();
+        assert_eq!(pack.ncomp(), 1, "sparse var not allocated -> skipped");
+    }
+
+    #[test]
+    fn by_flags_selection() {
+        let data = container();
+        let desc = PackDescriptor::by_flags(&data, &[MetadataFlag::FillGhost]);
+        assert_eq!(desc.var_names, vec!["b"]);
+    }
+
+    #[test]
+    fn missing_var_is_error() {
+        let data = container();
+        assert!(VariablePack::new(&data, &PackDescriptor::by_names(&["zz"])).is_err());
+    }
+}

@@ -1,0 +1,290 @@
+//! Packages (StateDescriptors): independent components that register
+//! variables, params, and physics hooks (paper Sec. 3.3).
+
+use std::collections::BTreeMap;
+
+use super::container::MeshBlockData;
+use super::metadata::{Metadata, MetadataFlag};
+use crate::error::{Error, Result};
+use crate::mesh::{AmrFlag, Coords};
+
+/// A typed parameter value stored in a package's params.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamValue {
+    Int(i64),
+    Real(f64),
+    Bool(bool),
+    Str(String),
+    VecReal(Vec<f64>),
+    VecInt(Vec<i64>),
+}
+
+/// Per-package constants ("params" in the paper).
+#[derive(Debug, Clone, Default)]
+pub struct Params {
+    map: BTreeMap<String, ParamValue>,
+}
+
+impl Params {
+    pub fn add(&mut self, key: &str, value: ParamValue) {
+        self.map.insert(key.to_string(), value);
+    }
+
+    pub fn get(&self, key: &str) -> Option<&ParamValue> {
+        self.map.get(key)
+    }
+
+    pub fn real(&self, key: &str) -> Result<f64> {
+        match self.map.get(key) {
+            Some(ParamValue::Real(v)) => Ok(*v),
+            Some(ParamValue::Int(v)) => Ok(*v as f64),
+            other => Err(Error::Package(format!("param {key:?}: not a real ({other:?})"))),
+        }
+    }
+
+    pub fn int(&self, key: &str) -> Result<i64> {
+        match self.map.get(key) {
+            Some(ParamValue::Int(v)) => Ok(*v),
+            other => Err(Error::Package(format!("param {key:?}: not an int ({other:?})"))),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> Result<bool> {
+        match self.map.get(key) {
+            Some(ParamValue::Bool(v)) => Ok(*v),
+            other => Err(Error::Package(format!("param {key:?}: not a bool ({other:?})"))),
+        }
+    }
+
+    pub fn str(&self, key: &str) -> Result<&str> {
+        match self.map.get(key) {
+            Some(ParamValue::Str(v)) => Ok(v),
+            other => Err(Error::Package(format!("param {key:?}: not a str ({other:?})"))),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+/// Field registration record.
+#[derive(Debug, Clone)]
+pub struct FieldDef {
+    pub name: String,
+    pub metadata: Metadata,
+}
+
+/// What a package registers: fields, sparse pools, params.
+#[derive(Debug, Clone, Default)]
+pub struct StateDescriptor {
+    pub name: String,
+    pub fields: Vec<FieldDef>,
+    pub params: Params,
+}
+
+impl StateDescriptor {
+    pub fn new(name: &str) -> Self {
+        StateDescriptor { name: name.to_string(), ..Default::default() }
+    }
+
+    /// Register a field. Private fields are namespaced as `pkg::name`.
+    pub fn add_field(&mut self, name: &str, metadata: Metadata) {
+        let name = if metadata.has(MetadataFlag::Private) {
+            format!("{}::{}", self.name, name)
+        } else {
+            name.to_string()
+        };
+        self.fields.push(FieldDef { name, metadata });
+    }
+
+    /// Register a sparse pool: one field per sparse id, named `base_<id>`.
+    pub fn add_sparse_pool(&mut self, base: &str, ids: &[usize], metadata: Metadata) {
+        for &id in ids {
+            let m = metadata.clone().with_sparse_id(id);
+            self.add_field(&format!("{base}_{id}"), m);
+        }
+    }
+}
+
+/// Physics hooks a package may implement; dispatched by drivers.
+/// (The paper's task functions are woven by the application driver; these
+/// are the package-level callbacks Parthenon exposes.)
+pub trait Package: Send + Sync {
+    fn descriptor(&self) -> &StateDescriptor;
+
+    fn name(&self) -> &str {
+        &self.descriptor().name
+    }
+
+    /// Tag this block for (de)refinement.
+    fn check_refinement(&self, _data: &MeshBlockData, _coords: &Coords) -> AmrFlag {
+        AmrFlag::Same
+    }
+
+    /// Package CFL limit for this block (f64::INFINITY if none).
+    fn estimate_dt(&self, _data: &MeshBlockData, _coords: &Coords) -> f64 {
+        f64::INFINITY
+    }
+
+    /// Recompute derived quantities after the state changed.
+    fn fill_derived(&self, _data: &mut MeshBlockData, _coords: &Coords) {}
+}
+
+/// Resolve Provides/Requires/Overridable/Private across packages into the
+/// final field list for containers (paper Sec. 3.3 semantics).
+pub fn resolve_packages(pkgs: &[&StateDescriptor]) -> Result<Vec<FieldDef>> {
+    let mut provided: BTreeMap<String, FieldDef> = BTreeMap::new();
+    let mut overridable: BTreeMap<String, FieldDef> = BTreeMap::new();
+    let mut required: Vec<(String, String)> = Vec::new(); // (pkg, field)
+    let mut out: Vec<FieldDef> = Vec::new();
+
+    for pkg in pkgs {
+        for f in &pkg.fields {
+            match f.metadata.role() {
+                MetadataFlag::Provides => {
+                    if let Some(prev) = provided.get(&f.name) {
+                        let _ = prev;
+                        return Err(Error::Package(format!(
+                            "field {:?} provided by two packages (second: {})",
+                            f.name, pkg.name
+                        )));
+                    }
+                    provided.insert(f.name.clone(), f.clone());
+                }
+                MetadataFlag::Overridable => {
+                    overridable.entry(f.name.clone()).or_insert_with(|| f.clone());
+                }
+                MetadataFlag::Requires => {
+                    required.push((pkg.name.clone(), f.name.clone()));
+                }
+                MetadataFlag::Private => {
+                    if out.iter().any(|g| g.name == f.name) {
+                        return Err(Error::Package(format!(
+                            "duplicate private field {:?}",
+                            f.name
+                        )));
+                    }
+                    out.push(f.clone());
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    // overridables defer to providers
+    for (name, f) in overridable {
+        provided.entry(name).or_insert(f);
+    }
+
+    for (pkg, name) in &required {
+        if !provided.contains_key(name) {
+            return Err(Error::Package(format!(
+                "package {pkg:?} requires field {name:?} but nothing provides it"
+            )));
+        }
+    }
+
+    out.extend(provided.into_values());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell() -> Metadata {
+        Metadata::new(&[MetadataFlag::Cell])
+    }
+
+    #[test]
+    fn provides_conflict_is_error() {
+        let mut a = StateDescriptor::new("a");
+        a.add_field("x", cell());
+        let mut b = StateDescriptor::new("b");
+        b.add_field("x", cell());
+        assert!(resolve_packages(&[&a, &b]).is_err());
+    }
+
+    #[test]
+    fn requires_satisfied_by_provider() {
+        let mut a = StateDescriptor::new("a");
+        a.add_field("x", cell());
+        let mut b = StateDescriptor::new("b");
+        let mut m = cell();
+        m.set(MetadataFlag::Requires);
+        b.add_field("x", m);
+        let fields = resolve_packages(&[&a, &b]).unwrap();
+        assert_eq!(fields.len(), 1);
+    }
+
+    #[test]
+    fn requires_unsatisfied_is_error() {
+        let mut b = StateDescriptor::new("b");
+        let mut m = cell();
+        m.set(MetadataFlag::Requires);
+        b.add_field("ghost", m);
+        assert!(resolve_packages(&[&b]).is_err());
+    }
+
+    #[test]
+    fn overridable_defers_to_provider() {
+        let mut a = StateDescriptor::new("a");
+        let mut m = cell().with_shape(vec![3]);
+        m.set(MetadataFlag::Overridable);
+        a.add_field("x", m);
+        let mut b = StateDescriptor::new("b");
+        b.add_field("x", cell()); // provider, scalar
+        let fields = resolve_packages(&[&a, &b]).unwrap();
+        assert_eq!(fields.len(), 1);
+        assert_eq!(fields[0].metadata.ncomp(), 1, "provider wins");
+    }
+
+    #[test]
+    fn overridable_used_when_no_provider() {
+        let mut a = StateDescriptor::new("a");
+        let mut m = cell();
+        m.set(MetadataFlag::Overridable);
+        a.add_field("x", m);
+        let fields = resolve_packages(&[&a]).unwrap();
+        assert_eq!(fields.len(), 1);
+    }
+
+    #[test]
+    fn private_is_namespaced() {
+        let mut a = StateDescriptor::new("a");
+        let mut m = cell();
+        m.set(MetadataFlag::Private);
+        a.add_field("x", m);
+        assert_eq!(a.fields[0].name, "a::x");
+        let mut b = StateDescriptor::new("b");
+        let mut m2 = cell();
+        m2.set(MetadataFlag::Private);
+        b.add_field("x", m2);
+        let fields = resolve_packages(&[&a, &b]).unwrap();
+        assert_eq!(fields.len(), 2, "same leaf name, different namespaces");
+    }
+
+    #[test]
+    fn sparse_pool_registers_per_id() {
+        let mut a = StateDescriptor::new("mat");
+        a.add_sparse_pool("vf", &[1, 4, 10], cell());
+        assert_eq!(a.fields.len(), 3);
+        assert_eq!(a.fields[1].name, "vf_4");
+        assert_eq!(a.fields[1].metadata.sparse_id, Some(4));
+    }
+
+    #[test]
+    fn params_typed_access() {
+        let mut p = Params::default();
+        p.add("gamma", ParamValue::Real(1.4));
+        p.add("n", ParamValue::Int(3));
+        p.add("on", ParamValue::Bool(true));
+        assert_eq!(p.real("gamma").unwrap(), 1.4);
+        assert_eq!(p.real("n").unwrap(), 3.0);
+        assert_eq!(p.int("n").unwrap(), 3);
+        assert!(p.bool("on").unwrap());
+        assert!(p.int("gamma").is_err());
+        assert!(p.real("missing").is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! Sparse variable pools (paper Sec. 3.4): variables that exist on only
+//! some blocks, allocated on demand and deallocated when they leave a block.
+
+use super::container::MeshBlockData;
+use crate::mesh::IndexShape;
+use crate::Real;
+
+/// Descriptor of a sparse pool: base name + ids (fields are `base_<id>`).
+#[derive(Debug, Clone)]
+pub struct SparsePool {
+    pub base: String,
+    pub ids: Vec<usize>,
+    /// Deallocate when max |interior| falls below this.
+    pub dealloc_threshold: Real,
+    /// Deallocate only after this many consecutive below-threshold cycles.
+    pub dealloc_count: usize,
+}
+
+impl SparsePool {
+    pub fn new(base: &str, ids: &[usize]) -> Self {
+        SparsePool {
+            base: base.to_string(),
+            ids: ids.to_vec(),
+            dealloc_threshold: 1.0e-12,
+            dealloc_count: 1,
+        }
+    }
+
+    pub fn field_name(&self, id: usize) -> String {
+        format!("{}_{id}", self.base)
+    }
+
+    /// Max |value| over the interior of a sparse field (0 if unallocated).
+    pub fn interior_max_abs(
+        &self,
+        data: &MeshBlockData,
+        id: usize,
+        shape: &IndexShape,
+    ) -> Real {
+        let name = self.field_name(id);
+        let Ok(arr) = data.get(&name) else { return 0.0 };
+        let mut m: Real = 0.0;
+        for v in 0..arr.dims()[0] {
+            for k in shape.is_(2)..shape.ie(2) {
+                for j in shape.is_(1)..shape.ie(1) {
+                    for i in shape.is_(0)..shape.ie(0) {
+                        m = m.max(arr.get(v, k, j, i).abs());
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    /// Deallocate ids whose interior is (numerically) empty. Returns the
+    /// list of deallocated field names.
+    pub fn sweep_deallocate(
+        &self,
+        data: &mut MeshBlockData,
+        shape: &IndexShape,
+    ) -> Vec<String> {
+        let mut dropped = Vec::new();
+        for &id in &self.ids {
+            let name = self.field_name(id);
+            if data.get(&name).is_err() {
+                continue;
+            }
+            if self.interior_max_abs(data, id, shape) < self.dealloc_threshold {
+                let _ = data.deallocate_sparse(&name);
+                dropped.push(name);
+            }
+        }
+        dropped
+    }
+
+    /// Ensure a sparse id is allocated on this block (e.g. when advected in).
+    pub fn ensure_allocated(&self, data: &mut MeshBlockData, id: usize) {
+        let _ = data.allocate_sparse(&self.field_name(id));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vars::package::FieldDef;
+    use crate::vars::{Metadata, MetadataFlag};
+
+    fn setup() -> (MeshBlockData, SparsePool, IndexShape) {
+        let pool = SparsePool::new("vf", &[1, 2]);
+        let fields: Vec<FieldDef> = pool
+            .ids
+            .iter()
+            .map(|&id| FieldDef {
+                name: pool.field_name(id),
+                metadata: Metadata::new(&[MetadataFlag::Cell]).with_sparse_id(id),
+            })
+            .collect();
+        let shape = IndexShape::new(2, [4, 4, 1]);
+        (MeshBlockData::from_fields(&fields, shape), pool, shape)
+    }
+
+    #[test]
+    fn allocate_on_demand() {
+        let (mut data, pool, _) = setup();
+        assert!(data.get("vf_1").is_err());
+        pool.ensure_allocated(&mut data, 1);
+        assert!(data.get("vf_1").is_ok());
+        assert!(data.get("vf_2").is_err(), "other id untouched");
+    }
+
+    #[test]
+    fn sweep_deallocates_empty_only() {
+        let (mut data, pool, shape) = setup();
+        pool.ensure_allocated(&mut data, 1);
+        pool.ensure_allocated(&mut data, 2);
+        // put real material into vf_2's interior
+        let g = shape.is_(0);
+        data.get_mut("vf_2").unwrap().set(0, 0, g, g, 0.5);
+        let dropped = pool.sweep_deallocate(&mut data, &shape);
+        assert_eq!(dropped, vec!["vf_1"]);
+        assert!(data.get("vf_2").is_ok());
+    }
+
+    #[test]
+    fn ghost_data_does_not_keep_alive() {
+        let (mut data, pool, shape) = setup();
+        pool.ensure_allocated(&mut data, 1);
+        data.get_mut("vf_1").unwrap().set(0, 0, 0, 0, 9.0); // ghost corner
+        let dropped = pool.sweep_deallocate(&mut data, &shape);
+        assert_eq!(dropped, vec!["vf_1"], "ghost-only data is 'empty'");
+    }
+}

@@ -1,0 +1,122 @@
+//! Adaptive mesh refinement: regrid correctness, conservation through
+//! refinement/derefinement, nesting invariants, load-balance migration.
+
+mod common;
+
+use parthenon::comm::{ReduceOp, World};
+use parthenon::config::ParameterInput;
+use parthenon::driver::{EvolutionDriver, HydroSim};
+use parthenon::hydro::CONS;
+
+fn amr_deck(problem: &str) -> String {
+    let base = common::input_deck(problem, [32, 32, 1], [8, 8, 1], "");
+    base.replace(
+        "<parthenon/time>",
+        "<parthenon/mesh_amr>\nx = 1\n\n<parthenon/time>",
+    ) + "\n"
+}
+
+fn amr_overrides() -> Vec<&'static str> {
+    vec![
+        "parthenon/mesh/refinement=adaptive",
+        "parthenon/mesh/numlevel=2",
+        "parthenon/mesh/check_refine_interval=3",
+        "hydro/refine_criterion=pressure_gradient",
+        "hydro/refine_tol=0.25",
+        "hydro/derefine_tol=0.03",
+    ]
+}
+
+#[test]
+fn amr_run_refines_and_conserves() {
+    World::launch(2, |rank, world| {
+        let mut pin = ParameterInput::from_str(&amr_deck("blast")).unwrap();
+        for ov in amr_overrides() {
+            pin.apply_override(ov).unwrap();
+        }
+        let mut sim = HydroSim::new(pin, rank, world.clone()).unwrap();
+        let comm = world.comm(rank, 0);
+        let before = comm.allreduce_vec(&sim.history_sums(), ReduceOp::Sum);
+        let initial_blocks = sim.mesh.tree.nblocks();
+        let mut max_blocks = initial_blocks;
+        for _ in 0..30 {
+            sim.step().unwrap();
+            max_blocks = max_blocks.max(sim.mesh.tree.nblocks());
+            assert!(sim.mesh.tree.is_properly_nested());
+            assert!(sim.mesh.tree.check_coverage().is_ok());
+        }
+        let after = comm.allreduce_vec(&sim.history_sums(), ReduceOp::Sum);
+        assert!(
+            max_blocks > initial_blocks,
+            "blast must trigger refinement ({initial_blocks} -> {max_blocks})"
+        );
+        for idx in [0usize, 3usize] {
+            let rel = ((after[idx] - before[idx]) / before[idx]).abs();
+            assert!(
+                rel < 1e-4,
+                "quantity {idx} drifted {rel:.2e} under AMR"
+            );
+        }
+        // every local block has data consistent with its gid
+        for b in &sim.mesh.blocks {
+            assert_eq!(sim.mesh.ranks[b.gid], rank);
+        }
+    });
+}
+
+#[test]
+fn regrid_balances_blocks_across_ranks() {
+    World::launch(4, |rank, world| {
+        let mut pin = ParameterInput::from_str(&amr_deck("blast")).unwrap();
+        for ov in amr_overrides() {
+            pin.apply_override(ov).unwrap();
+        }
+        let mut sim = HydroSim::new(pin, rank, world.clone()).unwrap();
+        for _ in 0..12 {
+            sim.step().unwrap();
+        }
+        let comm = world.comm(rank, 0);
+        let nblocks = sim.mesh.tree.nblocks() as f64;
+        let local = sim.mesh.num_local_blocks() as f64;
+        let max = comm.allreduce(local, ReduceOp::Max);
+        let min = comm.allreduce(local, ReduceOp::Min);
+        assert!(
+            max - min <= (nblocks / 4.0).ceil(),
+            "load imbalance: min {min} max {max} of {nblocks}"
+        );
+        // all ranks agree on the tree
+        let leaves = sim.mesh.tree.nblocks() as f64;
+        let same = comm.allreduce(leaves, ReduceOp::Max);
+        assert_eq!(same, leaves);
+    });
+}
+
+#[test]
+fn refine_then_derefine_restores_smooth_state() {
+    // a smooth state should not stay refined: run blast until the wave
+    // leaves a region, ensure derefinement happens at some point
+    let mut pin = ParameterInput::from_str(&amr_deck("blast")).unwrap();
+    for ov in amr_overrides() {
+        pin.apply_override(ov).unwrap();
+    }
+    pin.apply_override("problem/p_in=2.0").unwrap(); // weak blast decays
+    let world = World::new(1);
+    let mut sim = HydroSim::new(pin, 0, world).unwrap();
+    let mut counts = Vec::new();
+    for _ in 0..40 {
+        sim.step().unwrap();
+        counts.push(sim.mesh.tree.nblocks());
+    }
+    let peak = *counts.iter().max().unwrap();
+    assert!(peak >= counts[0], "refinement expected");
+    // interior state stays positive through all the regrids
+    let shape = sim.mesh.cfg.index_shape();
+    for b in &sim.mesh.blocks {
+        let arr = b.data.get(CONS).unwrap();
+        for j in shape.is_(1)..shape.ie(1) {
+            for i in shape.is_(0)..shape.ie(0) {
+                assert!(arr.as_slice()[shape.idx3(0, j, i)] > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Shared helpers for integration tests.
+
+use parthenon::comm::World;
+use parthenon::config::ParameterInput;
+use parthenon::driver::HydroSim;
+use parthenon::hydro::CONS;
+
+/// Build an input deck string.
+pub fn input_deck(problem: &str, nx: [usize; 3], bx: [usize; 3], extra: &str) -> String {
+    let mut s = format!(
+        "<parthenon/job>\nproblem = {problem}\nquiet = true\n\n\
+         <parthenon/mesh>\nnx1 = {}\nnx2 = {}\nnx3 = {}\n\n\
+         <parthenon/meshblock>\nnx1 = {}\nnx2 = {}\nnx3 = {}\n\n\
+         <parthenon/time>\ntlim = 100.0\nnlim = -1\n\n\
+         <hydro>\ngamma = 1.4\ncfl = 0.3\n",
+        nx[0], nx[1], nx[2], bx[0], bx[1], bx[2]
+    );
+    s.push_str(extra);
+    s
+}
+
+/// Build a single-rank sim from a deck.
+pub fn single_rank_sim(deck: &str, overrides: &[&str]) -> HydroSim {
+    let world = World::new(1);
+    let mut pin = ParameterInput::from_str(deck).unwrap();
+    for ov in overrides {
+        pin.apply_override(ov).unwrap();
+    }
+    HydroSim::new(pin, 0, world).unwrap()
+}
+
+/// Gather every local block's CONS data (gid -> INTERIOR data).
+///
+/// Interior only: the Device path leaves staging-ghost cells stale between
+/// stages (they are overwritten by the next fused unpack), so ghost values
+/// are not comparable across execution spaces.
+pub fn cons_by_gid(sim: &HydroSim) -> Vec<(usize, Vec<f32>)> {
+    let shape = sim.mesh.cfg.index_shape();
+    let n = shape.ncells_total();
+    sim.mesh
+        .blocks
+        .iter()
+        .map(|b| {
+            let arr = b.data.get(CONS).unwrap();
+            let s = arr.as_slice();
+            let mut out = Vec::with_capacity(5 * shape.ncells_interior());
+            for v in 0..5 {
+                for k in shape.is_(2)..shape.ie(2) {
+                    for j in shape.is_(1)..shape.ie(1) {
+                        for i in shape.is_(0)..shape.ie(0) {
+                            out.push(s[v * n + shape.idx3(k, j, i)]);
+                        }
+                    }
+                }
+            }
+            (b.gid, out)
+        })
+        .collect()
+}
+
+/// Max |a-b| over matching gids.
+pub fn max_state_diff(a: &[(usize, Vec<f32>)], b: &[(usize, Vec<f32>)]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut m = 0.0f32;
+    for ((ga, va), (gb, vb)) in a.iter().zip(b.iter()) {
+        assert_eq!(ga, gb);
+        for (x, y) in va.iter().zip(vb.iter()) {
+            m = m.max((x - y).abs());
+        }
+    }
+    m
+}
+
+pub fn artifacts_available() -> bool {
+    parthenon::runtime::default_artifact_dir().join("manifest.json").exists()
+}

@@ -1,0 +1,92 @@
+//! Linear-wave convergence: the RK2 + PLM + HLLE scheme must converge at
+//! close to second order on a smooth acoustic wave (the paper's/ATHENA++'s
+//! canonical correctness test, Sec. 4.1).
+
+mod common;
+
+use parthenon::driver::EvolutionDriver;
+use parthenon::hydro::problems::linear_wave_exact;
+use parthenon::hydro::CONS;
+
+/// L1 density error against the exact (linearized) translated wave after
+/// time t, on a 1D mesh of nx cells.
+fn l1_error(nx: usize, t_end: f64) -> f64 {
+    let deck = common::input_deck("linear_wave", [nx, 1, 1], [nx / 2, 1, 1], "");
+    let mut sim = common::single_rank_sim(
+        &deck,
+        &["hydro/cfl=0.3", "hydro/gamma=1.4"],
+    );
+    while sim.time < t_end {
+        if sim.time + sim.dt > t_end {
+            sim.dt = t_end - sim.time;
+        }
+        sim.step().unwrap();
+    }
+    let gamma = 1.4f32;
+    let p0 = 1.0 / 1.4f32;
+    let shape = sim.mesh.cfg.index_shape();
+    let mut err = 0.0f64;
+    let mut cells = 0usize;
+    for b in &sim.mesh.blocks {
+        let arr = b.data.get(CONS).unwrap();
+        for i in shape.is_(0)..shape.ie(0) {
+            let x = b.coords.center(0, i);
+            let exact = linear_wave_exact(x, t_end, gamma, 1e-3, 1.0, p0, 1.0);
+            let got = arr.as_slice()[shape.idx3(0, 0, i)];
+            err += (got - exact[0]).abs() as f64;
+            cells += 1;
+        }
+    }
+    err / cells as f64
+}
+
+#[test]
+fn linear_wave_converges_near_second_order() {
+    // One wave period: cs = sqrt(gamma * p0 / rho0) = 1 -> t = wavelength.
+    //
+    // NOTE: the hot path is f32 (matching the AOT artifact dtype), so the
+    // comparison against the *linearized* exact solution hits a floor of
+    // O(amplitude^2) + f32 roundoff accumulation around ~2e-6; with the
+    // HLLE solver the asymptotic order on coarse grids is between 1.5 and
+    // 2.  We assert a decreasing error sequence with order > 1.3 across
+    // 16 -> 32 -> 64 (the regime above the floor); examples/linear_wave.rs
+    // prints the full table.
+    let t = 1.0;
+    let e16 = l1_error(16, t);
+    let e32 = l1_error(32, t);
+    let e64 = l1_error(64, t);
+    let order_lo = (e16 / e32).log2();
+    let order_hi = (e32 / e64).log2();
+    eprintln!("L1 errors: {e16:.3e} {e32:.3e} {e64:.3e}; orders {order_lo:.2} {order_hi:.2}");
+    assert!(e32 < e16 && e64 < e32, "errors must decrease");
+    assert!(
+        order_lo > 1.3 && order_hi > 1.3,
+        "convergence order too low: {order_lo:.2}, {order_hi:.2}"
+    );
+}
+
+#[test]
+fn wave_amplitude_is_preserved() {
+    // after one period the wave must not have decayed catastrophically
+    let deck = common::input_deck("linear_wave", [64, 1, 1], [64, 1, 1], "");
+    let mut sim = common::single_rank_sim(&deck, &[]);
+    let t_end = 1.0;
+    while sim.time < t_end {
+        if sim.time + sim.dt > t_end {
+            sim.dt = t_end - sim.time;
+        }
+        sim.step().unwrap();
+    }
+    let shape = sim.mesh.cfg.index_shape();
+    let mut max_drho = 0.0f32;
+    for b in &sim.mesh.blocks {
+        let arr = b.data.get(CONS).unwrap();
+        for i in shape.is_(0)..shape.ie(0) {
+            max_drho = max_drho.max((arr.as_slice()[shape.idx3(0, 0, i)] - 1.0).abs());
+        }
+    }
+    assert!(
+        max_drho > 0.5e-3,
+        "wave decayed too much: amplitude {max_drho:.2e} of 1e-3"
+    );
+}

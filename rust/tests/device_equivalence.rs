@@ -1,0 +1,173 @@
+//! Host (native Rust) vs Device (PJRT artifacts) equivalence: the same
+//! problem advanced N cycles on both execution spaces must agree to f32
+//! tolerance — the cross-layer correctness pin of the whole stack.
+
+mod common;
+
+use parthenon::driver::EvolutionDriver;
+
+fn run_n(deck: &str, overrides: &[&str], ncycles: usize) -> (Vec<(usize, Vec<f32>)>, f64) {
+    let mut sim = common::single_rank_sim(deck, overrides);
+    for _ in 0..ncycles {
+        sim.step().unwrap();
+    }
+    if let Some(dev) = sim.device.take() {
+        dev.sync_to_blocks(&mut sim.mesh).unwrap();
+    }
+    (common::cons_by_gid(&sim), sim.time)
+}
+
+#[test]
+fn host_vs_device_perpack_2d() {
+    if !common::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // smooth problem: truncation-level agreement holds over many cycles
+    let deck = common::input_deck("kh", [64, 64, 1], [32, 32, 1], "");
+    let (host, th) = run_n(&deck, &[], 8);
+    let (dev, td) = run_n(
+        &deck,
+        &["parthenon/exec/space=device", "parthenon/exec/strategy=perpack"],
+        8,
+    );
+    assert!((th - td).abs() < 1e-6 * th.abs().max(1.0), "time {th} vs {td}");
+    let diff = common::max_state_diff(&host, &dev);
+    assert!(diff < 1e-3, "host vs device diff {diff}");
+
+    // shock problem: nonlinear limiter switching amplifies f32 noise, so
+    // compare after a short horizon only
+    let deck_b = common::input_deck("blast", [64, 64, 1], [32, 32, 1], "");
+    let (host_b, _) = run_n(&deck_b, &[], 2);
+    let (dev_b, _) = run_n(
+        &deck_b,
+        &["parthenon/exec/space=device", "parthenon/exec/strategy=perpack"],
+        2,
+    );
+    // At the initial pressure discontinuity the MC limiter's branch is
+    // bit-fragile (product test at exactly zero), so pointwise agreement is
+    // O(1) on the jump ring; assert instead that the disagreement is
+    // *localized* (small L1) and that the conserved integrals match.
+    let (l1, nbig) = l1_and_count(&host_b, &dev_b, 1e-3);
+    assert!(l1 < 5e-4, "blast L1/N diff {l1}");
+    assert!(nbig < 600, "blast: too many differing cells: {nbig}");
+    let (sh, sd) = (global_sums(&host_b), global_sums(&dev_b));
+    for v in 0..5 {
+        let rel = ((sh[v] - sd[v]) / sh[v].abs().max(1.0)).abs();
+        assert!(rel < 1e-5, "conserved sum {v} drifted {rel:.2e}");
+    }
+}
+
+#[test]
+fn strategies_agree_with_each_other_3d() {
+    if !common::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let deck = common::input_deck("blast", [16, 16, 16], [8, 8, 8], "");
+    let (perpack, _) = run_n(
+        &deck,
+        &["parthenon/exec/space=device", "parthenon/exec/strategy=perpack"],
+        3,
+    );
+    let (perblock, _) = run_n(
+        &deck,
+        &["parthenon/exec/space=device", "parthenon/exec/strategy=perblock"],
+        3,
+    );
+    let (perbuffer, _) = run_n(
+        &deck,
+        &["parthenon/exec/space=device", "parthenon/exec/strategy=perbuffer"],
+        3,
+    );
+    let d1 = common::max_state_diff(&perpack, &perblock);
+    let d2 = common::max_state_diff(&perblock, &perbuffer);
+    assert!(d1 < 1e-5, "perpack vs perblock {d1}");
+    assert!(d2 < 1e-5, "perblock vs perbuffer {d2}");
+}
+
+#[test]
+fn host_vs_device_3d_multirank() {
+    if !common::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use parthenon::comm::World;
+    use parthenon::config::ParameterInput;
+    use parthenon::driver::HydroSim;
+    use std::sync::{Arc, Mutex};
+
+    let deck = common::input_deck("blast", [16, 16, 16], [8, 8, 8], "");
+    let run = |overrides: Vec<String>| -> Vec<(usize, Vec<f32>)> {
+        let out: Arc<Mutex<Vec<(usize, Vec<f32>)>>> = Arc::new(Mutex::new(Vec::new()));
+        let o2 = out.clone();
+        let deck = deck.clone();
+        World::launch(2, move |rank, world| {
+            let mut pin = ParameterInput::from_str(&deck).unwrap();
+            for ov in &overrides {
+                pin.apply_override(ov).unwrap();
+            }
+            let mut sim = HydroSim::new(pin, rank, world).unwrap();
+            for _ in 0..4 {
+                sim.step().unwrap();
+            }
+            if let Some(dev) = sim.device.take() {
+                dev.sync_to_blocks(&mut sim.mesh).unwrap();
+            }
+            let mut blocks = common::cons_by_gid(&sim);
+            o2.lock().unwrap().append(&mut blocks);
+        });
+        let mut v = Arc::try_unwrap(out).unwrap().into_inner().unwrap();
+        v.sort_by_key(|(gid, _)| *gid);
+        v
+    };
+    let host = run(vec![]);
+    let dev = run(vec![
+        "parthenon/exec/space=device".into(),
+        "parthenon/exec/strategy=perpack".into(),
+        "parthenon/exec/pack_size=4".into(),
+    ]);
+    // 3D blast: shock-adjacent limiter switching makes pointwise compares
+    // meaningless; assert localized L1 + matching conserved integrals
+    let (l1, _) = l1_and_count(&host, &dev, 1e-3);
+    assert!(l1 < 1e-3, "3D blast L1/N diff {l1}");
+    let (sh, sd) = (global_sums(&host), global_sums(&dev));
+    for v in 0..5 {
+        let rel = ((sh[v] - sd[v]) / sh[v].abs().max(1.0)).abs();
+        assert!(rel < 1e-5, "conserved sum {v} drifted {rel:.2e}");
+    }
+}
+
+
+/// (mean |a-b|, count of cells with |a-b| > thresh).
+fn l1_and_count(a: &[(usize, Vec<f32>)], b: &[(usize, Vec<f32>)], thresh: f32) -> (f64, usize) {
+    let mut l1 = 0.0f64;
+    let mut n = 0usize;
+    let mut big = 0usize;
+    for ((_, va), (_, vb)) in a.iter().zip(b.iter()) {
+        for (x, y) in va.iter().zip(vb.iter()) {
+            let d = (x - y).abs();
+            l1 += d as f64;
+            n += 1;
+            if d > thresh {
+                big += 1;
+            }
+        }
+    }
+    (l1 / n as f64, big)
+}
+
+/// Per-variable global sums (over the WHOLE ghosted arrays — fine for a
+/// relative comparison).
+fn global_sums(a: &[(usize, Vec<f32>)]) -> [f64; 5] {
+    let mut out = [0.0f64; 5];
+    for (_, v) in a {
+        let n = v.len() / 5;
+        for c in 0..5 {
+            for x in &v[c * n..(c + 1) * n] {
+                out[c] += *x as f64;
+            }
+        }
+    }
+    out
+}

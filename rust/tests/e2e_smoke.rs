@@ -1,0 +1,66 @@
+//! End-to-end smoke: multi-rank Device (PJRT) run and Host AMR run of the
+//! Kelvin-Helmholtz problem complete, conserve, and report throughput.
+
+mod common;
+
+use parthenon::comm::{ReduceOp, World};
+use parthenon::config::ParameterInput;
+use parthenon::driver::{EvolutionDriver, HydroSim};
+
+#[test]
+fn device_multirank_kh() {
+    if !common::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let deck = common::input_deck("kh", [64, 64, 1], [32, 32, 1], "");
+    World::launch(2, move |rank, world| {
+        let mut pin = ParameterInput::from_str(&deck).unwrap();
+        pin.apply_override("parthenon/exec/space=device").unwrap();
+        pin.apply_override("parthenon/exec/strategy=perpack").unwrap();
+        let mut sim = HydroSim::new(pin, rank, world.clone()).unwrap();
+        let coll = world.comm(rank, 0);
+        let before = coll.allreduce_vec(&sim.history_sums(), ReduceOp::Sum);
+        for _ in 0..10 {
+            sim.step().unwrap();
+        }
+        if let Some(dev) = sim.device.take() {
+            dev.sync_to_blocks(&mut sim.mesh).unwrap();
+            sim.device = Some(dev);
+        }
+        let after = coll.allreduce_vec(&sim.history_sums(), ReduceOp::Sum);
+        let rel = ((after[0] - before[0]) / before[0]).abs();
+        assert!(rel < 1e-5, "device KH mass drift {rel:.2e}");
+        assert!(sim.zc.zcps() > 0.0);
+        let launches = sim.device.as_ref().unwrap().rt.launches;
+        assert!(launches > 0, "device path must actually launch");
+    });
+}
+
+#[test]
+fn host_amr_kh() {
+    let deck = common::input_deck("kh", [64, 64, 1], [16, 16, 1], "");
+    World::launch(2, move |rank, world| {
+        let mut pin = ParameterInput::from_str(&deck).unwrap();
+        for ov in [
+            "parthenon/mesh/refinement=adaptive",
+            "parthenon/mesh/numlevel=2",
+            "parthenon/mesh/check_refine_interval=4",
+            "hydro/refine_criterion=density_gradient",
+            "hydro/refine_tol=0.04",
+            "hydro/derefine_tol=0.01",
+        ] {
+            pin.apply_override(ov).unwrap();
+        }
+        let mut sim = HydroSim::new(pin, rank, world.clone()).unwrap();
+        let coll = world.comm(rank, 0);
+        let before = coll.allreduce_vec(&sim.history_sums(), ReduceOp::Sum);
+        for _ in 0..24 {
+            sim.step().unwrap();
+        }
+        let after = coll.allreduce_vec(&sim.history_sums(), ReduceOp::Sum);
+        let rel = ((after[0] - before[0]) / before[0]).abs();
+        assert!(rel < 1e-4, "host AMR KH mass drift {rel:.2e}");
+        assert!(sim.mesh.tree.is_properly_nested());
+    });
+}

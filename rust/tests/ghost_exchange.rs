@@ -1,0 +1,157 @@
+//! Ghost-zone exchange exactness on uniform meshes: after one exchange,
+//! every ghost cell must equal the (periodically wrapped) global field —
+//! across blocks, ranks, faces, edges and corners.
+
+mod common;
+
+use parthenon::bvals;
+use parthenon::comm::{tags, World};
+use parthenon::config::ParameterInput;
+use parthenon::driver::HydroSim;
+use parthenon::hydro::CONS;
+use parthenon::NGHOST;
+
+/// Deterministic global-cell fingerprint.
+fn field(v: usize, gx: i64, gy: i64, gz: i64) -> f32 {
+    ((v as i64 * 1_000_003 + gx * 37 + gy * 101 + gz * 733) % 100_000) as f32
+}
+
+fn run_case(dim: usize, nranks: usize) {
+    let (nx, bx) = match dim {
+        1 => ([32, 1, 1], [8, 1, 1]),
+        2 => ([16, 16, 1], [8, 8, 1]),
+        _ => ([16, 16, 16], [8, 8, 8]),
+    };
+    let deck = common::input_deck("uniform", nx, bx, "");
+    World::launch(nranks, move |rank, world| {
+        let pin = ParameterInput::from_str(&deck).unwrap();
+        let mut sim = HydroSim::new(pin, rank, world.clone()).unwrap();
+        let shape = sim.mesh.cfg.index_shape();
+        let n = shape.ncells_total();
+
+        // paint interiors with the global fingerprint
+        for b in &mut sim.mesh.blocks {
+            let loc = b.loc;
+            let arr = b.data.get_mut(CONS).unwrap();
+            for v in 0..5 {
+                for k in shape.is_(2)..shape.ie(2) {
+                    for j in shape.is_(1)..shape.ie(1) {
+                        for i in shape.is_(0)..shape.ie(0) {
+                            let gx = loc.lx[0] * shape.n[0] as i64 + (i - shape.is_(0)) as i64;
+                            let gy = loc.lx[1] * shape.n[1] as i64 + (j - shape.is_(1)) as i64;
+                            let gz = loc.lx[2] * shape.n[2] as i64 + (k - shape.is_(2)) as i64;
+                            arr.as_mut_slice()[v * n + shape.idx3(k, j, i)] =
+                                field(v, gx, gy, gz);
+                        }
+                    }
+                }
+            }
+        }
+
+        let comm = world.comm(rank, tags::COMM_BVALS_BASE);
+        bvals::exchange_blocking(&mut sim.mesh, &comm, CONS, None).unwrap();
+
+        // every cell (ghosts included) must match the wrapped global field
+        let tot = [
+            (nx[0]) as i64,
+            (nx[1]) as i64,
+            (nx[2]) as i64,
+        ];
+        for b in &sim.mesh.blocks {
+            let loc = b.loc;
+            let arr = b.data.get(CONS).unwrap();
+            for v in 0..5 {
+                for k in 0..shape.nt(2) {
+                    for j in 0..shape.nt(1) {
+                        for i in 0..shape.nt(0) {
+                            let gx = (loc.lx[0] * shape.n[0] as i64 + i as i64
+                                - if dim >= 1 { NGHOST as i64 } else { 0 })
+                                .rem_euclid(tot[0]);
+                            let gy = (loc.lx[1] * shape.n[1] as i64 + j as i64
+                                - if dim >= 2 { NGHOST as i64 } else { 0 })
+                                .rem_euclid(tot[1]);
+                            let gz = (loc.lx[2] * shape.n[2] as i64 + k as i64
+                                - if dim >= 3 { NGHOST as i64 } else { 0 })
+                                .rem_euclid(tot[2]);
+                            let expect = field(v, gx, gy, gz);
+                            let got = arr.as_slice()[v * n + shape.idx3(k, j, i)];
+                            assert_eq!(
+                                got, expect,
+                                "rank {rank} gid {} v{v} ({k},{j},{i})",
+                                b.gid
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn exchange_1d_1rank() {
+    run_case(1, 1);
+}
+
+#[test]
+fn exchange_2d_1rank() {
+    run_case(2, 1);
+}
+
+#[test]
+fn exchange_2d_3ranks() {
+    run_case(2, 3);
+}
+
+#[test]
+fn exchange_3d_2ranks() {
+    run_case(3, 2);
+}
+
+#[test]
+fn exchange_3d_4ranks() {
+    run_case(3, 4);
+}
+
+#[test]
+fn outflow_bc_fills_ghosts() {
+    // non-periodic x: ghosts replicate the edge interior value
+    let deck = common::input_deck(
+        "uniform",
+        [16, 16, 1],
+        [8, 8, 1],
+        "\n<parthenon/mesh_bc_patch>\nx = 1\n",
+    );
+    let world = World::new(1);
+    let mut pin = ParameterInput::from_str(&deck).unwrap();
+    pin.set("parthenon/mesh", "ix1_bc", "outflow");
+    pin.set("parthenon/mesh", "ox1_bc", "outflow");
+    let mut sim = HydroSim::new(pin, 0, world.clone()).unwrap();
+    let shape = sim.mesh.cfg.index_shape();
+    let n = shape.ncells_total();
+
+    for b in &mut sim.mesh.blocks {
+        let arr = b.data.get_mut(CONS).unwrap();
+        for j in shape.is_(1)..shape.ie(1) {
+            for i in shape.is_(0)..shape.ie(0) {
+                arr.as_mut_slice()[shape.idx3(0, j, i)] = (10 + i) as f32;
+            }
+        }
+    }
+    let comm = world.comm(0, tags::COMM_BVALS_BASE);
+    bvals::exchange_blocking(&mut sim.mesh, &comm, CONS, None).unwrap();
+
+    for b in &sim.mesh.blocks {
+        if b.loc.lx[0] != 0 {
+            continue;
+        }
+        let arr = b.data.get(CONS).unwrap();
+        for j in shape.is_(1)..shape.ie(1) {
+            // x-lo ghosts replicate first interior value (outflow)
+            let edge = arr.as_slice()[n * 0 + shape.idx3(0, j, shape.is_(0))];
+            for i in 0..NGHOST {
+                assert_eq!(arr.as_slice()[shape.idx3(0, j, i)], edge);
+            }
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Particle swarms: cross-block and cross-rank transport, periodic wrap,
+//! count conservation, defrag under churn.
+
+mod common;
+
+use parthenon::comm::{tags, ReduceOp, World};
+use parthenon::config::ParameterInput;
+use parthenon::driver::HydroSim;
+use parthenon::particles::{transport_until_done, Swarm, SwarmField};
+
+fn deck() -> String {
+    common::input_deck("uniform", [16, 16, 1], [8, 8, 1], "")
+}
+
+fn seed_swarm(sim: &mut HydroSim, per_block: usize) {
+    for b in &mut sim.mesh.blocks {
+        let mut sw = Swarm::new("tracers", &[SwarmField::Int("id".into())]);
+        let idx = sw.add_particles(per_block);
+        let gid = b.gid;
+        for (n, &i) in idx.iter().enumerate() {
+            let fx = 0.1 + 0.8 * (n as f32 / per_block.max(1) as f32);
+            sw.real_field_mut("x").unwrap()[i] =
+                (b.coords.xmin[0] + fx as f64 * (b.coords.xmax(0) - b.coords.xmin[0])) as f32;
+            sw.real_field_mut("y").unwrap()[i] =
+                (b.coords.xmin[1] + 0.5 * (b.coords.xmax(1) - b.coords.xmin[1])) as f32;
+            sw.int_field_mut("id").unwrap()[i] = (gid * 1000 + n) as i64;
+        }
+        b.swarms.insert("tracers".into(), sw);
+    }
+}
+
+fn total_particles(sim: &HydroSim) -> usize {
+    sim.mesh
+        .blocks
+        .iter()
+        .map(|b| b.swarms.get("tracers").map(|s| s.num_active()).unwrap_or(0))
+        .sum()
+}
+
+#[test]
+fn transport_conserves_particles_across_ranks() {
+    World::launch(4, |rank, world| {
+        let pin = ParameterInput::from_str(&deck()).unwrap();
+        let mut sim = HydroSim::new(pin, rank, world.clone()).unwrap();
+        seed_swarm(&mut sim, 20);
+        let comm = world.comm(rank, tags::COMM_PARTICLES_BASE);
+        let coll = world.comm(rank, 0);
+        let before = coll.allreduce(total_particles(&sim) as f64, ReduceOp::Sum);
+
+        // push every particle +0.6 block widths in x (crosses boundaries),
+        // repeat a few times around the periodic domain
+        for _ in 0..6 {
+            for b in &mut sim.mesh.blocks {
+                if let Some(sw) = b.swarms.get_mut("tracers") {
+                    for i in sw.active_indices() {
+                        sw.real_field_mut("x").unwrap()[i] += 0.3;
+                        sw.real_field_mut("y").unwrap()[i] += 0.17;
+                    }
+                }
+            }
+            transport_until_done(&mut sim.mesh, &comm, "tracers", 10).unwrap();
+            // every particle must now be inside its block
+            for b in &sim.mesh.blocks {
+                let sw = b.swarms.get("tracers").unwrap();
+                for i in sw.active_indices() {
+                    let x = sw.real_field("x").unwrap()[i] as f64;
+                    let y = sw.real_field("y").unwrap()[i] as f64;
+                    assert!(
+                        x >= b.coords.xmin[0] && x < b.coords.xmax(0),
+                        "x {x} outside block [{}, {})",
+                        b.coords.xmin[0],
+                        b.coords.xmax(0)
+                    );
+                    assert!(y >= b.coords.xmin[1] && y < b.coords.xmax(1));
+                }
+            }
+        }
+        let after = coll.allreduce(total_particles(&sim) as f64, ReduceOp::Sum);
+        assert_eq!(before, after, "particles lost or duplicated");
+    });
+}
+
+#[test]
+fn particle_ids_survive_migration_intact() {
+    World::launch(2, |rank, world| {
+        let pin = ParameterInput::from_str(&deck()).unwrap();
+        let mut sim = HydroSim::new(pin, rank, world.clone()).unwrap();
+        seed_swarm(&mut sim, 8);
+        let comm = world.comm(rank, tags::COMM_PARTICLES_BASE);
+        let coll = world.comm(rank, 0);
+
+        // checksum of ids before
+        let sum_ids = |sim: &HydroSim| -> f64 {
+            sim.mesh
+                .blocks
+                .iter()
+                .flat_map(|b| {
+                    let sw = b.swarms.get("tracers").unwrap();
+                    sw.active_indices()
+                        .into_iter()
+                        .map(|i| sw.int_field("id").unwrap()[i] as f64)
+                        .collect::<Vec<_>>()
+                })
+                .sum()
+        };
+        let before = coll.allreduce(sum_ids(&sim), ReduceOp::Sum);
+        for b in &mut sim.mesh.blocks {
+            let sw = b.swarms.get_mut("tracers").unwrap();
+            for i in sw.active_indices() {
+                sw.real_field_mut("x").unwrap()[i] -= 0.55;
+            }
+        }
+        transport_until_done(&mut sim.mesh, &comm, "tracers", 10).unwrap();
+        let after = coll.allreduce(sum_ids(&sim), ReduceOp::Sum);
+        assert_eq!(before, after, "payload corrupted in flight");
+    });
+}
+
+#[test]
+fn outflow_boundary_absorbs_particles() {
+    let world = World::new(1);
+    let mut pin = ParameterInput::from_str(&deck()).unwrap();
+    pin.set("parthenon/mesh", "ix1_bc", "outflow");
+    pin.set("parthenon/mesh", "ox1_bc", "outflow");
+    let mut sim = HydroSim::new(pin, 0, world.clone()).unwrap();
+    seed_swarm(&mut sim, 10);
+    let comm = world.comm(0, tags::COMM_PARTICLES_BASE);
+    let before = total_particles(&sim);
+    // push everything out through +x
+    for _ in 0..8 {
+        for b in &mut sim.mesh.blocks {
+            if let Some(sw) = b.swarms.get_mut("tracers") {
+                for i in sw.active_indices() {
+                    sw.real_field_mut("x").unwrap()[i] += 0.4;
+                }
+            }
+        }
+        transport_until_done(&mut sim.mesh, &comm, "tracers", 10).unwrap();
+    }
+    let after = total_particles(&sim);
+    assert!(after < before, "outflow must absorb ({before} -> {after})");
+    assert_eq!(after, 0, "everything should eventually leave");
+}

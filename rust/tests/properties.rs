@@ -1,0 +1,133 @@
+//! Cross-module property tests (xorshift-driven; see util::testutil).
+
+mod common;
+
+use std::collections::HashMap;
+
+use parthenon::balance;
+use parthenon::mesh::{AmrFlag, BlockTree};
+use parthenon::util::rng::XorShift;
+use parthenon::util::testutil::check;
+
+#[test]
+fn random_regrid_sequences_keep_invariants() {
+    check("regrid invariants", 20, |rng: &mut XorShift| {
+        let dim = 2 + rng.below(2); // 2 or 3
+        let nrb = [1 + rng.below(3) as i64, 1 + rng.below(3) as i64, if dim == 3 { 1 + rng.below(2) as i64 } else { 1 }];
+        let mut tree = BlockTree::uniform(nrb, dim, [true; 3]);
+        let max_level = 3;
+        for _ in 0..4 {
+            let mut flags = HashMap::new();
+            for l in tree.leaves() {
+                let r = rng.next_f64();
+                let flag = if r < 0.25 {
+                    AmrFlag::Refine
+                } else if r < 0.5 {
+                    AmrFlag::Derefine
+                } else {
+                    AmrFlag::Same
+                };
+                flags.insert(*l, flag);
+            }
+            tree = tree.regrid(&flags, max_level);
+            assert!(tree.is_properly_nested(), "nesting violated");
+            tree.check_coverage().expect("coverage violated");
+            assert!(tree.max_level() <= max_level);
+            // neighbor symmetry: if A sees B same-level, B sees A
+            for l in tree.leaves() {
+                for nb in tree.find_neighbors(l) {
+                    if let parthenon::mesh::NeighborKind::SameLevel(m) = nb.kind {
+                        let back = tree.find_neighbors(&m);
+                        let found = back.iter().any(|b| {
+                            matches!(&b.kind,
+                                parthenon::mesh::NeighborKind::SameLevel(x) if x == l)
+                        });
+                        assert!(found, "neighbor symmetry broken: {l:?} <-> {m:?}");
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn balancer_partitions_are_contiguous_and_complete() {
+    check("balance", 50, |rng: &mut XorShift| {
+        let n = 1 + rng.below(300);
+        let r = 1 + rng.below(12);
+        let costs: Vec<f64> = (0..n).map(|_| 0.25 + 2.0 * rng.next_f64()).collect();
+        let a = balance::assign_blocks(&costs, r);
+        assert_eq!(a.len(), n);
+        for w in a.windows(2) {
+            assert!(w[1] == w[0] || w[1] == w[0] + 1 || w[1] > w[0]);
+            assert!(w[1] >= w[0], "non-monotone assignment");
+        }
+        assert!(*a.iter().max().unwrap() < r);
+        if n >= r {
+            // every rank gets at least one block
+            let counts = balance::assignment_counts(&a, r);
+            assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+        }
+    });
+}
+
+#[test]
+fn pack_planning_exactly_covers() {
+    check("pack plan", 100, |rng: &mut XorShift| {
+        let avail = vec![1, 2, 4, 8, 16];
+        let n = rng.below(200);
+        let desired = 1 + rng.below(32);
+        let plan = parthenon::runtime::plan_packs(n, &avail, desired);
+        assert_eq!(plan.iter().sum::<usize>(), n);
+        for p in &plan {
+            assert!(avail.contains(p));
+            assert!(*p <= desired.max(1));
+        }
+    });
+}
+
+#[test]
+fn message_storm_no_loss_no_reorder() {
+    use parthenon::comm::{Payload, World};
+    check("simmpi storm", 5, |rng: &mut XorShift| {
+        let nranks = 2 + rng.below(3);
+        let nmsg = 50 + rng.below(100);
+        let seed = rng.next_u64();
+        World::launch(nranks, move |rank, world| {
+            let comm = world.comm(rank, 7);
+            let mut rng = XorShift::new(seed ^ rank as u64);
+            // everyone sends nmsg messages to a ring neighbor with a
+            // sequence number; receiver checks FIFO and completeness
+            let dst = (rank + 1) % nranks;
+            let src = (rank + nranks - 1) % nranks;
+            for s in 0..nmsg {
+                let jitter = rng.below(3);
+                for _ in 0..jitter {
+                    std::thread::yield_now();
+                }
+                comm.isend(dst, 42, Payload::F32(vec![s as f32]));
+            }
+            for s in 0..nmsg {
+                let v = comm.recv(src, 42).into_f32().unwrap();
+                assert_eq!(v[0], s as f32, "reordered or lost");
+            }
+        });
+    });
+}
+
+#[test]
+fn exchange_is_deterministic_across_repeats() {
+    // same initial data -> bitwise same ghosts, run twice
+    use parthenon::driver::EvolutionDriver;
+    let deck = common::input_deck("blast", [32, 32, 1], [8, 8, 1], "");
+    let run = || {
+        let mut sim = common::single_rank_sim(&deck, &[]);
+        for _ in 0..3 {
+            sim.step().unwrap();
+        }
+        common::cons_by_gid(&sim)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(common::max_state_diff(&a, &b), 0.0);
+}

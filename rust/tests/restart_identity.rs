@@ -1,0 +1,129 @@
+//! Restart correctness (paper Sec. 3.9): a run interrupted by a restart
+//! file must continue bitwise identically, including when resumed on a
+//! different number of ranks.
+
+mod common;
+
+use parthenon::comm::World;
+use parthenon::config::ParameterInput;
+use parthenon::driver::{EvolutionDriver, HydroSim};
+use parthenon::io::Snapshot;
+use std::sync::{Arc, Mutex};
+
+fn deck() -> String {
+    common::input_deck("blast", [32, 32, 1], [16, 16, 1], "")
+}
+
+#[test]
+fn restart_is_bitwise_identical() {
+    let tmp = std::env::temp_dir().join("parthenon_restart_test.pbin");
+    let tmp_s = tmp.to_str().unwrap().to_string();
+
+    // straight run: 10 cycles
+    let mut straight = common::single_rank_sim(&deck(), &[]);
+    for _ in 0..10 {
+        straight.step().unwrap();
+    }
+    let expect = common::cons_by_gid(&straight);
+
+    // interrupted run: 6 cycles, restart, 4 more
+    let mut first = common::single_rank_sim(&deck(), &[]);
+    for _ in 0..6 {
+        first.step().unwrap();
+    }
+    first.write_restart(&tmp_s).unwrap();
+
+    let mut resumed = common::single_rank_sim(&deck(), &[]);
+    let snap = Snapshot::read(&tmp_s).unwrap();
+    resumed.restore_snapshot(&snap).unwrap();
+    assert_eq!(resumed.cycle, 6);
+    for _ in 0..4 {
+        resumed.step().unwrap();
+    }
+    let got = common::cons_by_gid(&resumed);
+
+    let diff = common::max_state_diff(&expect, &got);
+    assert_eq!(diff, 0.0, "restart must be bitwise identical");
+    assert_eq!(straight.time.to_bits(), resumed.time.to_bits());
+    let _ = std::fs::remove_file(&tmp);
+}
+
+#[test]
+fn restart_across_rank_counts() {
+    let tmp = std::env::temp_dir().join("parthenon_restart_ranks.pbin");
+    let tmp_s = tmp.to_str().unwrap().to_string();
+
+    // write from a 2-rank run after 5 cycles
+    {
+        let deck = deck();
+        let tmp_s = tmp_s.clone();
+        World::launch(2, move |rank, world| {
+            let pin = ParameterInput::from_str(&deck).unwrap();
+            let mut sim = HydroSim::new(pin, rank, world).unwrap();
+            for _ in 0..5 {
+                sim.step().unwrap();
+            }
+            sim.write_restart(&tmp_s).unwrap();
+        });
+    }
+
+    // resume on 1 rank for 5 more cycles
+    let mut resumed = common::single_rank_sim(&deck(), &[]);
+    let snap = Snapshot::read(&tmp_s).unwrap();
+    resumed.restore_snapshot(&snap).unwrap();
+    for _ in 0..5 {
+        resumed.step().unwrap();
+    }
+    let got = common::cons_by_gid(&resumed);
+
+    // compare against a straight 10-cycle run gathered from 3 ranks (any
+    // rank count must give the same physics)
+    let expect: Arc<Mutex<Vec<(usize, Vec<f32>)>>> = Arc::new(Mutex::new(Vec::new()));
+    {
+        let deck = deck();
+        let e2 = expect.clone();
+        World::launch(3, move |rank, world| {
+            let pin = ParameterInput::from_str(&deck).unwrap();
+            let mut sim = HydroSim::new(pin, rank, world).unwrap();
+            for _ in 0..10 {
+                sim.step().unwrap();
+            }
+            let mut blocks = common::cons_by_gid(&sim);
+            e2.lock().unwrap().append(&mut blocks);
+        });
+    }
+    let mut expect = Arc::try_unwrap(expect).unwrap().into_inner().unwrap();
+    expect.sort_by_key(|(g, _)| *g);
+
+    let diff = common::max_state_diff(&expect, &got);
+    assert_eq!(
+        diff, 0.0,
+        "physics must be independent of rank layout and restart"
+    );
+    let _ = std::fs::remove_file(&tmp);
+}
+
+#[test]
+fn snapshot_roundtrip_preserves_header() {
+    let tmp = std::env::temp_dir().join("parthenon_snap_header.pbin");
+    let tmp_s = tmp.to_str().unwrap().to_string();
+    let mut sim = common::single_rank_sim(&deck(), &[]);
+    for _ in 0..3 {
+        sim.step().unwrap();
+    }
+    sim.write_restart(&tmp_s).unwrap();
+    let snap = Snapshot::read(&tmp_s).unwrap();
+    assert_eq!(snap.cycle, 3);
+    assert_eq!(snap.dim, 2);
+    assert_eq!(snap.block_nx, [16, 16, 1]);
+    assert_eq!(snap.leaves.len(), 4);
+    assert_eq!(snap.time.to_bits(), sim.time.to_bits());
+    assert_eq!(snap.dt.to_bits(), sim.dt.to_bits());
+    // block data accessible per gid
+    for gid in 0..4 {
+        let data = snap.block_var(gid, "cons").unwrap();
+        assert_eq!(data.len(), 5 * 16 * 16);
+        assert!(data.iter().all(|x| x.is_finite()));
+    }
+    let _ = std::fs::remove_file(&tmp);
+}
