@@ -1,0 +1,9 @@
+"""Make the `compile`/`tools` packages importable regardless of where
+pytest is invoked from (repo root CI runs `python -m pytest python/tests`)."""
+
+import os
+import sys
+
+_PYTHON_DIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _PYTHON_DIR not in sys.path:
+    sys.path.insert(0, _PYTHON_DIR)

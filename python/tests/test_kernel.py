@@ -4,6 +4,10 @@ plus physical invariants of the reference scheme itself."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment"
+)
 from hypothesis import given, settings, strategies as st
 
 from compile import bufspec, model

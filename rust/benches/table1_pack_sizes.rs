@@ -61,6 +61,36 @@ fn main() {
     println!("\nUniform mesh (device, zone-cycles/s):");
     table.print();
 
+    // -- uniform mesh on the Host path: pack_size sweep ------------------------
+    // Packs are the unit of work for the host worker pool, so pack_size now
+    // shapes Host-path scheduling too (tentpole acceptance: the sweep must
+    // affect the Host path, and any parallel config must beat the seed's
+    // sequential per-block loop).
+    let host_bx = if quick { 8 } else { 16 }; // >= 64 blocks
+    let mut table_h = Table::new(&["pack_size", "ranks=1", "ranks=2"]);
+    for &ps in pack_sizes {
+        let mut cells = vec![format!("ps={ps}")];
+        for &r in &[1usize, 2] {
+            let deck = deck_3d(mesh, host_bx);
+            let ov = format!("parthenon/exec/pack_size={ps}");
+            let run = measure(&deck, &[&ov], r, 1, meas);
+            cells.push(fmt_zcps(run.zcps));
+            samples.push(Sample {
+                label: format!("host/b{host_bx}/ps{ps}/r{r}"),
+                secs: vec![run.wall / run.cycles as f64],
+                work: run.zcps * run.wall / run.cycles as f64,
+            });
+            eprintln!(
+                "  host b{host_bx} ps{ps} ranks{r}: {} zc/s ({} blocks)",
+                fmt_zcps(run.zcps),
+                run.nblocks
+            );
+        }
+        table_h.row(cells);
+    }
+    println!("\nUniform mesh (host path, pack-parallel workers, zone-cycles/s):");
+    table_h.print();
+
     // -- multilevel mesh on the Host path -------------------------------------
     let mut table2 = Table::new(&["mesh", "ranks=1", "ranks=2", "ranks=4"]);
     let mut cells = vec!["multilevel (host)".to_string()];

@@ -10,12 +10,16 @@
 //! express it as tasks and overlap communication with compute; the blocking
 //! wrapper `exchange_blocking` composes the three.
 
+use std::ops::Range;
+
 use super::bufspec::{self, Slab};
 use super::prolong;
 use crate::comm::{tags, Comm, Payload};
 use crate::mesh::{
     BoundaryCondition, IndexShape, LogicalLocation, Mesh, NeighborKind,
 };
+use crate::tasks::{TaskRegion, TaskStatus, NONE};
+use crate::util::backoff::{ProgressWait, STALL_LIMIT};
 use crate::Real;
 
 /// Device-path buffer packing strategies (paper Fig. 8). `Native` is the
@@ -273,8 +277,19 @@ fn pairs_toward_coarse(
 
 /// Post every outbound boundary segment of `var` for all local blocks.
 pub fn post_sends(mesh: &Mesh, comm: &Comm, var: &str) -> crate::error::Result<()> {
+    post_sends_range(mesh, comm, var, 0..mesh.blocks.len())
+}
+
+/// Post outbound boundary segments for one pack's blocks
+/// (`blocks[range]`) — the per-pack send task of the stage task collection.
+pub fn post_sends_range(
+    mesh: &Mesh,
+    comm: &Comm,
+    var: &str,
+    range: Range<usize>,
+) -> crate::error::Result<()> {
     let shape = mesh.cfg.index_shape();
-    for b in &mesh.blocks {
+    for b in &mesh.blocks[range] {
         let arr = b.data.get(var)?;
         let nvar = arr.dims()[0];
         let data = arr.as_slice();
@@ -342,10 +357,28 @@ fn offset_index(dim: usize, o: [i32; 3]) -> usize {
 }
 
 /// Register every inbound segment we expect for `var`.
-pub fn post_receives(mesh: &Mesh, _comm: &Comm, _var: &str) -> ExchangeState {
+pub fn post_receives(mesh: &Mesh, comm: &Comm, var: &str) -> ExchangeState {
+    post_receives_range(mesh, comm, var, 0..mesh.blocks.len())
+}
+
+/// Register the inbound segments expected by one pack's blocks
+/// (`blocks[range]`) — the per-pack receive registration of the stage task
+/// collection.
+pub fn post_receives_range(
+    mesh: &Mesh,
+    _comm: &Comm,
+    _var: &str,
+    range: Range<usize>,
+) -> ExchangeState {
     let shape = mesh.cfg.index_shape();
     let mut items = Vec::new();
-    for (bi, b) in mesh.blocks.iter().enumerate() {
+    for (bi, b) in mesh
+        .blocks
+        .iter()
+        .enumerate()
+        .skip(range.start)
+        .take(range.len())
+    {
         let mut has_finer = false;
         for nb in mesh.tree.find_neighbors(&b.loc) {
             let my_slot = nb.nbr_index;
@@ -503,6 +536,7 @@ pub fn apply_block_physical_bcs(
 }
 
 /// Complete blocking exchange of one variable (sends + receives + BCs).
+/// Waits with bounded spin-then-backoff instead of pegging a core.
 pub fn exchange_blocking(
     mesh: &mut Mesh,
     comm: &Comm,
@@ -511,16 +545,100 @@ pub fn exchange_blocking(
 ) -> crate::error::Result<()> {
     post_sends(mesh, comm, var)?;
     let mut state = post_receives(mesh, comm, var);
-    let mut spins = 0u64;
+    let mut wait = ProgressWait::new(STALL_LIMIT);
+    let mut remaining = state.remaining();
     while !poll_receives(mesh, comm, var, &mut state)? {
-        spins += 1;
-        if spins > 200_000_000 {
+        let now = state.remaining();
+        let progressed = now < remaining;
+        remaining = now;
+        if !wait.step(progressed) {
             return Err(crate::error::Error::Comm(format!(
-                "exchange of {var:?} stalled ({} segments missing)",
-                state.remaining()
+                "exchange of {var:?} stalled ({} segments missing after {:?} idle)",
+                state.remaining(),
+                wait.idle_elapsed()
             )));
         }
-        std::thread::yield_now();
+    }
+    apply_block_physical_bcs(mesh, var, vector_comps)?;
+    Ok(())
+}
+
+/// Context threaded through the per-pack exchange task lists.
+struct ExchCtx<'a> {
+    mesh: &'a mut Mesh,
+    comm: &'a Comm,
+    var: &'a str,
+    /// One registered receive set per pack (filled by the post task).
+    states: Vec<Option<ExchangeState>>,
+    /// First real error hit by any task. Tasks record it and complete
+    /// (never retry — a retried post would duplicate isends); the region
+    /// drains fast and the error is returned to the caller.
+    error: Option<crate::error::Error>,
+}
+
+/// Pack-tasked exchange of one variable: one task list per MeshBlockPack
+/// (post sends + receives, then poll), so boundary communication of one
+/// pack hides behind the polls of the others — the paper's interleaved
+/// tasking, with pack identity threaded through the engine.
+pub fn exchange_tasked(
+    mesh: &mut Mesh,
+    comm: &Comm,
+    var: &str,
+    vector_comps: Option<[usize; 3]>,
+    pack_ranges: &[Range<usize>],
+) -> crate::error::Result<()> {
+    if pack_ranges.is_empty() {
+        return apply_block_physical_bcs(mesh, var, vector_comps);
+    }
+    let npacks = pack_ranges.len();
+    let mut region: TaskRegion<ExchCtx> = TaskRegion::new(npacks);
+    for (pi, range) in pack_ranges.iter().enumerate() {
+        let post_range = range.clone();
+        let list = region.list(pi);
+        let t_post = list.add(NONE, move |c: &mut ExchCtx| {
+            let ExchCtx { mesh, comm, var, states, error } = c;
+            match post_sends_range(mesh, comm, var, post_range.clone()) {
+                Ok(()) => {
+                    states[pi] =
+                        Some(post_receives_range(mesh, comm, var, post_range.clone()));
+                }
+                Err(e) => {
+                    if error.is_none() {
+                        *error = Some(e);
+                    }
+                }
+            }
+            TaskStatus::Complete
+        });
+        let _t_poll = list.add(&[t_post], move |c: &mut ExchCtx| {
+            let ExchCtx { mesh, comm, var, states, error } = c;
+            if error.is_some() {
+                return TaskStatus::Complete; // abort: drain the region fast
+            }
+            let Some(state) = states[pi].as_mut() else {
+                return TaskStatus::Complete; // post failed; error is recorded
+            };
+            match poll_receives(mesh, comm, var, state) {
+                Ok(true) => TaskStatus::Complete,
+                Ok(false) => TaskStatus::Incomplete,
+                Err(e) => {
+                    *error = Some(e);
+                    TaskStatus::Complete
+                }
+            }
+        });
+    }
+    let mut ctx = ExchCtx {
+        mesh,
+        comm,
+        var,
+        states: (0..npacks).map(|_| None).collect(),
+        error: None,
+    };
+    region.execute(&mut ctx, 200_000)?;
+    let ExchCtx { mesh, error, .. } = ctx; // recover borrows from the ctx
+    if let Some(e) = error {
+        return Err(e);
     }
     apply_block_physical_bcs(mesh, var, vector_comps)?;
     Ok(())

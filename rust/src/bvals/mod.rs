@@ -8,8 +8,9 @@ mod physical;
 mod prolong;
 
 pub use exchange::{
-    apply_block_physical_bcs, exchange_blocking, poll_receives, post_receives,
-    post_sends, ExchangeState, PackStrategy,
+    apply_block_physical_bcs, exchange_blocking, exchange_tasked, poll_receives,
+    post_receives, post_receives_range, post_sends, post_sends_range,
+    ExchangeState, PackStrategy,
 };
 pub use physical::apply_physical_bcs;
 pub use prolong::{

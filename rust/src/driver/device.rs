@@ -1,4 +1,4 @@
-//! Device execution path: MeshBlockPacks staged through PJRT artifacts,
+//! Device execution path: MeshBlockPacks staged through runtime artifacts,
 //! with the paper's three buffer-packing strategies (Fig. 8):
 //!
 //! * `PerBuffer` — one launch per boundary buffer per block (pack1/unpack1
@@ -7,18 +7,23 @@
 //! * `PerPack`   — ONE fused launch (unpack+stage+pack+dt) per MeshBlockPack
 //!   per stage: the paper's full packing optimization.
 //!
-//! Requires a uniform, fully periodic mesh — the configuration of every
-//! performance experiment in the paper. AMR/multilevel runs use the Host
-//! path (see DESIGN.md §limitations).
+//! The pack partition and its staging buffers live in the shared
+//! [`MeshData`] cache (same structure the Host path schedules its workers
+//! over); this module owns only the launch plumbing: runtime, routing
+//! tables, and per-stage launches. Requires a uniform, fully periodic mesh —
+//! the configuration of every performance experiment in the paper.
+//! AMR/multilevel runs use the Host path (see DESIGN.md §limitations).
 
-use super::HydroSim;
+use super::{HydroSim, StageExecutor};
 use crate::bvals::{bufspec, PackStrategy};
 use crate::comm::{tags, Comm, Payload};
 use crate::error::{Error, Result};
-use crate::hydro::native::{StageCoeffs, RK2_STAGES};
+use crate::hydro::native::StageCoeffs;
 use crate::hydro::CONS;
 use crate::mesh::{IndexShape, Mesh, NeighborKind};
-use crate::runtime::{default_artifact_dir, plan_packs, ArtifactKey, Runtime, ScalArgs};
+use crate::mesh_data::MeshData;
+use crate::runtime::{default_artifact_dir, ArtifactKey, Runtime, ScalArgs};
+use crate::util::backoff::{ProgressWait, STALL_LIMIT};
 use crate::{Real, NHYDRO};
 
 /// Routing entry for one (block, neighbor slot).
@@ -30,24 +35,14 @@ struct NbrEntry {
     recv_tag: u64,
 }
 
-/// One MeshBlockPack's staging storage.
-struct DevPack {
-    nb: usize,
-    /// Index into the flat local-block order (first block).
-    first: usize,
-    u: Vec<Real>,
-    u0: Vec<Real>,
-    bufs_in: Vec<Real>,
-    bufs_out: Vec<Real>,
-}
-
-/// Per-rank device state.
+/// Per-rank device state: runtime + routing; staging lives in [`MeshData`].
 pub struct DeviceState {
     pub rt: Runtime,
     shape: IndexShape,
     strategy: PackStrategy,
     impl_: String,
-    packs: Vec<DevPack>,
+    /// Pack sizes the plan may use (fused artifact variants, ascending).
+    plan_sizes: Vec<usize>,
     /// Per local block (flat order): routing per neighbor slot.
     routes: Vec<Vec<NbrEntry>>,
     seg_offs: Vec<usize>,
@@ -61,7 +56,9 @@ pub struct DeviceState {
 }
 
 impl DeviceState {
-    pub fn new(sim: &HydroSim) -> Result<DeviceState> {
+    /// Build the device state and re-plan `sim.mesh_data` onto the artifact
+    /// pack sizes (the one pack partition both paths share).
+    pub fn new(sim: &mut HydroSim) -> Result<DeviceState> {
         let mesh = &sim.mesh;
         if mesh.tree.max_level() != 0 {
             return Err(Error::Runtime(
@@ -79,9 +76,9 @@ impl DeviceState {
         let strategy = sim.sp.strategy;
         let dim = mesh.cfg.dim;
         let n = mesh.cfg.block_nx;
-        // Pack plan: fused sizes for PerPack, single blocks otherwise.
-        let nlocal = mesh.blocks.len();
-        let plan = match strategy {
+        // Pack-size menu: fused variants for PerPack, single blocks
+        // otherwise. The MeshData plan is rebuilt from this menu.
+        let plan_sizes = match strategy {
             PackStrategy::PerPack => {
                 let avail = rt.manifest().pack_sizes("fused", dim, n, &sim.sp.impl_);
                 let avail = if avail.is_empty() {
@@ -94,9 +91,9 @@ impl DeviceState {
                         "no fused artifacts for dim={dim} n={n:?}"
                     )));
                 }
-                plan_packs(nlocal, &avail, sim.sp.pack_size)
+                avail
             }
-            _ => vec![1; nlocal],
+            _ => vec![1],
         };
 
         let block_elems = NHYDRO * shape.ncells_total();
@@ -104,22 +101,9 @@ impl DeviceState {
         let (seg_offs, _) = bufspec::segment_offsets(&shape, NHYDRO);
         let seg_lens = bufspec::segment_lengths(&shape, NHYDRO);
 
-        let mut packs = Vec::new();
-        let mut first = 0usize;
-        for nb in plan {
-            packs.push(DevPack {
-                nb,
-                first,
-                u: vec![0.0; nb * block_elems],
-                u0: vec![0.0; nb * block_elems],
-                bufs_in: vec![0.0; nb * buflen],
-                bufs_out: vec![0.0; nb * buflen],
-            });
-            first += nb;
-        }
-
         // Routing tables.
         let opp = bufspec::opposite_index(dim);
+        let nlocal = mesh.blocks.len();
         let mut routes = Vec::with_capacity(nlocal);
         for b in &mesh.blocks {
             let mut entries = Vec::new();
@@ -149,7 +133,7 @@ impl DeviceState {
             shape,
             strategy,
             impl_: sim.sp.impl_.clone(),
-            packs,
+            plan_sizes,
             routes,
             seg_offs,
             seg_lens,
@@ -161,9 +145,12 @@ impl DeviceState {
             gamma: sim.pkg.gamma,
         };
 
-        dev.sync_from_blocks(mesh)?;
+        // Shared pack partition: re-plan onto the artifact sizes + staging.
+        sim.mesh_data.rebuild(&sim.mesh, Some(&dev.plan_sizes));
+        sim.mesh_data.gather(&sim.mesh, CONS)?;
         // Bootstrap: fill bufs_in once (pack + route) and compute dt.
-        dev.bootstrap(mesh)?;
+        let scal0 = dev.scal(StageCoeffs { g0: 0.0, g1: 1.0, beta: 1.0 }, 0.0, &sim.mesh);
+        dev.bootstrap(&mut sim.mesh_data, scal0)?;
         Ok(dev)
     }
 
@@ -184,154 +171,131 @@ impl DeviceState {
         self.shape.n
     }
 
-    /// Gather authoritative state from MeshBlock containers into staging.
-    pub fn sync_from_blocks(&mut self, mesh: &Mesh) -> Result<()> {
-        for p in &mut self.packs {
-            for bi in 0..p.nb {
-                let arr = mesh.blocks[p.first + bi].data.get(CONS)?;
-                p.u[bi * self.block_elems..(bi + 1) * self.block_elems]
-                    .copy_from_slice(arr.as_slice());
-            }
-        }
-        Ok(())
-    }
-
-    /// Scatter staging back into MeshBlock containers (for IO / regrid).
-    pub fn sync_to_blocks(&self, mesh: &mut Mesh) -> Result<()> {
-        for p in &self.packs {
-            for bi in 0..p.nb {
-                let arr = mesh.blocks[p.first + bi].data.get_mut(CONS)?;
-                arr.as_mut_slice()
-                    .copy_from_slice(&p.u[bi * self.block_elems..(bi + 1) * self.block_elems]);
-            }
-        }
-        Ok(())
-    }
-
     /// Initial buffer fill + dt (uses nb=1 pack/dt artifacts; not timed).
-    fn bootstrap(&mut self, mesh: &Mesh) -> Result<()> {
+    fn bootstrap(&mut self, md: &mut MeshData, scal: ScalArgs) -> Result<()> {
         let kp = self.key("pack", 1);
-        for pi in 0..self.packs.len() {
-            for bi in 0..self.packs[pi].nb {
-                let (u_slice, mut seg) = {
-                    let p = &self.packs[pi];
-                    (
-                        p.u[bi * self.block_elems..(bi + 1) * self.block_elems].to_vec(),
-                        vec![0.0; self.buflen],
-                    )
-                };
-                self.rt.pack(&kp, &u_slice, &mut seg)?;
-                self.packs[pi].bufs_out[bi * self.buflen..(bi + 1) * self.buflen]
-                    .copy_from_slice(&seg);
-            }
-        }
-        self.route_and_receive(mesh)?;
-        // initial dt
         let kdt = self.key("dt", 1);
-        let scal = self.scal(RK2_STAGES[0], 0.0, mesh);
-        for pi in 0..self.packs.len() {
-            for bi in 0..self.packs[pi].nb {
-                let u_slice = self.packs[pi].u
-                    [bi * self.block_elems..(bi + 1) * self.block_elems]
-                    .to_vec();
-                let dts = self.rt.dt(&kdt, &u_slice, scal)?;
-                self.last_dts[self.packs[pi].first + bi] = dts[0];
+        {
+            let (descs, staging) = md.parts_mut();
+            let DeviceState { rt, last_dts, buflen, block_elems, .. } = self;
+            for (d, p) in descs.iter().zip(staging.iter_mut()) {
+                for bi in 0..d.nb {
+                    let u_slice =
+                        p.u[bi * *block_elems..(bi + 1) * *block_elems].to_vec();
+                    let mut seg = vec![0.0; *buflen];
+                    rt.pack(&kp, &u_slice, &mut seg)?;
+                    p.bufs_out[bi * *buflen..(bi + 1) * *buflen]
+                        .copy_from_slice(&seg);
+                    let dts = rt.dt(&kdt, &u_slice, scal)?;
+                    last_dts[d.first + bi] = dts[0];
+                }
             }
         }
+        self.route_and_receive(md)?;
         Ok(())
+    }
+
+    fn scal_from_shape(&self, co: StageCoeffs, dt: Real, dx: [Real; 3]) -> ScalArgs {
+        ScalArgs { g0: co.g0, g1: co.g1, beta: co.beta, dt, dx, gamma: self.gamma }
     }
 
     fn scal(&self, co: StageCoeffs, dt: Real, mesh: &Mesh) -> ScalArgs {
-        let c = &mesh.blocks[0].coords;
-        ScalArgs {
-            g0: co.g0,
-            g1: co.g1,
-            beta: co.beta,
-            dt,
-            dx: [c.dx[0] as Real, c.dx[1] as Real, c.dx[2] as Real],
-            gamma: self.gamma,
-        }
+        let dx = match mesh.blocks.first() {
+            Some(b) => [
+                b.coords.dx[0] as Real,
+                b.coords.dx[1] as Real,
+                b.coords.dx[2] as Real,
+            ],
+            // rank owns no blocks: derive from the (uniform) root grid
+            None => {
+                let mut dx = [1.0 as Real; 3];
+                for d in 0..mesh.cfg.dim {
+                    dx[d] = (mesh.cfg.domain.width(d) / mesh.cfg.nx[d] as f64) as Real;
+                }
+                dx
+            }
+        };
+        self.scal_from_shape(co, dt, dx)
     }
 
-    /// Raw min CFL dt across local blocks (times the caller's CFL factor).
-    pub fn last_dt_local(&self, cfl: f64) -> f64 {
-        let m = self
-            .last_dts
-            .iter()
-            .fold(Real::INFINITY, |a, &b| a.min(b));
-        cfl * m as f64
-    }
-
-    /// Send every block's outbound segments and (blocking) receive inbound
-    /// segments into bufs_in.
-    fn route_and_receive(&mut self, mesh: &Mesh) -> Result<()> {
+    /// Send every block's outbound segments and receive inbound segments
+    /// into bufs_in, polling with bounded backoff (per-pack order).
+    fn route_and_receive(&mut self, md: &mut MeshData) -> Result<()> {
+        let (descs, staging) = md.parts_mut();
         // sends
-        for p in &self.packs {
-            for bi in 0..p.nb {
-                let flat = p.first + bi;
+        for (d, p) in descs.iter().zip(staging.iter()) {
+            for bi in 0..d.nb {
+                let flat = d.first + bi;
                 let base = bi * self.buflen;
                 for (slot, e) in self.routes[flat].iter().enumerate() {
-                    let seg = &p.bufs_out
-                        [base + self.seg_offs[slot]..base + self.seg_offs[slot] + self.seg_lens[slot]];
+                    let seg = &p.bufs_out[base + self.seg_offs[slot]
+                        ..base + self.seg_offs[slot] + self.seg_lens[slot]];
                     self.comm
                         .isend(e.dst_rank, e.send_tag, Payload::F32(seg.to_vec()));
                 }
             }
         }
-        let _ = mesh;
-        // receives (blocking; messages already in flight)
-        for p in &mut self.packs {
-            for bi in 0..p.nb {
-                let flat = p.first + bi;
-                let base = bi * self.buflen;
-                for (slot, e) in self.routes[flat].iter().enumerate() {
-                    let data = self
-                        .comm
-                        .recv(e.recv_src, e.recv_tag)
-                        .into_f32()?;
-                    p.bufs_in
-                        [base + self.seg_offs[slot]..base + self.seg_offs[slot] + self.seg_lens[slot]]
+        // receives: (pack, block-in-pack, slot) triples polled round-robin
+        let mut pending: Vec<(usize, usize, usize)> = Vec::new();
+        for (pi, d) in descs.iter().enumerate() {
+            for bi in 0..d.nb {
+                for slot in 0..self.routes[d.first + bi].len() {
+                    pending.push((pi, bi, slot));
+                }
+            }
+        }
+        let mut wait = ProgressWait::new(STALL_LIMIT);
+        while !pending.is_empty() {
+            let mut progressed = false;
+            let mut i = 0usize;
+            while i < pending.len() {
+                let (pi, bi, slot) = pending[i];
+                let d = &descs[pi];
+                let e = &self.routes[d.first + bi][slot];
+                if let Some(payload) = self.comm.try_recv(e.recv_src, e.recv_tag) {
+                    let data = payload.into_f32()?;
+                    let base = bi * self.buflen;
+                    staging[pi].bufs_in[base + self.seg_offs[slot]
+                        ..base + self.seg_offs[slot] + self.seg_lens[slot]]
                         .copy_from_slice(&data);
+                    pending.swap_remove(i);
+                    progressed = true;
+                } else {
+                    i += 1;
                 }
             }
-        }
-        Ok(())
-    }
-
-    /// One full cycle (2 RK stages) on the device path.
-    pub fn step(&mut self, sim: &mut HydroSim, dt: Real) -> Result<()> {
-        // u0 <- u
-        for p in &mut self.packs {
-            p.u0.copy_from_slice(&p.u);
-        }
-        for (si, co) in RK2_STAGES.iter().enumerate() {
-            let scal = self.scal(*co, dt, &sim.mesh);
-            match self.strategy {
-                PackStrategy::PerPack => self.stage_perpack(scal, si)?,
-                PackStrategy::PerBlock => self.stage_perblock(scal, si)?,
-                PackStrategy::PerBuffer => self.stage_perbuffer(scal, si)?,
-                PackStrategy::Native => {
-                    return Err(Error::Runtime(
-                        "strategy=native is the Host path".into(),
-                    ))
-                }
+            if pending.is_empty() {
+                break;
             }
-            self.route_and_receive(&sim.mesh)?;
+            if !wait.step(progressed) {
+                return Err(Error::Comm(format!(
+                    "device boundary routing stalled ({} segments missing after {:?} idle)",
+                    pending.len(),
+                    wait.idle_elapsed()
+                )));
+            }
         }
         Ok(())
     }
 
     /// One fused launch per pack per stage.
-    fn stage_perpack(&mut self, scal: ScalArgs, si: usize) -> Result<()> {
+    fn stage_perpack(&mut self, md: &mut MeshData, scal: ScalArgs, si: usize) -> Result<()> {
+        let (descs, staging) = md.parts_mut();
         let keys: Vec<ArtifactKey> =
-            self.packs.iter().map(|p| self.key("fused", p.nb)).collect();
-        let DeviceState { rt, packs, last_dts, .. } = self;
-        for (pi, p) in packs.iter_mut().enumerate() {
-            let dts =
-                rt.fused(&keys[pi], &mut p.u, &p.u0, &p.bufs_in, scal, &mut p.bufs_out)?;
+            descs.iter().map(|d| self.key("fused", d.nb)).collect();
+        let DeviceState { rt, last_dts, .. } = self;
+        for (d, p) in descs.iter().zip(staging.iter_mut()) {
+            let dts = rt.fused(
+                &keys[d.index],
+                &mut p.u,
+                &p.u0,
+                &p.bufs_in,
+                scal,
+                &mut p.bufs_out,
+            )?;
             if si == 1 {
-                for (bi, d) in dts.iter().enumerate() {
-                    last_dts[p.first + bi] = *d;
+                for (bi, v) in dts.iter().enumerate() {
+                    last_dts[d.first + bi] = *v;
                 }
             }
         }
@@ -339,22 +303,29 @@ impl DeviceState {
     }
 
     /// unpack + stage + pack (+ dt at stage 2) per block.
-    fn stage_perblock(&mut self, scal: ScalArgs, si: usize) -> Result<()> {
+    fn stage_perblock(&mut self, md: &mut MeshData, scal: ScalArgs, si: usize) -> Result<()> {
         let kun = self.key("unpack", 1);
         let kst = self.key("stage", 1);
         let kpk = self.key("pack", 1);
         let kdt = self.key("dt", 1);
-        let DeviceState { rt, packs, last_dts, tmp, .. } = self;
-        for p in packs.iter_mut() {
-            debug_assert_eq!(p.nb, 1);
-            rt.unpack(&kun, &p.u, &p.bufs_in, tmp)?;
-            p.u.copy_from_slice(tmp);
-            rt.stage(&kst, &p.u, &p.u0, scal, tmp)?;
-            p.u.copy_from_slice(tmp);
-            rt.pack(&kpk, &p.u, &mut p.bufs_out)?;
-            if si == 1 {
-                let dts = rt.dt(&kdt, &p.u, scal)?;
-                last_dts[p.first] = dts[0];
+        let (descs, staging) = md.parts_mut();
+        let DeviceState { rt, last_dts, tmp, block_elems, buflen, .. } = self;
+        let ne = *block_elems;
+        let bl = *buflen;
+        for (d, p) in descs.iter().zip(staging.iter_mut()) {
+            for bi in 0..d.nb {
+                let u = &mut p.u[bi * ne..(bi + 1) * ne];
+                let u0 = &p.u0[bi * ne..(bi + 1) * ne];
+                let bin = &p.bufs_in[bi * bl..(bi + 1) * bl];
+                rt.unpack(&kun, u, bin, tmp)?;
+                u.copy_from_slice(tmp);
+                rt.stage(&kst, u, u0, scal, tmp)?;
+                u.copy_from_slice(tmp);
+                rt.pack(&kpk, u, &mut p.bufs_out[bi * bl..(bi + 1) * bl])?;
+                if si == 1 {
+                    let dts = rt.dt(&kdt, u, scal)?;
+                    last_dts[d.first + bi] = dts[0];
+                }
             }
         }
         Ok(())
@@ -362,7 +333,7 @@ impl DeviceState {
 
     /// The "original" regime: one launch per buffer (unpack1/pack1) plus the
     /// per-block stage launch.
-    fn stage_perbuffer(&mut self, scal: ScalArgs, si: usize) -> Result<()> {
+    fn stage_perbuffer(&mut self, md: &mut MeshData, scal: ScalArgs, si: usize) -> Result<()> {
         let kst = self.key("stage", 1);
         let kdt = self.key("dt", 1);
         let nslots = self.seg_lens.len();
@@ -370,29 +341,83 @@ impl DeviceState {
             (0..nslots).map(|s| self.key("unpack1", 1).with_nbr(s)).collect();
         let kpk1: Vec<ArtifactKey> =
             (0..nslots).map(|s| self.key("pack1", 1).with_nbr(s)).collect();
-        let DeviceState { rt, packs, last_dts, tmp, seg_offs, seg_lens, .. } = self;
-        for p in packs.iter_mut() {
-            debug_assert_eq!(p.nb, 1);
-            // apply each inbound buffer with its own launch
-            for slot in 0..nslots {
-                let seg = &p.bufs_in[seg_offs[slot]..seg_offs[slot] + seg_lens[slot]];
-                rt.unpack1(&kun1[slot], &p.u, seg, tmp)?;
-                p.u.copy_from_slice(tmp);
-            }
-            rt.stage(&kst, &p.u, &p.u0, scal, tmp)?;
-            p.u.copy_from_slice(tmp);
-            // fill each outbound buffer with its own launch
-            for slot in 0..nslots {
-                let seg = rt.pack1(&kpk1[slot], &p.u)?;
-                p.bufs_out[seg_offs[slot]..seg_offs[slot] + seg_lens[slot]]
-                    .copy_from_slice(&seg);
-            }
-            if si == 1 {
-                let dts = rt.dt(&kdt, &p.u, scal)?;
-                last_dts[p.first] = dts[0];
+        let (descs, staging) = md.parts_mut();
+        let DeviceState {
+            rt, last_dts, tmp, seg_offs, seg_lens, block_elems, buflen, ..
+        } = self;
+        let ne = *block_elems;
+        let bl = *buflen;
+        for (d, p) in descs.iter().zip(staging.iter_mut()) {
+            for bi in 0..d.nb {
+                let u = &mut p.u[bi * ne..(bi + 1) * ne];
+                let u0 = &p.u0[bi * ne..(bi + 1) * ne];
+                let base = bi * bl;
+                // apply each inbound buffer with its own launch
+                for slot in 0..nslots {
+                    let seg = &p.bufs_in
+                        [base + seg_offs[slot]..base + seg_offs[slot] + seg_lens[slot]];
+                    rt.unpack1(&kun1[slot], u, seg, tmp)?;
+                    u.copy_from_slice(tmp);
+                }
+                rt.stage(&kst, u, u0, scal, tmp)?;
+                u.copy_from_slice(tmp);
+                // fill each outbound buffer with its own launch
+                for slot in 0..nslots {
+                    let seg = rt.pack1(&kpk1[slot], u)?;
+                    p.bufs_out
+                        [base + seg_offs[slot]..base + seg_offs[slot] + seg_lens[slot]]
+                        .copy_from_slice(&seg);
+                }
+                if si == 1 {
+                    let dts = rt.dt(&kdt, u, scal)?;
+                    last_dts[d.first + bi] = dts[0];
+                }
             }
         }
         Ok(())
+    }
+}
+
+impl StageExecutor for DeviceState {
+    fn begin_cycle(&mut self, sim: &mut HydroSim) -> Result<()> {
+        sim.mesh_data.validate(&sim.mesh)?;
+        let (_descs, staging) = sim.mesh_data.parts_mut();
+        for p in staging.iter_mut() {
+            p.u0.copy_from_slice(&p.u);
+        }
+        Ok(())
+    }
+
+    fn stage(
+        &mut self,
+        sim: &mut HydroSim,
+        co: StageCoeffs,
+        si: usize,
+        dt: Real,
+    ) -> Result<()> {
+        sim.mesh_data.validate(&sim.mesh)?;
+        let scal = self.scal(co, dt, &sim.mesh);
+        let md = &mut sim.mesh_data;
+        match self.strategy {
+            PackStrategy::PerPack => self.stage_perpack(md, scal, si)?,
+            PackStrategy::PerBlock => self.stage_perblock(md, scal, si)?,
+            PackStrategy::PerBuffer => self.stage_perbuffer(md, scal, si)?,
+            PackStrategy::Native => {
+                return Err(Error::Runtime(
+                    "strategy=native is the Host path".into(),
+                ))
+            }
+        }
+        self.route_and_receive(md)
+    }
+
+    /// Raw min CFL dt across local blocks, scaled by the package CFL.
+    fn local_dt(&self, sim: &HydroSim) -> f64 {
+        let m = self
+            .last_dts
+            .iter()
+            .fold(Real::INFINITY, |a, &b| a.min(b));
+        sim.pkg.cfl as f64 * m as f64
     }
 }
 

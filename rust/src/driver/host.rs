@@ -1,0 +1,223 @@
+//! Host execution space: the native Rust solver run pack-parallel.
+//!
+//! The stage operates per MeshBlockPack ([`crate::mesh_data::MeshData`]):
+//! packs are dealt to a scoped-thread worker pool in contiguous,
+//! pack-aligned block ranges, so every worker owns disjoint `&mut` chunks
+//! of the per-block work arrays (fluxes, u0, u_new) and a private
+//! reconstruction scratch. Flux correction stays on the driver thread (it
+//! is communication-bound and touches fluxes across packs), and the ghost
+//! exchange runs as the per-pack task collection of
+//! [`crate::bvals::exchange_tasked`] — the same task-collection shape the
+//! Device path uses for its boundary routing.
+
+use super::{run_stage_exchange, StageExecutor};
+use crate::error::Result;
+use crate::hydro::native::{self, FluxArrays, Scratch, StageCoeffs};
+use crate::hydro::CONS;
+use crate::mesh::IndexShape;
+use crate::vars::Package;
+use crate::{Real, NHYDRO};
+
+/// Per-rank host executor state: per-block work arrays (same order as
+/// `mesh.blocks`) plus one scratch per worker thread.
+pub struct HostExec {
+    flux: Vec<FluxArrays>,
+    u0: Vec<Vec<Real>>,
+    unew: Vec<Vec<Real>>,
+    scratch: Vec<Scratch>,
+    nworkers: usize,
+}
+
+impl HostExec {
+    pub fn new(
+        shape: &IndexShape,
+        nblocks: usize,
+        npacks: usize,
+        ranks_sharing: usize,
+    ) -> HostExec {
+        let nelem = NHYDRO * shape.ncells_total();
+        let nworkers = crate::util::num_workers(npacks.max(1), ranks_sharing);
+        HostExec {
+            flux: (0..nblocks).map(|_| FluxArrays::new(shape)).collect(),
+            u0: (0..nblocks).map(|_| vec![0.0; nelem]).collect(),
+            unew: (0..nblocks).map(|_| vec![0.0; nelem]).collect(),
+            scratch: (0..nworkers).map(|_| Scratch::default()).collect(),
+            nworkers,
+        }
+    }
+
+    pub fn nworkers(&self) -> usize {
+        self.nworkers
+    }
+
+    /// Block `bi`'s flux arrays (flux-correction tests).
+    pub fn flux(&self, bi: usize) -> &FluxArrays {
+        &self.flux[bi]
+    }
+}
+
+/// Split a per-block slice into per-worker chunks matching `ranges`
+/// (contiguous ascending block ranges covering the slice).
+fn split_chunks<'a, T>(
+    mut rest: &'a mut [T],
+    ranges: &[std::ops::Range<usize>],
+) -> Vec<&'a mut [T]> {
+    let mut parts = Vec::with_capacity(ranges.len());
+    for r in ranges {
+        let (head, tail) = rest.split_at_mut(r.len());
+        parts.push(head);
+        rest = tail;
+    }
+    parts
+}
+
+impl StageExecutor for HostExec {
+    fn begin_cycle(&mut self, sim: &mut super::HydroSim) -> Result<()> {
+        sim.mesh_data.validate(&sim.mesh)?;
+        for (bi, b) in sim.mesh.blocks.iter().enumerate() {
+            self.u0[bi].copy_from_slice(b.data.get(CONS)?.as_slice());
+        }
+        Ok(())
+    }
+
+    fn stage(
+        &mut self,
+        sim: &mut super::HydroSim,
+        co: StageCoeffs,
+        _si: usize,
+        dt: Real,
+    ) -> Result<()> {
+        sim.mesh_data.validate(&sim.mesh)?;
+        let shape = sim.mesh.cfg.index_shape();
+        let gamma = sim.pkg.gamma;
+        let multilevel = sim.is_multilevel();
+        if multilevel {
+            sim.flux_corr_post_recvs();
+        }
+        let ranges = sim.mesh_data.worker_block_ranges(self.nworkers);
+
+        // Phase 1 — fluxes, pack-parallel (reads block state, writes
+        // disjoint per-block flux arrays).
+        {
+            let blocks = &sim.mesh.blocks;
+            let flux_parts = split_chunks(&mut self.flux, &ranges);
+            let scratch_parts: Vec<&mut Scratch> =
+                self.scratch.iter_mut().take(ranges.len()).collect();
+            std::thread::scope(|s| {
+                for ((r, flux_part), scr) in
+                    ranges.iter().zip(flux_parts).zip(scratch_parts)
+                {
+                    let start = r.start;
+                    s.spawn(move || {
+                        for (off, fx) in flux_part.iter_mut().enumerate() {
+                            let arr = blocks[start + off].data.get(CONS).expect("cons");
+                            native::compute_fluxes(
+                                arr.as_slice(),
+                                &shape,
+                                gamma,
+                                fx,
+                                scr,
+                            );
+                        }
+                    });
+                }
+            });
+        }
+
+        // Phase 2 — flux correction across fine/coarse faces (multilevel
+        // only): communication-bound, driver thread, backoff while waiting.
+        if multilevel {
+            for bi in 0..sim.mesh.blocks.len() {
+                sim.flux_corr_send(&self.flux[bi], bi);
+            }
+            sim.flux_corr_wait(&mut self.flux)?;
+        }
+
+        // Phase 3 — stage combine, pack-parallel (disjoint &mut blocks).
+        {
+            let block_parts = split_chunks(&mut sim.mesh.blocks, &ranges);
+            let unew_parts = split_chunks(&mut self.unew, &ranges);
+            let mut flux_rest: &[FluxArrays] = &self.flux;
+            let mut u0_rest: &[Vec<Real>] = &self.u0;
+            let mut flux_parts: Vec<&[FluxArrays]> = Vec::with_capacity(ranges.len());
+            let mut u0_parts: Vec<&[Vec<Real>]> = Vec::with_capacity(ranges.len());
+            for r in &ranges {
+                let (fh, ft) = flux_rest.split_at(r.len());
+                flux_parts.push(fh);
+                flux_rest = ft;
+                let (uh, ut) = u0_rest.split_at(r.len());
+                u0_parts.push(uh);
+                u0_rest = ut;
+            }
+            std::thread::scope(|s| {
+                for (((blocks_part, unew_part), flux_part), u0_part) in block_parts
+                    .into_iter()
+                    .zip(unew_parts)
+                    .zip(flux_parts)
+                    .zip(u0_parts)
+                {
+                    s.spawn(move || {
+                        for (off, b) in blocks_part.iter_mut().enumerate() {
+                            let dx = [
+                                b.coords.dx[0] as Real,
+                                b.coords.dx[1] as Real,
+                                b.coords.dx[2] as Real,
+                            ];
+                            let arr = b.data.get_mut(CONS).expect("cons");
+                            native::apply_stage(
+                                arr.as_slice(),
+                                &u0_part[off],
+                                &flux_part[off],
+                                &shape,
+                                co,
+                                dt,
+                                dx,
+                                &mut unew_part[off],
+                            );
+                            arr.as_mut_slice().copy_from_slice(&unew_part[off]);
+                        }
+                    });
+                }
+            });
+        }
+
+        // Phase 4 — ghost exchange as per-pack task lists (shared shape
+        // with the Device path's boundary routing).
+        run_stage_exchange(sim)
+    }
+
+    /// Parallel min-reduction of the per-block CFL estimates over the
+    /// worker ranges, folded on the driver thread.
+    fn local_dt(&self, sim: &super::HydroSim) -> f64 {
+        let blocks = &sim.mesh.blocks;
+        if blocks.is_empty() {
+            return f64::INFINITY;
+        }
+        let pkg = &sim.pkg;
+        let ranges = if sim.mesh_data.is_current(&sim.mesh) {
+            sim.mesh_data.worker_block_ranges(self.nworkers)
+        } else {
+            vec![0..blocks.len()]
+        };
+        if ranges.len() <= 1 {
+            return blocks
+                .iter()
+                .map(|b| pkg.estimate_dt(&b.data, &b.coords))
+                .fold(f64::INFINITY, f64::min);
+        }
+        let mut mins = vec![f64::INFINITY; ranges.len()];
+        std::thread::scope(|s| {
+            for (r, out) in ranges.iter().zip(mins.iter_mut()) {
+                let r = r.clone();
+                s.spawn(move || {
+                    let mut m = f64::INFINITY;
+                    for b in &blocks[r] {
+                        m = m.min(pkg.estimate_dt(&b.data, &b.coords));
+                    }
+                    *out = m;
+                });
+            }
+        });
+        mins.into_iter().fold(f64::INFINITY, f64::min)
+    }
+}

@@ -3,29 +3,36 @@
 //! package tasks into task collections, reduces the timestep, runs AMR and
 //! load balancing, and writes outputs.
 //!
-//! Two execution spaces:
-//! * `Host`  — native Rust solver; supports everything (AMR, multilevel
-//!   meshes with flux correction, all BCs).
-//! * `Device` — PJRT artifacts; uniform periodic meshes (the configuration
-//!   of every performance experiment in the paper), with the three buffer
-//!   packing strategies of Fig. 8.
+//! Both execution spaces run through the shared pack-centric layer: the
+//! cycle loop is generic over [`StageExecutor`], and both executors consume
+//! the same cached [`MeshData`] pack partition (built once, invalidated
+//! only on regrid / load balance / restart):
+//! * [`HostExec`] — native Rust solver on a scoped-thread worker pool over
+//!   packs; supports everything (AMR, multilevel meshes with flux
+//!   correction, all BCs).
+//! * [`DeviceState`] — artifact launches per pack through the runtime, with
+//!   the three buffer packing strategies of Fig. 8; uniform periodic meshes
+//!   (the configuration of every performance experiment in the paper).
 
 pub mod bench;
 mod device;
+mod host;
 pub mod regrid;
 
 pub use device::DeviceState;
+pub use host::HostExec;
 
 use crate::bvals::{self, PackStrategy};
 use crate::comm::{tags, Comm, Payload, ReduceOp, World};
 use crate::config::ParameterInput;
 use crate::error::{Error, Result};
-use crate::hydro::native::{self, FluxArrays, Scratch, StageCoeffs, RK2_STAGES};
+use crate::hydro::native::{self, FluxArrays, StageCoeffs, RK2_STAGES};
 use crate::hydro::problems::{self, Problem};
 use crate::hydro::{HydroPackage, CONS};
 use crate::mesh::{Mesh, MeshConfig, NeighborKind};
+use crate::mesh_data::MeshData;
 use crate::metrics::{Timers, ZoneCycles};
-use crate::tasks::{TaskRegion, TaskStatus, NONE};
+use crate::util::backoff::{ProgressWait, STALL_LIMIT};
 use crate::vars::{resolve_packages, Package};
 use crate::Real;
 
@@ -54,6 +61,49 @@ pub trait EvolutionDriver: Driver {
 /// Multi-stage (RK) drivers: one task collection per stage.
 pub trait MultiStageDriver: EvolutionDriver {
     fn num_stages(&self) -> usize;
+}
+
+/// One execution space's stage engine. Implementations consume the shared
+/// [`MeshData`] pack partition; the cycle loop ([`HydroSim::step`]) is
+/// generic over this trait, so Host and Device share one driver shape.
+pub trait StageExecutor {
+    /// Snapshot the cycle-start state u0 (per pack / per block).
+    fn begin_cycle(&mut self, sim: &mut HydroSim) -> Result<()>;
+    /// Run one RK stage (`si` = stage index) including its boundary
+    /// communication.
+    fn stage(&mut self, sim: &mut HydroSim, co: StageCoeffs, si: usize, dt: Real)
+        -> Result<()>;
+    /// This rank's raw CFL dt after the last cycle (already scaled by the
+    /// package CFL number).
+    fn local_dt(&self, sim: &HydroSim) -> f64;
+}
+
+/// One full cycle (all RK stages) through an executor — the single code
+/// path both execution spaces run.
+pub(crate) fn run_cycle<E: StageExecutor>(
+    sim: &mut HydroSim,
+    exec: &mut E,
+    dt: Real,
+) -> Result<()> {
+    sim.mesh_data.validate(&sim.mesh)?;
+    exec.begin_cycle(sim)?;
+    for (si, co) in RK2_STAGES.iter().enumerate() {
+        exec.stage(sim, *co, si, dt)?;
+    }
+    Ok(())
+}
+
+/// The end-of-stage ghost exchange of the conserved state, expressed as
+/// per-pack task lists (one list per MeshBlockPack).
+pub(crate) fn run_stage_exchange(sim: &mut HydroSim) -> Result<()> {
+    let ranges = sim.mesh_data.block_ranges();
+    bvals::exchange_tasked(
+        &mut sim.mesh,
+        &sim.comm_cons,
+        CONS,
+        Some([native::IM1, native::IM2, native::IM3]),
+        &ranges,
+    )
 }
 
 /// Simulation parameters parsed from the input file + CLI.
@@ -120,6 +170,8 @@ struct FluxRecv {
 pub struct HydroSim {
     pub pin: ParameterInput,
     pub mesh: Mesh,
+    /// Cached pack partition + staging, shared by both execution spaces.
+    pub mesh_data: MeshData,
     pub pkg: HydroPackage,
     pub sp: SimParams,
     pub world: World,
@@ -127,11 +179,7 @@ pub struct HydroSim {
     comm_flux: Comm,
     comm_coll: Comm,
     pub device: Option<DeviceState>,
-    // native per-block work buffers (same order as mesh.blocks)
-    flux: Vec<FluxArrays>,
-    scratch: Scratch,
-    u0: Vec<Vec<Real>>,
-    unew: Vec<Vec<Real>>,
+    pub host: Option<HostExec>,
     flux_pending: Vec<FluxRecv>,
     pub time: f64,
     pub cycle: u64,
@@ -159,10 +207,12 @@ impl HydroSim {
         let comm_cons = world.comm(rank, tags::COMM_BVALS_BASE);
         let comm_flux = world.comm(rank, tags::COMM_FLUX);
         let comm_coll = world.comm(rank, 0);
+        let mesh_data = MeshData::build(&mesh, sp.pack_size, None);
 
         let mut sim = HydroSim {
             pin,
             mesh,
+            mesh_data,
             pkg,
             sp,
             world,
@@ -170,10 +220,7 @@ impl HydroSim {
             comm_flux,
             comm_coll,
             device: None,
-            flux: Vec::new(),
-            scratch: Scratch::default(),
-            u0: Vec::new(),
-            unew: Vec::new(),
+            host: None,
             flux_pending: Vec::new(),
             time: 0.0,
             cycle: 0,
@@ -196,7 +243,8 @@ impl HydroSim {
         sim.fill_derived();
 
         if sim.sp.exec == ExecSpace::Device {
-            sim.device = Some(DeviceState::new(&sim)?);
+            let dev = DeviceState::new(&mut sim)?;
+            sim.device = Some(dev);
         }
 
         // Initial timestep.
@@ -216,6 +264,7 @@ impl HydroSim {
             snap.leaves.clone(),
         );
         let costs = vec![1.0; tree.nblocks()];
+        self.device = None; // routes/staging are stale; rebuilt below
         self.mesh.ranks = balance::assign_blocks(&costs, self.mesh.nranks);
         self.mesh.tree = tree;
         self.mesh.rebuild_local_blocks();
@@ -232,16 +281,15 @@ impl HydroSim {
         )?;
         self.fill_derived();
         if self.sp.exec == ExecSpace::Device {
-            self.device = Some(DeviceState::new(self)?);
+            let dev = DeviceState::new(self)?;
+            self.device = Some(dev);
         }
         Ok(())
     }
 
     /// Write a restart snapshot of the current state.
     pub fn write_restart(&mut self, path: &str) -> Result<()> {
-        if let Some(dev) = &self.device {
-            dev.sync_to_blocks(&mut self.mesh)?;
-        }
+        self.sync_device_to_blocks()?;
         crate::io::write_snapshot(
             &self.mesh,
             &self.comm_coll,
@@ -253,13 +301,46 @@ impl HydroSim {
         )
     }
 
-    /// Resize per-block native work buffers after mesh changes.
+    /// Scatter device staging back into the block containers (no-op on the
+    /// Host path, where the containers are authoritative).
+    pub fn sync_device_to_blocks(&mut self) -> Result<()> {
+        if self.device.is_some() {
+            self.mesh_data.scatter(&mut self.mesh, CONS)?;
+        }
+        Ok(())
+    }
+
+    /// Rebuild the pack cache + per-block work buffers after mesh changes
+    /// (regrid, load balance, restart). The single invalidation point: the
+    /// pack plan is re-planned against the mesh's new version and the host
+    /// executor's work arrays are resized.
+    ///
+    /// Precondition: the DeviceState must be torn down first (set
+    /// `self.device = None`, then recreate it) — a rebuild under a live
+    /// device would zero its staging without re-gathering and leave its
+    /// routing tables sized for the old block set. Every caller honors
+    /// this today (init, restart, regrid-is-host-only).
     pub(crate) fn rebuild_work_buffers(&mut self) {
+        debug_assert!(
+            self.device.is_none(),
+            "tear down DeviceState before rebuild_work_buffers; recreate it \
+             after so it re-plans the packs and re-gathers staging"
+        );
+        self.mesh_data.ensure_current(&self.mesh, None);
+        // Host work arrays (fluxes, u0, u_new) are ~5x the conserved-state
+        // footprint; Device runs never touch them, so only the Host
+        // execution space pays for them.
         let shape = self.mesh.cfg.index_shape();
-        let nelem = crate::NHYDRO * shape.ncells_total();
-        self.flux = self.mesh.blocks.iter().map(|_| FluxArrays::new(&shape)).collect();
-        self.u0 = self.mesh.blocks.iter().map(|_| vec![0.0; nelem]).collect();
-        self.unew = self.mesh.blocks.iter().map(|_| vec![0.0; nelem]).collect();
+        self.host = if self.sp.exec == ExecSpace::Host {
+            Some(HostExec::new(
+                &shape,
+                self.mesh.blocks.len(),
+                self.mesh_data.npacks(),
+                self.mesh.nranks,
+            ))
+        } else {
+            None
+        };
     }
 
     pub fn fill_derived(&mut self) {
@@ -273,10 +354,13 @@ impl HydroSim {
         (self.mesh.tree.nblocks() * self.mesh.cfg.index_shape().ncells_interior()) as u64
     }
 
-    /// CFL timestep: package estimate per block, min-reduced across ranks.
+    /// CFL timestep: executor-local estimate (parallel min-reduction on the
+    /// Host path, staged dt launches on Device), min-reduced across ranks.
     pub fn reduce_dt(&mut self) -> f64 {
         let local = if let Some(dev) = &self.device {
-            dev.last_dt_local((self.pkg.cfl) as f64)
+            dev.local_dt(self)
+        } else if let Some(h) = &self.host {
+            h.local_dt(self)
         } else {
             self.mesh
                 .blocks
@@ -289,13 +373,13 @@ impl HydroSim {
 
     // -- flux correction (native, multilevel) --------------------------------
 
-    fn is_multilevel(&self) -> bool {
+    pub(crate) fn is_multilevel(&self) -> bool {
         self.mesh.tree.max_level() > 0
     }
 
     /// Fine side: restrict boundary face fluxes and send to the coarse
     /// neighbor (paper Sec. 3.7).
-    fn flux_corr_send(&mut self, bi: usize) {
+    pub(crate) fn flux_corr_send(&self, fx: &FluxArrays, bi: usize) {
         let shape = self.mesh.cfg.index_shape();
         let dim = shape.dim;
         let loc = self.mesh.blocks[bi].loc;
@@ -308,7 +392,6 @@ impl HydroSim {
             let NeighborKind::Coarser(cloc) = &nb.kind else { continue };
             let d = (0..3).find(|&d| nb.offset[d] != 0).unwrap();
             let side = if nb.offset[d] < 0 { 0 } else { 1 };
-            let fx = &self.flux[bi];
             let face_idx = if side == 0 { 0 } else { shape.n[d] };
             // restrict tangentially: coarse (tj, tk) <- mean of fine 2x2 (or
             // 2 in 2D). Tangential axes = all active axes != d.
@@ -371,7 +454,7 @@ impl HydroSim {
     }
 
     /// Coarse side: register expected flux corrections for this stage.
-    fn flux_corr_post_recvs(&mut self) {
+    pub(crate) fn flux_corr_post_recvs(&mut self) {
         self.flux_pending.clear();
         let shape = self.mesh.cfg.index_shape();
         let dim = shape.dim;
@@ -415,8 +498,8 @@ impl HydroSim {
         }
     }
 
-    /// Poll flux corrections; apply arrivals. True when done.
-    fn flux_corr_poll(&mut self) -> Result<bool> {
+    /// Poll flux corrections; apply arrivals into `flux`. True when done.
+    pub(crate) fn flux_corr_poll(&mut self, flux: &mut [FluxArrays]) -> Result<bool> {
         let dim = self.mesh.cfg.dim;
         let mut i = 0;
         while i < self.flux_pending.len() {
@@ -424,7 +507,7 @@ impl HydroSim {
             if let Some(payload) = self.comm_flux.try_recv(p.src, p.tag) {
                 let data = payload.into_f32()?;
                 let p = self.flux_pending.swap_remove(i);
-                apply_flux_correction(&mut self.flux[p.block], &p, dim, &data);
+                apply_flux_correction(&mut flux[p.block], &p, dim, &data);
             } else {
                 i += 1;
             }
@@ -432,101 +515,41 @@ impl HydroSim {
         Ok(self.flux_pending.is_empty())
     }
 
-    // -- native stage ---------------------------------------------------------
-
-    /// One RK stage on the Host path, woven as a task region per block
-    /// (compute fluxes -> flux-correction send/recv -> apply) followed by
-    /// the mesh-wide ghost exchange.
-    fn native_stage(&mut self, co: StageCoeffs, dt: Real) -> Result<()> {
-        let multilevel = self.is_multilevel();
-        let nblocks = self.mesh.blocks.len();
-        if multilevel {
-            self.flux_corr_post_recvs();
-        }
-
-        let mut region: TaskRegion<HydroSim> = TaskRegion::new(nblocks.max(1));
-        for bi in 0..nblocks {
-            let list = region.list(bi);
-            let t_flux = list.add(NONE, move |sim: &mut HydroSim| {
-                sim.compute_fluxes_block(bi);
-                TaskStatus::Complete
-            });
-            let t_send = list.add(&[t_flux], move |sim: &mut HydroSim| {
-                if sim.is_multilevel() {
-                    sim.flux_corr_send(bi);
-                }
-                TaskStatus::Complete
-            });
-            // flux receives are mesh-wide; the first list carries the poll
-            if bi == 0 && multilevel {
-                let t_recv = list.add(&[t_send], move |sim: &mut HydroSim| {
-                    match sim.flux_corr_poll() {
-                        Ok(true) => TaskStatus::Complete,
-                        Ok(false) => TaskStatus::Incomplete,
-                        Err(_) => TaskStatus::Incomplete,
-                    }
-                });
-                let _ = t_recv;
+    /// Wait (bounded spin-then-backoff, progress-aware watchdog) until
+    /// every registered flux correction has arrived and been applied.
+    pub(crate) fn flux_corr_wait(&mut self, flux: &mut [FluxArrays]) -> Result<()> {
+        let mut wait = ProgressWait::new(STALL_LIMIT);
+        let mut remaining = self.flux_pending.len();
+        loop {
+            if self.flux_corr_poll(flux)? {
+                return Ok(());
             }
-        }
-        region.execute(self, 500_000_000)?;
-
-        // All corrections are in (region completed) -> apply updates.
-        for bi in 0..nblocks {
-            self.apply_stage_block(bi, co, dt);
-        }
-
-        // Ghost exchange of the updated state.
-        bvals::exchange_blocking(
-            &mut self.mesh,
-            &self.comm_cons,
-            CONS,
-            Some([native::IM1, native::IM2, native::IM3]),
-        )?;
-        Ok(())
-    }
-
-    fn compute_fluxes_block(&mut self, bi: usize) {
-        let shape = self.mesh.cfg.index_shape();
-        let gamma = self.pkg.gamma;
-        let arr = self.mesh.blocks[bi].data.get(CONS).expect("cons");
-        native::compute_fluxes(arr.as_slice(), &shape, gamma, &mut self.flux[bi], &mut self.scratch);
-    }
-
-    fn apply_stage_block(&mut self, bi: usize, co: StageCoeffs, dt: Real) {
-        let shape = self.mesh.cfg.index_shape();
-        let dx = {
-            let c = &self.mesh.blocks[bi].coords;
-            [c.dx[0] as Real, c.dx[1] as Real, c.dx[2] as Real]
-        };
-        let arr = self.mesh.blocks[bi].data.get_mut(CONS).expect("cons");
-        native::apply_stage(
-            arr.as_slice(),
-            &self.u0[bi],
-            &self.flux[bi],
-            &shape,
-            co,
-            dt,
-            dx,
-            &mut self.unew[bi],
-        );
-        arr.as_mut_slice().copy_from_slice(&self.unew[bi]);
-    }
-
-    /// Save cycle-start state u0.
-    fn save_u0(&mut self) {
-        for (bi, b) in self.mesh.blocks.iter().enumerate() {
-            self.u0[bi].copy_from_slice(b.data.get(CONS).expect("cons").as_slice());
+            let now = self.flux_pending.len();
+            let progressed = now < remaining;
+            remaining = now;
+            if !wait.step(progressed) {
+                return Err(Error::Comm(format!(
+                    "flux correction stalled ({} receives missing after {:?} idle)",
+                    self.flux_pending.len(),
+                    wait.idle_elapsed()
+                )));
+            }
         }
     }
 
     // -- outputs --------------------------------------------------------------
 
     fn maybe_output(&mut self, force: bool) -> Result<()> {
-        if self.sp.output_dt > 0.0 && (force || self.time + 1e-12 >= self.next_output) {
-            if let Some(dev) = &self.device {
-                dev.sync_to_blocks(&mut self.mesh)?;
-            }
+        let fire_output =
+            self.sp.output_dt > 0.0 && (force || self.time + 1e-12 >= self.next_output);
+        let fire_history =
+            self.sp.history_dt > 0.0 && (force || self.time + 1e-12 >= self.next_history);
+        if fire_output || fire_history {
+            // Both consumers read the block containers; on the Device path
+            // staging is authoritative between outputs, so scatter once.
+            self.sync_device_to_blocks()?;
+        }
+        if fire_output {
             self.fill_derived();
             let path = format!(
                 "{}/{}.{:05}.pbin",
@@ -546,7 +569,7 @@ impl HydroSim {
                 self.next_output += self.sp.output_dt;
             }
         }
-        if self.sp.history_dt > 0.0 && (force || self.time + 1e-12 >= self.next_history) {
+        if fire_history {
             let sums = self.history_sums();
             let glob = self.comm_coll.allreduce_vec(&sums, ReduceOp::Sum);
             if self.mesh.my_rank == 0 {
@@ -672,16 +695,18 @@ impl EvolutionDriver for HydroSim {
         let t0 = std::time::Instant::now();
         let dt = self.dt as Real;
 
+        // One cycle through the shared executor layer (take-dance so the
+        // executor can borrow the rest of the sim).
         if self.device.is_some() {
-            // Device path: delegated (strategy-dependent launches).
             let mut dev = self.device.take().unwrap();
-            dev.step(self, dt)?;
+            let r = run_cycle(self, &mut dev, dt);
             self.device = Some(dev);
+            r?;
         } else {
-            self.save_u0();
-            for co in RK2_STAGES {
-                self.native_stage(co, dt)?;
-            }
+            let mut h = self.host.take().expect("host executor");
+            let r = run_cycle(self, &mut h, dt);
+            self.host = Some(h);
+            r?;
         }
 
         self.time += self.dt;

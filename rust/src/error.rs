@@ -1,47 +1,52 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — external
+//! derive crates are unavailable in this offline build).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by the framework.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("mesh error: {0}")]
     Mesh(String),
-
-    #[error("package error: {0}")]
     Package(String),
-
-    #[error("variable error: {0}")]
     Variable(String),
-
-    #[error("communication error: {0}")]
     Comm(String),
-
-    #[error("task error: {0}")]
     Task(String),
-
-    #[error("runtime (PJRT) error: {0}")]
     Runtime(String),
-
-    #[error("artifact error: {0}")]
     Artifact(String),
-
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("json error: {0}")]
+    Io(std::io::Error),
     Json(String),
-
-    #[error("xla error: {0}")]
-    Xla(String),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Xla(e.to_string())
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Mesh(m) => write!(f, "mesh error: {m}"),
+            Error::Package(m) => write!(f, "package error: {m}"),
+            Error::Variable(m) => write!(f, "variable error: {m}"),
+            Error::Comm(m) => write!(f, "communication error: {m}"),
+            Error::Task(m) => write!(f, "task error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime (PJRT) error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
     }
 }
 

@@ -25,6 +25,7 @@ pub mod error;
 pub mod hydro;
 pub mod io;
 pub mod mesh;
+pub mod mesh_data;
 pub mod metrics;
 pub mod particles;
 pub mod runtime;

@@ -188,6 +188,10 @@ pub struct Mesh {
     pub blocks: Vec<MeshBlock>,
     pub my_rank: usize,
     pub nranks: usize,
+    /// Monotone counter bumped whenever the local block set changes
+    /// (regrid, load balance, restart). Pack caches ([`crate::mesh_data`])
+    /// pin the version they were built against and refuse to run stale.
+    pub version: u64,
 }
 
 impl Mesh {
@@ -209,14 +213,18 @@ impl Mesh {
             blocks: Vec::new(),
             my_rank,
             nranks,
+            version: 0,
         };
         mesh.rebuild_local_blocks();
         mesh
     }
 
     /// (Re)create the local MeshBlocks from tree + rank assignment. Fresh
-    /// containers — callers migrate/restore data as needed.
+    /// containers — callers migrate/restore data as needed. Bumps
+    /// [`Mesh::version`], invalidating any pack cache built on the old
+    /// block set.
     pub fn rebuild_local_blocks(&mut self) {
+        self.version += 1;
         self.blocks.clear();
         let shape = self.cfg.index_shape();
         for (gid, loc) in self.tree.leaves().iter().enumerate() {

@@ -1,0 +1,425 @@
+//! `MeshData` — the cached pack-centric view of one rank's blocks
+//! (paper Sec. 3.6: logical packing of variables *and mesh blocks*).
+//!
+//! The local blocks are partitioned once into contiguous MeshBlockPacks
+//! honoring `parthenon/exec pack_size`; the partition plus its per-pack
+//! gather/scatter staging buffers are cached here and invalidated only when
+//! the mesh changes (regrid / load balance / restart) — not rebuilt per
+//! stage. Both execution spaces consume this one structure:
+//!
+//! * **Host** — packs are the unit of work for the scoped-thread worker
+//!   pool: each pack is a contiguous `first..first+nb` block range, so
+//!   per-block work arrays split into disjoint `&mut` chunks per worker.
+//! * **Device** — packs are the unit of launch: staging buffers hold the
+//!   flat `[nb, NVAR, Z, Y, X]` slabs and `[nb, BUFLEN]` boundary buffers
+//!   the artifacts consume.
+//!
+//! Staleness safety: a `MeshData` pins the [`Mesh::version`] it was built
+//! against. Every stage entry point calls [`MeshData::validate`] first, so
+//! running on a pack plan that no longer matches the block set is an error,
+//! never silent corruption. The single driver-side rebuild hook is
+//! `HydroSim::rebuild_work_buffers` (which goes through
+//! [`MeshData::ensure_current`]); on Device runs the DeviceState is torn
+//! down first and recreated after, so the plan is re-drawn from the
+//! artifact pack sizes and staging re-gathered.
+
+use std::ops::Range;
+
+use crate::bvals::bufspec;
+use crate::error::{Error, Result};
+use crate::mesh::Mesh;
+use crate::runtime::plan_packs;
+use crate::{Real, NHYDRO};
+
+/// One MeshBlockPack: a contiguous run of local block indices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PackDesc {
+    /// Pack index within the plan.
+    pub index: usize,
+    /// First local block index (order of `mesh.blocks`).
+    pub first: usize,
+    /// Number of blocks in the pack.
+    pub nb: usize,
+}
+
+impl PackDesc {
+    pub fn block_range(&self) -> Range<usize> {
+        self.first..self.first + self.nb
+    }
+}
+
+/// Per-pack staging storage for the device path (and any consumer that
+/// wants the packed flat layout). Allocated lazily by
+/// [`MeshData::ensure_staging`]; the host path never pays for it.
+#[derive(Debug, Default)]
+pub struct PackStaging {
+    /// `[nb, NVAR, Z, Y, X]` conserved state.
+    pub u: Vec<Real>,
+    /// Cycle-start state for the RK combine.
+    pub u0: Vec<Real>,
+    /// `[nb, BUFLEN]` inbound boundary buffers.
+    pub bufs_in: Vec<Real>,
+    /// `[nb, BUFLEN]` outbound boundary buffers.
+    pub bufs_out: Vec<Real>,
+}
+
+/// The cached pack partition of one rank's local blocks.
+#[derive(Debug)]
+pub struct MeshData {
+    pack_size: usize,
+    /// `Mesh::version` this plan was built against (0 = invalidated).
+    mesh_version: u64,
+    nblocks: usize,
+    block_elems: usize,
+    buflen: usize,
+    descs: Vec<PackDesc>,
+    staging: Vec<PackStaging>,
+    staged: bool,
+}
+
+impl MeshData {
+    /// Partition `mesh`'s local blocks into packs of at most `pack_size`
+    /// blocks. `avail` restricts pack sizes to the given ascending set
+    /// (device artifact variants); `None` allows any size up to
+    /// `pack_size` (host path).
+    pub fn build(mesh: &Mesh, pack_size: usize, avail: Option<&[usize]>) -> MeshData {
+        let shape = mesh.cfg.index_shape();
+        let mut md = MeshData {
+            pack_size: pack_size.max(1),
+            mesh_version: 0,
+            nblocks: 0,
+            block_elems: NHYDRO * shape.ncells_total(),
+            buflen: bufspec::buflen(&shape, NHYDRO),
+            descs: Vec::new(),
+            staging: Vec::new(),
+            staged: false,
+        };
+        md.rebuild(mesh, avail);
+        md
+    }
+
+    /// Recompute the plan for the mesh's current block set (drops staging;
+    /// it is re-allocated on demand).
+    pub fn rebuild(&mut self, mesh: &Mesh, avail: Option<&[usize]>) {
+        let sizes: Vec<usize> = match avail {
+            Some(a) if !a.is_empty() => a.to_vec(),
+            _ => (1..=self.pack_size).collect(),
+        };
+        let plan = plan_packs(mesh.blocks.len(), &sizes, self.pack_size);
+        self.descs.clear();
+        let mut first = 0usize;
+        for (index, nb) in plan.into_iter().enumerate() {
+            self.descs.push(PackDesc { index, first, nb });
+            first += nb;
+        }
+        self.nblocks = first;
+        debug_assert_eq!(self.nblocks, mesh.blocks.len());
+        self.staging.clear();
+        self.staged = false;
+        self.mesh_version = mesh.version;
+    }
+
+    /// Rebuild only if stale. Returns true when a rebuild happened.
+    pub fn ensure_current(&mut self, mesh: &Mesh, avail: Option<&[usize]>) -> bool {
+        if self.is_current(mesh) {
+            return false;
+        }
+        self.rebuild(mesh, avail);
+        true
+    }
+
+    /// Mark the plan unusable until the next rebuild.
+    pub fn invalidate(&mut self) {
+        // Mesh versions start at 1 (build bumps from 0), so 0 never matches.
+        self.mesh_version = 0;
+    }
+
+    pub fn is_current(&self, mesh: &Mesh) -> bool {
+        self.mesh_version != 0 && self.mesh_version == mesh.version
+    }
+
+    /// Error unless the plan matches the mesh's current block set. Every
+    /// stage entry point calls this — stale packs cannot be executed.
+    pub fn validate(&self, mesh: &Mesh) -> Result<()> {
+        if self.is_current(mesh) {
+            return Ok(());
+        }
+        Err(Error::Mesh(format!(
+            "stale MeshData: pack plan built for mesh version {} but mesh is \
+             at version {} (regrid/load-balance without pack-cache rebuild?)",
+            self.mesh_version, mesh.version
+        )))
+    }
+
+    pub fn pack_size(&self) -> usize {
+        self.pack_size
+    }
+
+    /// `Mesh::version` the current plan was built against (0 = invalid).
+    pub fn built_version(&self) -> u64 {
+        self.mesh_version
+    }
+
+    pub fn npacks(&self) -> usize {
+        self.descs.len()
+    }
+
+    pub fn nblocks(&self) -> usize {
+        self.nblocks
+    }
+
+    pub fn packs(&self) -> &[PackDesc] {
+        &self.descs
+    }
+
+    /// Elements in one block's `[NVAR, Z, Y, X]` slab.
+    pub fn block_elems(&self) -> usize {
+        self.block_elems
+    }
+
+    /// Flat boundary-buffer length per block.
+    pub fn buflen(&self) -> usize {
+        self.buflen
+    }
+
+    /// Per-pack local block ranges (for per-pack boundary task lists).
+    pub fn block_ranges(&self) -> Vec<Range<usize>> {
+        self.descs.iter().map(|d| d.block_range()).collect()
+    }
+
+    /// Pack-aligned contiguous block ranges for `nworkers` parallel
+    /// workers: packs are dealt out in contiguous groups balanced by
+    /// cumulative BLOCK count (not pack count — pack sizes can be very
+    /// uneven, e.g. a [64, 1] plan), and worker chunks never split a pack.
+    pub fn worker_block_ranges(&self, nworkers: usize) -> Vec<Range<usize>> {
+        let npacks = self.descs.len();
+        if npacks == 0 {
+            return Vec::new();
+        }
+        let nw = nworkers.max(1).min(npacks);
+        let mut out = Vec::with_capacity(nw);
+        let mut p = 0usize;
+        let mut remaining_blocks = self.nblocks;
+        for w in 0..nw {
+            let workers_left = nw - w;
+            // even split of the remaining blocks, rounded up
+            let target = (remaining_blocks + workers_left - 1) / workers_left;
+            let start = self.descs[p].first;
+            let mut got = 0usize;
+            loop {
+                got += self.descs[p].nb;
+                p += 1;
+                if p >= npacks {
+                    break;
+                }
+                // leave at least one pack for every later worker
+                if npacks - p <= workers_left - 1 {
+                    break;
+                }
+                if got >= target {
+                    break;
+                }
+            }
+            out.push(start..start + got);
+            remaining_blocks -= got;
+        }
+        debug_assert_eq!(p, npacks);
+        debug_assert_eq!(remaining_blocks, 0);
+        out
+    }
+
+    /// Whether staging buffers are allocated.
+    pub fn has_staging(&self) -> bool {
+        self.staged
+    }
+
+    /// Allocate (or keep) per-pack staging buffers sized for the current
+    /// plan. Idempotent.
+    pub fn ensure_staging(&mut self) {
+        if self.staged {
+            return;
+        }
+        self.staging = self
+            .descs
+            .iter()
+            .map(|d| PackStaging {
+                u: vec![0.0; d.nb * self.block_elems],
+                u0: vec![0.0; d.nb * self.block_elems],
+                bufs_in: vec![0.0; d.nb * self.buflen],
+                bufs_out: vec![0.0; d.nb * self.buflen],
+            })
+            .collect();
+        self.staged = true;
+    }
+
+    /// Pack plan + staging, borrowed together (device stage loops).
+    /// Requires [`MeshData::ensure_staging`] to have run.
+    pub fn parts_mut(&mut self) -> (&[PackDesc], &mut [PackStaging]) {
+        debug_assert!(self.staged, "ensure_staging before parts_mut");
+        (&self.descs, &mut self.staging)
+    }
+
+    pub fn staging(&self) -> &[PackStaging] {
+        &self.staging
+    }
+
+    /// Gather `var` from the authoritative block containers into the
+    /// per-pack `u` staging slabs.
+    pub fn gather(&mut self, mesh: &Mesh, var: &str) -> Result<()> {
+        self.validate(mesh)?;
+        self.ensure_staging();
+        let ne = self.block_elems;
+        for (d, p) in self.descs.iter().zip(self.staging.iter_mut()) {
+            for bi in 0..d.nb {
+                let arr = mesh.blocks[d.first + bi].data.get(var)?;
+                p.u[bi * ne..(bi + 1) * ne].copy_from_slice(arr.as_slice());
+            }
+        }
+        Ok(())
+    }
+
+    /// Scatter the per-pack `u` staging slabs back into the block
+    /// containers (IO / regrid / equivalence checks).
+    pub fn scatter(&self, mesh: &mut Mesh, var: &str) -> Result<()> {
+        self.validate(mesh)?;
+        if !self.staged {
+            return Err(Error::Mesh("MeshData scatter without staging".into()));
+        }
+        let ne = self.block_elems;
+        for (d, p) in self.descs.iter().zip(self.staging.iter()) {
+            for bi in 0..d.nb {
+                let arr = mesh.blocks[d.first + bi].data.get_mut(var)?;
+                arr.as_mut_slice()
+                    .copy_from_slice(&p.u[bi * ne..(bi + 1) * ne]);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ParameterInput;
+    use crate::mesh::MeshConfig;
+
+    fn mesh_2d(nblocks_side: usize) -> Mesh {
+        let nx = 8 * nblocks_side;
+        let deck = format!(
+            "<parthenon/mesh>\nnx1 = {nx}\nnx2 = {nx}\n\
+             <parthenon/meshblock>\nnx1 = 8\nnx2 = 8\n"
+        );
+        let mut pin = ParameterInput::from_str(&deck).unwrap();
+        let cfg = MeshConfig::from_params(&mut pin).unwrap();
+        Mesh::build(cfg, vec![], 0, 1)
+    }
+
+    #[test]
+    fn plan_covers_blocks_contiguously() {
+        let mesh = mesh_2d(4); // 16 blocks
+        for ps in [1usize, 3, 4, 16, 64] {
+            let md = MeshData::build(&mesh, ps, None);
+            assert_eq!(md.nblocks(), 16);
+            let mut next = 0usize;
+            for d in md.packs() {
+                assert_eq!(d.first, next, "packs must be contiguous");
+                assert!(d.nb >= 1 && d.nb <= ps.max(1));
+                next += d.nb;
+            }
+            assert_eq!(next, 16);
+        }
+        let md = MeshData::build(&mesh, 4, None);
+        assert_eq!(md.npacks(), 4);
+    }
+
+    #[test]
+    fn device_plan_respects_available_sizes() {
+        let mesh = mesh_2d(4); // 16 blocks
+        let md = MeshData::build(&mesh, 16, Some(&[1, 2, 4]));
+        for d in md.packs() {
+            assert!([1, 2, 4].contains(&d.nb));
+        }
+        assert_eq!(md.packs().iter().map(|d| d.nb).sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn stale_after_mesh_rebuild() {
+        let mut mesh = mesh_2d(2);
+        let mut md = MeshData::build(&mesh, 4, None);
+        assert!(md.is_current(&mesh));
+        assert!(md.validate(&mesh).is_ok());
+        mesh.rebuild_local_blocks(); // load-balance / regrid analog
+        assert!(!md.is_current(&mesh));
+        assert!(md.validate(&mesh).is_err(), "stale packs must be unusable");
+        assert!(md.ensure_current(&mesh, None));
+        assert!(md.validate(&mesh).is_ok());
+        assert!(!md.ensure_current(&mesh, None), "no rebuild when current");
+    }
+
+    #[test]
+    fn invalidate_forces_rebuild() {
+        let mesh = mesh_2d(2);
+        let mut md = MeshData::build(&mesh, 4, None);
+        md.invalidate();
+        assert!(md.validate(&mesh).is_err());
+        assert!(md.ensure_current(&mesh, None));
+        assert!(md.validate(&mesh).is_ok());
+    }
+
+    #[test]
+    fn worker_ranges_are_pack_aligned_and_cover() {
+        let mesh = mesh_2d(4); // 16 blocks
+        let md = MeshData::build(&mesh, 3, None); // packs 3,3,3,3,3,1
+        for nw in [1usize, 2, 3, 5, 99] {
+            let ranges = md.worker_block_ranges(nw);
+            assert!(ranges.len() <= nw.max(1));
+            let mut next = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, next);
+                next = r.end;
+                // pack alignment: every range boundary is a pack boundary
+                assert!(
+                    md.packs().iter().any(|d| d.first == r.start),
+                    "range start {} not a pack boundary",
+                    r.start
+                );
+            }
+            assert_eq!(next, 16);
+        }
+    }
+
+    #[test]
+    fn worker_ranges_balance_blocks_not_packs() {
+        // 9 blocks with plan [4,1,1,1,1,1]: pack-count dealing would give
+        // a worker 6 blocks and the other 3; block-count dealing gives 5/4.
+        let nx = 8 * 3;
+        let deck = format!(
+            "<parthenon/mesh>\nnx1 = {nx}\nnx2 = {nx}\n\
+             <parthenon/meshblock>\nnx1 = 8\nnx2 = 8\n"
+        );
+        let mut pin = ParameterInput::from_str(&deck).unwrap();
+        let cfg = MeshConfig::from_params(&mut pin).unwrap();
+        let mesh = Mesh::build(cfg, vec![], 0, 1);
+        let md = MeshData::build(&mesh, 4, Some(&[1, 4]));
+        let sizes: Vec<usize> = md.packs().iter().map(|d| d.nb).collect();
+        assert_eq!(sizes, vec![4, 1, 1, 1, 1, 1]);
+        let ranges = md.worker_block_ranges(2);
+        assert_eq!(ranges.len(), 2);
+        let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+        assert_eq!(lens, vec![5, 4], "block-balanced, pack-aligned split");
+    }
+
+    #[test]
+    fn staging_sizes_match_plan() {
+        let mesh = mesh_2d(2); // 4 blocks
+        let mut md = MeshData::build(&mesh, 4, None);
+        md.ensure_staging();
+        let (descs, staging) = md.parts_mut();
+        assert_eq!(descs.len(), staging.len());
+        for (d, p) in descs.iter().zip(staging.iter()) {
+            assert_eq!(p.u.len(), d.nb * NHYDRO * 12 * 12);
+            assert_eq!(p.u0.len(), p.u.len());
+            assert_eq!(p.bufs_in.len(), p.bufs_out.len());
+        }
+    }
+}

@@ -47,16 +47,37 @@ impl ArtifactKey {
     }
 }
 
-/// Parsed manifest.json.
+/// Parsed manifest.json — or the native interpreter's synthetic manifest,
+/// which advertises every variant (the interpreter specializes on demand).
 #[derive(Debug)]
 pub struct Manifest {
     pub dir: PathBuf,
     pub nghost: usize,
     pub nvar: usize,
     files: HashMap<ArtifactKey, String>,
+    native: bool,
 }
 
+/// Pack sizes the native interpreter advertises for fused/stage variants.
+const NATIVE_PACK_SIZES: &[usize] = &[1, 2, 4, 8, 16, 32, 64];
+
 impl Manifest {
+    /// The synthetic manifest of the native artifact interpreter: no files
+    /// on disk, every (kind, dim, n, nb) variant available.
+    pub fn native() -> Manifest {
+        Manifest {
+            dir: PathBuf::new(),
+            nghost: crate::NGHOST,
+            nvar: crate::NHYDRO,
+            files: HashMap::new(),
+            native: true,
+        }
+    }
+
+    pub fn is_native(&self) -> bool {
+        self.native
+    }
+
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
@@ -97,7 +118,7 @@ impl Manifest {
             files.insert(key, a.req("file")?.as_str().unwrap_or("").to_string());
         }
 
-        let m = Manifest { dir, nghost, nvar, files };
+        let m = Manifest { dir, nghost, nvar, files, native: false };
         m.cross_check_bufspec(&doc)?;
         Ok(m)
     }
@@ -145,10 +166,18 @@ impl Manifest {
     }
 
     pub fn has(&self, key: &ArtifactKey) -> bool {
+        if self.native {
+            return true;
+        }
         self.files.contains_key(key)
     }
 
     pub fn path(&self, key: &ArtifactKey) -> Result<PathBuf> {
+        if self.native {
+            return Err(Error::Artifact(
+                "native interpreter manifest has no artifact files".into(),
+            ));
+        }
         self.files
             .get(key)
             .map(|f| self.dir.join(f))
@@ -157,6 +186,9 @@ impl Manifest {
 
     /// Available pack sizes for a (kind, dim, n, impl), ascending.
     pub fn pack_sizes(&self, kind: &str, dim: usize, n: [usize; 3], impl_: &str) -> Vec<usize> {
+        if self.native {
+            return NATIVE_PACK_SIZES.to_vec();
+        }
         let mut v: Vec<usize> = self
             .files
             .keys()

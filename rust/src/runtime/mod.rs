@@ -11,3 +11,11 @@ mod pjrt;
 
 pub use manifest::{default_artifact_dir, ArtifactKey, Manifest};
 pub use pjrt::{plan_packs, Runtime, ScalArgs};
+
+/// Whether the Device execution space can run at all. With the native
+/// artifact interpreter this is always true; real AOT artifacts (when
+/// present under the artifact dir) are still validated against the native
+/// bufspec tables at load time.
+pub fn device_available() -> bool {
+    true
+}

@@ -159,10 +159,12 @@ impl<C> TaskRegion<C> {
 
     /// Poll lists round-robin until every task (incl. regional) completes.
     ///
-    /// `max_sweeps` bounds spinning (a sweep with zero global progress only
-    /// yields the thread — progress may depend on other ranks delivering
-    /// messages).
+    /// `max_sweeps` bounds the number of *consecutive idle* sweeps (zero
+    /// global progress — progress may depend on other ranks delivering
+    /// messages). Idle sweeps wait with bounded spin-then-backoff
+    /// ([`crate::util::backoff::Backoff`]) instead of pegging a core.
     pub fn execute(&mut self, ctx: &mut C, max_sweeps: usize) -> Result<()> {
+        let mut backoff = crate::util::backoff::Backoff::new();
         let mut sweeps = 0usize;
         loop {
             let mut progressed = false;
@@ -195,9 +197,10 @@ impl<C> TaskRegion<C> {
                          (deadlock or lost message?)"
                     )));
                 }
-                std::thread::yield_now();
+                backoff.snooze();
             } else {
                 sweeps = 0;
+                backoff.reset();
             }
         }
     }

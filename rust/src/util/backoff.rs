@@ -1,0 +1,181 @@
+//! Bounded spin-then-backoff waiting.
+//!
+//! The simulated-MPI fabric delivers messages from sibling rank threads, so
+//! waits are usually short — but an unbounded `yield_now` loop pegs a core
+//! for the whole wait (and on oversubscribed machines actively steals cycles
+//! from the rank that would unblock us). [`Backoff`] spins briefly for the
+//! fast path, then yields, then sleeps with exponentially growing naps
+//! capped at [`Backoff::MAX_NAP`].
+
+use std::time::{Duration, Instant};
+
+/// Escalating wait strategy: spin -> yield -> sleep.
+#[derive(Debug, Default)]
+pub struct Backoff {
+    step: u32,
+}
+
+impl Backoff {
+    /// Busy spins before the first yield.
+    const SPIN_LIMIT: u32 = 32;
+    /// Yields before the first sleep.
+    const YIELD_LIMIT: u32 = 160;
+    /// Sleep cap — keeps worst-case added latency small.
+    pub const MAX_NAP: Duration = Duration::from_micros(500);
+
+    pub fn new() -> Backoff {
+        Backoff::default()
+    }
+
+    /// Back to the fast path (call after observing progress).
+    pub fn reset(&mut self) {
+        self.step = 0;
+    }
+
+    /// True once the strategy has escalated to sleeping.
+    pub fn is_sleeping(&self) -> bool {
+        self.step >= Self::YIELD_LIMIT
+    }
+
+    /// Wait one step, escalating the strategy.
+    pub fn snooze(&mut self) {
+        if self.step < Self::SPIN_LIMIT {
+            std::hint::spin_loop();
+        } else if self.step < Self::YIELD_LIMIT {
+            std::thread::yield_now();
+        } else {
+            // exponential naps: 8us, 16us, ... capped at MAX_NAP
+            let exp = (self.step - Self::YIELD_LIMIT).min(6);
+            let nap = Duration::from_micros(8u64 << exp).min(Self::MAX_NAP);
+            std::thread::sleep(nap);
+        }
+        self.step = self.step.saturating_add(1);
+    }
+}
+
+/// Shared stall limit for communication waits (time with *zero progress*
+/// before a wait is declared stalled).
+pub const STALL_LIMIT: Duration = Duration::from_secs(60);
+
+/// Progress-aware waiter shared by every communication wait loop
+/// (blocking exchange, flux correction, device routing): resets the
+/// backoff *and* the stall watchdog whenever the caller observes
+/// progress, snoozes when idle, and reports a stall only after `limit`
+/// elapses with no progress at all.
+#[derive(Debug)]
+pub struct ProgressWait {
+    backoff: Backoff,
+    watchdog: Deadline,
+    limit: Duration,
+}
+
+impl ProgressWait {
+    pub fn new(limit: Duration) -> ProgressWait {
+        ProgressWait {
+            backoff: Backoff::new(),
+            watchdog: Deadline::new(limit),
+            limit,
+        }
+    }
+
+    /// Record one poll round. Returns false once the wait has stalled
+    /// (no progress for `limit`); otherwise waits one backoff step (only
+    /// when idle) and returns true.
+    pub fn step(&mut self, progressed: bool) -> bool {
+        if progressed {
+            self.backoff.reset();
+            self.watchdog = Deadline::new(self.limit);
+            return true;
+        }
+        if self.watchdog.expired() {
+            return false;
+        }
+        self.backoff.snooze();
+        true
+    }
+
+    /// Time since the last observed progress.
+    pub fn idle_elapsed(&self) -> Duration {
+        self.watchdog.elapsed()
+    }
+}
+
+/// Wall-clock watchdog for stall detection (replaces raw spin counting,
+/// whose meaning changed when waits stopped being pure busy-spins).
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    t0: Instant,
+    limit: Duration,
+}
+
+impl Deadline {
+    pub fn new(limit: Duration) -> Deadline {
+        Deadline { t0: Instant::now(), limit }
+    }
+
+    pub fn expired(&self) -> bool {
+        self.t0.elapsed() >= self.limit
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.t0.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escalates_to_sleep_and_resets() {
+        let mut b = Backoff::new();
+        assert!(!b.is_sleeping());
+        for _ in 0..(Backoff::YIELD_LIMIT + 2) {
+            b.snooze();
+        }
+        assert!(b.is_sleeping());
+        b.reset();
+        assert!(!b.is_sleeping());
+    }
+
+    #[test]
+    fn naps_are_capped() {
+        let mut b = Backoff::new();
+        for _ in 0..(Backoff::YIELD_LIMIT + 20) {
+            b.snooze();
+        }
+        // one more snooze must not exceed the cap by a large margin
+        let t0 = Instant::now();
+        b.snooze();
+        assert!(t0.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn progress_wait_resets_on_progress_and_stalls_when_idle() {
+        let mut pw = ProgressWait::new(Duration::from_millis(5));
+        // progress keeps it alive past the idle limit
+        for _ in 0..3 {
+            std::thread::sleep(Duration::from_millis(3));
+            assert!(pw.step(true));
+        }
+        // pure idling trips the watchdog
+        let t0 = Instant::now();
+        let mut stalled = false;
+        while t0.elapsed() < Duration::from_secs(5) {
+            if !pw.step(false) {
+                stalled = true;
+                break;
+            }
+        }
+        assert!(stalled, "idle wait must stall after the limit");
+    }
+
+    #[test]
+    fn deadline_expires() {
+        let d = Deadline::new(Duration::from_millis(1));
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(d.expired());
+        let d2 = Deadline::new(Duration::from_secs(3600));
+        assert!(!d2.expired());
+    }
+}

@@ -1,7 +1,27 @@
 //! Substrate utilities built from scratch (serde/criterion/proptest are not
 //! available in this offline environment — see DESIGN.md §3.17).
 
+pub mod backoff;
 pub mod benchkit;
 pub mod json;
 pub mod rng;
 pub mod testutil;
+
+/// Worker-thread count for host-side pack parallelism of ONE rank.
+///
+/// Rank threads of the simulated-MPI world share the machine, so the
+/// default divides the hardware parallelism by `ranks_sharing` (keeping
+/// ranks × workers ≈ cores instead of oversubscribing by a factor of the
+/// rank count). `PARTHENON_NUM_THREADS` overrides the per-rank count
+/// verbatim (deliberate oversubscription allowed); `cap` (usually the
+/// pack count) always bounds the result.
+pub fn num_workers(cap: usize, ranks_sharing: usize) -> usize {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let per_rank = (hw / ranks_sharing.max(1)).max(1);
+    let n = std::env::var("PARTHENON_NUM_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(per_rank);
+    n.min(cap.max(1)).max(1)
+}

@@ -71,6 +71,8 @@ pub fn max_state_diff(a: &[(usize, Vec<f32>)], b: &[(usize, Vec<f32>)]) -> f32 {
     m
 }
 
+/// Whether the Device execution space can run. Always true with the native
+/// artifact interpreter (real AOT artifacts are used when present).
 pub fn artifacts_available() -> bool {
-    parthenon::runtime::default_artifact_dir().join("manifest.json").exists()
+    parthenon::runtime::device_available()
 }

@@ -11,9 +11,7 @@ fn run_n(deck: &str, overrides: &[&str], ncycles: usize) -> (Vec<(usize, Vec<f32
     for _ in 0..ncycles {
         sim.step().unwrap();
     }
-    if let Some(dev) = sim.device.take() {
-        dev.sync_to_blocks(&mut sim.mesh).unwrap();
-    }
+    sim.sync_device_to_blocks().unwrap();
     (common::cons_by_gid(&sim), sim.time)
 }
 
@@ -111,9 +109,7 @@ fn host_vs_device_3d_multirank() {
             for _ in 0..4 {
                 sim.step().unwrap();
             }
-            if let Some(dev) = sim.device.take() {
-                dev.sync_to_blocks(&mut sim.mesh).unwrap();
-            }
+            sim.sync_device_to_blocks().unwrap();
             let mut blocks = common::cons_by_gid(&sim);
             o2.lock().unwrap().append(&mut blocks);
         });

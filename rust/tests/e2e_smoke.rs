@@ -24,10 +24,7 @@ fn device_multirank_kh() {
         for _ in 0..10 {
             sim.step().unwrap();
         }
-        if let Some(dev) = sim.device.take() {
-            dev.sync_to_blocks(&mut sim.mesh).unwrap();
-            sim.device = Some(dev);
-        }
+        sim.sync_device_to_blocks().unwrap();
         let after = coll.allreduce_vec(&sim.history_sums(), ReduceOp::Sum);
         let rel = ((after[0] - before[0]) / before[0]).abs();
         assert!(rel < 1e-5, "device KH mass drift {rel:.2e}");

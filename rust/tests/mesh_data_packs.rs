@@ -1,0 +1,137 @@
+//! Pack-cache lifecycle: the MeshData pack partition must be rebuilt after
+//! every mesh change (AMR regrid, load-balance shuffle, restart), running a
+//! stage on stale packs must be impossible, and the pack partition must not
+//! change results on the Host path (pack-parallel == sequential numerics).
+
+mod common;
+
+use parthenon::comm::World;
+use parthenon::config::ParameterInput;
+use parthenon::driver::{EvolutionDriver, HydroSim};
+use parthenon::mesh_data::MeshData;
+
+fn amr_overrides() -> Vec<&'static str> {
+    vec![
+        "parthenon/mesh/refinement=adaptive",
+        "parthenon/mesh/numlevel=2",
+        "parthenon/mesh/check_refine_interval=3",
+        "hydro/refine_criterion=pressure_gradient",
+        "hydro/refine_tol=0.25",
+        "hydro/derefine_tol=0.03",
+    ]
+}
+
+#[test]
+fn pack_plan_honors_pack_size() {
+    // 64-block mesh
+    let deck = common::input_deck("uniform", [64, 64, 1], [8, 8, 1], "");
+    for (ps, expect_packs) in [(1usize, 64usize), (4, 16), (16, 4), (64, 1)] {
+        let ov = format!("parthenon/exec/pack_size={ps}");
+        let sim = common::single_rank_sim(&deck, &[&ov]);
+        assert_eq!(sim.mesh_data.nblocks(), 64);
+        assert_eq!(sim.mesh_data.npacks(), expect_packs, "pack_size {ps}");
+        assert_eq!(sim.mesh_data.pack_size(), ps);
+        let total: usize = sim.mesh_data.packs().iter().map(|d| d.nb).sum();
+        assert_eq!(total, 64);
+    }
+}
+
+#[test]
+fn stage_on_stale_packs_is_impossible() {
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    let mut sim = common::single_rank_sim(&deck, &[]);
+    sim.step().unwrap();
+
+    // Simulate a mesh change that bypasses the driver's rebuild hook (the
+    // failure mode the version pin exists to catch).
+    sim.mesh.rebuild_local_blocks();
+    assert!(sim.mesh_data.validate(&sim.mesh).is_err());
+    let err = sim.step().unwrap_err();
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("stale MeshData"),
+        "expected stale-pack error, got: {msg}"
+    );
+}
+
+#[test]
+fn standalone_meshdata_tracks_mesh_version() {
+    let deck = common::input_deck("uniform", [32, 32, 1], [8, 8, 1], "");
+    let sim = common::single_rank_sim(&deck, &[]);
+    let mut md = MeshData::build(&sim.mesh, 4, None);
+    assert!(md.validate(&sim.mesh).is_ok());
+    assert_eq!(md.built_version(), sim.mesh.version);
+    md.invalidate();
+    assert!(md.validate(&sim.mesh).is_err());
+    assert!(md.ensure_current(&sim.mesh, None));
+    assert!(md.validate(&sim.mesh).is_ok());
+}
+
+#[test]
+fn amr_regrid_rebuilds_packs() {
+    let deck = common::input_deck("blast", [32, 32, 1], [8, 8, 1], "");
+    let mut sim = common::single_rank_sim(&deck, &amr_overrides());
+    let blocks0 = sim.mesh.blocks.len();
+    let v0 = sim.mesh.version;
+    let mut regridded = false;
+    for _ in 0..18 {
+        sim.step().unwrap();
+        // invariant at every cycle: the pack plan matches the live mesh
+        assert!(sim.mesh_data.validate(&sim.mesh).is_ok());
+        assert_eq!(sim.mesh_data.nblocks(), sim.mesh.blocks.len());
+        let total: usize = sim.mesh_data.packs().iter().map(|d| d.nb).sum();
+        assert_eq!(total, sim.mesh.blocks.len());
+        if sim.mesh.version != v0 {
+            regridded = true;
+        }
+    }
+    assert!(
+        regridded && sim.mesh.blocks.len() != blocks0,
+        "blast must trigger an AMR regrid for this test to bite \
+         ({blocks0} -> {} blocks, version {} -> {})",
+        sim.mesh.blocks.len(),
+        v0,
+        sim.mesh.version
+    );
+}
+
+#[test]
+fn load_balance_shuffle_rebuilds_packs_on_every_rank() {
+    // 2-rank adaptive run: regrids re-assign blocks across ranks (the
+    // load-balance shuffle); every rank's pack cache must track it.
+    let deck = common::input_deck("blast", [32, 32, 1], [8, 8, 1], "");
+    World::launch(2, move |rank, world| {
+        let mut pin = ParameterInput::from_str(&deck).unwrap();
+        for ov in amr_overrides() {
+            pin.apply_override(ov).unwrap();
+        }
+        let mut sim = HydroSim::new(pin, rank, world).unwrap();
+        let v0 = sim.mesh.version;
+        for _ in 0..15 {
+            sim.step().unwrap();
+            assert!(sim.mesh_data.validate(&sim.mesh).is_ok());
+            assert_eq!(sim.mesh_data.built_version(), sim.mesh.version);
+            assert_eq!(sim.mesh_data.nblocks(), sim.mesh.blocks.len());
+        }
+        assert!(sim.mesh.version > v0, "regrids must have shuffled blocks");
+    });
+}
+
+#[test]
+fn host_results_independent_of_pack_partition() {
+    // Pack-parallel execution must be bitwise identical to the 1-block-per-
+    // pack partition: per-block numerics do not depend on pack grouping.
+    let deck = common::input_deck("kh", [32, 32, 1], [4, 4, 1], ""); // 64 blocks
+    let run = |ps: &str| {
+        let mut sim = common::single_rank_sim(&deck, &[ps]);
+        for _ in 0..5 {
+            sim.step().unwrap();
+        }
+        common::cons_by_gid(&sim)
+    };
+    let a = run("parthenon/exec/pack_size=1");
+    let b = run("parthenon/exec/pack_size=4");
+    let c = run("parthenon/exec/pack_size=16");
+    assert_eq!(common::max_state_diff(&a, &b), 0.0, "ps=1 vs ps=4");
+    assert_eq!(common::max_state_diff(&b, &c), 0.0, "ps=4 vs ps=16");
+}
