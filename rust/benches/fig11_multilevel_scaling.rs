@@ -46,6 +46,43 @@ fn main() {
     }
     println!();
     table.print();
+
+    // -- cost-aware scheduling: static ranges vs work-stealing ---------------
+    // Single rank, multilevel mesh (uneven per-block cost once the EWMA has
+    // warmed up), worker-count sweep at pack_size 2 so the pool has enough
+    // packs to deal AND steal. The acceptance metric for the stealing
+    // executor: >= 15% over static at 8 workers on this shape
+    // (`sched/{static,steal}/w8` in the JSON).
+    let nworkers_list: &[usize] = if quick { &[2] } else { &[2, 4, 8] };
+    let mut table_s = Table::new(&["nworkers", "static", "stealing", "speedup"]);
+    println!("\nScheduler comparison (multilevel, 1 rank, pack_size 2):");
+    for &nw in nworkers_list {
+        let mut row = vec![format!("w={nw}")];
+        let mut zc = [0.0f64; 2];
+        for (si, sched) in ["static", "stealing"].iter().enumerate() {
+            let ovs = [
+                format!("parthenon/exec/sched={sched}"),
+                format!("parthenon/exec/nworkers={nw}"),
+                "parthenon/exec/pack_size=2".to_string(),
+            ];
+            let ov_refs: Vec<&str> = ovs.iter().map(|s| s.as_str()).collect();
+            // extra warmup cycles so the cost EWMA informs the seed
+            let run = measure(&deck, &ov_refs, 1, 3, meas.max(2));
+            zc[si] = run.zcps;
+            row.push(fmt_zcps(run.zcps));
+            let label = if *sched == "static" { "static" } else { "steal" };
+            samples.push(Sample {
+                label: format!("sched/{label}/w{nw}"),
+                secs: vec![run.wall / run.cycles as f64],
+                work: run.zcps * run.wall / run.cycles as f64,
+            });
+            eprintln!("  sched {sched} w{nw}: {} zc/s", fmt_zcps(run.zcps));
+        }
+        row.push(format!("{:.2}x", zc[1] / zc[0].max(1e-30)));
+        table_s.row(row);
+    }
+    table_s.print();
+
     write_results(
         "fig11_multilevel_scaling",
         &samples,

@@ -91,6 +91,35 @@ fn main() {
     println!("\nUniform mesh (host path, pack-parallel workers, zone-cycles/s):");
     table_h.print();
 
+    // -- host worker sweep: static vs stealing at fixed pack size --------------
+    // The tentpole lever: with uneven pack tails, stealing should close the
+    // gap as workers grow (JSON labels host_sched/{static,steal}/w{n}).
+    let mut table_w = Table::new(&["nworkers", "static", "stealing"]);
+    for &nw in &[1usize, 2, 4] {
+        let mut cells = vec![format!("w={nw}")];
+        for sched in ["static", "stealing"] {
+            let deck = deck_3d(mesh, host_bx);
+            let ovs = [
+                format!("parthenon/exec/sched={sched}"),
+                format!("parthenon/exec/nworkers={nw}"),
+                "parthenon/exec/pack_size=4".to_string(),
+            ];
+            let ov_refs: Vec<&str> = ovs.iter().map(|s| s.as_str()).collect();
+            let run = measure(&deck, &ov_refs, 1, 1, meas);
+            cells.push(fmt_zcps(run.zcps));
+            let label = if sched == "static" { "static" } else { "steal" };
+            samples.push(Sample {
+                label: format!("host_sched/{label}/w{nw}"),
+                secs: vec![run.wall / run.cycles as f64],
+                work: run.zcps * run.wall / run.cycles as f64,
+            });
+            eprintln!("  host sched {sched} w{nw}: {} zc/s", fmt_zcps(run.zcps));
+        }
+        table_w.row(cells);
+    }
+    println!("\nUniform mesh (host path, worker sweep, zone-cycles/s):");
+    table_w.print();
+
     // -- multilevel mesh on the Host path -------------------------------------
     let mut table2 = Table::new(&["mesh", "ranks=1", "ranks=2", "ranks=4"]);
     let mut cells = vec!["multilevel (host)".to_string()];

@@ -1,5 +1,12 @@
 //! Load balancing (paper Sec. 3.8): blocks ordered by the tree's Z-order
-//! (Morton) are split into contiguous, cost-balanced rank segments.
+//! (Morton) are split into contiguous, cost-balanced rank segments. Costs
+//! are the measured per-block EWMA weights ([`crate::mesh::MeshBlock::cost`],
+//! fed by the host stage timings in `metrics::Ewma`), mapped onto a new
+//! tree by [`derive_leaf_costs`].
+
+use std::collections::HashMap;
+
+use crate::mesh::LogicalLocation;
 
 /// Assign each block (in Z-order) to a rank by contiguous cost partition.
 ///
@@ -43,6 +50,41 @@ pub fn assignment_counts(assign: &[usize], nranks: usize) -> Vec<usize> {
         counts[r] += 1;
     }
     counts
+}
+
+/// Per-leaf costs for a (possibly new) leaf set from a map of measured
+/// block costs keyed by location: an unchanged leaf keeps its measured
+/// cost, a refined child inherits its parent's cost (hot regions stay
+/// hot), a derefined parent takes the mean of its measured children, and
+/// anything unknown falls back to the nominal 1.0.
+pub fn derive_leaf_costs(
+    leaves: &[LogicalLocation],
+    known: &HashMap<LogicalLocation, f64>,
+    dim: usize,
+) -> Vec<f64> {
+    leaves
+        .iter()
+        .map(|loc| {
+            if let Some(c) = known.get(loc) {
+                return *c;
+            }
+            if loc.level > 0 {
+                if let Some(c) = known.get(&loc.parent()) {
+                    return *c;
+                }
+            }
+            let vals: Vec<f64> = loc
+                .children(dim)
+                .iter()
+                .filter_map(|ch| known.get(ch).copied())
+                .collect();
+            if vals.is_empty() {
+                1.0
+            } else {
+                vals.iter().sum::<f64>() / vals.len() as f64
+            }
+        })
+        .collect()
 }
 
 /// The migration plan between two assignments of the *same* block list:
@@ -111,6 +153,29 @@ mod tests {
         let a = assign_blocks(&costs, 2);
         assert_eq!(a[0], 0);
         assert!(a[1..].iter().all(|&r| r == 1), "{a:?}");
+    }
+
+    #[test]
+    fn derive_leaf_costs_inherits_across_levels() {
+        use crate::mesh::LogicalLocation;
+        let mut known = HashMap::new();
+        let kept = LogicalLocation::new(0, 0, 0, 0);
+        let hot_parent = LogicalLocation::new(0, 1, 0, 0);
+        known.insert(kept, 2.0);
+        known.insert(hot_parent, 4.0);
+        // children of a coarse leaf that will be derefined
+        let dpar = LogicalLocation::new(0, 1, 1, 0);
+        for (ci, ch) in dpar.children(2).into_iter().enumerate() {
+            known.insert(ch, (ci + 1) as f64); // mean = 2.5
+        }
+        let leaves = vec![
+            kept,                                // unchanged -> 2.0
+            hot_parent.children(2)[0],           // refined -> parent's 4.0
+            dpar,                                // derefined -> mean 2.5
+            LogicalLocation::new(0, 0, 1, 0),    // unknown -> 1.0
+        ];
+        let costs = derive_leaf_costs(&leaves, &known, 2);
+        assert_eq!(costs, vec![2.0, 4.0, 2.5, 1.0]);
     }
 
     #[test]

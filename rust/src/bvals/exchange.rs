@@ -16,11 +16,39 @@ use super::bufspec::{self, Slab};
 use super::prolong;
 use crate::comm::{tags, Comm, Payload};
 use crate::mesh::{
-    BoundaryCondition, IndexShape, LogicalLocation, Mesh, NeighborKind,
+    BlockTree, BoundaryCondition, IndexShape, LogicalLocation, Mesh, MeshBlock,
+    NeighborKind,
 };
 use crate::tasks::{TaskRegion, TaskStatus, NONE};
 use crate::util::backoff::{ProgressWait, STALL_LIMIT};
+use crate::util::stealing::StealPolicy;
 use crate::Real;
+
+/// The immutable mesh topology the exchange engine reads: shared by every
+/// per-pack context, so block slices can be handed to worker threads while
+/// the tree/rank tables stay borrowed once (`Send`-splittable contexts).
+#[derive(Clone, Copy)]
+pub struct ExchTopo<'a> {
+    pub shape: IndexShape,
+    pub dim: usize,
+    pub tree: &'a BlockTree,
+    pub ranks: &'a [usize],
+}
+
+impl<'a> ExchTopo<'a> {
+    pub fn of(mesh: &'a Mesh) -> ExchTopo<'a> {
+        ExchTopo {
+            shape: mesh.cfg.index_shape(),
+            dim: mesh.cfg.dim,
+            tree: &mesh.tree,
+            ranks: &mesh.ranks,
+        }
+    }
+
+    fn rank_of(&self, gid: usize) -> usize {
+        self.ranks[gid]
+    }
+}
 
 /// Device-path buffer packing strategies (paper Fig. 8). `Native` is the
 /// CPU/host path where packing happens in plain copies.
@@ -249,23 +277,23 @@ const CLASS_PROLONG: usize = 2 << 8;
 /// neighbor list) and the coarse side (this function) so message sets match
 /// exactly — including corner adjacency through the same coarse leaf.
 fn pairs_toward_coarse(
-    mesh: &Mesh,
+    t: &ExchTopo,
     cloc: &LogicalLocation,
 ) -> Vec<(LogicalLocation, [i32; 3], usize)> {
     use std::collections::HashSet;
     let mut fines: HashSet<LogicalLocation> = HashSet::new();
-    for nb in mesh.tree.find_neighbors(cloc) {
+    for nb in t.tree.find_neighbors(cloc) {
         if let NeighborKind::Finer(fs) = nb.kind {
             fines.extend(fs);
         }
     }
     let mut out = Vec::new();
     for f in fines {
-        for (slot, off) in crate::mesh::neighbor_offsets(mesh.cfg.dim)
+        for (slot, off) in crate::mesh::neighbor_offsets(t.dim)
             .into_iter()
             .enumerate()
         {
-            if let NeighborKind::Coarser(c) = mesh.tree.resolve_neighbor(&f, off) {
+            if let NeighborKind::Coarser(c) = t.tree.resolve_neighbor(&f, off) {
                 if c == *cloc {
                     out.push((f, off, slot));
                 }
@@ -277,7 +305,7 @@ fn pairs_toward_coarse(
 
 /// Post every outbound boundary segment of `var` for all local blocks.
 pub fn post_sends(mesh: &Mesh, comm: &Comm, var: &str) -> crate::error::Result<()> {
-    post_sends_range(mesh, comm, var, 0..mesh.blocks.len())
+    post_sends_blocks(&ExchTopo::of(mesh), &mesh.blocks, comm, var)
 }
 
 /// Post outbound boundary segments for one pack's blocks
@@ -288,26 +316,38 @@ pub fn post_sends_range(
     var: &str,
     range: Range<usize>,
 ) -> crate::error::Result<()> {
-    let shape = mesh.cfg.index_shape();
-    for b in &mesh.blocks[range] {
+    post_sends_blocks(&ExchTopo::of(mesh), &mesh.blocks[range], comm, var)
+}
+
+/// Slice-based core of the send side: posts the outbound segments of the
+/// given blocks against the shared topology (callable from any worker with
+/// a disjoint block slice).
+pub fn post_sends_blocks(
+    t: &ExchTopo,
+    blocks: &[MeshBlock],
+    comm: &Comm,
+    var: &str,
+) -> crate::error::Result<()> {
+    let shape = t.shape;
+    for b in blocks {
         let arr = b.data.get(var)?;
         let nvar = arr.dims()[0];
         let data = arr.as_slice();
         let mut sent_to_finer = false;
-        for nb in mesh.tree.find_neighbors(&b.loc) {
+        for nb in t.tree.find_neighbors(&b.loc) {
             let opp = opposite_offset(nb.offset);
             match &nb.kind {
                 NeighborKind::Physical => {}
                 NeighborKind::SameLevel(nloc) => {
                     let slab = bufspec::send_slab(nb.offset, &shape);
                     let payload = extract_box(data, &shape, nvar, &slab);
-                    let ngid = mesh.tree.gid_of(nloc).unwrap();
-                    let slot = offset_index(mesh.cfg.dim, opp);
+                    let ngid = t.tree.gid_of(nloc).unwrap();
+                    let slot = offset_index(t.dim, opp);
                     let tag = tags::bval_tag(
                         ngid,
                         CLASS_SAME | (slot << 3) | child_code(&b.loc),
                     );
-                    comm.isend(mesh.rank_of(ngid), tag, Payload::F32(payload));
+                    comm.isend(t.rank_of(ngid), tag, Payload::F32(payload));
                 }
                 NeighborKind::Coarser(cloc) => {
                     // restrict and send; tagged by the direction we sent
@@ -315,13 +355,13 @@ pub fn post_sends_range(
                     let slab = fine_send_slab(nb.offset, &shape);
                     let mut payload = Vec::new();
                     prolong::restrict_slab(data, &shape, nvar, &slab, &mut payload);
-                    let ngid = mesh.tree.gid_of(cloc).unwrap();
-                    let slot = offset_index(mesh.cfg.dim, opp);
+                    let ngid = t.tree.gid_of(cloc).unwrap();
+                    let slot = offset_index(t.dim, opp);
                     let tag = tags::bval_tag(
                         ngid,
                         CLASS_RESTRICT | (slot << 3) | child_code(&b.loc),
                     );
-                    comm.isend(mesh.rank_of(ngid), tag, Payload::F32(payload));
+                    comm.isend(t.rank_of(ngid), tag, Payload::F32(payload));
                 }
                 NeighborKind::Finer(_) => {
                     sent_to_finer = true;
@@ -330,15 +370,15 @@ pub fn post_sends_range(
         }
         if sent_to_finer {
             // prolongation boxes: one per (fine block, fine offset) pair
-            for (floc, off, fslot) in pairs_toward_coarse(mesh, &b.loc) {
+            for (floc, off, fslot) in pairs_toward_coarse(t, &b.loc) {
                 let (local, _clo, _dims) = coarse_prolong_box(off, &floc, &shape);
                 let payload = extract_box(data, &shape, nvar, &local);
-                let ngid = mesh.tree.gid_of(&floc).unwrap();
+                let ngid = t.tree.gid_of(&floc).unwrap();
                 let tag = tags::bval_tag(
                     ngid,
                     CLASS_PROLONG | (fslot << 3) | child_code(&b.loc),
                 );
-                comm.isend(mesh.rank_of(ngid), tag, Payload::F32(payload));
+                comm.isend(t.rank_of(ngid), tag, Payload::F32(payload));
             }
         }
     }
@@ -363,24 +403,34 @@ pub fn post_receives(mesh: &Mesh, comm: &Comm, var: &str) -> ExchangeState {
 
 /// Register the inbound segments expected by one pack's blocks
 /// (`blocks[range]`) — the per-pack receive registration of the stage task
-/// collection.
+/// collection. Block indices in the returned state are mesh-global (poll
+/// with the full block list, or a slice whose base matches `range.start`).
 pub fn post_receives_range(
     mesh: &Mesh,
     _comm: &Comm,
     _var: &str,
     range: Range<usize>,
 ) -> ExchangeState {
-    let shape = mesh.cfg.index_shape();
+    let base = range.start;
+    post_receives_blocks(&ExchTopo::of(mesh), &mesh.blocks[range], base)
+}
+
+/// Slice-based core of the receive side: registers the inbound segments of
+/// the given blocks. `Pending::block` indices are `base + slice index`, so
+/// the state must be polled against a slice whose first block sits at
+/// local index `base` (the whole block list for `base == 0` plus the full
+/// slice, or a pack slice with `base == 0` in the per-pack contexts).
+pub fn post_receives_blocks(
+    t: &ExchTopo,
+    blocks: &[MeshBlock],
+    base: usize,
+) -> ExchangeState {
+    let shape = t.shape;
     let mut items = Vec::new();
-    for (bi, b) in mesh
-        .blocks
-        .iter()
-        .enumerate()
-        .skip(range.start)
-        .take(range.len())
-    {
+    for (i, b) in blocks.iter().enumerate() {
+        let bi = base + i;
         let mut has_finer = false;
-        for nb in mesh.tree.find_neighbors(&b.loc) {
+        for nb in t.tree.find_neighbors(&b.loc) {
             let my_slot = nb.nbr_index;
             match &nb.kind {
                 NeighborKind::Physical => {}
@@ -390,10 +440,10 @@ pub fn post_receives_range(
                         b.gid,
                         CLASS_SAME | (my_slot << 3) | child_code(nloc),
                     );
-                    let ngid = mesh.tree.gid_of(nloc).unwrap();
+                    let ngid = t.tree.gid_of(nloc).unwrap();
                     items.push((
                         Pending::Same { block: bi, slab },
-                        mesh.rank_of(ngid),
+                        t.rank_of(ngid),
                         tag,
                     ));
                 }
@@ -411,10 +461,10 @@ pub fn post_receives_range(
                         b.gid,
                         CLASS_PROLONG | (my_slot << 3) | child_code(cloc),
                     );
-                    let ngid = mesh.tree.gid_of(cloc).unwrap();
+                    let ngid = t.tree.gid_of(cloc).unwrap();
                     items.push((
                         Pending::FromCoarse { block: bi, ghost, clo, cdims, fine_lo },
-                        mesh.rank_of(ngid),
+                        t.rank_of(ngid),
                         tag,
                     ));
                 }
@@ -426,19 +476,19 @@ pub fn post_receives_range(
         if has_finer {
             // we are the coarse side: expect one restricted box per
             // (fine block, fine offset) pair pointing at us
-            for (floc, off, fslot) in pairs_toward_coarse(mesh, &b.loc) {
+            for (floc, off, fslot) in pairs_toward_coarse(t, &b.loc) {
                 let slab = coarse_recv_restriction_box(off, &floc, &shape);
                 // sender tags with the direction it sent through = -off
-                let send_dir = offset_index(mesh.cfg.dim, opposite_offset(off));
+                let send_dir = offset_index(t.dim, opposite_offset(off));
                 let _ = fslot;
                 let tag = tags::bval_tag(
                     b.gid,
                     CLASS_RESTRICT | (send_dir << 3) | child_code(&floc),
                 );
-                let ngid = mesh.tree.gid_of(&floc).unwrap();
+                let ngid = t.tree.gid_of(&floc).unwrap();
                 items.push((
                     Pending::FromFine { block: bi, slab },
-                    mesh.rank_of(ngid),
+                    t.rank_of(ngid),
                     tag,
                 ));
             }
@@ -457,6 +507,20 @@ pub fn poll_receives(
     state: &mut ExchangeState,
 ) -> crate::error::Result<bool> {
     let shape = mesh.cfg.index_shape();
+    poll_receives_blocks(&shape, &mut mesh.blocks, 0, comm, var, state)
+}
+
+/// Slice-based core of the poll: `blocks[0]` must sit at the local index
+/// `base` the state was registered with, so a per-pack context can poll
+/// its own disjoint block slice from a worker thread.
+pub fn poll_receives_blocks(
+    shape: &IndexShape,
+    blocks: &mut [MeshBlock],
+    base: usize,
+    comm: &Comm,
+    var: &str,
+    state: &mut ExchangeState,
+) -> crate::error::Result<bool> {
     let mut all = true;
     for (idx, (pending, src, tag)) in state.items.iter().enumerate() {
         if state.done[idx] {
@@ -469,16 +533,16 @@ pub fn poll_receives(
         let data = payload.into_f32()?;
         match pending {
             Pending::Same { block, slab } | Pending::FromFine { block, slab } => {
-                let arr = mesh.blocks[*block].data.get_mut(var)?;
+                let arr = blocks[*block - base].data.get_mut(var)?;
                 let nvar = arr.dims()[0];
-                insert_box(arr.as_mut_slice(), &shape, nvar, slab, &data);
+                insert_box(arr.as_mut_slice(), shape, nvar, slab, &data);
             }
             Pending::FromCoarse { block, ghost, clo, cdims, fine_lo } => {
-                let arr = mesh.blocks[*block].data.get_mut(var)?;
+                let arr = blocks[*block - base].data.get_mut(var)?;
                 let nvar = arr.dims()[0];
                 prolong::prolongate_ghost_slab(
                     arr.as_mut_slice(),
-                    &shape,
+                    shape,
                     nvar,
                     ghost,
                     *fine_lo,
@@ -642,4 +706,128 @@ pub fn exchange_tasked(
     }
     apply_block_physical_bcs(mesh, var, vector_comps)?;
     Ok(())
+}
+
+/// Per-pack exchange context for the parallel task-region executor: owns a
+/// disjoint `&mut` slice of the rank's blocks plus the shared topology, so
+/// the whole context is `Send` and its task list can be swept from any
+/// worker thread while other packs' lists run concurrently.
+struct PackExchCtx<'a> {
+    topo: ExchTopo<'a>,
+    blocks: &'a mut [MeshBlock],
+    comm: &'a Comm,
+    var: &'a str,
+    state: Option<ExchangeState>,
+    error: Option<crate::error::Error>,
+    /// Shared across all packs: set on the first error so every other
+    /// pack's poll list drains immediately instead of waiting out the
+    /// stall watchdog for segments that were never sent.
+    abort: &'a std::sync::atomic::AtomicBool,
+}
+
+/// [`exchange_tasked`] with the per-pack task lists executed on the
+/// work-stealing worker pool instead of being polled on one thread: each
+/// pack's post/poll list is an independent pool item, so boundary
+/// communication of slow packs is polled by whichever worker is idle
+/// (stealing), not serialized behind every other pack's sweep. Physical
+/// BCs run on the caller once all receives have landed.
+///
+/// Results are bitwise identical to the serial path: every received
+/// segment is written to a disjoint ghost slab exactly once, so arrival
+/// and polling order cannot change the final state.
+pub fn exchange_tasked_parallel(
+    mesh: &mut Mesh,
+    comm: &Comm,
+    var: &str,
+    vector_comps: Option<[usize; 3]>,
+    pack_ranges: &[Range<usize>],
+    nworkers: usize,
+    policy: StealPolicy,
+) -> crate::error::Result<()> {
+    if pack_ranges.is_empty() {
+        return apply_block_physical_bcs(mesh, var, vector_comps);
+    }
+    if nworkers <= 1 || policy == StealPolicy::NoSteal {
+        return exchange_tasked(mesh, comm, var, vector_comps, pack_ranges);
+    }
+    let npacks = pack_ranges.len();
+    let mut first_error = None;
+    {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let abort = AtomicBool::new(false);
+        let topo = ExchTopo {
+            shape: mesh.cfg.index_shape(),
+            dim: mesh.cfg.dim,
+            tree: &mesh.tree,
+            ranks: &mesh.ranks,
+        };
+        // split the rank's blocks into disjoint per-pack slices
+        let mut rest: &mut [MeshBlock] = &mut mesh.blocks;
+        let mut cursor = 0usize;
+        let mut ctxs = Vec::with_capacity(npacks);
+        for r in pack_ranges {
+            debug_assert_eq!(r.start, cursor, "pack ranges must tile the blocks");
+            let (head, tail) = rest.split_at_mut(r.len());
+            rest = tail;
+            cursor = r.end;
+            ctxs.push(PackExchCtx {
+                topo,
+                blocks: head,
+                comm,
+                var,
+                state: None,
+                error: None,
+                abort: &abort,
+            });
+        }
+        let mut region: TaskRegion<PackExchCtx> = TaskRegion::new(npacks);
+        for pi in 0..npacks {
+            let list = region.list(pi);
+            let t_post = list.add(NONE, |c: &mut PackExchCtx| {
+                match post_sends_blocks(&c.topo, c.blocks, c.comm, c.var) {
+                    Ok(()) => {
+                        c.state = Some(post_receives_blocks(&c.topo, c.blocks, 0));
+                    }
+                    Err(e) => {
+                        if c.error.is_none() {
+                            c.error = Some(e);
+                        }
+                        c.abort.store(true, Ordering::SeqCst);
+                    }
+                }
+                TaskStatus::Complete
+            });
+            let _t_poll = list.add(&[t_post], |c: &mut PackExchCtx| {
+                if c.error.is_some() || c.abort.load(Ordering::SeqCst) {
+                    // a pack errored: every list drains fast so the real
+                    // error surfaces instead of a watchdog stall
+                    return TaskStatus::Complete;
+                }
+                let PackExchCtx { topo, blocks, comm, var, state, error, abort } = c;
+                let Some(state) = state.as_mut() else {
+                    return TaskStatus::Complete; // post failed; error recorded
+                };
+                match poll_receives_blocks(&topo.shape, blocks, 0, comm, var, state) {
+                    Ok(true) => TaskStatus::Complete,
+                    Ok(false) => TaskStatus::Incomplete,
+                    Err(e) => {
+                        *error = Some(e);
+                        abort.store(true, Ordering::SeqCst);
+                        TaskStatus::Complete
+                    }
+                }
+            });
+        }
+        let ctxs = region.execute_parallel(ctxs, nworkers, policy, STALL_LIMIT)?;
+        for c in ctxs {
+            if let Some(e) = c.error {
+                first_error = Some(e);
+                break;
+            }
+        }
+    }
+    if let Some(e) = first_error {
+        return Err(e);
+    }
+    apply_block_physical_bcs(mesh, var, vector_comps)
 }

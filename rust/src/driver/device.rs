@@ -101,10 +101,44 @@ impl DeviceState {
         let (seg_offs, _) = bufspec::segment_offsets(&shape, NHYDRO);
         let seg_lens = bufspec::segment_lengths(&shape, NHYDRO);
 
-        // Routing tables.
-        let opp = bufspec::opposite_index(dim);
         let nlocal = mesh.blocks.len();
-        let mut routes = Vec::with_capacity(nlocal);
+        let routes = Self::build_routes(mesh)?;
+
+        let comm = sim.world.comm(mesh.my_rank, tags::COMM_BVALS_BASE + 1);
+        let mut dev = DeviceState {
+            rt,
+            shape,
+            strategy,
+            impl_: sim.sp.impl_.clone(),
+            plan_sizes,
+            routes,
+            seg_offs,
+            seg_lens,
+            buflen,
+            block_elems,
+            last_dts: vec![0.0; nlocal],
+            comm,
+            tmp: vec![0.0; block_elems],
+            gamma: sim.pkg.gamma,
+        };
+
+        // Shared pack partition: re-plan onto the artifact sizes + staging
+        // (preserving any still-clean staging), gather only dirty packs.
+        sim.mesh_data
+            .rebuild_preserving(&sim.mesh, Some(&dev.plan_sizes));
+        sim.mesh_data.gather_dirty(&sim.mesh, CONS)?;
+        // Bootstrap: fill bufs_in once (pack + route) and compute dt.
+        let scal0 = dev.scal(StageCoeffs { g0: 0.0, g1: 1.0, beta: 1.0 }, 0.0, &sim.mesh);
+        let all: Vec<usize> = (0..sim.mesh_data.npacks()).collect();
+        dev.bootstrap(&mut sim.mesh_data, scal0, &all)?;
+        Ok(dev)
+    }
+
+    /// Routing tables for the current (uniform) mesh — rebuilt after a
+    /// load balance without tearing the runtime/staging down.
+    fn build_routes(mesh: &Mesh) -> Result<Vec<Vec<NbrEntry>>> {
+        let opp = bufspec::opposite_index(mesh.cfg.dim);
+        let mut routes = Vec::with_capacity(mesh.blocks.len());
         for b in &mesh.blocks {
             let mut entries = Vec::new();
             for nb in mesh.tree.find_neighbors(&b.loc) {
@@ -126,32 +160,46 @@ impl DeviceState {
             }
             routes.push(entries);
         }
+        Ok(routes)
+    }
 
-        let comm = sim.world.comm(mesh.my_rank, tags::COMM_BVALS_BASE + 1);
-        let mut dev = DeviceState {
-            rt,
-            shape,
-            strategy,
-            impl_: sim.sp.impl_.clone(),
-            plan_sizes,
-            routes,
-            seg_offs,
-            seg_lens,
-            buflen,
-            block_elems,
-            last_dts: vec![0.0; nlocal],
-            comm,
-            tmp: vec![0.0; block_elems],
-            gamma: sim.pkg.gamma,
-        };
+    /// Pack sizes the plan may draw from (artifact variants).
+    pub(crate) fn plan_sizes(&self) -> &[usize] {
+        &self.plan_sizes
+    }
 
-        // Shared pack partition: re-plan onto the artifact sizes + staging.
-        sim.mesh_data.rebuild(&sim.mesh, Some(&dev.plan_sizes));
-        sim.mesh_data.gather(&sim.mesh, CONS)?;
-        // Bootstrap: fill bufs_in once (pack + route) and compute dt.
-        let scal0 = dev.scal(StageCoeffs { g0: 0.0, g1: 1.0, beta: 1.0 }, 0.0, &sim.mesh);
-        dev.bootstrap(&mut sim.mesh_data, scal0)?;
-        Ok(dev)
+    /// The last measured per-block dts keyed by gid (stable across a
+    /// fixed-tree rebalance).
+    pub(crate) fn dts_by_gid(&self, mesh: &Mesh) -> std::collections::HashMap<usize, Real> {
+        mesh.blocks
+            .iter()
+            .enumerate()
+            .map(|(bi, b)| (b.gid, self.last_dts[bi]))
+            .collect()
+    }
+
+    /// Bring the device back after a fixed-tree load balance: routes are
+    /// rebuilt for the new ownership, staging stays resident — only the
+    /// packs the rebalance marked dirty are re-gathered, re-packed and
+    /// re-timed; every block's boundary buffers are then re-routed once so
+    /// bufs_in is consistent with the new neighbors' owners.
+    pub(crate) fn after_rebalance(
+        &mut self,
+        sim: &mut super::HydroSim,
+        old_dts: &std::collections::HashMap<usize, Real>,
+    ) -> Result<()> {
+        self.routes = Self::build_routes(&sim.mesh)?;
+        self.last_dts = vec![0.0; sim.mesh.blocks.len()];
+        for (bi, b) in sim.mesh.blocks.iter().enumerate() {
+            if let Some(v) = old_dts.get(&b.gid) {
+                self.last_dts[bi] = *v;
+            }
+        }
+        let dirty = sim.mesh_data.dirty_packs();
+        sim.mesh_data.gather_dirty(&sim.mesh, CONS)?;
+        let scal0 =
+            self.scal(StageCoeffs { g0: 0.0, g1: 1.0, beta: 1.0 }, 0.0, &sim.mesh);
+        self.bootstrap(&mut sim.mesh_data, scal0, &dirty)
     }
 
     fn key(&self, kind: &str, nb: usize) -> ArtifactKey {
@@ -171,14 +219,19 @@ impl DeviceState {
         self.shape.n
     }
 
-    /// Initial buffer fill + dt (uses nb=1 pack/dt artifacts; not timed).
-    fn bootstrap(&mut self, md: &mut MeshData, scal: ScalArgs) -> Result<()> {
+    /// Buffer fill + dt for the given packs (nb=1 pack/dt artifacts; not
+    /// timed), then one full boundary-routing round so every block's
+    /// bufs_in is consistent. All packs at init; only the dirty packs
+    /// after a load balance (resident staging keeps the rest).
+    fn bootstrap(&mut self, md: &mut MeshData, scal: ScalArgs, packs: &[usize]) -> Result<()> {
         let kp = self.key("pack", 1);
         let kdt = self.key("dt", 1);
         {
             let (descs, staging) = md.parts_mut();
             let DeviceState { rt, last_dts, buflen, block_elems, .. } = self;
-            for (d, p) in descs.iter().zip(staging.iter_mut()) {
+            for &pi in packs {
+                let d = &descs[pi];
+                let p = &mut staging[pi];
                 for bi in 0..d.nb {
                     let u_slice =
                         p.u[bi * *block_elems..(bi + 1) * *block_elems].to_vec();

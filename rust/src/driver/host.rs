@@ -1,20 +1,36 @@
 //! Host execution space: the native Rust solver run pack-parallel.
 //!
 //! The stage operates per MeshBlockPack ([`crate::mesh_data::MeshData`]):
-//! packs are dealt to a scoped-thread worker pool in contiguous,
-//! pack-aligned block ranges, so every worker owns disjoint `&mut` chunks
-//! of the per-block work arrays (fluxes, u0, u_new) and a private
-//! reconstruction scratch. Flux correction stays on the driver thread (it
-//! is communication-bound and touches fluxes across packs), and the ghost
-//! exchange runs as the per-pack task collection of
-//! [`crate::bvals::exchange_tasked`] — the same task-collection shape the
-//! Device path uses for its boundary routing.
+//! packs are the work items of a cost-aware work-stealing pool
+//! ([`crate::util::stealing::StealPool`]). Worker deques are seeded by the
+//! cost-weighted contiguous partition (per-pack costs = summed
+//! `MeshBlock::cost` EWMAs), and a worker whose deque drains steals packs
+//! from the heaviest victim — closing the tail that static range-dealing
+//! leaves on multilevel meshes with uneven per-block cost. With
+//! `parthenon/exec sched = static` the pool never steals and degenerates
+//! to the cost-weighted static schedule.
+//!
+//! Every pack owns a disjoint `&mut` chunk of the per-block work arrays
+//! (fluxes, u0, u_new), and each worker keeps a private reconstruction
+//! scratch, so no locking happens inside the kernels and results are
+//! bitwise independent of worker count and steal order. Per-block kernel
+//! seconds are measured here and folded into `MeshBlock::cost` by
+//! `HydroSim::update_block_costs` (EWMA) — the measured costs feed both
+//! the next cycle's seed partition and the load balancer.
+//!
+//! Flux correction stays on the driver thread (it is communication-bound
+//! and touches fluxes across packs); the ghost exchange runs as the
+//! per-pack task collection of [`crate::bvals::exchange_tasked_parallel`],
+//! executed on the same worker-pool shape.
+
+use std::time::Instant;
 
 use super::{run_stage_exchange, StageExecutor};
 use crate::error::Result;
 use crate::hydro::native::{self, FluxArrays, Scratch, StageCoeffs};
 use crate::hydro::CONS;
 use crate::mesh::IndexShape;
+use crate::util::stealing::{run_stealing, StealPolicy, StealPool};
 use crate::vars::Package;
 use crate::{Real, NHYDRO};
 
@@ -25,7 +41,11 @@ pub struct HostExec {
     u0: Vec<Vec<Real>>,
     unew: Vec<Vec<Real>>,
     scratch: Vec<Scratch>,
+    /// Measured kernel seconds per block, accumulated over the cycle's
+    /// stages and drained by `HydroSim::update_block_costs`.
+    block_secs: Vec<f64>,
     nworkers: usize,
+    policy: StealPolicy,
 }
 
 impl HostExec {
@@ -34,15 +54,24 @@ impl HostExec {
         nblocks: usize,
         npacks: usize,
         ranks_sharing: usize,
+        nworkers_req: usize,
+        policy: StealPolicy,
     ) -> HostExec {
         let nelem = NHYDRO * shape.ncells_total();
-        let nworkers = crate::util::num_workers(npacks.max(1), ranks_sharing);
+        let cap = npacks.max(1);
+        let nworkers = if nworkers_req > 0 {
+            nworkers_req.min(cap)
+        } else {
+            crate::util::num_workers(cap, ranks_sharing)
+        };
         HostExec {
             flux: (0..nblocks).map(|_| FluxArrays::new(shape)).collect(),
             u0: (0..nblocks).map(|_| vec![0.0; nelem]).collect(),
             unew: (0..nblocks).map(|_| vec![0.0; nelem]).collect(),
             scratch: (0..nworkers).map(|_| Scratch::default()).collect(),
+            block_secs: vec![0.0; nblocks],
             nworkers,
+            policy,
         }
     }
 
@@ -50,13 +79,27 @@ impl HostExec {
         self.nworkers
     }
 
+    pub fn policy(&self) -> StealPolicy {
+        self.policy
+    }
+
     /// Block `bi`'s flux arrays (flux-correction tests).
     pub fn flux(&self, bi: usize) -> &FluxArrays {
         &self.flux[bi]
     }
+
+    /// Take (and zero) the per-block kernel seconds measured since the
+    /// last drain.
+    pub fn drain_block_secs(&mut self) -> Vec<f64> {
+        let out = self.block_secs.clone();
+        for s in &mut self.block_secs {
+            *s = 0.0;
+        }
+        out
+    }
 }
 
-/// Split a per-block slice into per-worker chunks matching `ranges`
+/// Split a per-block slice into per-pack chunks matching `ranges`
 /// (contiguous ascending block ranges covering the slice).
 fn split_chunks<'a, T>(
     mut rest: &'a mut [T],
@@ -94,34 +137,36 @@ impl StageExecutor for HostExec {
         if multilevel {
             sim.flux_corr_post_recvs();
         }
-        let ranges = sim.mesh_data.worker_block_ranges(self.nworkers);
+        // Packs are the unit of stealing; the seed partition is weighted
+        // by the measured per-block costs.
+        let pack_ranges = sim.mesh_data.block_ranges();
+        let pack_costs = sim.mesh_data.pack_costs(&sim.mesh);
 
-        // Phase 1 — fluxes, pack-parallel (reads block state, writes
-        // disjoint per-block flux arrays).
+        // Phase 1 — fluxes, pack-stealing (reads block state, writes
+        // disjoint per-pack flux chunks; each worker owns a scratch).
         {
             let blocks = &sim.mesh.blocks;
-            let flux_parts = split_chunks(&mut self.flux, &ranges);
-            let scratch_parts: Vec<&mut Scratch> =
-                self.scratch.iter_mut().take(ranges.len()).collect();
-            std::thread::scope(|s| {
-                for ((r, flux_part), scr) in
-                    ranges.iter().zip(flux_parts).zip(scratch_parts)
-                {
-                    let start = r.start;
-                    s.spawn(move || {
-                        for (off, fx) in flux_part.iter_mut().enumerate() {
-                            let arr = blocks[start + off].data.get(CONS).expect("cons");
-                            native::compute_fluxes(
-                                arr.as_slice(),
-                                &shape,
-                                gamma,
-                                fx,
-                                scr,
-                            );
-                        }
-                    });
-                }
-            });
+            let flux_parts = split_chunks(&mut self.flux, &pack_ranges);
+            let secs_parts = split_chunks(&mut self.block_secs, &pack_ranges);
+            let items: Vec<(usize, &mut [FluxArrays], &mut [f64])> = pack_ranges
+                .iter()
+                .zip(flux_parts.into_iter().zip(secs_parts))
+                .map(|(r, (fx, sc))| (r.start, fx, sc))
+                .collect();
+            let pool = StealPool::seed(&pack_costs, self.nworkers, self.policy);
+            run_stealing(
+                &pool,
+                items,
+                &mut self.scratch,
+                |scr: &mut Scratch, _pi, (start, flux_part, secs_part)| {
+                    for (off, fx) in flux_part.iter_mut().enumerate() {
+                        let t0 = Instant::now();
+                        let arr = blocks[start + off].data.get(CONS).expect("cons");
+                        native::compute_fluxes(arr.as_slice(), &shape, gamma, fx, scr);
+                        secs_part[off] += t0.elapsed().as_secs_f64();
+                    }
+                },
+            );
         }
 
         // Phase 2 — flux correction across fine/coarse faces (multilevel
@@ -133,89 +178,78 @@ impl StageExecutor for HostExec {
             sim.flux_corr_wait(&mut self.flux)?;
         }
 
-        // Phase 3 — stage combine, pack-parallel (disjoint &mut blocks).
+        // Phase 3 — stage combine, pack-stealing (disjoint &mut blocks;
+        // fluxes and u0 are read by global block index).
         {
-            let block_parts = split_chunks(&mut sim.mesh.blocks, &ranges);
-            let unew_parts = split_chunks(&mut self.unew, &ranges);
-            let mut flux_rest: &[FluxArrays] = &self.flux;
-            let mut u0_rest: &[Vec<Real>] = &self.u0;
-            let mut flux_parts: Vec<&[FluxArrays]> = Vec::with_capacity(ranges.len());
-            let mut u0_parts: Vec<&[Vec<Real>]> = Vec::with_capacity(ranges.len());
-            for r in &ranges {
-                let (fh, ft) = flux_rest.split_at(r.len());
-                flux_parts.push(fh);
-                flux_rest = ft;
-                let (uh, ut) = u0_rest.split_at(r.len());
-                u0_parts.push(uh);
-                u0_rest = ut;
-            }
-            std::thread::scope(|s| {
-                for (((blocks_part, unew_part), flux_part), u0_part) in block_parts
-                    .into_iter()
-                    .zip(unew_parts)
-                    .zip(flux_parts)
-                    .zip(u0_parts)
-                {
-                    s.spawn(move || {
-                        for (off, b) in blocks_part.iter_mut().enumerate() {
-                            let dx = [
-                                b.coords.dx[0] as Real,
-                                b.coords.dx[1] as Real,
-                                b.coords.dx[2] as Real,
-                            ];
-                            let arr = b.data.get_mut(CONS).expect("cons");
-                            native::apply_stage(
-                                arr.as_slice(),
-                                &u0_part[off],
-                                &flux_part[off],
-                                &shape,
-                                co,
-                                dt,
-                                dx,
-                                &mut unew_part[off],
-                            );
-                            arr.as_mut_slice().copy_from_slice(&unew_part[off]);
-                        }
-                    });
-                }
-            });
+            let flux = &self.flux;
+            let u0 = &self.u0;
+            let block_parts = split_chunks(&mut sim.mesh.blocks, &pack_ranges);
+            let unew_parts = split_chunks(&mut self.unew, &pack_ranges);
+            let secs_parts = split_chunks(&mut self.block_secs, &pack_ranges);
+            let items: Vec<_> = pack_ranges
+                .iter()
+                .zip(block_parts)
+                .zip(unew_parts.into_iter().zip(secs_parts))
+                .map(|((r, bp), (up, sp))| (r.start, bp, up, sp))
+                .collect();
+            let pool = StealPool::seed(&pack_costs, self.nworkers, self.policy);
+            run_stealing(
+                &pool,
+                items,
+                &mut self.scratch,
+                |_scr: &mut Scratch, _pi, (start, blocks_part, unew_part, secs_part)| {
+                    for (off, b) in blocks_part.iter_mut().enumerate() {
+                        let t0 = Instant::now();
+                        let dx = [
+                            b.coords.dx[0] as Real,
+                            b.coords.dx[1] as Real,
+                            b.coords.dx[2] as Real,
+                        ];
+                        let arr = b.data.get_mut(CONS).expect("cons");
+                        native::apply_stage(
+                            arr.as_slice(),
+                            &u0[start + off],
+                            &flux[start + off],
+                            &shape,
+                            co,
+                            dt,
+                            dx,
+                            &mut unew_part[off],
+                        );
+                        arr.as_mut_slice().copy_from_slice(&unew_part[off]);
+                        secs_part[off] += t0.elapsed().as_secs_f64();
+                    }
+                },
+            );
         }
 
-        // Phase 4 — ghost exchange as per-pack task lists (shared shape
-        // with the Device path's boundary routing).
-        run_stage_exchange(sim)
+        // Phase 4 — ghost exchange as per-pack task lists, run on the same
+        // worker-pool shape (parallel polling; serial under sched=static).
+        run_stage_exchange(sim, self.nworkers, self.policy)
     }
 
     /// Parallel min-reduction of the per-block CFL estimates over the
-    /// worker ranges, folded on the driver thread.
+    /// pack items, folded on the driver thread (f64 min is associative
+    /// and commutative, so the result is order-independent).
     fn local_dt(&self, sim: &super::HydroSim) -> f64 {
         let blocks = &sim.mesh.blocks;
         if blocks.is_empty() {
             return f64::INFINITY;
         }
         let pkg = &sim.pkg;
-        let ranges = if sim.mesh_data.is_current(&sim.mesh) {
-            sim.mesh_data.worker_block_ranges(self.nworkers)
-        } else {
-            vec![0..blocks.len()]
-        };
-        if ranges.len() <= 1 {
+        if !sim.mesh_data.is_current(&sim.mesh) || self.nworkers <= 1 {
             return blocks
                 .iter()
                 .map(|b| pkg.estimate_dt(&b.data, &b.coords))
                 .fold(f64::INFINITY, f64::min);
         }
-        let mut mins = vec![f64::INFINITY; ranges.len()];
-        std::thread::scope(|s| {
-            for (r, out) in ranges.iter().zip(mins.iter_mut()) {
-                let r = r.clone();
-                s.spawn(move || {
-                    let mut m = f64::INFINITY;
-                    for b in &blocks[r] {
-                        m = m.min(pkg.estimate_dt(&b.data, &b.coords));
-                    }
-                    *out = m;
-                });
+        let pack_ranges = sim.mesh_data.block_ranges();
+        let pack_costs = sim.mesh_data.pack_costs(&sim.mesh);
+        let pool = StealPool::seed(&pack_costs, self.nworkers, self.policy);
+        let mut mins = vec![f64::INFINITY; pool.nworkers()];
+        run_stealing(&pool, pack_ranges, &mut mins, |m, _pi, r| {
+            for b in &blocks[r] {
+                *m = m.min(pkg.estimate_dt(&b.data, &b.coords));
             }
         });
         mins.into_iter().fold(f64::INFINITY, f64::min)

@@ -31,10 +31,16 @@ use crate::hydro::problems::{self, Problem};
 use crate::hydro::{HydroPackage, CONS};
 use crate::mesh::{Mesh, MeshConfig, NeighborKind};
 use crate::mesh_data::MeshData;
-use crate::metrics::{Timers, ZoneCycles};
+use crate::metrics::{Ewma, Timers, ZoneCycles};
 use crate::util::backoff::{ProgressWait, STALL_LIMIT};
+use crate::util::stealing::StealPolicy;
 use crate::vars::{resolve_packages, Package};
 use crate::Real;
+
+/// EWMA weight for folding measured per-block cycle seconds into
+/// [`crate::mesh::MeshBlock::cost`] (fast enough to track AMR-driven cost
+/// shifts, smooth enough to ignore one-cycle jitter).
+const COST_EWMA_ALPHA: f64 = 0.3;
 
 /// Where the hydro stage executes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -94,15 +100,23 @@ pub(crate) fn run_cycle<E: StageExecutor>(
 }
 
 /// The end-of-stage ghost exchange of the conserved state, expressed as
-/// per-pack task lists (one list per MeshBlockPack).
-pub(crate) fn run_stage_exchange(sim: &mut HydroSim) -> Result<()> {
+/// per-pack task lists (one list per MeshBlockPack). Under a stealing
+/// schedule the lists run on the worker pool; under `sched = static` (or a
+/// single worker) they are polled serially on the driver thread.
+pub(crate) fn run_stage_exchange(
+    sim: &mut HydroSim,
+    nworkers: usize,
+    policy: StealPolicy,
+) -> Result<()> {
     let ranges = sim.mesh_data.block_ranges();
-    bvals::exchange_tasked(
+    bvals::exchange_tasked_parallel(
         &mut sim.mesh,
         &sim.comm_cons,
         CONS,
         Some([native::IM1, native::IM2, native::IM3]),
         &ranges,
+        nworkers,
+        policy,
     )
 }
 
@@ -115,6 +129,13 @@ pub struct SimParams {
     pub exec: ExecSpace,
     pub strategy: PackStrategy,
     pub pack_size: usize,
+    /// Host worker-thread count (0 = auto from hardware parallelism).
+    pub nworkers: usize,
+    /// Host pack scheduler: work-stealing (default) or static ranges.
+    pub sched: StealPolicy,
+    /// Cycles between cost-driven load-balance checks (0 = off; AMR runs
+    /// rebalance inside regrid anyway).
+    pub lb_interval: i64,
     pub impl_: String,
     pub output_dt: f64,
     pub history_dt: f64,
@@ -139,6 +160,9 @@ impl SimParams {
         );
         let strategy = PackStrategy::parse(&strategy_s)
             .ok_or_else(|| Error::config(format!("unknown strategy {strategy_s:?}")))?;
+        let sched_s = pin.str_or("parthenon/exec", "sched", "stealing");
+        let sched = StealPolicy::parse(&sched_s)
+            .ok_or_else(|| Error::config(format!("unknown scheduler {sched_s:?}")))?;
         Ok(SimParams {
             problem,
             tlim: pin.real_or("parthenon/time", "tlim", 1.0),
@@ -146,6 +170,9 @@ impl SimParams {
             exec,
             strategy,
             pack_size: pin.int_or("parthenon/exec", "pack_size", 16) as usize,
+            nworkers: pin.int_or("parthenon/exec", "nworkers", 0).max(0) as usize,
+            sched,
+            lb_interval: pin.int_or("parthenon/loadbalance", "interval", 0),
             impl_: pin.str_or("parthenon/exec", "impl", "jnp"),
             output_dt: pin.real_or("parthenon/output0", "dt", -1.0),
             history_dt: pin.real_or("parthenon/history", "dt", -1.0),
@@ -263,12 +290,23 @@ impl HydroSim {
             self.mesh.cfg.periodic_flags(),
             snap.leaves.clone(),
         );
-        let costs = vec![1.0; tree.nblocks()];
+        // The restart distribution must be identical on every rank, and a
+        // rank only knows its OWN measured costs — so restarts seed from
+        // the nominal (uniform) derivation; the EWMA re-measures within a
+        // few cycles and the next regrid/rebalance uses the real costs.
+        let costs = balance::derive_leaf_costs(
+            tree.leaves(),
+            &Default::default(),
+            self.mesh.cfg.dim,
+        );
         self.device = None; // routes/staging are stale; rebuilt below
         self.mesh.ranks = balance::assign_blocks(&costs, self.mesh.nranks);
         self.mesh.tree = tree;
         self.mesh.rebuild_local_blocks();
         self.rebuild_work_buffers();
+        // The snapshot overwrites the block containers, so any preserved
+        // staging no longer reflects them.
+        self.mesh_data.mark_all_dirty();
         snap.restore_into(&mut self.mesh)?;
         self.time = snap.time;
         self.cycle = snap.cycle;
@@ -337,10 +375,37 @@ impl HydroSim {
                 self.mesh.blocks.len(),
                 self.mesh_data.npacks(),
                 self.mesh.nranks,
+                self.sp.nworkers,
+                self.sp.sched,
             ))
         } else {
             None
         };
+    }
+
+    /// Fold the host executor's measured per-block kernel seconds into the
+    /// per-block cost EWMA ([`crate::mesh::MeshBlock::cost`]). Samples are
+    /// normalized to the GLOBAL mean block seconds (sum-allreduced), never
+    /// a rank-local mean — a rank-local mean would rescale every rank to
+    /// 1.0 and erase exactly the inter-rank imbalance the load balancer
+    /// needs to see. Every Host rank reaches the collective every cycle
+    /// (ranks with no blocks contribute zeros); no-op on the Device path
+    /// (launches are per pack, not per block — exec space is uniform
+    /// across ranks, so no rank is left waiting).
+    pub(crate) fn update_block_costs(&mut self) {
+        let Some(h) = self.host.as_mut() else { return };
+        let secs = h.drain_block_secs();
+        let local = [secs.iter().sum::<f64>(), secs.len() as f64];
+        let glob = self.comm_coll.allreduce_vec(&local, ReduceOp::Sum);
+        let (gtotal, gcount) = (glob[0], glob[1]);
+        if gtotal <= 0.0 || gcount <= 0.0 || secs.len() != self.mesh.blocks.len() {
+            return; // nothing measured yet (or stale buffer length)
+        }
+        let gmean = gtotal / gcount;
+        let ew = Ewma { alpha: COST_EWMA_ALPHA };
+        for (b, s) in self.mesh.blocks.iter_mut().zip(&secs) {
+            b.cost = ew.fold(b.cost, (s / gmean).max(1e-3));
+        }
     }
 
     pub fn fill_derived(&mut self) {
@@ -713,12 +778,26 @@ impl EvolutionDriver for HydroSim {
         self.cycle += 1;
         self.dt = self.reduce_dt();
 
+        // Measured per-block seconds -> cost EWMA (before regrid/rebalance
+        // so this cycle's measurements inform this cycle's distribution).
+        self.update_block_costs();
+
         // AMR
         if self.mesh.cfg.adaptive
             && self.device.is_none()
             && self.cycle % self.mesh.cfg.check_interval as u64 == 0
         {
             regrid::check_and_regrid(self)?;
+        }
+
+        // Cost-driven load balance on a fixed tree (opt-in; AMR regrids
+        // already rebalance). Runs on every rank at the same cycle — the
+        // cost allgather is a collective.
+        if self.sp.lb_interval > 0
+            && self.cycle % self.sp.lb_interval as u64 == 0
+            && !(self.mesh.cfg.adaptive && self.device.is_none())
+        {
+            regrid::check_and_rebalance(self)?;
         }
 
         self.zc

@@ -1,7 +1,13 @@
 //! AMR regrid + load balancing (paper Sec. 3.8): gather refinement flags,
 //! rebuild the tree deterministically on every rank, recompute the Z-order
-//! distribution, and migrate block data (derefining before sending and
+//! distribution from the *measured* per-block costs (EWMA of cycle
+//! seconds), and migrate block data (derefining before sending and
 //! refining on the receiving rank, to minimize transfer size).
+//!
+//! [`rebalance`] is the fixed-tree variant: same-tree re-assignment with
+//! point-to-point migration. On Device runs it preserves the persistent
+//! staging of every pack whose block set is unchanged (only migrated packs
+//! are scattered/re-gathered — see `MeshData::rebuild_preserving`).
 
 use std::collections::HashMap;
 
@@ -15,6 +21,29 @@ use crate::hydro::CONS;
 use crate::mesh::{AmrFlag, LogicalLocation};
 use crate::vars::Package;
 use crate::{Real, NHYDRO};
+
+/// Allgather every rank's (gid, measured cost) pairs and derive per-leaf
+/// costs for `new_tree` (which may equal the current tree): unchanged
+/// leaves keep their measured EWMA cost, refined children inherit the
+/// parent's, derefined parents take the mean of their children. This is a
+/// collective — every rank must call it at the same point.
+fn gather_global_costs(sim: &HydroSim, new_leaves: &[LogicalLocation]) -> Vec<f64> {
+    let mut payload = Vec::new();
+    for b in &sim.mesh.blocks {
+        payload.extend_from_slice(&(b.gid as u64).to_le_bytes());
+        payload.extend_from_slice(&b.cost.to_le_bytes());
+    }
+    let gathered = sim.world.comm(sim.mesh.my_rank, 3).allgather(payload);
+    let mut by_loc: HashMap<LogicalLocation, f64> = HashMap::new();
+    for blob in &gathered {
+        for chunk in blob.chunks_exact(16) {
+            let gid = u64::from_le_bytes(chunk[..8].try_into().unwrap()) as usize;
+            let cost = f64::from_le_bytes(chunk[8..16].try_into().unwrap());
+            by_loc.insert(sim.mesh.tree.leaves()[gid], cost);
+        }
+    }
+    balance::derive_leaf_costs(new_leaves, &by_loc, sim.mesh.cfg.dim)
+}
 
 /// Check refinement criteria, and regrid + rebalance if anything changed.
 /// Returns true if the mesh changed.
@@ -66,7 +95,7 @@ pub fn apply_new_tree(sim: &mut HydroSim, new_tree: crate::mesh::BlockTree) -> R
     let me = sim.mesh.my_rank;
     let comm = sim.world.comm(me, tags::COMM_MIGRATE);
 
-    let costs = vec![1.0; new_tree.nblocks()];
+    let costs = gather_global_costs(sim, new_tree.leaves());
     let new_ranks = balance::assign_blocks(&costs, sim.mesh.nranks);
 
     // Stash local old block data by location.
@@ -138,6 +167,11 @@ pub fn apply_new_tree(sim: &mut HydroSim, new_tree: crate::mesh::BlockTree) -> R
     sim.mesh.ranks = new_ranks;
     sim.mesh.rebuild_local_blocks();
     sim.rebuild_work_buffers();
+    // carry the derived costs over so the EWMA continues from the
+    // inherited weight instead of resetting to nominal
+    for b in &mut sim.mesh.blocks {
+        b.cost = costs[b.gid];
+    }
 
     // -- fill phase -------------------------------------------------------------
     for bi in 0..sim.mesh.blocks.len() {
@@ -209,6 +243,125 @@ pub fn apply_new_tree(sim: &mut HydroSim, new_tree: crate::mesh::BlockTree) -> R
         Some([native::IM1, native::IM2, native::IM3]),
     )?;
     sim.fill_derived();
+    Ok(())
+}
+
+/// Re-derive the cost-balanced assignment for the CURRENT tree and migrate
+/// if it changed. Collective: every rank must call this at the same cycle.
+/// Returns true if blocks moved.
+pub fn check_and_rebalance(sim: &mut HydroSim) -> Result<bool> {
+    let costs = gather_global_costs(sim, sim.mesh.tree.leaves());
+    let new_ranks = balance::assign_blocks(&costs, sim.mesh.nranks);
+    if new_ranks == sim.mesh.ranks {
+        return Ok(false);
+    }
+    rebalance(sim, new_ranks)?;
+    Ok(true)
+}
+
+/// Fixed-tree load balance: re-assign blocks to ranks and migrate their
+/// data point-to-point. The Device path keeps its `MeshData` staging
+/// resident: only packs whose block set changes are scattered (to make the
+/// leaving blocks' containers authoritative) and re-gathered afterwards;
+/// untouched packs keep their staging verbatim (pinned by the
+/// `gathered_packs` instrumentation in `rust/tests/mesh_data_packs.rs`).
+pub fn rebalance(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Result<()> {
+    let me = sim.mesh.my_rank;
+    let old_ranks = sim.mesh.ranks.clone();
+    assert_eq!(new_ranks.len(), old_ranks.len(), "same-tree rebalance");
+    if new_ranks == old_ranks {
+        return Ok(());
+    }
+    // Global measured costs (allgathered; identical on every rank) so
+    // migrated-in blocks inherit the sender's EWMA weight instead of
+    // resetting to nominal and ping-ponging at the next balance check.
+    let costs = gather_global_costs(sim, sim.mesh.tree.leaves());
+    let comm = sim.world.comm(me, tags::COMM_MIGRATE);
+    let mut dev = sim.device.take();
+
+    // Device: containers of blocks that LEAVE this rank must be made
+    // authoritative before they are stashed/sent — scatter only the packs
+    // that hold a leaving block, not the whole rank.
+    if dev.is_some() {
+        let leaving: Vec<usize> = sim
+            .mesh_data
+            .packs()
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| {
+                sim.mesh.blocks[d.block_range()]
+                    .iter()
+                    .any(|b| new_ranks[b.gid] != me)
+            })
+            .map(|(pi, _)| pi)
+            .collect();
+        sim.mesh_data.scatter_packs(&mut sim.mesh, CONS, &leaving)?;
+    }
+
+    // Stash every local block's conserved state by gid (gids are stable:
+    // the tree is unchanged); send the leaving ones.
+    let mut stash: HashMap<usize, Vec<Real>> = HashMap::new();
+    for b in &sim.mesh.blocks {
+        stash.insert(b.gid, b.data.get(CONS)?.as_slice().to_vec());
+    }
+    for (gid, (&o, &n)) in old_ranks.iter().zip(new_ranks.iter()).enumerate() {
+        if o == me && n != me {
+            comm.isend(
+                n,
+                tags::migrate_tag(gid, 0),
+                Payload::F32(stash.get(&gid).unwrap().clone()),
+            );
+        }
+    }
+    let old_dts = dev.as_ref().map(|d| d.dts_by_gid(&sim.mesh));
+
+    // Swap the assignment and rebuild local blocks; the pack plan is
+    // re-drawn preserving staging of packs whose block set is unchanged.
+    sim.mesh.ranks = new_ranks;
+    sim.mesh.rebuild_local_blocks();
+    let plan_sizes = dev.as_ref().map(|d| d.plan_sizes().to_vec());
+    sim.mesh_data
+        .rebuild_preserving(&sim.mesh, plan_sizes.as_deref());
+    sim.rebuild_work_buffers();
+
+    // Fill phase: local restores + receives for migrated-in blocks.
+    for bi in 0..sim.mesh.blocks.len() {
+        let gid = sim.mesh.blocks[bi].gid;
+        let src_rank = old_ranks[gid];
+        let data = if src_rank == me {
+            stash.get(&gid).unwrap().clone()
+        } else {
+            comm.recv(src_rank, tags::migrate_tag(gid, 0)).into_f32()?
+        };
+        sim.mesh.blocks[bi]
+            .data
+            .get_mut(CONS)?
+            .as_mut_slice()
+            .copy_from_slice(&data);
+        sim.mesh.blocks[bi].cost = costs[gid];
+    }
+
+    // Device: boundary-adjacent slabs of the preserved (clean) packs are
+    // scattered so the container-side ghost fill below reads current data;
+    // full interiors stay resident in staging.
+    if dev.is_some() {
+        sim.mesh_data.scatter_boundary(&mut sim.mesh, CONS)?;
+    }
+
+    // Fresh ghosts + derived everywhere (containers), then bring the
+    // device back: routes rebuilt, only dirty packs re-gathered.
+    let comm_cons = sim.world.comm(me, tags::COMM_BVALS_BASE);
+    bvals::exchange_blocking(
+        &mut sim.mesh,
+        &comm_cons,
+        CONS,
+        Some([native::IM1, native::IM2, native::IM3]),
+    )?;
+    sim.fill_derived();
+    if let Some(ref mut d) = dev {
+        d.after_rebalance(sim, old_dts.as_ref().unwrap())?;
+    }
+    sim.device = dev;
     Ok(())
 }
 

@@ -203,7 +203,11 @@ impl Mesh {
         nranks: usize,
     ) -> Mesh {
         let tree = cfg.initial_tree();
-        let costs = vec![1.0; tree.nblocks()];
+        // No cycle has been measured yet, so every leaf derives the nominal
+        // cost; regrid/rebalance later re-assign from the measured EWMA
+        // costs (balance::derive_leaf_costs over MeshBlock::cost).
+        let costs =
+            balance::derive_leaf_costs(tree.leaves(), &Default::default(), cfg.dim);
         let ranks = balance::assign_blocks(&costs, nranks);
         let mut mesh = Mesh {
             cfg,
@@ -251,7 +255,7 @@ impl Mesh {
             shape,
             data: MeshBlockData::from_fields(&self.fields, shape),
             swarms: HashMap::new(),
-            cost: 1.0,
+            cost: MeshBlock::DEFAULT_COST,
         }
     }
 

@@ -19,11 +19,17 @@ pub struct MeshBlock {
     pub data: MeshBlockData,
     /// Particle swarms living on this block.
     pub swarms: HashMap<String, Swarm>,
-    /// Load-balancing weight (1.0 = nominal).
+    /// Load-balancing weight: an EWMA of measured per-cycle seconds,
+    /// normalized so the GLOBAL mean is ~1.0 (fed by the host stage
+    /// timings each cycle; see `HydroSim::update_block_costs`). Seeds the
+    /// cost-weighted scheduler partition and `balance::assign_blocks`.
     pub cost: f64,
 }
 
 impl MeshBlock {
+    /// Nominal cost before any cycle has been measured.
+    pub const DEFAULT_COST: f64 = 1.0;
+
     /// Interior zone count (the paper's "zones" for zone-cycles/s).
     pub fn num_zones(&self) -> usize {
         self.shape.ncells_interior()

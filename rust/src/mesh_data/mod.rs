@@ -23,11 +23,12 @@
 //! down first and recreated after, so the plan is re-drawn from the
 //! artifact pack sizes and staging re-gathered.
 
+use std::collections::HashMap;
 use std::ops::Range;
 
 use crate::bvals::bufspec;
 use crate::error::{Error, Result};
-use crate::mesh::Mesh;
+use crate::mesh::{Mesh, LogicalLocation};
 use crate::runtime::plan_packs;
 use crate::{Real, NHYDRO};
 
@@ -75,6 +76,15 @@ pub struct MeshData {
     descs: Vec<PackDesc>,
     staging: Vec<PackStaging>,
     staged: bool,
+    /// Per-pack block identities (LogicalLocations are stable across gid
+    /// renumbering) — the key for preserving staging across rebuilds.
+    locs: Vec<Vec<LogicalLocation>>,
+    /// Per-pack: staging does not reflect the block containers and must be
+    /// re-gathered before use.
+    dirty: Vec<bool>,
+    /// Cumulative count of packs gathered (instrumentation: tests assert
+    /// that clean packs are NOT re-gathered after a rebalance).
+    gathered_packs: u64,
 }
 
 impl MeshData {
@@ -93,6 +103,9 @@ impl MeshData {
             descs: Vec::new(),
             staging: Vec::new(),
             staged: false,
+            locs: Vec::new(),
+            dirty: Vec::new(),
+            gathered_packs: 0,
         };
         md.rebuild(mesh, avail);
         md
@@ -116,7 +129,50 @@ impl MeshData {
         debug_assert_eq!(self.nblocks, mesh.blocks.len());
         self.staging.clear();
         self.staged = false;
+        self.locs = self
+            .descs
+            .iter()
+            .map(|d| mesh.blocks[d.block_range()].iter().map(|b| b.loc).collect())
+            .collect();
+        self.dirty = vec![true; self.descs.len()];
         self.mesh_version = mesh.version;
+    }
+
+    /// Re-plan against the mesh's current block set, preserving the staging
+    /// buffers (and clean status) of every pack whose block identity set is
+    /// unchanged — the persistent-staging path for load balance: only
+    /// migrated packs become dirty and pay a re-gather. Runs even when the
+    /// plan is current (the pack-size menu may have changed, e.g. Host plan
+    /// -> Device artifact sizes). Returns the number of packs preserved.
+    pub fn rebuild_preserving(&mut self, mesh: &Mesh, avail: Option<&[usize]>) -> usize {
+        let old_locs = std::mem::take(&mut self.locs);
+        let old_dirty = std::mem::take(&mut self.dirty);
+        let mut old_staging: Vec<Option<PackStaging>> =
+            std::mem::take(&mut self.staging).into_iter().map(Some).collect();
+        let was_staged = self.staged;
+        self.rebuild(mesh, avail);
+        if !was_staged {
+            return 0;
+        }
+        let by_locs: HashMap<&[LogicalLocation], usize> = old_locs
+            .iter()
+            .enumerate()
+            .map(|(i, l)| (l.as_slice(), i))
+            .collect();
+        self.ensure_staging();
+        let mut kept = 0usize;
+        for (pi, locs) in self.locs.iter().enumerate() {
+            let Some(&oi) = by_locs.get(locs.as_slice()) else { continue };
+            if old_dirty[oi] {
+                continue;
+            }
+            if let Some(s) = old_staging[oi].take() {
+                self.staging[pi] = s;
+                self.dirty[pi] = false;
+                kept += 1;
+            }
+        }
+        kept
     }
 
     /// Rebuild only if stale. Returns true when a rebuild happened.
@@ -187,27 +243,58 @@ impl MeshData {
         self.descs.iter().map(|d| d.block_range()).collect()
     }
 
+    /// Summed [`crate::mesh::MeshBlock::cost`] per pack — the seed weights
+    /// for the work-stealing scheduler and the cost-weighted partition.
+    pub fn pack_costs(&self, mesh: &Mesh) -> Vec<f64> {
+        self.descs
+            .iter()
+            .map(|d| {
+                mesh.blocks[d.block_range()]
+                    .iter()
+                    .map(|b| b.cost)
+                    .sum::<f64>()
+                    .max(f64::MIN_POSITIVE)
+            })
+            .collect()
+    }
+
+    /// Pack-aligned contiguous block ranges for `nworkers` parallel
+    /// workers, balanced by cumulative BLOCK count (uniform per-block
+    /// cost). See [`MeshData::worker_block_ranges_weighted`].
+    pub fn worker_block_ranges(&self, nworkers: usize) -> Vec<Range<usize>> {
+        let uniform: Vec<f64> = self.descs.iter().map(|d| d.nb as f64).collect();
+        self.worker_block_ranges_weighted(nworkers, &uniform)
+    }
+
     /// Pack-aligned contiguous block ranges for `nworkers` parallel
     /// workers: packs are dealt out in contiguous groups balanced by
-    /// cumulative BLOCK count (not pack count — pack sizes can be very
-    /// uneven, e.g. a [64, 1] plan), and worker chunks never split a pack.
-    pub fn worker_block_ranges(&self, nworkers: usize) -> Vec<Range<usize>> {
+    /// cumulative per-pack COST (`pack_costs`; uniform costs reduce to
+    /// block-count balance — pack sizes can be very uneven, e.g. a [64, 1]
+    /// plan), and worker chunks never split a pack.
+    pub fn worker_block_ranges_weighted(
+        &self,
+        nworkers: usize,
+        pack_costs: &[f64],
+    ) -> Vec<Range<usize>> {
         let npacks = self.descs.len();
+        debug_assert_eq!(pack_costs.len(), npacks);
         if npacks == 0 {
             return Vec::new();
         }
         let nw = nworkers.max(1).min(npacks);
         let mut out = Vec::with_capacity(nw);
         let mut p = 0usize;
-        let mut remaining_blocks = self.nblocks;
+        let mut remaining: f64 = pack_costs.iter().sum();
         for w in 0..nw {
             let workers_left = nw - w;
-            // even split of the remaining blocks, rounded up
-            let target = (remaining_blocks + workers_left - 1) / workers_left;
+            // even split of the remaining cost
+            let target = remaining / workers_left as f64;
             let start = self.descs[p].first;
-            let mut got = 0usize;
+            let mut got_blocks = 0usize;
+            let mut got_cost = 0.0f64;
             loop {
-                got += self.descs[p].nb;
+                got_blocks += self.descs[p].nb;
+                got_cost += pack_costs[p];
                 p += 1;
                 if p >= npacks {
                     break;
@@ -216,15 +303,14 @@ impl MeshData {
                 if npacks - p <= workers_left - 1 {
                     break;
                 }
-                if got >= target {
+                if got_cost >= target {
                     break;
                 }
             }
-            out.push(start..start + got);
-            remaining_blocks -= got;
+            out.push(start..start + got_blocks);
+            remaining -= got_cost;
         }
         debug_assert_eq!(p, npacks);
-        debug_assert_eq!(remaining_blocks, 0);
         out
     }
 
@@ -234,7 +320,7 @@ impl MeshData {
     }
 
     /// Allocate (or keep) per-pack staging buffers sized for the current
-    /// plan. Idempotent.
+    /// plan. Idempotent. Fresh buffers start dirty (zeros, not block data).
     pub fn ensure_staging(&mut self) {
         if self.staged {
             return;
@@ -249,7 +335,30 @@ impl MeshData {
                 bufs_out: vec![0.0; d.nb * self.buflen],
             })
             .collect();
+        self.dirty = vec![true; self.descs.len()];
         self.staged = true;
+    }
+
+    /// Mark every pack's staging as out of sync with the block containers
+    /// (e.g. after a restart wrote new data into the containers).
+    pub fn mark_all_dirty(&mut self) {
+        for d in &mut self.dirty {
+            *d = true;
+        }
+    }
+
+    /// Pack indices currently marked dirty.
+    pub fn dirty_packs(&self) -> Vec<usize> {
+        self.dirty
+            .iter()
+            .enumerate()
+            .filter_map(|(i, d)| d.then_some(i))
+            .collect()
+    }
+
+    /// Cumulative packs gathered since construction (instrumentation).
+    pub fn gathered_packs(&self) -> u64 {
+        self.gathered_packs
     }
 
     /// Pack plan + staging, borrowed together (device stage loops).
@@ -264,33 +373,108 @@ impl MeshData {
     }
 
     /// Gather `var` from the authoritative block containers into the
-    /// per-pack `u` staging slabs.
+    /// per-pack `u` staging slabs (all packs; marks everything dirty
+    /// first, so the whole rank pays the copy — initialization/restart).
     pub fn gather(&mut self, mesh: &Mesh, var: &str) -> Result<()> {
+        self.mark_all_dirty();
+        self.gather_dirty(mesh, var)
+    }
+
+    /// Gather only the packs marked dirty, clearing their dirty flags —
+    /// the persistent-staging fast path: after a load balance only
+    /// migrated packs are dirty, so untouched packs are not re-gathered.
+    pub fn gather_dirty(&mut self, mesh: &Mesh, var: &str) -> Result<()> {
         self.validate(mesh)?;
         self.ensure_staging();
         let ne = self.block_elems;
-        for (d, p) in self.descs.iter().zip(self.staging.iter_mut()) {
+        let mut gathered = 0u64;
+        for ((d, p), dirty) in self
+            .descs
+            .iter()
+            .zip(self.staging.iter_mut())
+            .zip(self.dirty.iter_mut())
+        {
+            if !*dirty {
+                continue;
+            }
             for bi in 0..d.nb {
                 let arr = mesh.blocks[d.first + bi].data.get(var)?;
                 p.u[bi * ne..(bi + 1) * ne].copy_from_slice(arr.as_slice());
             }
+            *dirty = false;
+            gathered += 1;
         }
+        self.gathered_packs += gathered;
         Ok(())
     }
 
     /// Scatter the per-pack `u` staging slabs back into the block
     /// containers (IO / regrid / equivalence checks).
     pub fn scatter(&self, mesh: &mut Mesh, var: &str) -> Result<()> {
+        let all: Vec<usize> = (0..self.descs.len()).collect();
+        self.scatter_packs(mesh, var, &all)
+    }
+
+    /// Scatter only the given packs' `u` slabs into the block containers
+    /// (partial sync: e.g. only the packs whose blocks are about to
+    /// migrate off-rank need authoritative containers).
+    pub fn scatter_packs(&self, mesh: &mut Mesh, var: &str, packs: &[usize]) -> Result<()> {
         self.validate(mesh)?;
         if !self.staged {
             return Err(Error::Mesh("MeshData scatter without staging".into()));
         }
         let ne = self.block_elems;
-        for (d, p) in self.descs.iter().zip(self.staging.iter()) {
+        for &pi in packs {
+            let (d, p) = (&self.descs[pi], &self.staging[pi]);
             for bi in 0..d.nb {
                 let arr = mesh.blocks[d.first + bi].data.get_mut(var)?;
                 arr.as_mut_slice()
                     .copy_from_slice(&p.u[bi * ne..(bi + 1) * ne]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Scatter only the boundary-adjacent slabs (the interior shells
+    /// neighbors read during a ghost exchange) of every CLEAN pack into
+    /// the block containers — enough to make a container-side exchange
+    /// correct without paying the full interior copy. Dirty packs are
+    /// skipped (their containers are already authoritative).
+    pub fn scatter_boundary(&self, mesh: &mut Mesh, var: &str) -> Result<()> {
+        self.validate(mesh)?;
+        if !self.staged {
+            return Err(Error::Mesh("MeshData scatter without staging".into()));
+        }
+        let shape = mesh.cfg.index_shape();
+        let dim = shape.dim;
+        let ne = self.block_elems;
+        let n = shape.ncells_total();
+        let (nt0, nt1) = (shape.nt(0), shape.nt(1));
+        for ((d, p), dirty) in self
+            .descs
+            .iter()
+            .zip(self.staging.iter())
+            .zip(self.dirty.iter())
+        {
+            if *dirty {
+                continue;
+            }
+            for bi in 0..d.nb {
+                let src = &p.u[bi * ne..(bi + 1) * ne];
+                let arr = mesh.blocks[d.first + bi].data.get_mut(var)?;
+                let dst = arr.as_mut_slice();
+                for off in crate::mesh::neighbor_offsets(dim) {
+                    let slab = bufspec::send_slab(off, &shape);
+                    for v in 0..NHYDRO {
+                        for k in slab.z.0..slab.z.1 {
+                            for j in slab.y.0..slab.y.1 {
+                                let row = v * n + (k * nt1 + j) * nt0;
+                                dst[row + slab.x.0..row + slab.x.1]
+                                    .copy_from_slice(&src[row + slab.x.0..row + slab.x.1]);
+                            }
+                        }
+                    }
+                }
             }
         }
         Ok(())

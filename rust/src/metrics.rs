@@ -31,6 +31,34 @@ impl Timers {
     }
 }
 
+/// Exponentially weighted moving average — the per-block cost model
+/// (measured cycle seconds folded into [`crate::mesh::MeshBlock::cost`],
+/// consumed by the cost-weighted scheduler seed and the load balancer).
+#[derive(Debug, Clone, Copy)]
+pub struct Ewma {
+    /// Weight of the newest sample (0 < alpha <= 1).
+    pub alpha: f64,
+}
+
+impl Ewma {
+    pub fn fold(&self, prev: f64, sample: f64) -> f64 {
+        self.alpha * sample + (1.0 - self.alpha) * prev
+    }
+}
+
+/// Normalize a cost vector to mean 1.0 in place (no-op when the sum is not
+/// positive, e.g. before the first measured cycle).
+pub fn normalize_mean_one(v: &mut [f64]) {
+    let total: f64 = v.iter().sum();
+    if v.is_empty() || total <= 0.0 {
+        return;
+    }
+    let mean = total / v.len() as f64;
+    for x in v.iter_mut() {
+        *x /= mean;
+    }
+}
+
 /// Throughput accounting over a measured window.
 #[derive(Debug, Clone, Default)]
 pub struct ZoneCycles {
@@ -74,6 +102,28 @@ mod tests {
         t.stop("a");
         assert!(t.seconds("a") >= 0.005);
         assert_eq!(t.seconds("missing"), 0.0);
+    }
+
+    #[test]
+    fn ewma_folds_toward_samples() {
+        let e = Ewma { alpha: 0.5 };
+        let mut c = 1.0;
+        for _ in 0..20 {
+            c = e.fold(c, 3.0);
+        }
+        assert!((c - 3.0).abs() < 1e-4, "converges to the steady sample");
+        assert_eq!(e.fold(2.0, 2.0), 2.0, "fixed point");
+    }
+
+    #[test]
+    fn normalize_mean_one_works() {
+        let mut v = vec![2.0, 4.0, 6.0];
+        normalize_mean_one(&mut v);
+        assert!((v.iter().sum::<f64>() - 3.0).abs() < 1e-12);
+        assert!((v[1] - 1.0).abs() < 1e-12);
+        let mut z = vec![0.0, 0.0];
+        normalize_mean_one(&mut z);
+        assert_eq!(z, vec![0.0, 0.0], "degenerate input untouched");
     }
 
     #[test]

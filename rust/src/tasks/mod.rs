@@ -13,6 +13,8 @@
 //! marks are complete (paper's "shared dependency" reductions).
 
 use crate::error::{Error, Result};
+use crate::util::backoff::{Backoff, Deadline, ProgressWait};
+use crate::util::stealing::{StealPolicy, StealPool};
 
 /// Status returned by a task body.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -204,6 +206,180 @@ impl<C> TaskRegion<C> {
             }
         }
     }
+
+    /// Execute the region's lists on a work-stealing worker pool, one
+    /// independent context per list (the `Send`-splittable per-pack
+    /// contexts of `bvals::exchange_tasked_parallel`).
+    ///
+    /// Each (list, context) pair is a pool item: a worker claims a list,
+    /// sweeps it once, and — if not yet complete — re-queues it on its own
+    /// deque, where idle workers can steal it. So independent task lists
+    /// genuinely run concurrently, instead of being polled round-robin on
+    /// one thread. Regional (cross-list) tasks stay on the coordinator
+    /// (the calling thread): they run against `ctxs[0]` after every mark
+    /// completes — which is guaranteed by the time the pool drains, since
+    /// workers only retire fully-completed lists.
+    ///
+    /// Completion state is deterministic: which worker polls a list never
+    /// changes what its tasks compute. Stalls are detected with the same
+    /// progress-aware watchdog as the serial path.
+    pub fn execute_parallel(
+        &mut self,
+        ctxs: Vec<C>,
+        nworkers: usize,
+        policy: StealPolicy,
+        stall: std::time::Duration,
+    ) -> Result<Vec<C>>
+    where
+        C: Send,
+    {
+        use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+        use std::sync::Mutex;
+
+        assert_eq!(ctxs.len(), self.lists.len(), "one context per task list");
+        let n = ctxs.len();
+        if n == 0 {
+            if !self.regional.is_empty() {
+                return Err(Error::Task(
+                    "regional tasks need at least one list context".into(),
+                ));
+            }
+            return Ok(ctxs);
+        }
+        let lists = std::mem::take(&mut self.lists);
+        let slots: Vec<Mutex<Option<(TaskList<C>, C)>>> = lists
+            .into_iter()
+            .zip(ctxs)
+            .map(|(l, c)| Mutex::new(Some((l, c))))
+            .collect();
+        let pool = StealPool::seed(&vec![1.0; n], nworkers, policy);
+        let nw = pool.nworkers();
+        let remaining = AtomicUsize::new(n);
+        let progress = AtomicU64::new(0);
+        let abort = AtomicBool::new(false);
+
+        let worker = |w: usize| -> Result<()> {
+            let mut backoff = Backoff::new();
+            let mut watchdog = Deadline::new(stall);
+            let mut seen = progress.load(Ordering::SeqCst);
+            // idle bookkeeping shared by the None-claim and no-progress arms
+            let idle = |backoff: &mut Backoff, watchdog: &mut Deadline, seen: &mut u64| {
+                let p = progress.load(Ordering::SeqCst);
+                if p != *seen {
+                    *seen = p;
+                    backoff.reset();
+                    *watchdog = Deadline::new(stall);
+                    return Ok(());
+                }
+                if watchdog.expired() {
+                    abort.store(true, Ordering::SeqCst);
+                    return Err(Error::Task(format!(
+                        "parallel task region stalled ({} lists incomplete after {:?} idle)",
+                        remaining.load(Ordering::SeqCst),
+                        watchdog.elapsed()
+                    )));
+                }
+                backoff.snooze();
+                Ok(())
+            };
+            loop {
+                if remaining.load(Ordering::SeqCst) == 0 || abort.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                let Some(li) = pool.claim(w) else {
+                    // every incomplete list is momentarily held by another worker
+                    idle(&mut backoff, &mut watchdog, &mut seen)?;
+                    continue;
+                };
+                let taken = slots[li].lock().unwrap().take();
+                let Some((mut list, mut ctx)) = taken else { continue };
+                let progressed = list.sweep(&mut ctx);
+                let finished = list.all_done();
+                *slots[li].lock().unwrap() = Some((list, ctx));
+                if finished {
+                    remaining.fetch_sub(1, Ordering::SeqCst);
+                    progress.fetch_add(1, Ordering::SeqCst);
+                    backoff.reset();
+                    watchdog = Deadline::new(stall);
+                } else {
+                    // restore-then-requeue: the slot is always populated
+                    // before the index becomes claimable again
+                    pool.push(w, li);
+                    if progressed {
+                        progress.fetch_add(1, Ordering::SeqCst);
+                        backoff.reset();
+                        watchdog = Deadline::new(stall);
+                    } else {
+                        idle(&mut backoff, &mut watchdog, &mut seen)?;
+                    }
+                }
+            }
+        };
+
+        let results: Vec<Result<()>> = if nw <= 1 {
+            vec![worker(0)]
+        } else {
+            let worker = &worker;
+            std::thread::scope(|s| {
+                let handles: Vec<_> =
+                    (0..nw).map(|w| s.spawn(move || worker(w))).collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("task-region worker panicked"))
+                    .collect()
+            })
+        };
+
+        // restore lists + recover contexts (also on error paths)
+        let mut out = Vec::with_capacity(n);
+        self.lists = slots
+            .into_iter()
+            .map(|m| {
+                let (l, c) = m
+                    .into_inner()
+                    .unwrap()
+                    .expect("every slot is restored after its sweep");
+                out.push(c);
+                l
+            })
+            .collect();
+        for r in results {
+            r?;
+        }
+
+        // regional tasks on the coordinator: all marks are complete here
+        if !self.regional.is_empty() {
+            let ctx = &mut out[0];
+            let mut wait = ProgressWait::new(stall);
+            loop {
+                let mut progressed = false;
+                let mut all_done = true;
+                for r in &mut self.regional {
+                    if r.done {
+                        continue;
+                    }
+                    let ready =
+                        r.marks.iter().all(|(li, id)| self.lists[*li].is_done(*id));
+                    if ready && (r.body)(ctx) == TaskStatus::Complete {
+                        r.done = true;
+                        progressed = true;
+                    }
+                    if !r.done {
+                        all_done = false;
+                    }
+                }
+                if all_done {
+                    break;
+                }
+                if !wait.step(progressed) {
+                    return Err(Error::Task(
+                        "regional tasks stalled after parallel region".into(),
+                    ));
+                }
+            }
+        }
+        Ok(out)
+    }
 }
 
 /// Regions executed in order — one per algorithm phase (paper Fig. 3).
@@ -348,6 +524,114 @@ mod tests {
         let mut ctx = Ctx::default();
         coll.execute(&mut ctx, 10).unwrap();
         assert_eq!(ctx.log, vec!["r0", "r1"]);
+    }
+
+    #[test]
+    fn parallel_lists_complete_under_every_policy() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        use std::time::Duration;
+        for policy in [
+            StealPolicy::NoSteal,
+            StealPolicy::Heaviest,
+            StealPolicy::RoundRobin,
+            StealPolicy::Reverse,
+        ] {
+            for nworkers in [1usize, 2, 4] {
+                let n = 6;
+                let shared = Arc::new(AtomicUsize::new(0));
+                let mut region: TaskRegion<Arc<AtomicUsize>> = TaskRegion::new(n);
+                for li in 0..n {
+                    region.list(li).add(NONE, |c: &mut Arc<AtomicUsize>| {
+                        c.fetch_add(1, Ordering::SeqCst);
+                        TaskStatus::Complete
+                    });
+                }
+                let ctxs: Vec<_> = (0..n).map(|_| shared.clone()).collect();
+                region
+                    .execute_parallel(ctxs, nworkers, policy, Duration::from_secs(30))
+                    .unwrap();
+                assert_eq!(
+                    shared.load(Ordering::SeqCst),
+                    n,
+                    "policy {policy:?} nworkers {nworkers}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_lists_interleave_via_requeue() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        use std::time::Duration;
+        for nworkers in [1usize, 2] {
+            let shared = Arc::new(AtomicUsize::new(0));
+            let mut region: TaskRegion<Arc<AtomicUsize>> = TaskRegion::new(2);
+            // list 0 polls until list 1 sets the flag — requires the
+            // incomplete list to be re-queued, not spun to completion
+            region.list(0).add(NONE, |c: &mut Arc<AtomicUsize>| {
+                if c.load(Ordering::SeqCst) > 0 {
+                    TaskStatus::Complete
+                } else {
+                    TaskStatus::Incomplete
+                }
+            });
+            region.list(1).add(NONE, |c: &mut Arc<AtomicUsize>| {
+                c.store(1, Ordering::SeqCst);
+                TaskStatus::Complete
+            });
+            let ctxs = vec![shared.clone(), shared.clone()];
+            region
+                .execute_parallel(
+                    ctxs,
+                    nworkers,
+                    StealPolicy::Heaviest,
+                    Duration::from_secs(30),
+                )
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn parallel_stall_detected() {
+        use std::time::Duration;
+        let mut region: TaskRegion<Ctx> = TaskRegion::new(1);
+        region.list(0).add(NONE, |_: &mut Ctx| TaskStatus::Incomplete);
+        let err = region.execute_parallel(
+            vec![Ctx::default()],
+            2,
+            StealPolicy::Heaviest,
+            Duration::from_millis(50),
+        );
+        assert!(err.is_err(), "never-completing list must stall out");
+    }
+
+    #[test]
+    fn parallel_regional_runs_after_lists() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        use std::time::Duration;
+        let shared = Arc::new(AtomicUsize::new(0));
+        let mut region: TaskRegion<Arc<AtomicUsize>> = TaskRegion::new(2);
+        let mut marks = Vec::new();
+        for li in 0..2 {
+            let id = region.list(li).add(NONE, |c: &mut Arc<AtomicUsize>| {
+                c.fetch_add(1, Ordering::SeqCst);
+                TaskStatus::Complete
+            });
+            marks.push((li, id));
+        }
+        region.add_regional(marks, |c: &mut Arc<AtomicUsize>| {
+            assert_eq!(c.load(Ordering::SeqCst), 2, "after all marks");
+            c.fetch_add(10, Ordering::SeqCst);
+            TaskStatus::Complete
+        });
+        let ctxs = vec![shared.clone(), shared.clone()];
+        region
+            .execute_parallel(ctxs, 2, StealPolicy::Heaviest, Duration::from_secs(30))
+            .unwrap();
+        assert_eq!(shared.load(Ordering::SeqCst), 12);
     }
 
     #[test]

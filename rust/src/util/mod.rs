@@ -5,6 +5,7 @@ pub mod backoff;
 pub mod benchkit;
 pub mod json;
 pub mod rng;
+pub mod stealing;
 pub mod testutil;
 
 /// Worker-thread count for host-side pack parallelism of ONE rank.

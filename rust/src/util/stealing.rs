@@ -1,0 +1,308 @@
+//! Cost-aware work-stealing scheduler over pack-shaped work items.
+//!
+//! The unit of scheduling is an *item index* (a MeshBlockPack in the stage
+//! loops, a task list in [`crate::tasks::TaskRegion::execute_parallel`]).
+//! Items are seeded into per-worker deques by a contiguous, cost-weighted
+//! partition — the same shape as `MeshData::worker_block_ranges`, but over
+//! per-item costs — so with [`StealPolicy::NoSteal`] the pool degenerates
+//! to the static cost-balanced schedule. With any other policy a worker
+//! whose local deque drains steals from the *back* of a victim's deque
+//! (victim order set by the policy), closing the tail that static dealing
+//! leaves on multilevel meshes with uneven per-block cost.
+//!
+//! Determinism: the pool only decides *which worker* runs an item, never
+//! *whether* or *how*; every item is claimed exactly once. Consumers keep
+//! per-item writes disjoint (packs own disjoint block ranges), so results
+//! are bitwise identical under any worker count and any steal order —
+//! pinned by `rust/tests/sched_stealing.rs`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Victim-selection policy when a worker's own deque is empty.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StealPolicy {
+    /// Never steal: the seeded partition is the final (static) schedule.
+    NoSteal,
+    /// Steal from the victim with the largest remaining queued cost.
+    Heaviest,
+    /// Forced order for tests: victims `w+1, w+2, ...` cyclically.
+    RoundRobin,
+    /// Forced order for tests: victims in descending worker index.
+    Reverse,
+}
+
+impl StealPolicy {
+    /// Parse the `parthenon/exec sched` input value.
+    pub fn parse(s: &str) -> Option<StealPolicy> {
+        match s {
+            "static" | "nosteal" => Some(StealPolicy::NoSteal),
+            "stealing" | "heaviest" => Some(StealPolicy::Heaviest),
+            "roundrobin" | "round_robin" => Some(StealPolicy::RoundRobin),
+            "reverse" => Some(StealPolicy::Reverse),
+            _ => None,
+        }
+    }
+}
+
+/// Fixed-point cost unit (millicost) for the atomic load counters.
+fn to_fp(c: f64) -> u64 {
+    (c.max(0.0) * 1000.0).round() as u64 + 1 // +1: every item has weight
+}
+
+/// A shared pool of item indices, one deque per worker.
+pub struct StealPool {
+    queues: Vec<Mutex<VecDeque<usize>>>,
+    /// Remaining queued cost per worker (advisory, for victim selection).
+    loads: Vec<AtomicU64>,
+    /// Per-item fixed-point cost.
+    costs: Vec<u64>,
+    policy: StealPolicy,
+    steals: AtomicUsize,
+}
+
+impl StealPool {
+    /// Seed `costs.len()` items into `nworkers` deques by contiguous
+    /// cost-weighted partition (worker `w` gets a contiguous run of item
+    /// indices whose summed cost is ~`total / nworkers`).
+    pub fn seed(costs: &[f64], nworkers: usize, policy: StealPolicy) -> StealPool {
+        let n = costs.len();
+        let nw = nworkers.max(1);
+        let fp: Vec<u64> = costs.iter().map(|&c| to_fp(c)).collect();
+        let mut queues: Vec<VecDeque<usize>> = (0..nw).map(|_| VecDeque::new()).collect();
+        let mut loads = vec![0u64; nw];
+        let mut remaining: u64 = fp.iter().sum();
+        let mut i = 0usize;
+        for w in 0..nw {
+            if i >= n {
+                break;
+            }
+            let workers_left = (nw - w) as u64;
+            let target = (remaining + workers_left - 1) / workers_left; // ceil
+            let mut got = 0u64;
+            loop {
+                queues[w].push_back(i);
+                loads[w] += fp[i];
+                got += fp[i];
+                i += 1;
+                if i >= n {
+                    break;
+                }
+                // leave at least one item for every later worker
+                if (n - i) as u64 <= workers_left - 1 {
+                    break;
+                }
+                if got >= target {
+                    break;
+                }
+            }
+            remaining -= got;
+        }
+        debug_assert_eq!(i, n);
+        StealPool {
+            queues: queues.into_iter().map(Mutex::new).collect(),
+            loads: loads.into_iter().map(AtomicU64::new).collect(),
+            costs: fp,
+            policy,
+            steals: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn nworkers(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Total number of items the pool was seeded with.
+    pub fn nitems(&self) -> usize {
+        self.costs.len()
+    }
+
+    /// Steals performed so far (instrumentation).
+    pub fn steals(&self) -> usize {
+        self.steals.load(Ordering::SeqCst)
+    }
+
+    /// Re-queue an item onto worker `w`'s own deque (task-region polling:
+    /// an incomplete list goes back to the holder's queue, where idle
+    /// workers may steal it).
+    pub fn push(&self, w: usize, item: usize) {
+        self.queues[w].lock().unwrap().push_back(item);
+        self.loads[w].fetch_add(self.costs[item], Ordering::SeqCst);
+    }
+
+    /// Claim the next item for worker `w`: own deque front first, then — if
+    /// the policy allows — the back of a victim's deque. `None` means every
+    /// deque was empty at scan time (not necessarily global completion when
+    /// items can be re-queued).
+    pub fn claim(&self, w: usize) -> Option<usize> {
+        if let Some(i) = self.queues[w].lock().unwrap().pop_front() {
+            self.loads[w].fetch_sub(self.costs[i], Ordering::SeqCst);
+            return Some(i);
+        }
+        if self.policy == StealPolicy::NoSteal {
+            return None;
+        }
+        for v in self.victim_order(w) {
+            if let Some(i) = self.queues[v].lock().unwrap().pop_back() {
+                self.loads[v].fetch_sub(self.costs[i], Ordering::SeqCst);
+                self.steals.fetch_add(1, Ordering::SeqCst);
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// Victim scan order for worker `w` under the pool's policy.
+    fn victim_order(&self, w: usize) -> Vec<usize> {
+        let nq = self.queues.len();
+        match self.policy {
+            StealPolicy::NoSteal => Vec::new(),
+            StealPolicy::Heaviest => {
+                // advisory load snapshot, heaviest first
+                let mut vs: Vec<usize> = (0..nq).filter(|&v| v != w).collect();
+                vs.sort_by_key(|&v| std::cmp::Reverse(self.loads[v].load(Ordering::SeqCst)));
+                vs
+            }
+            StealPolicy::RoundRobin => (1..nq).map(|d| (w + d) % nq).collect(),
+            StealPolicy::Reverse => (0..nq).rev().filter(|&v| v != w).collect(),
+        }
+    }
+}
+
+/// Run one item per claim over the pool with per-worker state: worker `w`
+/// executes `f(&mut states[w], item_index, item)` for every item it claims.
+/// Items are handed out exactly once; per-item payloads carry the mutable
+/// chunks (disjoint by construction), so no locking happens inside `f`.
+///
+/// `states.len()` must equal `pool.nworkers()`. With one worker everything
+/// runs inline on the caller's thread (no spawn overhead).
+pub fn run_stealing<T, S, F>(pool: &StealPool, items: Vec<T>, states: &mut [S], f: F)
+where
+    T: Send,
+    S: Send,
+    F: Fn(&mut S, usize, T) + Sync,
+{
+    assert_eq!(items.len(), pool.nitems(), "one payload per seeded item");
+    assert_eq!(states.len(), pool.nworkers(), "one state per worker");
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let nw = pool.nworkers();
+    if nw <= 1 {
+        let s = &mut states[0];
+        while let Some(i) = pool.claim(0) {
+            if let Some(t) = slots[i].lock().unwrap().take() {
+                f(s, i, t);
+            }
+        }
+        return;
+    }
+    let slots = &slots;
+    let f = &f;
+    std::thread::scope(|scope| {
+        for (w, s) in states.iter_mut().enumerate() {
+            scope.spawn(move || {
+                while let Some(i) = pool.claim(w) {
+                    if let Some(t) = slots[i].lock().unwrap().take() {
+                        f(s, i, t);
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn every_item_claimed_exactly_once() {
+        for policy in [
+            StealPolicy::NoSteal,
+            StealPolicy::Heaviest,
+            StealPolicy::RoundRobin,
+            StealPolicy::Reverse,
+        ] {
+            let costs = vec![1.0; 23];
+            let pool = StealPool::seed(&costs, 4, policy);
+            let hits: Vec<AtomicUsize> = (0..23).map(|_| AtomicUsize::new(0)).collect();
+            let items: Vec<usize> = (0..23).collect();
+            let mut states = vec![(); 4];
+            run_stealing(&pool, items, &mut states, |_s, idx, item| {
+                assert_eq!(idx, item);
+                hits[item].fetch_add(1, Ordering::SeqCst);
+            });
+            for h in &hits {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "policy {policy:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn seeding_is_cost_weighted_and_contiguous() {
+        // one hot item: it should own a whole worker's queue
+        let mut costs = vec![1.0; 9];
+        costs[0] = 100.0;
+        let pool = StealPool::seed(&costs, 2, StealPolicy::NoSteal);
+        let q0: Vec<usize> = pool.queues[0].lock().unwrap().iter().copied().collect();
+        let q1: Vec<usize> = pool.queues[1].lock().unwrap().iter().copied().collect();
+        assert_eq!(q0, vec![0], "hot item fills worker 0");
+        assert_eq!(q1, (1..9).collect::<Vec<_>>());
+        // contiguity + coverage in the uniform case
+        let pool = StealPool::seed(&vec![1.0; 10], 3, StealPolicy::NoSteal);
+        let mut all = Vec::new();
+        for q in &pool.queues {
+            let items: Vec<usize> = q.lock().unwrap().iter().copied().collect();
+            for w in items.windows(2) {
+                assert_eq!(w[1], w[0] + 1, "queues hold contiguous runs");
+            }
+            all.extend(items);
+        }
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn skewed_seed_triggers_steals() {
+        // worker 0 gets nearly everything; worker 1 must steal to help
+        let mut costs = vec![0.001; 64];
+        costs[63] = 1000.0; // forces the partition to give w1 only the tail
+        let pool = StealPool::seed(&costs, 2, StealPolicy::Heaviest);
+        let items: Vec<usize> = (0..64).collect();
+        let mut states = vec![(); 2];
+        run_stealing(&pool, items, &mut states, |_s, _i, _t| {
+            // simulate work so the second worker outlives its own queue
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        });
+        assert!(pool.steals() > 0, "idle worker must have stolen");
+    }
+
+    #[test]
+    fn nosteal_never_steals() {
+        let pool = StealPool::seed(&vec![1.0; 16], 4, StealPolicy::NoSteal);
+        let items: Vec<usize> = (0..16).collect();
+        let mut states = vec![(); 4];
+        run_stealing(&pool, items, &mut states, |_s, _i, _t| {});
+        assert_eq!(pool.steals(), 0);
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(StealPolicy::parse("static"), Some(StealPolicy::NoSteal));
+        assert_eq!(StealPolicy::parse("stealing"), Some(StealPolicy::Heaviest));
+        assert_eq!(StealPolicy::parse("roundrobin"), Some(StealPolicy::RoundRobin));
+        assert_eq!(StealPolicy::parse("reverse"), Some(StealPolicy::Reverse));
+        assert_eq!(StealPolicy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let pool = StealPool::seed(&vec![1.0; 2], 8, StealPolicy::Heaviest);
+        let hits: Vec<AtomicUsize> = (0..2).map(|_| AtomicUsize::new(0)).collect();
+        let mut states = vec![(); 8];
+        run_stealing(&pool, vec![0usize, 1], &mut states, |_s, _i, t| {
+            hits[t].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+}

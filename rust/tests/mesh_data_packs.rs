@@ -5,9 +5,13 @@
 
 mod common;
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
 use parthenon::comm::World;
 use parthenon::config::ParameterInput;
-use parthenon::driver::{EvolutionDriver, HydroSim};
+use parthenon::driver::{regrid, EvolutionDriver, HydroSim};
+use parthenon::hydro::CONS;
 use parthenon::mesh_data::MeshData;
 
 fn amr_overrides() -> Vec<&'static str> {
@@ -115,6 +119,114 @@ fn load_balance_shuffle_rebuilds_packs_on_every_rank() {
         }
         assert!(sim.mesh.version > v0, "regrids must have shuffled blocks");
     });
+}
+
+#[test]
+fn staging_survives_same_block_rebuild() {
+    // A rebuild that does not change the block set (version bump, fresh
+    // containers) must preserve ALL staging: no pack re-gathered, and a
+    // scatter restores the exact pre-rebuild data.
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    let mut sim = common::single_rank_sim(&deck, &[]);
+    sim.step().unwrap();
+    let before = common::cons_by_gid(&sim);
+
+    let mut md = MeshData::build(&sim.mesh, 4, None);
+    md.gather(&sim.mesh, CONS).unwrap();
+    let g0 = md.gathered_packs();
+    assert_eq!(g0 as usize, md.npacks(), "initial gather touches every pack");
+    assert!(md.dirty_packs().is_empty());
+
+    sim.mesh.rebuild_local_blocks(); // same blocks, zeroed containers
+    assert!(md.validate(&sim.mesh).is_err(), "plan is version-stale");
+    let kept = md.rebuild_preserving(&sim.mesh, None);
+    assert_eq!(kept, md.npacks(), "identical block set keeps every pack");
+    assert!(md.validate(&sim.mesh).is_ok());
+
+    md.gather_dirty(&sim.mesh, CONS).unwrap();
+    assert_eq!(md.gathered_packs(), g0, "clean packs must not re-gather");
+
+    md.scatter(&mut sim.mesh, CONS).unwrap();
+    let after = common::cons_by_gid(&sim);
+    assert_eq!(
+        common::max_state_diff(&before, &after),
+        0.0,
+        "resident staging restores the exact state"
+    );
+}
+
+#[test]
+fn device_rebalance_regathers_only_migrated_packs() {
+    // 2-rank Device run: migrate ONE block between ranks and prove the
+    // persistent staging invalidates only the affected packs — the
+    // untouched packs are not re-gathered — while the solution stays
+    // bitwise identical to an uninterrupted run.
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    let dev_ovs = [
+        "parthenon/exec/space=device",
+        "parthenon/exec/strategy=perpack",
+        "parthenon/exec/pack_size=4",
+    ];
+    let run = |swap: bool| -> Vec<(usize, Vec<f32>)> {
+        let results: Arc<Mutex<HashMap<usize, Vec<f32>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let r2 = results.clone();
+        let deck = deck.clone();
+        World::launch(2, move |rank, world| {
+            let mut pin = ParameterInput::from_str(&deck).unwrap();
+            for ov in dev_ovs {
+                pin.apply_override(ov).unwrap();
+            }
+            let mut sim = HydroSim::new(pin, rank, world).unwrap();
+            for _ in 0..2 {
+                sim.step().unwrap();
+            }
+            if swap {
+                let g0 = sim.mesh_data.gathered_packs();
+                let npacks_before = sim.mesh_data.npacks() as u64;
+                // move the LAST gid (tail of rank 1) to rank 0: packs are
+                // contiguous gid runs, so a tail move leaves the leading
+                // packs of both ranks untouched (deterministic on both
+                // ranks from the shared assignment table)
+                let mut new_ranks = sim.mesh.ranks.clone();
+                let moved = new_ranks.len() - 1;
+                assert_eq!(new_ranks[moved], 1, "Z-order tail lives on rank 1");
+                new_ranks[moved] = 0;
+                regrid::rebalance(&mut sim, new_ranks).unwrap();
+                let delta = sim.mesh_data.gathered_packs() - g0;
+                assert!(
+                    delta >= 1,
+                    "rank {}: migrated packs must re-gather",
+                    sim.mesh.my_rank
+                );
+                assert!(
+                    delta < npacks_before.max(sim.mesh_data.npacks() as u64),
+                    "rank {}: untouched packs must NOT re-gather (delta {delta})",
+                    sim.mesh.my_rank
+                );
+            }
+            for _ in 0..2 {
+                sim.step().unwrap();
+            }
+            sim.sync_device_to_blocks().unwrap();
+            let mut res = r2.lock().unwrap();
+            for (gid, data) in common::cons_by_gid(&sim) {
+                res.insert(gid, data);
+            }
+        });
+        let map = Arc::try_unwrap(results).unwrap().into_inner().unwrap();
+        let mut out: Vec<(usize, Vec<f32>)> = map.into_iter().collect();
+        out.sort_by_key(|(gid, _)| *gid);
+        out
+    };
+    let base = run(false);
+    let swapped = run(true);
+    assert_eq!(base.len(), swapped.len());
+    assert_eq!(
+        common::max_state_diff(&base, &swapped),
+        0.0,
+        "device rebalance with resident staging must be bitwise transparent"
+    );
 }
 
 #[test]

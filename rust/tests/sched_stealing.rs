@@ -1,0 +1,181 @@
+//! Scheduler determinism: the work-stealing executor decides only WHERE a
+//! pack runs, never what it computes — results must be bitwise identical
+//! to the static scheduler for every worker count and every forced steal
+//! order, on uniform and multilevel meshes, and across a cost-driven
+//! load balance.
+
+mod common;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use parthenon::comm::World;
+use parthenon::config::ParameterInput;
+use parthenon::driver::{regrid, EvolutionDriver, HydroSim};
+
+/// Run `deck` single-rank for `steps` with the given overrides; return
+/// gid -> interior CONS.
+fn run_host(deck: &str, overrides: &[&str], steps: usize) -> Vec<(usize, Vec<f32>)> {
+    let mut sim = common::single_rank_sim(deck, overrides);
+    for _ in 0..steps {
+        sim.step().unwrap();
+    }
+    common::cons_by_gid(&sim)
+}
+
+#[test]
+fn stealing_matches_static_across_worker_counts() {
+    // 64 blocks, pack_size 4 -> 16 packs: plenty to deal and steal.
+    let deck = common::input_deck("kh", [32, 32, 1], [4, 4, 1], "");
+    let base = run_host(
+        &deck,
+        &[
+            "parthenon/exec/sched=static",
+            "parthenon/exec/nworkers=1",
+            "parthenon/exec/pack_size=4",
+        ],
+        5,
+    );
+    for nw in [1usize, 2, 4, 8] {
+        let ov = format!("parthenon/exec/nworkers={nw}");
+        let got = run_host(
+            &deck,
+            &[
+                "parthenon/exec/sched=stealing",
+                "parthenon/exec/pack_size=4",
+                &ov,
+            ],
+            5,
+        );
+        assert_eq!(
+            common::max_state_diff(&base, &got),
+            0.0,
+            "stealing nworkers={nw} must be bitwise identical to static"
+        );
+    }
+}
+
+#[test]
+fn forced_steal_orders_are_bitwise_identical() {
+    let deck = common::input_deck("kh", [32, 32, 1], [4, 4, 1], "");
+    let base = run_host(
+        &deck,
+        &[
+            "parthenon/exec/sched=static",
+            "parthenon/exec/nworkers=4",
+            "parthenon/exec/pack_size=4",
+        ],
+        5,
+    );
+    for sched in ["stealing", "roundrobin", "reverse"] {
+        let ov = format!("parthenon/exec/sched={sched}");
+        let got = run_host(
+            &deck,
+            &[&ov, "parthenon/exec/nworkers=4", "parthenon/exec/pack_size=4"],
+            5,
+        );
+        assert_eq!(
+            common::max_state_diff(&base, &got),
+            0.0,
+            "steal order {sched} must not change results"
+        );
+    }
+}
+
+#[test]
+fn multilevel_stealing_matches_static() {
+    // Static refinement -> multilevel: flux correction + prolongation +
+    // the parallel exchange path are all live.
+    let deck = common::input_deck("blast", [32, 32, 1], [8, 8, 1], "");
+    let ml = [
+        "parthenon/mesh/refinement=static",
+        "parthenon/mesh/numlevel=2",
+        "parthenon/static_refinement0/level=1",
+        "parthenon/static_refinement0/x1min=0.3",
+        "parthenon/static_refinement0/x1max=0.7",
+        "parthenon/static_refinement0/x2min=0.3",
+        "parthenon/static_refinement0/x2max=0.7",
+        "parthenon/exec/pack_size=2",
+    ];
+    let mut base_ov: Vec<&str> = ml.to_vec();
+    base_ov.push("parthenon/exec/sched=static");
+    base_ov.push("parthenon/exec/nworkers=1");
+    let base = run_host(&deck, &base_ov, 4);
+    assert!(base.len() > 16, "refinement must have produced extra blocks");
+    for nw in [2usize, 4] {
+        let ov = format!("parthenon/exec/nworkers={nw}");
+        let mut got_ov: Vec<&str> = ml.to_vec();
+        got_ov.push("parthenon/exec/sched=stealing");
+        got_ov.push(&ov);
+        let got = run_host(&deck, &got_ov, 4);
+        assert_eq!(
+            common::max_state_diff(&base, &got),
+            0.0,
+            "multilevel stealing nworkers={nw}"
+        );
+    }
+}
+
+#[test]
+fn measured_costs_feed_block_weights() {
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    let mut sim = common::single_rank_sim(&deck, &[]);
+    for _ in 0..3 {
+        sim.step().unwrap();
+    }
+    // EWMA must have moved at least some blocks off the nominal weight,
+    // and the rank-local mean must stay ~1 (normalized samples).
+    let costs: Vec<f64> = sim.mesh.blocks.iter().map(|b| b.cost).collect();
+    assert!(
+        costs.iter().any(|c| (c - 1.0).abs() > 1e-9),
+        "measured timings must update MeshBlock::cost"
+    );
+    let mean = costs.iter().sum::<f64>() / costs.len() as f64;
+    assert!(
+        (mean - 1.0).abs() < 0.5,
+        "normalized cost mean should stay near 1, got {mean}"
+    );
+    assert!(costs.iter().all(|c| *c > 0.0));
+}
+
+/// Run a 2-rank host simulation; optionally force a full rank-swap
+/// rebalance after `swap_at` steps. Returns gid -> interior CONS.
+fn run_two_rank(deck: String, steps: usize, swap_at: Option<usize>) -> Vec<(usize, Vec<f32>)> {
+    let results: Arc<Mutex<HashMap<usize, Vec<f32>>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let r2 = results.clone();
+    World::launch(2, move |rank, world| {
+        let pin = ParameterInput::from_str(&deck).unwrap();
+        let mut sim = HydroSim::new(pin, rank, world).unwrap();
+        for s in 0..steps {
+            sim.step().unwrap();
+            if Some(s + 1) == swap_at {
+                // deterministic on both ranks: swap every block's owner
+                let new_ranks: Vec<usize> =
+                    sim.mesh.ranks.iter().map(|r| 1 - *r).collect();
+                regrid::rebalance(&mut sim, new_ranks).unwrap();
+            }
+        }
+        let mut res = r2.lock().unwrap();
+        for (gid, data) in common::cons_by_gid(&sim) {
+            res.insert(gid, data);
+        }
+    });
+    let map = Arc::try_unwrap(results).unwrap().into_inner().unwrap();
+    let mut out: Vec<(usize, Vec<f32>)> = map.into_iter().collect();
+    out.sort_by_key(|(gid, _)| *gid);
+    out
+}
+
+#[test]
+fn rebalance_midrun_is_bitwise_transparent() {
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    let base = run_two_rank(deck.clone(), 6, None);
+    let swapped = run_two_rank(deck, 6, Some(3));
+    assert_eq!(base.len(), swapped.len());
+    assert_eq!(
+        common::max_state_diff(&base, &swapped),
+        0.0,
+        "a fixed-tree rebalance must not change the solution"
+    );
+}
