@@ -83,6 +83,40 @@ fn main() {
     }
     table_s.print();
 
+    // -- overlap: phased barriers vs fused per-pack pipeline -----------------
+    // Same multilevel shape (flux correction + ghost exchange are live), so
+    // the fused schedule can hide one pack's boundary communication behind
+    // another pack's compute. `overlap/{phased,fused}` samples flow into
+    // the per-runner perf baseline (tools.perf_compare), so an overlap
+    // regression fails CI.
+    let mut table_o = Table::new(&["nworkers", "phased", "fused", "speedup"]);
+    println!("\nOverlap comparison (multilevel, 1 rank, pack_size 2, sched=stealing):");
+    for &nw in nworkers_list {
+        let mut row = vec![format!("w={nw}")];
+        let mut zc = [0.0f64; 2];
+        for (oi, mode) in ["phased", "fused"].iter().enumerate() {
+            let ovs = [
+                format!("parthenon/exec/overlap={mode}"),
+                "parthenon/exec/sched=stealing".to_string(),
+                format!("parthenon/exec/nworkers={nw}"),
+                "parthenon/exec/pack_size=2".to_string(),
+            ];
+            let ov_refs: Vec<&str> = ovs.iter().map(|s| s.as_str()).collect();
+            let run = measure(&deck, &ov_refs, 1, 3, meas.max(2));
+            zc[oi] = run.zcps;
+            row.push(fmt_zcps(run.zcps));
+            samples.push(Sample {
+                label: format!("overlap/{mode}/w{nw}"),
+                secs: vec![run.wall / run.cycles as f64],
+                work: run.zcps * run.wall / run.cycles as f64,
+            });
+            eprintln!("  overlap {mode} w{nw}: {} zc/s", fmt_zcps(run.zcps));
+        }
+        row.push(format!("{:.2}x", zc[1] / zc[0].max(1e-30)));
+        table_o.row(row);
+    }
+    table_o.print();
+
     write_results(
         "fig11_multilevel_scaling",
         &samples,

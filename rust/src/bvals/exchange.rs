@@ -304,7 +304,8 @@ fn pairs_toward_coarse(
 }
 
 /// Post every outbound boundary segment of `var` for all local blocks.
-pub fn post_sends(mesh: &Mesh, comm: &Comm, var: &str) -> crate::error::Result<()> {
+/// Returns the number of segments posted.
+pub fn post_sends(mesh: &Mesh, comm: &Comm, var: &str) -> crate::error::Result<usize> {
     post_sends_blocks(&ExchTopo::of(mesh), &mesh.blocks, comm, var)
 }
 
@@ -315,20 +316,22 @@ pub fn post_sends_range(
     comm: &Comm,
     var: &str,
     range: Range<usize>,
-) -> crate::error::Result<()> {
+) -> crate::error::Result<usize> {
     post_sends_blocks(&ExchTopo::of(mesh), &mesh.blocks[range], comm, var)
 }
 
 /// Slice-based core of the send side: posts the outbound segments of the
 /// given blocks against the shared topology (callable from any worker with
-/// a disjoint block slice).
+/// a disjoint block slice). Returns the number of segments posted — the
+/// overlap instrumentation the fused stage pipeline asserts against.
 pub fn post_sends_blocks(
     t: &ExchTopo,
     blocks: &[MeshBlock],
     comm: &Comm,
     var: &str,
-) -> crate::error::Result<()> {
+) -> crate::error::Result<usize> {
     let shape = t.shape;
+    let mut nsent = 0usize;
     for b in blocks {
         let arr = b.data.get(var)?;
         let nvar = arr.dims()[0];
@@ -348,6 +351,7 @@ pub fn post_sends_blocks(
                         CLASS_SAME | (slot << 3) | child_code(&b.loc),
                     );
                     comm.isend(t.rank_of(ngid), tag, Payload::F32(payload));
+                    nsent += 1;
                 }
                 NeighborKind::Coarser(cloc) => {
                     // restrict and send; tagged by the direction we sent
@@ -362,6 +366,7 @@ pub fn post_sends_blocks(
                         CLASS_RESTRICT | (slot << 3) | child_code(&b.loc),
                     );
                     comm.isend(t.rank_of(ngid), tag, Payload::F32(payload));
+                    nsent += 1;
                 }
                 NeighborKind::Finer(_) => {
                     sent_to_finer = true;
@@ -379,10 +384,11 @@ pub fn post_sends_blocks(
                     CLASS_PROLONG | (fslot << 3) | child_code(&b.loc),
                 );
                 comm.isend(t.rank_of(ngid), tag, Payload::F32(payload));
+                nsent += 1;
             }
         }
     }
-    Ok(())
+    Ok(nsent)
 }
 
 fn opposite_offset(o: [i32; 3]) -> [i32; 3] {
@@ -662,7 +668,7 @@ pub fn exchange_tasked(
         let t_post = list.add(NONE, move |c: &mut ExchCtx| {
             let ExchCtx { mesh, comm, var, states, error } = c;
             match post_sends_range(mesh, comm, var, post_range.clone()) {
-                Ok(()) => {
+                Ok(_) => {
                     states[pi] =
                         Some(post_receives_range(mesh, comm, var, post_range.clone()));
                 }
@@ -708,16 +714,95 @@ pub fn exchange_tasked(
     Ok(())
 }
 
-/// Per-pack exchange context for the parallel task-region executor: owns a
-/// disjoint `&mut` slice of the rank's blocks plus the shared topology, so
-/// the whole context is `Send` and its task list can be swept from any
-/// worker thread while other packs' lists run concurrently.
-struct PackExchCtx<'a> {
+/// The send and receive halves of ONE pack's ghost exchange, decoupled so
+/// a driver can schedule them as separate tasks interleaved with compute
+/// (the fused stage pipeline): sends are posted as soon as the pack's
+/// blocks are updated, receives are registered and polled from later tasks
+/// while other packs are still computing. The halves share the topology
+/// and communicator; block slices are passed per call so the owner keeps
+/// the `&mut` borrow.
+///
+/// Instrumentation: [`PackExchange::sends_posted`] and
+/// [`PackExchange::segments_sent`] pin the overlap contract — a pack's
+/// sends must be on the wire before its poll first comes up empty.
+pub struct PackExchange<'a> {
     topo: ExchTopo<'a>,
-    blocks: &'a mut [MeshBlock],
     comm: &'a Comm,
     var: &'a str,
     state: Option<ExchangeState>,
+    sends_posted: bool,
+    segments_sent: usize,
+}
+
+impl<'a> PackExchange<'a> {
+    pub fn new(topo: ExchTopo<'a>, comm: &'a Comm, var: &'a str) -> PackExchange<'a> {
+        PackExchange {
+            topo,
+            comm,
+            var,
+            state: None,
+            sends_posted: false,
+            segments_sent: 0,
+        }
+    }
+
+    /// Send half: post every outbound boundary segment of the pack's
+    /// blocks (a disjoint slice of the rank's blocks).
+    pub fn post_sends(&mut self, blocks: &[MeshBlock]) -> crate::error::Result<()> {
+        self.segments_sent +=
+            post_sends_blocks(&self.topo, blocks, self.comm, self.var)?;
+        self.sends_posted = true;
+        Ok(())
+    }
+
+    /// Receive half, part 1: register the inbound segments the pack's
+    /// blocks expect (local bookkeeping only — no waiting).
+    pub fn register_receives(&mut self, blocks: &[MeshBlock]) {
+        self.state = Some(post_receives_blocks(&self.topo, blocks, 0));
+    }
+
+    /// Receive half, part 2: poll registered receives, applying arrivals
+    /// into the pack's blocks. `Ok(true)` once every segment has landed.
+    pub fn poll(&mut self, blocks: &mut [MeshBlock]) -> crate::error::Result<bool> {
+        let Some(state) = self.state.as_mut() else {
+            return Err(crate::error::Error::Task(
+                "PackExchange::poll before register_receives".into(),
+            ));
+        };
+        poll_receives_blocks(&self.topo.shape, blocks, 0, self.comm, self.var, state)
+    }
+
+    /// The shared exchange topology this pack communicates over (also
+    /// serves flux-correction tasks riding the same task list, so the
+    /// topology lives in exactly one place per pack).
+    pub fn topo(&self) -> ExchTopo<'a> {
+        self.topo
+    }
+
+    /// Whether the send half has run.
+    pub fn sends_posted(&self) -> bool {
+        self.sends_posted
+    }
+
+    /// Outbound segments posted so far.
+    pub fn segments_sent(&self) -> usize {
+        self.segments_sent
+    }
+
+    /// Registered receives still outstanding (0 before registration).
+    pub fn remaining(&self) -> usize {
+        self.state.as_ref().map_or(0, |s| s.remaining())
+    }
+}
+
+/// Per-pack exchange context for the parallel task-region executor: owns a
+/// disjoint `&mut` slice of the rank's blocks plus the send/receive halves
+/// ([`PackExchange`]), so the whole context is `Send` and its task list can
+/// be swept from any worker thread while other packs' lists run
+/// concurrently.
+struct PackExchCtx<'a> {
+    exch: PackExchange<'a>,
+    blocks: &'a mut [MeshBlock],
     error: Option<crate::error::Error>,
     /// Shared across all packs: set on the first error so every other
     /// pack's poll list drains immediately instead of waiting out the
@@ -771,11 +856,8 @@ pub fn exchange_tasked_parallel(
             rest = tail;
             cursor = r.end;
             ctxs.push(PackExchCtx {
-                topo,
+                exch: PackExchange::new(topo, comm, var),
                 blocks: head,
-                comm,
-                var,
-                state: None,
                 error: None,
                 abort: &abort,
             });
@@ -784,10 +866,8 @@ pub fn exchange_tasked_parallel(
         for pi in 0..npacks {
             let list = region.list(pi);
             let t_post = list.add(NONE, |c: &mut PackExchCtx| {
-                match post_sends_blocks(&c.topo, c.blocks, c.comm, c.var) {
-                    Ok(()) => {
-                        c.state = Some(post_receives_blocks(&c.topo, c.blocks, 0));
-                    }
+                match c.exch.post_sends(c.blocks) {
+                    Ok(()) => c.exch.register_receives(c.blocks),
                     Err(e) => {
                         if c.error.is_none() {
                             c.error = Some(e);
@@ -803,11 +883,8 @@ pub fn exchange_tasked_parallel(
                     // error surfaces instead of a watchdog stall
                     return TaskStatus::Complete;
                 }
-                let PackExchCtx { topo, blocks, comm, var, state, error, abort } = c;
-                let Some(state) = state.as_mut() else {
-                    return TaskStatus::Complete; // post failed; error recorded
-                };
-                match poll_receives_blocks(&topo.shape, blocks, 0, comm, var, state) {
+                let PackExchCtx { exch, blocks, error, abort } = c;
+                match exch.poll(blocks) {
                     Ok(true) => TaskStatus::Complete,
                     Ok(false) => TaskStatus::Incomplete,
                     Err(e) => {

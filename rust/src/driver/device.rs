@@ -13,16 +13,27 @@
 //! tables, and per-stage launches. Requires a uniform, fully periodic mesh —
 //! the configuration of every performance experiment in the paper.
 //! AMR/multilevel runs use the Host path (see DESIGN.md §limitations).
+//!
+//! With `parthenon/exec overlap = fused` (default) the stage runs as
+//! per-pack task lists — launch → send segments → poll receives — so one
+//! pack's boundary routing overlaps the interior launches of the others;
+//! `overlap = phased` keeps the launch-all-then-route barrier as the
+//! bitwise-identity oracle. Per-pack launches are timed and spread over
+//! the pack's blocks into the cost EWMA (`drain_block_secs`), so the load
+//! balancer sees measured Device costs.
 
-use super::{HydroSim, StageExecutor};
+use std::time::Instant;
+
+use super::{HydroSim, OverlapMode, StageExecutor};
 use crate::bvals::{bufspec, PackStrategy};
 use crate::comm::{tags, Comm, Payload};
 use crate::error::{Error, Result};
 use crate::hydro::native::StageCoeffs;
 use crate::hydro::CONS;
 use crate::mesh::{IndexShape, Mesh, NeighborKind};
-use crate::mesh_data::MeshData;
+use crate::mesh_data::{MeshData, PackDesc, PackStaging};
 use crate::runtime::{default_artifact_dir, ArtifactKey, Runtime, ScalArgs};
+use crate::tasks::{TaskRegion, TaskStatus, NONE};
 use crate::util::backoff::{ProgressWait, STALL_LIMIT};
 use crate::{Real, NHYDRO};
 
@@ -53,6 +64,11 @@ pub struct DeviceState {
     comm: Comm,
     tmp: Vec<Real>,
     gamma: Real,
+    /// Measured launch seconds per block (per-pack launch time spread
+    /// evenly over the pack's blocks), drained into the cost EWMA by
+    /// `HydroSim::update_block_costs` — so `parthenon/loadbalance
+    /// interval` rebalances Device runs on measured, not nominal, costs.
+    block_secs: Vec<f64>,
 }
 
 impl DeviceState {
@@ -120,6 +136,7 @@ impl DeviceState {
             comm,
             tmp: vec![0.0; block_elems],
             gamma: sim.pkg.gamma,
+            block_secs: vec![0.0; nlocal],
         };
 
         // Shared pack partition: re-plan onto the artifact sizes + staging
@@ -190,6 +207,7 @@ impl DeviceState {
     ) -> Result<()> {
         self.routes = Self::build_routes(&sim.mesh)?;
         self.last_dts = vec![0.0; sim.mesh.blocks.len()];
+        self.block_secs = vec![0.0; sim.mesh.blocks.len()];
         for (bi, b) in sim.mesh.blocks.iter().enumerate() {
             if let Some(v) = old_dts.get(&b.gid) {
                 self.last_dts[bi] = *v;
@@ -271,161 +289,293 @@ impl DeviceState {
         self.scal_from_shape(co, dt, dx)
     }
 
-    /// Send every block's outbound segments and receive inbound segments
-    /// into bufs_in, polling with bounded backoff (per-pack order).
+    /// The inbound `(block-in-pack, slot)` pairs one pack waits on.
+    fn pack_pending(&self, d: &PackDesc) -> Vec<(usize, usize)> {
+        let mut v = Vec::new();
+        for bi in 0..d.nb {
+            for slot in 0..self.routes[d.first + bi].len() {
+                v.push((bi, slot));
+            }
+        }
+        v
+    }
+
+    /// Send every pack's outbound segments and receive inbound segments
+    /// into bufs_in, polling with bounded backoff — the whole-rank barrier
+    /// routing of the phased path and the bootstrap, built on the same
+    /// per-pack `send_pack`/`poll_pack` primitives the fused lists use.
     fn route_and_receive(&mut self, md: &mut MeshData) -> Result<()> {
-        let (descs, staging) = md.parts_mut();
-        // sends
-        for (d, p) in descs.iter().zip(staging.iter()) {
-            for bi in 0..d.nb {
-                let flat = d.first + bi;
-                let base = bi * self.buflen;
-                for (slot, e) in self.routes[flat].iter().enumerate() {
-                    let seg = &p.bufs_out[base + self.seg_offs[slot]
-                        ..base + self.seg_offs[slot] + self.seg_lens[slot]];
-                    self.comm
-                        .isend(e.dst_rank, e.send_tag, Payload::F32(seg.to_vec()));
-                }
-            }
+        for pi in 0..md.npacks() {
+            self.send_pack(md.packs(), md.staging(), pi);
         }
-        // receives: (pack, block-in-pack, slot) triples polled round-robin
-        let mut pending: Vec<(usize, usize, usize)> = Vec::new();
-        for (pi, d) in descs.iter().enumerate() {
-            for bi in 0..d.nb {
-                for slot in 0..self.routes[d.first + bi].len() {
-                    pending.push((pi, bi, slot));
-                }
-            }
-        }
+        let mut pending: Vec<Vec<(usize, usize)>> =
+            md.packs().iter().map(|d| self.pack_pending(d)).collect();
         let mut wait = ProgressWait::new(STALL_LIMIT);
-        while !pending.is_empty() {
+        loop {
             let mut progressed = false;
-            let mut i = 0usize;
-            while i < pending.len() {
-                let (pi, bi, slot) = pending[i];
-                let d = &descs[pi];
-                let e = &self.routes[d.first + bi][slot];
-                if let Some(payload) = self.comm.try_recv(e.recv_src, e.recv_tag) {
-                    let data = payload.into_f32()?;
-                    let base = bi * self.buflen;
-                    staging[pi].bufs_in[base + self.seg_offs[slot]
-                        ..base + self.seg_offs[slot] + self.seg_lens[slot]]
-                        .copy_from_slice(&data);
-                    pending.swap_remove(i);
-                    progressed = true;
-                } else {
-                    i += 1;
+            let mut left = 0usize;
+            for (pi, pend) in pending.iter_mut().enumerate() {
+                if pend.is_empty() {
+                    continue;
                 }
+                let before = pend.len();
+                self.poll_pack(md, pi, pend)?;
+                progressed |= pend.len() < before;
+                left += pend.len();
             }
-            if pending.is_empty() {
-                break;
+            if left == 0 {
+                return Ok(());
             }
             if !wait.step(progressed) {
                 return Err(Error::Comm(format!(
-                    "device boundary routing stalled ({} segments missing after {:?} idle)",
-                    pending.len(),
+                    "device boundary routing stalled ({left} segments missing after {:?} idle)",
                     wait.idle_elapsed()
                 )));
             }
         }
-        Ok(())
     }
 
-    /// One fused launch per pack per stage.
-    fn stage_perpack(&mut self, md: &mut MeshData, scal: ScalArgs, si: usize) -> Result<()> {
-        let (descs, staging) = md.parts_mut();
-        let keys: Vec<ArtifactKey> =
-            descs.iter().map(|d| self.key("fused", d.nb)).collect();
-        let DeviceState { rt, last_dts, .. } = self;
-        for (d, p) in descs.iter().zip(staging.iter_mut()) {
-            let dts = rt.fused(
-                &keys[d.index],
-                &mut p.u,
-                &p.u0,
-                &p.bufs_in,
-                scal,
-                &mut p.bufs_out,
-            )?;
-            if si == 1 {
-                for (bi, v) in dts.iter().enumerate() {
-                    last_dts[d.first + bi] = *v;
-                }
-            }
+    /// Take (and zero) the per-block launch seconds measured since the
+    /// last drain (cost model; see `HydroSim::update_block_costs`).
+    pub fn drain_block_secs(&mut self) -> Vec<f64> {
+        let out = self.block_secs.clone();
+        for s in &mut self.block_secs {
+            *s = 0.0;
         }
-        Ok(())
+        out
     }
 
-    /// unpack + stage + pack (+ dt at stage 2) per block.
-    fn stage_perblock(&mut self, md: &mut MeshData, scal: ScalArgs, si: usize) -> Result<()> {
-        let kun = self.key("unpack", 1);
-        let kst = self.key("stage", 1);
-        let kpk = self.key("pack", 1);
-        let kdt = self.key("dt", 1);
-        let (descs, staging) = md.parts_mut();
-        let DeviceState { rt, last_dts, tmp, block_elems, buflen, .. } = self;
-        let ne = *block_elems;
-        let bl = *buflen;
-        for (d, p) in descs.iter().zip(staging.iter_mut()) {
-            for bi in 0..d.nb {
-                let u = &mut p.u[bi * ne..(bi + 1) * ne];
-                let u0 = &p.u0[bi * ne..(bi + 1) * ne];
-                let bin = &p.bufs_in[bi * bl..(bi + 1) * bl];
-                rt.unpack(&kun, u, bin, tmp)?;
-                u.copy_from_slice(tmp);
-                rt.stage(&kst, u, u0, scal, tmp)?;
-                u.copy_from_slice(tmp);
-                rt.pack(&kpk, u, &mut p.bufs_out[bi * bl..(bi + 1) * bl])?;
+    /// The stage launches of ONE pack under the configured packing
+    /// strategy (Fig. 8), timed into the per-block cost samples (artifact
+    /// keys are resolved before the timer starts, so key construction
+    /// never pollutes the measured launch seconds). The per-pack unit of
+    /// both stage schedules: the phased path loops over packs; the fused
+    /// path orders `launch_pack` → `send_pack` → `poll_pack` per pack
+    /// through a task list.
+    fn launch_pack(
+        &mut self,
+        md: &mut MeshData,
+        pi: usize,
+        scal: ScalArgs,
+        si: usize,
+    ) -> Result<()> {
+        let elapsed = match self.strategy {
+            PackStrategy::PerPack => {
+                // one fused unpack+stage+pack+dt launch for the whole pack
+                let key = self.key("fused", md.packs()[pi].nb);
+                let (descs, staging) = md.parts_mut();
+                let d = &descs[pi];
+                let p = &mut staging[pi];
+                let t0 = Instant::now();
+                let dts = self.rt.fused(
+                    &key,
+                    &mut p.u,
+                    &p.u0,
+                    &p.bufs_in,
+                    scal,
+                    &mut p.bufs_out,
+                )?;
+                let el = t0.elapsed();
                 if si == 1 {
-                    let dts = rt.dt(&kdt, u, scal)?;
-                    last_dts[d.first + bi] = dts[0];
+                    for (bi, v) in dts.iter().enumerate() {
+                        self.last_dts[d.first + bi] = *v;
+                    }
                 }
+                el
             }
-        }
-        Ok(())
-    }
-
-    /// The "original" regime: one launch per buffer (unpack1/pack1) plus the
-    /// per-block stage launch.
-    fn stage_perbuffer(&mut self, md: &mut MeshData, scal: ScalArgs, si: usize) -> Result<()> {
-        let kst = self.key("stage", 1);
-        let kdt = self.key("dt", 1);
-        let nslots = self.seg_lens.len();
-        let kun1: Vec<ArtifactKey> =
-            (0..nslots).map(|s| self.key("unpack1", 1).with_nbr(s)).collect();
-        let kpk1: Vec<ArtifactKey> =
-            (0..nslots).map(|s| self.key("pack1", 1).with_nbr(s)).collect();
-        let (descs, staging) = md.parts_mut();
-        let DeviceState {
-            rt, last_dts, tmp, seg_offs, seg_lens, block_elems, buflen, ..
-        } = self;
-        let ne = *block_elems;
-        let bl = *buflen;
-        for (d, p) in descs.iter().zip(staging.iter_mut()) {
-            for bi in 0..d.nb {
-                let u = &mut p.u[bi * ne..(bi + 1) * ne];
-                let u0 = &p.u0[bi * ne..(bi + 1) * ne];
-                let base = bi * bl;
-                // apply each inbound buffer with its own launch
-                for slot in 0..nslots {
-                    let seg = &p.bufs_in
-                        [base + seg_offs[slot]..base + seg_offs[slot] + seg_lens[slot]];
-                    rt.unpack1(&kun1[slot], u, seg, tmp)?;
+            PackStrategy::PerBlock => {
+                // unpack + stage + pack (+ dt at stage 2) per block
+                let kun = self.key("unpack", 1);
+                let kst = self.key("stage", 1);
+                let kpk = self.key("pack", 1);
+                let kdt = self.key("dt", 1);
+                let (descs, staging) = md.parts_mut();
+                let d = &descs[pi];
+                let p = &mut staging[pi];
+                let DeviceState { rt, last_dts, tmp, block_elems, buflen, .. } = self;
+                let ne = *block_elems;
+                let bl = *buflen;
+                let t0 = Instant::now();
+                for bi in 0..d.nb {
+                    let u = &mut p.u[bi * ne..(bi + 1) * ne];
+                    let u0 = &p.u0[bi * ne..(bi + 1) * ne];
+                    let bin = &p.bufs_in[bi * bl..(bi + 1) * bl];
+                    rt.unpack(&kun, u, bin, tmp)?;
                     u.copy_from_slice(tmp);
+                    rt.stage(&kst, u, u0, scal, tmp)?;
+                    u.copy_from_slice(tmp);
+                    rt.pack(&kpk, u, &mut p.bufs_out[bi * bl..(bi + 1) * bl])?;
+                    if si == 1 {
+                        let dts = rt.dt(&kdt, u, scal)?;
+                        last_dts[d.first + bi] = dts[0];
+                    }
                 }
-                rt.stage(&kst, u, u0, scal, tmp)?;
-                u.copy_from_slice(tmp);
-                // fill each outbound buffer with its own launch
-                for slot in 0..nslots {
-                    let seg = rt.pack1(&kpk1[slot], u)?;
-                    p.bufs_out
-                        [base + seg_offs[slot]..base + seg_offs[slot] + seg_lens[slot]]
-                        .copy_from_slice(&seg);
-                }
-                if si == 1 {
-                    let dts = rt.dt(&kdt, u, scal)?;
-                    last_dts[d.first + bi] = dts[0];
-                }
+                t0.elapsed()
             }
+            PackStrategy::PerBuffer => {
+                // the "original" regime: one launch per boundary buffer
+                // (unpack1/pack1) plus the per-block stage launch
+                let kst = self.key("stage", 1);
+                let kdt = self.key("dt", 1);
+                let nslots = self.seg_lens.len();
+                let kun1: Vec<ArtifactKey> =
+                    (0..nslots).map(|s| self.key("unpack1", 1).with_nbr(s)).collect();
+                let kpk1: Vec<ArtifactKey> =
+                    (0..nslots).map(|s| self.key("pack1", 1).with_nbr(s)).collect();
+                let (descs, staging) = md.parts_mut();
+                let d = &descs[pi];
+                let p = &mut staging[pi];
+                let DeviceState {
+                    rt, last_dts, tmp, seg_offs, seg_lens, block_elems, buflen, ..
+                } = self;
+                let ne = *block_elems;
+                let bl = *buflen;
+                let t0 = Instant::now();
+                for bi in 0..d.nb {
+                    let u = &mut p.u[bi * ne..(bi + 1) * ne];
+                    let u0 = &p.u0[bi * ne..(bi + 1) * ne];
+                    let base = bi * bl;
+                    // apply each inbound buffer with its own launch
+                    for slot in 0..nslots {
+                        let seg = &p.bufs_in[base + seg_offs[slot]
+                            ..base + seg_offs[slot] + seg_lens[slot]];
+                        rt.unpack1(&kun1[slot], u, seg, tmp)?;
+                        u.copy_from_slice(tmp);
+                    }
+                    rt.stage(&kst, u, u0, scal, tmp)?;
+                    u.copy_from_slice(tmp);
+                    // fill each outbound buffer with its own launch
+                    for slot in 0..nslots {
+                        let seg = rt.pack1(&kpk1[slot], u)?;
+                        p.bufs_out[base + seg_offs[slot]
+                            ..base + seg_offs[slot] + seg_lens[slot]]
+                            .copy_from_slice(&seg);
+                    }
+                    if si == 1 {
+                        let dts = rt.dt(&kdt, u, scal)?;
+                        last_dts[d.first + bi] = dts[0];
+                    }
+                }
+                t0.elapsed()
+            }
+            PackStrategy::Native => {
+                return Err(Error::Runtime("strategy=native is the Host path".into()))
+            }
+        };
+        // Per-pack launch seconds, spread evenly over the pack's blocks
+        // (launches are the per-pack measurement unit on Device).
+        let d = &md.packs()[pi];
+        let per_block = elapsed.as_secs_f64() / d.nb.max(1) as f64;
+        for bi in 0..d.nb {
+            self.block_secs[d.first + bi] += per_block;
+        }
+        Ok(())
+    }
+
+    /// Send ONE pack's outbound boundary segments (fused send task; the
+    /// phased `route_and_receive` keeps its own whole-rank loop).
+    fn send_pack(&self, descs: &[PackDesc], staging: &[PackStaging], pi: usize) {
+        let d = &descs[pi];
+        let p = &staging[pi];
+        for bi in 0..d.nb {
+            let flat = d.first + bi;
+            let base = bi * self.buflen;
+            for (slot, e) in self.routes[flat].iter().enumerate() {
+                let seg = &p.bufs_out[base + self.seg_offs[slot]
+                    ..base + self.seg_offs[slot] + self.seg_lens[slot]];
+                self.comm.isend(e.dst_rank, e.send_tag, Payload::F32(seg.to_vec()));
+            }
+        }
+    }
+
+    /// Poll ONE pack's pending inbound segments (`(block-in-pack, slot)`
+    /// pairs) into its `bufs_in`. True when the pack's receives are all in.
+    fn poll_pack(
+        &self,
+        md: &mut MeshData,
+        pi: usize,
+        pending: &mut Vec<(usize, usize)>,
+    ) -> Result<bool> {
+        let (descs, staging) = md.parts_mut();
+        let d = &descs[pi];
+        let p = &mut staging[pi];
+        let mut i = 0usize;
+        while i < pending.len() {
+            let (bi, slot) = pending[i];
+            let e = &self.routes[d.first + bi][slot];
+            if let Some(payload) = self.comm.try_recv(e.recv_src, e.recv_tag) {
+                let data = payload.into_f32()?;
+                let base = bi * self.buflen;
+                p.bufs_in[base + self.seg_offs[slot]
+                    ..base + self.seg_offs[slot] + self.seg_lens[slot]]
+                    .copy_from_slice(&data);
+                pending.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        Ok(pending.is_empty())
+    }
+
+    /// The fused Device stage: per-pack task lists order launch → send →
+    /// poll, swept round-robin on the driver thread (launches share the
+    /// runtime), so one pack's boundary routing overlaps the interior
+    /// launches of the others instead of waiting behind a whole-rank
+    /// launch barrier. Bitwise identical to the phased path: launches are
+    /// per-pack independent and every received segment lands in a disjoint
+    /// `bufs_in` slab.
+    fn stage_fused(&mut self, md: &mut MeshData, scal: ScalArgs, si: usize) -> Result<()> {
+        let npacks = md.npacks();
+        let pending: Vec<Vec<(usize, usize)>> =
+            md.packs().iter().map(|d| self.pack_pending(d)).collect();
+
+        struct DevStageCtx<'a> {
+            dev: &'a mut DeviceState,
+            md: &'a mut MeshData,
+            pending: Vec<Vec<(usize, usize)>>,
+            scal: ScalArgs,
+            si: usize,
+            error: Option<Error>,
+        }
+
+        let mut region: TaskRegion<DevStageCtx> = TaskRegion::new(npacks);
+        for pi in 0..npacks {
+            let list = region.list(pi);
+            let t_launch = list.add(NONE, move |c: &mut DevStageCtx| {
+                if c.error.is_some() {
+                    return TaskStatus::Complete;
+                }
+                if let Err(e) = c.dev.launch_pack(c.md, pi, c.scal, c.si) {
+                    c.error = Some(e);
+                }
+                TaskStatus::Complete
+            });
+            let t_send = list.add(&[t_launch], move |c: &mut DevStageCtx| {
+                if c.error.is_some() {
+                    return TaskStatus::Complete;
+                }
+                c.dev.send_pack(c.md.packs(), c.md.staging(), pi);
+                TaskStatus::Complete
+            });
+            let _t_poll = list.add(&[t_send], move |c: &mut DevStageCtx| {
+                if c.error.is_some() {
+                    return TaskStatus::Complete;
+                }
+                let DevStageCtx { dev, md, pending, error, .. } = c;
+                match dev.poll_pack(md, pi, &mut pending[pi]) {
+                    Ok(true) => TaskStatus::Complete,
+                    Ok(false) => TaskStatus::Incomplete,
+                    Err(e) => {
+                        *error = Some(e);
+                        TaskStatus::Complete
+                    }
+                }
+            });
+        }
+        let mut ctx = DevStageCtx { dev: self, md, pending, scal, si, error: None };
+        region.execute(&mut ctx, 200_000)?;
+        if let Some(e) = ctx.error {
+            return Err(e);
         }
         Ok(())
     }
@@ -449,19 +599,22 @@ impl StageExecutor for DeviceState {
         dt: Real,
     ) -> Result<()> {
         sim.mesh_data.validate(&sim.mesh)?;
-        let scal = self.scal(co, dt, &sim.mesh);
-        let md = &mut sim.mesh_data;
-        match self.strategy {
-            PackStrategy::PerPack => self.stage_perpack(md, scal, si)?,
-            PackStrategy::PerBlock => self.stage_perblock(md, scal, si)?,
-            PackStrategy::PerBuffer => self.stage_perbuffer(md, scal, si)?,
-            PackStrategy::Native => {
-                return Err(Error::Runtime(
-                    "strategy=native is the Host path".into(),
-                ))
-            }
+        if self.strategy == PackStrategy::Native {
+            return Err(Error::Runtime("strategy=native is the Host path".into()));
         }
-        self.route_and_receive(md)
+        let scal = self.scal(co, dt, &sim.mesh);
+        let overlap = sim.sp.overlap;
+        let md = &mut sim.mesh_data;
+        if overlap == OverlapMode::Fused {
+            // per-pack task lists: launch → send → poll, interleaved
+            self.stage_fused(md, scal, si)
+        } else {
+            // phased oracle: all launches, then the whole-rank routing
+            for pi in 0..md.npacks() {
+                self.launch_pack(md, pi, scal, si)?;
+            }
+            self.route_and_receive(md)
+        }
     }
 
     /// Raw min CFL dt across local blocks, scaled by the package CFL.

@@ -11,28 +11,86 @@
 //! to the cost-weighted static schedule.
 //!
 //! Every pack owns a disjoint `&mut` chunk of the per-block work arrays
-//! (fluxes, u0, u_new), and each worker keeps a private reconstruction
-//! scratch, so no locking happens inside the kernels and results are
+//! (fluxes, u0, u_new), and reconstruction scratch is bounded by the
+//! worker count, so no locking happens inside the kernels and results are
 //! bitwise independent of worker count and steal order. Per-block kernel
 //! seconds are measured here and folded into `MeshBlock::cost` by
 //! `HydroSim::update_block_costs` (EWMA) — the measured costs feed both
 //! the next cycle's seed partition and the load balancer.
 //!
-//! Flux correction stays on the driver thread (it is communication-bound
-//! and touches fluxes across packs); the ghost exchange runs as the
-//! per-pack task collection of [`crate::bvals::exchange_tasked_parallel`],
-//! executed on the same worker-pool shape.
+//! Two stage schedules share the kernels (`parthenon/exec overlap`):
+//!
+//! * **`fused`** (default) — phases 1–4 are ONE per-pack task list run by
+//!   [`crate::tasks::TaskRegion::execute_parallel`] on the steal pool:
+//!   fluxes → flux-correction send/poll → stage combine → post boundary
+//!   sends, then receives are polled as `Incomplete` tasks. Pack A's
+//!   boundary exchange overlaps pack B's compute instead of waiting at a
+//!   phase barrier — the paper's comm/compute overlap at task granularity.
+//! * **`phased`** — the barrier-phased loop (all fluxes, then flux
+//!   correction on the driver thread, then all combines, then the
+//!   exchange). Kept as the bitwise-identity oracle; both schedules
+//!   produce identical results because every per-block computation reads
+//!   exactly the same inputs (pinned by `rust/tests/overlap_fused.rs`).
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
-use super::{run_stage_exchange, StageExecutor};
-use crate::error::Result;
+use super::{run_stage_exchange, OverlapMode, StageExecutor};
+use crate::bvals::{self, ExchTopo, PackExchange};
+use crate::comm::Comm;
+use crate::error::{Error, Result};
 use crate::hydro::native::{self, FluxArrays, Scratch, StageCoeffs};
 use crate::hydro::CONS;
-use crate::mesh::IndexShape;
+use crate::mesh::{IndexShape, MeshBlock};
+use crate::tasks::{TaskRegion, TaskStatus, NONE};
+use crate::util::backoff::STALL_LIMIT;
 use crate::util::stealing::{run_stealing, StealPolicy, StealPool};
 use crate::vars::Package;
 use crate::{Real, NHYDRO};
+
+/// Instrumentation counters for the fused overlap pipeline (cumulative
+/// over stages/cycles). `early_poll_violations` pins the overlap contract:
+/// a pack's exchange sends must be posted before its poll task first
+/// returns `Incomplete` — the task graph orders post-sends before the
+/// poll, so this must stay 0.
+#[derive(Debug, Default)]
+pub struct OverlapStats {
+    /// Per-pack send tasks that ran (sends posted + receives registered).
+    pub packs_posted: AtomicU64,
+    /// Boundary segments posted by fused send tasks.
+    pub segments_sent: AtomicU64,
+    /// Times a fused poll task returned `Incomplete` (receives pending
+    /// while other packs keep computing — the overlap actually engaging).
+    pub incomplete_polls: AtomicU64,
+    /// Poll returned `Incomplete` before the pack's sends were posted.
+    pub early_poll_violations: AtomicU64,
+}
+
+/// Bounded scratch store for the fused pipeline: at most `nworkers` flux
+/// tasks run concurrently, so a stack of `nworkers` scratches serves every
+/// pack without per-pack allocations (the fused analog of the phased
+/// path's one-scratch-per-worker array).
+struct ScratchPool {
+    stack: Mutex<Vec<Scratch>>,
+}
+
+impl ScratchPool {
+    fn new(scratches: Vec<Scratch>) -> ScratchPool {
+        ScratchPool { stack: Mutex::new(scratches) }
+    }
+
+    fn with<R>(&self, f: impl FnOnce(&mut Scratch) -> R) -> R {
+        let mut s = self.stack.lock().unwrap().pop().unwrap_or_default();
+        let r = f(&mut s);
+        self.stack.lock().unwrap().push(s);
+        r
+    }
+
+    fn into_inner(self) -> Vec<Scratch> {
+        self.stack.into_inner().unwrap()
+    }
+}
 
 /// Per-rank host executor state: per-block work arrays (same order as
 /// `mesh.blocks`) plus one scratch per worker thread.
@@ -46,6 +104,7 @@ pub struct HostExec {
     block_secs: Vec<f64>,
     nworkers: usize,
     policy: StealPolicy,
+    overlap_stats: OverlapStats,
 }
 
 impl HostExec {
@@ -72,6 +131,7 @@ impl HostExec {
             block_secs: vec![0.0; nblocks],
             nworkers,
             policy,
+            overlap_stats: OverlapStats::default(),
         }
     }
 
@@ -86,6 +146,11 @@ impl HostExec {
     /// Block `bi`'s flux arrays (flux-correction tests).
     pub fn flux(&self, bi: usize) -> &FluxArrays {
         &self.flux[bi]
+    }
+
+    /// Fused-pipeline instrumentation (exchange overlap counters).
+    pub fn overlap_stats(&self) -> &OverlapStats {
+        &self.overlap_stats
     }
 
     /// Take (and zero) the per-block kernel seconds measured since the
@@ -114,6 +179,313 @@ fn split_chunks<'a, T>(
     parts
 }
 
+/// Per-pack context of the fused stage pipeline: one task list per pack
+/// runs fluxes → flux-correction → combine → boundary sends → receive
+/// polls against this context, which owns a disjoint `&mut` slice of every
+/// per-block structure (blocks, fluxes, u_new, timings) plus shared
+/// read-only views (topology, u0, scratch pool) — the whole context is
+/// `Send`, so its list can be swept by any worker while other packs' lists
+/// run concurrently.
+struct FusedPackCtx<'a> {
+    /// Global index of the pack's first block (u0 is indexed globally).
+    start: usize,
+    blocks: &'a mut [MeshBlock],
+    flux: &'a mut [FluxArrays],
+    unew: &'a mut [Vec<Real>],
+    secs: &'a mut [f64],
+    u0: &'a [Vec<Real>],
+    /// Flux corrections this pack's coarse blocks expect (indices are
+    /// global; polled against the pack's flux slice via `start`).
+    fpending: Vec<super::FluxRecv>,
+    /// Send/receive halves of the pack's ghost exchange; also the single
+    /// owner of the shared topology (`PackExchange::topo`).
+    exch: PackExchange<'a>,
+    fcomm: &'a Comm,
+    scratch: &'a ScratchPool,
+    stats: &'a OverlapStats,
+    shape: IndexShape,
+    gamma: Real,
+    co: StageCoeffs,
+    dt: Real,
+    error: Option<Error>,
+    /// Shared across packs: first error drains every list fast.
+    abort: &'a AtomicBool,
+}
+
+impl HostExec {
+    /// The fused stage: phases 1–4 as ONE per-pack task list executed on
+    /// the work-stealing pool, so boundary exchange of one pack overlaps
+    /// compute of the others. Bitwise identical to the phased path: every
+    /// per-block kernel reads exactly the inputs it reads there (fluxes
+    /// from its own block, corrections complete before its combine,
+    /// ghost segments written to disjoint slabs), and physical BCs are
+    /// applied at the same point, after every receive has landed.
+    fn stage_fused(
+        &mut self,
+        sim: &mut super::HydroSim,
+        co: StageCoeffs,
+        dt: Real,
+    ) -> Result<()> {
+        sim.mesh_data.validate(&sim.mesh)?;
+        let shape = sim.mesh.cfg.index_shape();
+        let gamma = sim.pkg.gamma;
+        let multilevel = sim.is_multilevel();
+        let pack_ranges = sim.mesh_data.block_ranges();
+        let pack_costs = sim.mesh_data.pack_costs(&sim.mesh);
+        let npacks = pack_ranges.len();
+        let nworkers = self.nworkers;
+        let policy = self.policy;
+
+        // Scratch moves into a bounded pool (≤ nworkers concurrent flux
+        // tasks) and is restored below, also on error paths.
+        let scratch_pool = ScratchPool::new(std::mem::take(&mut self.scratch));
+        let mut first_error: Option<Error> = None;
+        {
+            let stats = &self.overlap_stats;
+            let flux_parts = split_chunks(&mut self.flux, &pack_ranges);
+            let unew_parts = split_chunks(&mut self.unew, &pack_ranges);
+            let secs_parts = split_chunks(&mut self.block_secs, &pack_ranges);
+            let u0_all: &[Vec<Real>] = &self.u0;
+
+            let mesh = &mut sim.mesh;
+            let topo = ExchTopo {
+                shape,
+                dim: mesh.cfg.dim,
+                tree: &mesh.tree,
+                ranks: &mesh.ranks,
+            };
+            // Flux corrections are registered per pack up front (reads the
+            // immutable topology), before the blocks split into disjoint
+            // per-pack slices.
+            let fpend: Vec<Vec<super::FluxRecv>> = if multilevel {
+                pack_ranges
+                    .iter()
+                    .map(|r| {
+                        super::flux_corr_pending_blocks(
+                            &topo,
+                            &mesh.blocks[r.clone()],
+                            r.start,
+                        )
+                    })
+                    .collect()
+            } else {
+                (0..npacks).map(|_| Vec::new()).collect()
+            };
+            let block_parts = split_chunks(&mut mesh.blocks, &pack_ranges);
+            let comm = &sim.comm_cons;
+            let fcomm = &sim.comm_flux;
+            let abort = AtomicBool::new(false);
+
+            let mut ctxs: Vec<FusedPackCtx> = Vec::with_capacity(npacks);
+            for ((((range, blocks), flux), (unew, secs)), fpending) in pack_ranges
+                .iter()
+                .zip(block_parts)
+                .zip(flux_parts)
+                .zip(unew_parts.into_iter().zip(secs_parts))
+                .zip(fpend)
+            {
+                ctxs.push(FusedPackCtx {
+                    start: range.start,
+                    blocks,
+                    flux,
+                    unew,
+                    secs,
+                    u0: u0_all,
+                    fpending,
+                    exch: PackExchange::new(topo, comm, CONS),
+                    fcomm,
+                    scratch: &scratch_pool,
+                    stats,
+                    shape,
+                    gamma,
+                    co,
+                    dt,
+                    error: None,
+                    abort: &abort,
+                });
+            }
+
+            let mut region: TaskRegion<FusedPackCtx> = TaskRegion::new(npacks);
+            for pi in 0..npacks {
+                let list = region.list(pi);
+                // 1. prim recovery + fluxes for the pack's blocks
+                let t_flux = list.add(NONE, |c: &mut FusedPackCtx| {
+                    if c.abort.load(Ordering::SeqCst) {
+                        return TaskStatus::Complete;
+                    }
+                    let FusedPackCtx { blocks, flux, secs, scratch, shape, gamma, .. } =
+                        c;
+                    scratch.with(|scr| {
+                        for (off, fx) in flux.iter_mut().enumerate() {
+                            let t0 = Instant::now();
+                            let arr = blocks[off].data.get(CONS).expect("cons");
+                            native::compute_fluxes(
+                                arr.as_slice(),
+                                shape,
+                                *gamma,
+                                fx,
+                                scr,
+                            );
+                            secs[off] += t0.elapsed().as_secs_f64();
+                        }
+                    });
+                    TaskStatus::Complete
+                });
+                // 2. flux correction (multilevel): fine-side sends read the
+                // computed fluxes; the coarse-side poll overwrites disjoint
+                // face entries and gates the combine.
+                let dep_apply = if multilevel {
+                    let _t_fcsend = list.add(&[t_flux], |c: &mut FusedPackCtx| {
+                        if c.abort.load(Ordering::SeqCst) {
+                            return TaskStatus::Complete;
+                        }
+                        let FusedPackCtx { blocks, flux, exch, fcomm, .. } = c;
+                        let topo = exch.topo();
+                        for (off, b) in blocks.iter().enumerate() {
+                            super::flux_corr_send_block(&topo, fcomm, &b.loc, &flux[off]);
+                        }
+                        TaskStatus::Complete
+                    });
+                    list.add(&[t_flux], |c: &mut FusedPackCtx| {
+                        if c.abort.load(Ordering::SeqCst) {
+                            return TaskStatus::Complete;
+                        }
+                        let FusedPackCtx {
+                            flux, fpending, fcomm, start, exch, error, abort, ..
+                        } = c;
+                        match super::flux_corr_poll_pending(
+                            fcomm,
+                            exch.topo().dim,
+                            fpending,
+                            flux,
+                            *start,
+                        ) {
+                            Ok(true) => TaskStatus::Complete,
+                            Ok(false) => TaskStatus::Incomplete,
+                            Err(e) => {
+                                *error = Some(e);
+                                abort.store(true, Ordering::SeqCst);
+                                TaskStatus::Complete
+                            }
+                        }
+                    })
+                } else {
+                    t_flux
+                };
+                // 3. stage combine (reads u0 globally, writes own blocks)
+                let t_apply = list.add(&[dep_apply], |c: &mut FusedPackCtx| {
+                    if c.abort.load(Ordering::SeqCst) {
+                        return TaskStatus::Complete;
+                    }
+                    let FusedPackCtx {
+                        blocks, flux, unew, secs, u0, start, shape, co, dt, ..
+                    } = c;
+                    for (off, b) in blocks.iter_mut().enumerate() {
+                        let t0 = Instant::now();
+                        let dx = [
+                            b.coords.dx[0] as Real,
+                            b.coords.dx[1] as Real,
+                            b.coords.dx[2] as Real,
+                        ];
+                        let arr = b.data.get_mut(CONS).expect("cons");
+                        native::apply_stage(
+                            arr.as_slice(),
+                            &u0[*start + off],
+                            &flux[off],
+                            shape,
+                            *co,
+                            *dt,
+                            dx,
+                            &mut unew[off],
+                        );
+                        arr.as_mut_slice().copy_from_slice(&unew[off]);
+                        secs[off] += t0.elapsed().as_secs_f64();
+                    }
+                    TaskStatus::Complete
+                });
+                // 4a. post the pack's boundary sends + register receives
+                let t_send = list.add(&[t_apply], |c: &mut FusedPackCtx| {
+                    if c.abort.load(Ordering::SeqCst) {
+                        return TaskStatus::Complete;
+                    }
+                    let FusedPackCtx { blocks, exch, stats, error, abort, .. } = c;
+                    match exch.post_sends(blocks) {
+                        Ok(()) => {
+                            exch.register_receives(blocks);
+                            stats.packs_posted.fetch_add(1, Ordering::Relaxed);
+                            stats
+                                .segments_sent
+                                .fetch_add(exch.segments_sent() as u64, Ordering::Relaxed);
+                        }
+                        Err(e) => {
+                            if error.is_none() {
+                                *error = Some(e);
+                            }
+                            abort.store(true, Ordering::SeqCst);
+                        }
+                    }
+                    TaskStatus::Complete
+                });
+                // 4b. poll receives; Incomplete hands the worker to other
+                // packs' lists — this is where the overlap happens.
+                let _t_poll = list.add(&[t_send], |c: &mut FusedPackCtx| {
+                    if c.error.is_some() || c.abort.load(Ordering::SeqCst) {
+                        return TaskStatus::Complete;
+                    }
+                    let FusedPackCtx { blocks, exch, stats, error, abort, .. } = c;
+                    match exch.poll(blocks) {
+                        Ok(true) => TaskStatus::Complete,
+                        Ok(false) => {
+                            stats.incomplete_polls.fetch_add(1, Ordering::Relaxed);
+                            if !exch.sends_posted() {
+                                stats
+                                    .early_poll_violations
+                                    .fetch_add(1, Ordering::Relaxed);
+                            }
+                            TaskStatus::Incomplete
+                        }
+                        Err(e) => {
+                            *error = Some(e);
+                            abort.store(true, Ordering::SeqCst);
+                            TaskStatus::Complete
+                        }
+                    }
+                });
+            }
+
+            let res = region.execute_parallel_weighted(
+                ctxs,
+                Some(&pack_costs),
+                nworkers,
+                policy,
+                STALL_LIMIT,
+            );
+            match res {
+                Ok(done) => {
+                    for c in done {
+                        if let Some(e) = c.error {
+                            first_error = Some(e);
+                            break;
+                        }
+                    }
+                }
+                Err(e) => first_error = Some(e),
+            }
+        }
+        self.scratch = scratch_pool.into_inner();
+        if let Some(e) = first_error {
+            return Err(e);
+        }
+        // Physical BCs once every receive has landed — the same point the
+        // phased path applies them.
+        bvals::apply_block_physical_bcs(
+            &mut sim.mesh,
+            CONS,
+            Some([native::IM1, native::IM2, native::IM3]),
+        )
+    }
+}
+
 impl StageExecutor for HostExec {
     fn begin_cycle(&mut self, sim: &mut super::HydroSim) -> Result<()> {
         sim.mesh_data.validate(&sim.mesh)?;
@@ -130,6 +502,9 @@ impl StageExecutor for HostExec {
         _si: usize,
         dt: Real,
     ) -> Result<()> {
+        if sim.sp.overlap == OverlapMode::Fused {
+            return self.stage_fused(sim, co, dt);
+        }
         sim.mesh_data.validate(&sim.mesh)?;
         let shape = sim.mesh.cfg.index_shape();
         let gamma = sim.pkg.gamma;

@@ -20,7 +20,7 @@ mod host;
 pub mod regrid;
 
 pub use device::DeviceState;
-pub use host::HostExec;
+pub use host::{HostExec, OverlapStats};
 
 use crate::bvals::{self, PackStrategy};
 use crate::comm::{tags, Comm, Payload, ReduceOp, World};
@@ -29,7 +29,7 @@ use crate::error::{Error, Result};
 use crate::hydro::native::{self, FluxArrays, StageCoeffs, RK2_STAGES};
 use crate::hydro::problems::{self, Problem};
 use crate::hydro::{HydroPackage, CONS};
-use crate::mesh::{Mesh, MeshConfig, NeighborKind};
+use crate::mesh::{LogicalLocation, Mesh, MeshBlock, MeshConfig, NeighborKind};
 use crate::mesh_data::MeshData;
 use crate::metrics::{Ewma, Timers, ZoneCycles};
 use crate::util::backoff::{ProgressWait, STALL_LIMIT};
@@ -47,6 +47,33 @@ const COST_EWMA_ALPHA: f64 = 0.3;
 pub enum ExecSpace {
     Host,
     Device,
+}
+
+/// How the stage phases are scheduled (`parthenon/exec overlap`).
+///
+/// * `Fused` (default) — phases 1–4 run as ONE per-pack task list:
+///   prim-recovery/fluxes → flux-correction → stage combine → post sends,
+///   then receives are polled as `Incomplete` tasks, so pack A's boundary
+///   exchange overlaps pack B's compute (the paper's comm/compute overlap).
+/// * `Phased` — the barrier-phased loop (all fluxes, then all corrections,
+///   then all combines, then the exchange). Kept as the bitwise-identity
+///   oracle: both modes must produce identical results
+///   (`rust/tests/overlap_fused.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverlapMode {
+    Phased,
+    Fused,
+}
+
+impl OverlapMode {
+    /// Parse the `parthenon/exec overlap` input value.
+    pub fn parse(s: &str) -> Option<OverlapMode> {
+        match s {
+            "phased" | "barrier" => Some(OverlapMode::Phased),
+            "fused" | "overlap" => Some(OverlapMode::Fused),
+            _ => None,
+        }
+    }
 }
 
 /// Base driver abstraction (paper Sec. 3.11): applications implement
@@ -133,6 +160,9 @@ pub struct SimParams {
     pub nworkers: usize,
     /// Host pack scheduler: work-stealing (default) or static ranges.
     pub sched: StealPolicy,
+    /// Stage scheduling: fused per-pack pipeline (default) or the
+    /// barrier-phased oracle.
+    pub overlap: OverlapMode,
     /// Cycles between cost-driven load-balance checks (0 = off; AMR runs
     /// rebalance inside regrid anyway).
     pub lb_interval: i64,
@@ -163,6 +193,9 @@ impl SimParams {
         let sched_s = pin.str_or("parthenon/exec", "sched", "stealing");
         let sched = StealPolicy::parse(&sched_s)
             .ok_or_else(|| Error::config(format!("unknown scheduler {sched_s:?}")))?;
+        let overlap_s = pin.str_or("parthenon/exec", "overlap", "fused");
+        let overlap = OverlapMode::parse(&overlap_s)
+            .ok_or_else(|| Error::config(format!("unknown overlap mode {overlap_s:?}")))?;
         Ok(SimParams {
             problem,
             tlim: pin.real_or("parthenon/time", "tlim", 1.0),
@@ -172,6 +205,7 @@ impl SimParams {
             pack_size: pin.int_or("parthenon/exec", "pack_size", 16) as usize,
             nworkers: pin.int_or("parthenon/exec", "nworkers", 0).max(0) as usize,
             sched,
+            overlap,
             lb_interval: pin.int_or("parthenon/loadbalance", "interval", 0),
             impl_: pin.str_or("parthenon/exec", "impl", "jnp"),
             output_dt: pin.real_or("parthenon/output0", "dt", -1.0),
@@ -383,18 +417,25 @@ impl HydroSim {
         };
     }
 
-    /// Fold the host executor's measured per-block kernel seconds into the
+    /// Fold the executor's measured per-block kernel seconds into the
     /// per-block cost EWMA ([`crate::mesh::MeshBlock::cost`]). Samples are
     /// normalized to the GLOBAL mean block seconds (sum-allreduced), never
     /// a rank-local mean — a rank-local mean would rescale every rank to
     /// 1.0 and erase exactly the inter-rank imbalance the load balancer
-    /// needs to see. Every Host rank reaches the collective every cycle
-    /// (ranks with no blocks contribute zeros); no-op on the Device path
-    /// (launches are per pack, not per block — exec space is uniform
-    /// across ranks, so no rank is left waiting).
+    /// needs to see. Every rank reaches the collective every cycle (ranks
+    /// with no blocks contribute zeros; the exec space is uniform across
+    /// ranks, so no rank is left waiting). Host measures per block; Device
+    /// times each pack launch and spreads the sample evenly over the
+    /// pack's blocks — so `parthenon/loadbalance interval` rebalances on
+    /// MEASURED costs in both execution spaces.
     pub(crate) fn update_block_costs(&mut self) {
-        let Some(h) = self.host.as_mut() else { return };
-        let secs = h.drain_block_secs();
+        let secs = if let Some(h) = self.host.as_mut() {
+            h.drain_block_secs()
+        } else if let Some(d) = self.device.as_mut() {
+            d.drain_block_secs()
+        } else {
+            return;
+        };
         let local = [secs.iter().sum::<f64>(), secs.len() as f64];
         let glob = self.comm_coll.allreduce_vec(&local, ReduceOp::Sum);
         let (gtotal, gcount) = (glob[0], glob[1]);
@@ -445,139 +486,20 @@ impl HydroSim {
     /// Fine side: restrict boundary face fluxes and send to the coarse
     /// neighbor (paper Sec. 3.7).
     pub(crate) fn flux_corr_send(&self, fx: &FluxArrays, bi: usize) {
-        let shape = self.mesh.cfg.index_shape();
-        let dim = shape.dim;
-        let loc = self.mesh.blocks[bi].loc;
-        for nb in self.mesh.tree.find_neighbors(&loc) {
-            // faces only
-            let nonzero = (0..3).filter(|&d| nb.offset[d] != 0).count();
-            if nonzero != 1 {
-                continue;
-            }
-            let NeighborKind::Coarser(cloc) = &nb.kind else { continue };
-            let d = (0..3).find(|&d| nb.offset[d] != 0).unwrap();
-            let side = if nb.offset[d] < 0 { 0 } else { 1 };
-            let face_idx = if side == 0 { 0 } else { shape.n[d] };
-            // restrict tangentially: coarse (tj, tk) <- mean of fine 2x2 (or
-            // 2 in 2D). Tangential axes = all active axes != d.
-            let mut payload = Vec::new();
-            let tdims: Vec<usize> = (0..dim).filter(|&a| a != d).collect();
-            let tlen: Vec<usize> =
-                tdims.iter().map(|&a| shape.n[a] / 2).collect();
-            for v in 0..crate::NHYDRO {
-                match dim {
-                    1 => payload.push(fx.f[d][fx.idx(d, v, 0, 0, face_idx)]),
-                    2 => {
-                        let a = tdims[0];
-                        for t in 0..tlen[0] {
-                            let mut s = 0.0;
-                            for dt in 0..2 {
-                                let tt = 2 * t + dt;
-                                let (k, j, i) = match (d, a) {
-                                    (0, 1) => (0, tt, face_idx),
-                                    (1, 0) => (0, face_idx, tt),
-                                    _ => unreachable!(),
-                                };
-                                s += fx.f[d][fx.idx(d, v, k, j, i)];
-                            }
-                            payload.push(s * 0.5);
-                        }
-                    }
-                    _ => {
-                        // 3D: tangential axes in ascending order (a1 < a2)
-                        let (a1, a2) = (tdims[0], tdims[1]);
-                        for t2 in 0..tlen[1] {
-                            for t1 in 0..tlen[0] {
-                                let mut s = 0.0;
-                                for d2 in 0..2 {
-                                    for d1 in 0..2 {
-                                        let u1 = 2 * t1 + d1;
-                                        let u2 = 2 * t2 + d2;
-                                        let mut kji = [0usize; 3]; // (i,j,k)
-                                        kji[d] = face_idx;
-                                        kji[a1] = u1;
-                                        kji[a2] = u2;
-                                        s += fx.f[d]
-                                            [fx.idx(d, v, kji[2], kji[1], kji[0])];
-                                    }
-                                }
-                                payload.push(s * 0.25);
-                            }
-                        }
-                    }
-                }
-            }
-            let cgid = self.mesh.tree.gid_of(cloc).unwrap();
-            let face = 2 * d + (1 - side); // coarse block's face (opposite side)
-            let child = ((loc.lx[0] & 1)
-                | ((loc.lx[1] & 1) << 1)
-                | ((loc.lx[2] & 1) << 2)) as usize;
-            let tag = tags::flux_tag(cgid, face, child);
-            self.comm_flux
-                .isend(self.mesh.rank_of(cgid), tag, Payload::F32(payload));
-        }
+        let t = bvals::ExchTopo::of(&self.mesh);
+        flux_corr_send_block(&t, &self.comm_flux, &self.mesh.blocks[bi].loc, fx);
     }
 
     /// Coarse side: register expected flux corrections for this stage.
     pub(crate) fn flux_corr_post_recvs(&mut self) {
-        self.flux_pending.clear();
-        let shape = self.mesh.cfg.index_shape();
-        let dim = shape.dim;
-        for (bi, b) in self.mesh.blocks.iter().enumerate() {
-            for nb in self.mesh.tree.find_neighbors(&b.loc) {
-                let nonzero = (0..3).filter(|&d| nb.offset[d] != 0).count();
-                if nonzero != 1 {
-                    continue;
-                }
-                let NeighborKind::Finer(fines) = &nb.kind else { continue };
-                let d = (0..3).find(|&d| nb.offset[d] != 0).unwrap();
-                let side = if nb.offset[d] < 0 { 0 } else { 1 };
-                let face_idx = if side == 0 { 0 } else { shape.n[d] };
-                let face = 2 * d + side;
-                for floc in fines {
-                    let child = ((floc.lx[0] & 1)
-                        | ((floc.lx[1] & 1) << 1)
-                        | ((floc.lx[2] & 1) << 2)) as usize;
-                    let mut t_start = [0usize; 3];
-                    let mut t_len = [1usize; 3];
-                    for a in 0..dim {
-                        if a == d {
-                            continue;
-                        }
-                        let bit = (floc.lx[a] & 1) as usize;
-                        t_start[a] = bit * shape.n[a] / 2;
-                        t_len[a] = shape.n[a] / 2;
-                    }
-                    let fgid = self.mesh.tree.gid_of(floc).unwrap();
-                    self.flux_pending.push(FluxRecv {
-                        block: bi,
-                        src: self.mesh.rank_of(fgid),
-                        tag: tags::flux_tag(b.gid, face, child),
-                        d,
-                        face_idx,
-                        t_start,
-                        t_len,
-                    });
-                }
-            }
-        }
+        let t = bvals::ExchTopo::of(&self.mesh);
+        self.flux_pending = flux_corr_pending_blocks(&t, &self.mesh.blocks, 0);
     }
 
     /// Poll flux corrections; apply arrivals into `flux`. True when done.
     pub(crate) fn flux_corr_poll(&mut self, flux: &mut [FluxArrays]) -> Result<bool> {
         let dim = self.mesh.cfg.dim;
-        let mut i = 0;
-        while i < self.flux_pending.len() {
-            let p = &self.flux_pending[i];
-            if let Some(payload) = self.comm_flux.try_recv(p.src, p.tag) {
-                let data = payload.into_f32()?;
-                let p = self.flux_pending.swap_remove(i);
-                apply_flux_correction(&mut flux[p.block], &p, dim, &data);
-            } else {
-                i += 1;
-            }
-        }
-        Ok(self.flux_pending.is_empty())
+        flux_corr_poll_pending(&self.comm_flux, dim, &mut self.flux_pending, flux, 0)
     }
 
     /// Wait (bounded spin-then-backoff, progress-aware watchdog) until
@@ -677,6 +599,166 @@ impl HydroSim {
         }
         out
     }
+}
+
+/// Fine side of the flux correction for ONE block: restrict the boundary
+/// face fluxes toward every coarser face neighbor and isend them. Operates
+/// on the shared exchange topology so per-pack tasks can send from worker
+/// threads (the fused stage pipeline); `HydroSim::flux_corr_send` wraps it
+/// for the phased path.
+pub(crate) fn flux_corr_send_block(
+    t: &bvals::ExchTopo,
+    comm_flux: &Comm,
+    loc: &LogicalLocation,
+    fx: &FluxArrays,
+) {
+    let shape = t.shape;
+    let dim = shape.dim;
+    for nb in t.tree.find_neighbors(loc) {
+        // faces only
+        let nonzero = (0..3).filter(|&d| nb.offset[d] != 0).count();
+        if nonzero != 1 {
+            continue;
+        }
+        let NeighborKind::Coarser(cloc) = &nb.kind else { continue };
+        let d = (0..3).find(|&d| nb.offset[d] != 0).unwrap();
+        let side = if nb.offset[d] < 0 { 0 } else { 1 };
+        let face_idx = if side == 0 { 0 } else { shape.n[d] };
+        // restrict tangentially: coarse (tj, tk) <- mean of fine 2x2 (or
+        // 2 in 2D). Tangential axes = all active axes != d.
+        let mut payload = Vec::new();
+        let tdims: Vec<usize> = (0..dim).filter(|&a| a != d).collect();
+        let tlen: Vec<usize> =
+            tdims.iter().map(|&a| shape.n[a] / 2).collect();
+        for v in 0..crate::NHYDRO {
+            match dim {
+                1 => payload.push(fx.f[d][fx.idx(d, v, 0, 0, face_idx)]),
+                2 => {
+                    let a = tdims[0];
+                    for t in 0..tlen[0] {
+                        let mut s = 0.0;
+                        for dt in 0..2 {
+                            let tt = 2 * t + dt;
+                            let (k, j, i) = match (d, a) {
+                                (0, 1) => (0, tt, face_idx),
+                                (1, 0) => (0, face_idx, tt),
+                                _ => unreachable!(),
+                            };
+                            s += fx.f[d][fx.idx(d, v, k, j, i)];
+                        }
+                        payload.push(s * 0.5);
+                    }
+                }
+                _ => {
+                    // 3D: tangential axes in ascending order (a1 < a2)
+                    let (a1, a2) = (tdims[0], tdims[1]);
+                    for t2 in 0..tlen[1] {
+                        for t1 in 0..tlen[0] {
+                            let mut s = 0.0;
+                            for d2 in 0..2 {
+                                for d1 in 0..2 {
+                                    let u1 = 2 * t1 + d1;
+                                    let u2 = 2 * t2 + d2;
+                                    let mut kji = [0usize; 3]; // (i,j,k)
+                                    kji[d] = face_idx;
+                                    kji[a1] = u1;
+                                    kji[a2] = u2;
+                                    s += fx.f[d]
+                                        [fx.idx(d, v, kji[2], kji[1], kji[0])];
+                                }
+                            }
+                            payload.push(s * 0.25);
+                        }
+                    }
+                }
+            }
+        }
+        let cgid = t.tree.gid_of(cloc).unwrap();
+        let face = 2 * d + (1 - side); // coarse block's face (opposite side)
+        let child = ((loc.lx[0] & 1)
+            | ((loc.lx[1] & 1) << 1)
+            | ((loc.lx[2] & 1) << 2)) as usize;
+        let tag = tags::flux_tag(cgid, face, child);
+        comm_flux.isend(t.ranks[cgid], tag, Payload::F32(payload));
+    }
+}
+
+/// Coarse side: the flux corrections the given blocks expect this stage.
+/// `FluxRecv::block` indices are `base + slice index` (mesh-global when the
+/// caller passes the full block list with `base == 0`, pack-global when a
+/// fused per-pack task registers its own disjoint slice).
+pub(crate) fn flux_corr_pending_blocks(
+    t: &bvals::ExchTopo,
+    blocks: &[MeshBlock],
+    base: usize,
+) -> Vec<FluxRecv> {
+    let shape = t.shape;
+    let dim = shape.dim;
+    let mut out = Vec::new();
+    for (i, b) in blocks.iter().enumerate() {
+        let bi = base + i;
+        for nb in t.tree.find_neighbors(&b.loc) {
+            let nonzero = (0..3).filter(|&d| nb.offset[d] != 0).count();
+            if nonzero != 1 {
+                continue;
+            }
+            let NeighborKind::Finer(fines) = &nb.kind else { continue };
+            let d = (0..3).find(|&d| nb.offset[d] != 0).unwrap();
+            let side = if nb.offset[d] < 0 { 0 } else { 1 };
+            let face_idx = if side == 0 { 0 } else { shape.n[d] };
+            let face = 2 * d + side;
+            for floc in fines {
+                let child = ((floc.lx[0] & 1)
+                    | ((floc.lx[1] & 1) << 1)
+                    | ((floc.lx[2] & 1) << 2)) as usize;
+                let mut t_start = [0usize; 3];
+                let mut t_len = [1usize; 3];
+                for a in 0..dim {
+                    if a == d {
+                        continue;
+                    }
+                    let bit = (floc.lx[a] & 1) as usize;
+                    t_start[a] = bit * shape.n[a] / 2;
+                    t_len[a] = shape.n[a] / 2;
+                }
+                let fgid = t.tree.gid_of(floc).unwrap();
+                out.push(FluxRecv {
+                    block: bi,
+                    src: t.ranks[fgid],
+                    tag: tags::flux_tag(b.gid, face, child),
+                    d,
+                    face_idx,
+                    t_start,
+                    t_len,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Poll a pending-correction list, applying arrivals into `flux` (indexed
+/// by `FluxRecv::block - base`, so a per-pack task polls its own disjoint
+/// flux slice). True when the list has drained.
+pub(crate) fn flux_corr_poll_pending(
+    comm_flux: &Comm,
+    dim: usize,
+    pending: &mut Vec<FluxRecv>,
+    flux: &mut [FluxArrays],
+    base: usize,
+) -> Result<bool> {
+    let mut i = 0;
+    while i < pending.len() {
+        let p = &pending[i];
+        if let Some(payload) = comm_flux.try_recv(p.src, p.tag) {
+            let data = payload.into_f32()?;
+            let p = pending.swap_remove(i);
+            apply_flux_correction(&mut flux[p.block - base], &p, dim, &data);
+        } else {
+            i += 1;
+        }
+    }
+    Ok(pending.is_empty())
 }
 
 /// Apply one received flux correction to a coarse block's flux array.

@@ -265,6 +265,15 @@ pub fn check_and_rebalance(sim: &mut HydroSim) -> Result<bool> {
 /// leaving blocks' containers authoritative) and re-gathered afterwards;
 /// untouched packs keep their staging verbatim (pinned by the
 /// `gathered_packs` instrumentation in `rust/tests/mesh_data_packs.rs`).
+///
+/// The measured cost EWMA travels WITH each migrated block — appended to
+/// its point-to-point payload (two f32 bit-halves of the f64, exact) — so
+/// a migrated-in block continues from the sender's measured weight instead
+/// of restarting at the derived nominal value and forgetting the very
+/// imbalance that triggered the migration. Blocks that stay put restore
+/// their cost from a local stash (rebuild_local_blocks resets containers).
+/// No extra collective is needed (the old implementation re-allgathered
+/// every rank's costs here).
 pub fn rebalance(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Result<()> {
     let me = sim.mesh.my_rank;
     let old_ranks = sim.mesh.ranks.clone();
@@ -272,10 +281,6 @@ pub fn rebalance(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Result<()> {
     if new_ranks == old_ranks {
         return Ok(());
     }
-    // Global measured costs (allgathered; identical on every rank) so
-    // migrated-in blocks inherit the sender's EWMA weight instead of
-    // resetting to nominal and ping-ponging at the next balance check.
-    let costs = gather_global_costs(sim, sim.mesh.tree.leaves());
     let comm = sim.world.comm(me, tags::COMM_MIGRATE);
     let mut dev = sim.device.take();
 
@@ -298,19 +303,19 @@ pub fn rebalance(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Result<()> {
         sim.mesh_data.scatter_packs(&mut sim.mesh, CONS, &leaving)?;
     }
 
-    // Stash every local block's conserved state by gid (gids are stable:
-    // the tree is unchanged); send the leaving ones.
-    let mut stash: HashMap<usize, Vec<Real>> = HashMap::new();
+    // Stash every local block's conserved state AND measured cost by gid
+    // (gids are stable: the tree is unchanged); send the leaving ones with
+    // the cost appended to the payload.
+    let mut stash: HashMap<usize, (Vec<Real>, f64)> = HashMap::new();
     for b in &sim.mesh.blocks {
-        stash.insert(b.gid, b.data.get(CONS)?.as_slice().to_vec());
+        stash.insert(b.gid, (b.data.get(CONS)?.as_slice().to_vec(), b.cost));
     }
     for (gid, (&o, &n)) in old_ranks.iter().zip(new_ranks.iter()).enumerate() {
         if o == me && n != me {
-            comm.isend(
-                n,
-                tags::migrate_tag(gid, 0),
-                Payload::F32(stash.get(&gid).unwrap().clone()),
-            );
+            let (data, cost) = stash.get(&gid).unwrap();
+            let mut payload = data.clone();
+            append_cost(&mut payload, *cost);
+            comm.isend(n, tags::migrate_tag(gid, 0), Payload::F32(payload));
         }
     }
     let old_dts = dev.as_ref().map(|d| d.dts_by_gid(&sim.mesh));
@@ -324,21 +329,26 @@ pub fn rebalance(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Result<()> {
         .rebuild_preserving(&sim.mesh, plan_sizes.as_deref());
     sim.rebuild_work_buffers();
 
-    // Fill phase: local restores + receives for migrated-in blocks.
+    // Fill phase: local restores + receives for migrated-in blocks. The
+    // cost EWMA rides the migration payload (or the local stash), so the
+    // measured weight survives the move.
     for bi in 0..sim.mesh.blocks.len() {
         let gid = sim.mesh.blocks[bi].gid;
         let src_rank = old_ranks[gid];
-        let data = if src_rank == me {
+        let (data, cost) = if src_rank == me {
             stash.get(&gid).unwrap().clone()
         } else {
-            comm.recv(src_rank, tags::migrate_tag(gid, 0)).into_f32()?
+            let mut payload =
+                comm.recv(src_rank, tags::migrate_tag(gid, 0)).into_f32()?;
+            let cost = take_cost(&mut payload);
+            (payload, cost)
         };
         sim.mesh.blocks[bi]
             .data
             .get_mut(CONS)?
             .as_mut_slice()
             .copy_from_slice(&data);
-        sim.mesh.blocks[bi].cost = costs[gid];
+        sim.mesh.blocks[bi].cost = cost;
     }
 
     // Device: boundary-adjacent slabs of the preserved (clean) packs are
@@ -363,6 +373,21 @@ pub fn rebalance(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Result<()> {
     }
     sim.device = dev;
     Ok(())
+}
+
+/// Append an f64 cost to an f32 migration payload as two bit-exact halves
+/// (hi word first). [`take_cost`] reverses it on the receiving rank.
+fn append_cost(payload: &mut Vec<Real>, cost: f64) {
+    let bits = cost.to_bits();
+    payload.push(Real::from_bits((bits >> 32) as u32));
+    payload.push(Real::from_bits(bits as u32));
+}
+
+/// Pop the two cost halves appended by [`append_cost`], restoring the f64.
+fn take_cost(payload: &mut Vec<Real>) -> f64 {
+    let lo = payload.pop().expect("migration payload carries a cost").to_bits() as u64;
+    let hi = payload.pop().expect("migration payload carries a cost").to_bits() as u64;
+    f64::from_bits((hi << 32) | lo)
 }
 
 /// Place a restricted child interior (dense [nvar, nz/2, ny/2, nx/2] in
@@ -394,4 +419,21 @@ fn place_restricted_quadrant(
         }
     }
     debug_assert_eq!(r, data.len());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_rides_payload_bit_exactly() {
+        for cost in [0.0f64, 1.0, 0.37519, 1e-300, 1.2345678e13, f64::MIN_POSITIVE] {
+            let mut payload = vec![1.5 as Real, -2.25];
+            append_cost(&mut payload, cost);
+            assert_eq!(payload.len(), 4);
+            let got = take_cost(&mut payload);
+            assert_eq!(got.to_bits(), cost.to_bits(), "cost must survive bit-exactly");
+            assert_eq!(payload, vec![1.5 as Real, -2.25]);
+        }
+    }
 }

@@ -170,7 +170,17 @@ impl Snapshot {
         if !data.starts_with(MAGIC) {
             return Err(Error::Io(std::io::Error::other("bad pbin magic")));
         }
+        if data.len() < 14 {
+            return Err(Error::Io(std::io::Error::other("truncated pbin header")));
+        }
         let hlen = u64::from_le_bytes(data[6..14].try_into().unwrap()) as usize;
+        // saturating: a crafted header length near usize::MAX must not
+        // overflow the bound check into a slice panic
+        if data.len().saturating_sub(14) < hlen {
+            return Err(Error::Io(std::io::Error::other(
+                "pbin header length exceeds file size",
+            )));
+        }
         let header = Json::parse(std::str::from_utf8(&data[14..14 + hlen]).map_err(
             |e| Error::Io(std::io::Error::other(format!("bad header utf8: {e}"))),
         )?)?;
@@ -185,42 +195,78 @@ impl Snapshot {
         let cycle = header.req("cycle")?.as_i64().unwrap_or(0) as u64;
         let dim = header.req("dim")?.as_usize().unwrap_or(1);
         let bn = header.req("block_nx")?.as_arr().unwrap_or(&[]);
+        if bn.len() < 3 {
+            return Err(Error::Json(format!(
+                "snapshot manifest: block_nx needs 3 entries, got {}",
+                bn.len()
+            )));
+        }
         let block_nx = [
             bn[0].as_usize().unwrap_or(1),
             bn[1].as_usize().unwrap_or(1),
             bn[2].as_usize().unwrap_or(1),
         ];
-        let leaves: Vec<LogicalLocation> = header
-            .req("leaves")?
-            .as_arr()
-            .unwrap_or(&[])
-            .iter()
-            .map(|l| {
-                let a = l.as_arr().unwrap();
-                LogicalLocation::new(
-                    a[0].as_i64().unwrap_or(0) as u8,
-                    a[1].as_i64().unwrap_or(0),
-                    a[2].as_i64().unwrap_or(0),
-                    a[3].as_i64().unwrap_or(0),
-                )
-            })
-            .collect();
-        let vars: Vec<(String, usize)> = header
-            .req("vars")?
-            .as_arr()
-            .unwrap_or(&[])
-            .iter()
-            .map(|v| {
-                (
-                    v.req("name").unwrap().as_str().unwrap_or("").to_string(),
-                    v.req("ncomp").unwrap().as_usize().unwrap_or(1),
-                )
-            })
-            .collect();
+        // A malformed manifest must surface as Err, never a panic: every
+        // required field propagates through the crate error type.
+        let mut leaves: Vec<LogicalLocation> = Vec::new();
+        for l in header.req("leaves")?.as_arr().unwrap_or(&[]) {
+            let a = l.as_arr().ok_or_else(|| {
+                Error::Json("snapshot manifest: leaf entry must be an array".into())
+            })?;
+            if a.len() < 4 {
+                return Err(Error::Json(
+                    "snapshot manifest: leaf entry needs [level, lx1, lx2, lx3]".into(),
+                ));
+            }
+            leaves.push(LogicalLocation::new(
+                a[0].as_i64().unwrap_or(0) as u8,
+                a[1].as_i64().unwrap_or(0),
+                a[2].as_i64().unwrap_or(0),
+                a[3].as_i64().unwrap_or(0),
+            ));
+        }
+        let mut vars: Vec<(String, usize)> = Vec::new();
+        for v in header.req("vars")?.as_arr().unwrap_or(&[]) {
+            let name = v
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| {
+                    Error::Json("snapshot manifest: var name must be a string".into())
+                })?
+                .to_string();
+            let ncomp = v.req("ncomp")?.as_usize().ok_or_else(|| {
+                Error::Json(format!(
+                    "snapshot manifest: var {name:?} ncomp must be a non-negative integer"
+                ))
+            })?;
+            vars.push((name, ncomp));
+        }
+        // Sanity-bound the block extents before any size arithmetic: an
+        // absurd manifest must error, not overflow (debug panic / release
+        // wrap) downstream.
+        if block_nx.iter().any(|&n| n == 0 || n > (1 << 20)) {
+            return Err(Error::Json(format!(
+                "snapshot manifest: implausible block_nx {block_nx:?}"
+            )));
+        }
         let shape = crate::mesh::IndexShape::new(dim, block_nx);
         let zone = shape.ncells_interior();
-        let var_elems: usize = vars.iter().map(|(_, nc)| nc * zone).sum();
-        let rec = 8 + 4 * var_elems;
+        let mut var_elems: usize = 0;
+        for (name, nc) in &vars {
+            var_elems = nc
+                .checked_mul(zone)
+                .and_then(|e| var_elems.checked_add(e))
+                .ok_or_else(|| {
+                    Error::Json(format!(
+                        "snapshot manifest: var {name:?} ncomp {nc} overflows the \
+                         record size"
+                    ))
+                })?;
+        }
+        let rec = var_elems
+            .checked_mul(4)
+            .and_then(|b| b.checked_add(8))
+            .ok_or_else(|| Error::Json("snapshot manifest: record size overflows".into()))?;
         Ok(Snapshot {
             time,
             dt,
@@ -238,6 +284,16 @@ impl Snapshot {
 
     /// Interior data of (gid, var) as f32s (components fused).
     pub fn block_var(&self, gid: usize, var: &str) -> Result<Vec<Real>> {
+        let in_bounds = gid
+            .checked_mul(self.rec)
+            .and_then(|o| o.checked_add(self.data_start))
+            .and_then(|start| start.checked_add(self.rec))
+            .is_some_and(|end| end <= self.data.len());
+        if !in_bounds {
+            return Err(Error::Io(std::io::Error::other(format!(
+                "snapshot truncated: block {gid} record past end of file"
+            ))));
+        }
         let mut off = self.data_start + gid * self.rec;
         let stored_gid =
             u64::from_le_bytes(self.data[off..off + 8].try_into().unwrap()) as usize;
@@ -302,4 +358,129 @@ pub fn append_history(path: &str, time: f64, cycle: u64, sums: &[f64]) -> Result
     let cols: Vec<String> = sums.iter().map(|s| format!("{s:.10e}")).collect();
     writeln!(f, "{time:.10e} {cycle} {}", cols.join(" "))?;
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Write a pbin file with the given header (no block records) and
+    /// return its path.
+    fn write_header_pbin(tag: &str, header: &str) -> String {
+        let path = std::env::temp_dir().join(format!(
+            "parthenon_manifest_{}_{}.pbin",
+            tag,
+            std::process::id()
+        ));
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        buf.extend_from_slice(header.as_bytes());
+        std::fs::write(&path, buf).unwrap();
+        path.to_string_lossy().into_owned()
+    }
+
+    fn header_with(vars: &str, block_nx: &str, leaves: &str) -> String {
+        format!(
+            "{{\"time\": 0.0, \"cycle\": 0, \"dim\": 2, \"block_nx\": {block_nx}, \
+             \"leaves\": {leaves}, \"vars\": {vars}, \"nblocks\": 1}}"
+        )
+    }
+
+    #[test]
+    fn malformed_manifest_is_an_error_not_a_panic() {
+        // var entry missing "name"
+        let p = write_header_pbin(
+            "noname",
+            &header_with("[{\"ncomp\": 5}]", "[8, 8, 1]", "[[0, 0, 0, 0]]"),
+        );
+        assert!(Snapshot::read(&p).is_err(), "missing var name must be Err");
+        // var ncomp of the wrong type
+        let p = write_header_pbin(
+            "badncomp",
+            &header_with(
+                "[{\"name\": \"cons\", \"ncomp\": \"five\"}]",
+                "[8, 8, 1]",
+                "[[0, 0, 0, 0]]",
+            ),
+        );
+        assert!(Snapshot::read(&p).is_err(), "non-integer ncomp must be Err");
+        // short block_nx
+        let p = write_header_pbin(
+            "shortnx",
+            &header_with(
+                "[{\"name\": \"cons\", \"ncomp\": 5}]",
+                "[8]",
+                "[[0, 0, 0, 0]]",
+            ),
+        );
+        assert!(Snapshot::read(&p).is_err(), "short block_nx must be Err");
+        // malformed leaf entry
+        let p = write_header_pbin(
+            "badleaf",
+            &header_with("[{\"name\": \"cons\", \"ncomp\": 5}]", "[8, 8, 1]", "[7]"),
+        );
+        assert!(Snapshot::read(&p).is_err(), "non-array leaf must be Err");
+        // header length pointing past the end of the file
+        let path = std::env::temp_dir().join(format!(
+            "parthenon_manifest_truncated_{}.pbin",
+            std::process::id()
+        ));
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(1_000_000u64).to_le_bytes());
+        buf.extend_from_slice(b"{}");
+        std::fs::write(&path, buf).unwrap();
+        assert!(Snapshot::read(&path.to_string_lossy()).is_err());
+        // header length near u64::MAX must not overflow the bound check
+        let path = std::env::temp_dir().join(format!(
+            "parthenon_manifest_hugelen_{}.pbin",
+            std::process::id()
+        ));
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        buf.extend_from_slice(b"{}");
+        std::fs::write(&path, buf).unwrap();
+        assert!(Snapshot::read(&path.to_string_lossy()).is_err());
+        // absurd ncomp must not overflow the record-size arithmetic
+        let p = write_header_pbin(
+            "hugencomp",
+            &header_with(
+                "[{\"name\": \"cons\", \"ncomp\": 4611686018427387904}]",
+                "[8, 8, 1]",
+                "[[0, 0, 0, 0]]",
+            ),
+        );
+        assert!(Snapshot::read(&p).is_err(), "overflowing ncomp must be Err");
+        // absurd block extents must be rejected before size arithmetic
+        let p = write_header_pbin(
+            "hugenx",
+            &header_with(
+                "[{\"name\": \"cons\", \"ncomp\": 5}]",
+                "[8388608, 8388608, 8388608]",
+                "[[0, 0, 0, 0]]",
+            ),
+        );
+        assert!(Snapshot::read(&p).is_err(), "implausible block_nx must be Err");
+    }
+
+    #[test]
+    fn wellformed_manifest_still_parses() {
+        let p = write_header_pbin(
+            "ok",
+            &header_with(
+                "[{\"name\": \"cons\", \"ncomp\": 5}]",
+                "[8, 8, 1]",
+                "[[0, 0, 0, 0]]",
+            ),
+        );
+        let snap = Snapshot::read(&p).unwrap();
+        assert_eq!(snap.vars, vec![("cons".to_string(), 5)]);
+        assert_eq!(snap.block_nx, [8, 8, 1]);
+        assert_eq!(snap.leaves.len(), 1);
+        // truncated data section: reading a block errors instead of
+        // panicking on a short slice
+        assert!(snap.block_var(0, "cons").is_err());
+    }
 }

@@ -233,6 +233,26 @@ impl<C> TaskRegion<C> {
     where
         C: Send,
     {
+        self.execute_parallel_weighted(ctxs, None, nworkers, policy, stall)
+    }
+
+    /// [`TaskRegion::execute_parallel`] with explicit per-list seed costs:
+    /// the worker deques are seeded by the cost-weighted contiguous
+    /// partition over `costs` instead of uniform weights. The fused stage
+    /// pipeline passes its per-pack costs here so the initial deal matches
+    /// the phased schedule's cost-balanced partition (stealing then closes
+    /// whatever tail the communication tasks leave).
+    pub fn execute_parallel_weighted(
+        &mut self,
+        ctxs: Vec<C>,
+        costs: Option<&[f64]>,
+        nworkers: usize,
+        policy: StealPolicy,
+        stall: std::time::Duration,
+    ) -> Result<Vec<C>>
+    where
+        C: Send,
+    {
         use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
         use std::sync::Mutex;
 
@@ -252,7 +272,13 @@ impl<C> TaskRegion<C> {
             .zip(ctxs)
             .map(|(l, c)| Mutex::new(Some((l, c))))
             .collect();
-        let pool = StealPool::seed(&vec![1.0; n], nworkers, policy);
+        let pool = match costs {
+            Some(c) => {
+                assert_eq!(c.len(), n, "one seed cost per task list");
+                StealPool::seed(c, nworkers, policy)
+            }
+            None => StealPool::seed(&vec![1.0; n], nworkers, policy),
+        };
         let nw = pool.nworkers();
         let remaining = AtomicUsize::new(n);
         let progress = AtomicU64::new(0);
@@ -632,6 +658,53 @@ mod tests {
             .execute_parallel(ctxs, 2, StealPolicy::Heaviest, Duration::from_secs(30))
             .unwrap();
         assert_eq!(shared.load(Ordering::SeqCst), 12);
+    }
+
+    #[test]
+    fn parallel_fused_shape_overlaps_comm_with_compute() {
+        // Model of the fused stage pipeline: every list runs compute ->
+        // send -> poll, where list i's poll only completes after list
+        // (i+1)'s send (cyclic). Finishing requires incomplete polls to
+        // yield their worker back while other lists' compute/send tasks
+        // run — communication hiding behind compute within one region.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        use std::time::Duration;
+        type FCtx = (usize, Arc<Vec<AtomicUsize>>);
+        let n = 4usize;
+        for nworkers in [1usize, 2, 4] {
+            let sent: Arc<Vec<AtomicUsize>> =
+                Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect());
+            let mut region: TaskRegion<FCtx> = TaskRegion::new(n);
+            for li in 0..n {
+                let list = region.list(li);
+                let t_compute = list.add(NONE, |_: &mut FCtx| TaskStatus::Complete);
+                let t_send = list.add(&[t_compute], |c: &mut FCtx| {
+                    c.1[c.0].store(1, Ordering::SeqCst);
+                    TaskStatus::Complete
+                });
+                let _t_poll = list.add(&[t_send], |c: &mut FCtx| {
+                    let src = (c.0 + 1) % c.1.len();
+                    if c.1[src].load(Ordering::SeqCst) > 0 {
+                        TaskStatus::Complete
+                    } else {
+                        TaskStatus::Incomplete
+                    }
+                });
+            }
+            let ctxs: Vec<FCtx> = (0..n).map(|i| (i, sent.clone())).collect();
+            let costs: Vec<f64> = (0..n).map(|i| (i + 1) as f64).collect();
+            region
+                .execute_parallel_weighted(
+                    ctxs,
+                    Some(&costs),
+                    nworkers,
+                    StealPolicy::Heaviest,
+                    Duration::from_secs(30),
+                )
+                .unwrap();
+            assert!(sent.iter().all(|s| s.load(Ordering::SeqCst) == 1));
+        }
     }
 
     #[test]

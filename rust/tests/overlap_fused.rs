@@ -1,0 +1,260 @@
+//! Fused stage pipeline (`parthenon/exec overlap = fused`) vs the
+//! barrier-phased oracle: the fused per-pack task lists overlap boundary
+//! exchange with compute, but must be BITWISE identical to the phased
+//! schedule on every worker count, every steal order, both execution
+//! spaces, and on multilevel meshes with flux correction — plus the
+//! overlap contract itself (sends posted before a pack's first
+//! `Incomplete` poll) and the load-balance cost fixes that ride along.
+
+mod common;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use parthenon::comm::World;
+use parthenon::config::ParameterInput;
+use parthenon::driver::{regrid, EvolutionDriver, HydroSim};
+
+/// Run `deck` single-rank for `steps` with the given overrides; return
+/// gid -> interior CONS (device staging scattered back first).
+fn run_sim(deck: &str, overrides: &[&str], steps: usize) -> Vec<(usize, Vec<f32>)> {
+    let mut sim = common::single_rank_sim(deck, overrides);
+    for _ in 0..steps {
+        sim.step().unwrap();
+    }
+    sim.sync_device_to_blocks().unwrap();
+    common::cons_by_gid(&sim)
+}
+
+#[test]
+fn fused_matches_phased_host_across_workers_and_scheds() {
+    // 64 blocks, pack_size 4 -> 16 packs: enough lists to interleave.
+    let deck = common::input_deck("kh", [32, 32, 1], [4, 4, 1], "");
+    let base = run_sim(
+        &deck,
+        &[
+            "parthenon/exec/overlap=phased",
+            "parthenon/exec/sched=static",
+            "parthenon/exec/nworkers=1",
+            "parthenon/exec/pack_size=4",
+        ],
+        4,
+    );
+    for sched in ["static", "stealing", "roundrobin", "reverse"] {
+        for nw in [1usize, 2, 4, 8] {
+            let ov_sched = format!("parthenon/exec/sched={sched}");
+            let ov_nw = format!("parthenon/exec/nworkers={nw}");
+            let got = run_sim(
+                &deck,
+                &[
+                    "parthenon/exec/overlap=fused",
+                    &ov_sched,
+                    &ov_nw,
+                    "parthenon/exec/pack_size=4",
+                ],
+                4,
+            );
+            assert_eq!(
+                common::max_state_diff(&base, &got),
+                0.0,
+                "fused sched={sched} nworkers={nw} must be bitwise identical \
+                 to the phased oracle"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_matches_phased_multilevel_with_flux_correction() {
+    // Static refinement -> multilevel: the fused lists carry the
+    // flux-correction send/poll tasks too.
+    let deck = common::input_deck("blast", [32, 32, 1], [8, 8, 1], "");
+    let ml = [
+        "parthenon/mesh/refinement=static",
+        "parthenon/mesh/numlevel=2",
+        "parthenon/static_refinement0/level=1",
+        "parthenon/static_refinement0/x1min=0.3",
+        "parthenon/static_refinement0/x1max=0.7",
+        "parthenon/static_refinement0/x2min=0.3",
+        "parthenon/static_refinement0/x2max=0.7",
+        "parthenon/exec/pack_size=2",
+    ];
+    let mut base_ov: Vec<&str> = ml.to_vec();
+    base_ov.push("parthenon/exec/overlap=phased");
+    base_ov.push("parthenon/exec/sched=static");
+    base_ov.push("parthenon/exec/nworkers=1");
+    let base = run_sim(&deck, &base_ov, 4);
+    assert!(base.len() > 16, "refinement must have produced extra blocks");
+    for (sched, nw) in [
+        ("static", 1usize),
+        ("stealing", 2),
+        ("stealing", 4),
+        ("roundrobin", 4),
+        ("reverse", 4),
+    ] {
+        let ov_sched = format!("parthenon/exec/sched={sched}");
+        let ov_nw = format!("parthenon/exec/nworkers={nw}");
+        let mut got_ov: Vec<&str> = ml.to_vec();
+        got_ov.push("parthenon/exec/overlap=fused");
+        got_ov.push(&ov_sched);
+        got_ov.push(&ov_nw);
+        let got = run_sim(&deck, &got_ov, 4);
+        assert_eq!(
+            common::max_state_diff(&base, &got),
+            0.0,
+            "multilevel fused sched={sched} nworkers={nw}"
+        );
+    }
+}
+
+#[test]
+fn fused_matches_phased_device_all_strategies() {
+    if !common::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // 16 blocks, pack_size 4: per-pack launch/send/poll lists interleave.
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    for strategy in ["perpack", "perblock", "perbuffer"] {
+        let ov_strat = format!("parthenon/exec/strategy={strategy}");
+        let phased = run_sim(
+            &deck,
+            &[
+                "parthenon/exec/space=device",
+                &ov_strat,
+                "parthenon/exec/pack_size=4",
+                "parthenon/exec/overlap=phased",
+            ],
+            4,
+        );
+        let fused = run_sim(
+            &deck,
+            &[
+                "parthenon/exec/space=device",
+                &ov_strat,
+                "parthenon/exec/pack_size=4",
+                "parthenon/exec/overlap=fused",
+            ],
+            4,
+        );
+        assert_eq!(
+            common::max_state_diff(&phased, &fused),
+            0.0,
+            "device fused strategy={strategy} must be bitwise identical"
+        );
+    }
+}
+
+#[test]
+fn fused_posts_all_sends_before_first_incomplete_poll() {
+    // 2 ranks so receives genuinely wait on a peer: the poll tasks DO
+    // return Incomplete, and the instrumentation proves every pack's
+    // sends were already posted when they did.
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    let stats: Arc<Mutex<Vec<(u64, u64, u64, u64)>>> = Arc::new(Mutex::new(Vec::new()));
+    let s2 = stats.clone();
+    World::launch(2, move |rank, world| {
+        let mut pin = ParameterInput::from_str(&deck).unwrap();
+        pin.apply_override("parthenon/exec/overlap=fused").unwrap();
+        pin.apply_override("parthenon/exec/pack_size=2").unwrap();
+        pin.apply_override("parthenon/exec/nworkers=2").unwrap();
+        let mut sim = HydroSim::new(pin, rank, world).unwrap();
+        for _ in 0..4 {
+            sim.step().unwrap();
+        }
+        let os = sim.host.as_ref().expect("host exec").overlap_stats();
+        s2.lock().unwrap().push((
+            os.packs_posted.load(std::sync::atomic::Ordering::SeqCst),
+            os.segments_sent.load(std::sync::atomic::Ordering::SeqCst),
+            os.incomplete_polls.load(std::sync::atomic::Ordering::SeqCst),
+            os.early_poll_violations.load(std::sync::atomic::Ordering::SeqCst),
+        ));
+    });
+    let stats = stats.lock().unwrap();
+    assert_eq!(stats.len(), 2);
+    for (rank, (posted, segs, _incomplete, violations)) in stats.iter().enumerate() {
+        // 8 blocks / pack_size 2 = 4 packs, 2 stages x 4 cycles = 8 stage
+        // sweeps -> 32 send tasks per rank.
+        assert_eq!(*posted, 32, "rank {rank}: every pack posts every stage");
+        assert!(*segs > 0, "rank {rank}: sends must carry segments");
+        assert_eq!(
+            *violations, 0,
+            "rank {rank}: a pack's sends must be posted before its poll \
+             first returns Incomplete"
+        );
+    }
+}
+
+/// The cost EWMA must ride the migration payload: after a full-swap
+/// rebalance every block's measured cost (including an artificial
+/// sentinel) must be bit-identical on its new rank.
+#[test]
+fn migrated_blocks_keep_measured_cost_ewma() {
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    let recorded: Arc<Mutex<HashMap<usize, u64>>> = Arc::new(Mutex::new(HashMap::new()));
+    let r2 = recorded.clone();
+    World::launch(2, move |rank, world| {
+        let pin = ParameterInput::from_str(&deck).unwrap();
+        let mut sim = HydroSim::new(pin, rank, world).unwrap();
+        for _ in 0..3 {
+            sim.step().unwrap(); // EWMA warms up from measured timings
+        }
+        if rank == 0 {
+            // sentinel no measurement could produce by coincidence
+            sim.mesh.blocks[0].cost = 7.25;
+        }
+        {
+            let mut rec = r2.lock().unwrap();
+            for b in &sim.mesh.blocks {
+                rec.insert(b.gid, b.cost.to_bits());
+            }
+        }
+        // Recording happens before rebalance posts any sends, so by the
+        // time a rank's rebalance returns (it received the peer's blocks)
+        // the peer's entries are in the map.
+        let new_ranks: Vec<usize> = sim.mesh.ranks.iter().map(|r| 1 - *r).collect();
+        regrid::rebalance(&mut sim, new_ranks).unwrap();
+        let rec = r2.lock().unwrap();
+        for b in &sim.mesh.blocks {
+            assert_eq!(
+                b.cost.to_bits(),
+                rec[&b.gid],
+                "rank {rank}: block {} lost its measured cost EWMA across \
+                 migration",
+                b.gid
+            );
+        }
+    });
+    assert_eq!(recorded.lock().unwrap().len(), 16);
+}
+
+#[test]
+fn device_costs_are_measured_not_nominal() {
+    if !common::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    let mut sim = common::single_rank_sim(
+        &deck,
+        &[
+            "parthenon/exec/space=device",
+            "parthenon/exec/strategy=perpack",
+            "parthenon/exec/pack_size=4",
+        ],
+    );
+    for _ in 0..3 {
+        sim.step().unwrap();
+    }
+    let costs: Vec<f64> = sim.mesh.blocks.iter().map(|b| b.cost).collect();
+    assert!(
+        costs.iter().any(|c| (c - 1.0).abs() > 1e-9),
+        "Device launch timings must move MeshBlock::cost off nominal"
+    );
+    let mean = costs.iter().sum::<f64>() / costs.len() as f64;
+    assert!(
+        (mean - 1.0).abs() < 0.5,
+        "normalized cost mean should stay near 1, got {mean}"
+    );
+    assert!(costs.iter().all(|c| *c > 0.0));
+}
