@@ -117,9 +117,11 @@ def test_perf_compare_flags_regressions(tmp_path):
     cur = str(tmp_path / "cur")
     write_results(base, "bench", [("a", 100.0), ("b", 100.0)])
     write_results(cur, "bench", [("a", 95.0), ("b", 50.0)])
-    regs, imps = perf_compare.compare(base, cur, tol=0.15)
+    rows, regs, imps = perf_compare.compare(base, cur, tol=0.15)
     assert [k for k, _ in regs] == ["bench/b"]
     assert not imps
+    assert [r[0] for r in rows] == ["bench/a", "bench/b"]
+    assert [r[4] for r in rows] == ["ok", "regression"]
 
 
 def test_perf_compare_cli(tmp_path):
@@ -133,3 +135,23 @@ def test_perf_compare_cli(tmp_path):
         capture_output=True,
     )
     assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_perf_compare_writes_step_summary(tmp_path, monkeypatch):
+    """Under GitHub Actions the comparison lands in $GITHUB_STEP_SUMMARY as
+    a markdown table (one row per sample, regressions flagged)."""
+    base = str(tmp_path / "base")
+    cur = str(tmp_path / "cur")
+    write_results(base, "bench", [("a", 100.0), ("b", 100.0), ("c", 100.0)])
+    write_results(cur, "bench", [("a", 100.0), ("b", 50.0)])
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    rows, regs, imps = perf_compare.compare(base, cur, tol=0.15)
+    perf_compare.write_step_summary(rows, 0.15, regs, imps)
+    text = summary.read_text()
+    assert "| sample | baseline | current | ratio | status |" in text
+    assert "`bench/b`" in text and "regression" in text
+    assert "`bench/c`" in text and "missing" in text
+    # no env -> no-op
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY")
+    perf_compare.write_step_summary(rows, 0.15, regs, imps)

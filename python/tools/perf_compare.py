@@ -6,7 +6,9 @@ Usage:
     python -m tools.perf_compare baseline_dir current_dir [--tol 0.15]
     python -m tools.perf_compare --snapshot bench_results baselines/$(git id)
 
-Exit code 1 if any sample regressed beyond tolerance.
+Exit code 1 if any sample regressed beyond tolerance. When running under
+GitHub Actions (``$GITHUB_STEP_SUMMARY`` set) the comparison is also
+appended to the job's step summary as a markdown table.
 """
 
 import argparse
@@ -29,27 +31,71 @@ def load(dirpath):
 
 
 def compare(baseline, current, tol):
+    """Returns (rows, regressions, improvements); rows are
+    (key, base, cur, ratio, status). cur/ratio are None for samples
+    missing from the current run or with an unusable (non-positive)
+    baseline — both get their own status so they never vanish silently."""
     base = load(baseline)
     cur = load(current)
+    rows = []
     regressions = []
     improvements = []
     for key in sorted(base):
         if key not in cur:
             print(f"  MISSING {key}")
+            rows.append((key, base[key], None, None, "missing"))
             continue
         b, c = base[key], cur[key]
         if b <= 0:
+            print(f"  BAD-BASELINE {key} ({b!r})")
+            rows.append((key, b, c, None, "bad-baseline"))
             continue
         ratio = c / b
         marker = ""
+        status = "ok"
         if ratio < 1.0 - tol:
             marker = "  <-- REGRESSION"
+            status = "regression"
             regressions.append((key, ratio))
         elif ratio > 1.0 + tol:
             marker = "  (improved)"
+            status = "improved"
             improvements.append((key, ratio))
         print(f"  {key:55} {b:10.3e} -> {c:10.3e}  ({ratio:5.2f}x){marker}")
-    return regressions, improvements
+        rows.append((key, b, c, ratio, status))
+    return rows, regressions, improvements
+
+
+STATUS_MARK = {
+    "ok": "✅ ok",
+    "improved": "🚀 improved",
+    "regression": "❌ regression",
+    "missing": "⚠️ missing",
+    "bad-baseline": "⚠️ bad baseline",
+}
+
+
+def write_step_summary(rows, tol, regressions, improvements):
+    """Append a markdown table to $GITHUB_STEP_SUMMARY (no-op outside CI)."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    with open(path, "a") as f:
+        f.write("## Perf baseline comparison\n\n")
+        f.write(
+            f"{len(regressions)} regressions, {len(improvements)} improvements "
+            f"across {len(rows)} samples (tolerance ±{tol:.0%})\n\n"
+        )
+        f.write("| sample | baseline | current | ratio | status |\n")
+        f.write("|---|---:|---:|---:|---|\n")
+        for key, b, c, ratio, status in rows:
+            cur_s = f"{c:.3e}" if c is not None else "—"
+            ratio_s = f"{ratio:.2f}x" if ratio is not None else "—"
+            f.write(
+                f"| `{key}` | {b:.3e} | {cur_s} | {ratio_s} "
+                f"| {STATUS_MARK.get(status, status)} |\n"
+            )
+        f.write("\n")
 
 
 def main():
@@ -74,9 +120,10 @@ def main():
 
     if args.current is None:
         ap.error("need baseline and current directories")
-    regressions, improvements = compare(args.baseline, args.current, args.tol)
+    rows, regressions, improvements = compare(args.baseline, args.current, args.tol)
     print(f"\n{len(regressions)} regressions, {len(improvements)} improvements "
           f"(tol {args.tol:.0%})")
+    write_step_summary(rows, args.tol, regressions, improvements)
     return 1 if regressions else 0
 
 

@@ -10,7 +10,7 @@
 //! multilevel mesh pays extra for flux correction + prolong/restrict,
 //! reproducing the paper's uniform-vs-multilevel gap.
 
-use parthenon::driver::bench::{deck_multilevel, measure};
+use parthenon::driver::bench::{deck_3d, deck_multilevel, measure};
 use parthenon::util::benchkit::{fmt_zcps, quick_mode, write_results, Sample, Table};
 
 fn main() {
@@ -116,6 +116,46 @@ fn main() {
         table_o.row(row);
     }
     table_o.print();
+
+    // -- Device fused pipeline: worker-parallel pack launches ----------------
+    // The shared-state Runtime lets the fused per-pack task lists run on
+    // N workers (launch → send → poll per pack, dt reduction regional), so
+    // the Device path now has the same nworkers knob as the Host path.
+    // Uniform periodic mesh (the Device configuration), pack_size 2 so the
+    // pool has enough per-pack lists to deal AND steal. These
+    // `device/{static,steal}/w{n}` samples feed the per-runner perf
+    // baseline: a worker-scaling regression on the launch path fails CI.
+    let dev_workers: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
+    let dev_deck = deck_3d(if quick { 16 } else { 32 }, 8);
+    let mut table_d = Table::new(&["nworkers", "static", "stealing", "speedup"]);
+    println!("\nDevice fused worker scaling (uniform, 1 rank, pack_size 2):");
+    for &nw in dev_workers {
+        let mut row = vec![format!("w={nw}")];
+        let mut zc = [0.0f64; 2];
+        for (si, sched) in ["static", "stealing"].iter().enumerate() {
+            let ovs = [
+                "parthenon/exec/space=device".to_string(),
+                "parthenon/exec/overlap=fused".to_string(),
+                format!("parthenon/exec/sched={sched}"),
+                format!("parthenon/exec/nworkers={nw}"),
+                "parthenon/exec/pack_size=2".to_string(),
+            ];
+            let ov_refs: Vec<&str> = ovs.iter().map(|s| s.as_str()).collect();
+            let run = measure(&dev_deck, &ov_refs, 1, 2, meas.max(2));
+            zc[si] = run.zcps;
+            row.push(fmt_zcps(run.zcps));
+            let label = if *sched == "static" { "static" } else { "steal" };
+            samples.push(Sample {
+                label: format!("device/{label}/w{nw}"),
+                secs: vec![run.wall / run.cycles as f64],
+                work: run.zcps * run.wall / run.cycles as f64,
+            });
+            eprintln!("  device {sched} w{nw}: {} zc/s", fmt_zcps(run.zcps));
+        }
+        row.push(format!("{:.2}x", zc[1] / zc[0].max(1e-30)));
+        table_d.row(row);
+    }
+    table_d.print();
 
     write_results(
         "fig11_multilevel_scaling",

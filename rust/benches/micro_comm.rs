@@ -94,7 +94,7 @@ fn main() {
 
     // -- executable-launch overhead (THE Fig-8 constant) -----------------------
     if default_artifact_dir().join("manifest.json").exists() {
-        let mut rt = Runtime::new(default_artifact_dir()).unwrap();
+        let rt = Runtime::new(default_artifact_dir()).unwrap();
         let key = ArtifactKey::new("pack1", 3, [16, 16, 16], 1).with_nbr(0);
         let nelem = Runtime::block_elems(&key);
         let u = vec![1.0f32; nelem];

@@ -46,11 +46,11 @@ pub fn measure(deck: &str, overrides: &[&str], nranks: usize, warm: u64, meas: u
             sim.step().expect("warm step");
         }
         sim.zc.reset();
-        let launches0 = sim.device.as_ref().map(|d| d.rt.launches).unwrap_or(0);
+        let launches0 = sim.device.as_ref().map(|d| d.rt.launches()).unwrap_or(0);
         for _ in 0..meas {
             sim.step().expect("meas step");
         }
-        let launches = sim.device.as_ref().map(|d| d.rt.launches).unwrap_or(0) - launches0;
+        let launches = sim.device.as_ref().map(|d| d.rt.launches()).unwrap_or(0) - launches0;
         o2.lock().unwrap()[rank] = (
             sim.zc.zcps(),
             launches,

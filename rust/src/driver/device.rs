@@ -15,26 +15,41 @@
 //! AMR/multilevel runs use the Host path (see DESIGN.md §limitations).
 //!
 //! With `parthenon/exec overlap = fused` (default) the stage runs as
-//! per-pack task lists — launch → send segments → poll receives — so one
-//! pack's boundary routing overlaps the interior launches of the others;
-//! `overlap = phased` keeps the launch-all-then-route barrier as the
+//! per-pack task lists — launch → send segments → poll receives — executed
+//! **worker-parallel** on the work-stealing pool
+//! ([`TaskRegion::execute_parallel_weighted`]), exactly like the Host
+//! path's fused pipeline: the shared-state [`Runtime`] takes `&self` on
+//! every entry point, so pack launches from different workers proceed
+//! concurrently, one pack's boundary routing overlaps the interior
+//! launches of the others, and `parthenon/exec nworkers|sched` govern the
+//! Device stage the same way they govern the Host stage. `overlap =
+//! phased` keeps the serial launch-all-then-route barrier as the
 //! bitwise-identity oracle. Per-pack launches are timed and spread over
 //! the pack's blocks into the cost EWMA (`drain_block_secs`), so the load
 //! balancer sees measured Device costs.
+//!
+//! On the final RK stage the per-block CFL dts returned by the launches
+//! are min-reduced *inside* the fused region: each pack's task list ends
+//! in a partial-min task and one regional (cross-list) task folds the
+//! partials — so no separate `local_dt` sweep over the blocks remains in
+//! the fused cycle ([`StageExecutor::local_dt`] returns the cached
+//! reduction).
 
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::time::Instant;
 
 use super::{HydroSim, OverlapMode, StageExecutor};
 use crate::bvals::{bufspec, PackStrategy};
 use crate::comm::{tags, Comm, Payload};
 use crate::error::{Error, Result};
-use crate::hydro::native::StageCoeffs;
+use crate::hydro::native::{StageCoeffs, RK2_STAGES};
 use crate::hydro::CONS;
 use crate::mesh::{IndexShape, Mesh, NeighborKind};
 use crate::mesh_data::{MeshData, PackDesc, PackStaging};
 use crate::runtime::{default_artifact_dir, ArtifactKey, Runtime, ScalArgs};
 use crate::tasks::{TaskRegion, TaskStatus, NONE};
 use crate::util::backoff::{ProgressWait, STALL_LIMIT};
+use crate::util::stealing::StealPolicy;
 use crate::{Real, NHYDRO};
 
 /// Routing entry for one (block, neighbor slot).
@@ -62,13 +77,31 @@ pub struct DeviceState {
     block_elems: usize,
     last_dts: Vec<Real>,
     comm: Comm,
-    tmp: Vec<Real>,
     gamma: Real,
     /// Measured launch seconds per block (per-pack launch time spread
     /// evenly over the pack's blocks), drained into the cost EWMA by
     /// `HydroSim::update_block_costs` — so `parthenon/loadbalance
     /// interval` rebalances Device runs on measured, not nominal, costs.
     block_secs: Vec<f64>,
+    /// Requested fused-stage workers (`parthenon/exec nworkers`, 0=auto).
+    nworkers_req: usize,
+    /// Ranks sharing this machine's cores (auto worker sizing).
+    nranks: usize,
+    /// Pack scheduler for the fused stage (`parthenon/exec sched`).
+    policy: StealPolicy,
+    /// Staging scratch of the phased (serial) launch loop, reused across
+    /// stages (PerBlock/PerBuffer strategies only; PerPack never touches
+    /// it).
+    tmp: Vec<Real>,
+    /// Per-pack staging scratch of the fused worker-parallel lists (one
+    /// per pack so concurrent launches never share; resized lazily to the
+    /// current pack count and reused across stages).
+    tmps: Vec<Vec<Real>>,
+    /// Raw min CFL dt cached by the fused regional reduction on the final
+    /// RK stage; `None` after any out-of-region `last_dts` update (phased
+    /// stage, bootstrap, rebalance), which falls back to folding
+    /// `last_dts` on demand.
+    fused_dt_min: Option<Real>,
 }
 
 impl DeviceState {
@@ -134,9 +167,14 @@ impl DeviceState {
             block_elems,
             last_dts: vec![0.0; nlocal],
             comm,
-            tmp: vec![0.0; block_elems],
             gamma: sim.pkg.gamma,
             block_secs: vec![0.0; nlocal],
+            nworkers_req: sim.sp.nworkers,
+            nranks: mesh.nranks,
+            policy: sim.sp.sched,
+            tmp: Vec::new(),
+            tmps: Vec::new(),
+            fused_dt_min: None,
         };
 
         // Shared pack partition: re-plan onto the artifact sizes + staging
@@ -208,6 +246,7 @@ impl DeviceState {
         self.routes = Self::build_routes(&sim.mesh)?;
         self.last_dts = vec![0.0; sim.mesh.blocks.len()];
         self.block_secs = vec![0.0; sim.mesh.blocks.len()];
+        self.fused_dt_min = None;
         for (bi, b) in sim.mesh.blocks.iter().enumerate() {
             if let Some(v) = old_dts.get(&b.gid) {
                 self.last_dts[bi] = *v;
@@ -237,6 +276,17 @@ impl DeviceState {
         self.shape.n
     }
 
+    /// Worker threads for the fused stage, resolved against the current
+    /// pack count (packs are the unit of work; more workers than packs
+    /// would only idle).
+    fn stage_workers(&self, npacks: usize) -> usize {
+        if self.nworkers_req > 0 {
+            self.nworkers_req.min(npacks.max(1))
+        } else {
+            crate::util::num_workers(npacks, self.nranks)
+        }
+    }
+
     /// Buffer fill + dt for the given packs (nb=1 pack/dt artifacts; not
     /// timed), then one full boundary-routing round so every block's
     /// bufs_in is consistent. All packs at init; only the dirty packs
@@ -244,24 +294,24 @@ impl DeviceState {
     fn bootstrap(&mut self, md: &mut MeshData, scal: ScalArgs, packs: &[usize]) -> Result<()> {
         let kp = self.key("pack", 1);
         let kdt = self.key("dt", 1);
+        let ne = self.block_elems;
+        let bl = self.buflen;
         {
             let (descs, staging) = md.parts_mut();
-            let DeviceState { rt, last_dts, buflen, block_elems, .. } = self;
             for &pi in packs {
                 let d = &descs[pi];
                 let p = &mut staging[pi];
                 for bi in 0..d.nb {
-                    let u_slice =
-                        p.u[bi * *block_elems..(bi + 1) * *block_elems].to_vec();
-                    let mut seg = vec![0.0; *buflen];
-                    rt.pack(&kp, &u_slice, &mut seg)?;
-                    p.bufs_out[bi * *buflen..(bi + 1) * *buflen]
-                        .copy_from_slice(&seg);
-                    let dts = rt.dt(&kdt, &u_slice, scal)?;
-                    last_dts[d.first + bi] = dts[0];
+                    let u_slice = p.u[bi * ne..(bi + 1) * ne].to_vec();
+                    let mut seg = vec![0.0; bl];
+                    self.rt.pack(&kp, &u_slice, &mut seg)?;
+                    p.bufs_out[bi * bl..(bi + 1) * bl].copy_from_slice(&seg);
+                    let dts = self.rt.dt(&kdt, &u_slice, scal)?;
+                    self.last_dts[d.first + bi] = dts[0];
                 }
             }
         }
+        self.fused_dt_min = None;
         self.route_and_receive(md)?;
         Ok(())
     }
@@ -303,23 +353,26 @@ impl DeviceState {
     /// Send every pack's outbound segments and receive inbound segments
     /// into bufs_in, polling with bounded backoff — the whole-rank barrier
     /// routing of the phased path and the bootstrap, built on the same
-    /// per-pack `send_pack`/`poll_pack` primitives the fused lists use.
-    fn route_and_receive(&mut self, md: &mut MeshData) -> Result<()> {
-        for pi in 0..md.npacks() {
-            self.send_pack(md.packs(), md.staging(), pi);
-        }
+    /// per-pack `send_one`/`poll_one` primitives the fused lists use.
+    fn route_and_receive(&self, md: &mut MeshData) -> Result<()> {
         let mut pending: Vec<Vec<(usize, usize)>> =
             md.packs().iter().map(|d| self.pack_pending(d)).collect();
         let mut wait = ProgressWait::new(STALL_LIMIT);
+        let (descs, staging) = md.parts_mut();
+        for (d, p) in descs.iter().zip(staging.iter()) {
+            self.send_one(d, p);
+        }
         loop {
             let mut progressed = false;
             let mut left = 0usize;
-            for (pi, pend) in pending.iter_mut().enumerate() {
+            for ((d, p), pend) in
+                descs.iter().zip(staging.iter_mut()).zip(pending.iter_mut())
+            {
                 if pend.is_empty() {
                     continue;
                 }
                 let before = pend.len();
-                self.poll_pack(md, pi, pend)?;
+                self.poll_one(d, p, pend)?;
                 progressed |= pend.len() < before;
                 left += pend.len();
             }
@@ -346,26 +399,32 @@ impl DeviceState {
     }
 
     /// The stage launches of ONE pack under the configured packing
-    /// strategy (Fig. 8), timed into the per-block cost samples (artifact
+    /// strategy (Fig. 8). `&self`: the shared-state [`Runtime`] lets any
+    /// worker thread launch concurrently, so this is the work item of BOTH
+    /// stage schedules — the phased path loops over packs on the driver
+    /// thread; the fused path orders `launch → send → poll` per pack
+    /// through worker-parallel task lists. The caller hands in the pack's
+    /// disjoint `last_dts`/`block_secs` slices (`dts_out`/`secs_out`, both
+    /// `d.nb` long), a reusable staging scratch `tmp`, and `compute_dt`
+    /// (true on the cycle's final RK stage — the ONE place that decision
+    /// is made is the caller's `si + 1 == RK2_STAGES.len()`). Launch seconds
+    /// are spread evenly over the pack's blocks into `secs_out` (artifact
     /// keys are resolved before the timer starts, so key construction
-    /// never pollutes the measured launch seconds). The per-pack unit of
-    /// both stage schedules: the phased path loops over packs; the fused
-    /// path orders `launch_pack` → `send_pack` → `poll_pack` per pack
-    /// through a task list.
-    fn launch_pack(
-        &mut self,
-        md: &mut MeshData,
-        pi: usize,
+    /// never pollutes the measured launch seconds).
+    fn launch_pack_parts(
+        &self,
+        d: &PackDesc,
+        p: &mut PackStaging,
+        dts_out: &mut [Real],
+        secs_out: &mut [f64],
+        tmp: &mut Vec<Real>,
         scal: ScalArgs,
-        si: usize,
+        compute_dt: bool,
     ) -> Result<()> {
         let elapsed = match self.strategy {
             PackStrategy::PerPack => {
                 // one fused unpack+stage+pack+dt launch for the whole pack
-                let key = self.key("fused", md.packs()[pi].nb);
-                let (descs, staging) = md.parts_mut();
-                let d = &descs[pi];
-                let p = &mut staging[pi];
+                let key = self.key("fused", d.nb);
                 let t0 = Instant::now();
                 let dts = self.rt.fused(
                     &key,
@@ -376,10 +435,8 @@ impl DeviceState {
                     &mut p.bufs_out,
                 )?;
                 let el = t0.elapsed();
-                if si == 1 {
-                    for (bi, v) in dts.iter().enumerate() {
-                        self.last_dts[d.first + bi] = *v;
-                    }
+                if compute_dt {
+                    dts_out.copy_from_slice(&dts);
                 }
                 el
             }
@@ -389,25 +446,24 @@ impl DeviceState {
                 let kst = self.key("stage", 1);
                 let kpk = self.key("pack", 1);
                 let kdt = self.key("dt", 1);
-                let (descs, staging) = md.parts_mut();
-                let d = &descs[pi];
-                let p = &mut staging[pi];
-                let DeviceState { rt, last_dts, tmp, block_elems, buflen, .. } = self;
-                let ne = *block_elems;
-                let bl = *buflen;
+                let ne = self.block_elems;
+                let bl = self.buflen;
+                if tmp.len() != ne {
+                    tmp.resize(ne, 0.0);
+                }
                 let t0 = Instant::now();
                 for bi in 0..d.nb {
                     let u = &mut p.u[bi * ne..(bi + 1) * ne];
                     let u0 = &p.u0[bi * ne..(bi + 1) * ne];
                     let bin = &p.bufs_in[bi * bl..(bi + 1) * bl];
-                    rt.unpack(&kun, u, bin, tmp)?;
+                    self.rt.unpack(&kun, u, bin, tmp)?;
                     u.copy_from_slice(tmp);
-                    rt.stage(&kst, u, u0, scal, tmp)?;
+                    self.rt.stage(&kst, u, u0, scal, tmp)?;
                     u.copy_from_slice(tmp);
-                    rt.pack(&kpk, u, &mut p.bufs_out[bi * bl..(bi + 1) * bl])?;
-                    if si == 1 {
-                        let dts = rt.dt(&kdt, u, scal)?;
-                        last_dts[d.first + bi] = dts[0];
+                    self.rt.pack(&kpk, u, &mut p.bufs_out[bi * bl..(bi + 1) * bl])?;
+                    if compute_dt {
+                        let dts = self.rt.dt(&kdt, u, scal)?;
+                        dts_out[bi] = dts[0];
                     }
                 }
                 t0.elapsed()
@@ -422,14 +478,11 @@ impl DeviceState {
                     (0..nslots).map(|s| self.key("unpack1", 1).with_nbr(s)).collect();
                 let kpk1: Vec<ArtifactKey> =
                     (0..nslots).map(|s| self.key("pack1", 1).with_nbr(s)).collect();
-                let (descs, staging) = md.parts_mut();
-                let d = &descs[pi];
-                let p = &mut staging[pi];
-                let DeviceState {
-                    rt, last_dts, tmp, seg_offs, seg_lens, block_elems, buflen, ..
-                } = self;
-                let ne = *block_elems;
-                let bl = *buflen;
+                let ne = self.block_elems;
+                let bl = self.buflen;
+                if tmp.len() != ne {
+                    tmp.resize(ne, 0.0);
+                }
                 let t0 = Instant::now();
                 for bi in 0..d.nb {
                     let u = &mut p.u[bi * ne..(bi + 1) * ne];
@@ -437,23 +490,23 @@ impl DeviceState {
                     let base = bi * bl;
                     // apply each inbound buffer with its own launch
                     for slot in 0..nslots {
-                        let seg = &p.bufs_in[base + seg_offs[slot]
-                            ..base + seg_offs[slot] + seg_lens[slot]];
-                        rt.unpack1(&kun1[slot], u, seg, tmp)?;
+                        let seg = &p.bufs_in[base + self.seg_offs[slot]
+                            ..base + self.seg_offs[slot] + self.seg_lens[slot]];
+                        self.rt.unpack1(&kun1[slot], u, seg, tmp)?;
                         u.copy_from_slice(tmp);
                     }
-                    rt.stage(&kst, u, u0, scal, tmp)?;
+                    self.rt.stage(&kst, u, u0, scal, tmp)?;
                     u.copy_from_slice(tmp);
                     // fill each outbound buffer with its own launch
                     for slot in 0..nslots {
-                        let seg = rt.pack1(&kpk1[slot], u)?;
-                        p.bufs_out[base + seg_offs[slot]
-                            ..base + seg_offs[slot] + seg_lens[slot]]
+                        let seg = self.rt.pack1(&kpk1[slot], u)?;
+                        p.bufs_out[base + self.seg_offs[slot]
+                            ..base + self.seg_offs[slot] + self.seg_lens[slot]]
                             .copy_from_slice(&seg);
                     }
-                    if si == 1 {
-                        let dts = rt.dt(&kdt, u, scal)?;
-                        last_dts[d.first + bi] = dts[0];
+                    if compute_dt {
+                        let dts = self.rt.dt(&kdt, u, scal)?;
+                        dts_out[bi] = dts[0];
                     }
                 }
                 t0.elapsed()
@@ -464,19 +517,16 @@ impl DeviceState {
         };
         // Per-pack launch seconds, spread evenly over the pack's blocks
         // (launches are the per-pack measurement unit on Device).
-        let d = &md.packs()[pi];
         let per_block = elapsed.as_secs_f64() / d.nb.max(1) as f64;
-        for bi in 0..d.nb {
-            self.block_secs[d.first + bi] += per_block;
+        for s in secs_out.iter_mut() {
+            *s += per_block;
         }
         Ok(())
     }
 
     /// Send ONE pack's outbound boundary segments (fused send task; the
-    /// phased `route_and_receive` keeps its own whole-rank loop).
-    fn send_pack(&self, descs: &[PackDesc], staging: &[PackStaging], pi: usize) {
-        let d = &descs[pi];
-        let p = &staging[pi];
+    /// phased `route_and_receive` loops this over the whole rank).
+    fn send_one(&self, d: &PackDesc, p: &PackStaging) {
         for bi in 0..d.nb {
             let flat = d.first + bi;
             let base = bi * self.buflen;
@@ -490,15 +540,12 @@ impl DeviceState {
 
     /// Poll ONE pack's pending inbound segments (`(block-in-pack, slot)`
     /// pairs) into its `bufs_in`. True when the pack's receives are all in.
-    fn poll_pack(
+    fn poll_one(
         &self,
-        md: &mut MeshData,
-        pi: usize,
+        d: &PackDesc,
+        p: &mut PackStaging,
         pending: &mut Vec<(usize, usize)>,
     ) -> Result<bool> {
-        let (descs, staging) = md.parts_mut();
-        let d = &descs[pi];
-        let p = &mut staging[pi];
         let mut i = 0usize;
         while i < pending.len() {
             let (bi, slot) = pending[i];
@@ -517,65 +564,222 @@ impl DeviceState {
         Ok(pending.is_empty())
     }
 
-    /// The fused Device stage: per-pack task lists order launch → send →
-    /// poll, swept round-robin on the driver thread (launches share the
-    /// runtime), so one pack's boundary routing overlaps the interior
-    /// launches of the others instead of waiting behind a whole-rank
-    /// launch barrier. Bitwise identical to the phased path: launches are
-    /// per-pack independent and every received segment lands in a disjoint
-    /// `bufs_in` slab.
-    fn stage_fused(&mut self, md: &mut MeshData, scal: ScalArgs, si: usize) -> Result<()> {
-        let npacks = md.npacks();
-        let pending: Vec<Vec<(usize, usize)>> =
-            md.packs().iter().map(|d| self.pack_pending(d)).collect();
+    /// The phased oracle: all launches serially on the driver thread, then
+    /// the whole-rank routing barrier.
+    fn stage_phased(&mut self, md: &mut MeshData, scal: ScalArgs, si: usize) -> Result<()> {
+        let compute_dt = si + 1 == RK2_STAGES.len();
+        let mut last_dts = std::mem::take(&mut self.last_dts);
+        let mut block_secs = std::mem::take(&mut self.block_secs);
+        let mut tmp = std::mem::take(&mut self.tmp);
+        let res: Result<()> = (|| {
+            let (descs, staging) = md.parts_mut();
+            for (d, p) in descs.iter().zip(staging.iter_mut()) {
+                let r = d.block_range();
+                self.launch_pack_parts(
+                    d,
+                    p,
+                    &mut last_dts[r.clone()],
+                    &mut block_secs[r],
+                    &mut tmp,
+                    scal,
+                    compute_dt,
+                )?;
+            }
+            Ok(())
+        })();
+        self.last_dts = last_dts;
+        self.block_secs = block_secs;
+        self.tmp = tmp;
+        // last_dts changed outside the fused region: drop the cached min.
+        self.fused_dt_min = None;
+        res?;
+        self.route_and_receive(md)
+    }
 
-        struct DevStageCtx<'a> {
-            dev: &'a mut DeviceState,
-            md: &'a mut MeshData,
-            pending: Vec<Vec<(usize, usize)>>,
+    /// The fused Device stage: per-pack task lists (launch → send → poll,
+    /// plus a partial dt-min on the final RK stage) executed
+    /// worker-parallel on the stealing pool, seeded by the measured pack
+    /// costs. Bitwise identical to the phased path for any worker count or
+    /// steal order: launches are per-pack independent (disjoint staging,
+    /// `last_dts`/`block_secs` slices), every received segment lands in a
+    /// disjoint `bufs_in` slab, and the shared-state `Runtime` hands each
+    /// in-flight launch its own scratch.
+    fn stage_fused(
+        &mut self,
+        md: &mut MeshData,
+        pack_costs: &[f64],
+        scal: ScalArgs,
+        si: usize,
+        nworkers: usize,
+    ) -> Result<()> {
+        let npacks = md.npacks();
+        if npacks == 0 {
+            return Ok(());
+        }
+        let policy = self.policy;
+        let final_stage = si + 1 == RK2_STAGES.len();
+        if self.tmps.len() != npacks {
+            self.tmps.resize_with(npacks, Vec::new);
+        }
+        let mut last_dts = std::mem::take(&mut self.last_dts);
+        let mut block_secs = std::mem::take(&mut self.block_secs);
+        let mut tmps = std::mem::take(&mut self.tmps);
+        // Per-pack partial CFL minima + the regional fold's result slot
+        // (f32 bit patterns: min is exact, so the fold is bitwise equal to
+        // the phased path's block-order fold). Allocated only on the final
+        // stage — no t_dt task reads it otherwise.
+        let minima: Vec<AtomicU32> = if final_stage {
+            (0..npacks).map(|_| AtomicU32::new(f32::INFINITY.to_bits())).collect()
+        } else {
+            Vec::new()
+        };
+        let dt_result = AtomicU32::new(f32::INFINITY.to_bits());
+        let abort = AtomicBool::new(false);
+        let mut first_error: Option<Error> = None;
+
+        /// One pack's fused-stage context: shared read view of the device
+        /// state + disjoint `&mut` slices of everything the pack writes.
+        struct DevPackCtx<'a> {
+            dev: &'a DeviceState,
+            d: &'a PackDesc,
+            p: &'a mut PackStaging,
+            dts: &'a mut [Real],
+            secs: &'a mut [f64],
+            tmp: &'a mut Vec<Real>,
+            pending: Vec<(usize, usize)>,
+            minima: &'a [AtomicU32],
+            dt_result: &'a AtomicU32,
             scal: ScalArgs,
-            si: usize,
+            compute_dt: bool,
             error: Option<Error>,
+            /// Shared across packs: first error drains every list fast.
+            abort: &'a AtomicBool,
         }
 
-        let mut region: TaskRegion<DevStageCtx> = TaskRegion::new(npacks);
-        for pi in 0..npacks {
-            let list = region.list(pi);
-            let t_launch = list.add(NONE, move |c: &mut DevStageCtx| {
-                if c.error.is_some() {
-                    return TaskStatus::Complete;
-                }
-                if let Err(e) = c.dev.launch_pack(c.md, pi, c.scal, c.si) {
-                    c.error = Some(e);
-                }
-                TaskStatus::Complete
-            });
-            let t_send = list.add(&[t_launch], move |c: &mut DevStageCtx| {
-                if c.error.is_some() {
-                    return TaskStatus::Complete;
-                }
-                c.dev.send_pack(c.md.packs(), c.md.staging(), pi);
-                TaskStatus::Complete
-            });
-            let _t_poll = list.add(&[t_send], move |c: &mut DevStageCtx| {
-                if c.error.is_some() {
-                    return TaskStatus::Complete;
-                }
-                let DevStageCtx { dev, md, pending, error, .. } = c;
-                match dev.poll_pack(md, pi, &mut pending[pi]) {
-                    Ok(true) => TaskStatus::Complete,
-                    Ok(false) => TaskStatus::Incomplete,
-                    Err(e) => {
+        {
+            let dev: &DeviceState = &*self;
+            let (descs, staging) = md.parts_mut();
+            let mut dts_rest: &mut [Real] = &mut last_dts;
+            let mut secs_rest: &mut [f64] = &mut block_secs;
+            let mut ctxs: Vec<DevPackCtx> = Vec::with_capacity(npacks);
+            for ((d, p), tmp) in descs.iter().zip(staging.iter_mut()).zip(tmps.iter_mut()) {
+                let (dts, rest) = std::mem::take(&mut dts_rest).split_at_mut(d.nb);
+                dts_rest = rest;
+                let (secs, rest) = std::mem::take(&mut secs_rest).split_at_mut(d.nb);
+                secs_rest = rest;
+                ctxs.push(DevPackCtx {
+                    dev,
+                    d,
+                    p,
+                    dts,
+                    secs,
+                    tmp,
+                    pending: dev.pack_pending(d),
+                    minima: &minima,
+                    dt_result: &dt_result,
+                    scal,
+                    compute_dt: final_stage,
+                    error: None,
+                    abort: &abort,
+                });
+            }
+
+            let mut region: TaskRegion<DevPackCtx> = TaskRegion::new(npacks);
+            let mut marks = Vec::new();
+            for pi in 0..npacks {
+                let list = region.list(pi);
+                let t_launch = list.add(NONE, |c: &mut DevPackCtx| {
+                    if c.abort.load(Ordering::SeqCst) {
+                        return TaskStatus::Complete;
+                    }
+                    let DevPackCtx {
+                        dev, d, p, dts, secs, tmp, scal, compute_dt, error, abort, ..
+                    } = c;
+                    if let Err(e) =
+                        dev.launch_pack_parts(d, p, dts, secs, tmp, *scal, *compute_dt)
+                    {
                         *error = Some(e);
+                        abort.store(true, Ordering::SeqCst);
+                    }
+                    TaskStatus::Complete
+                });
+                let t_send = list.add(&[t_launch], |c: &mut DevPackCtx| {
+                    if c.abort.load(Ordering::SeqCst) {
+                        return TaskStatus::Complete;
+                    }
+                    c.dev.send_one(c.d, c.p);
+                    TaskStatus::Complete
+                });
+                let _t_poll = list.add(&[t_send], |c: &mut DevPackCtx| {
+                    if c.abort.load(Ordering::SeqCst) {
+                        return TaskStatus::Complete;
+                    }
+                    let DevPackCtx { dev, d, p, pending, error, abort, .. } = c;
+                    match dev.poll_one(d, p, pending) {
+                        Ok(true) => TaskStatus::Complete,
+                        Ok(false) => TaskStatus::Incomplete,
+                        Err(e) => {
+                            *error = Some(e);
+                            abort.store(true, Ordering::SeqCst);
+                            TaskStatus::Complete
+                        }
+                    }
+                });
+                if final_stage {
+                    // partial min of the launch-computed per-block dts —
+                    // the per-pack half of the fused dt reduction
+                    let t_dt = list.add(&[t_launch], move |c: &mut DevPackCtx| {
+                        if c.abort.load(Ordering::SeqCst) {
+                            return TaskStatus::Complete;
+                        }
+                        let m = c.dts.iter().fold(f32::INFINITY, |a, &b| a.min(b));
+                        c.minima[pi].store(m.to_bits(), Ordering::SeqCst);
                         TaskStatus::Complete
+                    });
+                    marks.push((pi, t_dt));
+                }
+            }
+            if final_stage {
+                // regional cross-list fold: one task, gated on every
+                // pack's partial-min mark, runs under the same abort-aware
+                // region — this replaces the post-cycle local_dt sweep.
+                region.add_regional(marks, |c: &mut DevPackCtx| {
+                    let mut m = f32::INFINITY;
+                    for a in c.minima {
+                        m = m.min(f32::from_bits(a.load(Ordering::SeqCst)));
+                    }
+                    c.dt_result.store(m.to_bits(), Ordering::SeqCst);
+                    TaskStatus::Complete
+                });
+            }
+
+            match region.execute_parallel_weighted(
+                ctxs,
+                Some(pack_costs),
+                nworkers,
+                policy,
+                STALL_LIMIT,
+            ) {
+                Ok(done) => {
+                    for c in done {
+                        if let Some(e) = c.error {
+                            first_error = Some(e);
+                            break;
+                        }
                     }
                 }
-            });
+                Err(e) => first_error = Some(e),
+            }
         }
-        let mut ctx = DevStageCtx { dev: self, md, pending, scal, si, error: None };
-        region.execute(&mut ctx, 200_000)?;
-        if let Some(e) = ctx.error {
+        self.last_dts = last_dts;
+        self.block_secs = block_secs;
+        self.tmps = tmps;
+        if let Some(e) = first_error {
             return Err(e);
+        }
+        if final_stage {
+            self.fused_dt_min =
+                Some(f32::from_bits(dt_result.load(Ordering::SeqCst)));
         }
         Ok(())
     }
@@ -603,26 +807,31 @@ impl StageExecutor for DeviceState {
             return Err(Error::Runtime("strategy=native is the Host path".into()));
         }
         let scal = self.scal(co, dt, &sim.mesh);
-        let overlap = sim.sp.overlap;
-        let md = &mut sim.mesh_data;
-        if overlap == OverlapMode::Fused {
-            // per-pack task lists: launch → send → poll, interleaved
-            self.stage_fused(md, scal, si)
+        if sim.sp.overlap == OverlapMode::Fused {
+            // per-pack task lists on the worker pool: launch → send →
+            // poll (+ the dt reduction on the final stage), interleaved
+            let pack_costs = sim.mesh_data.pack_costs(&sim.mesh);
+            let nworkers = self.stage_workers(sim.mesh_data.npacks());
+            self.stage_fused(&mut sim.mesh_data, &pack_costs, scal, si, nworkers)
         } else {
             // phased oracle: all launches, then the whole-rank routing
-            for pi in 0..md.npacks() {
-                self.launch_pack(md, pi, scal, si)?;
-            }
-            self.route_and_receive(md)
+            self.stage_phased(&mut sim.mesh_data, scal, si)
         }
     }
 
-    /// Raw min CFL dt across local blocks, scaled by the package CFL.
+    /// Raw min CFL dt across local blocks, scaled by the package CFL. In
+    /// fused mode this returns the regional reduction cached by the final
+    /// RK stage's task lists; the fold over `last_dts` only runs when that
+    /// cache was invalidated outside the fused region (phased oracle,
+    /// bootstrap, rebalance).
     fn local_dt(&self, sim: &HydroSim) -> f64 {
-        let m = self
-            .last_dts
-            .iter()
-            .fold(Real::INFINITY, |a, &b| a.min(b));
+        let m = match self.fused_dt_min {
+            Some(m) => m,
+            None => self
+                .last_dts
+                .iter()
+                .fold(Real::INFINITY, |a, &b| a.min(b)),
+        };
         sim.pkg.cfl as f64 * m as f64
     }
 }

@@ -41,7 +41,7 @@ use crate::bvals::{self, ExchTopo, PackExchange};
 use crate::comm::Comm;
 use crate::error::{Error, Result};
 use crate::hydro::native::{self, FluxArrays, Scratch, StageCoeffs};
-use crate::hydro::CONS;
+use crate::hydro::{HydroPackage, CONS};
 use crate::mesh::{IndexShape, MeshBlock};
 use crate::tasks::{TaskRegion, TaskStatus, NONE};
 use crate::util::backoff::STALL_LIMIT;
@@ -105,6 +105,13 @@ pub struct HostExec {
     nworkers: usize,
     policy: StealPolicy,
     overlap_stats: OverlapStats,
+    /// Local raw CFL dt cached by the fused pipeline's regional reduction
+    /// on the final RK stage (the per-pack partial minima folded
+    /// cross-list inside the stage region) — so `local_dt` needs no
+    /// separate sweep over the blocks in fused mode. `None` until the
+    /// first fused cycle completes (and after every rebuild: regrid /
+    /// rebalance / restart recreate the executor).
+    fused_dt: Option<f64>,
 }
 
 impl HostExec {
@@ -132,6 +139,7 @@ impl HostExec {
             nworkers,
             policy,
             overlap_stats: OverlapStats::default(),
+            fused_dt: None,
         }
     }
 
@@ -189,6 +197,8 @@ fn split_chunks<'a, T>(
 struct FusedPackCtx<'a> {
     /// Global index of the pack's first block (u0 is indexed globally).
     start: usize,
+    /// Pack index (slot in the regional dt reduction's `minima`).
+    pi: usize,
     blocks: &'a mut [MeshBlock],
     flux: &'a mut [FluxArrays],
     unew: &'a mut [Vec<Real>],
@@ -203,6 +213,15 @@ struct FusedPackCtx<'a> {
     fcomm: &'a Comm,
     scratch: &'a ScratchPool,
     stats: &'a OverlapStats,
+    /// Package view for the fused dt reduction (`estimate_dt` reads
+    /// interior cells only, so it can run right after the combine).
+    pkg: &'a HydroPackage,
+    /// Per-pack partial CFL minima of the fused dt reduction (one slot
+    /// per pack, f64 bit patterns; min is exact, so the regional fold is
+    /// bitwise equal to the phased path's block-order sweep).
+    minima: &'a [AtomicU64],
+    /// Result slot written by the regional cross-list fold.
+    dt_result: &'a AtomicU64,
     shape: IndexShape,
     gamma: Real,
     co: StageCoeffs,
@@ -224,6 +243,7 @@ impl HostExec {
         &mut self,
         sim: &mut super::HydroSim,
         co: StageCoeffs,
+        si: usize,
         dt: Real,
     ) -> Result<()> {
         sim.mesh_data.validate(&sim.mesh)?;
@@ -235,6 +255,17 @@ impl HostExec {
         let npacks = pack_ranges.len();
         let nworkers = self.nworkers;
         let policy = self.policy;
+        // The fused dt reduction runs on the final RK stage only: t_dt
+        // partial minima per pack + one regional cross-list fold.
+        let final_stage = si + 1 == native::RK2_STAGES.len();
+        // Reduction slots exist only on the final stage (empty slice
+        // otherwise — no t_dt task ever reads it).
+        let minima: Vec<AtomicU64> = if final_stage {
+            (0..npacks).map(|_| AtomicU64::new(f64::INFINITY.to_bits())).collect()
+        } else {
+            Vec::new()
+        };
+        let dt_result = AtomicU64::new(f64::INFINITY.to_bits());
 
         // Scratch moves into a bounded pool (≤ nworkers concurrent flux
         // tasks) and is restored below, also on error paths.
@@ -277,15 +308,17 @@ impl HostExec {
             let abort = AtomicBool::new(false);
 
             let mut ctxs: Vec<FusedPackCtx> = Vec::with_capacity(npacks);
-            for ((((range, blocks), flux), (unew, secs)), fpending) in pack_ranges
+            for (pi, ((((range, blocks), flux), (unew, secs)), fpending)) in pack_ranges
                 .iter()
                 .zip(block_parts)
                 .zip(flux_parts)
                 .zip(unew_parts.into_iter().zip(secs_parts))
                 .zip(fpend)
+                .enumerate()
             {
                 ctxs.push(FusedPackCtx {
                     start: range.start,
+                    pi,
                     blocks,
                     flux,
                     unew,
@@ -296,6 +329,9 @@ impl HostExec {
                     fcomm,
                     scratch: &scratch_pool,
                     stats,
+                    pkg: &sim.pkg,
+                    minima: &minima,
+                    dt_result: &dt_result,
                     shape,
                     gamma,
                     co,
@@ -306,6 +342,7 @@ impl HostExec {
             }
 
             let mut region: TaskRegion<FusedPackCtx> = TaskRegion::new(npacks);
+            let mut dt_marks = Vec::new();
             for pi in 0..npacks {
                 let list = region.list(pi);
                 // 1. prim recovery + fluxes for the pack's blocks
@@ -451,6 +488,36 @@ impl HostExec {
                         }
                     }
                 });
+                // 5. (final stage) per-pack partial CFL min — reads the
+                // combined interior state written by t_apply, so it rides
+                // the same list without waiting on the ghost exchange.
+                if final_stage {
+                    let t_dt = list.add(&[t_apply], |c: &mut FusedPackCtx| {
+                        if c.abort.load(Ordering::SeqCst) {
+                            return TaskStatus::Complete;
+                        }
+                        let mut m = f64::INFINITY;
+                        for b in c.blocks.iter() {
+                            m = m.min(c.pkg.estimate_dt(&b.data, &b.coords));
+                        }
+                        c.minima[c.pi].store(m.to_bits(), Ordering::SeqCst);
+                        TaskStatus::Complete
+                    });
+                    dt_marks.push((pi, t_dt));
+                }
+            }
+            if final_stage && npacks > 0 {
+                // Regional cross-list fold under the same abort-aware
+                // region: replaces the whole-rank local_dt sweep that used
+                // to run after the cycle.
+                region.add_regional(dt_marks, |c: &mut FusedPackCtx| {
+                    let mut m = f64::INFINITY;
+                    for a in c.minima {
+                        m = m.min(f64::from_bits(a.load(Ordering::SeqCst)));
+                    }
+                    c.dt_result.store(m.to_bits(), Ordering::SeqCst);
+                    TaskStatus::Complete
+                });
             }
 
             let res = region.execute_parallel_weighted(
@@ -476,6 +543,11 @@ impl HostExec {
         if let Some(e) = first_error {
             return Err(e);
         }
+        if final_stage {
+            // Local dt for this cycle, produced inside the region — the
+            // post-cycle `local_dt` consults this instead of re-sweeping.
+            self.fused_dt = Some(f64::from_bits(dt_result.load(Ordering::SeqCst)));
+        }
         // Physical BCs once every receive has landed — the same point the
         // phased path applies them.
         bvals::apply_block_physical_bcs(
@@ -499,11 +571,11 @@ impl StageExecutor for HostExec {
         &mut self,
         sim: &mut super::HydroSim,
         co: StageCoeffs,
-        _si: usize,
+        si: usize,
         dt: Real,
     ) -> Result<()> {
         if sim.sp.overlap == OverlapMode::Fused {
-            return self.stage_fused(sim, co, dt);
+            return self.stage_fused(sim, co, si, dt);
         }
         sim.mesh_data.validate(&sim.mesh)?;
         let shape = sim.mesh.cfg.index_shape();
@@ -603,13 +675,21 @@ impl StageExecutor for HostExec {
         run_stage_exchange(sim, self.nworkers, self.policy)
     }
 
-    /// Parallel min-reduction of the per-block CFL estimates over the
-    /// pack items, folded on the driver thread (f64 min is associative
-    /// and commutative, so the result is order-independent).
+    /// Local CFL dt. In fused mode this returns the value the stage
+    /// region's regional dt reduction already produced (no extra sweep
+    /// over the blocks); otherwise it's a parallel min-reduction of the
+    /// per-block CFL estimates over the pack items, folded on the driver
+    /// thread (f64 min is associative and commutative, so the result is
+    /// order-independent — and bitwise equal to the fused reduction).
     fn local_dt(&self, sim: &super::HydroSim) -> f64 {
         let blocks = &sim.mesh.blocks;
         if blocks.is_empty() {
             return f64::INFINITY;
+        }
+        if sim.sp.overlap == OverlapMode::Fused {
+            if let Some(v) = self.fused_dt {
+                return v;
+            }
         }
         let pkg = &sim.pkg;
         if !sim.mesh_data.is_current(&sim.mesh) || self.nworkers <= 1 {

@@ -460,8 +460,12 @@ impl HydroSim {
         (self.mesh.tree.nblocks() * self.mesh.cfg.index_shape().ncells_interior()) as u64
     }
 
-    /// CFL timestep: executor-local estimate (parallel min-reduction on the
-    /// Host path, staged dt launches on Device), min-reduced across ranks.
+    /// CFL timestep: executor-local estimate, min-reduced across ranks.
+    /// In fused mode the local value was already produced INSIDE the final
+    /// stage's task region (per-pack partial minima + one regional
+    /// cross-list fold on both exec spaces), so no separate sweep over the
+    /// blocks runs here; the phased oracle still sweeps (Host) or folds
+    /// the staged per-block dts (Device).
     pub fn reduce_dt(&mut self) -> f64 {
         let local = if let Some(dev) = &self.device {
             dev.local_dt(self)

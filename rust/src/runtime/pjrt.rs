@@ -8,16 +8,30 @@
 //! (Fig. 8) and buffer layouts stay faithful. A real xla/PJRT client can be
 //! slotted back in behind the same `Runtime` API without touching callers.
 //!
-//! One [`Runtime`] per rank thread; "executables" are prepared lazily per
-//! (kind, shape, pack-size) key and cached — mirroring "one compiled kernel
-//! per MeshBlockPack variant".
+//! One [`Runtime`] per rank; every entry point takes `&self`, so pack
+//! launches from concurrent worker threads share one runtime without a
+//! coarse lock on the launch path (the fused Device stage drives per-pack
+//! task lists on the work-stealing pool). Shared state is split by access
+//! pattern:
+//!
+//! * the **compile-once map** (key → [`Executable`]) sits behind an
+//!   `RwLock`: launches take the read lock on the hot path; only the first
+//!   launch of a new (kind, shape, pack-size) variant takes the write lock,
+//!   and the `entry` insert under it guarantees each artifact is compiled
+//!   exactly once even when many workers race on a cold key;
+//! * **launch scratch** (flux arrays, reconstruction scratch, staging tmp)
+//!   is never shared between in-flight launches: each launch pops a scratch
+//!   from the executable's bounded pool (or builds a fresh one when all are
+//!   in flight — at most one per concurrent worker) and pushes it back when
+//!   the launch retires.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use super::manifest::{ArtifactKey, Manifest};
 use crate::bvals::bufspec;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::hydro::native;
 use crate::mesh::IndexShape;
 use crate::{Real, NHYDRO};
@@ -47,16 +61,18 @@ impl ScalArgs {
     }
 }
 
-/// Reusable per-shape work buffers of the interpreter ("compiled state").
-struct Compiled {
+/// Per-launch work buffers of the interpreter. Popped from the owning
+/// [`Executable`]'s pool for the duration of one launch; contents carry no
+/// state between launches (every kernel fully overwrites what it reads).
+struct LaunchScratch {
     fx: native::FluxArrays,
     sc: native::Scratch,
     tmp: Vec<Real>,
 }
 
-impl Compiled {
-    fn new(shape: &IndexShape) -> Compiled {
-        Compiled {
+impl LaunchScratch {
+    fn new(shape: &IndexShape) -> LaunchScratch {
+        LaunchScratch {
             fx: native::FluxArrays::new(shape),
             sc: native::Scratch::default(),
             tmp: vec![0.0; NHYDRO * shape.ncells_total()],
@@ -64,12 +80,40 @@ impl Compiled {
     }
 }
 
+/// One compiled executable: immutable shape metadata plus a bounded pool
+/// of per-launch scratch (at most one scratch per concurrent launch).
+struct Executable {
+    shape: IndexShape,
+    scratch: Mutex<Vec<LaunchScratch>>,
+}
+
+impl Executable {
+    fn new(shape: IndexShape) -> Executable {
+        Executable { shape, scratch: Mutex::new(Vec::new()) }
+    }
+
+    /// Run `f` with a pooled scratch: pop (or build) one, restore after.
+    fn with_scratch<R>(&self, f: impl FnOnce(&mut LaunchScratch) -> R) -> R {
+        let mut s = self
+            .scratch
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| LaunchScratch::new(&self.shape));
+        let r = f(&mut s);
+        self.scratch.lock().unwrap().push(s);
+        r
+    }
+}
+
 /// Per-rank device runtime: artifact manifest + lazily prepared executables.
+/// Shareable across worker threads — see the module docs for the lock
+/// granularity.
 pub struct Runtime {
     manifest: Arc<Manifest>,
-    cache: HashMap<ArtifactKey, Compiled>,
+    cache: RwLock<HashMap<ArtifactKey, Arc<Executable>>>,
     /// Number of executable invocations ("kernel launches") so far.
-    pub launches: u64,
+    launches: AtomicU64,
 }
 
 impl Runtime {
@@ -89,29 +133,49 @@ impl Runtime {
     }
 
     pub fn with_manifest(manifest: Arc<Manifest>) -> Result<Runtime> {
-        Ok(Runtime { manifest, cache: HashMap::new(), launches: 0 })
+        Ok(Runtime {
+            manifest,
+            cache: RwLock::new(HashMap::new()),
+            launches: AtomicU64::new(0),
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    /// Prepare (or fetch cached) the executable state for `key`.
-    fn exe(&mut self, key: &ArtifactKey) -> &mut Compiled {
-        let shape = IndexShape::new(key.dim, key.n);
-        self.cache
-            .entry(key.clone())
-            .or_insert_with(|| Compiled::new(&shape))
+    /// Total executable invocations ("kernel launches") so far.
+    pub fn launches(&self) -> u64 {
+        self.launches.load(Ordering::Relaxed)
+    }
+
+    fn count_launch(&self) {
+        self.launches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fetch (or compile-once) the executable for `key`. Hot path is one
+    /// read-lock; a cold key upgrades to the write lock, where the `entry`
+    /// insert makes the compile unique even under a thundering herd.
+    fn exe(&self, key: &ArtifactKey) -> Arc<Executable> {
+        if let Some(e) = self.cache.read().unwrap().get(key) {
+            return e.clone();
+        }
+        let mut w = self.cache.write().unwrap();
+        w.entry(key.clone())
+            .or_insert_with(|| {
+                Arc::new(Executable::new(IndexShape::new(key.dim, key.n)))
+            })
+            .clone()
     }
 
     /// Eagerly prepare an artifact (startup warmup, outside timed regions).
-    pub fn warmup(&mut self, key: &ArtifactKey) -> Result<()> {
+    pub fn warmup(&self, key: &ArtifactKey) -> Result<()> {
         self.exe(key);
         Ok(())
     }
 
     pub fn num_compiled(&self) -> usize {
-        self.cache.len()
+        self.cache.read().unwrap().len()
     }
 
     // -- shape helpers -------------------------------------------------------
@@ -128,41 +192,54 @@ impl Runtime {
         bufspec::buflen(&shape, NHYDRO)
     }
 
+    /// Error unless `len >= need` (`what` names the offending buffer).
+    fn check_len(key: &ArtifactKey, what: &str, len: usize, need: usize) -> Result<()> {
+        if len < need {
+            return Err(Error::Runtime(format!(
+                "{} buffer too short for {:?}: {} < {} elements",
+                what, key, len, need
+            )));
+        }
+        Ok(())
+    }
+
     // -- artifact entry points ------------------------------------------------
 
     /// `stage`: (u, u0, scal) -> u_new (written into `out`).
     pub fn stage(
-        &mut self,
+        &self,
         key: &ArtifactKey,
         u: &[Real],
         u0: &[Real],
         scal: ScalArgs,
         out: &mut [Real],
     ) -> Result<()> {
-        self.launches += 1;
+        self.count_launch();
         let shape = IndexShape::new(key.dim, key.n);
         let ne = Self::block_elems(key);
-        let c = self.exe(key);
-        for b in 0..key.nb {
-            native::stage(
-                &u[b * ne..(b + 1) * ne],
-                &u0[b * ne..(b + 1) * ne],
-                &shape,
-                scal.coeffs(),
-                scal.dt,
-                scal.dx,
-                scal.gamma,
-                &mut c.fx,
-                &mut c.sc,
-                &mut out[b * ne..(b + 1) * ne],
-            );
-        }
+        let exe = self.exe(key);
+        exe.with_scratch(|c| {
+            for b in 0..key.nb {
+                native::stage(
+                    &u[b * ne..(b + 1) * ne],
+                    &u0[b * ne..(b + 1) * ne],
+                    &shape,
+                    scal.coeffs(),
+                    scal.dt,
+                    scal.dx,
+                    scal.gamma,
+                    &mut c.fx,
+                    &mut c.sc,
+                    &mut out[b * ne..(b + 1) * ne],
+                );
+            }
+        });
         Ok(())
     }
 
     /// `dt`: (u, scal) -> per-block CFL dt [nb].
-    pub fn dt(&mut self, key: &ArtifactKey, u: &[Real], scal: ScalArgs) -> Result<Vec<Real>> {
-        self.launches += 1;
+    pub fn dt(&self, key: &ArtifactKey, u: &[Real], scal: ScalArgs) -> Result<Vec<Real>> {
+        self.count_launch();
         let shape = IndexShape::new(key.dim, key.n);
         let ne = Self::block_elems(key);
         let mut dts = Vec::with_capacity(key.nb);
@@ -178,8 +255,8 @@ impl Runtime {
     }
 
     /// `pack`: u -> all boundary buffers [nb, BUFLEN] (into `bufs`).
-    pub fn pack(&mut self, key: &ArtifactKey, u: &[Real], bufs: &mut [Real]) -> Result<()> {
-        self.launches += 1;
+    pub fn pack(&self, key: &ArtifactKey, u: &[Real], bufs: &mut [Real]) -> Result<()> {
+        self.count_launch();
         let shape = IndexShape::new(key.dim, key.n);
         let ne = Self::block_elems(key);
         let bl = Self::buflen(key);
@@ -195,8 +272,8 @@ impl Runtime {
     }
 
     /// `pack1` (per-neighbor): u -> one buffer segment.
-    pub fn pack1(&mut self, key: &ArtifactKey, u: &[Real]) -> Result<Vec<Real>> {
-        self.launches += 1;
+    pub fn pack1(&self, key: &ArtifactKey, u: &[Real]) -> Result<Vec<Real>> {
+        self.count_launch();
         let shape = IndexShape::new(key.dim, key.n);
         let ne = Self::block_elems(key);
         let slot = key.nbr.unwrap_or(0);
@@ -220,21 +297,32 @@ impl Runtime {
     }
 
     /// `unpack1` (per-neighbor): (u, seg) -> u with one ghost region applied.
+    /// Lengths are validated against the key's shape — a short device
+    /// buffer is an error, not a panic.
     pub fn unpack1(
-        &mut self,
+        &self,
         key: &ArtifactKey,
         u: &[Real],
         seg: &[Real],
         out: &mut [Real],
     ) -> Result<()> {
-        self.launches += 1;
+        self.count_launch();
         let shape = IndexShape::new(key.dim, key.n);
         let ne = Self::block_elems(key);
         let slot = key.nbr.unwrap_or(0);
-        let offset = crate::mesh::tree::neighbor_offsets(key.dim)[slot];
-        let slab = bufspec::recv_slab(offset, &shape);
+        let offsets = crate::mesh::tree::neighbor_offsets(key.dim);
+        if slot >= offsets.len() {
+            return Err(Error::Runtime(format!(
+                "unpack1 neighbor slot {} out of range for {:?}",
+                slot, key
+            )));
+        }
+        let slab = bufspec::recv_slab(offsets[slot], &shape);
         let seg_len = NHYDRO * slab.ncells();
-        out.copy_from_slice(u);
+        Self::check_len(key, "unpack1 state", u.len(), key.nb * ne)?;
+        Self::check_len(key, "unpack1 output", out.len(), key.nb * ne)?;
+        Self::check_len(key, "unpack1 segment", seg.len(), key.nb * seg_len)?;
+        out[..key.nb * ne].copy_from_slice(&u[..key.nb * ne]);
         for b in 0..key.nb {
             let mut r = b * seg_len;
             for v in 0..NHYDRO {
@@ -251,18 +339,23 @@ impl Runtime {
     }
 
     /// `unpack`: (u, bufs) -> u with ghosts filled (written into `out`).
+    /// Lengths are validated against `buflen(key)` — a short device buffer
+    /// is an error, not a panic.
     pub fn unpack(
-        &mut self,
+        &self,
         key: &ArtifactKey,
         u: &[Real],
         bufs: &[Real],
         out: &mut [Real],
     ) -> Result<()> {
-        self.launches += 1;
+        self.count_launch();
         let shape = IndexShape::new(key.dim, key.n);
         let ne = Self::block_elems(key);
         let bl = Self::buflen(key);
-        out.copy_from_slice(u);
+        Self::check_len(key, "unpack state", u.len(), key.nb * ne)?;
+        Self::check_len(key, "unpack output", out.len(), key.nb * ne)?;
+        Self::check_len(key, "unpack boundary", bufs.len(), key.nb * bl)?;
+        out[..key.nb * ne].copy_from_slice(&u[..key.nb * ne]);
         for b in 0..key.nb {
             bufspec::unpack_all(
                 &mut out[b * ne..(b + 1) * ne],
@@ -279,7 +372,7 @@ impl Runtime {
     /// Semantics: unpack -> stage -> pack -> dt, one launch per pack
     /// (`ref.py::fused_step`).
     pub fn fused(
-        &mut self,
+        &self,
         key: &ArtifactKey,
         u: &mut [Real],
         u0: &[Real],
@@ -287,32 +380,38 @@ impl Runtime {
         scal: ScalArgs,
         bufs_out: &mut [Real],
     ) -> Result<Vec<Real>> {
-        self.launches += 1;
+        self.count_launch();
         let shape = IndexShape::new(key.dim, key.n);
         let ne = Self::block_elems(key);
         let bl = Self::buflen(key);
-        let c = self.exe(key);
-        let mut dts = Vec::with_capacity(key.nb);
-        for b in 0..key.nb {
-            let ub = &mut u[b * ne..(b + 1) * ne];
-            bufspec::unpack_all(ub, &shape, NHYDRO, &bufs_in[b * bl..(b + 1) * bl]);
-            native::stage(
-                ub,
-                &u0[b * ne..(b + 1) * ne],
-                &shape,
-                scal.coeffs(),
-                scal.dt,
-                scal.dx,
-                scal.gamma,
-                &mut c.fx,
-                &mut c.sc,
-                &mut c.tmp,
-            );
-            ub.copy_from_slice(&c.tmp);
-            bufspec::pack_all(ub, &shape, NHYDRO, &mut bufs_out[b * bl..(b + 1) * bl]);
-            dts.push(native::min_dt(ub, &shape, scal.dx, scal.gamma));
-        }
-        Ok(dts)
+        Self::check_len(key, "fused state", u.len(), key.nb * ne)?;
+        Self::check_len(key, "fused u0", u0.len(), key.nb * ne)?;
+        Self::check_len(key, "fused boundary-in", bufs_in.len(), key.nb * bl)?;
+        Self::check_len(key, "fused boundary-out", bufs_out.len(), key.nb * bl)?;
+        let exe = self.exe(key);
+        exe.with_scratch(|c| {
+            let mut dts = Vec::with_capacity(key.nb);
+            for b in 0..key.nb {
+                let ub = &mut u[b * ne..(b + 1) * ne];
+                bufspec::unpack_all(ub, &shape, NHYDRO, &bufs_in[b * bl..(b + 1) * bl]);
+                native::stage(
+                    ub,
+                    &u0[b * ne..(b + 1) * ne],
+                    &shape,
+                    scal.coeffs(),
+                    scal.dt,
+                    scal.dx,
+                    scal.gamma,
+                    &mut c.fx,
+                    &mut c.sc,
+                    &mut c.tmp,
+                );
+                ub.copy_from_slice(&c.tmp);
+                bufspec::pack_all(ub, &shape, NHYDRO, &mut bufs_out[b * bl..(b + 1) * bl]);
+                dts.push(native::min_dt(ub, &shape, scal.dx, scal.gamma));
+            }
+            Ok(dts)
+        })
     }
 }
 
@@ -359,7 +458,7 @@ mod tests {
 
     #[test]
     fn stage_uniform_is_stationary_on_device() {
-        let mut rt = runtime();
+        let rt = runtime();
         let key = ArtifactKey::new("stage", 3, [8, 8, 8], 1);
         let nelem = Runtime::block_elems(&key);
         let ncell = nelem / NHYDRO;
@@ -381,13 +480,13 @@ mod tests {
         for (a, b) in u.iter().zip(out.iter()) {
             assert!((a - b).abs() < 1e-6);
         }
-        assert_eq!(rt.launches, 1);
+        assert_eq!(rt.launches(), 1);
         assert_eq!(rt.num_compiled(), 1);
     }
 
     #[test]
     fn device_matches_native_stage() {
-        let mut rt = runtime();
+        let rt = runtime();
         use crate::util::rng::XorShift;
         let shape = IndexShape::new(3, [8, 8, 8]);
         let key = ArtifactKey::new("stage", 3, [8, 8, 8], 1);
@@ -431,7 +530,7 @@ mod tests {
 
     #[test]
     fn device_pack_matches_native_pack() {
-        let mut rt = runtime();
+        let rt = runtime();
         let shape = IndexShape::new(3, [8, 8, 8]);
         let key = ArtifactKey::new("pack", 3, [8, 8, 8], 1);
         let nelem = Runtime::block_elems(&key);
@@ -445,7 +544,7 @@ mod tests {
 
     #[test]
     fn device_unpack_roundtrip() {
-        let mut rt = runtime();
+        let rt = runtime();
         let shape = IndexShape::new(3, [8, 8, 8]);
         let key = ArtifactKey::new("unpack", 3, [8, 8, 8], 1);
         let nelem = Runtime::block_elems(&key);
@@ -459,8 +558,30 @@ mod tests {
     }
 
     #[test]
+    fn unpack_short_buffers_error_not_panic() {
+        let rt = runtime();
+        let key = ArtifactKey::new("unpack", 2, [8, 8, 1], 2);
+        let ne = Runtime::block_elems(&key);
+        let bl = Runtime::buflen(&key);
+        let u = vec![1.0f32; 2 * ne];
+        let mut out = vec![0.0f32; 2 * ne];
+        // boundary buffer one element short of nb * buflen
+        let short = vec![0.0f32; 2 * bl - 1];
+        assert!(rt.unpack(&key, &u, &short, &mut out).is_err());
+        // short output slab
+        let mut short_out = vec![0.0f32; ne];
+        let bufs = vec![0.0f32; 2 * bl];
+        assert!(rt.unpack(&key, &u, &bufs, &mut short_out).is_err());
+        // unpack1: segment shorter than nb * seg_len
+        let k1 = ArtifactKey::new("unpack1", 2, [8, 8, 1], 2).with_nbr(0);
+        assert!(rt.unpack1(&k1, &u, &[0.0f32; 1], &mut out).is_err());
+        // well-formed lengths still succeed
+        assert!(rt.unpack(&key, &u, &bufs, &mut out).is_ok());
+    }
+
+    #[test]
     fn pack1_matches_full_pack_segment() {
-        let mut rt = runtime();
+        let rt = runtime();
         let shape = IndexShape::new(2, [8, 8, 1]);
         let key = ArtifactKey::new("pack", 2, [8, 8, 1], 1);
         let nelem = Runtime::block_elems(&key);
@@ -478,7 +599,7 @@ mod tests {
 
     #[test]
     fn fused_matches_unpack_stage_pack_dt() {
-        let mut rt = runtime();
+        let rt = runtime();
         use crate::util::rng::XorShift;
         let key = ArtifactKey::new("fused", 2, [8, 8, 1], 2);
         let k1 = ArtifactKey::new("x", 2, [8, 8, 1], 2);

@@ -29,6 +29,9 @@ fn amr_overrides() -> Vec<&'static str> {
 
 #[test]
 fn amr_run_refines_and_conserves() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
     World::launch(2, |rank, world| {
         let mut pin = ParameterInput::from_str(&amr_deck("blast")).unwrap();
         for ov in amr_overrides() {
@@ -66,6 +69,9 @@ fn amr_run_refines_and_conserves() {
 
 #[test]
 fn regrid_balances_blocks_across_ranks() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
     World::launch(4, |rank, world| {
         let mut pin = ParameterInput::from_str(&amr_deck("blast")).unwrap();
         for ov in amr_overrides() {

@@ -1,4 +1,8 @@
 //! Shared helpers for integration tests.
+//!
+//! Each integration-test crate includes this module; not every crate uses
+//! every helper.
+#![allow(dead_code)]
 
 use parthenon::comm::World;
 use parthenon::config::ParameterInput;
@@ -75,4 +79,29 @@ pub fn max_state_diff(a: &[(usize, Vec<f32>)], b: &[(usize, Vec<f32>)]) -> f32 {
 /// artifact interpreter (real AOT artifacts are used when present).
 pub fn artifacts_available() -> bool {
     parthenon::runtime::device_available()
+}
+
+/// Rank-thread budget for multi-rank tests: `PARTHENON_TEST_RANKS`
+/// (default 2, so a plain local `cargo test` keeps full coverage). CI
+/// splits the suite into a single-rank step (`PARTHENON_TEST_RANKS=1`,
+/// multi-rank tests skip) and a multi-rank step (`PARTHENON_TEST_RANKS=2`)
+/// so rank-dependent failures are attributable to the step that owns them.
+pub fn test_ranks() -> usize {
+    std::env::var("PARTHENON_TEST_RANKS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(2)
+}
+
+/// True when multi-rank tests should run (see [`test_ranks`]). Tests that
+/// spawn more than one rank-thread call this first and return early in
+/// the single-rank CI step.
+///
+/// IMPORTANT: when adding this guard to a test in a binary that doesn't
+/// already use it, also add that binary to the `--test ...` list of the
+/// "Test (multi-rank)" step in `.github/workflows/ci.yml` — otherwise the
+/// guarded test is skipped in the single-rank step and never runs in CI.
+pub fn multi_rank_enabled() -> bool {
+    test_ranks() >= 2
 }

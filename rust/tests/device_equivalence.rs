@@ -86,6 +86,9 @@ fn strategies_agree_with_each_other_3d() {
 
 #[test]
 fn host_vs_device_3d_multirank() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
     if !common::artifacts_available() {
         eprintln!("skipping: artifacts not built");
         return;

@@ -1,0 +1,200 @@
+//! Worker-parallel Device launches through the shared-state `Runtime`:
+//! the fused Device stage drives per-pack task lists on the stealing pool,
+//! so results must be BITWISE identical to the phased single-worker oracle
+//! for every worker count and steal policy; concurrent launches must
+//! compile each artifact exactly once; and the fused dt reduction (the
+//! regional cross-list min fold that replaced the post-cycle `local_dt`
+//! sweep) must reproduce the phased timestep bit-for-bit on both
+//! execution spaces.
+
+mod common;
+
+use parthenon::runtime::{default_artifact_dir, ArtifactKey, Runtime, ScalArgs};
+
+/// Run `deck` single-rank for `steps`; return (gid -> interior CONS, dt).
+fn run_sim(deck: &str, overrides: &[&str], steps: usize) -> (Vec<(usize, Vec<f32>)>, f64) {
+    let mut sim = common::single_rank_sim(deck, overrides);
+    for _ in 0..steps {
+        sim.step().unwrap();
+    }
+    sim.sync_device_to_blocks().unwrap();
+    (common::cons_by_gid(&sim), sim.dt)
+}
+
+#[test]
+fn device_fused_bitwise_identical_across_workers_and_scheds() {
+    if !common::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // 16 blocks, pack_size 4 -> 4 per-pack task lists to deal and steal.
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    let (base, base_dt) = run_sim(
+        &deck,
+        &[
+            "parthenon/exec/space=device",
+            "parthenon/exec/overlap=phased",
+            "parthenon/exec/sched=static",
+            "parthenon/exec/nworkers=1",
+            "parthenon/exec/pack_size=4",
+        ],
+        4,
+    );
+    for sched in ["static", "stealing"] {
+        for nw in [1usize, 2, 4, 8] {
+            let ov_sched = format!("parthenon/exec/sched={sched}");
+            let ov_nw = format!("parthenon/exec/nworkers={nw}");
+            let (got, got_dt) = run_sim(
+                &deck,
+                &[
+                    "parthenon/exec/space=device",
+                    "parthenon/exec/overlap=fused",
+                    &ov_sched,
+                    &ov_nw,
+                    "parthenon/exec/pack_size=4",
+                ],
+                4,
+            );
+            assert_eq!(
+                common::max_state_diff(&base, &got),
+                0.0,
+                "device fused sched={sched} nworkers={nw} must be bitwise \
+                 identical to the phased single-worker oracle"
+            );
+            assert_eq!(
+                got_dt.to_bits(),
+                base_dt.to_bits(),
+                "fused regional dt reduction (sched={sched} nworkers={nw}) \
+                 must reproduce the phased timestep bit-for-bit"
+            );
+        }
+    }
+}
+
+#[test]
+fn host_fused_dt_reduction_matches_phased_sweep() {
+    // Multilevel mesh: uneven per-block dts, flux correction live — the
+    // per-pack partial minima + regional fold must still agree with the
+    // phased path's whole-rank sweep bit-for-bit.
+    let deck = common::input_deck("blast", [16, 16, 1], [4, 4, 1], "");
+    let ml = [
+        "parthenon/mesh/refinement=static",
+        "parthenon/mesh/numlevel=2",
+        "parthenon/static_refinement0/level=1",
+        "parthenon/static_refinement0/x1min=0.3",
+        "parthenon/static_refinement0/x1max=0.7",
+        "parthenon/static_refinement0/x2min=0.3",
+        "parthenon/static_refinement0/x2max=0.7",
+        "parthenon/exec/pack_size=2",
+    ];
+    let mut base_ov: Vec<&str> = ml.to_vec();
+    base_ov.push("parthenon/exec/overlap=phased");
+    base_ov.push("parthenon/exec/nworkers=2");
+    let (base, base_dt) = run_sim(&deck, &base_ov, 3);
+    for nw in [1usize, 4] {
+        let ov_nw = format!("parthenon/exec/nworkers={nw}");
+        let mut got_ov: Vec<&str> = ml.to_vec();
+        got_ov.push("parthenon/exec/overlap=fused");
+        got_ov.push(&ov_nw);
+        let (got, got_dt) = run_sim(&deck, &got_ov, 3);
+        assert_eq!(common::max_state_diff(&base, &got), 0.0);
+        assert_eq!(
+            got_dt.to_bits(),
+            base_dt.to_bits(),
+            "host fused dt reduction (nworkers={nw}) must match the phased \
+             sweep bit-for-bit"
+        );
+    }
+}
+
+#[test]
+fn concurrent_launches_compile_each_artifact_exactly_once() {
+    // Many worker threads race cold keys on one shared Runtime: the
+    // RwLock'd compile-once map must create each executable exactly once
+    // (`num_compiled` fixed) while every launch is still counted.
+    let rt = Runtime::new(default_artifact_dir()).unwrap();
+    let kst = ArtifactKey::new("stage", 2, [8, 8, 1], 1);
+    let kfu = ArtifactKey::new("fused", 2, [8, 8, 1], 2);
+    let ne1 = Runtime::block_elems(&kst);
+    let bl = Runtime::buflen(&kst);
+    let ncell = ne1 / parthenon::NHYDRO;
+    let mut u1 = vec![0.0f32; ne1];
+    for c in 0..ncell {
+        u1[c] = 1.0;
+        u1[4 * ncell + c] = 2.5;
+    }
+    let mut u2 = vec![0.0f32; 2 * ne1];
+    u2[..ne1].copy_from_slice(&u1);
+    u2[ne1..].copy_from_slice(&u1);
+    let bufs_in = vec![1.0f32; 2 * bl];
+    let scal = ScalArgs {
+        g0: 0.0,
+        g1: 1.0,
+        beta: 1.0,
+        dt: 1e-3,
+        dx: [0.1; 3],
+        gamma: 1.4,
+    };
+    let nthreads = 8;
+    let per_thread = 8;
+    std::thread::scope(|s| {
+        for _ in 0..nthreads {
+            let (rt, kst, kfu) = (&rt, &kst, &kfu);
+            let (u1, u2, bufs_in) = (&u1, &u2, &bufs_in);
+            s.spawn(move || {
+                let mut out = vec![0.0f32; ne1];
+                let mut mine = u2.clone();
+                let mut bufs_out = vec![0.0f32; 2 * bl];
+                for _ in 0..per_thread {
+                    rt.stage(kst, u1, u1, scal, &mut out).unwrap();
+                    let u0 = mine.clone();
+                    rt.fused(kfu, &mut mine, &u0, bufs_in, scal, &mut bufs_out)
+                        .unwrap();
+                }
+            });
+        }
+    });
+    assert_eq!(
+        rt.num_compiled(),
+        2,
+        "each (kind, shape, pack-size) artifact compiles exactly once \
+         under concurrent launches"
+    );
+    assert_eq!(rt.launches(), (2 * nthreads * per_thread) as u64);
+}
+
+#[test]
+fn device_run_compiles_one_executable_per_variant() {
+    if !common::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // Worker-parallel fused stages over several cycles must not re-prepare
+    // executables: the compile count stays at the number of distinct
+    // (kind, pack-size) variants the plan actually uses.
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    let mut sim = common::single_rank_sim(
+        &deck,
+        &[
+            "parthenon/exec/space=device",
+            "parthenon/exec/overlap=fused",
+            "parthenon/exec/sched=stealing",
+            "parthenon/exec/nworkers=4",
+            "parthenon/exec/pack_size=4",
+        ],
+    );
+    for _ in 0..2 {
+        sim.step().unwrap();
+    }
+    let compiled = sim.device.as_ref().unwrap().rt.num_compiled();
+    for _ in 0..3 {
+        sim.step().unwrap();
+    }
+    let dev = sim.device.as_ref().unwrap();
+    assert_eq!(
+        dev.rt.num_compiled(),
+        compiled,
+        "steady-state cycles must reuse compiled executables"
+    );
+    assert!(dev.rt.launches() > 0);
+}

@@ -100,16 +100,25 @@ fn exchange_2d_1rank() {
 
 #[test]
 fn exchange_2d_3ranks() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
     run_case(2, 3);
 }
 
 #[test]
 fn exchange_3d_2ranks() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
     run_case(3, 2);
 }
 
 #[test]
 fn exchange_3d_4ranks() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
     run_case(3, 4);
 }
 

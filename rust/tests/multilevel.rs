@@ -53,6 +53,9 @@ fn smr_mesh_has_levels_and_nests() {
 
 #[test]
 fn constant_field_exact_across_levels() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
     World::launch(2, |rank, world| {
         let pin = ParameterInput::from_str(&smr_deck("uniform")).unwrap();
         let mut sim = HydroSim::new(pin, rank, world.clone()).unwrap();
@@ -146,6 +149,9 @@ fn parthenon_recv_slab(
 
 #[test]
 fn conservation_on_multilevel_mesh_with_flux_correction() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
     // blast crossing the refinement boundary: total mass and energy must be
     // conserved to f32 roundoff accumulation thanks to flux correction.
     World::launch(2, |rank, world| {
@@ -175,6 +181,9 @@ fn conservation_on_multilevel_mesh_with_flux_correction() {
 
 #[test]
 fn multilevel_blast_stays_finite_and_positive() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
     World::launch(2, |rank, world| {
         let pin = ParameterInput::from_str(&smr_deck("blast")).unwrap();
         let mut sim = HydroSim::new(pin, rank, world).unwrap();

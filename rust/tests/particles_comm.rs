@@ -39,6 +39,9 @@ fn total_particles(sim: &HydroSim) -> usize {
 
 #[test]
 fn transport_conserves_particles_across_ranks() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
     World::launch(4, |rank, world| {
         let pin = ParameterInput::from_str(&deck()).unwrap();
         let mut sim = HydroSim::new(pin, rank, world.clone()).unwrap();
@@ -82,6 +85,9 @@ fn transport_conserves_particles_across_ranks() {
 
 #[test]
 fn particle_ids_survive_migration_intact() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
     World::launch(2, |rank, world| {
         let pin = ParameterInput::from_str(&deck()).unwrap();
         let mut sim = HydroSim::new(pin, rank, world.clone()).unwrap();

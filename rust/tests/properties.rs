@@ -88,6 +88,9 @@ fn pack_planning_exactly_covers() {
 
 #[test]
 fn message_storm_no_loss_no_reorder() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
     use parthenon::comm::{Payload, World};
     check("simmpi storm", 5, |rng: &mut XorShift| {
         let nranks = 2 + rng.below(3);

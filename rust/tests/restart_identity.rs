@@ -50,6 +50,9 @@ fn restart_is_bitwise_identical() {
 
 #[test]
 fn restart_across_rank_counts() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
     let tmp = std::env::temp_dir().join("parthenon_restart_ranks.pbin");
     let tmp_s = tmp.to_str().unwrap().to_string();
 

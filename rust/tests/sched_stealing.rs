@@ -169,6 +169,9 @@ fn run_two_rank(deck: String, steps: usize, swap_at: Option<usize>) -> Vec<(usiz
 
 #[test]
 fn rebalance_midrun_is_bitwise_transparent() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
     let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
     let base = run_two_rank(deck.clone(), 6, None);
     let swapped = run_two_rank(deck, 6, Some(3));
