@@ -45,7 +45,7 @@ fn run_leg(name: &str, input: String, nranks: usize) {
                 sim.zc.zcps(),
                 ((after[0] - before[0]) / before[0]).abs(),
                 ((after[3] - before[3]) / before[3]).abs(),
-                sim.device.as_ref().map(|d| d.rt.launches).unwrap_or(0),
+                sim.device.as_ref().map(|d| d.rt.launches()).unwrap_or(0),
             );
         }
     });

@@ -54,8 +54,16 @@ radius = 0.1
 fn main() {
     let nranks = 2;
     let t0 = std::time::Instant::now();
-    parthenon::comm::World::launch(nranks, |rank, world| {
-        let pin = ParameterInput::from_str(INPUT).expect("parse input");
+    // CI smoke mode (PARTHENON_BENCH_QUICK=1): a handful of cycles, no
+    // snapshot/history output — enough to catch API rot and runtime panics.
+    let quick = parthenon::util::benchkit::quick_mode();
+    parthenon::comm::World::launch(nranks, move |rank, world| {
+        let mut pin = ParameterInput::from_str(INPUT).expect("parse input");
+        if quick {
+            pin.apply_override("parthenon/time/nlim=5").expect("override");
+            pin.apply_override("parthenon/output0/dt=-1.0").expect("override");
+            pin.apply_override("parthenon/history/dt=-1.0").expect("override");
+        }
         let mut sim = HydroSim::new(pin, rank, world).expect("construct");
         sim.execute().expect("run");
         if rank == 0 {
@@ -64,7 +72,7 @@ fn main() {
                 sim.cycle,
                 sim.time,
                 sim.zc.zcps(),
-                sim.device.as_ref().map(|d| d.rt.launches).unwrap_or(0),
+                sim.device.as_ref().map(|d| d.rt.launches()).unwrap_or(0),
             );
         }
     });

@@ -48,12 +48,15 @@ radius = 0.12
 
 fn main() {
     let t0 = std::time::Instant::now();
-    World::launch(4, |rank, world| {
+    // CI smoke mode (PARTHENON_BENCH_QUICK=1): a few cycles through the
+    // full SMR + flux-correction machinery instead of the whole run.
+    let ncycles: u64 = if parthenon::util::benchkit::quick_mode() { 5 } else { 60 };
+    World::launch(4, move |rank, world| {
         let pin = ParameterInput::from_str(INPUT).expect("parse");
         let mut sim = HydroSim::new(pin, rank, world.clone()).expect("construct");
         let coll = world.comm(rank, 0);
         let before = coll.allreduce_vec(&sim.history_sums(), ReduceOp::Sum);
-        while sim.time < 0.05 && sim.cycle < 60 {
+        while sim.time < 0.05 && sim.cycle < ncycles {
             sim.step().expect("step");
         }
         let after = coll.allreduce_vec(&sim.history_sums(), ReduceOp::Sum);

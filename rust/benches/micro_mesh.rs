@@ -1,13 +1,71 @@
 //! Micro-benchmarks of the mesh substrate: tree construction, neighbor
-//! resolution, Morton sort, regrid, and load-balance assignment — the
-//! "mesh management overhead" the paper attributes CPU overdecomposition
-//! costs to (Sec. 5.1/5.2).
+//! resolution, Morton sort, regrid, load-balance assignment, and the
+//! end-to-end churn-rebalance cost (full oracle vs. incremental delta
+//! migration) — the "mesh management overhead" the paper attributes CPU
+//! overdecomposition costs to (Sec. 5.1/5.2).
 
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use parthenon::balance;
+use parthenon::comm::World;
+use parthenon::config::ParameterInput;
+use parthenon::driver::{regrid, EvolutionDriver, HydroSim};
 use parthenon::mesh::{AmrFlag, BlockTree};
-use parthenon::util::benchkit::{quick_mode, run, write_results, Table};
+use parthenon::util::benchkit::{quick_mode, run, write_results, Sample, Table};
+
+/// End-to-end cost of a 2-rank churn rebalance (blocks shuttling between
+/// the ranks every call) under the given `parthenon/loadbalance mode`.
+/// Only the `regrid::rebalance` calls are timed — sim construction and the
+/// warm-up steps stay outside the samples — so the row isolates exactly
+/// the migration overhead the incremental path attacks. Work units =
+/// blocks moved per rep, giving perf_compare a moved-blocks/s throughput.
+fn bench_churn_rebalance(mode: &str, nx: usize, reps: usize, churns: usize) -> Sample {
+    let deck = format!(
+        "<parthenon/job>\nproblem = kh\nquiet = true\n\n\
+         <parthenon/mesh>\nnx1 = {nx}\nnx2 = {nx}\n\n\
+         <parthenon/meshblock>\nnx1 = 8\nnx2 = 8\n\n\
+         <parthenon/time>\ntlim = 100.0\nnlim = -1\n\n\
+         <parthenon/loadbalance>\nmode = {mode}\n\n\
+         <hydro>\ngamma = 1.4\ncfl = 0.3\n"
+    );
+    let secs: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+    let moved: Arc<Mutex<u64>> = Arc::new(Mutex::new(0));
+    let (s2, m2) = (secs.clone(), moved.clone());
+    World::launch(2, move |rank, world| {
+        let pin = ParameterInput::from_str(&deck).unwrap();
+        let mut sim = HydroSim::new(pin, rank, world).unwrap();
+        sim.step().unwrap(); // warm the caches and the cost EWMA
+        // shuttle the boundary between the ranks: alternate two cuts a
+        // few blocks apart so every churn migrates the same delta
+        let nblocks = sim.mesh.ranks.len();
+        let cut0 = sim.mesh.ranks.iter().filter(|&&r| r == 0).count();
+        let cut1 = cut0.saturating_sub(2).max(1);
+        for rep in 0..reps + 1 {
+            let t0 = std::time::Instant::now();
+            for churn in 0..churns {
+                let cut = if churn % 2 == 0 { cut1 } else { cut0 };
+                let new_ranks: Vec<usize> =
+                    (0..nblocks).map(|g| usize::from(g >= cut)).collect();
+                regrid::rebalance(&mut sim, new_ranks).unwrap();
+            }
+            if rank == 0 && rep > 0 {
+                s2.lock().unwrap().push(t0.elapsed().as_secs_f64());
+            }
+        }
+        if rank == 0 {
+            *m2.lock().unwrap() = sim.lb_stats.blocks_moved;
+        }
+    });
+    let secs = Arc::try_unwrap(secs).unwrap().into_inner().unwrap();
+    let total_moved = *moved.lock().unwrap() as f64;
+    Sample {
+        label: format!("rebalance/{mode}"),
+        secs,
+        // blocks moved per rep (the first, untimed rep is the warmup)
+        work: total_moved / (reps + 1) as f64,
+    }
+}
 
 fn main() {
     let quick = quick_mode();
@@ -88,6 +146,20 @@ fn main() {
         format!("{:.1}M blocks/s", s.throughput() / 1e6),
     ]);
     samples.push(s);
+
+    // churn rebalance: 2-rank sim, a fixed block delta shuttling between
+    // the ranks — full oracle vs. incremental delta migration. These rows
+    // feed the CI regrid perf lane (perf_compare --tol 0.2, baseline v4).
+    let (nx, reps, churns) = if quick { (32, 5, 4) } else { (64, 9, 8) };
+    for mode in ["full", "incremental"] {
+        let s = bench_churn_rebalance(mode, nx, reps, churns);
+        table.row(vec![
+            format!("churn rebalance ({mode}, {nx}x{nx}, {churns} churns)"),
+            format!("{:.2} ms", s.median_secs() * 1e3),
+            format!("{:.2}k moved blocks/s", s.throughput() / 1e3),
+        ]);
+        samples.push(s);
+    }
 
     println!();
     table.print();

@@ -87,16 +87,62 @@ pub fn derive_leaf_costs(
         .collect()
 }
 
-/// The migration plan between two assignments of the *same* block list:
-/// (gid, from_rank, to_rank) for every block that moves.
-pub fn migration_plan(old: &[usize], new: &[usize]) -> Vec<(usize, usize, usize)> {
-    debug_assert_eq!(old.len(), new.len());
-    old.iter()
-        .zip(new.iter())
-        .enumerate()
-        .filter(|(_, (a, b))| a != b)
-        .map(|(gid, (&a, &b))| (gid, a, b))
-        .collect()
+/// One block changing owner in a fixed-tree rebalance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockMove {
+    pub gid: usize,
+    pub from: usize,
+    pub to: usize,
+}
+
+/// The delta between two assignments of the *same* block list: exactly the
+/// blocks that change owner, in gid order. This is the unit the incremental
+/// rebalance operates on — everything NOT in the plan keeps its container,
+/// staging and routing untouched. Every rank derives the identical plan
+/// from the shared assignment tables (no communication).
+#[derive(Debug, Clone, Default)]
+pub struct MigrationPlan {
+    pub moves: Vec<BlockMove>,
+}
+
+impl MigrationPlan {
+    pub fn between(old: &[usize], new: &[usize]) -> MigrationPlan {
+        debug_assert_eq!(old.len(), new.len(), "same-tree assignment diff");
+        MigrationPlan {
+            moves: old
+                .iter()
+                .zip(new.iter())
+                .enumerate()
+                .filter(|(_, (a, b))| a != b)
+                .map(|(gid, (&from, &to))| BlockMove { gid, from, to })
+                .collect(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.moves.is_empty()
+    }
+
+    /// Global blocks changing owner.
+    pub fn len(&self) -> usize {
+        self.moves.len()
+    }
+
+    /// Moves leaving `rank` (this rank's point-to-point sends).
+    pub fn leaving(&self, rank: usize) -> impl Iterator<Item = &BlockMove> {
+        self.moves.iter().filter(move |m| m.from == rank)
+    }
+
+    /// Moves arriving at `rank` (this rank's point-to-point receives).
+    pub fn arriving(&self, rank: usize) -> impl Iterator<Item = &BlockMove> {
+        self.moves.iter().filter(move |m| m.to == rank)
+    }
+
+    /// Gids of every block changing owner (any rank) — the ghost-refresh
+    /// target set of the incremental rebalance.
+    pub fn moved_gids(&self) -> impl Iterator<Item = usize> + '_ {
+        self.moves.iter().map(|m| m.gid)
+    }
 }
 
 #[cfg(test)]
@@ -182,6 +228,30 @@ mod tests {
     fn migration_plan_diffs() {
         let old = vec![0, 0, 1, 1];
         let new = vec![0, 1, 1, 1];
-        assert_eq!(migration_plan(&old, &new), vec![(1, 0, 1)]);
+        assert_eq!(
+            MigrationPlan::between(&old, &new).moves,
+            vec![BlockMove { gid: 1, from: 0, to: 1 }]
+        );
+    }
+
+    #[test]
+    fn migration_plan_views() {
+        let old = vec![0, 0, 1, 1, 2, 2];
+        let new = vec![0, 1, 1, 2, 2, 0];
+        let plan = MigrationPlan::between(&old, &new);
+        assert_eq!(plan.len(), 3);
+        assert!(!plan.is_empty());
+        assert_eq!(
+            plan.moves,
+            vec![
+                BlockMove { gid: 1, from: 0, to: 1 },
+                BlockMove { gid: 3, from: 1, to: 2 },
+                BlockMove { gid: 5, from: 2, to: 0 },
+            ]
+        );
+        assert_eq!(plan.leaving(0).count(), 1);
+        assert_eq!(plan.arriving(0).map(|m| m.gid).collect::<Vec<_>>(), vec![5]);
+        assert_eq!(plan.moved_gids().collect::<Vec<_>>(), vec![1, 3, 5]);
+        assert!(MigrationPlan::between(&old, &old).is_empty());
     }
 }

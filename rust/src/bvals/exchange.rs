@@ -330,7 +330,24 @@ pub fn post_sends_blocks(
     comm: &Comm,
     var: &str,
 ) -> crate::error::Result<usize> {
+    post_sends_filtered(t, blocks, comm, var, None)
+}
+
+/// The ONE send path: posts the outbound segments of the given blocks,
+/// optionally restricted to segments whose DESTINATION block gid is in
+/// `targets`. Both the full exchange and the incremental rebalance's
+/// subset refresh go through this function, so a subset refresh is
+/// byte-identical (same tags, same payloads) to the slabs a full exchange
+/// would deliver — by construction, not by parallel maintenance.
+fn post_sends_filtered(
+    t: &ExchTopo,
+    blocks: &[MeshBlock],
+    comm: &Comm,
+    var: &str,
+    targets: Option<&std::collections::HashSet<usize>>,
+) -> crate::error::Result<usize> {
     let shape = t.shape;
+    let wanted = |gid: usize| targets.map_or(true, |s| s.contains(&gid));
     let mut nsent = 0usize;
     for b in blocks {
         let arr = b.data.get(var)?;
@@ -342,9 +359,12 @@ pub fn post_sends_blocks(
             match &nb.kind {
                 NeighborKind::Physical => {}
                 NeighborKind::SameLevel(nloc) => {
+                    let ngid = t.tree.gid_of(nloc).unwrap();
+                    if !wanted(ngid) {
+                        continue;
+                    }
                     let slab = bufspec::send_slab(nb.offset, &shape);
                     let payload = extract_box(data, &shape, nvar, &slab);
-                    let ngid = t.tree.gid_of(nloc).unwrap();
                     let slot = offset_index(t.dim, opp);
                     let tag = tags::bval_tag(
                         ngid,
@@ -356,10 +376,13 @@ pub fn post_sends_blocks(
                 NeighborKind::Coarser(cloc) => {
                     // restrict and send; tagged by the direction we sent
                     // through (= -our offset) + our child code
+                    let ngid = t.tree.gid_of(cloc).unwrap();
+                    if !wanted(ngid) {
+                        continue;
+                    }
                     let slab = fine_send_slab(nb.offset, &shape);
                     let mut payload = Vec::new();
                     prolong::restrict_slab(data, &shape, nvar, &slab, &mut payload);
-                    let ngid = t.tree.gid_of(cloc).unwrap();
                     let slot = offset_index(t.dim, opp);
                     let tag = tags::bval_tag(
                         ngid,
@@ -376,9 +399,12 @@ pub fn post_sends_blocks(
         if sent_to_finer {
             // prolongation boxes: one per (fine block, fine offset) pair
             for (floc, off, fslot) in pairs_toward_coarse(t, &b.loc) {
+                let ngid = t.tree.gid_of(&floc).unwrap();
+                if !wanted(ngid) {
+                    continue;
+                }
                 let (local, _clo, _dims) = coarse_prolong_box(off, &floc, &shape);
                 let payload = extract_box(data, &shape, nvar, &local);
-                let ngid = t.tree.gid_of(&floc).unwrap();
                 let tag = tags::bval_tag(
                     ngid,
                     CLASS_PROLONG | (fslot << 3) | child_code(&b.loc),
@@ -631,6 +657,71 @@ pub fn exchange_blocking(
     }
     apply_block_physical_bcs(mesh, var, vector_comps)?;
     Ok(())
+}
+
+/// Post every outbound segment of the given blocks whose DESTINATION block
+/// gid is in `targets` — the send half of the subset ghost refresh the
+/// incremental rebalance runs: only migrated blocks receive fresh ghosts,
+/// so every rank sends only the segments some migrated block needs. Shares
+/// [`post_sends_filtered`] with the full send path, so the subset refresh
+/// is bitwise identical to the slabs a full exchange would deliver.
+/// Returns the number of segments posted.
+pub fn post_sends_toward(
+    t: &ExchTopo,
+    blocks: &[MeshBlock],
+    comm: &Comm,
+    var: &str,
+    targets: &std::collections::HashSet<usize>,
+) -> crate::error::Result<usize> {
+    post_sends_filtered(t, blocks, comm, var, Some(targets))
+}
+
+/// Ghost refresh limited to a subset of blocks (by gid): every block in
+/// `targets` receives its FULL inbound segment set; every rank posts only
+/// the segments addressed at a target. `targets` must be identical on all
+/// ranks (the incremental rebalance derives it from the shared migration
+/// plan), or matched sends/receives would not pair up. Blocking, with the
+/// same stall watchdog as [`exchange_blocking`]; physical BCs are applied
+/// to the target blocks once their receives have landed. Returns the
+/// number of segments this rank sent.
+pub fn exchange_blocking_subset(
+    mesh: &mut Mesh,
+    comm: &Comm,
+    var: &str,
+    vector_comps: Option<[usize; 3]>,
+    targets: &std::collections::HashSet<usize>,
+) -> crate::error::Result<usize> {
+    let nsent = post_sends_toward(&ExchTopo::of(mesh), &mesh.blocks, comm, var, targets)?;
+    // register the full receive set of each LOCAL target block; indices in
+    // the merged state are mesh-global, so the normal poll applies
+    let mut state = ExchangeState { items: Vec::new(), done: Vec::new() };
+    {
+        let t = ExchTopo::of(mesh);
+        for (bi, b) in mesh.blocks.iter().enumerate() {
+            if !targets.contains(&b.gid) {
+                continue;
+            }
+            let s = post_receives_blocks(&t, &mesh.blocks[bi..bi + 1], bi);
+            state.items.extend(s.items);
+            state.done.extend(s.done);
+        }
+    }
+    let mut wait = ProgressWait::new(STALL_LIMIT);
+    let mut remaining = state.remaining();
+    while !poll_receives(mesh, comm, var, &mut state)? {
+        let now = state.remaining();
+        let progressed = now < remaining;
+        remaining = now;
+        if !wait.step(progressed) {
+            return Err(crate::error::Error::Comm(format!(
+                "subset exchange of {var:?} stalled ({} segments missing after {:?} idle)",
+                state.remaining(),
+                wait.idle_elapsed()
+            )));
+        }
+    }
+    apply_block_physical_bcs(mesh, var, vector_comps)?;
+    Ok(nsent)
 }
 
 /// Context threaded through the per-pack exchange task lists.

@@ -8,10 +8,11 @@ mod physical;
 mod prolong;
 
 pub use exchange::{
-    apply_block_physical_bcs, exchange_blocking, exchange_tasked,
-    exchange_tasked_parallel, poll_receives, poll_receives_blocks, post_receives,
-    post_receives_blocks, post_receives_range, post_sends, post_sends_blocks,
-    post_sends_range, ExchTopo, ExchangeState, PackExchange, PackStrategy,
+    apply_block_physical_bcs, exchange_blocking, exchange_blocking_subset,
+    exchange_tasked, exchange_tasked_parallel, poll_receives, poll_receives_blocks,
+    post_receives, post_receives_blocks, post_receives_range, post_sends,
+    post_sends_blocks, post_sends_range, post_sends_toward, ExchTopo, ExchangeState,
+    PackExchange, PackStrategy,
 };
 pub use physical::apply_physical_bcs;
 pub use prolong::{

@@ -307,6 +307,25 @@ impl Comm {
         )
     }
 
+    /// Allgather a list of u64 ids (e.g. block gids), returned per rank.
+    /// Used by the incremental rebalance to agree on the global set of
+    /// blocks whose boundary data needs refreshing — each rank contributes
+    /// its dirty-pack gids, every rank sees the union.
+    pub fn allgather_u64s(&self, vals: &[u64]) -> Vec<Vec<u64>> {
+        let mut bytes = Vec::with_capacity(vals.len() * 8);
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.allgather(bytes)
+            .into_iter()
+            .map(|blob| {
+                blob.chunks_exact(8)
+                    .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                    .collect()
+            })
+            .collect()
+    }
+
     /// Barrier.
     pub fn barrier(&self) {
         let _ = self.allreduce(0.0, ReduceOp::Sum);
@@ -447,6 +466,19 @@ mod tests {
             for (r, blob) in got.iter().enumerate() {
                 assert_eq!(blob, &vec![r as u8; r + 1]);
             }
+        });
+    }
+
+    #[test]
+    fn allgather_u64s_roundtrip() {
+        World::launch(3, |rank, world| {
+            let comm = world.comm(rank, 0);
+            let mine: Vec<u64> = (0..rank as u64).map(|i| 100 * rank as u64 + i).collect();
+            let got = comm.allgather_u64s(&mine);
+            assert_eq!(got.len(), 3);
+            assert_eq!(got[0], Vec::<u64>::new());
+            assert_eq!(got[1], vec![100]);
+            assert_eq!(got[2], vec![200, 201]);
         });
     }
 

@@ -52,13 +52,26 @@ use crate::util::backoff::{ProgressWait, STALL_LIMIT};
 use crate::util::stealing::StealPolicy;
 use crate::{Real, NHYDRO};
 
-/// Routing entry for one (block, neighbor slot).
+/// Routing entry for one (block, neighbor slot). Crate-visible (opaquely)
+/// so the incremental rebalance can carry the gid-keyed route map across
+/// the mesh update and hand it back for re-pointing.
 #[derive(Debug, Clone)]
-struct NbrEntry {
+pub(crate) struct NbrEntry {
+    /// Neighbor block gid — stable across a fixed-tree rebalance, so a
+    /// surviving block's entries only need their ranks re-pointed from the
+    /// new ownership table (tags are gid-derived and never change).
+    ngid: usize,
     dst_rank: usize,
     send_tag: u64,
     recv_src: usize,
     recv_tag: u64,
+}
+
+impl NbrEntry {
+    /// Neighbor block gid this entry routes to/from.
+    pub(crate) fn ngid(&self) -> usize {
+        self.ngid
+    }
 }
 
 /// Per-rank device state: runtime + routing; staging lives in [`MeshData`].
@@ -189,33 +202,48 @@ impl DeviceState {
         Ok(dev)
     }
 
+    /// Routing entries of ONE block (a tree walk — the expensive half of
+    /// route construction; the incremental rebalance pays it only for
+    /// arriving blocks).
+    fn block_routes(mesh: &Mesh, b: &crate::mesh::MeshBlock) -> Result<Vec<NbrEntry>> {
+        let opp = bufspec::opposite_index(mesh.cfg.dim);
+        let mut entries = Vec::new();
+        for nb in mesh.tree.find_neighbors(&b.loc) {
+            let NeighborKind::SameLevel(nloc) = &nb.kind else {
+                return Err(Error::Runtime("device mesh must be uniform".into()));
+            };
+            let ngid = mesh.tree.gid_of(nloc).unwrap();
+            let my_child = child_code_of(&b.loc);
+            let nbr_child = child_code_of(nloc);
+            entries.push(NbrEntry {
+                ngid,
+                dst_rank: mesh.rank_of(ngid),
+                send_tag: tags::bval_tag(ngid, (opp[nb.nbr_index] << 3) | my_child),
+                recv_src: mesh.rank_of(ngid),
+                recv_tag: tags::bval_tag(b.gid, (nb.nbr_index << 3) | nbr_child),
+            });
+        }
+        Ok(entries)
+    }
+
     /// Routing tables for the current (uniform) mesh — rebuilt after a
     /// load balance without tearing the runtime/staging down.
     fn build_routes(mesh: &Mesh) -> Result<Vec<Vec<NbrEntry>>> {
-        let opp = bufspec::opposite_index(mesh.cfg.dim);
-        let mut routes = Vec::with_capacity(mesh.blocks.len());
-        for b in &mesh.blocks {
-            let mut entries = Vec::new();
-            for nb in mesh.tree.find_neighbors(&b.loc) {
-                let NeighborKind::SameLevel(nloc) = &nb.kind else {
-                    return Err(Error::Runtime("device mesh must be uniform".into()));
-                };
-                let ngid = mesh.tree.gid_of(nloc).unwrap();
-                let my_child = child_code_of(&b.loc);
-                let nbr_child = child_code_of(nloc);
-                entries.push(NbrEntry {
-                    dst_rank: mesh.rank_of(ngid),
-                    send_tag: tags::bval_tag(
-                        ngid,
-                        (opp[nb.nbr_index] << 3) | my_child,
-                    ),
-                    recv_src: mesh.rank_of(ngid),
-                    recv_tag: tags::bval_tag(b.gid, (nb.nbr_index << 3) | nbr_child),
-                });
-            }
-            routes.push(entries);
-        }
-        Ok(routes)
+        mesh.blocks.iter().map(|b| Self::block_routes(mesh, b)).collect()
+    }
+
+    /// The current routing tables keyed by gid — captured BEFORE an
+    /// incremental rebalance rewrites the local block order, handed back
+    /// to [`DeviceState::after_rebalance_incremental`] for re-pointing.
+    pub(crate) fn routes_by_gid(
+        &self,
+        mesh: &Mesh,
+    ) -> std::collections::HashMap<usize, Vec<NbrEntry>> {
+        mesh.blocks
+            .iter()
+            .enumerate()
+            .map(|(bi, b)| (b.gid, self.routes[bi].clone()))
+            .collect()
     }
 
     /// Pack sizes the plan may draw from (artifact variants).
@@ -259,6 +287,136 @@ impl DeviceState {
         self.bootstrap(&mut sim.mesh_data, scal0, &dirty)
     }
 
+    /// The incremental counterpart of [`DeviceState::after_rebalance`]:
+    /// consumes the migration plan's products instead of rebuilding
+    /// wholesale. Surviving blocks' routing entries are re-pointed from
+    /// the new ownership table (gid-stable tags; no tree walk) and only
+    /// arriving blocks rebuild theirs; only the dirty packs are
+    /// re-gathered, re-packed and re-timed; and the `bufs_in` refresh is
+    /// limited to the dirty packs via the subset routing round (clean
+    /// packs' resident buffers already hold the latest segments). Returns
+    /// (blocks whose routes were rebuilt from the tree, segments resent).
+    pub(crate) fn after_rebalance_incremental(
+        &mut self,
+        sim: &mut super::HydroSim,
+        old_dts: &std::collections::HashMap<usize, Real>,
+        old_routes: std::collections::HashMap<usize, Vec<NbrEntry>>,
+    ) -> Result<(u64, u64)> {
+        let mut old_routes = old_routes;
+        let mut routes = Vec::with_capacity(sim.mesh.blocks.len());
+        let mut rebuilt = 0u64;
+        for b in &sim.mesh.blocks {
+            match old_routes.remove(&b.gid) {
+                Some(mut entries) => {
+                    for e in &mut entries {
+                        let r = sim.mesh.rank_of(e.ngid);
+                        e.dst_rank = r;
+                        e.recv_src = r;
+                    }
+                    routes.push(entries);
+                }
+                None => {
+                    routes.push(Self::block_routes(&sim.mesh, b)?);
+                    rebuilt += 1;
+                }
+            }
+        }
+        self.routes = routes;
+        self.last_dts = vec![0.0; sim.mesh.blocks.len()];
+        self.block_secs = vec![0.0; sim.mesh.blocks.len()];
+        self.fused_dt_min = None;
+        for (bi, b) in sim.mesh.blocks.iter().enumerate() {
+            if let Some(v) = old_dts.get(&b.gid) {
+                self.last_dts[bi] = *v;
+            }
+        }
+        let dirty = sim.mesh_data.dirty_packs();
+        sim.mesh_data.gather_dirty(&sim.mesh, CONS)?;
+        let scal0 =
+            self.scal(StageCoeffs { g0: 0.0, g1: 1.0, beta: 1.0 }, 0.0, &sim.mesh);
+        self.repack_packs(&mut sim.mesh_data, scal0, &dirty)?;
+        let nseg = self.refresh_boundary_subset(sim, &dirty)?;
+        Ok((rebuilt, nseg))
+    }
+
+    /// The subset routing round of an incremental rebalance. Collective:
+    /// every rank allgathers the gids of its dirty packs' blocks (their
+    /// `bufs_in` were re-allocated empty by the re-plan), then each rank
+    /// sends exactly the outbound segments addressed at a refreshing
+    /// block — resident `bufs_out` of clean packs still hold the latest
+    /// stage's segments, dirty packs were just re-packed — and polls only
+    /// its own dirty packs' receives. Returns segments sent.
+    fn refresh_boundary_subset(
+        &self,
+        sim: &mut super::HydroSim,
+        dirty: &[usize],
+    ) -> Result<u64> {
+        use std::collections::HashSet;
+        let mut mine = Vec::new();
+        for &pi in dirty {
+            let d = sim.mesh_data.packs()[pi];
+            for b in &sim.mesh.blocks[d.block_range()] {
+                mine.push(b.gid as u64);
+            }
+        }
+        let refresh: HashSet<usize> = sim
+            .world
+            .comm(sim.mesh.my_rank, 0)
+            .allgather_u64s(&mine)
+            .into_iter()
+            .flatten()
+            .map(|g| g as usize)
+            .collect();
+        if refresh.is_empty() {
+            return Ok(0);
+        }
+        let mut nsent = 0u64;
+        let (descs, staging) = sim.mesh_data.parts_mut();
+        for (d, p) in descs.iter().zip(staging.iter()) {
+            for bi in 0..d.nb {
+                let flat = d.first + bi;
+                let base = bi * self.buflen;
+                for (slot, e) in self.routes[flat].iter().enumerate() {
+                    if !refresh.contains(&e.ngid) {
+                        continue;
+                    }
+                    let seg = &p.bufs_out[base + self.seg_offs[slot]
+                        ..base + self.seg_offs[slot] + self.seg_lens[slot]];
+                    self.comm.isend(e.dst_rank, e.send_tag, Payload::F32(seg.to_vec()));
+                    nsent += 1;
+                }
+            }
+        }
+        let mut pending: Vec<(usize, Vec<(usize, usize)>)> = dirty
+            .iter()
+            .map(|&pi| (pi, self.pack_pending(&descs[pi])))
+            .collect();
+        let mut wait = ProgressWait::new(STALL_LIMIT);
+        loop {
+            let mut progressed = false;
+            let mut left = 0usize;
+            for (pi, pend) in pending.iter_mut() {
+                if pend.is_empty() {
+                    continue;
+                }
+                let before = pend.len();
+                self.poll_one(&descs[*pi], &mut staging[*pi], pend)?;
+                progressed |= pend.len() < before;
+                left += pend.len();
+            }
+            if left == 0 {
+                return Ok(nsent);
+            }
+            if !wait.step(progressed) {
+                return Err(Error::Comm(format!(
+                    "incremental boundary refresh stalled \
+                     ({left} segments missing after {:?} idle)",
+                    wait.idle_elapsed()
+                )));
+            }
+        }
+    }
+
     fn key(&self, kind: &str, nb: usize) -> ArtifactKey {
         let mut k = ArtifactKey::new(kind, self.shape.dim, self.shape_n(), nb);
         // pallas impl only exists for some variants; fall back to jnp
@@ -288,30 +446,37 @@ impl DeviceState {
     }
 
     /// Buffer fill + dt for the given packs (nb=1 pack/dt artifacts; not
-    /// timed), then one full boundary-routing round so every block's
-    /// bufs_in is consistent. All packs at init; only the dirty packs
-    /// after a load balance (resident staging keeps the rest).
-    fn bootstrap(&mut self, md: &mut MeshData, scal: ScalArgs, packs: &[usize]) -> Result<()> {
+    /// timed): recompute `bufs_out` and `last_dts` from the staged `u`.
+    /// [`DeviceState::bootstrap`] follows this with the whole-rank routing
+    /// round; the incremental rebalance with the dirty-pack subset refresh.
+    fn repack_packs(&mut self, md: &mut MeshData, scal: ScalArgs, packs: &[usize]) -> Result<()> {
         let kp = self.key("pack", 1);
         let kdt = self.key("dt", 1);
         let ne = self.block_elems;
         let bl = self.buflen;
-        {
-            let (descs, staging) = md.parts_mut();
-            for &pi in packs {
-                let d = &descs[pi];
-                let p = &mut staging[pi];
-                for bi in 0..d.nb {
-                    let u_slice = p.u[bi * ne..(bi + 1) * ne].to_vec();
-                    let mut seg = vec![0.0; bl];
-                    self.rt.pack(&kp, &u_slice, &mut seg)?;
-                    p.bufs_out[bi * bl..(bi + 1) * bl].copy_from_slice(&seg);
-                    let dts = self.rt.dt(&kdt, &u_slice, scal)?;
-                    self.last_dts[d.first + bi] = dts[0];
-                }
+        let (descs, staging) = md.parts_mut();
+        for &pi in packs {
+            let d = &descs[pi];
+            let p = &mut staging[pi];
+            for bi in 0..d.nb {
+                let u_slice = p.u[bi * ne..(bi + 1) * ne].to_vec();
+                let mut seg = vec![0.0; bl];
+                self.rt.pack(&kp, &u_slice, &mut seg)?;
+                p.bufs_out[bi * bl..(bi + 1) * bl].copy_from_slice(&seg);
+                let dts = self.rt.dt(&kdt, &u_slice, scal)?;
+                self.last_dts[d.first + bi] = dts[0];
             }
         }
         self.fused_dt_min = None;
+        Ok(())
+    }
+
+    /// Buffer fill + dt for the given packs, then one full boundary-routing
+    /// round so every block's bufs_in is consistent. All packs at init;
+    /// only the dirty packs after a full-mode load balance (resident
+    /// staging keeps the rest).
+    fn bootstrap(&mut self, md: &mut MeshData, scal: ScalArgs, packs: &[usize]) -> Result<()> {
+        self.repack_packs(md, scal, packs)?;
         self.route_and_receive(md)?;
         Ok(())
     }

@@ -103,6 +103,12 @@ pub struct HostExec {
     /// stages and drained by `HydroSim::update_block_costs`.
     block_secs: Vec<f64>,
     nworkers: usize,
+    /// Requested worker count (`parthenon/exec nworkers`, 0 = auto) —
+    /// kept so [`HostExec::resize`] re-resolves `nworkers` against a new
+    /// pack count exactly like a fresh build.
+    nworkers_req: usize,
+    /// Ranks sharing this machine's cores (auto worker sizing).
+    nranks: usize,
     policy: StealPolicy,
     overlap_stats: OverlapStats,
     /// Local raw CFL dt cached by the fused pipeline's regional reduction
@@ -137,10 +143,40 @@ impl HostExec {
             scratch: (0..nworkers).map(|_| Scratch::default()).collect(),
             block_secs: vec![0.0; nblocks],
             nworkers,
+            nworkers_req,
+            nranks: ranks_sharing,
             policy,
             overlap_stats: OverlapStats::default(),
             fused_dt: None,
         }
+    }
+
+    /// Resize the per-block work arrays in place after an incremental
+    /// rebalance: allocations for surviving blocks are reused (the arrays
+    /// are per-cycle scratch, so contents never carry over anyway), the
+    /// worker count is re-resolved against the new pack count exactly like
+    /// [`HostExec::new`] would, timing accumulators are zeroed and the
+    /// cached fused dt is dropped — leaving the executor in the same state
+    /// a fresh build produces, minus the allocations.
+    pub fn resize(&mut self, shape: &IndexShape, nblocks: usize, npacks: usize) {
+        let nelem = NHYDRO * shape.ncells_total();
+        let cap = npacks.max(1);
+        self.nworkers = if self.nworkers_req > 0 {
+            self.nworkers_req.min(cap)
+        } else {
+            crate::util::num_workers(cap, self.nranks)
+        };
+        self.flux.truncate(nblocks);
+        while self.flux.len() < nblocks {
+            self.flux.push(FluxArrays::new(shape));
+        }
+        self.u0.resize_with(nblocks, || vec![0.0; nelem]);
+        self.unew.resize_with(nblocks, || vec![0.0; nelem]);
+        self.scratch.resize_with(self.nworkers, Scratch::default);
+        self.block_secs.clear();
+        self.block_secs.resize(nblocks, 0.0);
+        self.overlap_stats = OverlapStats::default();
+        self.fused_dt = None;
     }
 
     pub fn nworkers(&self) -> usize {

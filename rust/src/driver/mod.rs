@@ -31,7 +31,7 @@ use crate::hydro::problems::{self, Problem};
 use crate::hydro::{HydroPackage, CONS};
 use crate::mesh::{LogicalLocation, Mesh, MeshBlock, MeshConfig, NeighborKind};
 use crate::mesh_data::MeshData;
-use crate::metrics::{Ewma, Timers, ZoneCycles};
+use crate::metrics::{Ewma, RebalanceStats, Timers, ZoneCycles};
 use crate::util::backoff::{ProgressWait, STALL_LIMIT};
 use crate::util::stealing::StealPolicy;
 use crate::vars::{resolve_packages, Package};
@@ -71,6 +71,34 @@ impl OverlapMode {
         match s {
             "phased" | "barrier" => Some(OverlapMode::Phased),
             "fused" | "overlap" => Some(OverlapMode::Fused),
+            _ => None,
+        }
+    }
+}
+
+/// How a fixed-tree rebalance migrates data (`parthenon/loadbalance mode`).
+///
+/// * `Incremental` (default) — compute the [`crate::balance::MigrationPlan`]
+///   delta, migrate ONLY the blocks that change owner, keep every other
+///   container (and resident device staging) in place, refresh ghosts /
+///   routing for exactly the affected blocks, and re-gather only the dirty
+///   packs.
+/// * `Full` — tear down every local container and re-fill from a stash /
+///   the migration payloads, then run a whole-mesh ghost exchange. Kept as
+///   the bitwise-identity oracle: both modes must produce identical state,
+///   dt bits and cost EWMAs (`rust/tests/rebalance_incremental.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RebalanceMode {
+    Full,
+    Incremental,
+}
+
+impl RebalanceMode {
+    /// Parse the `parthenon/loadbalance mode` input value.
+    pub fn parse(s: &str) -> Option<RebalanceMode> {
+        match s {
+            "full" | "rebuild" => Some(RebalanceMode::Full),
+            "incremental" | "delta" => Some(RebalanceMode::Incremental),
             _ => None,
         }
     }
@@ -166,6 +194,9 @@ pub struct SimParams {
     /// Cycles between cost-driven load-balance checks (0 = off; AMR runs
     /// rebalance inside regrid anyway).
     pub lb_interval: i64,
+    /// Fixed-tree migration strategy (`parthenon/loadbalance mode`,
+    /// default incremental; `full` is the bitwise-identity oracle).
+    pub lb_mode: RebalanceMode,
     pub impl_: String,
     pub output_dt: f64,
     pub history_dt: f64,
@@ -196,6 +227,9 @@ impl SimParams {
         let overlap_s = pin.str_or("parthenon/exec", "overlap", "fused");
         let overlap = OverlapMode::parse(&overlap_s)
             .ok_or_else(|| Error::config(format!("unknown overlap mode {overlap_s:?}")))?;
+        let lb_mode_s = pin.str_or("parthenon/loadbalance", "mode", "incremental");
+        let lb_mode = RebalanceMode::parse(&lb_mode_s)
+            .ok_or_else(|| Error::config(format!("unknown loadbalance mode {lb_mode_s:?}")))?;
         Ok(SimParams {
             problem,
             tlim: pin.real_or("parthenon/time", "tlim", 1.0),
@@ -207,6 +241,7 @@ impl SimParams {
             sched,
             overlap,
             lb_interval: pin.int_or("parthenon/loadbalance", "interval", 0),
+            lb_mode,
             impl_: pin.str_or("parthenon/exec", "impl", "jnp"),
             output_dt: pin.real_or("parthenon/output0", "dt", -1.0),
             history_dt: pin.real_or("parthenon/history", "dt", -1.0),
@@ -247,6 +282,10 @@ pub struct HydroSim {
     pub dt: f64,
     pub timers: Timers,
     pub zc: ZoneCycles,
+    /// Migration / re-gather accounting of the load balancer — tests and
+    /// the regrid bench lane assert the incremental path touches only the
+    /// delta (a no-op rebalance leaves every counter untouched).
+    pub lb_stats: RebalanceStats,
     output_idx: usize,
     next_output: f64,
     next_history: f64,
@@ -288,6 +327,7 @@ impl HydroSim {
             dt: 0.0,
             timers: Timers::default(),
             zc: ZoneCycles::default(),
+            lb_stats: RebalanceStats::default(),
             output_idx: 0,
             next_output: 0.0,
             next_history: 0.0,
@@ -417,6 +457,34 @@ impl HydroSim {
         };
     }
 
+    /// The incremental analog of [`HydroSim::rebuild_work_buffers`]: the
+    /// pack plan was already re-drawn (preserving resident staging) by the
+    /// caller, so only the host executor's per-block work arrays are
+    /// resized in place — allocations for blocks that stayed are reused,
+    /// and the worker count is re-resolved against the new pack count
+    /// exactly like a fresh build (so full and incremental rebalances
+    /// schedule identically). Same precondition as the full hook: on
+    /// Device the DeviceState must be taken out first.
+    pub(crate) fn resize_work_buffers(&mut self) {
+        debug_assert!(
+            self.device.is_none(),
+            "take the DeviceState out before resize_work_buffers; its \
+             routes/dts are refreshed by after_rebalance_incremental"
+        );
+        self.mesh_data.ensure_current(&self.mesh, None);
+        if self.host.is_none() {
+            // Device path (or first build): nothing to resize in place
+            self.rebuild_work_buffers();
+            return;
+        }
+        let shape = self.mesh.cfg.index_shape();
+        let (nblocks, npacks) = (self.mesh.blocks.len(), self.mesh_data.npacks());
+        self.host
+            .as_mut()
+            .expect("checked above")
+            .resize(&shape, nblocks, npacks);
+    }
+
     /// Fold the executor's measured per-block kernel seconds into the
     /// per-block cost EWMA ([`crate::mesh::MeshBlock::cost`]). Samples are
     /// normalized to the GLOBAL mean block seconds (sum-allreduced), never
@@ -452,6 +520,18 @@ impl HydroSim {
     pub fn fill_derived(&mut self) {
         for mb in &mut self.mesh.blocks {
             self.pkg.fill_derived(&mut mb.data, &mb.coords);
+        }
+    }
+
+    /// Recompute derived fields only for the given blocks (by gid) — the
+    /// incremental rebalance refreshes exactly the migrated blocks; every
+    /// other block's derived data is untouched and already consistent with
+    /// its (unchanged) conserved state.
+    pub(crate) fn fill_derived_for(&mut self, gids: &std::collections::HashSet<usize>) {
+        for mb in &mut self.mesh.blocks {
+            if gids.contains(&mb.gid) {
+                self.pkg.fill_derived(&mut mb.data, &mb.coords);
+            }
         }
     }
 

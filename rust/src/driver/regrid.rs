@@ -5,9 +5,14 @@
 //! refining on the receiving rank, to minimize transfer size).
 //!
 //! [`rebalance`] is the fixed-tree variant: same-tree re-assignment with
-//! point-to-point migration. On Device runs it preserves the persistent
-//! staging of every pack whose block set is unchanged (only migrated packs
-//! are scattered/re-gathered — see `MeshData::rebuild_preserving`).
+//! point-to-point migration, in one of two modes
+//! (`parthenon/loadbalance mode`): the default [`rebalance_incremental`]
+//! derives a [`balance::MigrationPlan`] delta and touches ONLY the blocks
+//! that change owner (containers stay in place, device staging stays
+//! resident, ghosts/routing/bufs_in refresh only for the affected blocks),
+//! while [`rebalance_full`] tears every local container down and is kept
+//! as the bitwise-identity oracle. Migration and re-gather volumes are
+//! recorded in `HydroSim::lb_stats` ([`crate::metrics::RebalanceStats`]).
 
 use std::collections::HashMap;
 
@@ -260,47 +265,58 @@ pub fn check_and_rebalance(sim: &mut HydroSim) -> Result<bool> {
 }
 
 /// Fixed-tree load balance: re-assign blocks to ranks and migrate their
-/// data point-to-point. The Device path keeps its `MeshData` staging
-/// resident: only packs whose block set changes are scattered (to make the
-/// leaving blocks' containers authoritative) and re-gathered afterwards;
-/// untouched packs keep their staging verbatim (pinned by the
-/// `gathered_packs` instrumentation in `rust/tests/mesh_data_packs.rs`).
+/// data point-to-point. Dispatches on `parthenon/loadbalance mode`:
+/// [`rebalance_incremental`] (default) migrates ONLY the
+/// [`balance::MigrationPlan`] delta; [`rebalance_full`] is the
+/// tear-down-everything oracle the incremental path must match bitwise
+/// (state, dt bits, cost EWMAs — pinned by
+/// `rust/tests/rebalance_incremental.rs`).
 ///
-/// The measured cost EWMA travels WITH each migrated block — appended to
-/// its point-to-point payload (two f32 bit-halves of the f64, exact) — so
-/// a migrated-in block continues from the sender's measured weight instead
-/// of restarting at the derived nominal value and forgetting the very
-/// imbalance that triggered the migration. Blocks that stay put restore
-/// their cost from a local stash (rebuild_local_blocks resets containers).
-/// No extra collective is needed (the old implementation re-allgathered
-/// every rank's costs here).
+/// In both modes the measured cost EWMA travels WITH each migrated block —
+/// appended to its point-to-point payload (two f32 bit-halves of the f64,
+/// exact) — so a migrated-in block continues from the sender's measured
+/// weight instead of restarting at the derived nominal value and
+/// forgetting the very imbalance that triggered the migration.
 pub fn rebalance(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Result<()> {
+    match sim.sp.lb_mode {
+        super::RebalanceMode::Full => rebalance_full(sim, new_ranks),
+        super::RebalanceMode::Incremental => rebalance_incremental(sim, new_ranks),
+    }
+}
+
+/// The full-rebuild oracle (`parthenon/loadbalance mode=full`): every local
+/// container is torn down and re-filled from a stash or the migration
+/// payloads, then a whole-mesh ghost exchange refreshes every boundary.
+/// The Device path still keeps its `MeshData` staging resident across the
+/// re-plan: only packs whose block set changes are re-gathered afterwards
+/// (pinned by the `gathered_packs` instrumentation in
+/// `rust/tests/mesh_data_packs.rs`).
+pub fn rebalance_full(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Result<()> {
     let me = sim.mesh.my_rank;
     let old_ranks = sim.mesh.ranks.clone();
     assert_eq!(new_ranks.len(), old_ranks.len(), "same-tree rebalance");
     if new_ranks == old_ranks {
         return Ok(());
     }
+    let plan = balance::MigrationPlan::between(&old_ranks, &new_ranks);
+    sim.lb_stats.rebalances += 1;
+    sim.lb_stats.full_rebuilds += 1;
+    sim.lb_stats.blocks_moved += plan.len() as u64;
+    sim.lb_stats.blocks_sent += plan.leaving(me).count() as u64;
+    sim.lb_stats.blocks_received += plan.arriving(me).count() as u64;
+    let gathered0 = sim.mesh_data.gathered_packs();
     let comm = sim.world.comm(me, tags::COMM_MIGRATE);
     let mut dev = sim.device.take();
 
-    // Device: containers of blocks that LEAVE this rank must be made
-    // authoritative before they are stashed/sent — scatter only the packs
-    // that hold a leaving block, not the whole rank.
+    // Device: every container this oracle is about to stash must be
+    // authoritative, and a migration can reshape pack boundaries so that a
+    // STAYING block lands in a dirty (re-gathered) pack — scatter the
+    // whole rank, not just the packs holding a leaving block. (Scattering
+    // only the leaving packs would re-gather stale containers into any
+    // reshaped pack; the incremental path scatters exactly the packs the
+    // plan delta marks as not surviving.)
     if dev.is_some() {
-        let leaving: Vec<usize> = sim
-            .mesh_data
-            .packs()
-            .iter()
-            .enumerate()
-            .filter(|(_, d)| {
-                sim.mesh.blocks[d.block_range()]
-                    .iter()
-                    .any(|b| new_ranks[b.gid] != me)
-            })
-            .map(|(pi, _)| pi)
-            .collect();
-        sim.mesh_data.scatter_packs(&mut sim.mesh, CONS, &leaving)?;
+        sim.mesh_data.scatter(&mut sim.mesh, CONS)?;
     }
 
     // Stash every local block's conserved state AND measured cost by gid
@@ -325,8 +341,10 @@ pub fn rebalance(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Result<()> {
     sim.mesh.ranks = new_ranks;
     sim.mesh.rebuild_local_blocks();
     let plan_sizes = dev.as_ref().map(|d| d.plan_sizes().to_vec());
-    sim.mesh_data
+    let preserved = sim
+        .mesh_data
         .rebuild_preserving(&sim.mesh, plan_sizes.as_deref());
+    sim.lb_stats.packs_preserved += preserved as u64;
     sim.rebuild_work_buffers();
 
     // Fill phase: local restores + receives for migrated-in blocks. The
@@ -371,6 +389,170 @@ pub fn rebalance(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Result<()> {
     if let Some(ref mut d) = dev {
         d.after_rebalance(sim, old_dts.as_ref().unwrap())?;
     }
+    sim.lb_stats.packs_regathered += sim.mesh_data.gathered_packs() - gathered0;
+    sim.device = dev;
+    Ok(())
+}
+
+/// The incremental rebalance (`parthenon/loadbalance mode=incremental`,
+/// the default): touch ONLY what the [`balance::MigrationPlan`] delta
+/// says moved.
+///
+/// * Leaving blocks are sent point-to-point straight from their
+///   containers (cost EWMA appended); nothing else is stashed or copied.
+/// * [`crate::mesh::Mesh::apply_assignment_incremental`] keeps every
+///   staying block's container (data + cost) in place — no teardown, no
+///   restore pass.
+/// * On Device, [`crate::mesh_data::MeshData::plan_delta`] predicts which
+///   packs' staging will not survive the re-plan; exactly those are
+///   scattered up front, `rebuild_preserving` keeps the rest resident,
+///   and `DeviceState::after_rebalance_incremental` re-points surviving
+///   routes by gid, re-gathers/re-packs only the dirty packs and refreshes
+///   `bufs_in` via the dirty-subset routing round.
+/// * Ghosts are refreshed ONLY for the moved blocks
+///   ([`bvals::exchange_blocking_subset`]); every other block's ghost data
+///   is already current from the last stage exchange — migration changes
+///   owners, never values.
+///
+/// Every step mirrors a full-rebuild step byte-for-byte (same payloads,
+/// same kernels on the same data), which is what makes `mode=full` a
+/// usable bitwise oracle.
+pub fn rebalance_incremental(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Result<()> {
+    use std::collections::HashSet;
+    let me = sim.mesh.my_rank;
+    let old_ranks = sim.mesh.ranks.clone();
+    assert_eq!(new_ranks.len(), old_ranks.len(), "same-tree rebalance");
+    let plan = balance::MigrationPlan::between(&old_ranks, &new_ranks);
+    if plan.is_empty() {
+        return Ok(());
+    }
+    sim.lb_stats.rebalances += 1;
+    sim.lb_stats.blocks_moved += plan.len() as u64;
+    let comm = sim.world.comm(me, tags::COMM_MIGRATE);
+    let mut dev = sim.device.take();
+
+    // The locations this rank owns AFTER the move (gid order) — the key
+    // for predicting which packs' staging survives the re-plan.
+    let new_locs: Vec<LogicalLocation> = sim
+        .mesh
+        .tree
+        .leaves()
+        .iter()
+        .enumerate()
+        .filter(|(gid, _)| new_ranks[*gid] == me)
+        .map(|(_, l)| *l)
+        .collect();
+
+    // Device: scatter exactly the packs whose staging will NOT survive —
+    // their blocks' containers must be authoritative before they are sent
+    // away or re-gathered into a reshaped pack. Capture the gid-keyed
+    // route map while the old block order still exists.
+    let mut old_routes = None;
+    if let Some(d) = dev.as_ref() {
+        let delta = sim.mesh_data.plan_delta(&new_locs, Some(d.plan_sizes()));
+        sim.mesh_data.scatter_packs(&mut sim.mesh, CONS, &delta.stale_old)?;
+        old_routes = Some(d.routes_by_gid(&sim.mesh));
+    }
+    let old_dts = dev.as_ref().map(|d| d.dts_by_gid(&sim.mesh));
+
+    // Send ONLY the leaving blocks, straight from their containers.
+    for b in &sim.mesh.blocks {
+        let dst = new_ranks[b.gid];
+        if dst != me {
+            let mut payload = b.data.get(CONS)?.as_slice().to_vec();
+            append_cost(&mut payload, b.cost);
+            comm.isend(dst, tags::migrate_tag(b.gid, 0), Payload::F32(payload));
+            sim.lb_stats.blocks_sent += 1;
+        }
+    }
+
+    // Apply the new ownership in place: staying blocks keep their
+    // containers and cost EWMA verbatim; arriving blocks get fresh
+    // containers filled from the payloads below.
+    let kept = sim.mesh.apply_assignment_incremental(new_ranks);
+    sim.lb_stats.blocks_kept += kept as u64;
+    let plan_sizes = dev.as_ref().map(|d| d.plan_sizes().to_vec());
+    let preserved = sim
+        .mesh_data
+        .rebuild_preserving(&sim.mesh, plan_sizes.as_deref());
+    sim.lb_stats.packs_preserved += preserved as u64;
+    sim.resize_work_buffers();
+
+    // Fill ONLY the arriving blocks (the cost EWMA rides the payload).
+    for bi in 0..sim.mesh.blocks.len() {
+        let gid = sim.mesh.blocks[bi].gid;
+        let src = old_ranks[gid];
+        if src == me {
+            continue;
+        }
+        let mut payload = comm.recv(src, tags::migrate_tag(gid, 0)).into_f32()?;
+        let cost = take_cost(&mut payload);
+        sim.mesh.blocks[bi]
+            .data
+            .get_mut(CONS)?
+            .as_mut_slice()
+            .copy_from_slice(&payload);
+        sim.mesh.blocks[bi].cost = cost;
+        sim.lb_stats.blocks_received += 1;
+    }
+
+    // Ghost refresh limited to the moved blocks: they receive their full
+    // inbound segment set; every rank sends only the segments a moved
+    // block needs. Staying blocks' ghosts are already current (the last
+    // stage exchange filled them from the very same neighbor data).
+    let moved: HashSet<usize> = plan.moved_gids().collect();
+    if dev.is_some() {
+        // container-side senders next to a moved block may sit in clean
+        // packs whose containers are stale — sync just those packs'
+        // boundary slabs from the resident staging. One linear pass:
+        // block -> pack from the contiguous plan, pack membership as flags.
+        let mut block_pack = vec![0usize; sim.mesh_data.nblocks()];
+        for d in sim.mesh_data.packs() {
+            for bi in d.block_range() {
+                block_pack[bi] = d.index;
+            }
+        }
+        let mut is_sender = vec![false; sim.mesh_data.npacks()];
+        if let Some(routes) = old_routes.as_ref() {
+            for (bi, b) in sim.mesh.blocks.iter().enumerate() {
+                let Some(entries) = routes.get(&b.gid) else { continue };
+                if entries.iter().any(|e| moved.contains(&e.ngid())) {
+                    is_sender[block_pack[bi]] = true;
+                }
+            }
+        }
+        let sender_packs: Vec<usize> = is_sender
+            .iter()
+            .enumerate()
+            .filter_map(|(pi, s)| s.then_some(pi))
+            .collect();
+        sim.mesh_data
+            .scatter_boundary_packs(&mut sim.mesh, CONS, &sender_packs)?;
+    }
+    let comm_cons = sim.world.comm(me, tags::COMM_BVALS_BASE);
+    let nseg = bvals::exchange_blocking_subset(
+        &mut sim.mesh,
+        &comm_cons,
+        CONS,
+        Some([native::IM1, native::IM2, native::IM3]),
+        &moved,
+    )?;
+    sim.lb_stats.bval_segments_resent += nseg as u64;
+    sim.fill_derived_for(&moved);
+
+    // Device bring-back: gid-keyed route re-pointing, dirty-pack-only
+    // re-gather/re-pack, and the subset bufs_in refresh.
+    let gathered0 = sim.mesh_data.gathered_packs();
+    if let Some(ref mut d) = dev {
+        let (rebuilt, resent) = d.after_rebalance_incremental(
+            sim,
+            old_dts.as_ref().unwrap(),
+            old_routes.take().unwrap(),
+        )?;
+        sim.lb_stats.routes_rebuilt += rebuilt;
+        sim.lb_stats.bval_segments_resent += resent;
+    }
+    sim.lb_stats.packs_regathered += sim.mesh_data.gathered_packs() - gathered0;
     sim.device = dev;
     Ok(())
 }

@@ -239,6 +239,50 @@ impl Mesh {
         }
     }
 
+    /// Apply a new rank assignment on the SAME tree incrementally: blocks
+    /// that stay on this rank keep their containers (data + cost EWMA)
+    /// verbatim, leaving blocks are dropped, and arriving blocks get
+    /// fresh containers for the caller to fill from the migration payload.
+    /// Particle swarms are cleared on staying blocks for parity with the
+    /// full-rebuild oracle, which drops every swarm (the migration payload
+    /// does not carry particles yet — swarm-carrying migration is a
+    /// ROADMAP item, and keeping only the staying blocks' particles would
+    /// be physically inconsistent anyway).
+    /// Bumps [`Mesh::version`] exactly like [`Mesh::rebuild_local_blocks`]
+    /// so stale pack caches are still impossible. Returns the number of
+    /// blocks whose containers survived in place.
+    pub fn apply_assignment_incremental(&mut self, new_ranks: Vec<usize>) -> usize {
+        assert_eq!(
+            new_ranks.len(),
+            self.tree.leaves().len(),
+            "incremental assignment requires an unchanged tree"
+        );
+        self.ranks = new_ranks;
+        self.version += 1;
+        let shape = self.cfg.index_shape();
+        let mut old: HashMap<usize, MeshBlock> = std::mem::take(&mut self.blocks)
+            .into_iter()
+            .map(|b| (b.gid, b))
+            .collect();
+        let mut blocks = Vec::new();
+        let mut kept = 0usize;
+        for (gid, loc) in self.tree.leaves().iter().enumerate() {
+            if self.ranks[gid] != self.my_rank {
+                continue;
+            }
+            blocks.push(match old.remove(&gid) {
+                Some(mut b) => {
+                    b.swarms.clear(); // oracle parity: no swarm survives
+                    kept += 1;
+                    b
+                }
+                None => self.make_block(gid, *loc, shape),
+            });
+        }
+        self.blocks = blocks;
+        kept
+    }
+
     pub fn make_block(&self, gid: usize, loc: LogicalLocation, shape: IndexShape) -> MeshBlock {
         let coords = Coords::from_location(
             &loc,
@@ -341,6 +385,30 @@ nx2 = 16
         for b in &m0.blocks {
             assert_eq!(m1.rank_of(b.gid), 0);
         }
+    }
+
+    #[test]
+    fn incremental_assignment_keeps_staying_blocks() {
+        let mut pin = pin_2d();
+        let cfg = MeshConfig::from_params(&mut pin).unwrap();
+        let mut m = Mesh::build(cfg, vec![], 0, 2); // 4 blocks: rank0 = {0, 1}
+        assert_eq!(m.ranks, vec![0, 0, 1, 1]);
+        let v0 = m.version;
+        for b in &mut m.blocks {
+            b.cost = 2.0 + b.gid as f64;
+        }
+        // gid 1 leaves, gid 2 arrives, gid 0 stays put
+        let kept = m.apply_assignment_incremental(vec![0, 1, 0, 1]);
+        assert_eq!(kept, 1);
+        assert!(m.version > v0, "version must bump (stale-pack safety)");
+        let gids: Vec<usize> = m.blocks.iter().map(|b| b.gid).collect();
+        assert_eq!(gids, vec![0, 2], "blocks stay in gid order");
+        assert_eq!(m.blocks[0].cost, 2.0, "staying block keeps its cost EWMA");
+        assert_eq!(
+            m.blocks[1].cost,
+            MeshBlock::DEFAULT_COST,
+            "arriving block starts fresh until the payload fills it"
+        );
     }
 
     #[test]

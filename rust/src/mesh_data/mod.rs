@@ -49,6 +49,24 @@ impl PackDesc {
     }
 }
 
+/// The predicted effect of a rebalance on the pack plan, computed by
+/// [`MeshData::plan_delta`] BEFORE the mesh is touched. The incremental
+/// rebalance uses it to scatter exactly the packs whose staging will not
+/// survive the re-plan (so their containers are authoritative before
+/// blocks migrate or staging is re-gathered) — and nothing else.
+#[derive(Debug, Clone, Default)]
+pub struct PlanDelta {
+    /// CURRENT clean pack indices whose staging will NOT be preserved by
+    /// [`MeshData::rebuild_preserving`] — the packs to scatter before the
+    /// rebuild. Dirty packs are excluded (their containers are already
+    /// authoritative), as is everything when no staging is resident.
+    pub stale_old: Vec<usize>,
+    /// New packs that will start dirty (each pays one re-gather).
+    pub dirty_new: usize,
+    /// New packs whose staging stays resident.
+    pub preserved_new: usize,
+}
+
 /// Per-pack staging storage for the device path (and any consumer that
 /// wants the packed flat layout). Allocated lazily by
 /// [`MeshData::ensure_staging`]; the host path never pays for it.
@@ -62,6 +80,27 @@ pub struct PackStaging {
     pub bufs_in: Vec<Real>,
     /// `[nb, BUFLEN]` outbound boundary buffers.
     pub bufs_out: Vec<Real>,
+}
+
+/// THE staging-survival matcher: for each new pack loc-set, the old CLEAN
+/// pack index whose staging survives into it (`None` otherwise). Both
+/// [`MeshData::plan_delta`] (prediction) and
+/// [`MeshData::rebuild_preserving`] (commit) go through this one function,
+/// so the prediction can never drift from what the rebuild actually does.
+fn match_survivors(
+    old_locs: &[Vec<LogicalLocation>],
+    old_dirty: &[bool],
+    new_sets: &[&[LogicalLocation]],
+) -> Vec<Option<usize>> {
+    let by_locs: HashMap<&[LogicalLocation], usize> = old_locs
+        .iter()
+        .enumerate()
+        .map(|(i, l)| (l.as_slice(), i))
+        .collect();
+    new_sets
+        .iter()
+        .map(|set| by_locs.get(*set).copied().filter(|&oi| !old_dirty[oi]))
+        .collect()
 }
 
 /// The cached pack partition of one rank's local blocks.
@@ -111,13 +150,21 @@ impl MeshData {
         md
     }
 
+    /// The pack-size menu a (re)build draws from: the device artifact
+    /// variants when given, any size up to `pack_size` otherwise. Shared
+    /// by [`MeshData::rebuild`] and [`MeshData::plan_delta`] so the delta
+    /// predicts exactly the plan a rebuild will draw.
+    fn size_menu(&self, avail: Option<&[usize]>) -> Vec<usize> {
+        match avail {
+            Some(a) if !a.is_empty() => a.to_vec(),
+            _ => (1..=self.pack_size).collect(),
+        }
+    }
+
     /// Recompute the plan for the mesh's current block set (drops staging;
     /// it is re-allocated on demand).
     pub fn rebuild(&mut self, mesh: &Mesh, avail: Option<&[usize]>) {
-        let sizes: Vec<usize> = match avail {
-            Some(a) if !a.is_empty() => a.to_vec(),
-            _ => (1..=self.pack_size).collect(),
-        };
+        let sizes = self.size_menu(avail);
         let plan = plan_packs(mesh.blocks.len(), &sizes, self.pack_size);
         self.descs.clear();
         let mut first = 0usize;
@@ -154,18 +201,14 @@ impl MeshData {
         if !was_staged {
             return 0;
         }
-        let by_locs: HashMap<&[LogicalLocation], usize> = old_locs
-            .iter()
-            .enumerate()
-            .map(|(i, l)| (l.as_slice(), i))
-            .collect();
+        let new_sets: Vec<&[LogicalLocation]> =
+            self.locs.iter().map(|l| l.as_slice()).collect();
+        let survivors = match_survivors(&old_locs, &old_dirty, &new_sets);
+        drop(new_sets);
         self.ensure_staging();
         let mut kept = 0usize;
-        for (pi, locs) in self.locs.iter().enumerate() {
-            let Some(&oi) = by_locs.get(locs.as_slice()) else { continue };
-            if old_dirty[oi] {
-                continue;
-            }
+        for (pi, oi) in survivors.into_iter().enumerate() {
+            let Some(oi) = oi else { continue };
             if let Some(s) = old_staging[oi].take() {
                 self.staging[pi] = s;
                 self.dirty[pi] = false;
@@ -173,6 +216,54 @@ impl MeshData {
             }
         }
         kept
+    }
+
+    /// Predict, WITHOUT touching anything, which packs a coming
+    /// [`MeshData::rebuild_preserving`] against `new_locs` (the locations
+    /// this rank will own, in gid order) would preserve, mirroring its
+    /// loc-set matching exactly: a new pack keeps resident staging iff its
+    /// location set equals a current CLEAN pack's. Everything else lands
+    /// in [`PlanDelta::stale_old`] / counts as dirty.
+    pub fn plan_delta(&self, new_locs: &[LogicalLocation], avail: Option<&[usize]>) -> PlanDelta {
+        let sizes = self.size_menu(avail);
+        let plan = plan_packs(new_locs.len(), &sizes, self.pack_size);
+        let mut new_sets: Vec<&[LogicalLocation]> = Vec::with_capacity(plan.len());
+        let mut first = 0usize;
+        for nb in plan {
+            new_sets.push(&new_locs[first..first + nb]);
+            first += nb;
+        }
+        debug_assert_eq!(first, new_locs.len());
+        if !self.staged {
+            // nothing resident: every new pack starts dirty, and there is
+            // no staging to scatter back
+            return PlanDelta {
+                stale_old: Vec::new(),
+                dirty_new: new_sets.len(),
+                preserved_new: 0,
+            };
+        }
+        let mut survives = vec![false; self.descs.len()];
+        let mut preserved_new = 0usize;
+        for oi in match_survivors(&self.locs, &self.dirty, &new_sets)
+            .into_iter()
+            .flatten()
+        {
+            survives[oi] = true;
+            preserved_new += 1;
+        }
+        PlanDelta {
+            // dirty old packs are excluded: their containers are already
+            // authoritative (that is what dirty MEANS), so there is no
+            // resident state to scatter back before it is dropped
+            stale_old: survives
+                .iter()
+                .enumerate()
+                .filter_map(|(i, s)| (!s && !self.dirty[i]).then_some(i))
+                .collect(),
+            dirty_new: new_sets.len() - preserved_new,
+            preserved_new,
+        }
     }
 
     /// Rebuild only if stale. Returns true when a rebuild happened.
@@ -441,6 +532,20 @@ impl MeshData {
     /// correct without paying the full interior copy. Dirty packs are
     /// skipped (their containers are already authoritative).
     pub fn scatter_boundary(&self, mesh: &mut Mesh, var: &str) -> Result<()> {
+        let all: Vec<usize> = (0..self.descs.len()).collect();
+        self.scatter_boundary_packs(mesh, var, &all)
+    }
+
+    /// [`MeshData::scatter_boundary`] restricted to the given packs — the
+    /// incremental-rebalance path syncs only the packs whose blocks border
+    /// a migrating block (the only containers the subset ghost refresh
+    /// reads). Dirty packs in the list are skipped, as in the full sweep.
+    pub fn scatter_boundary_packs(
+        &self,
+        mesh: &mut Mesh,
+        var: &str,
+        packs: &[usize],
+    ) -> Result<()> {
         self.validate(mesh)?;
         if !self.staged {
             return Err(Error::Mesh("MeshData scatter without staging".into()));
@@ -450,13 +555,9 @@ impl MeshData {
         let ne = self.block_elems;
         let n = shape.ncells_total();
         let (nt0, nt1) = (shape.nt(0), shape.nt(1));
-        for ((d, p), dirty) in self
-            .descs
-            .iter()
-            .zip(self.staging.iter())
-            .zip(self.dirty.iter())
-        {
-            if *dirty {
+        for &pi in packs {
+            let (d, p, dirty) = (&self.descs[pi], &self.staging[pi], self.dirty[pi]);
+            if dirty {
                 continue;
             }
             for bi in 0..d.nb {
@@ -496,6 +597,28 @@ mod tests {
         let mut pin = ParameterInput::from_str(&deck).unwrap();
         let cfg = MeshConfig::from_params(&mut pin).unwrap();
         Mesh::build(cfg, vec![], 0, 1)
+    }
+
+    /// Like [`mesh_2d`] but with a CONS field so gather/scatter work.
+    fn mesh_2d_cons(nblocks_side: usize) -> Mesh {
+        use crate::vars::{FieldDef, Metadata, MetadataFlag};
+        let nx = 8 * nblocks_side;
+        let deck = format!(
+            "<parthenon/mesh>\nnx1 = {nx}\nnx2 = {nx}\n\
+             <parthenon/meshblock>\nnx1 = 8\nnx2 = 8\n"
+        );
+        let mut pin = ParameterInput::from_str(&deck).unwrap();
+        let cfg = MeshConfig::from_params(&mut pin).unwrap();
+        let fields = vec![FieldDef {
+            name: crate::hydro::CONS.into(),
+            metadata: Metadata::new(&[
+                MetadataFlag::Cell,
+                MetadataFlag::Independent,
+                MetadataFlag::FillGhost,
+            ])
+            .with_shape(vec![NHYDRO]),
+        }];
+        Mesh::build(cfg, fields, 0, 1)
     }
 
     #[test]
@@ -591,6 +714,43 @@ mod tests {
         assert_eq!(ranges.len(), 2);
         let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
         assert_eq!(lens, vec![5, 4], "block-balanced, pack-aligned split");
+    }
+
+    #[test]
+    fn plan_delta_mirrors_rebuild_preserving() {
+        use crate::hydro::CONS;
+        let mut mesh = mesh_2d_cons(4); // 16 blocks
+        let mut md = MeshData::build(&mesh, 4, None); // packs of 4
+        let locs: Vec<LogicalLocation> = mesh.blocks.iter().map(|b| b.loc).collect();
+
+        // not staged: nothing to scatter, every new pack starts dirty
+        let d0 = md.plan_delta(&locs, None);
+        assert!(d0.stale_old.is_empty());
+        assert_eq!((d0.dirty_new, d0.preserved_new), (4, 0));
+
+        md.gather(&mesh, CONS).unwrap(); // stage + clean everything
+
+        // identical block set: everything survives
+        let d1 = md.plan_delta(&locs, None);
+        assert!(d1.stale_old.is_empty());
+        assert_eq!((d1.dirty_new, d1.preserved_new), (0, 4));
+
+        // tail block leaves the rank: only the tail pack dies
+        // (new plan for 15 blocks is [4, 4, 4, 3])
+        let d2 = md.plan_delta(&locs[..15], None);
+        assert_eq!(d2.stale_old, vec![3]);
+        assert_eq!((d2.dirty_new, d2.preserved_new), (1, 3));
+
+        // head block leaves: every pack boundary shifts, nothing survives
+        let d3 = md.plan_delta(&locs[1..], None);
+        assert_eq!(d3.stale_old, vec![0, 1, 2, 3]);
+        assert_eq!((d3.dirty_new, d3.preserved_new), (4, 0));
+
+        // prediction matches what rebuild_preserving actually does for the
+        // same-set case
+        mesh.rebuild_local_blocks();
+        let kept = md.rebuild_preserving(&mesh, None);
+        assert_eq!(kept, d1.preserved_new);
     }
 
     #[test]

@@ -59,6 +59,48 @@ pub fn normalize_mean_one(v: &mut [f64]) {
     }
 }
 
+/// Migration / re-gather accounting for the load balancer (paper Sec. 3.8
+/// overhead): every fixed-tree rebalance records how much actually moved,
+/// so tests and the regrid bench lane can assert the incremental path
+/// touches only the delta. A no-op rebalance (assignment unchanged) must
+/// leave every counter untouched.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RebalanceStats {
+    /// Rebalances that moved at least one block.
+    pub rebalances: u64,
+    /// Of those, how many took the full-rebuild oracle path
+    /// (`parthenon/loadbalance mode=full`).
+    pub full_rebuilds: u64,
+    /// Global blocks that changed owner (summed over rebalances).
+    pub blocks_moved: u64,
+    /// Local blocks sent to another rank.
+    pub blocks_sent: u64,
+    /// Local blocks received from another rank.
+    pub blocks_received: u64,
+    /// Local blocks whose containers survived IN PLACE (incremental path
+    /// only — the full oracle tears every container down).
+    pub blocks_kept: u64,
+    /// Device staging re-gathers paid (dirty packs after the re-plan).
+    pub packs_regathered: u64,
+    /// Device packs whose staging stayed resident across the re-plan.
+    pub packs_preserved: u64,
+    /// Device blocks whose boundary routing was rebuilt from the tree
+    /// (the rest only re-point ranks on gid-stable entries).
+    pub routes_rebuilt: u64,
+    /// Boundary segments resent to refresh ghosts / device `bufs_in`
+    /// during the rebalance (incremental path; the full oracle re-routes
+    /// everything through the blocking exchange instead).
+    pub bval_segments_resent: u64,
+}
+
+impl RebalanceStats {
+    /// True when no rebalance work has been recorded at all — what a
+    /// stable-tree, stable-assignment regrid check must leave behind.
+    pub fn is_untouched(&self) -> bool {
+        *self == RebalanceStats::default()
+    }
+}
+
 /// Throughput accounting over a measured window.
 #[derive(Debug, Clone, Default)]
 pub struct ZoneCycles {
@@ -124,6 +166,14 @@ mod tests {
         let mut z = vec![0.0, 0.0];
         normalize_mean_one(&mut z);
         assert_eq!(z, vec![0.0, 0.0], "degenerate input untouched");
+    }
+
+    #[test]
+    fn rebalance_stats_untouched() {
+        let mut s = RebalanceStats::default();
+        assert!(s.is_untouched());
+        s.blocks_moved += 1;
+        assert!(!s.is_untouched());
     }
 
     #[test]

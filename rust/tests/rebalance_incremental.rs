@@ -1,0 +1,345 @@
+//! Incremental delta-plan rebalance vs. the full-rebuild oracle
+//! (`parthenon/loadbalance mode=incremental|full`):
+//!
+//! * regrid-churn on a 2-rank multilevel host mesh must be bitwise
+//!   identical between the modes — state, dt bits AND cost EWMAs — across
+//!   `sched static/stealing × nworkers 1/4`;
+//! * the same identity on the 2-rank Device path, where the incremental
+//!   mode must also keep most staging resident (re-gather only the dirty
+//!   packs) and migrate only the delta blocks;
+//! * a no-op regrid/rebalance must leave every `lb_stats` counter at zero
+//!   and re-gather zero packs.
+
+mod common;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use parthenon::comm::World;
+use parthenon::config::ParameterInput;
+use parthenon::driver::{regrid, EvolutionDriver, HydroSim};
+use parthenon::metrics::RebalanceStats;
+
+/// Extra deck block putting one statically refined region in the domain,
+/// so the host runs multilevel (prolongation/restriction + flux
+/// correction cross the rebalance).
+const SMR: &str = "<parthenon/mesh>\nrefinement = static\n\n\
+                   <parthenon/static_refinement0>\nlevel = 1\n\
+                   x1min = 0.25\nx1max = 0.5\nx2min = 0.25\nx2max = 0.5\n";
+
+/// Deterministic churn assignment: move the head of rank 1's contiguous
+/// span to rank 0 and the tail of rank 0's span to rank 1 — blocks leave
+/// BOTH ranks, pack boundaries reshape on both, and the map is identical
+/// on every rank (derived from the shared tables).
+fn churn_assignment(ranks: &[usize]) -> Vec<usize> {
+    let mut out = ranks.to_vec();
+    let first1 = ranks.iter().position(|&r| r == 1).expect("rank 1 owns blocks");
+    assert!(first1 >= 1, "rank 0 must own a tail to trade");
+    out[first1] = 0; // head of rank 1 -> rank 0
+    out[first1 - 1] = 1; // tail of rank 0 -> rank 1
+    out
+}
+
+/// One 2-rank churn run: step, force a churn rebalance (with bit-exact
+/// sentinel costs planted first), step again, then a second rebalance
+/// back. Returns (gid -> interior CONS, dt bits, gid -> cost bits right
+/// after the first rebalance, per-rank final lb_stats).
+type ChurnResult = (
+    Vec<(usize, Vec<f32>)>,
+    u64,
+    Vec<(usize, u64)>,
+    Vec<RebalanceStats>,
+);
+
+fn run_churn(deck: String, overrides: Vec<String>, steps: usize) -> ChurnResult {
+    let state: Arc<Mutex<HashMap<usize, Vec<f32>>>> = Arc::new(Mutex::new(HashMap::new()));
+    let costs: Arc<Mutex<HashMap<usize, u64>>> = Arc::new(Mutex::new(HashMap::new()));
+    let dt_bits: Arc<Mutex<u64>> = Arc::new(Mutex::new(0));
+    let stats: Arc<Mutex<Vec<RebalanceStats>>> = Arc::new(Mutex::new(vec![
+        RebalanceStats::default(),
+        RebalanceStats::default(),
+    ]));
+    let (s2, c2, d2, st2) = (state.clone(), costs.clone(), dt_bits.clone(), stats.clone());
+    World::launch(2, move |rank, world| {
+        let mut pin = ParameterInput::from_str(&deck).unwrap();
+        for ov in &overrides {
+            pin.apply_override(ov).unwrap();
+        }
+        let mut sim = HydroSim::new(pin, rank, world).unwrap();
+        for _ in 0..steps {
+            sim.step().unwrap();
+        }
+        // sentinel costs no measurement could produce: survival across the
+        // migration must be bit-exact in BOTH modes
+        for b in &mut sim.mesh.blocks {
+            b.cost = 1.0 + b.gid as f64 * 0.0625;
+        }
+        let churned = churn_assignment(&sim.mesh.ranks);
+        regrid::rebalance(&mut sim, churned).unwrap();
+        {
+            let mut c = c2.lock().unwrap();
+            for b in &sim.mesh.blocks {
+                c.insert(b.gid, b.cost.to_bits());
+            }
+        }
+        for _ in 0..steps {
+            sim.step().unwrap();
+        }
+        // churn back the other way (head/tail swapped again)
+        let churned = churn_assignment(&sim.mesh.ranks);
+        regrid::rebalance(&mut sim, churned).unwrap();
+        for _ in 0..steps {
+            sim.step().unwrap();
+        }
+        sim.sync_device_to_blocks().unwrap();
+        if rank == 0 {
+            *d2.lock().unwrap() = sim.dt.to_bits();
+        }
+        st2.lock().unwrap()[rank] = sim.lb_stats.clone();
+        let mut s = s2.lock().unwrap();
+        for (gid, data) in common::cons_by_gid(&sim) {
+            s.insert(gid, data);
+        }
+    });
+    let mut out: Vec<(usize, Vec<f32>)> = Arc::try_unwrap(state)
+        .unwrap()
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .collect();
+    out.sort_by_key(|(gid, _)| *gid);
+    let mut cost_bits: Vec<(usize, u64)> = Arc::try_unwrap(costs)
+        .unwrap()
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .collect();
+    cost_bits.sort_by_key(|(gid, _)| *gid);
+    let dt = *dt_bits.lock().unwrap();
+    let st = Arc::try_unwrap(stats).unwrap().into_inner().unwrap();
+    (out, dt, cost_bits, st)
+}
+
+#[test]
+fn incremental_matches_full_bitwise_multilevel_host() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
+    let deck = common::input_deck("blast", [32, 32, 1], [8, 8, 1], SMR);
+    let reference = run_churn(
+        deck.clone(),
+        vec![
+            "parthenon/loadbalance/mode=full".into(),
+            "parthenon/exec/sched=static".into(),
+            "parthenon/exec/nworkers=1".into(),
+        ],
+        2,
+    );
+    for sched in ["static", "stealing"] {
+        for nw in [1usize, 4] {
+            for mode in ["full", "incremental"] {
+                if mode == "full" && sched == "static" && nw == 1 {
+                    continue; // that IS the reference
+                }
+                let got = run_churn(
+                    deck.clone(),
+                    vec![
+                        format!("parthenon/loadbalance/mode={mode}"),
+                        format!("parthenon/exec/sched={sched}"),
+                        format!("parthenon/exec/nworkers={nw}"),
+                    ],
+                    2,
+                );
+                let tag = format!("mode={mode} sched={sched} nworkers={nw}");
+                assert_eq!(
+                    common::max_state_diff(&reference.0, &got.0),
+                    0.0,
+                    "state must be bitwise identical ({tag})"
+                );
+                assert_eq!(reference.1, got.1, "dt bits must match ({tag})");
+                assert_eq!(
+                    reference.2, got.2,
+                    "cost EWMAs must survive migration bit-exactly ({tag})"
+                );
+            }
+        }
+    }
+    // the incremental runs must actually have kept containers in place
+    let incr = run_churn(
+        deck,
+        vec!["parthenon/loadbalance/mode=incremental".into()],
+        2,
+    );
+    for (rank, st) in incr.3.iter().enumerate() {
+        assert_eq!(st.rebalances, 2, "rank {rank}: two churn rebalances");
+        assert_eq!(st.full_rebuilds, 0, "rank {rank}: no full rebuilds");
+        assert_eq!(st.blocks_moved, 4, "rank {rank}: 2 blocks move per churn");
+        assert!(
+            st.blocks_kept > 0,
+            "rank {rank}: staying containers must survive in place"
+        );
+        assert_eq!(
+            st.blocks_sent + st.blocks_received,
+            4,
+            "rank {rank}: each churn trades one block each way (x2 churns)"
+        );
+    }
+}
+
+#[test]
+fn incremental_matches_full_bitwise_device() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
+    if !common::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    let dev_ovs = |mode: &str| {
+        vec![
+            "parthenon/exec/space=device".to_string(),
+            "parthenon/exec/strategy=perpack".to_string(),
+            "parthenon/exec/pack_size=4".to_string(),
+            format!("parthenon/loadbalance/mode={mode}"),
+        ]
+    };
+    let full = run_churn(deck.clone(), dev_ovs("full"), 2);
+    let incr = run_churn(deck, dev_ovs("incremental"), 2);
+    assert_eq!(
+        common::max_state_diff(&full.0, &incr.0),
+        0.0,
+        "device incremental rebalance must be bitwise identical to full"
+    );
+    assert_eq!(full.1, incr.1, "device dt bits must match");
+    assert_eq!(full.2, incr.2, "device cost EWMAs must match bit-exactly");
+    for (rank, st) in incr.3.iter().enumerate() {
+        assert!(
+            st.packs_preserved > 0,
+            "rank {rank}: some staging must stay resident across the churn"
+        );
+        assert!(
+            st.packs_regathered < 2 * 4,
+            "rank {rank}: re-gathers must stay well under packs x rebalances \
+             (got {})",
+            st.packs_regathered
+        );
+        assert!(
+            st.routes_rebuilt <= st.blocks_received + 2,
+            "rank {rank}: only arriving blocks walk the tree for routes"
+        );
+        assert!(st.bval_segments_resent > 0, "rank {rank}: subset refresh ran");
+    }
+}
+
+#[test]
+fn noop_rebalance_touches_nothing() {
+    // single-rank: every assignment is the identity, so both the interval
+    // check and an explicit rebalance must be no-ops with zero counters
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    let mut sim = common::single_rank_sim(&deck, &[]);
+    for _ in 0..2 {
+        sim.step().unwrap();
+    }
+    let gathered0 = sim.mesh_data.gathered_packs();
+    let moved = regrid::check_and_rebalance(&mut sim).unwrap();
+    assert!(!moved, "single-rank assignment can never change");
+    let same = sim.mesh.ranks.clone();
+    regrid::rebalance(&mut sim, same).unwrap();
+    assert!(
+        sim.lb_stats.is_untouched(),
+        "a no-op rebalance must migrate 0 blocks and touch no counter: {:?}",
+        sim.lb_stats
+    );
+    assert_eq!(
+        sim.mesh_data.gathered_packs(),
+        gathered0,
+        "a no-op rebalance must re-gather 0 packs"
+    );
+}
+
+#[test]
+fn noop_regrid_stable_tree_two_ranks() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
+    // 2-rank: equal sentinel costs on every block reproduce the seed
+    // assignment exactly, so check_and_rebalance finds nothing to move —
+    // and must leave every counter untouched on BOTH ranks.
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    World::launch(2, move |rank, world| {
+        let pin = ParameterInput::from_str(&deck).unwrap();
+        let mut sim = HydroSim::new(pin, rank, world).unwrap();
+        for _ in 0..2 {
+            sim.step().unwrap();
+        }
+        for b in &mut sim.mesh.blocks {
+            b.cost = 1.0;
+        }
+        let gathered0 = sim.mesh_data.gathered_packs();
+        let moved = regrid::check_and_rebalance(&mut sim).unwrap();
+        assert!(!moved, "rank {rank}: equal costs keep the seed assignment");
+        assert!(
+            sim.lb_stats.is_untouched(),
+            "rank {rank}: stable-tree regrid must migrate 0 blocks: {:?}",
+            sim.lb_stats
+        );
+        assert_eq!(
+            sim.mesh_data.gathered_packs(),
+            gathered0,
+            "rank {rank}: stable-tree regrid must re-gather 0 packs"
+        );
+    });
+}
+
+#[test]
+fn full_swap_still_works_incrementally() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
+    // Degenerate delta = everything: the incremental path must handle a
+    // complete ownership swap (no block survives in place on either rank).
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    let run = |swap: bool| {
+        let state: Arc<Mutex<HashMap<usize, Vec<f32>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let s2 = state.clone();
+        let deck = deck.clone();
+        World::launch(2, move |rank, world| {
+            let pin = ParameterInput::from_str(&deck).unwrap();
+            let mut sim = HydroSim::new(pin, rank, world).unwrap();
+            for _ in 0..3 {
+                sim.step().unwrap();
+            }
+            if swap {
+                let new_ranks: Vec<usize> =
+                    sim.mesh.ranks.iter().map(|r| 1 - *r).collect();
+                regrid::rebalance(&mut sim, new_ranks).unwrap();
+                assert_eq!(sim.lb_stats.blocks_kept, 0, "nothing stays in a swap");
+                assert_eq!(sim.lb_stats.blocks_moved, 16);
+            }
+            for _ in 0..3 {
+                sim.step().unwrap();
+            }
+            let mut s = s2.lock().unwrap();
+            for (gid, data) in common::cons_by_gid(&sim) {
+                s.insert(gid, data);
+            }
+        });
+        let mut out: Vec<(usize, Vec<f32>)> = Arc::try_unwrap(state)
+            .unwrap()
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .collect();
+        out.sort_by_key(|(gid, _)| *gid);
+        out
+    };
+    let base = run(false);
+    let swapped = run(true);
+    assert_eq!(
+        common::max_state_diff(&base, &swapped),
+        0.0,
+        "a full-swap incremental rebalance must be bitwise transparent"
+    );
+}
