@@ -4,7 +4,7 @@
 //! behind Fig 8's regimes.
 
 use parthenon::bvals::bufspec;
-use parthenon::comm::{Payload, ReduceOp, World};
+use parthenon::comm::{CollMode, Payload, ReduceOp, World};
 use parthenon::mesh::IndexShape;
 use parthenon::runtime::{default_artifact_dir, ArtifactKey, Runtime, ScalArgs};
 use parthenon::util::benchkit::{quick_mode, run, write_results, Table};
@@ -58,6 +58,30 @@ fn main() {
             format!("{:.0}/s", s.throughput()),
         ]);
         samples.push(s);
+    }
+
+    // -- collective algorithm sweep: flat (O(P) serialized) vs tree (O(log P)) --
+    {
+        let n = if quick { 50 } else { 200 };
+        for (mode, name) in [(CollMode::Flat, "flat"), (CollMode::Tree, "tree")] {
+            for p in [4usize, 16, 64] {
+                let label = format!("coll/{name}/r{p}");
+                let s = run(&label, n as f64, 2, 5, || {
+                    World::launch(p, move |rank, world| {
+                        let comm = world.comm(rank, 1).with_coll(mode);
+                        for _ in 0..n {
+                            let _ = comm.allreduce(rank as f64, ReduceOp::Min);
+                        }
+                    });
+                });
+                table.row(vec![
+                    format!("allreduce {name} ({p} ranks)"),
+                    format!("{:.2} us", s.median_secs() / n as f64 * 1e6),
+                    format!("{:.0}/s", s.throughput()),
+                ]);
+                samples.push(s);
+            }
+        }
     }
 
     // -- native pack/unpack rate ---------------------------------------------

@@ -1,0 +1,750 @@
+//! Nonblocking tree-structured collectives over the simmpi mailboxes.
+//!
+//! The paper's scaling rests on keeping communication off the critical
+//! path (Sec. 3.8): collectives must neither serialize all ranks through
+//! one lock nor barrier the task graph. This module implements
+//! `iallreduce` / `iallreduce_vec` / `iallreduce_u64` / `iallgather` /
+//! `ibarrier` as pollable [`CollHandle`] state machines built ONLY on the
+//! existing point-to-point mailboxes:
+//!
+//! * **Reductions and gathers** run a binomial tree: rank `r > 0` reduces
+//!   its subtree and sends one message to parent `r & (r-1)`; the root
+//!   folds in fixed child order (own value first, then children by
+//!   ascending round), then the result is broadcast down the same tree.
+//!   Per-rank cost is O(log P) message hops and NO global lock — the
+//!   flat generation-counted path ([`super::simmpi::Comm::allreduce`]
+//!   with `coll = flat`) serializes O(P) acquisitions of one mutex per
+//!   call. The fixed fold order makes `Sum` deterministic (the flat
+//!   oracle folds in nondeterministic arrival order); `Min`/`Max` on
+//!   f64 are order-insensitive, so tree ≡ flat bitwise always.
+//! * **Barrier** runs dissemination: round `k` sends to `(r + 2^k) % P`
+//!   and waits on `(r + P - 2^k) % P`, `ceil(log2 P)` rounds total — no
+//!   reduction payload rides along (the old barrier piggybacked on a
+//!   Sum allreduce).
+//!
+//! Collective messages reserve tag bit 47 ([`COLL_TAG_BIT`]) so they can
+//! never collide with user point-to-point tags on the same communicator
+//! (`bval_tag` would need a gid ≥ 2^36 to reach it), and carry a
+//! per-(rank, comm) sequence number so back-to-back collectives on one
+//! communicator stay separated without any synchronization. Every
+//! message carries a (kind, op, len) header; a receiver that finds a
+//! mismatched header panics with both ranks named instead of
+//! deadlocking — the tree-path half of the collective-mismatch guard.
+
+use super::simmpi::{Comm, Payload, ReduceOp};
+use crate::util::backoff::{ProgressWait, STALL_LIMIT};
+
+/// Which collective algorithm a [`Comm`]'s blocking calls use
+/// (`parthenon/comm coll`, default `tree`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollMode {
+    /// Bulk-synchronous generation-counted path — O(P) serialized lock
+    /// acquisitions; kept as the bitwise oracle.
+    Flat,
+    /// Tree-structured exchanges over the pt2pt mailboxes — O(log P)
+    /// hops per rank, no global lock (default).
+    Tree,
+}
+
+impl CollMode {
+    /// Parse the `parthenon/comm coll` input value.
+    pub fn parse(s: &str) -> Option<CollMode> {
+        match s {
+            "flat" | "sync" => Some(CollMode::Flat),
+            "tree" | "async" => Some(CollMode::Tree),
+            _ => None,
+        }
+    }
+}
+
+/// Reserved tag bit for collective traffic: user pt2pt tags stay below it
+/// by construction (see `comm::tags`), so tree collectives share every
+/// communicator with user messages without collision.
+pub(crate) const COLL_TAG_BIT: u64 = 1 << 47;
+/// Sequence bits in the tag (tag layout: bit 47 | seq << 8 | code).
+const SEQ_MASK: u64 = (1 << 39) - 1;
+/// Tag codes: 0 = reduce (child -> parent), 1 = broadcast (parent ->
+/// child), 2+k = dissemination-barrier round k.
+const CODE_REDUCE: u64 = 0;
+const CODE_BCAST: u64 = 1;
+const CODE_BARRIER0: u64 = 2;
+
+/// Collective kinds, shared by the tree headers and the flat path's
+/// mismatch guard.
+pub(crate) const KIND_REDUCE: u8 = 1;
+pub(crate) const KIND_GATHER: u8 = 2;
+pub(crate) const KIND_BARRIER: u8 = 3;
+pub(crate) const KIND_REDUCE_U64: u8 = 4;
+
+pub(crate) fn kind_name(kind: u8) -> &'static str {
+    match kind {
+        KIND_REDUCE => "allreduce",
+        KIND_GATHER => "allgather",
+        KIND_BARRIER => "barrier",
+        KIND_REDUCE_U64 => "allreduce_u64",
+        _ => "unknown-collective",
+    }
+}
+
+pub(crate) fn op_code(op: ReduceOp) -> u8 {
+    match op {
+        ReduceOp::Min => 0,
+        ReduceOp::Max => 1,
+        ReduceOp::Sum => 2,
+    }
+}
+
+/// ceil(log2(p)) for p >= 1 (0 for p == 1): the round count of both the
+/// binomial tree and the dissemination barrier.
+pub(crate) fn ceil_log2(p: usize) -> u32 {
+    if p <= 1 {
+        0
+    } else {
+        usize::BITS - (p - 1).leading_zeros()
+    }
+}
+
+/// Binomial-tree children of `rank` in a `size`-rank world, ascending.
+fn children(rank: usize, size: usize) -> Vec<usize> {
+    let limit = if rank == 0 { ceil_log2(size) } else { rank.trailing_zeros() };
+    (0..limit)
+        .map(|k| rank + (1usize << k))
+        .filter(|&c| c < size)
+        .collect()
+}
+
+/// Binomial-tree parent of `rank` (rank > 0): clear the lowest set bit.
+fn parent(rank: usize) -> usize {
+    rank & (rank - 1)
+}
+
+fn tag(seq: u64, code: u64) -> u64 {
+    COLL_TAG_BIT | ((seq & SEQ_MASK) << 8) | code
+}
+
+// -- wire format -------------------------------------------------------------
+//
+// Every collective message is Payload::Bytes with a 10-byte header
+// [kind u8][op u8][len u64 LE] followed by the body:
+//   KIND_REDUCE      body = len f64 (LE)           len = vector length
+//   KIND_REDUCE_U64  body = 1 u64 (LE)             len = 1
+//   KIND_GATHER      body = entries, each          len = entry count
+//                    [rank u32][blen u64][bytes]
+//   KIND_BARRIER     no body                       len = round
+
+fn encode_reduce(kind: u8, op: u8, acc_f64: &[f64], acc_u64: u64) -> Vec<u8> {
+    let len = if kind == KIND_REDUCE_U64 { 1 } else { acc_f64.len() };
+    let mut out = Vec::with_capacity(10 + 8 * len);
+    out.push(kind);
+    out.push(op);
+    out.extend_from_slice(&(len as u64).to_le_bytes());
+    if kind == KIND_REDUCE_U64 {
+        out.extend_from_slice(&acc_u64.to_le_bytes());
+    } else {
+        for v in acc_f64 {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+fn encode_gather(entries: &[(u32, Vec<u8>)]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.push(KIND_GATHER);
+    out.push(0);
+    out.extend_from_slice(&(entries.len() as u64).to_le_bytes());
+    for (r, b) in entries {
+        out.extend_from_slice(&r.to_le_bytes());
+        out.extend_from_slice(&(b.len() as u64).to_le_bytes());
+        out.extend_from_slice(b);
+    }
+    out
+}
+
+fn encode_barrier(round: u32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(10);
+    out.push(KIND_BARRIER);
+    out.push(0);
+    out.extend_from_slice(&(round as u64).to_le_bytes());
+    out
+}
+
+struct Header {
+    kind: u8,
+    op: u8,
+    len: u64,
+}
+
+fn decode_header(bytes: &[u8]) -> Header {
+    assert!(bytes.len() >= 10, "collective message shorter than its header");
+    Header {
+        kind: bytes[0],
+        op: bytes[1],
+        len: u64::from_le_bytes(bytes[2..10].try_into().unwrap()),
+    }
+}
+
+fn decode_gather(bytes: &[u8]) -> Vec<(u32, Vec<u8>)> {
+    let h = decode_header(bytes);
+    let mut entries = Vec::with_capacity(h.len as usize);
+    let mut at = 10usize;
+    for _ in 0..h.len {
+        let r = u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap());
+        let bl = u64::from_le_bytes(bytes[at + 4..at + 12].try_into().unwrap()) as usize;
+        entries.push((r, bytes[at + 12..at + 12 + bl].to_vec()));
+        at += 12 + bl;
+    }
+    entries
+}
+
+// -- handle ------------------------------------------------------------------
+
+/// Accumulating payload of one in-flight collective.
+enum CollData {
+    /// f64 reduction (scalar = len 1). Fold order is fixed: own value
+    /// first, then children by ascending round — so Sum is deterministic.
+    Reduce { op: ReduceOp, acc: Vec<f64> },
+    /// Exact integer sum (u64-in-f64 is exact only below 2^53; this is
+    /// exact by construction — the particle-count reduction).
+    ReduceU64 { acc: u64 },
+    /// Allgatherv: (rank, blob) entries, sorted by rank at completion.
+    Gather { entries: Vec<(u32, Vec<u8>)> },
+    Barrier,
+}
+
+impl CollData {
+    fn kind(&self) -> u8 {
+        match self {
+            CollData::Reduce { .. } => KIND_REDUCE,
+            CollData::ReduceU64 { .. } => KIND_REDUCE_U64,
+            CollData::Gather { .. } => KIND_GATHER,
+            CollData::Barrier => KIND_BARRIER,
+        }
+    }
+
+    fn op_code(&self) -> u8 {
+        match self {
+            CollData::Reduce { op, .. } => op_code(*op),
+            _ => 0,
+        }
+    }
+
+    fn len(&self) -> u64 {
+        match self {
+            CollData::Reduce { acc, .. } => acc.len() as u64,
+            CollData::ReduceU64 { .. } => 1,
+            // gather entry counts legitimately differ per subtree
+            CollData::Gather { entries } => entries.len() as u64,
+            CollData::Barrier => 0,
+        }
+    }
+}
+
+/// Where a handle is in its exchange.
+enum Phase {
+    /// Waiting on `children[next_child..]`, then sends to the parent.
+    Reduce { next_child: usize },
+    /// Sent to the parent; waiting for the broadcast back down.
+    AwaitBcast,
+    /// Dissemination barrier at `round` (`sent` = this round's message
+    /// is on the wire).
+    Dissem { round: u32, sent: bool },
+    Done,
+}
+
+/// A pollable in-flight collective (MPI_Iallreduce analog): drive it with
+/// [`CollHandle::test`] from any task/poll loop, or block on
+/// [`CollHandle::wait`]. Created by [`Comm::iallreduce`] and friends; the
+/// contribution message toward the parent is posted as early as possible
+/// (leaf ranks send at creation), so the exchange makes progress while
+/// the caller computes.
+pub struct CollHandle {
+    comm: Comm,
+    seq: u64,
+    children: Vec<usize>,
+    data: CollData,
+    phase: Phase,
+}
+
+impl CollHandle {
+    fn post(comm: &Comm, data: CollData) -> CollHandle {
+        let (rank, size) = (comm.rank(), comm.size());
+        let seq = comm.next_coll_seq();
+        let phase = match data {
+            _ if size == 1 => Phase::Done,
+            CollData::Barrier => Phase::Dissem { round: 0, sent: false },
+            _ => Phase::Reduce { next_child: 0 },
+        };
+        let mut h = CollHandle {
+            comm: comm.clone(),
+            seq,
+            children: children(rank, size),
+            data,
+            phase,
+        };
+        if size == 1 {
+            h.finalize();
+        } else {
+            // push the contribution toward the parent (or the round-0
+            // barrier message) onto the wire immediately
+            h.advance();
+        }
+        h
+    }
+
+    /// Sort gather entries into rank order once the exchange completes.
+    fn finalize(&mut self) {
+        if let CollData::Gather { entries } = &mut self.data {
+            entries.sort_by_key(|(r, _)| *r);
+        }
+        self.phase = Phase::Done;
+    }
+
+    fn expect_bytes(&self, src: usize, p: Payload) -> Vec<u8> {
+        match p {
+            Payload::Bytes(b) => b,
+            _ => {
+                self.comm.abort_collectives();
+                panic!(
+                    "collective mismatch on rank {}: non-collective payload from rank \
+                     {src} on a reserved collective tag",
+                    self.comm.rank()
+                )
+            }
+        }
+    }
+
+    /// Validate a reduce/bcast header against this rank's entry; panic
+    /// with both ranks named on mismatch (fail fast instead of folding
+    /// garbage or deadlocking).
+    fn check_header(&self, src: usize, bytes: &[u8]) -> Header {
+        let h = decode_header(bytes);
+        let (kind, op, len) = (self.data.kind(), self.data.op_code(), self.data.len());
+        if h.kind != kind || (kind == KIND_REDUCE && (h.op != op || h.len != len)) {
+            // poison the world's collectives so peers waiting on their
+            // own handles fail fast instead of spinning out the stall
+            // limit
+            self.comm.abort_collectives();
+            panic!(
+                "collective mismatch: rank {} entered {}(op={}, len={}) but rank {src} \
+                 sent {}(op={}, len={})",
+                self.comm.rank(),
+                kind_name(kind),
+                op,
+                len,
+                kind_name(h.kind),
+                h.op,
+                h.len
+            );
+        }
+        h
+    }
+
+    /// Fold one child's contribution into the accumulator.
+    fn fold(&mut self, src: usize, bytes: Vec<u8>) {
+        self.check_header(src, &bytes);
+        match &mut self.data {
+            CollData::Reduce { op, acc } => {
+                for (i, a) in acc.iter_mut().enumerate() {
+                    let at = 10 + 8 * i;
+                    let v = f64::from_le_bytes(bytes[at..at + 8].try_into().unwrap());
+                    *a = op.apply(*a, v);
+                }
+            }
+            CollData::ReduceU64 { acc } => {
+                *acc = acc
+                    .checked_add(u64::from_le_bytes(bytes[10..18].try_into().unwrap()))
+                    .expect("u64 allreduce overflow");
+            }
+            CollData::Gather { entries } => {
+                entries.extend(decode_gather(&bytes));
+            }
+            CollData::Barrier => unreachable!("barrier runs dissemination"),
+        }
+    }
+
+    fn encoded(&self) -> Vec<u8> {
+        match &self.data {
+            CollData::Reduce { op, acc } => {
+                encode_reduce(KIND_REDUCE, op_code(*op), acc, 0)
+            }
+            CollData::ReduceU64 { acc } => encode_reduce(KIND_REDUCE_U64, 0, &[], *acc),
+            CollData::Gather { entries } => encode_gather(entries),
+            CollData::Barrier => unreachable!("barrier runs dissemination"),
+        }
+    }
+
+    /// Replace the accumulator with the broadcast result.
+    fn adopt(&mut self, src: usize, bytes: &[u8]) {
+        self.check_header(src, bytes);
+        match &mut self.data {
+            CollData::Reduce { acc, .. } => {
+                for (i, a) in acc.iter_mut().enumerate() {
+                    let at = 10 + 8 * i;
+                    *a = f64::from_le_bytes(bytes[at..at + 8].try_into().unwrap());
+                }
+            }
+            CollData::ReduceU64 { acc } => {
+                *acc = u64::from_le_bytes(bytes[10..18].try_into().unwrap());
+            }
+            CollData::Gather { entries } => *entries = decode_gather(bytes),
+            CollData::Barrier => unreachable!("barrier runs dissemination"),
+        }
+    }
+
+    /// Drive the state machine as far as it goes without blocking.
+    /// Returns true if any state advanced (progress, for backoff resets).
+    fn advance(&mut self) -> bool {
+        let rank = self.comm.rank();
+        let size = self.comm.size();
+        let mut progressed = false;
+        loop {
+            match self.phase {
+                Phase::Reduce { next_child } => {
+                    let mut next = next_child;
+                    // poll children in fixed ascending order: the fold
+                    // order (and thus Sum) is deterministic even when a
+                    // later child's message arrives first
+                    while next < self.children.len() {
+                        let src = self.children[next];
+                        match self.comm.try_recv(src, tag(self.seq, CODE_REDUCE)) {
+                            Some(p) => {
+                                let b = self.expect_bytes(src, p);
+                                self.fold(src, b);
+                                next += 1;
+                                progressed = true;
+                            }
+                            None => break,
+                        }
+                    }
+                    if next < self.children.len() {
+                        self.phase = Phase::Reduce { next_child: next };
+                        return progressed;
+                    }
+                    // subtree complete
+                    if rank == 0 {
+                        let msg = self.encoded();
+                        for &c in self.children.iter().rev() {
+                            self.comm.isend(
+                                c,
+                                tag(self.seq, CODE_BCAST),
+                                Payload::Bytes(msg.clone()),
+                            );
+                        }
+                        self.finalize();
+                        return true;
+                    }
+                    self.comm.isend(
+                        parent(rank),
+                        tag(self.seq, CODE_REDUCE),
+                        Payload::Bytes(self.encoded()),
+                    );
+                    self.phase = Phase::AwaitBcast;
+                    progressed = true;
+                }
+                Phase::AwaitBcast => {
+                    let src = parent(rank);
+                    match self.comm.try_recv(src, tag(self.seq, CODE_BCAST)) {
+                        Some(p) => {
+                            let bytes = self.expect_bytes(src, p);
+                            self.adopt(src, &bytes);
+                            for &c in self.children.iter().rev() {
+                                self.comm.isend(
+                                    c,
+                                    tag(self.seq, CODE_BCAST),
+                                    Payload::Bytes(bytes.clone()),
+                                );
+                            }
+                            self.finalize();
+                            return true;
+                        }
+                        None => return progressed,
+                    }
+                }
+                Phase::Dissem { round, sent } => {
+                    let nrounds = ceil_log2(size);
+                    if round >= nrounds {
+                        self.phase = Phase::Done;
+                        return true;
+                    }
+                    let stride = 1usize << round;
+                    if !sent {
+                        let dst = (rank + stride) % size;
+                        self.comm.isend(
+                            dst,
+                            tag(self.seq, CODE_BARRIER0 + round as u64),
+                            Payload::Bytes(encode_barrier(round)),
+                        );
+                        self.phase = Phase::Dissem { round, sent: true };
+                        progressed = true;
+                    }
+                    let src = (rank + size - stride) % size;
+                    match self.comm.try_recv(src, tag(self.seq, CODE_BARRIER0 + round as u64))
+                    {
+                        Some(p) => {
+                            let b = self.expect_bytes(src, p);
+                            self.check_header(src, &b);
+                            self.phase = Phase::Dissem { round: round + 1, sent: false };
+                            progressed = true;
+                        }
+                        None => return progressed,
+                    }
+                }
+                Phase::Done => return progressed,
+            }
+        }
+    }
+
+    /// Poll once (MPI_Test): true when the collective has completed.
+    pub fn test(&mut self) -> bool {
+        if !matches!(self.phase, Phase::Done) {
+            self.comm.check_coll_abort();
+            self.advance();
+        }
+        matches!(self.phase, Phase::Done)
+    }
+
+    /// True without polling (no mailbox access).
+    pub fn is_done(&self) -> bool {
+        matches!(self.phase, Phase::Done)
+    }
+
+    /// Block (bounded spin-then-backoff) until the collective completes.
+    /// Panics with a rank-annotated message on a stall — a stalled
+    /// collective means a peer never entered it.
+    pub fn wait(&mut self) {
+        let mut pw = ProgressWait::new(STALL_LIMIT);
+        loop {
+            let progressed = self.advance();
+            if matches!(self.phase, Phase::Done) {
+                return;
+            }
+            self.comm.check_coll_abort();
+            if !pw.step(progressed) {
+                panic!(
+                    "tree {} stalled on rank {} ({:?} with no progress) — did every \
+                     rank enter the same collective?",
+                    kind_name(self.data.kind()),
+                    self.comm.rank(),
+                    pw.idle_elapsed()
+                );
+            }
+        }
+    }
+
+    /// Completed scalar allreduce result.
+    pub fn into_f64(mut self) -> f64 {
+        self.wait();
+        match self.data {
+            CollData::Reduce { ref acc, .. } if acc.len() == 1 => acc[0],
+            _ => panic!("collective handle is not a scalar allreduce"),
+        }
+    }
+
+    /// Completed vector allreduce result.
+    pub fn into_vec(mut self) -> Vec<f64> {
+        self.wait();
+        match self.data {
+            CollData::Reduce { acc, .. } => acc,
+            _ => panic!("collective handle is not an allreduce_vec"),
+        }
+    }
+
+    /// Completed exact integer sum.
+    pub fn into_u64(mut self) -> u64 {
+        self.wait();
+        match self.data {
+            CollData::ReduceU64 { acc } => acc,
+            _ => panic!("collective handle is not an allreduce_u64"),
+        }
+    }
+
+    /// Completed allgather result, one blob per rank in rank order.
+    pub fn into_gathered(mut self) -> Vec<Vec<u8>> {
+        self.wait();
+        match self.data {
+            CollData::Gather { entries } => entries.into_iter().map(|(_, b)| b).collect(),
+            _ => panic!("collective handle is not an allgather"),
+        }
+    }
+}
+
+impl Comm {
+    /// Nonblocking tree allreduce of a scalar (MPI_Iallreduce): returns a
+    /// pollable handle; drain with [`CollHandle::into_f64`].
+    pub fn iallreduce(&self, value: f64, op: ReduceOp) -> CollHandle {
+        CollHandle::post(self, CollData::Reduce { op, acc: vec![value] })
+    }
+
+    /// Nonblocking tree allreduce of a vector (element-wise; all ranks
+    /// pass equal lengths — a length mismatch panics with both ranks).
+    pub fn iallreduce_vec(&self, values: &[f64], op: ReduceOp) -> CollHandle {
+        CollHandle::post(self, CollData::Reduce { op, acc: values.to_vec() })
+    }
+
+    /// Nonblocking exact integer sum-allreduce (u64 end to end — never
+    /// routed through f64, so counts above 2^53 stay exact).
+    pub fn iallreduce_u64(&self, value: u64) -> CollHandle {
+        CollHandle::post(self, CollData::ReduceU64 { acc: value })
+    }
+
+    /// Nonblocking tree allgatherv of one byte blob per rank.
+    pub fn iallgather(&self, bytes: Vec<u8>) -> CollHandle {
+        CollHandle::post(
+            self,
+            CollData::Gather { entries: vec![(self.rank() as u32, bytes)] },
+        )
+    }
+
+    /// Nonblocking dissemination barrier (always tree-structured: a
+    /// barrier has no result to need the flat oracle for).
+    pub fn ibarrier(&self) -> CollHandle {
+        CollHandle::post(self, CollData::Barrier)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::World;
+
+    #[test]
+    fn tree_shape_helpers() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(64), 6);
+        // size 6: edges cover every rank exactly once
+        let mut covered = vec![false; 6];
+        covered[0] = true;
+        for r in 0..6 {
+            for c in children(r, 6) {
+                assert!(!covered[c], "child {c} claimed twice");
+                covered[c] = true;
+                assert_eq!(parent(c), r);
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn iallreduce_matches_ops_across_sizes() {
+        for size in [1usize, 2, 3, 4, 5, 7, 8] {
+            World::launch(size, move |rank, world| {
+                let comm = world.comm(rank, 0);
+                let v = (rank + 1) as f64;
+                let n = size as f64;
+                assert_eq!(
+                    comm.iallreduce(v, ReduceOp::Sum).into_f64(),
+                    n * (n + 1.0) / 2.0
+                );
+                assert_eq!(comm.iallreduce(v, ReduceOp::Min).into_f64(), 1.0);
+                assert_eq!(comm.iallreduce(v, ReduceOp::Max).into_f64(), n);
+            });
+        }
+    }
+
+    #[test]
+    fn iallreduce_vec_elementwise() {
+        World::launch(5, |rank, world| {
+            let comm = world.comm(rank, 0);
+            let v = vec![rank as f64, 10.0 * rank as f64, 1.0];
+            let r = comm.iallreduce_vec(&v, ReduceOp::Sum).into_vec();
+            assert_eq!(r, vec![10.0, 100.0, 5.0]);
+        });
+    }
+
+    #[test]
+    fn iallreduce_u64_exact_above_2_53() {
+        // each rank contributes a value that f64 cannot represent exactly;
+        // the u64 path must sum them exactly
+        World::launch(3, |rank, world| {
+            let comm = world.comm(rank, 0);
+            let v = (1u64 << 53) + 1 + rank as u64;
+            let got = comm.iallreduce_u64(v).into_u64();
+            let want = 3 * ((1u64 << 53) + 1) + 3;
+            assert_eq!(got, want);
+            assert_ne!(got as f64 as u64, got, "test value must exceed f64 precision");
+        });
+    }
+
+    #[test]
+    fn iallgather_rank_order() {
+        World::launch(6, |rank, world| {
+            let comm = world.comm(rank, 0);
+            let got = comm.iallgather(vec![rank as u8; rank]).into_gathered();
+            assert_eq!(got.len(), 6);
+            for (r, blob) in got.iter().enumerate() {
+                assert_eq!(blob, &vec![r as u8; r]);
+            }
+        });
+    }
+
+    #[test]
+    fn ibarrier_separates_phases() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static BEFORE: AtomicUsize = AtomicUsize::new(0);
+        World::launch(5, |_rank, world| {
+            let comm = world.comm(_rank, 0);
+            BEFORE.fetch_add(1, Ordering::SeqCst);
+            let mut h = comm.ibarrier();
+            h.wait();
+            // every rank must have incremented before any rank passes
+            assert_eq!(BEFORE.load(Ordering::SeqCst), 5);
+        });
+    }
+
+    #[test]
+    fn repeated_mixed_tree_collectives_stay_in_sync() {
+        World::launch(4, |rank, world| {
+            let comm = world.comm(rank, 0);
+            for i in 0..50u64 {
+                let s = comm.iallreduce(i as f64, ReduceOp::Sum).into_f64();
+                assert_eq!(s, 4.0 * i as f64);
+                let g = comm.iallgather(vec![(rank as u64 + i) as u8]).into_gathered();
+                assert_eq!(g.len(), 4);
+                assert_eq!(g[rank][0], (rank as u64 + i) as u8);
+                let u = comm.iallreduce_u64(i).into_u64();
+                assert_eq!(u, 4 * i);
+            }
+        });
+    }
+
+    #[test]
+    fn overlapping_handles_on_one_comm() {
+        // two collectives in flight at once, drained out of post order —
+        // the per-(rank, comm) sequence numbers keep them separated
+        World::launch(4, |rank, world| {
+            let comm = world.comm(rank, 0);
+            let h1 = comm.iallreduce(rank as f64, ReduceOp::Sum);
+            let h2 = comm.iallreduce(1.0, ReduceOp::Sum);
+            assert_eq!(h2.into_f64(), 4.0);
+            assert_eq!(h1.into_f64(), 6.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "collective mismatch")]
+    fn mismatched_kinds_panic_not_deadlock() {
+        World::launch(2, |rank, world| {
+            let comm = world.comm(rank, 0);
+            if rank == 0 {
+                let _ = comm.iallreduce(1.0, ReduceOp::Sum).into_f64();
+            } else {
+                let _ = comm.iallgather(vec![1, 2, 3]).into_gathered();
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "collective mismatch")]
+    fn mismatched_vec_lengths_panic_not_deadlock() {
+        World::launch(2, |rank, world| {
+            let comm = world.comm(rank, 0);
+            let v = vec![1.0; 2 + rank];
+            let _ = comm.iallreduce_vec(&v, ReduceOp::Sum).into_vec();
+        });
+    }
+}

@@ -6,10 +6,22 @@
 //! lock-protected queues keyed by (source, tag), nonblocking send/recv
 //! handles, per-communicator id spaces (so per-variable communicators work
 //! exactly as in Sec. 3.7 — no 32,767 tag-bound problem, but we keep the
-//! same tag-encoding discipline), tree-free allgather and generation-counted
-//! allreduce/barrier collectives.
+//! same tag-encoding discipline).
+//!
+//! Collectives come in two algorithms, selected per endpoint by
+//! [`CollMode`] (`parthenon/comm coll`, default `tree`):
+//!
+//! * `coll` — nonblocking tree-structured exchanges over the pt2pt
+//!   mailboxes (binomial reduce+broadcast, dissemination barrier):
+//!   O(log P) hops per rank, pollable [`CollHandle`]s that sit on the
+//!   task graph (the overlapped dt reduction).
+//! * `simmpi`'s generation-counted bulk-synchronous path — O(P)
+//!   serialized lock acquisitions, kept as the bitwise oracle the tree
+//!   path is tested against.
 
+pub mod coll;
 mod simmpi;
 pub mod tags;
 
+pub use coll::{CollHandle, CollMode};
 pub use simmpi::{Comm, Payload, RecvHandle, ReduceOp, World};

@@ -2,8 +2,10 @@
 //! semantics (nonblocking pt2pt, communicators, collectives).
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+use super::coll::{self, CollMode};
 use crate::error::{Error, Result};
 use crate::Real;
 
@@ -53,7 +55,7 @@ pub enum ReduceOp {
 }
 
 impl ReduceOp {
-    fn apply(self, a: f64, b: f64) -> f64 {
+    pub(crate) fn apply(self, a: f64, b: f64) -> f64 {
         match self {
             ReduceOp::Min => a.min(b),
             ReduceOp::Max => a.max(b),
@@ -61,7 +63,7 @@ impl ReduceOp {
         }
     }
 
-    fn identity(self) -> f64 {
+    pub(crate) fn identity(self) -> f64 {
         match self {
             ReduceOp::Min => f64::INFINITY,
             ReduceOp::Max => f64::NEG_INFINITY,
@@ -74,11 +76,18 @@ impl ReduceOp {
 struct CollectiveState {
     generation: u64,
     arrived: usize,
+    /// (kind, op, len) the first arrival of this generation declared —
+    /// the flat half of the collective-mismatch guard: a later rank
+    /// entering a different collective panics instead of deadlocking or
+    /// folding garbage.
+    entered: (u8, u8, u64),
     acc: f64,
+    acc_u64: u64,
     acc_vec: Vec<f64>,
     gathered: Vec<Option<Vec<u8>>>,
     /// snapshot of the finished generation's results
     done_acc: f64,
+    done_acc_u64: u64,
     done_acc_vec: Vec<f64>,
     done_gathered: Vec<Vec<u8>>,
 }
@@ -88,6 +97,15 @@ struct WorldInner {
     mailboxes: Vec<Mailbox>,
     collective: Mutex<CollectiveState>,
     collective_cv: Condvar,
+    /// Per-rank tree-collective sequence counters, keyed by comm_id.
+    /// World-owned (NOT per-`Comm`): several `Comm` handles for the same
+    /// (rank, comm_id) coexist, and all must draw from one sequence so
+    /// their collective tags line up across ranks.
+    coll_seqs: Vec<Mutex<HashMap<u32, u64>>>,
+    /// Set when a rank dies inside a tree collective (e.g. mismatch
+    /// panic) so peers polling their handles fail fast instead of
+    /// spinning out the full stall limit.
+    coll_abort: AtomicBool,
 }
 
 /// The "MPI_COMM_WORLD" of one simulation: create once, then derive one
@@ -110,16 +128,30 @@ impl World {
                 collective: Mutex::new(CollectiveState {
                     generation: 0,
                     arrived: 0,
+                    entered: (0, 0, 0),
                     acc: 0.0,
+                    acc_u64: 0,
                     acc_vec: Vec::new(),
                     gathered: vec![None; size],
                     done_acc: 0.0,
+                    done_acc_u64: 0,
                     done_acc_vec: Vec::new(),
                     done_gathered: Vec::new(),
                 }),
                 collective_cv: Condvar::new(),
+                coll_seqs: (0..size).map(|_| Mutex::new(HashMap::new())).collect(),
+                coll_abort: AtomicBool::new(false),
             }),
         }
+    }
+
+    /// Next tree-collective sequence number for (rank, comm_id).
+    pub(crate) fn next_coll_seq(&self, rank: usize, comm_id: u32) -> u64 {
+        let mut seqs = self.inner.coll_seqs[rank].lock().unwrap();
+        let s = seqs.entry(comm_id).or_insert(0);
+        let out = *s;
+        *s += 1;
+        out
     }
 
     pub fn size(&self) -> usize {
@@ -131,7 +163,7 @@ impl World {
     /// communicators.
     pub fn comm(&self, rank: usize, comm_id: u32) -> Comm {
         assert!(rank < self.inner.size);
-        Comm { world: self.clone(), rank, comm_id }
+        Comm { world: self.clone(), rank, comm_id, coll: CollMode::Tree }
     }
 
     /// Run `f(rank, world)` on `size` threads and join them, propagating
@@ -169,6 +201,9 @@ pub struct Comm {
     world: World,
     rank: usize,
     comm_id: u32,
+    /// Algorithm for the blocking collective calls (tree by default; the
+    /// flat generation-counted path is kept as the bitwise oracle).
+    coll: CollMode,
 }
 
 /// Nonblocking receive handle (MPI_Irecv analog).
@@ -185,6 +220,38 @@ impl Comm {
 
     pub fn size(&self) -> usize {
         self.world.inner.size
+    }
+
+    /// Select the collective algorithm (builder-style; see [`CollMode`]).
+    pub fn with_coll(mut self, coll: CollMode) -> Comm {
+        self.coll = coll;
+        self
+    }
+
+    /// The collective algorithm this endpoint's blocking calls use.
+    pub fn coll_mode(&self) -> CollMode {
+        self.coll
+    }
+
+    /// Draw the next tree-collective sequence number for this endpoint.
+    pub(crate) fn next_coll_seq(&self) -> u64 {
+        self.world.next_coll_seq(self.rank, self.comm_id)
+    }
+
+    /// Mark every tree collective in this world as doomed (called on the
+    /// way into a mismatch panic so peers fail fast).
+    pub(crate) fn abort_collectives(&self) {
+        self.world.inner.coll_abort.store(true, Ordering::SeqCst);
+    }
+
+    /// Panic promptly if a peer rank died inside a collective.
+    pub(crate) fn check_coll_abort(&self) {
+        if self.world.inner.coll_abort.load(Ordering::SeqCst) {
+            panic!(
+                "collective aborted on rank {}: a peer rank failed a collective",
+                self.rank
+            );
+        }
     }
 
     #[inline]
@@ -234,21 +301,55 @@ impl Comm {
         }
     }
 
-    // -- collectives (bulk-synchronous, generation-counted) -----------------
+    // -- collectives --------------------------------------------------------
+    //
+    // The blocking entry points dispatch on `self.coll`: Tree posts a
+    // nonblocking tree handle (see `comm::coll`) and drains it; Flat runs
+    // the original bulk-synchronous generation-counted exchange below,
+    // kept as the bitwise oracle.
 
-    fn collective<FEnter, FSnap, T>(&self, enter: FEnter, snap: FSnap) -> T
+    fn collective<FEnter, FSnap, T>(
+        &self,
+        kind: u8,
+        op: u8,
+        len: u64,
+        enter: FEnter,
+        snap: FSnap,
+    ) -> T
     where
         FEnter: FnOnce(&mut CollectiveState),
         FSnap: FnOnce(&CollectiveState) -> T,
     {
         let w = &self.world.inner;
-        let mut st = w.collective.lock().unwrap();
+        let mut st = match w.collective.lock() {
+            Ok(g) => g,
+            Err(_) => panic!(
+                "collective state poisoned on rank {}: a peer rank failed a collective",
+                self.rank
+            ),
+        };
         let my_gen = st.generation;
+        if st.arrived == 0 {
+            st.entered = (kind, op, len);
+        } else if st.entered != (kind, op, len) {
+            // fail fast with both entries named instead of deadlocking
+            // (the lock poisons on the way out, waking blocked peers)
+            self.abort_collectives();
+            let (k0, o0, l0) = st.entered;
+            panic!(
+                "collective mismatch: rank {} entered {}(op={op}, len={len}) but an \
+                 earlier rank entered {}(op={o0}, len={l0})",
+                self.rank,
+                coll::kind_name(kind),
+                coll::kind_name(k0),
+            );
+        }
         enter(&mut st);
         st.arrived += 1;
         if st.arrived == w.size {
             // last arrival publishes results and advances the generation
             st.done_acc = st.acc;
+            st.done_acc_u64 = st.acc_u64;
             st.done_acc_vec = std::mem::take(&mut st.acc_vec);
             st.done_gathered = st
                 .gathered
@@ -260,7 +361,14 @@ impl Comm {
             w.collective_cv.notify_all();
         } else {
             while st.generation == my_gen {
-                st = w.collective_cv.wait(st).unwrap();
+                st = match w.collective_cv.wait(st) {
+                    Ok(g) => g,
+                    Err(_) => panic!(
+                        "collective state poisoned on rank {}: a peer rank failed a \
+                         collective",
+                        self.rank
+                    ),
+                };
             }
         }
         snap(&st)
@@ -268,7 +376,17 @@ impl Comm {
 
     /// All-reduce a scalar.
     pub fn allreduce(&self, value: f64, op: ReduceOp) -> f64 {
+        match self.coll {
+            CollMode::Tree => self.iallreduce(value, op).into_f64(),
+            CollMode::Flat => self.allreduce_flat(value, op),
+        }
+    }
+
+    fn allreduce_flat(&self, value: f64, op: ReduceOp) -> f64 {
         self.collective(
+            coll::KIND_REDUCE,
+            coll::op_code(op),
+            1,
             |st| {
                 if st.arrived == 0 {
                     st.acc = op.identity();
@@ -279,32 +397,72 @@ impl Comm {
         )
     }
 
+    /// Exact integer sum-allreduce: u64 end to end, never routed through
+    /// f64 (u64-in-f64 is exact only below 2^53).
+    pub fn allreduce_u64(&self, value: u64) -> u64 {
+        match self.coll {
+            CollMode::Tree => self.iallreduce_u64(value).into_u64(),
+            CollMode::Flat => self.collective(
+                coll::KIND_REDUCE_U64,
+                0,
+                1,
+                |st| {
+                    if st.arrived == 0 {
+                        st.acc_u64 = 0;
+                    }
+                    st.acc_u64 = st
+                        .acc_u64
+                        .checked_add(value)
+                        .expect("u64 allreduce overflow");
+                },
+                |st| st.done_acc_u64,
+            ),
+        }
+    }
+
     /// Element-wise all-reduce of a vector (all ranks pass equal lengths).
     pub fn allreduce_vec(&self, values: &[f64], op: ReduceOp) -> Vec<f64> {
-        let vals = values.to_vec();
-        self.collective(
-            move |st| {
-                if st.arrived == 0 {
-                    st.acc_vec = vec![op.identity(); vals.len()];
-                }
-                assert_eq!(st.acc_vec.len(), vals.len(), "allreduce_vec length mismatch");
-                for (a, v) in st.acc_vec.iter_mut().zip(&vals) {
-                    *a = op.apply(*a, *v);
-                }
-            },
-            |st| st.done_acc_vec.clone(),
-        )
+        match self.coll {
+            CollMode::Tree => self.iallreduce_vec(values, op).into_vec(),
+            CollMode::Flat => {
+                let vals = values.to_vec();
+                self.collective(
+                    coll::KIND_REDUCE,
+                    coll::op_code(op),
+                    vals.len() as u64,
+                    move |st| {
+                        if st.arrived == 0 {
+                            st.acc_vec = vec![op.identity(); vals.len()];
+                        }
+                        for (a, v) in st.acc_vec.iter_mut().zip(&vals) {
+                            *a = op.apply(*a, *v);
+                        }
+                    },
+                    |st| st.done_acc_vec.clone(),
+                )
+            }
+        }
     }
 
     /// Gather one byte blob from every rank, delivered to all (MPI_Allgatherv).
     pub fn allgather(&self, bytes: Vec<u8>) -> Vec<Vec<u8>> {
-        let rank = self.rank;
-        self.collective(
-            move |st| {
-                st.gathered[rank] = Some(bytes);
-            },
-            |st| st.done_gathered.clone(),
-        )
+        match self.coll {
+            CollMode::Tree => self.iallgather(bytes).into_gathered(),
+            CollMode::Flat => {
+                let rank = self.rank;
+                // blob lengths legitimately differ per rank: len is not
+                // part of the gather guard
+                self.collective(
+                    coll::KIND_GATHER,
+                    0,
+                    0,
+                    move |st| {
+                        st.gathered[rank] = Some(bytes);
+                    },
+                    |st| st.done_gathered.clone(),
+                )
+            }
+        }
     }
 
     /// Allgather a list of u64 ids (e.g. block gids), returned per rank.
@@ -326,9 +484,15 @@ impl Comm {
             .collect()
     }
 
-    /// Barrier.
+    /// Barrier. Tree mode runs a dedicated dissemination barrier (no
+    /// reduction payload rides along); flat mode synchronizes through the
+    /// generation counter with its own kind tag, so a barrier meeting a
+    /// reduction trips the mismatch guard instead of silently pairing.
     pub fn barrier(&self) {
-        let _ = self.allreduce(0.0, ReduceOp::Sum);
+        match self.coll {
+            CollMode::Tree => self.ibarrier().wait(),
+            CollMode::Flat => self.collective(coll::KIND_BARRIER, 0, 0, |_| (), |_| ()),
+        }
     }
 }
 
@@ -436,49 +600,91 @@ mod tests {
         });
     }
 
+    /// Every blocking collective, on both algorithms: the flat oracle and
+    /// the default tree path must agree exactly.
+    fn both_modes(f: impl Fn(CollMode) + Copy) {
+        f(CollMode::Flat);
+        f(CollMode::Tree);
+    }
+
     #[test]
     fn allreduce_ops() {
-        World::launch(4, |rank, world| {
-            let comm = world.comm(rank, 0);
-            let v = (rank + 1) as f64;
-            assert_eq!(comm.allreduce(v, ReduceOp::Sum), 10.0);
-            assert_eq!(comm.allreduce(v, ReduceOp::Min), 1.0);
-            assert_eq!(comm.allreduce(v, ReduceOp::Max), 4.0);
+        both_modes(|mode| {
+            World::launch(4, move |rank, world| {
+                let comm = world.comm(rank, 0).with_coll(mode);
+                let v = (rank + 1) as f64;
+                assert_eq!(comm.allreduce(v, ReduceOp::Sum), 10.0);
+                assert_eq!(comm.allreduce(v, ReduceOp::Min), 1.0);
+                assert_eq!(comm.allreduce(v, ReduceOp::Max), 4.0);
+            });
+        });
+    }
+
+    #[test]
+    fn allreduce_u64_exact() {
+        both_modes(|mode| {
+            World::launch(3, move |rank, world| {
+                let comm = world.comm(rank, 0).with_coll(mode);
+                let v = (1u64 << 53) + rank as u64;
+                assert_eq!(comm.allreduce_u64(v), 3 * (1u64 << 53) + 3);
+                assert_eq!(comm.allreduce_u64(0), 0);
+            });
         });
     }
 
     #[test]
     fn allreduce_vec_elementwise() {
-        World::launch(3, |rank, world| {
-            let comm = world.comm(rank, 0);
-            let v = vec![rank as f64, 10.0 * rank as f64];
-            let r = comm.allreduce_vec(&v, ReduceOp::Sum);
-            assert_eq!(r, vec![3.0, 30.0]);
+        both_modes(|mode| {
+            World::launch(3, move |rank, world| {
+                let comm = world.comm(rank, 0).with_coll(mode);
+                let v = vec![rank as f64, 10.0 * rank as f64];
+                let r = comm.allreduce_vec(&v, ReduceOp::Sum);
+                assert_eq!(r, vec![3.0, 30.0]);
+            });
         });
     }
 
     #[test]
     fn allgather_delivers_everyone() {
-        World::launch(3, |rank, world| {
-            let comm = world.comm(rank, 0);
-            let got = comm.allgather(vec![rank as u8; rank + 1]);
-            assert_eq!(got.len(), 3);
-            for (r, blob) in got.iter().enumerate() {
-                assert_eq!(blob, &vec![r as u8; r + 1]);
-            }
+        both_modes(|mode| {
+            World::launch(3, move |rank, world| {
+                let comm = world.comm(rank, 0).with_coll(mode);
+                let got = comm.allgather(vec![rank as u8; rank + 1]);
+                assert_eq!(got.len(), 3);
+                for (r, blob) in got.iter().enumerate() {
+                    assert_eq!(blob, &vec![r as u8; r + 1]);
+                }
+            });
         });
     }
 
     #[test]
     fn allgather_u64s_roundtrip() {
-        World::launch(3, |rank, world| {
-            let comm = world.comm(rank, 0);
-            let mine: Vec<u64> = (0..rank as u64).map(|i| 100 * rank as u64 + i).collect();
-            let got = comm.allgather_u64s(&mine);
-            assert_eq!(got.len(), 3);
-            assert_eq!(got[0], Vec::<u64>::new());
-            assert_eq!(got[1], vec![100]);
-            assert_eq!(got[2], vec![200, 201]);
+        both_modes(|mode| {
+            World::launch(3, move |rank, world| {
+                let comm = world.comm(rank, 0).with_coll(mode);
+                let mine: Vec<u64> =
+                    (0..rank as u64).map(|i| 100 * rank as u64 + i).collect();
+                let got = comm.allgather_u64s(&mine);
+                assert_eq!(got.len(), 3);
+                assert_eq!(got[0], Vec::<u64>::new());
+                assert_eq!(got[1], vec![100]);
+                assert_eq!(got[2], vec![200, 201]);
+            });
+        });
+    }
+
+    #[test]
+    fn barrier_runs_on_both_modes() {
+        both_modes(|mode| {
+            World::launch(3, move |rank, world| {
+                let comm = world.comm(rank, 0).with_coll(mode);
+                for _ in 0..5 {
+                    comm.barrier();
+                }
+                // and interleaves cleanly with reductions
+                assert_eq!(comm.allreduce(1.0, ReduceOp::Sum), 3.0);
+            });
         });
     }
 
@@ -486,7 +692,7 @@ mod tests {
     fn repeated_collectives_stay_in_sync() {
         static COUNT: AtomicUsize = AtomicUsize::new(0);
         World::launch(4, |rank, world| {
-            let comm = world.comm(rank, 0);
+            let comm = world.comm(rank, 0).with_coll(CollMode::Flat);
             for i in 0..100 {
                 let s = comm.allreduce(i as f64, ReduceOp::Sum);
                 assert_eq!(s, 4.0 * i as f64);
@@ -494,6 +700,39 @@ mod tests {
             COUNT.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(COUNT.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "collective")]
+    fn flat_mismatched_kinds_panic_not_deadlock() {
+        World::launch(2, |rank, world| {
+            let comm = world.comm(rank, 0).with_coll(CollMode::Flat);
+            if rank == 0 {
+                let _ = comm.allreduce(1.0, ReduceOp::Sum);
+            } else {
+                let _ = comm.allgather(vec![1, 2, 3]);
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "collective")]
+    fn flat_mismatched_vec_lengths_panic_not_deadlock() {
+        World::launch(2, |rank, world| {
+            let comm = world.comm(rank, 0).with_coll(CollMode::Flat);
+            let v = vec![1.0; 2 + rank];
+            let _ = comm.allreduce_vec(&v, ReduceOp::Sum);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "collective")]
+    fn flat_mismatched_ops_panic_not_deadlock() {
+        World::launch(2, |rank, world| {
+            let comm = world.comm(rank, 0).with_coll(CollMode::Flat);
+            let op = if rank == 0 { ReduceOp::Min } else { ReduceOp::Max };
+            let _ = comm.allreduce(1.0, op);
+        });
     }
 
     #[test]

@@ -35,12 +35,13 @@
 //! the fused cycle ([`StageExecutor::local_dt`] returns the cached
 //! reduction).
 
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use super::{HydroSim, OverlapMode, StageExecutor};
 use crate::bvals::{bufspec, PackStrategy};
-use crate::comm::{tags, Comm, Payload};
+use crate::comm::{tags, CollHandle, CollMode, Comm, Payload, ReduceOp};
 use crate::error::{Error, Result};
 use crate::hydro::native::{StageCoeffs, RK2_STAGES};
 use crate::hydro::CONS;
@@ -115,6 +116,11 @@ pub struct DeviceState {
     /// stage, bootstrap, rebalance), which falls back to folding
     /// `last_dts` on demand.
     fused_dt_min: Option<Real>,
+    /// GLOBAL (cross-rank, CFL-scaled) dt produced by the overlapped tree
+    /// collective the fused final stage posted from inside its task
+    /// region. Consumed once by `HydroSim::reduce_dt`, which then skips
+    /// its blocking allreduce entirely.
+    fused_dt_global: Option<f64>,
 }
 
 impl DeviceState {
@@ -188,6 +194,7 @@ impl DeviceState {
             tmp: Vec::new(),
             tmps: Vec::new(),
             fused_dt_min: None,
+            fused_dt_global: None,
         };
 
         // Shared pack partition: re-plan onto the artifact sizes + staging
@@ -275,6 +282,7 @@ impl DeviceState {
         self.last_dts = vec![0.0; sim.mesh.blocks.len()];
         self.block_secs = vec![0.0; sim.mesh.blocks.len()];
         self.fused_dt_min = None;
+        self.fused_dt_global = None;
         for (bi, b) in sim.mesh.blocks.iter().enumerate() {
             if let Some(v) = old_dts.get(&b.gid) {
                 self.last_dts[bi] = *v;
@@ -325,6 +333,7 @@ impl DeviceState {
         self.last_dts = vec![0.0; sim.mesh.blocks.len()];
         self.block_secs = vec![0.0; sim.mesh.blocks.len()];
         self.fused_dt_min = None;
+        self.fused_dt_global = None;
         for (bi, b) in sim.mesh.blocks.iter().enumerate() {
             if let Some(v) = old_dts.get(&b.gid) {
                 self.last_dts[bi] = *v;
@@ -362,6 +371,7 @@ impl DeviceState {
         let refresh: HashSet<usize> = sim
             .world
             .comm(sim.mesh.my_rank, 0)
+            .with_coll(sim.sp.coll)
             .allgather_u64s(&mine)
             .into_iter()
             .flatten()
@@ -468,6 +478,7 @@ impl DeviceState {
             }
         }
         self.fused_dt_min = None;
+        self.fused_dt_global = None;
         Ok(())
     }
 
@@ -757,6 +768,7 @@ impl DeviceState {
         self.tmp = tmp;
         // last_dts changed outside the fused region: drop the cached min.
         self.fused_dt_min = None;
+        self.fused_dt_global = None;
         res?;
         self.route_and_receive(md)
     }
@@ -769,6 +781,12 @@ impl DeviceState {
     /// `last_dts`/`block_secs` slices), every received segment lands in a
     /// disjoint `bufs_in` slab, and the shared-state `Runtime` hands each
     /// in-flight launch its own scratch.
+    ///
+    /// With `coll` set (tree collectives) the final RK stage also posts
+    /// the GLOBAL dt `iallreduce(Min)` from an extra task list as soon as
+    /// every pack's partial min has landed, so the O(log P) exchange
+    /// overlaps the tail packs' boundary-receive polls; the drained
+    /// result is cached in `fused_dt_global` for `reduce_dt`.
     fn stage_fused(
         &mut self,
         md: &mut MeshData,
@@ -776,13 +794,23 @@ impl DeviceState {
         scal: ScalArgs,
         si: usize,
         nworkers: usize,
+        coll: Option<&Comm>,
+        cfl: Real,
     ) -> Result<()> {
         let npacks = md.npacks();
+        let final_stage = si + 1 == RK2_STAGES.len();
+        let overlap_coll = final_stage && coll.is_some();
         if npacks == 0 {
+            if overlap_coll {
+                // Every rank must enter the dt collective exactly once
+                // per cycle; a packless rank contributes +inf inline.
+                let comm = coll.expect("overlap collective comm");
+                self.fused_dt_global =
+                    Some(comm.iallreduce(f64::INFINITY, ReduceOp::Min).into_f64());
+            }
             return Ok(());
         }
         let policy = self.policy;
-        let final_stage = si + 1 == RK2_STAGES.len();
         if self.tmps.len() != npacks {
             self.tmps.resize_with(npacks, Vec::new);
         }
@@ -802,6 +830,35 @@ impl DeviceState {
         let abort = AtomicBool::new(false);
         let mut first_error: Option<Error> = None;
 
+        /// Overlapped-dt shared state: the posting/draining tasks on the
+        /// extra list hand the tree-collective handle between polls here.
+        struct DevDtColl<'a> {
+            comm: Option<&'a Comm>,
+            cfl: Real,
+            handle: Mutex<Option<CollHandle>>,
+            /// How many packs have published their partial min.
+            dt_done: AtomicUsize,
+            /// Drained global dt (f64 bits).
+            global: AtomicU64,
+        }
+        let coll_slot = DevDtColl {
+            comm: if overlap_coll { coll } else { None },
+            cfl,
+            handle: Mutex::new(None),
+            dt_done: AtomicUsize::new(0),
+            global: AtomicU64::new(f64::INFINITY.to_bits()),
+        };
+        // The overlapped-dt list gets a zero-cost dummy context: its tasks
+        // only touch the shared slots above.
+        let dummy_desc = PackDesc { index: 0, first: 0, nb: 0 };
+        let mut dummy_staging = PackStaging {
+            u: Vec::new(),
+            u0: Vec::new(),
+            bufs_in: Vec::new(),
+            bufs_out: Vec::new(),
+        };
+        let mut dummy_tmp: Vec<Real> = Vec::new();
+
         /// One pack's fused-stage context: shared read view of the device
         /// state + disjoint `&mut` slices of everything the pack writes.
         struct DevPackCtx<'a> {
@@ -814,6 +871,7 @@ impl DeviceState {
             pending: Vec<(usize, usize)>,
             minima: &'a [AtomicU32],
             dt_result: &'a AtomicU32,
+            coll: &'a DevDtColl<'a>,
             scal: ScalArgs,
             compute_dt: bool,
             error: Option<Error>,
@@ -842,6 +900,7 @@ impl DeviceState {
                     pending: dev.pack_pending(d),
                     minima: &minima,
                     dt_result: &dt_result,
+                    coll: &coll_slot,
                     scal,
                     compute_dt: final_stage,
                     error: None,
@@ -849,7 +908,8 @@ impl DeviceState {
                 });
             }
 
-            let mut region: TaskRegion<DevPackCtx> = TaskRegion::new(npacks);
+            let nlists = npacks + usize::from(overlap_coll);
+            let mut region: TaskRegion<DevPackCtx> = TaskRegion::new(nlists);
             let mut marks = Vec::new();
             for pi in 0..npacks {
                 let list = region.list(pi);
@@ -899,12 +959,68 @@ impl DeviceState {
                         }
                         let m = c.dts.iter().fold(f32::INFINITY, |a, &b| a.min(b));
                         c.minima[pi].store(m.to_bits(), Ordering::SeqCst);
+                        c.coll.dt_done.fetch_add(1, Ordering::SeqCst);
                         TaskStatus::Complete
                     });
                     marks.push((pi, t_dt));
                 }
             }
-            if final_stage {
+            if overlap_coll {
+                // Overlapped dt: an extra list whose first task spins
+                // (Incomplete) until every pack's partial min landed, then
+                // folds them, posts the tree iallreduce(Min) and lets the
+                // drain task poll the handle between other lists' work.
+                let list = region.list(npacks);
+                let t_post = list.add(NONE, move |c: &mut DevPackCtx| {
+                    if c.abort.load(Ordering::SeqCst) {
+                        return TaskStatus::Complete;
+                    }
+                    if c.coll.dt_done.load(Ordering::SeqCst) < npacks {
+                        return TaskStatus::Incomplete;
+                    }
+                    let mut m = f32::INFINITY;
+                    for a in c.minima {
+                        m = m.min(f32::from_bits(a.load(Ordering::SeqCst)));
+                    }
+                    c.dt_result.store(m.to_bits(), Ordering::SeqCst);
+                    let comm = c.coll.comm.expect("overlap collective comm");
+                    let local = c.coll.cfl as f64 * m as f64;
+                    *c.coll.handle.lock().unwrap() =
+                        Some(comm.iallreduce(local, ReduceOp::Min));
+                    TaskStatus::Complete
+                });
+                let _t_drain = list.add(&[t_post], |c: &mut DevPackCtx| {
+                    if c.abort.load(Ordering::SeqCst) {
+                        return TaskStatus::Complete;
+                    }
+                    let mut slot = c.coll.handle.lock().unwrap();
+                    match slot.as_mut().map(CollHandle::test) {
+                        Some(true) => {
+                            let g = slot.take().expect("handle present").into_f64();
+                            c.coll.global.store(g.to_bits(), Ordering::SeqCst);
+                            TaskStatus::Complete
+                        }
+                        Some(false) => TaskStatus::Incomplete,
+                        None => TaskStatus::Complete,
+                    }
+                });
+                ctxs.push(DevPackCtx {
+                    dev,
+                    d: &dummy_desc,
+                    p: &mut dummy_staging,
+                    dts: &mut [],
+                    secs: &mut [],
+                    tmp: &mut dummy_tmp,
+                    pending: Vec::new(),
+                    minima: &minima,
+                    dt_result: &dt_result,
+                    coll: &coll_slot,
+                    scal,
+                    compute_dt: false,
+                    error: None,
+                    abort: &abort,
+                });
+            } else if final_stage {
                 // regional cross-list fold: one task, gated on every
                 // pack's partial-min mark, runs under the same abort-aware
                 // region — this replaces the post-cycle local_dt sweep.
@@ -918,9 +1034,17 @@ impl DeviceState {
                 });
             }
 
+            let mut costs_ext: Vec<f64>;
+            let costs: &[f64] = if overlap_coll {
+                costs_ext = pack_costs.to_vec();
+                costs_ext.push(0.0);
+                &costs_ext
+            } else {
+                pack_costs
+            };
             match region.execute_parallel_weighted(
                 ctxs,
-                Some(pack_costs),
+                Some(costs),
                 nworkers,
                 policy,
                 STALL_LIMIT,
@@ -946,7 +1070,17 @@ impl DeviceState {
             self.fused_dt_min =
                 Some(f32::from_bits(dt_result.load(Ordering::SeqCst)));
         }
+        if overlap_coll {
+            self.fused_dt_global =
+                Some(f64::from_bits(coll_slot.global.load(Ordering::SeqCst)));
+        }
         Ok(())
+    }
+
+    /// Take (consume) the overlapped global dt, if the last fused final
+    /// stage posted and drained one.
+    pub(crate) fn take_global_dt(&mut self) -> Option<f64> {
+        self.fused_dt_global.take()
     }
 }
 
@@ -977,7 +1111,21 @@ impl StageExecutor for DeviceState {
             // poll (+ the dt reduction on the final stage), interleaved
             let pack_costs = sim.mesh_data.pack_costs(&sim.mesh);
             let nworkers = self.stage_workers(sim.mesh_data.npacks());
-            self.stage_fused(&mut sim.mesh_data, &pack_costs, scal, si, nworkers)
+            let coll = if sim.sp.coll == CollMode::Tree {
+                Some(&sim.comm_coll)
+            } else {
+                None
+            };
+            let cfl = sim.pkg.cfl;
+            self.stage_fused(
+                &mut sim.mesh_data,
+                &pack_costs,
+                scal,
+                si,
+                nworkers,
+                coll,
+                cfl,
+            )
         } else {
             // phased oracle: all launches, then the whole-rank routing
             self.stage_phased(&mut sim.mesh_data, scal, si)

@@ -32,13 +32,13 @@
 //!   produce identical results because every per-block computation reads
 //!   exactly the same inputs (pinned by `rust/tests/overlap_fused.rs`).
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
 use super::{run_stage_exchange, OverlapMode, StageExecutor};
 use crate::bvals::{self, ExchTopo, PackExchange};
-use crate::comm::Comm;
+use crate::comm::{CollHandle, CollMode, Comm, ReduceOp};
 use crate::error::{Error, Result};
 use crate::hydro::native::{self, FluxArrays, Scratch, StageCoeffs};
 use crate::hydro::{HydroPackage, CONS};
@@ -118,6 +118,12 @@ pub struct HostExec {
     /// first fused cycle completes (and after every rebuild: regrid /
     /// rebalance / restart recreate the executor).
     fused_dt: Option<f64>,
+    /// GLOBAL (cross-rank) dt produced by the overlapped collective the
+    /// fused final stage posted from inside its task region (tree
+    /// collectives only). Taken — consumed once — by
+    /// `HydroSim::reduce_dt`, which then skips its blocking allreduce
+    /// entirely.
+    fused_dt_global: Option<f64>,
 }
 
 impl HostExec {
@@ -148,6 +154,7 @@ impl HostExec {
             policy,
             overlap_stats: OverlapStats::default(),
             fused_dt: None,
+            fused_dt_global: None,
         }
     }
 
@@ -177,6 +184,13 @@ impl HostExec {
         self.block_secs.resize(nblocks, 0.0);
         self.overlap_stats = OverlapStats::default();
         self.fused_dt = None;
+        self.fused_dt_global = None;
+    }
+
+    /// Consume the overlapped global dt (fused final stage, tree
+    /// collectives). `None` when the blocking reduction must run instead.
+    pub fn take_global_dt(&mut self) -> Option<f64> {
+        self.fused_dt_global.take()
     }
 
     pub fn nworkers(&self) -> usize {
@@ -223,6 +237,19 @@ fn split_chunks<'a, T>(
     parts
 }
 
+/// Shared slot of the overlapped dt collective (fused final stage, tree
+/// collectives): the posting task folds the per-pack minima, posts the
+/// `iallreduce(Min)` on the driver's collective communicator, and parks
+/// the handle here; the draining task polls it to completion while other
+/// lists' boundary polls keep running on the same worker pool.
+struct DtCollSlot<'a> {
+    /// `Some` only when the overlapped reduction is active this stage.
+    comm: Option<&'a Comm>,
+    handle: Mutex<Option<CollHandle>>,
+    /// Global dt bits, stored when the handle completes.
+    global: AtomicU64,
+}
+
 /// Per-pack context of the fused stage pipeline: one task list per pack
 /// runs fluxes → flux-correction → combine → boundary sends → receive
 /// polls against this context, which owns a disjoint `&mut` slice of every
@@ -258,6 +285,11 @@ struct FusedPackCtx<'a> {
     minima: &'a [AtomicU64],
     /// Result slot written by the regional cross-list fold.
     dt_result: &'a AtomicU64,
+    /// Count of per-pack dt tasks that have stored their minimum — the
+    /// overlapped collective posts once this reaches the pack count.
+    dt_done: &'a AtomicUsize,
+    /// The in-flight global dt collective (see [`DtCollSlot`]).
+    coll: &'a DtCollSlot<'a>,
     shape: IndexShape,
     gamma: Real,
     co: StageCoeffs,
@@ -287,13 +319,20 @@ impl HostExec {
         let gamma = sim.pkg.gamma;
         let multilevel = sim.is_multilevel();
         let pack_ranges = sim.mesh_data.block_ranges();
-        let pack_costs = sim.mesh_data.pack_costs(&sim.mesh);
+        let mut pack_costs = sim.mesh_data.pack_costs(&sim.mesh);
         let npacks = pack_ranges.len();
         let nworkers = self.nworkers;
         let policy = self.policy;
         // The fused dt reduction runs on the final RK stage only: t_dt
         // partial minima per pack + one regional cross-list fold.
         let final_stage = si + 1 == native::RK2_STAGES.len();
+        // With tree collectives the GLOBAL dt reduction also runs inside
+        // the region: an extra task list folds the per-pack minima as soon
+        // as the last t_dt lands, posts the iallreduce(Min), and polls the
+        // handle — overlapping the cross-rank exchange with the tail
+        // packs' boundary-receive polls. Flat mode keeps the blocking
+        // post-region allreduce as the oracle.
+        let overlap_coll = final_stage && sim.sp.coll == CollMode::Tree;
         // Reduction slots exist only on the final stage (empty slice
         // otherwise — no t_dt task ever reads it).
         let minima: Vec<AtomicU64> = if final_stage {
@@ -302,6 +341,12 @@ impl HostExec {
             Vec::new()
         };
         let dt_result = AtomicU64::new(f64::INFINITY.to_bits());
+        let dt_done = AtomicUsize::new(0);
+        let coll_slot = DtCollSlot {
+            comm: if overlap_coll && npacks > 0 { Some(&sim.comm_coll) } else { None },
+            handle: Mutex::new(None),
+            global: AtomicU64::new(f64::INFINITY.to_bits()),
+        };
 
         // Scratch moves into a bounded pool (≤ nworkers concurrent flux
         // tasks) and is restored below, also on error paths.
@@ -368,6 +413,8 @@ impl HostExec {
                     pkg: &sim.pkg,
                     minima: &minima,
                     dt_result: &dt_result,
+                    dt_done: &dt_done,
+                    coll: &coll_slot,
                     shape,
                     gamma,
                     co,
@@ -377,7 +424,12 @@ impl HostExec {
                 });
             }
 
-            let mut region: TaskRegion<FusedPackCtx> = TaskRegion::new(npacks);
+            // The overlapped dt collective gets its own (cheap) task list
+            // so its Incomplete polls interleave with every pack's
+            // boundary polls on the worker pool — regional tasks only run
+            // AFTER the pool drains, which would forfeit the overlap.
+            let nlists = npacks + usize::from(overlap_coll && npacks > 0);
+            let mut region: TaskRegion<FusedPackCtx> = TaskRegion::new(nlists);
             let mut dt_marks = Vec::new();
             for pi in 0..npacks {
                 let list = region.list(pi);
@@ -537,15 +589,59 @@ impl HostExec {
                             m = m.min(c.pkg.estimate_dt(&b.data, &b.coords));
                         }
                         c.minima[c.pi].store(m.to_bits(), Ordering::SeqCst);
+                        c.dt_done.fetch_add(1, Ordering::SeqCst);
                         TaskStatus::Complete
                     });
                     dt_marks.push((pi, t_dt));
                 }
             }
-            if final_stage && npacks > 0 {
-                // Regional cross-list fold under the same abort-aware
-                // region: replaces the whole-rank local_dt sweep that used
-                // to run after the cycle.
+            if overlap_coll && npacks > 0 {
+                // Extra task list: fold the per-pack minima the moment the
+                // last t_dt lands, post the global iallreduce(Min), then
+                // poll the tree handle to completion. Both tasks return
+                // Incomplete while waiting, so workers sweep back to the
+                // packs' boundary polls in between — the global dt
+                // reduction rides the same overlap the ghost exchange
+                // uses.
+                let list = region.list(npacks);
+                let t_post = list.add(NONE, move |c: &mut FusedPackCtx| {
+                    if c.abort.load(Ordering::SeqCst) {
+                        return TaskStatus::Complete;
+                    }
+                    if c.dt_done.load(Ordering::SeqCst) < npacks {
+                        return TaskStatus::Incomplete;
+                    }
+                    let mut m = f64::INFINITY;
+                    for a in c.minima {
+                        m = m.min(f64::from_bits(a.load(Ordering::SeqCst)));
+                    }
+                    c.dt_result.store(m.to_bits(), Ordering::SeqCst);
+                    let comm = c.coll.comm.expect("overlap collective comm");
+                    *c.coll.handle.lock().unwrap() =
+                        Some(comm.iallreduce(m, ReduceOp::Min));
+                    TaskStatus::Complete
+                });
+                let _t_drain = list.add(&[t_post], |c: &mut FusedPackCtx| {
+                    if c.abort.load(Ordering::SeqCst) {
+                        return TaskStatus::Complete;
+                    }
+                    let mut slot = c.coll.handle.lock().unwrap();
+                    match slot.as_mut().map(CollHandle::test) {
+                        Some(true) => {
+                            let g = slot.take().expect("handle present").into_f64();
+                            c.coll.global.store(g.to_bits(), Ordering::SeqCst);
+                            TaskStatus::Complete
+                        }
+                        Some(false) => TaskStatus::Incomplete,
+                        // aborted before the post ran
+                        None => TaskStatus::Complete,
+                    }
+                });
+            } else if final_stage && npacks > 0 {
+                // Flat oracle: regional cross-list fold under the same
+                // abort-aware region (replaces the whole-rank local_dt
+                // sweep that used to run after the cycle); the blocking
+                // global allreduce stays in `reduce_dt`.
                 region.add_regional(dt_marks, |c: &mut FusedPackCtx| {
                     let mut m = f64::INFINITY;
                     for a in c.minima {
@@ -554,6 +650,35 @@ impl HostExec {
                     c.dt_result.store(m.to_bits(), Ordering::SeqCst);
                     TaskStatus::Complete
                 });
+            }
+            if overlap_coll && npacks > 0 {
+                // one context (and one seed-cost slot) per task list
+                ctxs.push(FusedPackCtx {
+                    start: 0,
+                    pi: npacks,
+                    blocks: &mut [],
+                    flux: &mut [],
+                    unew: &mut [],
+                    secs: &mut [],
+                    u0: u0_all,
+                    fpending: Vec::new(),
+                    exch: PackExchange::new(topo, comm, CONS),
+                    fcomm,
+                    scratch: &scratch_pool,
+                    stats,
+                    pkg: &sim.pkg,
+                    minima: &minima,
+                    dt_result: &dt_result,
+                    dt_done: &dt_done,
+                    coll: &coll_slot,
+                    shape,
+                    gamma,
+                    co,
+                    dt,
+                    error: None,
+                    abort: &abort,
+                });
+                pack_costs.push(0.0);
             }
 
             let res = region.execute_parallel_weighted(
@@ -583,6 +708,20 @@ impl HostExec {
             // Local dt for this cycle, produced inside the region — the
             // post-cycle `local_dt` consults this instead of re-sweeping.
             self.fused_dt = Some(f64::from_bits(dt_result.load(Ordering::SeqCst)));
+            if overlap_coll {
+                // Every rank posts exactly one dt collective per cycle, so
+                // a rank with zero packs (no task region to overlap with)
+                // still joins the exchange — here, blocking, with an
+                // identity contribution.
+                let g = if npacks > 0 {
+                    f64::from_bits(coll_slot.global.load(Ordering::SeqCst))
+                } else {
+                    sim.comm_coll
+                        .iallreduce(f64::INFINITY, ReduceOp::Min)
+                        .into_f64()
+                };
+                self.fused_dt_global = Some(g);
+            }
         }
         // Physical BCs once every receive has landed — the same point the
         // phased path applies them.

@@ -23,7 +23,7 @@ pub use device::DeviceState;
 pub use host::{HostExec, OverlapStats};
 
 use crate::bvals::{self, PackStrategy};
-use crate::comm::{tags, Comm, Payload, ReduceOp, World};
+use crate::comm::{tags, CollMode, Comm, Payload, ReduceOp, World};
 use crate::config::ParameterInput;
 use crate::error::{Error, Result};
 use crate::hydro::native::{self, FluxArrays, StageCoeffs, RK2_STAGES};
@@ -197,6 +197,10 @@ pub struct SimParams {
     /// Fixed-tree migration strategy (`parthenon/loadbalance mode`,
     /// default incremental; `full` is the bitwise-identity oracle).
     pub lb_mode: RebalanceMode,
+    /// Collective algorithm (`parthenon/comm coll`, default tree; `flat`
+    /// is the bulk-synchronous bitwise oracle). Tree also enables the
+    /// overlapped dt reduction inside the fused final stage.
+    pub coll: CollMode,
     pub impl_: String,
     pub output_dt: f64,
     pub history_dt: f64,
@@ -230,6 +234,9 @@ impl SimParams {
         let lb_mode_s = pin.str_or("parthenon/loadbalance", "mode", "incremental");
         let lb_mode = RebalanceMode::parse(&lb_mode_s)
             .ok_or_else(|| Error::config(format!("unknown loadbalance mode {lb_mode_s:?}")))?;
+        let coll_s = pin.str_or("parthenon/comm", "coll", "tree");
+        let coll = CollMode::parse(&coll_s)
+            .ok_or_else(|| Error::config(format!("unknown coll mode {coll_s:?}")))?;
         Ok(SimParams {
             problem,
             tlim: pin.real_or("parthenon/time", "tlim", 1.0),
@@ -242,6 +249,7 @@ impl SimParams {
             overlap,
             lb_interval: pin.int_or("parthenon/loadbalance", "interval", 0),
             lb_mode,
+            coll,
             impl_: pin.str_or("parthenon/exec", "impl", "jnp"),
             output_dt: pin.real_or("parthenon/output0", "dt", -1.0),
             history_dt: pin.real_or("parthenon/history", "dt", -1.0),
@@ -306,7 +314,7 @@ impl HydroSim {
 
         let comm_cons = world.comm(rank, tags::COMM_BVALS_BASE);
         let comm_flux = world.comm(rank, tags::COMM_FLUX);
-        let comm_coll = world.comm(rank, 0);
+        let comm_coll = world.comm(rank, 0).with_coll(sp.coll);
         let mesh_data = MeshData::build(&mesh, sp.pack_size, None);
 
         let mut sim = HydroSim {
@@ -545,8 +553,20 @@ impl HydroSim {
     /// stage's task region (per-pack partial minima + one regional
     /// cross-list fold on both exec spaces), so no separate sweep over the
     /// blocks runs here; the phased oracle still sweeps (Host) or folds
-    /// the staged per-block dts (Device).
+    /// the staged per-block dts (Device). With tree collectives the fused
+    /// final stage also posted the global `iallreduce(Min)` from inside
+    /// the task region and drained it there (overlapped with the tail
+    /// packs' boundary polls), so this just picks up the finished global
+    /// value — no rank blocks here at all.
     pub fn reduce_dt(&mut self) -> f64 {
+        if let Some(g) = self
+            .device
+            .as_mut()
+            .and_then(|d| d.take_global_dt())
+            .or_else(|| self.host.as_mut().and_then(|h| h.take_global_dt()))
+        {
+            return g;
+        }
         let local = if let Some(dev) = &self.device {
             dev.local_dt(self)
         } else if let Some(h) = &self.host {

@@ -38,7 +38,11 @@ fn gather_global_costs(sim: &HydroSim, new_leaves: &[LogicalLocation]) -> Vec<f6
         payload.extend_from_slice(&(b.gid as u64).to_le_bytes());
         payload.extend_from_slice(&b.cost.to_le_bytes());
     }
-    let gathered = sim.world.comm(sim.mesh.my_rank, 3).allgather(payload);
+    let gathered = sim
+        .world
+        .comm(sim.mesh.my_rank, 3)
+        .with_coll(sim.sp.coll)
+        .allgather(payload);
     let mut by_loc: HashMap<LogicalLocation, f64> = HashMap::new();
     for blob in &gathered {
         for chunk in blob.chunks_exact(16) {
@@ -67,7 +71,11 @@ pub fn check_and_regrid(sim: &mut HydroSim) -> Result<bool> {
     }
 
     // 2. allgather flags -> identical flag map on every rank
-    let gathered = sim.world.comm(sim.mesh.my_rank, 3).allgather(payload);
+    let gathered = sim
+        .world
+        .comm(sim.mesh.my_rank, 3)
+        .with_coll(sim.sp.coll)
+        .allgather(payload);
     let mut flags: HashMap<LogicalLocation, AmrFlag> = HashMap::new();
     for blob in &gathered {
         for chunk in blob.chunks_exact(9) {

@@ -14,7 +14,7 @@
 //! receive set is deterministic and deadlock-free even under periodic
 //! self-adjacency.
 
-use crate::comm::{tags, Comm, Payload, ReduceOp};
+use crate::comm::{tags, Comm, Payload};
 use crate::error::{Error, Result};
 use crate::mesh::{Mesh, NeighborKind};
 
@@ -140,6 +140,12 @@ pub fn transport_round(mesh: &mut Mesh, comm: &Comm, swarm: &str) -> Result<usiz
 }
 
 /// Transport until globally quiescent (max `max_rounds` to bound runaways).
+///
+/// The stop criterion counts moved particles *exactly*: the per-round
+/// reduction is an integer-safe `iallreduce_u64` (a f64 Sum would silently
+/// lose counts past 2^53 and can't be trusted as an == 0 test under
+/// reassociation), and on the tree path the handle is polled while this
+/// rank keeps draining its own inbound particle messages.
 pub fn transport_until_done(
     mesh: &mut Mesh,
     comm: &Comm,
@@ -150,8 +156,14 @@ pub fn transport_until_done(
     for _ in 0..max_rounds {
         let moved = transport_round(mesh, comm, swarm)?;
         total += moved;
-        let global = comm.allreduce(moved as f64, ReduceOp::Sum);
-        if global == 0.0 {
+        // The round's sends/receives are fully drained by
+        // `transport_round` (one message per edge), so the collective is
+        // the only outstanding traffic; on the tree path this posts an
+        // `iallreduce_u64` whose handle is polled right here, and ranks
+        // that finish their local round early progress the tree while
+        // stragglers are still mid-round. Flat keeps the blocking oracle.
+        let global = comm.allreduce_u64(moved as u64);
+        if global == 0 {
             return Ok(total);
         }
     }

@@ -1,0 +1,332 @@
+//! Tree-structured collectives vs the flat bulk-synchronous oracle.
+//!
+//! The `comm::coll` tree path (binomial reduce+broadcast, dissemination
+//! barrier) must be BITWISE identical to the flat generation-counted
+//! oracle — for the raw ops (Min/Max/Sum, u64, allgather), under
+//! multi-threaded contention, and end-to-end through a full simulation
+//! where the tree path additionally overlaps the global dt reduction with
+//! the fused stage's boundary polls (state AND dt bits must match across
+//! schedulers, worker counts and execution spaces).
+
+mod common;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use parthenon::comm::{CollMode, Payload, ReduceOp, World};
+use parthenon::config::ParameterInput;
+use parthenon::driver::{regrid, EvolutionDriver, HydroSim};
+
+/// Per-rank input values with mixed signs/magnitudes (nothing special
+/// about them beyond being awkward for naive summation).
+fn rank_value(rank: usize, i: usize) -> f64 {
+    let s = if (rank + i) % 2 == 0 { 1.0 } else { -1.0 };
+    s * (1.0 + rank as f64 * 0.3125 + i as f64 * 1e-7) * 10f64.powi((i % 5) as i32 - 2)
+}
+
+/// Run `iters` allreduces per op on `p` rank-threads under `mode`; return
+/// the result bit patterns (identical on every rank, checked).
+fn reduce_bits(mode: CollMode, p: usize, iters: usize) -> Vec<u64> {
+    let out: Arc<Mutex<Vec<Vec<u64>>>> = Arc::new(Mutex::new(vec![Vec::new(); p]));
+    let o2 = out.clone();
+    World::launch(p, move |rank, world| {
+        let comm = world.comm(rank, 0).with_coll(mode);
+        let mut bits = Vec::new();
+        for i in 0..iters {
+            for op in [ReduceOp::Min, ReduceOp::Max, ReduceOp::Sum] {
+                bits.push(comm.allreduce(rank_value(rank, i), op).to_bits());
+            }
+        }
+        o2.lock().unwrap()[rank] = bits;
+    });
+    let per_rank = Arc::try_unwrap(out).unwrap().into_inner().unwrap();
+    for r in 1..p {
+        assert_eq!(per_rank[0], per_rank[r], "ranks 0 and {r} disagree");
+    }
+    per_rank.into_iter().next().unwrap()
+}
+
+#[test]
+fn tree_matches_flat_bitwise_for_min_max_sum() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
+    for p in [2usize, 3, 5, 8] {
+        let flat = reduce_bits(CollMode::Flat, p, 8);
+        let tree = reduce_bits(CollMode::Tree, p, 8);
+        assert_eq!(flat, tree, "tree must be bitwise identical to flat at {p} ranks");
+    }
+}
+
+#[test]
+fn tree_sum_is_reproducible_across_runs() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
+    // Sum is the order-sensitive op: the tree's fixed fold order (own
+    // value, then children ascending) must make repeat runs bit-stable.
+    let a = reduce_bits(CollMode::Tree, 7, 8);
+    let b = reduce_bits(CollMode::Tree, 7, 8);
+    assert_eq!(a, b, "tree Sum fold order must be deterministic");
+}
+
+#[test]
+fn u64_reduction_is_exact_past_f64_mantissa() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
+    // (1 << 53) + rank: a f64 Sum would round these; the particle
+    // quiescence count relies on the integer path being exact.
+    for mode in [CollMode::Flat, CollMode::Tree] {
+        let p = 4;
+        World::launch(p, move |rank, world| {
+            let comm = world.comm(rank, 0).with_coll(mode);
+            let total = comm.allreduce_u64((1u64 << 53) + rank as u64);
+            assert_eq!(total, 4 * (1u64 << 53) + 6, "mode {mode:?}");
+            // and the == 0 stop criterion must be trustworthy
+            assert_eq!(comm.allreduce_u64(0), 0, "mode {mode:?}");
+        });
+    }
+}
+
+#[test]
+fn allgather_u64s_identical_across_modes() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
+    // The incremental-rebalance subset refresh is built on allgather_u64s
+    // with per-rank payload lengths that legitimately differ.
+    let p = 5;
+    let gather = |mode: CollMode| {
+        let out: Arc<Mutex<Vec<Vec<Vec<u64>>>>> = Arc::new(Mutex::new(vec![Vec::new(); p]));
+        let o2 = out.clone();
+        World::launch(p, move |rank, world| {
+            let comm = world.comm(rank, 0).with_coll(mode);
+            let mine: Vec<u64> = (0..rank).map(|i| (rank * 100 + i) as u64).collect();
+            o2.lock().unwrap()[rank] = comm.allgather_u64s(&mine);
+        });
+        Arc::try_unwrap(out).unwrap().into_inner().unwrap()
+    };
+    let flat = gather(CollMode::Flat);
+    let tree = gather(CollMode::Tree);
+    assert_eq!(flat, tree);
+    // rank order, not arrival order
+    for (r, blob) in flat[0].iter().enumerate() {
+        assert_eq!(blob.len(), r);
+        assert!(blob.iter().enumerate().all(|(i, v)| *v == (r * 100 + i) as u64));
+    }
+}
+
+#[test]
+fn mixed_collectives_under_thread_contention() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
+    // 8 rank-threads hammering interleaved reductions, gathers, barriers
+    // and unrelated pt2pt traffic on the same world: the sequence-tagged
+    // tree exchanges must never cross-talk with each other or with the
+    // pt2pt messages.
+    let p = 8usize;
+    let iters = 40usize;
+    World::launch(p, move |rank, world| {
+        let comm = world.comm(rank, 0).with_coll(CollMode::Tree);
+        let pt = world.comm(rank, 7);
+        for i in 0..iters {
+            pt.isend((rank + 1) % p, i as u64, Payload::F32(vec![rank as f32; 3]));
+            let s = comm.allreduce((rank + i) as f64, ReduceOp::Sum);
+            let expect: f64 = (0..p).map(|r| (r + i) as f64).sum();
+            assert_eq!(s, expect, "iter {i}");
+            // two overlapping handles drained out of order
+            let h1 = comm.iallreduce(rank as f64, ReduceOp::Max);
+            let h2 = comm.iallreduce(rank as f64, ReduceOp::Min);
+            assert_eq!(h2.into_f64(), 0.0);
+            assert_eq!(h1.into_f64(), (p - 1) as f64);
+            let gathered = comm.allgather(vec![rank as u8; rank % 3]);
+            for (r, g) in gathered.iter().enumerate() {
+                assert_eq!(g.len(), r % 3, "iter {i}");
+            }
+            comm.barrier();
+            let got = pt.recv((rank + p - 1) % p, i as u64).into_f32().unwrap();
+            assert_eq!(got, vec![((rank + p - 1) % p) as f32; 3]);
+        }
+    });
+}
+
+/// Run `deck` on `nranks` ranks for `steps`; return (gid -> interior CONS,
+/// final dt bits — asserted identical across ranks).
+fn run_sim_multirank(
+    deck: String,
+    overrides: Vec<String>,
+    nranks: usize,
+    steps: usize,
+) -> (Vec<(usize, Vec<f32>)>, u64) {
+    let results: Arc<Mutex<HashMap<usize, Vec<f32>>>> = Arc::new(Mutex::new(HashMap::new()));
+    let dts: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(vec![0; nranks]));
+    let r2 = results.clone();
+    let d2 = dts.clone();
+    World::launch(nranks, move |rank, world| {
+        let mut pin = ParameterInput::from_str(&deck).unwrap();
+        for ov in &overrides {
+            pin.apply_override(ov).unwrap();
+        }
+        let mut sim = HydroSim::new(pin, rank, world).unwrap();
+        for _ in 0..steps {
+            sim.step().unwrap();
+        }
+        sim.sync_device_to_blocks().unwrap();
+        d2.lock().unwrap()[rank] = sim.dt.to_bits();
+        let mut res = r2.lock().unwrap();
+        for (gid, data) in common::cons_by_gid(&sim) {
+            res.insert(gid, data);
+        }
+    });
+    let dts = Arc::try_unwrap(dts).unwrap().into_inner().unwrap();
+    for r in 1..nranks {
+        assert_eq!(
+            dts[0], dts[r],
+            "ranks 0 and {r} ended with different global dt bits"
+        );
+    }
+    let map = Arc::try_unwrap(results).unwrap().into_inner().unwrap();
+    let mut out: Vec<(usize, Vec<f32>)> = map.into_iter().collect();
+    out.sort_by_key(|(gid, _)| *gid);
+    (out, dts[0])
+}
+
+#[test]
+fn sim_state_and_dt_bits_identical_tree_vs_flat_host() {
+    // Runs at PARTHENON_TEST_RANKS ranks: 1 in the single-rank CI step,
+    // 2 in the multi-rank step — the overlapped dt path must be exact in
+    // both regimes.
+    let nranks = common::test_ranks();
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    let (base_state, base_dt) = run_sim_multirank(
+        deck.clone(),
+        vec![
+            "parthenon/comm/coll=flat".into(),
+            "parthenon/exec/sched=static".into(),
+            "parthenon/exec/nworkers=1".into(),
+            "parthenon/exec/pack_size=2".into(),
+        ],
+        nranks,
+        5,
+    );
+    for sched in ["static", "stealing"] {
+        for nw in [1usize, 4] {
+            let (state, dt) = run_sim_multirank(
+                deck.clone(),
+                vec![
+                    "parthenon/comm/coll=tree".into(),
+                    format!("parthenon/exec/sched={sched}"),
+                    format!("parthenon/exec/nworkers={nw}"),
+                    "parthenon/exec/pack_size=2".into(),
+                ],
+                nranks,
+                5,
+            );
+            assert_eq!(
+                common::max_state_diff(&base_state, &state),
+                0.0,
+                "tree state diverged (sched={sched} nworkers={nw})"
+            );
+            assert_eq!(
+                base_dt, dt,
+                "overlapped tree dt bits diverged from the blocking flat \
+                 oracle (sched={sched} nworkers={nw})"
+            );
+        }
+    }
+}
+
+#[test]
+fn sim_state_and_dt_bits_identical_tree_vs_flat_device() {
+    if !common::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let nranks = common::test_ranks();
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    let dev = |coll: &str, sched: &str, nw: usize| {
+        run_sim_multirank(
+            deck.clone(),
+            vec![
+                format!("parthenon/comm/coll={coll}"),
+                "parthenon/exec/space=device".into(),
+                "parthenon/exec/strategy=perpack".into(),
+                format!("parthenon/exec/sched={sched}"),
+                format!("parthenon/exec/nworkers={nw}"),
+                "parthenon/exec/pack_size=2".into(),
+            ],
+            nranks,
+            4,
+        )
+    };
+    let (base_state, base_dt) = dev("flat", "static", 1);
+    for sched in ["static", "stealing"] {
+        for nw in [1usize, 4] {
+            let (state, dt) = dev("tree", sched, nw);
+            assert_eq!(
+                common::max_state_diff(&base_state, &state),
+                0.0,
+                "device tree state diverged (sched={sched} nworkers={nw})"
+            );
+            assert_eq!(
+                base_dt, dt,
+                "device overlapped dt bits diverged (sched={sched} nworkers={nw})"
+            );
+        }
+    }
+}
+
+#[test]
+fn incremental_rebalance_unchanged_on_tree_path() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
+    if !common::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // The incremental rebalance's subset boundary refresh runs its
+    // allgather_u64s through the configured collective path; a mid-run
+    // full-swap migration must stay bitwise transparent on tree.
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    let run = |coll: &'static str| {
+        let deck = deck.clone();
+        let results: Arc<Mutex<HashMap<usize, Vec<f32>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let r2 = results.clone();
+        World::launch(2, move |rank, world| {
+            let mut pin = ParameterInput::from_str(&deck).unwrap();
+            pin.apply_override(&format!("parthenon/comm/coll={coll}")).unwrap();
+            pin.apply_override("parthenon/exec/space=device").unwrap();
+            pin.apply_override("parthenon/exec/strategy=perpack").unwrap();
+            pin.apply_override("parthenon/exec/pack_size=2").unwrap();
+            let mut sim = HydroSim::new(pin, rank, world).unwrap();
+            for s in 0..5 {
+                sim.step().unwrap();
+                if s == 2 {
+                    let new_ranks: Vec<usize> =
+                        sim.mesh.ranks.iter().map(|r| 1 - *r).collect();
+                    regrid::rebalance_incremental(&mut sim, new_ranks).unwrap();
+                }
+            }
+            sim.sync_device_to_blocks().unwrap();
+            let mut res = r2.lock().unwrap();
+            for (gid, data) in common::cons_by_gid(&sim) {
+                res.insert(gid, data);
+            }
+        });
+        let map = Arc::try_unwrap(results).unwrap().into_inner().unwrap();
+        let mut out: Vec<(usize, Vec<f32>)> = map.into_iter().collect();
+        out.sort_by_key(|(gid, _)| *gid);
+        out
+    };
+    let flat = run("flat");
+    let tree = run("tree");
+    assert_eq!(
+        common::max_state_diff(&flat, &tree),
+        0.0,
+        "incremental rebalance must be identical under tree collectives"
+    );
+}
