@@ -25,9 +25,9 @@ fn main() {
                 for i in 0..n {
                     if rank == 0 {
                         comm.isend(1, i, Payload::F32(vec![1.0; 16]));
-                        let _ = comm.recv(1, i);
+                        let _ = comm.recv(1, i).unwrap();
                     } else {
-                        let _ = comm.recv(0, i);
+                        let _ = comm.recv(0, i).unwrap();
                         comm.isend(0, i, Payload::F32(vec![1.0; 16]));
                     }
                 }

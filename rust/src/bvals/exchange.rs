@@ -20,7 +20,7 @@ use crate::mesh::{
     NeighborKind,
 };
 use crate::tasks::{TaskRegion, TaskStatus, NONE};
-use crate::util::backoff::{ProgressWait, STALL_LIMIT};
+use crate::util::backoff::ProgressWait;
 use crate::util::stealing::StealPolicy;
 use crate::Real;
 
@@ -558,7 +558,7 @@ pub fn poll_receives_blocks(
         if state.done[idx] {
             continue;
         }
-        let Some(payload) = comm.try_recv(*src, *tag) else {
+        let Some(payload) = comm.try_recv(*src, *tag)? else {
             all = false;
             continue;
         };
@@ -641,18 +641,25 @@ pub fn exchange_blocking(
 ) -> crate::error::Result<()> {
     post_sends(mesh, comm, var)?;
     let mut state = post_receives(mesh, comm, var);
-    let mut wait = ProgressWait::new(STALL_LIMIT);
+    let mut wait = ProgressWait::new(comm.stall_limit());
     let mut remaining = state.remaining();
     while !poll_receives(mesh, comm, var, &mut state)? {
         let now = state.remaining();
         let progressed = now < remaining;
         remaining = now;
         if !wait.step(progressed) {
-            return Err(crate::error::Error::Comm(format!(
-                "exchange of {var:?} stalled ({} segments missing after {:?} idle)",
-                state.remaining(),
-                wait.idle_elapsed()
-            )));
+            let e = crate::error::Error::Timeout {
+                what: format!(
+                    "exchange of {var:?} ({} segments missing)",
+                    state.remaining()
+                ),
+                rank: Some(comm.rank()),
+                peer: None,
+                tag: None,
+                elapsed: wait.idle_elapsed(),
+            };
+            comm.world().escalate(comm.rank(), &e);
+            return Err(e);
         }
     }
     apply_block_physical_bcs(mesh, var, vector_comps)?;
@@ -706,18 +713,25 @@ pub fn exchange_blocking_subset(
             state.done.extend(s.done);
         }
     }
-    let mut wait = ProgressWait::new(STALL_LIMIT);
+    let mut wait = ProgressWait::new(comm.stall_limit());
     let mut remaining = state.remaining();
     while !poll_receives(mesh, comm, var, &mut state)? {
         let now = state.remaining();
         let progressed = now < remaining;
         remaining = now;
         if !wait.step(progressed) {
-            return Err(crate::error::Error::Comm(format!(
-                "subset exchange of {var:?} stalled ({} segments missing after {:?} idle)",
-                state.remaining(),
-                wait.idle_elapsed()
-            )));
+            let e = crate::error::Error::Timeout {
+                what: format!(
+                    "subset exchange of {var:?} ({} segments missing)",
+                    state.remaining()
+                ),
+                rank: Some(comm.rank()),
+                peer: None,
+                tag: None,
+                elapsed: wait.idle_elapsed(),
+            };
+            comm.world().escalate(comm.rank(), &e);
+            return Err(e);
         }
     }
     apply_block_physical_bcs(mesh, var, vector_comps)?;
@@ -796,7 +810,10 @@ pub fn exchange_tasked(
         states: (0..npacks).map(|_| None).collect(),
         error: None,
     };
-    region.execute(&mut ctx, 200_000)?;
+    if let Err(e) = region.execute(&mut ctx, 200_000) {
+        comm.world().escalate(comm.rank(), &e);
+        return Err(e);
+    }
     let ExchCtx { mesh, error, .. } = ctx; // recover borrows from the ctx
     if let Some(e) = error {
         return Err(e);
@@ -986,7 +1003,14 @@ pub fn exchange_tasked_parallel(
                 }
             });
         }
-        let ctxs = region.execute_parallel(ctxs, nworkers, policy, STALL_LIMIT)?;
+        let ctxs =
+            match region.execute_parallel(ctxs, nworkers, policy, comm.stall_limit()) {
+                Ok(c) => c,
+                Err(e) => {
+                    comm.world().escalate(comm.rank(), &e);
+                    return Err(e);
+                }
+            };
         for c in ctxs {
             if let Some(e) = c.error {
                 first_error = Some(e);

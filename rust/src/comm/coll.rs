@@ -32,7 +32,8 @@
 //! deadlocking — the tree-path half of the collective-mismatch guard.
 
 use super::simmpi::{Comm, Payload, ReduceOp};
-use crate::util::backoff::{ProgressWait, STALL_LIMIT};
+use crate::error::{Error, Result};
+use crate::util::backoff::ProgressWait;
 
 /// Which collective algorithm a [`Comm`]'s blocking calls use
 /// (`parthenon/comm coll`, default `tree`).
@@ -286,8 +287,9 @@ impl CollHandle {
             h.finalize();
         } else {
             // push the contribution toward the parent (or the round-0
-            // barrier message) onto the wire immediately
-            h.advance();
+            // barrier message) onto the wire immediately; an abort at post
+            // time is sticky, so test()/wait() re-report it
+            let _ = h.advance();
         }
         h
     }
@@ -393,8 +395,9 @@ impl CollHandle {
     }
 
     /// Drive the state machine as far as it goes without blocking.
-    /// Returns true if any state advanced (progress, for backoff resets).
-    fn advance(&mut self) -> bool {
+    /// Returns true if any state advanced (progress, for backoff resets);
+    /// fails when the World has aborted (poll drains with `Aborted`).
+    fn advance(&mut self) -> Result<bool> {
         let rank = self.comm.rank();
         let size = self.comm.size();
         let mut progressed = false;
@@ -407,7 +410,7 @@ impl CollHandle {
                     // later child's message arrives first
                     while next < self.children.len() {
                         let src = self.children[next];
-                        match self.comm.try_recv(src, tag(self.seq, CODE_REDUCE)) {
+                        match self.comm.try_recv(src, tag(self.seq, CODE_REDUCE))? {
                             Some(p) => {
                                 let b = self.expect_bytes(src, p);
                                 self.fold(src, b);
@@ -419,7 +422,7 @@ impl CollHandle {
                     }
                     if next < self.children.len() {
                         self.phase = Phase::Reduce { next_child: next };
-                        return progressed;
+                        return Ok(progressed);
                     }
                     // subtree complete
                     if rank == 0 {
@@ -432,7 +435,7 @@ impl CollHandle {
                             );
                         }
                         self.finalize();
-                        return true;
+                        return Ok(true);
                     }
                     self.comm.isend(
                         parent(rank),
@@ -444,7 +447,7 @@ impl CollHandle {
                 }
                 Phase::AwaitBcast => {
                     let src = parent(rank);
-                    match self.comm.try_recv(src, tag(self.seq, CODE_BCAST)) {
+                    match self.comm.try_recv(src, tag(self.seq, CODE_BCAST))? {
                         Some(p) => {
                             let bytes = self.expect_bytes(src, p);
                             self.adopt(src, &bytes);
@@ -456,16 +459,16 @@ impl CollHandle {
                                 );
                             }
                             self.finalize();
-                            return true;
+                            return Ok(true);
                         }
-                        None => return progressed,
+                        None => return Ok(progressed),
                     }
                 }
                 Phase::Dissem { round, sent } => {
                     let nrounds = ceil_log2(size);
                     if round >= nrounds {
                         self.phase = Phase::Done;
-                        return true;
+                        return Ok(true);
                     }
                     let stride = 1usize << round;
                     if !sent {
@@ -479,7 +482,9 @@ impl CollHandle {
                         progressed = true;
                     }
                     let src = (rank + size - stride) % size;
-                    match self.comm.try_recv(src, tag(self.seq, CODE_BARRIER0 + round as u64))
+                    match self
+                        .comm
+                        .try_recv(src, tag(self.seq, CODE_BARRIER0 + round as u64))?
                     {
                         Some(p) => {
                             let b = self.expect_bytes(src, p);
@@ -487,21 +492,23 @@ impl CollHandle {
                             self.phase = Phase::Dissem { round: round + 1, sent: false };
                             progressed = true;
                         }
-                        None => return progressed,
+                        None => return Ok(progressed),
                     }
                 }
-                Phase::Done => return progressed,
+                Phase::Done => return Ok(progressed),
             }
         }
     }
 
-    /// Poll once (MPI_Test): true when the collective has completed.
-    pub fn test(&mut self) -> bool {
+    /// Poll once (MPI_Test): `Ok(true)` when the collective has completed.
+    /// Fails fast (with the abort's origin) once the World has aborted —
+    /// no spin to the stall limit when a peer already died.
+    pub fn test(&mut self) -> Result<bool> {
         if !matches!(self.phase, Phase::Done) {
-            self.comm.check_coll_abort();
-            self.advance();
+            self.comm.abort_check()?;
+            self.advance()?;
         }
-        matches!(self.phase, Phase::Done)
+        Ok(matches!(self.phase, Phase::Done))
     }
 
     /// True without polling (no mailbox access).
@@ -510,61 +517,73 @@ impl CollHandle {
     }
 
     /// Block (bounded spin-then-backoff) until the collective completes.
-    /// Panics with a rank-annotated message on a stall — a stalled
-    /// collective means a peer never entered it.
-    pub fn wait(&mut self) {
-        let mut pw = ProgressWait::new(STALL_LIMIT);
+    /// A wait with zero progress for the watchdog budget escalates to a
+    /// rank-annotated [`Error::Timeout`] and posts the World abort (a
+    /// stalled collective means a peer never entered it); once completed,
+    /// a handle always drains Ok even if the World aborts afterwards.
+    pub fn wait(&mut self) -> Result<()> {
+        let mut pw = ProgressWait::new(self.comm.stall_limit());
         loop {
-            let progressed = self.advance();
             if matches!(self.phase, Phase::Done) {
-                return;
+                return Ok(());
             }
-            self.comm.check_coll_abort();
+            self.comm.abort_check()?;
+            let progressed = self.advance()?;
+            if matches!(self.phase, Phase::Done) {
+                return Ok(());
+            }
             if !pw.step(progressed) {
-                panic!(
-                    "tree {} stalled on rank {} ({:?} with no progress) — did every \
-                     rank enter the same collective?",
-                    kind_name(self.data.kind()),
-                    self.comm.rank(),
-                    pw.idle_elapsed()
-                );
+                let e = Error::Timeout {
+                    what: format!(
+                        "tree {} (did every rank enter the same collective?)",
+                        kind_name(self.data.kind())
+                    ),
+                    rank: Some(self.comm.rank()),
+                    peer: None,
+                    tag: None,
+                    elapsed: pw.idle_elapsed(),
+                };
+                self.comm.world().escalate(self.comm.rank(), &e);
+                return Err(e);
             }
         }
     }
 
     /// Completed scalar allreduce result.
-    pub fn into_f64(mut self) -> f64 {
-        self.wait();
+    pub fn into_f64(mut self) -> Result<f64> {
+        self.wait()?;
         match self.data {
-            CollData::Reduce { ref acc, .. } if acc.len() == 1 => acc[0],
-            _ => panic!("collective handle is not a scalar allreduce"),
+            CollData::Reduce { ref acc, .. } if acc.len() == 1 => Ok(acc[0]),
+            _ => Err(Error::Comm("collective handle is not a scalar allreduce".into())),
         }
     }
 
     /// Completed vector allreduce result.
-    pub fn into_vec(mut self) -> Vec<f64> {
-        self.wait();
+    pub fn into_vec(mut self) -> Result<Vec<f64>> {
+        self.wait()?;
         match self.data {
-            CollData::Reduce { acc, .. } => acc,
-            _ => panic!("collective handle is not an allreduce_vec"),
+            CollData::Reduce { acc, .. } => Ok(acc),
+            _ => Err(Error::Comm("collective handle is not an allreduce_vec".into())),
         }
     }
 
     /// Completed exact integer sum.
-    pub fn into_u64(mut self) -> u64 {
-        self.wait();
+    pub fn into_u64(mut self) -> Result<u64> {
+        self.wait()?;
         match self.data {
-            CollData::ReduceU64 { acc } => acc,
-            _ => panic!("collective handle is not an allreduce_u64"),
+            CollData::ReduceU64 { acc } => Ok(acc),
+            _ => Err(Error::Comm("collective handle is not an allreduce_u64".into())),
         }
     }
 
     /// Completed allgather result, one blob per rank in rank order.
-    pub fn into_gathered(mut self) -> Vec<Vec<u8>> {
-        self.wait();
+    pub fn into_gathered(mut self) -> Result<Vec<Vec<u8>>> {
+        self.wait()?;
         match self.data {
-            CollData::Gather { entries } => entries.into_iter().map(|(_, b)| b).collect(),
-            _ => panic!("collective handle is not an allgather"),
+            CollData::Gather { entries } => {
+                Ok(entries.into_iter().map(|(_, b)| b).collect())
+            }
+            _ => Err(Error::Comm("collective handle is not an allgather".into())),
         }
     }
 }
@@ -637,11 +656,11 @@ mod tests {
                 let v = (rank + 1) as f64;
                 let n = size as f64;
                 assert_eq!(
-                    comm.iallreduce(v, ReduceOp::Sum).into_f64(),
+                    comm.iallreduce(v, ReduceOp::Sum).into_f64().unwrap(),
                     n * (n + 1.0) / 2.0
                 );
-                assert_eq!(comm.iallreduce(v, ReduceOp::Min).into_f64(), 1.0);
-                assert_eq!(comm.iallreduce(v, ReduceOp::Max).into_f64(), n);
+                assert_eq!(comm.iallreduce(v, ReduceOp::Min).into_f64().unwrap(), 1.0);
+                assert_eq!(comm.iallreduce(v, ReduceOp::Max).into_f64().unwrap(), n);
             });
         }
     }
@@ -651,7 +670,7 @@ mod tests {
         World::launch(5, |rank, world| {
             let comm = world.comm(rank, 0);
             let v = vec![rank as f64, 10.0 * rank as f64, 1.0];
-            let r = comm.iallreduce_vec(&v, ReduceOp::Sum).into_vec();
+            let r = comm.iallreduce_vec(&v, ReduceOp::Sum).into_vec().unwrap();
             assert_eq!(r, vec![10.0, 100.0, 5.0]);
         });
     }
@@ -663,7 +682,7 @@ mod tests {
         World::launch(3, |rank, world| {
             let comm = world.comm(rank, 0);
             let v = (1u64 << 53) + 1 + rank as u64;
-            let got = comm.iallreduce_u64(v).into_u64();
+            let got = comm.iallreduce_u64(v).into_u64().unwrap();
             let want = 3 * ((1u64 << 53) + 1) + 3;
             assert_eq!(got, want);
             assert_ne!(got as f64 as u64, got, "test value must exceed f64 precision");
@@ -674,7 +693,7 @@ mod tests {
     fn iallgather_rank_order() {
         World::launch(6, |rank, world| {
             let comm = world.comm(rank, 0);
-            let got = comm.iallgather(vec![rank as u8; rank]).into_gathered();
+            let got = comm.iallgather(vec![rank as u8; rank]).into_gathered().unwrap();
             assert_eq!(got.len(), 6);
             for (r, blob) in got.iter().enumerate() {
                 assert_eq!(blob, &vec![r as u8; r]);
@@ -690,7 +709,7 @@ mod tests {
             let comm = world.comm(_rank, 0);
             BEFORE.fetch_add(1, Ordering::SeqCst);
             let mut h = comm.ibarrier();
-            h.wait();
+            h.wait().unwrap();
             // every rank must have incremented before any rank passes
             assert_eq!(BEFORE.load(Ordering::SeqCst), 5);
         });
@@ -701,12 +720,15 @@ mod tests {
         World::launch(4, |rank, world| {
             let comm = world.comm(rank, 0);
             for i in 0..50u64 {
-                let s = comm.iallreduce(i as f64, ReduceOp::Sum).into_f64();
+                let s = comm.iallreduce(i as f64, ReduceOp::Sum).into_f64().unwrap();
                 assert_eq!(s, 4.0 * i as f64);
-                let g = comm.iallgather(vec![(rank as u64 + i) as u8]).into_gathered();
+                let g = comm
+                    .iallgather(vec![(rank as u64 + i) as u8])
+                    .into_gathered()
+                    .unwrap();
                 assert_eq!(g.len(), 4);
                 assert_eq!(g[rank][0], (rank as u64 + i) as u8);
-                let u = comm.iallreduce_u64(i).into_u64();
+                let u = comm.iallreduce_u64(i).into_u64().unwrap();
                 assert_eq!(u, 4 * i);
             }
         });
@@ -720,8 +742,8 @@ mod tests {
             let comm = world.comm(rank, 0);
             let h1 = comm.iallreduce(rank as f64, ReduceOp::Sum);
             let h2 = comm.iallreduce(1.0, ReduceOp::Sum);
-            assert_eq!(h2.into_f64(), 4.0);
-            assert_eq!(h1.into_f64(), 6.0);
+            assert_eq!(h2.into_f64().unwrap(), 4.0);
+            assert_eq!(h1.into_f64().unwrap(), 6.0);
         });
     }
 

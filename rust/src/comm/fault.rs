@@ -1,0 +1,369 @@
+//! Deterministic fault injection for the simulated-MPI fabric.
+//!
+//! A seed-driven fault plan (parsed from `parthenon/fault`) perturbs the
+//! mailbox send path — delaying, duplicating, reordering, or bit-flipping
+//! payloads, and simulating rank death — while checksum framing turns every
+//! corruption into a structured [`Error::CorruptMessage`] instead of silent
+//! wrong answers. Duplicates and reordering are absorbed transparently by
+//! per-(source, tag) sequence numbers: the receiver delivers frames in send
+//! order no matter how the fabric scrambled them, so a faulty run must be
+//! bitwise identical to a fault-free one (pinned by `rust/tests/chaos.rs`).
+//!
+//! The module also owns the World-level cooperative-abort cell: any rank
+//! hitting a timeout, corruption, or simulated death posts an abort on the
+//! reserved [`ABORT_KEY`] tag (waking every blocked receiver), and all
+//! pending waits drain with [`Error::Aborted`] within one watchdog period.
+//!
+//! Framing invariant: a sender frames messages iff the World's fault plan
+//! is installed at send time, and a receiver decodes iff it is installed at
+//! receive time. Installation therefore must happen on every rank *before*
+//! that rank's first send or receive (`HydroSim::new` installs before any
+//! communication); a message framed under one regime and read under the
+//! other is reported as corrupt rather than silently mis-parsed.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::simmpi::Payload;
+use crate::config::ParameterInput;
+use crate::error::Error;
+use crate::metrics::FaultStats;
+use crate::util::rng::XorShift;
+
+/// Reserved mailbox key for abort postings: bit 46 of the 48-bit tag space,
+/// outside every application key (`comm_id << 48 | tag`, application tags
+/// stay far below bit 46) and below the tree-collective bit (47).
+pub(crate) const ABORT_KEY: u64 = 1 << 46;
+
+/// `parthenon/fault` parameters — the seed-driven fault plan.
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    /// RNG seed for every injection decision.
+    pub seed: u64,
+    /// Probability a sent frame is parked in the receiver's limbo buffer
+    /// and only released on a later poll miss (arrives late, after
+    /// younger messages).
+    pub delay_prob: f64,
+    /// Probability a sent frame is enqueued twice (same sequence number;
+    /// the receiver must drop the duplicate).
+    pub dup_prob: f64,
+    /// Probability a sent frame jumps the queue (delivered before older
+    /// undelivered frames of the same (source, tag)).
+    pub reorder_prob: f64,
+    /// Probability one bit of a sent frame is flipped after checksumming.
+    pub corrupt_prob: f64,
+    /// Rank to kill (-1 = none)...
+    pub kill_rank: i64,
+    /// ...at the start of this cycle (-1 = never).
+    pub kill_cycle: i64,
+    /// Watchdog budget (ms) for every communication/task wait before it
+    /// escalates to [`Error::Timeout`].
+    pub watchdog_ms: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> FaultConfig {
+        FaultConfig {
+            seed: 0,
+            delay_prob: 0.0,
+            dup_prob: 0.0,
+            reorder_prob: 0.0,
+            corrupt_prob: 0.0,
+            kill_rank: -1,
+            kill_cycle: -1,
+            watchdog_ms: 60_000,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Parse the `parthenon/fault` block (all fields optional; the default
+    /// plan injects nothing and keeps the 60 s watchdog).
+    pub fn from_input(pin: &mut ParameterInput) -> FaultConfig {
+        let d = FaultConfig::default();
+        FaultConfig {
+            seed: pin.int_or("parthenon/fault", "seed", 0).max(0) as u64,
+            delay_prob: pin.real_or("parthenon/fault", "delay_prob", 0.0),
+            dup_prob: pin.real_or("parthenon/fault", "dup_prob", 0.0),
+            reorder_prob: pin.real_or("parthenon/fault", "reorder_prob", 0.0),
+            corrupt_prob: pin.real_or("parthenon/fault", "corrupt_prob", 0.0),
+            kill_rank: pin.int_or("parthenon/fault", "kill_rank", -1),
+            kill_cycle: pin.int_or("parthenon/fault", "kill_cycle", -1),
+            watchdog_ms: pin
+                .int_or("parthenon/fault", "watchdog_ms", d.watchdog_ms as i64)
+                .max(1) as u64,
+        }
+    }
+
+    /// True when the message path must be framed (any message-perturbing
+    /// probability armed). Kill scheduling and the watchdog work without
+    /// framing, so they don't force the framing overhead on.
+    pub fn framing(&self) -> bool {
+        self.delay_prob > 0.0
+            || self.dup_prob > 0.0
+            || self.reorder_prob > 0.0
+            || self.corrupt_prob > 0.0
+    }
+
+    /// True when the plan injects anything at all.
+    pub fn injecting(&self) -> bool {
+        self.framing() || (self.kill_rank >= 0 && self.kill_cycle >= 0)
+    }
+}
+
+/// Injection/escalation counters (atomics; snapshot via
+/// [`FaultCounters::snapshot`] into [`crate::metrics::FaultStats`]).
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    pub delayed: AtomicU64,
+    pub duplicated: AtomicU64,
+    pub reordered: AtomicU64,
+    pub corrupted_injected: AtomicU64,
+    pub corruption_detected: AtomicU64,
+    pub duplicates_dropped: AtomicU64,
+    pub dead_sends_dropped: AtomicU64,
+    pub kills: AtomicU64,
+    pub aborts_posted: AtomicU64,
+    pub timeouts: AtomicU64,
+}
+
+impl FaultCounters {
+    pub fn snapshot(&self) -> FaultStats {
+        let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        FaultStats {
+            delayed: g(&self.delayed),
+            duplicated: g(&self.duplicated),
+            reordered: g(&self.reordered),
+            corrupted_injected: g(&self.corrupted_injected),
+            corruption_detected: g(&self.corruption_detected),
+            duplicates_dropped: g(&self.duplicates_dropped),
+            dead_sends_dropped: g(&self.dead_sends_dropped),
+            kills: g(&self.kills),
+            aborts_posted: g(&self.aborts_posted),
+            timeouts: g(&self.timeouts),
+        }
+    }
+}
+
+/// World-level cooperative-abort cell: first poster wins; every later
+/// waiter reads the origin/reason back as [`Error::Aborted`].
+#[derive(Debug, Default)]
+pub(crate) struct AbortCell {
+    flag: AtomicBool,
+    info: Mutex<Option<(usize, String)>>,
+}
+
+impl AbortCell {
+    /// Record an abort; returns true only for the first poster (callers
+    /// broadcast the reserved-tag wakeup exactly once).
+    pub(crate) fn post(&self, origin: usize, reason: &str) -> bool {
+        let mut info = self.info.lock().unwrap_or_else(|e| e.into_inner());
+        if info.is_some() {
+            return false;
+        }
+        *info = Some((origin, reason.to_string()));
+        self.flag.store(true, Ordering::SeqCst);
+        true
+    }
+
+    pub(crate) fn is_set(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+
+    pub(crate) fn error_for(&self, rank: usize) -> Error {
+        let info = self.info.lock().unwrap_or_else(|e| e.into_inner());
+        let (origin, reason) = info
+            .clone()
+            .unwrap_or((rank, "abort flag set with no info".to_string()));
+        Error::Aborted { rank, origin, reason }
+    }
+}
+
+// -- checksum framing ---------------------------------------------------------
+//
+// Frame layout: [seq u64 LE][kind u8][body][fnv1a(seq..body) u64 LE].
+// `kind` preserves the payload variant across the byte round-trip; the
+// checksum covers everything before it, so a flipped bit anywhere in the
+// frame (except the checksum itself, which then mismatches the recomputed
+// value) is detected.
+
+const KIND_BYTES: u8 = 0;
+const KIND_F32: u8 = 1;
+const KIND_F64: u8 = 2;
+
+/// FNV-1a 64-bit.
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Frame a payload for the faulty fabric.
+pub(crate) fn encode_frame(seq: u64, payload: &Payload) -> Vec<u8> {
+    let (kind, body_len) = match payload {
+        Payload::Bytes(b) => (KIND_BYTES, b.len()),
+        Payload::F32(v) => (KIND_F32, v.len() * 4),
+        Payload::F64(v) => (KIND_F64, v.len() * 8),
+    };
+    let mut out = Vec::with_capacity(8 + 1 + body_len + 8);
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.push(kind);
+    match payload {
+        Payload::Bytes(b) => out.extend_from_slice(b),
+        Payload::F32(v) => {
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Payload::F64(v) => {
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    let csum = fnv1a(&out);
+    out.extend_from_slice(&csum.to_le_bytes());
+    out
+}
+
+/// Verify and unpack a frame. `None` means the checksum (or the shape)
+/// doesn't hold — the caller reports [`Error::CorruptMessage`].
+pub(crate) fn decode_frame(bytes: &[u8]) -> Option<(u64, Payload)> {
+    if bytes.len() < 8 + 1 + 8 {
+        return None;
+    }
+    let (covered, csum_b) = bytes.split_at(bytes.len() - 8);
+    let csum = u64::from_le_bytes(csum_b.try_into().ok()?);
+    if fnv1a(covered) != csum {
+        return None;
+    }
+    let seq = u64::from_le_bytes(covered[..8].try_into().ok()?);
+    let kind = covered[8];
+    let body = &covered[9..];
+    let payload = match kind {
+        KIND_BYTES => Payload::Bytes(body.to_vec()),
+        KIND_F32 => {
+            if body.len() % 4 != 0 {
+                return None;
+            }
+            Payload::F32(
+                body.chunks_exact(4)
+                    .map(|c| crate::Real::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            )
+        }
+        KIND_F64 => {
+            if body.len() % 8 != 0 {
+                return None;
+            }
+            Payload::F64(
+                body.chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            )
+        }
+        _ => return None,
+    };
+    Some((seq, payload))
+}
+
+/// Flip one random bit in the checksum-covered region of a frame (never
+/// the trailing checksum itself, so detection is guaranteed rather than
+/// relying on the flip not colliding with a recomputed sum).
+pub(crate) fn flip_random_bit(frame: &mut [u8], rng: &mut XorShift) {
+    debug_assert!(frame.len() > 8);
+    let covered = frame.len() - 8;
+    let bit = rng.below(covered * 8);
+    frame[bit / 8] ^= 1 << (bit % 8);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_all_kinds() {
+        for p in [
+            Payload::Bytes(vec![1, 2, 3]),
+            Payload::Bytes(Vec::new()),
+            Payload::F32(vec![1.5, -2.25]),
+            Payload::F64(vec![3.141592653589793]),
+        ] {
+            let f = encode_frame(42, &p);
+            let (seq, back) = decode_frame(&f).expect("decodes");
+            assert_eq!(seq, 42);
+            match (&p, &back) {
+                (Payload::Bytes(a), Payload::Bytes(b)) => assert_eq!(a, b),
+                (Payload::F32(a), Payload::F32(b)) => assert_eq!(a, b),
+                (Payload::F64(a), Payload::F64(b)) => assert_eq!(a, b),
+                _ => panic!("payload kind changed in flight"),
+            }
+        }
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_detected() {
+        let f0 = encode_frame(7, &Payload::F32(vec![1.0, 2.0, 3.0]));
+        for bit in 0..(f0.len() - 8) * 8 {
+            let mut f = f0.clone();
+            f[bit / 8] ^= 1 << (bit % 8);
+            assert!(
+                decode_frame(&f).is_none(),
+                "flip of covered bit {bit} must fail the checksum"
+            );
+        }
+    }
+
+    #[test]
+    fn flip_random_bit_corrupts() {
+        let mut rng = XorShift::new(9);
+        for _ in 0..50 {
+            let mut f = encode_frame(0, &Payload::Bytes(vec![0u8; 16]));
+            flip_random_bit(&mut f, &mut rng);
+            assert!(decode_frame(&f).is_none());
+        }
+    }
+
+    #[test]
+    fn default_config_injects_nothing() {
+        let cfg = FaultConfig::default();
+        assert!(!cfg.framing());
+        assert!(!cfg.injecting());
+        assert_eq!(cfg.watchdog_ms, 60_000);
+    }
+
+    #[test]
+    fn config_parses_from_input() {
+        let mut pin = ParameterInput::from_str(
+            "<parthenon/fault>\nseed = 11\ndelay_prob = 0.2\nkill_rank = 1\n\
+             kill_cycle = 5\nwatchdog_ms = 250\n",
+        )
+        .unwrap();
+        let cfg = FaultConfig::from_input(&mut pin);
+        assert_eq!(cfg.seed, 11);
+        assert_eq!(cfg.delay_prob, 0.2);
+        assert_eq!(cfg.kill_rank, 1);
+        assert_eq!(cfg.kill_cycle, 5);
+        assert_eq!(cfg.watchdog_ms, 250);
+        assert!(cfg.framing() && cfg.injecting());
+    }
+
+    #[test]
+    fn abort_cell_first_poster_wins() {
+        let c = AbortCell::default();
+        assert!(!c.is_set());
+        assert!(c.post(3, "first"));
+        assert!(!c.post(4, "second"));
+        assert!(c.is_set());
+        match c.error_for(1) {
+            Error::Aborted { rank, origin, reason } => {
+                assert_eq!((rank, origin), (1, 3));
+                assert!(reason.contains("first"));
+            }
+            e => panic!("wrong error {e}"),
+        }
+    }
+}

@@ -18,10 +18,18 @@
 //! * `simmpi`'s generation-counted bulk-synchronous path — O(P)
 //!   serialized lock acquisitions, kept as the bitwise oracle the tree
 //!   path is tested against.
+//!
+//! `fault` adds a deterministic, seed-driven fault-injection plan
+//! (`parthenon/fault`) over the mailbox path — delay/duplicate/reorder/
+//! corrupt plus simulated rank death — with checksum framing, a World-level
+//! cooperative-abort protocol, and the configurable communication watchdog
+//! that every wait in the crate escalates through.
 
 pub mod coll;
+pub mod fault;
 mod simmpi;
 pub mod tags;
 
 pub use coll::{CollHandle, CollMode};
+pub use fault::{FaultConfig, FaultCounters};
 pub use simmpi::{Comm, Payload, RecvHandle, ReduceOp, World};

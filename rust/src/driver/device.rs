@@ -49,7 +49,7 @@ use crate::mesh::{IndexShape, Mesh, NeighborKind};
 use crate::mesh_data::{MeshData, PackDesc, PackStaging};
 use crate::runtime::{default_artifact_dir, ArtifactKey, Runtime, ScalArgs};
 use crate::tasks::{TaskRegion, TaskStatus, NONE};
-use crate::util::backoff::{ProgressWait, STALL_LIMIT};
+use crate::util::backoff::ProgressWait;
 use crate::util::stealing::StealPolicy;
 use crate::{Real, NHYDRO};
 
@@ -401,7 +401,7 @@ impl DeviceState {
             .iter()
             .map(|&pi| (pi, self.pack_pending(&descs[pi])))
             .collect();
-        let mut wait = ProgressWait::new(STALL_LIMIT);
+        let mut wait = ProgressWait::new(self.comm.stall_limit());
         loop {
             let mut progressed = false;
             let mut left = 0usize;
@@ -418,11 +418,17 @@ impl DeviceState {
                 return Ok(nsent);
             }
             if !wait.step(progressed) {
-                return Err(Error::Comm(format!(
-                    "incremental boundary refresh stalled \
-                     ({left} segments missing after {:?} idle)",
-                    wait.idle_elapsed()
-                )));
+                let e = Error::Timeout {
+                    what: format!(
+                        "incremental boundary refresh ({left} segments missing)"
+                    ),
+                    rank: Some(self.comm.rank()),
+                    peer: None,
+                    tag: None,
+                    elapsed: wait.idle_elapsed(),
+                };
+                self.comm.world().escalate(self.comm.rank(), &e);
+                return Err(e);
             }
         }
     }
@@ -533,7 +539,7 @@ impl DeviceState {
     fn route_and_receive(&self, md: &mut MeshData) -> Result<()> {
         let mut pending: Vec<Vec<(usize, usize)>> =
             md.packs().iter().map(|d| self.pack_pending(d)).collect();
-        let mut wait = ProgressWait::new(STALL_LIMIT);
+        let mut wait = ProgressWait::new(self.comm.stall_limit());
         let (descs, staging) = md.parts_mut();
         for (d, p) in descs.iter().zip(staging.iter()) {
             self.send_one(d, p);
@@ -556,10 +562,17 @@ impl DeviceState {
                 return Ok(());
             }
             if !wait.step(progressed) {
-                return Err(Error::Comm(format!(
-                    "device boundary routing stalled ({left} segments missing after {:?} idle)",
-                    wait.idle_elapsed()
-                )));
+                let e = Error::Timeout {
+                    what: format!(
+                        "device boundary routing ({left} segments missing)"
+                    ),
+                    rank: Some(self.comm.rank()),
+                    peer: None,
+                    tag: None,
+                    elapsed: wait.idle_elapsed(),
+                };
+                self.comm.world().escalate(self.comm.rank(), &e);
+                return Err(e);
             }
         }
     }
@@ -726,7 +739,7 @@ impl DeviceState {
         while i < pending.len() {
             let (bi, slot) = pending[i];
             let e = &self.routes[d.first + bi][slot];
-            if let Some(payload) = self.comm.try_recv(e.recv_src, e.recv_tag) {
+            if let Some(payload) = self.comm.try_recv(e.recv_src, e.recv_tag)? {
                 let data = payload.into_f32()?;
                 let base = bi * self.buflen;
                 p.bufs_in[base + self.seg_offs[slot]
@@ -806,11 +819,12 @@ impl DeviceState {
                 // per cycle; a packless rank contributes +inf inline.
                 let comm = coll.expect("overlap collective comm");
                 self.fused_dt_global =
-                    Some(comm.iallreduce(f64::INFINITY, ReduceOp::Min).into_f64());
+                    Some(comm.iallreduce(f64::INFINITY, ReduceOp::Min).into_f64()?);
             }
             return Ok(());
         }
         let policy = self.policy;
+        let stall = self.comm.stall_limit();
         if self.tmps.len() != npacks {
             self.tmps.resize_with(npacks, Vec::new);
         }
@@ -995,12 +1009,31 @@ impl DeviceState {
                     }
                     let mut slot = c.coll.handle.lock().unwrap();
                     match slot.as_mut().map(CollHandle::test) {
-                        Some(true) => {
-                            let g = slot.take().expect("handle present").into_f64();
-                            c.coll.global.store(g.to_bits(), Ordering::SeqCst);
+                        Some(Ok(true)) => {
+                            match slot.take().expect("handle present").into_f64() {
+                                Ok(g) => {
+                                    c.coll.global.store(g.to_bits(), Ordering::SeqCst);
+                                }
+                                Err(e) => {
+                                    drop(slot);
+                                    if c.error.is_none() {
+                                        c.error = Some(e);
+                                    }
+                                    c.abort.store(true, Ordering::SeqCst);
+                                }
+                            }
                             TaskStatus::Complete
                         }
-                        Some(false) => TaskStatus::Incomplete,
+                        Some(Ok(false)) => TaskStatus::Incomplete,
+                        Some(Err(e)) => {
+                            *slot = None; // poisoned handle: drop it
+                            drop(slot);
+                            if c.error.is_none() {
+                                c.error = Some(e);
+                            }
+                            c.abort.store(true, Ordering::SeqCst);
+                            TaskStatus::Complete
+                        }
                         None => TaskStatus::Complete,
                     }
                 });
@@ -1047,7 +1080,7 @@ impl DeviceState {
                 Some(costs),
                 nworkers,
                 policy,
-                STALL_LIMIT,
+                stall,
             ) {
                 Ok(done) => {
                     for c in done {
@@ -1064,6 +1097,9 @@ impl DeviceState {
         self.block_secs = block_secs;
         self.tmps = tmps;
         if let Some(e) = first_error {
+            // First sight of the failure on this rank: escalate so every
+            // peer's waits drain with `Aborted` instead of idling out.
+            self.comm.world().escalate(self.comm.rank(), &e);
             return Err(e);
         }
         if final_stage {

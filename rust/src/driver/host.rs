@@ -44,7 +44,6 @@ use crate::hydro::native::{self, FluxArrays, Scratch, StageCoeffs};
 use crate::hydro::{HydroPackage, CONS};
 use crate::mesh::{IndexShape, MeshBlock};
 use crate::tasks::{TaskRegion, TaskStatus, NONE};
-use crate::util::backoff::STALL_LIMIT;
 use crate::util::stealing::{run_stealing, StealPolicy, StealPool};
 use crate::vars::Package;
 use crate::{Real, NHYDRO};
@@ -317,6 +316,7 @@ impl HostExec {
         sim.mesh_data.validate(&sim.mesh)?;
         let shape = sim.mesh.cfg.index_shape();
         let gamma = sim.pkg.gamma;
+        let stall = sim.world.stall_limit();
         let multilevel = sim.is_multilevel();
         let pack_ranges = sim.mesh_data.block_ranges();
         let mut pack_costs = sim.mesh_data.pack_costs(&sim.mesh);
@@ -627,12 +627,31 @@ impl HostExec {
                     }
                     let mut slot = c.coll.handle.lock().unwrap();
                     match slot.as_mut().map(CollHandle::test) {
-                        Some(true) => {
-                            let g = slot.take().expect("handle present").into_f64();
-                            c.coll.global.store(g.to_bits(), Ordering::SeqCst);
+                        Some(Ok(true)) => {
+                            match slot.take().expect("handle present").into_f64() {
+                                Ok(g) => {
+                                    c.coll.global.store(g.to_bits(), Ordering::SeqCst);
+                                }
+                                Err(e) => {
+                                    drop(slot);
+                                    if c.error.is_none() {
+                                        c.error = Some(e);
+                                    }
+                                    c.abort.store(true, Ordering::SeqCst);
+                                }
+                            }
                             TaskStatus::Complete
                         }
-                        Some(false) => TaskStatus::Incomplete,
+                        Some(Ok(false)) => TaskStatus::Incomplete,
+                        Some(Err(e)) => {
+                            *slot = None; // poisoned handle: drop it
+                            drop(slot);
+                            if c.error.is_none() {
+                                c.error = Some(e);
+                            }
+                            c.abort.store(true, Ordering::SeqCst);
+                            TaskStatus::Complete
+                        }
                         // aborted before the post ran
                         None => TaskStatus::Complete,
                     }
@@ -686,7 +705,7 @@ impl HostExec {
                 Some(&pack_costs),
                 nworkers,
                 policy,
-                STALL_LIMIT,
+                stall,
             );
             match res {
                 Ok(done) => {
@@ -702,6 +721,10 @@ impl HostExec {
         }
         self.scratch = scratch_pool.into_inner();
         if let Some(e) = first_error {
+            // A stalled task region is this rank's first sight of the
+            // failure: escalate so every peer's waits drain with `Aborted`
+            // instead of idling out their own watchdogs one by one.
+            sim.world.escalate(sim.mesh.my_rank, &e);
             return Err(e);
         }
         if final_stage {
@@ -718,7 +741,7 @@ impl HostExec {
                 } else {
                     sim.comm_coll
                         .iallreduce(f64::INFINITY, ReduceOp::Min)
-                        .into_f64()
+                        .into_f64()?
                 };
                 self.fused_dt_global = Some(g);
             }

@@ -17,13 +17,15 @@
 pub mod bench;
 mod device;
 mod host;
+pub mod recover;
 pub mod regrid;
 
 pub use device::DeviceState;
 pub use host::{HostExec, OverlapStats};
+pub use recover::{run_recoverable, RecoveryReport};
 
 use crate::bvals::{self, PackStrategy};
-use crate::comm::{tags, CollMode, Comm, Payload, ReduceOp, World};
+use crate::comm::{tags, CollMode, Comm, FaultConfig, Payload, ReduceOp, World};
 use crate::config::ParameterInput;
 use crate::error::{Error, Result};
 use crate::hydro::native::{self, FluxArrays, StageCoeffs, RK2_STAGES};
@@ -32,7 +34,7 @@ use crate::hydro::{HydroPackage, CONS};
 use crate::mesh::{LogicalLocation, Mesh, MeshBlock, MeshConfig, NeighborKind};
 use crate::mesh_data::MeshData;
 use crate::metrics::{Ewma, RebalanceStats, Timers, ZoneCycles};
-use crate::util::backoff::{ProgressWait, STALL_LIMIT};
+use crate::util::backoff::ProgressWait;
 use crate::util::stealing::StealPolicy;
 use crate::vars::{resolve_packages, Package};
 use crate::Real;
@@ -206,6 +208,16 @@ pub struct SimParams {
     pub history_dt: f64,
     pub out_dir: String,
     pub quiet: bool,
+    /// Seed-driven fault-injection plan (`parthenon/fault`, default: all
+    /// off). Installed on the World before the rank's first communication.
+    pub fault: FaultConfig,
+    /// Cycles between durable checkpoints (`parthenon/job
+    /// checkpoint_interval`, 0 = off). Checkpoints are written atomically
+    /// (tmp + rename), so a crash mid-write never loses the previous one.
+    pub checkpoint_interval: i64,
+    /// Checkpoint target (`parthenon/job checkpoint_path`, default
+    /// `<out_dir>/parthenon.chk.pbin`).
+    pub checkpoint_path: String,
 }
 
 impl SimParams {
@@ -237,6 +249,8 @@ impl SimParams {
         let coll_s = pin.str_or("parthenon/comm", "coll", "tree");
         let coll = CollMode::parse(&coll_s)
             .ok_or_else(|| Error::config(format!("unknown coll mode {coll_s:?}")))?;
+        let out_dir = pin.str_or("parthenon/job", "out_dir", ".");
+        let default_chk = format!("{out_dir}/parthenon.chk.pbin");
         Ok(SimParams {
             problem,
             tlim: pin.real_or("parthenon/time", "tlim", 1.0),
@@ -253,8 +267,11 @@ impl SimParams {
             impl_: pin.str_or("parthenon/exec", "impl", "jnp"),
             output_dt: pin.real_or("parthenon/output0", "dt", -1.0),
             history_dt: pin.real_or("parthenon/history", "dt", -1.0),
-            out_dir: pin.str_or("parthenon/job", "out_dir", "."),
+            out_dir,
             quiet: pin.bool_or("parthenon/job", "quiet", false),
+            fault: FaultConfig::from_input(pin),
+            checkpoint_interval: pin.int_or("parthenon/job", "checkpoint_interval", 0),
+            checkpoint_path: pin.str_or("parthenon/job", "checkpoint_path", &default_chk),
         })
     }
 }
@@ -305,6 +322,10 @@ impl HydroSim {
         let pkg = HydroPackage::initialize(&mut pin);
         let sp = SimParams::from_input(&mut pin)?;
         let fields = resolve_packages(&[pkg.descriptor()])?;
+        // Install the fault plan before this rank's first send/recv: the
+        // checksum-framing decision must be uniform across every message a
+        // rank ever handles (comm::fault's framing invariant).
+        world.install_faults(sp.fault.clone());
         let mut mesh = Mesh::build(cfg, fields, rank, world.size());
 
         // Problem generation on every local block.
@@ -609,7 +630,7 @@ impl HydroSim {
     /// Wait (bounded spin-then-backoff, progress-aware watchdog) until
     /// every registered flux correction has arrived and been applied.
     pub(crate) fn flux_corr_wait(&mut self, flux: &mut [FluxArrays]) -> Result<()> {
-        let mut wait = ProgressWait::new(STALL_LIMIT);
+        let mut wait = ProgressWait::new(self.world.stall_limit());
         let mut remaining = self.flux_pending.len();
         loop {
             if self.flux_corr_poll(flux)? {
@@ -619,11 +640,18 @@ impl HydroSim {
             let progressed = now < remaining;
             remaining = now;
             if !wait.step(progressed) {
-                return Err(Error::Comm(format!(
-                    "flux correction stalled ({} receives missing after {:?} idle)",
-                    self.flux_pending.len(),
-                    wait.idle_elapsed()
-                )));
+                let e = Error::Timeout {
+                    what: format!(
+                        "flux correction ({} receives missing)",
+                        self.flux_pending.len()
+                    ),
+                    rank: Some(self.mesh.my_rank),
+                    peer: None,
+                    tag: None,
+                    elapsed: wait.idle_elapsed(),
+                };
+                self.world.escalate(self.mesh.my_rank, &e);
+                return Err(e);
             }
         }
     }
@@ -854,7 +882,7 @@ pub(crate) fn flux_corr_poll_pending(
     let mut i = 0;
     while i < pending.len() {
         let p = &pending[i];
-        if let Some(payload) = comm_flux.try_recv(p.src, p.tag) {
+        if let Some(payload) = comm_flux.try_recv(p.src, p.tag)? {
             let data = payload.into_f32()?;
             let p = pending.swap_remove(i);
             apply_flux_correction(&mut flux[p.block - base], &p, dim, &data);
@@ -944,6 +972,10 @@ impl EvolutionDriver for HydroSim {
 
     fn step(&mut self) -> Result<()> {
         let t0 = std::time::Instant::now();
+        // Simulated rank death fires at the top of the scheduled cycle,
+        // BEFORE this cycle's checkpoint could be written — so recovery
+        // must resume from an earlier durable snapshot.
+        self.world.check_kill(self.mesh.my_rank, self.cycle)?;
         let dt = self.dt as Real;
 
         // One cycle through the shared executor layer (take-dance so the
@@ -984,6 +1016,15 @@ impl EvolutionDriver for HydroSim {
             && !(self.mesh.cfg.adaptive && self.device.is_none())
         {
             regrid::check_and_rebalance(self)?;
+        }
+
+        // Durable checkpoint (atomic tmp+rename) on the configured cadence:
+        // the recovery loop restarts from the last one of these.
+        if self.sp.checkpoint_interval > 0
+            && self.cycle % self.sp.checkpoint_interval as u64 == 0
+        {
+            let path = self.sp.checkpoint_path.clone();
+            self.write_restart(&path)?;
         }
 
         self.zc

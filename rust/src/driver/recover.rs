@@ -1,0 +1,165 @@
+//! Crash recovery: run a multi-rank simulation to completion, relaunching
+//! from the last durable checkpoint whenever an attempt dies.
+//!
+//! An attempt dies when any rank's driver returns an error — a simulated
+//! rank death from the fault plan's kill schedule, a communication timeout
+//! escalated to `Error::Timeout`, a detected `Error::CorruptMessage`, or
+//! the cooperative `Error::Aborted` those broadcast to the peers. Unlike
+//! [`World::launch`], the relaunch harness joins every rank thread and
+//! *collects* failures instead of propagating the first panic, so a dead
+//! attempt tears down cleanly and the next one starts from a fresh
+//! [`World`] (clean mailboxes, no abort latched).
+//!
+//! Recovery restores from `parthenon/job checkpoint_path` when a durable
+//! checkpoint exists (checkpoints are published atomically via tmp+rename,
+//! so a kill mid-write never leaves a torn file — see
+//! [`crate::io::write_snapshot`]) and from scratch otherwise. The kill
+//! schedule is disarmed on relaunch (`kill_cycle=-1`): the fault it models
+//! is a one-shot crash, and re-arming it would kill every attempt at the
+//! same cycle forever. Stochastic delay/dup/reorder faults stay armed —
+//! they are absorbed transparently and do not perturb the trajectory, so a
+//! recovered run finishes bitwise identical to an uninterrupted one
+//! (pinned by `rust/tests/chaos.rs`).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::comm::World;
+use crate::config::ParameterInput;
+use crate::driver::{Driver, HydroSim};
+use crate::error::{Error, Result};
+use crate::io::Snapshot;
+
+/// Outcome of [`run_recoverable`].
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryReport {
+    /// Total launch attempts (1 = the run never failed).
+    pub attempts: usize,
+    /// Attempts that restored state from a durable checkpoint (an attempt
+    /// that dies before the first checkpoint restarts from scratch).
+    pub restored: usize,
+    /// Final simulated time / cycle of the successful attempt.
+    pub final_time: f64,
+    pub final_cycle: u64,
+    /// Errors observed on failed attempts, in order (diagnostics).
+    pub failures: Vec<String>,
+}
+
+/// Render a rank thread's panic payload for the failure log.
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        format!("rank panic: {s}")
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        format!("rank panic: {s}")
+    } else {
+        "rank panic (non-string payload)".into()
+    }
+}
+
+/// One launch attempt: every rank builds a sim, optionally restores from
+/// `restore_from`, and runs to completion. Per-rank outcomes are collected
+/// (never resume_unwind — a dead rank must not take down the harness).
+fn attempt(
+    input: &str,
+    overrides: &[String],
+    nranks: usize,
+    restore_from: Option<&str>,
+) -> Vec<std::result::Result<(f64, u64), String>> {
+    let world = World::new(nranks);
+    let input: Arc<str> = input.into();
+    let overrides: Arc<[String]> = overrides.into();
+    let restore: Option<Arc<str>> = restore_from.map(Into::into);
+    let mut handles = Vec::new();
+    for rank in 0..nranks {
+        let w = world.clone();
+        let input = input.clone();
+        let overrides = overrides.clone();
+        let restore = restore.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("rank{rank}"))
+                .stack_size(32 * 1024 * 1024)
+                .spawn(move || -> Result<(f64, u64)> {
+                    let mut pin = ParameterInput::from_str(&input)?;
+                    for ov in overrides.iter() {
+                        pin.apply_override(ov)?;
+                    }
+                    let mut sim = HydroSim::new(pin, rank, w)?;
+                    if let Some(path) = restore.as_deref() {
+                        let snap = Snapshot::read(path)?;
+                        sim.restore_snapshot(&snap)?;
+                    }
+                    sim.execute()?;
+                    Ok((sim.time, sim.cycle))
+                })
+                .expect("spawn rank thread"),
+        );
+    }
+    handles
+        .into_iter()
+        .map(|h| match h.join() {
+            Ok(Ok(v)) => Ok(v),
+            Ok(Err(e)) => Err(e.to_string()),
+            Err(p) => Err(panic_msg(p.as_ref())),
+        })
+        .collect()
+}
+
+/// Run `input` on `nranks` ranks, recovering from rank deaths by
+/// relaunching from the last durable checkpoint, at most `max_restarts`
+/// times. Returns the recovery report on success; the last attempt's
+/// first error once the restart budget is exhausted.
+pub fn run_recoverable(
+    input: &str,
+    overrides: &[String],
+    nranks: usize,
+    max_restarts: usize,
+) -> Result<RecoveryReport> {
+    // Derive the checkpoint path exactly as SimParams::from_input does, so
+    // the harness looks where the sim writes.
+    let mut pin = ParameterInput::from_str(input)?;
+    for ov in overrides {
+        pin.apply_override(ov)?;
+    }
+    let out_dir = pin.str_or("parthenon/job", "out_dir", ".");
+    let default_chk = format!("{out_dir}/parthenon.chk.pbin");
+    let chk_path = pin.str_or("parthenon/job", "checkpoint_path", &default_chk);
+
+    let mut report = RecoveryReport::default();
+    let mut ovr = overrides.to_vec();
+    let mut relaunch = false;
+    loop {
+        report.attempts += 1;
+        let restore_from = if relaunch && Path::new(&chk_path).exists() {
+            report.restored += 1;
+            Some(chk_path.as_str())
+        } else {
+            None
+        };
+        let outcomes = attempt(input, &ovr, nranks, restore_from);
+        match outcomes.iter().find_map(|o| o.as_ref().err().cloned()) {
+            None => {
+                if let Some(Ok((t, c))) = outcomes.first() {
+                    report.final_time = *t;
+                    report.final_cycle = *c;
+                }
+                return Ok(report);
+            }
+            Some(e) => {
+                report.failures.push(e.clone());
+                if report.attempts > max_restarts {
+                    return Err(Error::Comm(format!(
+                        "recovery exhausted after {} attempts: {e}",
+                        report.attempts
+                    )));
+                }
+                // Disarm the one-shot kill; leave stochastic faults armed.
+                let disarm = "parthenon/fault/kill_cycle=-1".to_string();
+                if !ovr.contains(&disarm) {
+                    ovr.push(disarm);
+                }
+                relaunch = true;
+            }
+        }
+    }
+}

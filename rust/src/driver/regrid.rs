@@ -194,7 +194,7 @@ pub fn apply_new_tree(sim: &mut HydroSim, new_tree: crate::mesh::BlockTree) -> R
             let data = if *old_rank == me {
                 stash.get(&loc).unwrap().clone()
             } else {
-                comm.recv(*old_rank, tags::migrate_tag(gid, 0)).into_f32()?
+                comm.recv(*old_rank, tags::migrate_tag(gid, 0))?.into_f32()?
             };
             sim.mesh.blocks[bi]
                 .data
@@ -209,7 +209,7 @@ pub fn apply_new_tree(sim: &mut HydroSim, new_tree: crate::mesh::BlockTree) -> R
                 let parent_data = if *old_rank == me {
                     stash.get(&loc.parent()).unwrap().clone()
                 } else {
-                    comm.recv(*old_rank, tags::migrate_tag(gid, 0)).into_f32()?
+                    comm.recv(*old_rank, tags::migrate_tag(gid, 0))?.into_f32()?
                 };
                 let bits = loc.child_bits();
                 let mut child = vec![0.0; nelem];
@@ -235,7 +235,7 @@ pub fn apply_new_tree(sim: &mut HydroSim, new_tree: crate::mesh::BlockTree) -> R
             } else {
                 let piece = (bits[0] | (bits[1] << 1) | (bits[2] << 2)) as usize;
                 let restricted = comm
-                    .recv(*old_rank, tags::migrate_tag(gid, 1 + piece))
+                    .recv(*old_rank, tags::migrate_tag(gid, 1 + piece))?
                     .into_f32()?;
                 place_restricted_quadrant(&restricted, &shape, bits, &mut parent);
             }
@@ -365,7 +365,7 @@ pub fn rebalance_full(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Result<()> {
             stash.get(&gid).unwrap().clone()
         } else {
             let mut payload =
-                comm.recv(src_rank, tags::migrate_tag(gid, 0)).into_f32()?;
+                comm.recv(src_rank, tags::migrate_tag(gid, 0))?.into_f32()?;
             let cost = take_cost(&mut payload);
             (payload, cost)
         };
@@ -493,7 +493,7 @@ pub fn rebalance_incremental(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Resul
         if src == me {
             continue;
         }
-        let mut payload = comm.recv(src, tags::migrate_tag(gid, 0)).into_f32()?;
+        let mut payload = comm.recv(src, tags::migrate_tag(gid, 0))?.into_f32()?;
         let cost = take_cost(&mut payload);
         sim.mesh.blocks[bi]
             .data

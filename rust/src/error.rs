@@ -2,6 +2,7 @@
 //! derive crates are unavailable in this offline build).
 
 use std::fmt;
+use std::time::Duration;
 
 /// Errors produced by the framework.
 #[derive(Debug)]
@@ -16,6 +17,22 @@ pub enum Error {
     Artifact(String),
     Io(std::io::Error),
     Json(String),
+    /// A communication or task wait made zero progress for longer than the
+    /// watchdog budget. `rank`/`peer`/`tag` are filled where the waiting
+    /// layer knows them (task-pool stalls have no rank).
+    Timeout {
+        what: String,
+        rank: Option<usize>,
+        peer: Option<usize>,
+        tag: Option<u64>,
+        elapsed: Duration,
+    },
+    /// A peer rank posted a World-level abort (after its own timeout,
+    /// corruption, or simulated death); this rank drained cooperatively.
+    Aborted { rank: usize, origin: usize, reason: String },
+    /// Checksum mismatch on a framed message (fault injection or a real
+    /// corruption) — surfaced instead of silently computing wrong bits.
+    CorruptMessage { src: usize, dst: usize, tag: u64 },
 }
 
 impl fmt::Display for Error {
@@ -31,6 +48,28 @@ impl fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Timeout { what, rank, peer, tag, elapsed } => {
+                write!(f, "timeout: {what} stalled for {elapsed:?}")?;
+                if let Some(r) = rank {
+                    write!(f, " on rank {r}")?;
+                }
+                if let Some(p) = peer {
+                    write!(f, " waiting on peer {p}")?;
+                }
+                if let Some(t) = tag {
+                    write!(f, " tag {t:#x}")?;
+                }
+                Ok(())
+            }
+            Error::Aborted { rank, origin, reason } => {
+                write!(f, "aborted on rank {rank}: rank {origin} posted abort ({reason})")
+            }
+            Error::CorruptMessage { src, dst, tag } => {
+                write!(
+                    f,
+                    "corrupt message: checksum mismatch on rank {dst} for message from rank {src} tag {tag:#x}"
+                )
+            }
         }
     }
 }

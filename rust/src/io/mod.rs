@@ -133,19 +133,30 @@ pub fn write_snapshot(
     if let Some(dir) = Path::new(path).parent() {
         std::fs::create_dir_all(dir)?;
     }
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
-    let h = header.dump();
-    f.write_all(&(h.len() as u64).to_le_bytes())?;
-    f.write_all(h.as_bytes())?;
-    for (gid, blob) in by_gid.iter().enumerate() {
-        let blob = blob.ok_or_else(|| {
-            Error::Io(std::io::Error::other(format!("missing block {gid}")))
-        })?;
-        f.write_all(&(gid as u64).to_le_bytes())?;
-        f.write_all(blob)?;
+    // Atomic publish: write the full file to `<path>.tmp`, then rename over
+    // the destination. A crash mid-write (or a kill_rank firing during a
+    // checkpoint) leaves at worst a truncated .tmp; the previously durable
+    // snapshot at `path` stays restorable.
+    let tmp = format!("{path}.tmp");
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        f.write_all(MAGIC)?;
+        let h = header.dump();
+        f.write_all(&(h.len() as u64).to_le_bytes())?;
+        f.write_all(h.as_bytes())?;
+        for (gid, blob) in by_gid.iter().enumerate() {
+            let blob = blob.ok_or_else(|| {
+                Error::Io(std::io::Error::other(format!("missing block {gid}")))
+            })?;
+            f.write_all(&(gid as u64).to_le_bytes())?;
+            f.write_all(blob)?;
+        }
+        f.flush()?;
+        f.into_inner()
+            .map_err(|e| Error::Io(e.into_error()))?
+            .sync_all()?;
     }
-    f.flush()?;
+    std::fs::rename(&tmp, path)?;
     Ok(())
 }
 
@@ -345,18 +356,29 @@ impl Snapshot {
     }
 }
 
-/// Append one history line (rank 0 only).
+/// Append one history line (rank 0 only). Failures carry the path and
+/// cycle so a full disk or bad out_dir is diagnosable from the error alone.
 pub fn append_history(path: &str, time: f64, cycle: u64, sums: &[f64]) -> Result<()> {
+    let ctx = |e: std::io::Error| {
+        Error::Io(std::io::Error::new(
+            e.kind(),
+            format!("history append to {path:?} at cycle {cycle}: {e}"),
+        ))
+    };
     if let Some(dir) = Path::new(path).parent() {
-        std::fs::create_dir_all(dir)?;
+        std::fs::create_dir_all(dir).map_err(ctx)?;
     }
     let exists = Path::new(path).exists();
-    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .map_err(ctx)?;
     if !exists {
-        writeln!(f, "# time cycle mass mom_x kinetic_e total_e")?;
+        writeln!(f, "# time cycle mass mom_x kinetic_e total_e").map_err(ctx)?;
     }
     let cols: Vec<String> = sums.iter().map(|s| format!("{s:.10e}")).collect();
-    writeln!(f, "{time:.10e} {cycle} {}", cols.join(" "))?;
+    writeln!(f, "{time:.10e} {cycle} {}", cols.join(" ")).map_err(ctx)?;
     Ok(())
 }
 
@@ -463,6 +485,26 @@ mod tests {
             ),
         );
         assert!(Snapshot::read(&p).is_err(), "implausible block_nx must be Err");
+    }
+
+    #[test]
+    fn truncated_tmp_leaves_prior_snapshot_restorable() {
+        // A durable snapshot exists; a later checkpoint attempt crashed
+        // mid-write, leaving a torn `<path>.tmp` beside it. The durable
+        // file must still parse (rename-based publish never tears it),
+        // and the torn temp itself must be rejected, not half-read.
+        let p = write_header_pbin(
+            "durable",
+            &header_with(
+                "[{\"name\": \"cons\", \"ncomp\": 5}]",
+                "[8, 8, 1]",
+                "[[0, 0, 0, 0]]",
+            ),
+        );
+        std::fs::write(format!("{p}.tmp"), &MAGIC[..3]).unwrap();
+        let snap = Snapshot::read(&p).expect("durable snapshot must survive a torn .tmp");
+        assert_eq!(snap.leaves.len(), 1);
+        assert!(Snapshot::read(&format!("{p}.tmp")).is_err(), "torn temp must be Err");
     }
 
     #[test]

@@ -101,6 +101,35 @@ impl RebalanceStats {
     }
 }
 
+/// Snapshot of the comm fabric's fault-injection / escalation counters
+/// (`World::fault_stats`): what the seeded plan injected, what the framing
+/// layer absorbed or detected, and how failures escalated. The chaos suite
+/// asserts on these (e.g. injected corruption implies detected corruption —
+/// never silently absorbed).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Frames parked in limbo (delivered late).
+    pub delayed: u64,
+    /// Frames enqueued twice by the injector.
+    pub duplicated: u64,
+    /// Frames that jumped their queue.
+    pub reordered: u64,
+    /// Frames bit-flipped by the injector.
+    pub corrupted_injected: u64,
+    /// Checksum failures surfaced as `Error::CorruptMessage`.
+    pub corruption_detected: u64,
+    /// Duplicate frames absorbed by the sequence machinery.
+    pub duplicates_dropped: u64,
+    /// Sends dropped because the sending rank was killed.
+    pub dead_sends_dropped: u64,
+    /// Ranks killed by the schedule.
+    pub kills: u64,
+    /// World-level aborts posted (first poster only).
+    pub aborts_posted: u64,
+    /// Waits escalated to `Error::Timeout`.
+    pub timeouts: u64,
+}
+
 /// Throughput accounting over a measured window.
 #[derive(Debug, Clone, Default)]
 pub struct ZoneCycles {

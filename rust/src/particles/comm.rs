@@ -125,7 +125,7 @@ pub fn transport_round(mesh: &mut Mesh, comm: &Comm, swarm: &str) -> Result<usiz
             let NeighborKind::SameLevel(nloc) = &nb.kind else { continue };
             let sgid = mesh.tree.gid_of(nloc).unwrap();
             let payload = comm
-                .recv(mesh.ranks[sgid], tags::particle_tag(gid, slot))
+                .recv(mesh.ranks[sgid], tags::particle_tag(gid, slot))?
                 .into_bytes()?;
             if payload.is_empty() {
                 continue;

@@ -168,6 +168,7 @@ impl<C> TaskRegion<C> {
     pub fn execute(&mut self, ctx: &mut C, max_sweeps: usize) -> Result<()> {
         let mut backoff = crate::util::backoff::Backoff::new();
         let mut sweeps = 0usize;
+        let mut idle_since: Option<std::time::Instant> = None;
         loop {
             let mut progressed = false;
             for l in &mut self.lists {
@@ -193,15 +194,23 @@ impl<C> TaskRegion<C> {
             }
             if !progressed {
                 sweeps += 1;
+                let t0 = *idle_since.get_or_insert_with(std::time::Instant::now);
                 if sweeps > max_sweeps {
-                    return Err(Error::Task(format!(
-                        "region stalled after {max_sweeps} idle sweeps \
-                         (deadlock or lost message?)"
-                    )));
+                    return Err(Error::Timeout {
+                        what: format!(
+                            "task region ({max_sweeps} idle sweeps; \
+                             deadlock or lost message?)"
+                        ),
+                        rank: None,
+                        peer: None,
+                        tag: None,
+                        elapsed: t0.elapsed(),
+                    });
                 }
                 backoff.snooze();
             } else {
                 sweeps = 0;
+                idle_since = None;
                 backoff.reset();
             }
         }
@@ -299,11 +308,16 @@ impl<C> TaskRegion<C> {
                 }
                 if watchdog.expired() {
                     abort.store(true, Ordering::SeqCst);
-                    return Err(Error::Task(format!(
-                        "parallel task region stalled ({} lists incomplete after {:?} idle)",
-                        remaining.load(Ordering::SeqCst),
-                        watchdog.elapsed()
-                    )));
+                    return Err(Error::Timeout {
+                        what: format!(
+                            "parallel task region ({} lists incomplete)",
+                            remaining.load(Ordering::SeqCst)
+                        ),
+                        rank: None,
+                        peer: None,
+                        tag: None,
+                        elapsed: watchdog.elapsed(),
+                    });
                 }
                 backoff.snooze();
                 Ok(())
@@ -398,9 +412,13 @@ impl<C> TaskRegion<C> {
                     break;
                 }
                 if !wait.step(progressed) {
-                    return Err(Error::Task(
-                        "regional tasks stalled after parallel region".into(),
-                    ));
+                    return Err(Error::Timeout {
+                        what: "regional tasks after parallel region".into(),
+                        rank: None,
+                        peer: None,
+                        tag: None,
+                        elapsed: wait.idle_elapsed(),
+                    });
                 }
             }
         }

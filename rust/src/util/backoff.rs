@@ -53,10 +53,6 @@ impl Backoff {
     }
 }
 
-/// Shared stall limit for communication waits (time with *zero progress*
-/// before a wait is declared stalled).
-pub const STALL_LIMIT: Duration = Duration::from_secs(60);
-
 /// Progress-aware waiter shared by every communication wait loop
 /// (blocking exchange, flux correction, device routing): resets the
 /// backoff *and* the stall watchdog whenever the caller observes

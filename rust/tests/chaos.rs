@@ -1,0 +1,235 @@
+//! Chaos suite: the fault-injection comm layer must never change physics.
+//!
+//! * Fixed-seed fault soak — delay/dup/reorder injection (p = 0.2 each,
+//!   alone and combined) over >= 40 cycles must finish bitwise identical
+//!   to the fault-free run: the framing layer absorbs every fabric fault.
+//! * Corruption is *detected*, never silently absorbed — a corrupt frame
+//!   fails its checksum and every rank drains with an error.
+//! * A rank killed mid-run recovers from the last durable checkpoint and
+//!   finishes bitwise identical to a run that never died.
+//! * An induced deadlock resolves via `Error::Timeout` / `Error::Aborted`
+//!   on every rank within the watchdog budget — no hangs.
+
+mod common;
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use parthenon::comm::{ReduceOp, World};
+use parthenon::config::ParameterInput;
+use parthenon::driver::{run_recoverable, Driver, HydroSim};
+use parthenon::error::Error;
+use parthenon::metrics::FaultStats;
+
+fn soak_ranks() -> usize {
+    // The chaos CI lane runs with PARTHENON_TEST_RANKS=8; local runs keep
+    // the default 2 so `cargo test` stays fast.
+    common::test_ranks().clamp(2, 8)
+}
+
+fn deck() -> String {
+    common::input_deck("blast", [32, 32, 1], [8, 8, 1], "")
+}
+
+/// Run `deck` to completion on `nranks` ranks and gather the final state
+/// (gid-sorted interiors), rank 0's final dt bits, and the fault counters.
+fn run_gather(
+    deck: &str,
+    overrides: Vec<String>,
+    nranks: usize,
+) -> (Vec<(usize, Vec<f32>)>, u64, FaultStats) {
+    let state: Arc<Mutex<Vec<(usize, Vec<f32>)>>> = Arc::new(Mutex::new(Vec::new()));
+    let dt_bits = Arc::new(Mutex::new(0u64));
+    let deck = deck.to_string();
+    let s2 = state.clone();
+    let d2 = dt_bits.clone();
+    let world = World::launch(nranks, move |rank, world| {
+        let mut pin = ParameterInput::from_str(&deck).unwrap();
+        for ov in &overrides {
+            pin.apply_override(ov).unwrap();
+        }
+        let mut sim = HydroSim::new(pin, rank, world).unwrap();
+        sim.execute().unwrap();
+        sim.sync_device_to_blocks().unwrap();
+        let mut blocks = common::cons_by_gid(&sim);
+        s2.lock().unwrap().append(&mut blocks);
+        if rank == 0 {
+            *d2.lock().unwrap() = sim.dt.to_bits();
+        }
+    });
+    let stats = world.fault_stats();
+    let mut v = Arc::try_unwrap(state).unwrap().into_inner().unwrap();
+    v.sort_by_key(|(g, _)| *g);
+    let dt = *dt_bits.lock().unwrap();
+    (v, dt, stats)
+}
+
+#[test]
+fn fault_soak_is_bitwise_identical_to_fault_free() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
+    let p = soak_ranks();
+    let base = vec!["parthenon/time/nlim=40".to_string()];
+    let (expect, dt_expect, _) = run_gather(&deck(), base.clone(), p);
+    assert!(!expect.is_empty());
+
+    let lanes: &[(&str, &[&str])] = &[
+        ("delay", &["parthenon/fault/delay_prob=0.2"]),
+        ("dup", &["parthenon/fault/dup_prob=0.2"]),
+        ("reorder", &["parthenon/fault/reorder_prob=0.2"]),
+        (
+            "all",
+            &[
+                "parthenon/fault/delay_prob=0.2",
+                "parthenon/fault/dup_prob=0.2",
+                "parthenon/fault/reorder_prob=0.2",
+            ],
+        ),
+    ];
+    for (name, faults) in lanes {
+        let mut ovr = base.clone();
+        ovr.push("parthenon/fault/seed=987654321".to_string());
+        ovr.extend(faults.iter().map(|s| s.to_string()));
+        let (got, dt_got, stats) = run_gather(&deck(), ovr, p);
+        // the lane must actually have injected something
+        let injected = stats.delayed + stats.duplicated + stats.reordered;
+        assert!(injected > 0, "{name}: no faults injected ({stats:?})");
+        if name.contains("dup") || *name == "all" {
+            assert!(stats.duplicates_dropped > 0, "{name}: dups never absorbed");
+        }
+        let diff = common::max_state_diff(&expect, &got);
+        assert_eq!(diff, 0.0, "{name}: faulty run diverged from fault-free");
+        assert_eq!(dt_expect, dt_got, "{name}: dt bits diverged");
+    }
+}
+
+#[test]
+fn corruption_is_detected_never_absorbed() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
+    let p = soak_ranks();
+    let deck = deck();
+    let errs: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let e2 = errs.clone();
+    let world = World::launch(p, move |rank, world| {
+        let mut pin = ParameterInput::from_str(&deck).unwrap();
+        pin.apply_override("parthenon/time/nlim=40").unwrap();
+        pin.apply_override("parthenon/fault/seed=24680").unwrap();
+        pin.apply_override("parthenon/fault/corrupt_prob=0.2").unwrap();
+        let r = (|| -> parthenon::error::Result<()> {
+            // corruption can already fire in the construction-time ghost
+            // exchange, so `new` itself is under test here
+            let mut sim = HydroSim::new(pin, rank, world)?;
+            sim.execute()
+        })();
+        let e = r.expect_err("corrupt frames must never be absorbed as data");
+        assert!(
+            matches!(
+                e,
+                Error::CorruptMessage { .. } | Error::Aborted { .. } | Error::Timeout { .. }
+            ),
+            "rank {rank}: unexpected error {e}"
+        );
+        e2.lock().unwrap().push(e.to_string());
+    });
+    let stats = world.fault_stats();
+    assert!(stats.corrupted_injected > 0, "{stats:?}");
+    assert!(stats.corruption_detected > 0, "{stats:?}");
+    assert!(world.aborted(), "detection must post the cooperative abort");
+    assert_eq!(errs.lock().unwrap().len(), p, "every rank must observe the failure");
+}
+
+#[test]
+fn kill_and_recover_is_bitwise_identical() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
+    let p = soak_ranks();
+    let pid = std::process::id();
+    let dir_faulty = std::env::temp_dir().join(format!("parthenon_chaos_kill_{pid}"));
+    let dir_clean = std::env::temp_dir().join(format!("parthenon_chaos_clean_{pid}"));
+    let _ = std::fs::remove_dir_all(&dir_faulty);
+    let _ = std::fs::remove_dir_all(&dir_clean);
+    let deck = deck();
+    let base = |dir: &std::path::Path| -> Vec<String> {
+        vec![
+            "parthenon/time/nlim=20".to_string(),
+            "parthenon/job/checkpoint_interval=5".to_string(),
+            format!("parthenon/job/out_dir={}", dir.to_str().unwrap()),
+        ]
+    };
+
+    // killed at cycle 12: the durable checkpoint is cycle 10, so recovery
+    // replays cycles 11..20 from restored state
+    let mut faulty = base(&dir_faulty);
+    faulty.push("parthenon/fault/kill_rank=1".to_string());
+    faulty.push("parthenon/fault/kill_cycle=12".to_string());
+    let rep = run_recoverable(&deck, &faulty, p, 3).unwrap();
+    assert_eq!(rep.attempts, 2, "exactly one relaunch: {:?}", rep.failures);
+    assert_eq!(rep.restored, 1, "relaunch must restore from the checkpoint");
+    assert_eq!(rep.final_cycle, 20);
+
+    // uninterrupted reference
+    let rep_clean = run_recoverable(&deck, &base(&dir_clean), p, 0).unwrap();
+    assert_eq!(rep_clean.attempts, 1);
+    assert_eq!(rep_clean.final_cycle, 20);
+
+    assert_eq!(
+        rep.final_time.to_bits(),
+        rep_clean.final_time.to_bits(),
+        "recovered final time must match bitwise"
+    );
+    // the cycle-20 checkpoints are full-state dumps: byte-for-byte equality
+    // is the strongest statement of recovery fidelity
+    let a = std::fs::read(dir_faulty.join("parthenon.chk.pbin")).unwrap();
+    let b = std::fs::read(dir_clean.join("parthenon.chk.pbin")).unwrap();
+    assert_eq!(a, b, "recovered checkpoint differs from the uninterrupted one");
+    let _ = std::fs::remove_dir_all(&dir_faulty);
+    let _ = std::fs::remove_dir_all(&dir_clean);
+}
+
+#[test]
+fn induced_deadlock_escalates_on_every_rank() {
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
+    let p = soak_ranks();
+    let t0 = Instant::now();
+    let errs: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let e2 = errs.clone();
+    let world = World::launch(p, move |rank, world| {
+        world.set_watchdog(Duration::from_millis(300));
+        let comm = world.comm(rank, 9);
+        let r = if rank + 1 < p {
+            // these ranks enter a collective the last rank never joins
+            comm.iallreduce(rank as f64, ReduceOp::Min).into_f64()
+        } else {
+            // the abstainer just watches for the cooperative abort
+            loop {
+                if world.aborted() {
+                    break Err(world.abort_error(rank));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        };
+        let e = r.expect_err("a deadlocked collective must not succeed");
+        assert!(
+            matches!(e, Error::Timeout { .. } | Error::Aborted { .. }),
+            "rank {rank}: unexpected error {e}"
+        );
+        e2.lock().unwrap().push(e.to_string());
+    });
+    // every rank escalated well within a few watchdog periods (the test
+    // *finishing* is the no-hang statement; the bound keeps it honest)
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "deadlock resolution took {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(errs.lock().unwrap().len(), p);
+    let stats = world.fault_stats();
+    assert!(stats.timeouts >= 1, "{stats:?}");
+    assert!(stats.aborts_posted >= 1, "{stats:?}");
+}

@@ -139,14 +139,14 @@ fn mixed_collectives_under_thread_contention() {
             // two overlapping handles drained out of order
             let h1 = comm.iallreduce(rank as f64, ReduceOp::Max);
             let h2 = comm.iallreduce(rank as f64, ReduceOp::Min);
-            assert_eq!(h2.into_f64(), 0.0);
-            assert_eq!(h1.into_f64(), (p - 1) as f64);
+            assert_eq!(h2.into_f64().unwrap(), 0.0);
+            assert_eq!(h1.into_f64().unwrap(), (p - 1) as f64);
             let gathered = comm.allgather(vec![rank as u8; rank % 3]);
             for (r, g) in gathered.iter().enumerate() {
                 assert_eq!(g.len(), r % 3, "iter {i}");
             }
             comm.barrier();
-            let got = pt.recv((rank + p - 1) % p, i as u64).into_f32().unwrap();
+            let got = pt.recv((rank + p - 1) % p, i as u64).unwrap().into_f32().unwrap();
             assert_eq!(got, vec![((rank + p - 1) % p) as f32; 3]);
         }
     });

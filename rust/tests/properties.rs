@@ -111,7 +111,7 @@ fn message_storm_no_loss_no_reorder() {
                 comm.isend(dst, 42, Payload::F32(vec![s as f32]));
             }
             for s in 0..nmsg {
-                let v = comm.recv(src, 42).into_f32().unwrap();
+                let v = comm.recv(src, 42).unwrap().into_f32().unwrap();
                 assert_eq!(v[0], s as f32, "reordered or lost");
             }
         });

@@ -107,6 +107,74 @@ fn restart_across_rank_counts() {
 }
 
 #[test]
+fn restart_matrix_exec_and_sched_bitwise() {
+    // Snapshot at cycle 4, restore into a fresh sim, run to 8: bitwise
+    // identical state AND dt bits versus an uninterrupted run of the same
+    // configuration, for every exec-space x scheduler combination. This is
+    // the determinism contract the crash-recovery loop leans on: a
+    // recovered run must be indistinguishable from one that never died.
+    let configs: &[&[&str]] = &[
+        &["parthenon/exec/space=host", "parthenon/exec/sched=static"],
+        &["parthenon/exec/space=host", "parthenon/exec/sched=stealing"],
+        &["parthenon/exec/space=device", "parthenon/exec/sched=static"],
+        &["parthenon/exec/space=device", "parthenon/exec/sched=stealing"],
+    ];
+    for ovr in configs {
+        let is_device = ovr.iter().any(|o| o.ends_with("=device"));
+        if is_device && !common::artifacts_available() {
+            eprintln!("skipping {ovr:?}: artifacts not built");
+            continue;
+        }
+        let tag = ovr.join("+");
+        let tmp = std::env::temp_dir().join(format!(
+            "parthenon_restart_matrix_{}_{}.pbin",
+            if is_device { "dev" } else { "host" },
+            ovr[1].rsplit('=').next().unwrap()
+        ));
+        let tmp_s = tmp.to_str().unwrap().to_string();
+
+        // uninterrupted 8 cycles
+        let mut straight = common::single_rank_sim(&deck(), ovr);
+        for _ in 0..8 {
+            straight.step().unwrap();
+        }
+        straight.sync_device_to_blocks().unwrap();
+        let expect = common::cons_by_gid(&straight);
+
+        // interrupted at cycle 4
+        let mut first = common::single_rank_sim(&deck(), ovr);
+        for _ in 0..4 {
+            first.step().unwrap();
+        }
+        first.write_restart(&tmp_s).unwrap();
+
+        let mut resumed = common::single_rank_sim(&deck(), ovr);
+        let snap = Snapshot::read(&tmp_s).unwrap();
+        resumed.restore_snapshot(&snap).unwrap();
+        assert_eq!(resumed.cycle, 4, "{tag}");
+        for _ in 0..4 {
+            resumed.step().unwrap();
+        }
+        resumed.sync_device_to_blocks().unwrap();
+        let got = common::cons_by_gid(&resumed);
+
+        let diff = common::max_state_diff(&expect, &got);
+        assert_eq!(diff, 0.0, "{tag}: restart must be bitwise identical");
+        assert_eq!(
+            straight.dt.to_bits(),
+            resumed.dt.to_bits(),
+            "{tag}: dt bits must match"
+        );
+        assert_eq!(
+            straight.time.to_bits(),
+            resumed.time.to_bits(),
+            "{tag}: time bits must match"
+        );
+        let _ = std::fs::remove_file(&tmp);
+    }
+}
+
+#[test]
 fn snapshot_roundtrip_preserves_header() {
     let tmp = std::env::temp_dir().join("parthenon_snap_header.pbin");
     let tmp_s = tmp.to_str().unwrap().to_string();
