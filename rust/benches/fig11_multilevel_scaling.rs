@@ -157,6 +157,60 @@ fn main() {
     }
     table_d.print();
 
+    // -- execution spaces: host vs device vs cost-partitioned hybrid ---------
+    // Same uniform deck; the hybrid row forces a 50/50 pack split so the
+    // perf lane measures TRUE co-execution (one TaskRegion, both spaces),
+    // and its HybridStats counter dump is asserted live — a refactor that
+    // silently collapses hybrid onto one space fails the bench, not just
+    // the equivalence tests. `space/{host,device,hybrid}` rows feed the
+    // per-runner perf baseline.
+    let hyb_nw = if quick { 2 } else { 4 };
+    let mut table_sp = Table::new(&["space", "zc/s", "vs host"]);
+    println!("\nExecution-space comparison (uniform, 1 rank, pack_size 2, sched=stealing, w={hyb_nw}):");
+    let mut host_zc = 0.0f64;
+    for space in ["host", "device", "hybrid"] {
+        let mut ovs = vec![
+            format!("parthenon/exec/space={space}"),
+            "parthenon/exec/sched=stealing".to_string(),
+            format!("parthenon/exec/nworkers={hyb_nw}"),
+            "parthenon/exec/pack_size=2".to_string(),
+        ];
+        if space == "hybrid" {
+            ovs.push("parthenon/exec/hybrid_split=0.5".to_string());
+        }
+        let ov_refs: Vec<&str> = ovs.iter().map(|s| s.as_str()).collect();
+        let run = measure(&dev_deck, &ov_refs, 1, 2, meas.max(2));
+        if space == "host" {
+            host_zc = run.zcps;
+        }
+        if space == "hybrid" {
+            eprintln!("  hybrid counters: {:?}", run.hybrid);
+            assert!(
+                run.hybrid.packs_host > 0 && run.hybrid.packs_device > 0,
+                "hybrid perf lane must execute packs on BOTH spaces: {:?}",
+                run.hybrid
+            );
+        } else {
+            assert!(
+                run.hybrid.is_untouched(),
+                "single-space {space} run must leave HybridStats untouched: {:?}",
+                run.hybrid
+            );
+        }
+        table_sp.row(vec![
+            space.to_string(),
+            fmt_zcps(run.zcps),
+            format!("{:.2}x", run.zcps / host_zc.max(1e-30)),
+        ]);
+        samples.push(Sample {
+            label: format!("space/{space}"),
+            secs: vec![run.wall / run.cycles as f64],
+            work: run.zcps * run.wall / run.cycles as f64,
+        });
+        eprintln!("  space {space}: {} zc/s", fmt_zcps(run.zcps));
+    }
+    table_sp.print();
+
     write_results(
         "fig11_multilevel_scaling",
         &samples,

@@ -7,6 +7,7 @@ use super::HydroSim;
 use crate::comm::World;
 use crate::config::ParameterInput;
 use crate::driver::EvolutionDriver;
+use crate::metrics::HybridStats;
 
 
 /// Result of one measured configuration.
@@ -23,13 +24,16 @@ pub struct BenchRun {
     pub nblocks: usize,
     /// Wall seconds of the measured window (max across ranks).
     pub wall: f64,
+    /// Co-execution counters summed across ranks (`space=hybrid` only;
+    /// untouched on single-space runs).
+    pub hybrid: HybridStats,
 }
 
 /// Run `deck` on `nranks` rank-threads: `warm` untimed cycles, then `meas`
 /// timed cycles. Panics on simulation errors (benches should be loud).
 pub fn measure(deck: &str, overrides: &[&str], nranks: usize, warm: u64, meas: u64) -> BenchRun {
-    let out: Arc<Mutex<Vec<(f64, u64, usize, f64)>>> =
-        Arc::new(Mutex::new(vec![(0.0, 0, 0, 0.0); nranks]));
+    let out: Arc<Mutex<Vec<(f64, u64, usize, f64, HybridStats)>>> =
+        Arc::new(Mutex::new(vec![(0.0, 0, 0, 0.0, HybridStats::default()); nranks]));
     let o2 = out.clone();
     let deck = deck.to_string();
     let overrides: Vec<String> = overrides.iter().map(|s| s.to_string()).collect();
@@ -56,15 +60,21 @@ pub fn measure(deck: &str, overrides: &[&str], nranks: usize, warm: u64, meas: u
             launches,
             sim.mesh.tree.nblocks(),
             sim.zc.wall_secs,
+            sim.hybrid_stats.clone(),
         );
     });
     let v = out.lock().unwrap();
+    let mut hybrid = HybridStats::default();
+    for x in v.iter() {
+        hybrid.merge(&x.4);
+    }
     BenchRun {
         zcps: v.iter().map(|x| x.0).sum::<f64>() / nranks as f64,
         launches: v.iter().map(|x| x.1).sum(),
         cycles: meas,
         nblocks: v[0].2,
         wall: v.iter().map(|x| x.3).fold(0.0, f64::max),
+        hybrid,
     }
 }
 

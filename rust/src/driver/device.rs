@@ -1,5 +1,5 @@
-//! Device execution path: MeshBlockPacks staged through runtime artifacts,
-//! with the paper's three buffer-packing strategies (Fig. 8):
+//! Device execution space: MeshBlockPacks staged through runtime
+//! artifacts, with the paper's three buffer-packing strategies (Fig. 8):
 //!
 //! * `PerBuffer` — one launch per boundary buffer per block (pack1/unpack1
 //!   artifacts) + one stage launch per block: the "original" regime.
@@ -10,45 +10,41 @@
 //! The pack partition and its staging buffers live in the shared
 //! [`MeshData`] cache (same structure the Host path schedules its workers
 //! over); this module owns only the launch plumbing: runtime, routing
-//! tables, and per-stage launches. Requires a uniform, fully periodic mesh —
-//! the configuration of every performance experiment in the paper.
-//! AMR/multilevel runs use the Host path (see DESIGN.md §limitations).
+//! tables, and the per-pack TASK-LIST PRODUCER. [`add_dev_pack_list`]
+//! emits one task list per device pack — launch → send segments → poll
+//! receives (+ the per-pack dt partial on the final RK stage) — and the
+//! driver's single merged [`crate::tasks::TaskRegion`]
+//! ([`super::run_stage`]) executes them on the shared stealing pool next
+//! to the Host space's lists. The shared-state [`Runtime`] takes `&self`
+//! on every entry point, so pack launches from different workers proceed
+//! concurrently and one pack's boundary routing overlaps the interior
+//! launches of the others; `parthenon/exec nworkers|sched` govern the
+//! Device lists exactly like the Host lists, and `overlap = phased` runs
+//! the same lists serially (the bitwise oracle over the same task units).
 //!
-//! With `parthenon/exec overlap = fused` (default) the stage runs as
-//! per-pack task lists — launch → send segments → poll receives — executed
-//! **worker-parallel** on the work-stealing pool
-//! ([`TaskRegion::execute_parallel_weighted`]), exactly like the Host
-//! path's fused pipeline: the shared-state [`Runtime`] takes `&self` on
-//! every entry point, so pack launches from different workers proceed
-//! concurrently, one pack's boundary routing overlaps the interior
-//! launches of the others, and `parthenon/exec nworkers|sched` govern the
-//! Device stage the same way they govern the Host stage. `overlap =
-//! phased` keeps the serial launch-all-then-route barrier as the
-//! bitwise-identity oracle. Per-pack launches are timed and spread over
-//! the pack's blocks into the cost EWMA (`drain_block_secs`), so the load
-//! balancer sees measured Device costs.
+//! Requires a uniform, fully periodic mesh — the configuration of every
+//! performance experiment in the paper. AMR/multilevel runs use the Host
+//! path (see DESIGN.md §limitations); `space=hybrid` probes the same
+//! capability and degenerates to all-host when it fails.
 //!
-//! On the final RK stage the per-block CFL dts returned by the launches
-//! are min-reduced *inside* the fused region: each pack's task list ends
-//! in a partial-min task and one regional (cross-list) task folds the
-//! partials — so no separate `local_dt` sweep over the blocks remains in
-//! the fused cycle ([`StageExecutor::local_dt`] returns the cached
-//! reduction).
+//! Per-pack launches are timed and spread over the pack's blocks into the
+//! cost EWMA (`drain_block_secs`), so the load balancer — and, under
+//! hybrid, the per-space cost model of
+//! [`super::hybrid::HybridPartition`] — sees measured Device costs.
 
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Instant;
 
-use super::{HydroSim, OverlapMode, StageExecutor};
+use super::{DtColl, HydroSim, SpaceCtx};
 use crate::bvals::{bufspec, PackStrategy};
-use crate::comm::{tags, CollHandle, CollMode, Comm, Payload, ReduceOp};
+use crate::comm::{tags, Comm, Payload};
 use crate::error::{Error, Result};
-use crate::hydro::native::{StageCoeffs, RK2_STAGES};
+use crate::hydro::native::StageCoeffs;
 use crate::hydro::CONS;
 use crate::mesh::{IndexShape, Mesh, NeighborKind};
 use crate::mesh_data::{MeshData, PackDesc, PackStaging};
 use crate::runtime::{default_artifact_dir, ArtifactKey, Runtime, ScalArgs};
-use crate::tasks::{TaskRegion, TaskStatus, NONE};
+use crate::tasks::{TaskId, TaskList, TaskStatus, NONE};
 use crate::util::backoff::ProgressWait;
 use crate::util::stealing::StealPolicy;
 use crate::{Real, NHYDRO};
@@ -79,7 +75,7 @@ impl NbrEntry {
 pub struct DeviceState {
     pub rt: Runtime,
     shape: IndexShape,
-    strategy: PackStrategy,
+    pub(crate) strategy: PackStrategy,
     impl_: String,
     /// Pack sizes the plan may use (fused artifact variants, ascending).
     plan_sizes: Vec<usize>,
@@ -89,38 +85,29 @@ pub struct DeviceState {
     seg_lens: Vec<usize>,
     buflen: usize,
     block_elems: usize,
-    last_dts: Vec<Real>,
-    comm: Comm,
+    pub(crate) last_dts: Vec<Real>,
+    /// The device's own boundary comm (`COMM_BVALS_BASE + 1`): bootstrap
+    /// and rebalance routing rounds always use it; pure-device stages use
+    /// it too (the bitwise oracle channel), while hybrid stages exchange
+    /// on the driver's shared CONS comm so host and device packs
+    /// interoperate.
+    pub(crate) comm: Comm,
     gamma: Real,
     /// Measured launch seconds per block (per-pack launch time spread
     /// evenly over the pack's blocks), drained into the cost EWMA by
     /// `HydroSim::update_block_costs` — so `parthenon/loadbalance
     /// interval` rebalances Device runs on measured, not nominal, costs.
-    block_secs: Vec<f64>,
+    pub(crate) block_secs: Vec<f64>,
     /// Requested fused-stage workers (`parthenon/exec nworkers`, 0=auto).
     nworkers_req: usize,
     /// Ranks sharing this machine's cores (auto worker sizing).
     nranks: usize,
     /// Pack scheduler for the fused stage (`parthenon/exec sched`).
-    policy: StealPolicy,
-    /// Staging scratch of the phased (serial) launch loop, reused across
-    /// stages (PerBlock/PerBuffer strategies only; PerPack never touches
-    /// it).
-    tmp: Vec<Real>,
-    /// Per-pack staging scratch of the fused worker-parallel lists (one
-    /// per pack so concurrent launches never share; resized lazily to the
-    /// current pack count and reused across stages).
-    tmps: Vec<Vec<Real>>,
-    /// Raw min CFL dt cached by the fused regional reduction on the final
-    /// RK stage; `None` after any out-of-region `last_dts` update (phased
-    /// stage, bootstrap, rebalance), which falls back to folding
-    /// `last_dts` on demand.
-    fused_dt_min: Option<Real>,
-    /// GLOBAL (cross-rank, CFL-scaled) dt produced by the overlapped tree
-    /// collective the fused final stage posted from inside its task
-    /// region. Consumed once by `HydroSim::reduce_dt`, which then skips
-    /// its blocking allreduce entirely.
-    fused_dt_global: Option<f64>,
+    pub(crate) policy: StealPolicy,
+    /// Per-pack staging scratch of the worker-parallel lists (one per pack
+    /// so concurrent launches never share; resized lazily to the current
+    /// pack count and reused across stages).
+    pub(crate) tmps: Vec<Vec<Real>>,
 }
 
 impl DeviceState {
@@ -191,10 +178,7 @@ impl DeviceState {
             nworkers_req: sim.sp.nworkers,
             nranks: mesh.nranks,
             policy: sim.sp.sched,
-            tmp: Vec::new(),
             tmps: Vec::new(),
-            fused_dt_min: None,
-            fused_dt_global: None,
         };
 
         // Shared pack partition: re-plan onto the artifact sizes + staging
@@ -281,8 +265,8 @@ impl DeviceState {
         self.routes = Self::build_routes(&sim.mesh)?;
         self.last_dts = vec![0.0; sim.mesh.blocks.len()];
         self.block_secs = vec![0.0; sim.mesh.blocks.len()];
-        self.fused_dt_min = None;
-        self.fused_dt_global = None;
+        sim.fused_dt_local = None;
+        sim.fused_dt_global = None;
         for (bi, b) in sim.mesh.blocks.iter().enumerate() {
             if let Some(v) = old_dts.get(&b.gid) {
                 self.last_dts[bi] = *v;
@@ -332,8 +316,8 @@ impl DeviceState {
         self.routes = routes;
         self.last_dts = vec![0.0; sim.mesh.blocks.len()];
         self.block_secs = vec![0.0; sim.mesh.blocks.len()];
-        self.fused_dt_min = None;
-        self.fused_dt_global = None;
+        sim.fused_dt_local = None;
+        sim.fused_dt_global = None;
         for (bi, b) in sim.mesh.blocks.iter().enumerate() {
             if let Some(v) = old_dts.get(&b.gid) {
                 self.last_dts[bi] = *v;
@@ -410,7 +394,7 @@ impl DeviceState {
                     continue;
                 }
                 let before = pend.len();
-                self.poll_one(&descs[*pi], &mut staging[*pi], pend)?;
+                self.poll_one(&descs[*pi], &mut staging[*pi], &self.comm, pend)?;
                 progressed |= pend.len() < before;
                 left += pend.len();
             }
@@ -453,7 +437,7 @@ impl DeviceState {
     /// Worker threads for the fused stage, resolved against the current
     /// pack count (packs are the unit of work; more workers than packs
     /// would only idle).
-    fn stage_workers(&self, npacks: usize) -> usize {
+    pub(crate) fn stage_workers(&self, npacks: usize) -> usize {
         if self.nworkers_req > 0 {
             self.nworkers_req.min(npacks.max(1))
         } else {
@@ -483,8 +467,6 @@ impl DeviceState {
                 self.last_dts[d.first + bi] = dts[0];
             }
         }
-        self.fused_dt_min = None;
-        self.fused_dt_global = None;
         Ok(())
     }
 
@@ -502,7 +484,7 @@ impl DeviceState {
         ScalArgs { g0: co.g0, g1: co.g1, beta: co.beta, dt, dx, gamma: self.gamma }
     }
 
-    fn scal(&self, co: StageCoeffs, dt: Real, mesh: &Mesh) -> ScalArgs {
+    pub(crate) fn scal(&self, co: StageCoeffs, dt: Real, mesh: &Mesh) -> ScalArgs {
         let dx = match mesh.blocks.first() {
             Some(b) => [
                 b.coords.dx[0] as Real,
@@ -522,7 +504,7 @@ impl DeviceState {
     }
 
     /// The inbound `(block-in-pack, slot)` pairs one pack waits on.
-    fn pack_pending(&self, d: &PackDesc) -> Vec<(usize, usize)> {
+    pub(crate) fn pack_pending(&self, d: &PackDesc) -> Vec<(usize, usize)> {
         let mut v = Vec::new();
         for bi in 0..d.nb {
             for slot in 0..self.routes[d.first + bi].len() {
@@ -534,15 +516,16 @@ impl DeviceState {
 
     /// Send every pack's outbound segments and receive inbound segments
     /// into bufs_in, polling with bounded backoff — the whole-rank barrier
-    /// routing of the phased path and the bootstrap, built on the same
-    /// per-pack `send_one`/`poll_one` primitives the fused lists use.
+    /// routing of the bootstrap and rebalance paths, built on the same
+    /// per-pack `send_one`/`poll_one` primitives the stage lists use
+    /// (always on the device's own comm).
     fn route_and_receive(&self, md: &mut MeshData) -> Result<()> {
         let mut pending: Vec<Vec<(usize, usize)>> =
             md.packs().iter().map(|d| self.pack_pending(d)).collect();
         let mut wait = ProgressWait::new(self.comm.stall_limit());
         let (descs, staging) = md.parts_mut();
         for (d, p) in descs.iter().zip(staging.iter()) {
-            self.send_one(d, p);
+            self.send_one(d, p, &self.comm);
         }
         loop {
             let mut progressed = false;
@@ -554,7 +537,7 @@ impl DeviceState {
                     continue;
                 }
                 let before = pend.len();
-                self.poll_one(d, p, pend)?;
+                self.poll_one(d, p, &self.comm, pend)?;
                 progressed |= pend.len() < before;
                 left += pend.len();
             }
@@ -589,17 +572,15 @@ impl DeviceState {
 
     /// The stage launches of ONE pack under the configured packing
     /// strategy (Fig. 8). `&self`: the shared-state [`Runtime`] lets any
-    /// worker thread launch concurrently, so this is the work item of BOTH
-    /// stage schedules — the phased path loops over packs on the driver
-    /// thread; the fused path orders `launch → send → poll` per pack
-    /// through worker-parallel task lists. The caller hands in the pack's
-    /// disjoint `last_dts`/`block_secs` slices (`dts_out`/`secs_out`, both
-    /// `d.nb` long), a reusable staging scratch `tmp`, and `compute_dt`
-    /// (true on the cycle's final RK stage — the ONE place that decision
-    /// is made is the caller's `si + 1 == RK2_STAGES.len()`). Launch seconds
-    /// are spread evenly over the pack's blocks into `secs_out` (artifact
-    /// keys are resolved before the timer starts, so key construction
-    /// never pollutes the measured launch seconds).
+    /// worker thread launch concurrently, so this is the work item of the
+    /// per-pack task lists. The caller hands in the pack's disjoint
+    /// `last_dts`/`block_secs` slices (`dts_out`/`secs_out`, both `d.nb`
+    /// long), a reusable staging scratch `tmp`, and `compute_dt` (true on
+    /// the cycle's final RK stage — the ONE place that decision is made is
+    /// the caller's `si + 1 == RK2_STAGES.len()`). Launch seconds are
+    /// spread evenly over the pack's blocks into `secs_out` (artifact keys
+    /// are resolved before the timer starts, so key construction never
+    /// pollutes the measured launch seconds).
     fn launch_pack_parts(
         &self,
         d: &PackDesc,
@@ -713,33 +694,34 @@ impl DeviceState {
         Ok(())
     }
 
-    /// Send ONE pack's outbound boundary segments (fused send task; the
-    /// phased `route_and_receive` loops this over the whole rank).
-    fn send_one(&self, d: &PackDesc, p: &PackStaging) {
+    /// Send ONE pack's outbound boundary segments on `comm` (stage send
+    /// task; the barrier `route_and_receive` loops this over the rank).
+    fn send_one(&self, d: &PackDesc, p: &PackStaging, comm: &Comm) {
         for bi in 0..d.nb {
             let flat = d.first + bi;
             let base = bi * self.buflen;
             for (slot, e) in self.routes[flat].iter().enumerate() {
                 let seg = &p.bufs_out[base + self.seg_offs[slot]
                     ..base + self.seg_offs[slot] + self.seg_lens[slot]];
-                self.comm.isend(e.dst_rank, e.send_tag, Payload::F32(seg.to_vec()));
+                comm.isend(e.dst_rank, e.send_tag, Payload::F32(seg.to_vec()));
             }
         }
     }
 
     /// Poll ONE pack's pending inbound segments (`(block-in-pack, slot)`
-    /// pairs) into its `bufs_in`. True when the pack's receives are all in.
+    /// pairs) on `comm` into its `bufs_in`. True when all receives are in.
     fn poll_one(
         &self,
         d: &PackDesc,
         p: &mut PackStaging,
+        comm: &Comm,
         pending: &mut Vec<(usize, usize)>,
     ) -> Result<bool> {
         let mut i = 0usize;
         while i < pending.len() {
             let (bi, slot) = pending[i];
             let e = &self.routes[d.first + bi][slot];
-            if let Some(payload) = self.comm.try_recv(e.recv_src, e.recv_tag)? {
+            if let Some(payload) = comm.try_recv(e.recv_src, e.recv_tag)? {
                 let data = payload.into_f32()?;
                 let base = bi * self.buflen;
                 p.bufs_in[base + self.seg_offs[slot]
@@ -753,435 +735,154 @@ impl DeviceState {
         Ok(pending.is_empty())
     }
 
-    /// The phased oracle: all launches serially on the driver thread, then
-    /// the whole-rank routing barrier.
-    fn stage_phased(&mut self, md: &mut MeshData, scal: ScalArgs, si: usize) -> Result<()> {
-        let compute_dt = si + 1 == RK2_STAGES.len();
-        let mut last_dts = std::mem::take(&mut self.last_dts);
-        let mut block_secs = std::mem::take(&mut self.block_secs);
-        let mut tmp = std::mem::take(&mut self.tmp);
-        let res: Result<()> = (|| {
-            let (descs, staging) = md.parts_mut();
-            for (d, p) in descs.iter().zip(staging.iter_mut()) {
-                let r = d.block_range();
-                self.launch_pack_parts(
-                    d,
-                    p,
-                    &mut last_dts[r.clone()],
-                    &mut block_secs[r],
-                    &mut tmp,
-                    scal,
-                    compute_dt,
-                )?;
-            }
-            Ok(())
-        })();
-        self.last_dts = last_dts;
-        self.block_secs = block_secs;
-        self.tmp = tmp;
-        // last_dts changed outside the fused region: drop the cached min.
-        self.fused_dt_min = None;
-        self.fused_dt_global = None;
-        res?;
-        self.route_and_receive(md)
-    }
-
-    /// The fused Device stage: per-pack task lists (launch → send → poll,
-    /// plus a partial dt-min on the final RK stage) executed
-    /// worker-parallel on the stealing pool, seeded by the measured pack
-    /// costs. Bitwise identical to the phased path for any worker count or
-    /// steal order: launches are per-pack independent (disjoint staging,
-    /// `last_dts`/`block_secs` slices), every received segment lands in a
-    /// disjoint `bufs_in` slab, and the shared-state `Runtime` hands each
-    /// in-flight launch its own scratch.
-    ///
-    /// With `coll` set (tree collectives) the final RK stage also posts
-    /// the GLOBAL dt `iallreduce(Min)` from an extra task list as soon as
-    /// every pack's partial min has landed, so the O(log P) exchange
-    /// overlaps the tail packs' boundary-receive polls; the drained
-    /// result is cached in `fused_dt_global` for `reduce_dt`.
-    fn stage_fused(
-        &mut self,
-        md: &mut MeshData,
-        pack_costs: &[f64],
-        scal: ScalArgs,
-        si: usize,
-        nworkers: usize,
-        coll: Option<&Comm>,
-        cfl: Real,
-    ) -> Result<()> {
-        let npacks = md.npacks();
-        let final_stage = si + 1 == RK2_STAGES.len();
-        let overlap_coll = final_stage && coll.is_some();
-        if npacks == 0 {
-            if overlap_coll {
-                // Every rank must enter the dt collective exactly once
-                // per cycle; a packless rank contributes +inf inline.
-                let comm = coll.expect("overlap collective comm");
-                self.fused_dt_global =
-                    Some(comm.iallreduce(f64::INFINITY, ReduceOp::Min).into_f64()?);
-            }
-            return Ok(());
-        }
-        let policy = self.policy;
-        let stall = self.comm.stall_limit();
-        if self.tmps.len() != npacks {
-            self.tmps.resize_with(npacks, Vec::new);
-        }
-        let mut last_dts = std::mem::take(&mut self.last_dts);
-        let mut block_secs = std::mem::take(&mut self.block_secs);
-        let mut tmps = std::mem::take(&mut self.tmps);
-        // Per-pack partial CFL minima + the regional fold's result slot
-        // (f32 bit patterns: min is exact, so the fold is bitwise equal to
-        // the phased path's block-order fold). Allocated only on the final
-        // stage — no t_dt task reads it otherwise.
-        let minima: Vec<AtomicU32> = if final_stage {
-            (0..npacks).map(|_| AtomicU32::new(f32::INFINITY.to_bits())).collect()
-        } else {
-            Vec::new()
-        };
-        let dt_result = AtomicU32::new(f32::INFINITY.to_bits());
-        let abort = AtomicBool::new(false);
-        let mut first_error: Option<Error> = None;
-
-        /// Overlapped-dt shared state: the posting/draining tasks on the
-        /// extra list hand the tree-collective handle between polls here.
-        struct DevDtColl<'a> {
-            comm: Option<&'a Comm>,
-            cfl: Real,
-            handle: Mutex<Option<CollHandle>>,
-            /// How many packs have published their partial min.
-            dt_done: AtomicUsize,
-            /// Drained global dt (f64 bits).
-            global: AtomicU64,
-        }
-        let coll_slot = DevDtColl {
-            comm: if overlap_coll { coll } else { None },
-            cfl,
-            handle: Mutex::new(None),
-            dt_done: AtomicUsize::new(0),
-            global: AtomicU64::new(f64::INFINITY.to_bits()),
-        };
-        // The overlapped-dt list gets a zero-cost dummy context: its tasks
-        // only touch the shared slots above.
-        let dummy_desc = PackDesc { index: 0, first: 0, nb: 0 };
-        let mut dummy_staging = PackStaging {
-            u: Vec::new(),
-            u0: Vec::new(),
-            bufs_in: Vec::new(),
-            bufs_out: Vec::new(),
-        };
-        let mut dummy_tmp: Vec<Real> = Vec::new();
-
-        /// One pack's fused-stage context: shared read view of the device
-        /// state + disjoint `&mut` slices of everything the pack writes.
-        struct DevPackCtx<'a> {
-            dev: &'a DeviceState,
-            d: &'a PackDesc,
-            p: &'a mut PackStaging,
-            dts: &'a mut [Real],
-            secs: &'a mut [f64],
-            tmp: &'a mut Vec<Real>,
-            pending: Vec<(usize, usize)>,
-            minima: &'a [AtomicU32],
-            dt_result: &'a AtomicU32,
-            coll: &'a DevDtColl<'a>,
-            scal: ScalArgs,
-            compute_dt: bool,
-            error: Option<Error>,
-            /// Shared across packs: first error drains every list fast.
-            abort: &'a AtomicBool,
-        }
-
-        {
-            let dev: &DeviceState = &*self;
-            let (descs, staging) = md.parts_mut();
-            let mut dts_rest: &mut [Real] = &mut last_dts;
-            let mut secs_rest: &mut [f64] = &mut block_secs;
-            let mut ctxs: Vec<DevPackCtx> = Vec::with_capacity(npacks);
-            for ((d, p), tmp) in descs.iter().zip(staging.iter_mut()).zip(tmps.iter_mut()) {
-                let (dts, rest) = std::mem::take(&mut dts_rest).split_at_mut(d.nb);
-                dts_rest = rest;
-                let (secs, rest) = std::mem::take(&mut secs_rest).split_at_mut(d.nb);
-                secs_rest = rest;
-                ctxs.push(DevPackCtx {
-                    dev,
-                    d,
-                    p,
-                    dts,
-                    secs,
-                    tmp,
-                    pending: dev.pack_pending(d),
-                    minima: &minima,
-                    dt_result: &dt_result,
-                    coll: &coll_slot,
-                    scal,
-                    compute_dt: final_stage,
-                    error: None,
-                    abort: &abort,
-                });
-            }
-
-            let nlists = npacks + usize::from(overlap_coll);
-            let mut region: TaskRegion<DevPackCtx> = TaskRegion::new(nlists);
-            let mut marks = Vec::new();
-            for pi in 0..npacks {
-                let list = region.list(pi);
-                let t_launch = list.add(NONE, |c: &mut DevPackCtx| {
-                    if c.abort.load(Ordering::SeqCst) {
-                        return TaskStatus::Complete;
-                    }
-                    let DevPackCtx {
-                        dev, d, p, dts, secs, tmp, scal, compute_dt, error, abort, ..
-                    } = c;
-                    if let Err(e) =
-                        dev.launch_pack_parts(d, p, dts, secs, tmp, *scal, *compute_dt)
-                    {
-                        *error = Some(e);
-                        abort.store(true, Ordering::SeqCst);
-                    }
-                    TaskStatus::Complete
-                });
-                let t_send = list.add(&[t_launch], |c: &mut DevPackCtx| {
-                    if c.abort.load(Ordering::SeqCst) {
-                        return TaskStatus::Complete;
-                    }
-                    c.dev.send_one(c.d, c.p);
-                    TaskStatus::Complete
-                });
-                let _t_poll = list.add(&[t_send], |c: &mut DevPackCtx| {
-                    if c.abort.load(Ordering::SeqCst) {
-                        return TaskStatus::Complete;
-                    }
-                    let DevPackCtx { dev, d, p, pending, error, abort, .. } = c;
-                    match dev.poll_one(d, p, pending) {
-                        Ok(true) => TaskStatus::Complete,
-                        Ok(false) => TaskStatus::Incomplete,
-                        Err(e) => {
-                            *error = Some(e);
-                            abort.store(true, Ordering::SeqCst);
-                            TaskStatus::Complete
-                        }
-                    }
-                });
-                if final_stage {
-                    // partial min of the launch-computed per-block dts —
-                    // the per-pack half of the fused dt reduction
-                    let t_dt = list.add(&[t_launch], move |c: &mut DevPackCtx| {
-                        if c.abort.load(Ordering::SeqCst) {
-                            return TaskStatus::Complete;
-                        }
-                        let m = c.dts.iter().fold(f32::INFINITY, |a, &b| a.min(b));
-                        c.minima[pi].store(m.to_bits(), Ordering::SeqCst);
-                        c.coll.dt_done.fetch_add(1, Ordering::SeqCst);
-                        TaskStatus::Complete
-                    });
-                    marks.push((pi, t_dt));
+    /// Host → device restaging of one migrated pack: reconstruct its
+    /// `bufs_in` from the freshly gathered `u`'s GHOST zones. For every
+    /// neighbor slot the receive slab is copied out of `u` into the slot's
+    /// segment — exactly the buffer a routing round would have delivered,
+    /// because the containers' ghosts were current when the pack was
+    /// gathered. The next launch's unpack then rewrites those ghost zones
+    /// with identical values: a bitwise no-op.
+    pub(crate) fn stage_in_pack(&self, d: &PackDesc, p: &mut PackStaging) {
+        let ne = self.block_elems;
+        let bl = self.buflen;
+        let offsets = crate::mesh::tree::neighbor_offsets(self.shape.dim);
+        for bi in 0..d.nb {
+            for (slot, o) in offsets.iter().enumerate() {
+                let slab = bufspec::recv_slab(*o, &self.shape);
+                let mut w = bi * bl + self.seg_offs[slot];
+                for v in 0..NHYDRO {
+                    w += bufspec::copy_slab_out(
+                        &p.u[bi * ne..(bi + 1) * ne],
+                        &self.shape,
+                        v,
+                        &slab,
+                        &mut p.bufs_in[w..],
+                    );
                 }
             }
-            if overlap_coll {
-                // Overlapped dt: an extra list whose first task spins
-                // (Incomplete) until every pack's partial min landed, then
-                // folds them, posts the tree iallreduce(Min) and lets the
-                // drain task poll the handle between other lists' work.
-                let list = region.list(npacks);
-                let t_post = list.add(NONE, move |c: &mut DevPackCtx| {
-                    if c.abort.load(Ordering::SeqCst) {
-                        return TaskStatus::Complete;
-                    }
-                    if c.coll.dt_done.load(Ordering::SeqCst) < npacks {
-                        return TaskStatus::Incomplete;
-                    }
-                    let mut m = f32::INFINITY;
-                    for a in c.minima {
-                        m = m.min(f32::from_bits(a.load(Ordering::SeqCst)));
-                    }
-                    c.dt_result.store(m.to_bits(), Ordering::SeqCst);
-                    let comm = c.coll.comm.expect("overlap collective comm");
-                    let local = c.coll.cfl as f64 * m as f64;
-                    *c.coll.handle.lock().unwrap() =
-                        Some(comm.iallreduce(local, ReduceOp::Min));
-                    TaskStatus::Complete
-                });
-                let _t_drain = list.add(&[t_post], |c: &mut DevPackCtx| {
-                    if c.abort.load(Ordering::SeqCst) {
-                        return TaskStatus::Complete;
-                    }
-                    let mut slot = c.coll.handle.lock().unwrap();
-                    match slot.as_mut().map(CollHandle::test) {
-                        Some(Ok(true)) => {
-                            match slot.take().expect("handle present").into_f64() {
-                                Ok(g) => {
-                                    c.coll.global.store(g.to_bits(), Ordering::SeqCst);
-                                }
-                                Err(e) => {
-                                    drop(slot);
-                                    if c.error.is_none() {
-                                        c.error = Some(e);
-                                    }
-                                    c.abort.store(true, Ordering::SeqCst);
-                                }
-                            }
-                            TaskStatus::Complete
-                        }
-                        Some(Ok(false)) => TaskStatus::Incomplete,
-                        Some(Err(e)) => {
-                            *slot = None; // poisoned handle: drop it
-                            drop(slot);
-                            if c.error.is_none() {
-                                c.error = Some(e);
-                            }
-                            c.abort.store(true, Ordering::SeqCst);
-                            TaskStatus::Complete
-                        }
-                        None => TaskStatus::Complete,
-                    }
-                });
-                ctxs.push(DevPackCtx {
-                    dev,
-                    d: &dummy_desc,
-                    p: &mut dummy_staging,
-                    dts: &mut [],
-                    secs: &mut [],
-                    tmp: &mut dummy_tmp,
-                    pending: Vec::new(),
-                    minima: &minima,
-                    dt_result: &dt_result,
-                    coll: &coll_slot,
-                    scal,
-                    compute_dt: false,
-                    error: None,
-                    abort: &abort,
-                });
-            } else if final_stage {
-                // regional cross-list fold: one task, gated on every
-                // pack's partial-min mark, runs under the same abort-aware
-                // region — this replaces the post-cycle local_dt sweep.
-                region.add_regional(marks, |c: &mut DevPackCtx| {
-                    let mut m = f32::INFINITY;
-                    for a in c.minima {
-                        m = m.min(f32::from_bits(a.load(Ordering::SeqCst)));
-                    }
-                    c.dt_result.store(m.to_bits(), Ordering::SeqCst);
-                    TaskStatus::Complete
-                });
-            }
-
-            let mut costs_ext: Vec<f64>;
-            let costs: &[f64] = if overlap_coll {
-                costs_ext = pack_costs.to_vec();
-                costs_ext.push(0.0);
-                &costs_ext
-            } else {
-                pack_costs
-            };
-            match region.execute_parallel_weighted(
-                ctxs,
-                Some(costs),
-                nworkers,
-                policy,
-                stall,
-            ) {
-                Ok(done) => {
-                    for c in done {
-                        if let Some(e) = c.error {
-                            first_error = Some(e);
-                            break;
-                        }
-                    }
-                }
-                Err(e) => first_error = Some(e),
-            }
         }
-        self.last_dts = last_dts;
-        self.block_secs = block_secs;
-        self.tmps = tmps;
-        if let Some(e) = first_error {
-            // First sight of the failure on this rank: escalate so every
-            // peer's waits drain with `Aborted` instead of idling out.
-            self.comm.world().escalate(self.comm.rank(), &e);
-            return Err(e);
-        }
-        if final_stage {
-            self.fused_dt_min =
-                Some(f32::from_bits(dt_result.load(Ordering::SeqCst)));
-        }
-        if overlap_coll {
-            self.fused_dt_global =
-                Some(f64::from_bits(coll_slot.global.load(Ordering::SeqCst)));
-        }
-        Ok(())
     }
 
-    /// Take (consume) the overlapped global dt, if the last fused final
-    /// stage posted and drained one.
-    pub(crate) fn take_global_dt(&mut self) -> Option<f64> {
-        self.fused_dt_global.take()
+    /// Device → host restaging of one migrating pack: apply its resident
+    /// `bufs_in` to the GHOST zones of `u` before the scatter. After a
+    /// stage, `u`'s interior is current but its ghosts are one exchange
+    /// stale (the launch applies `bufs_in` at its start) — this is the
+    /// same unpack the next launch would have performed, so the scattered
+    /// container is fully current, interior and ghosts.
+    pub(crate) fn stage_out_pack(&self, d: &PackDesc, p: &mut PackStaging) {
+        let ne = self.block_elems;
+        let bl = self.buflen;
+        for bi in 0..d.nb {
+            bufspec::unpack_all(
+                &mut p.u[bi * ne..(bi + 1) * ne],
+                &self.shape,
+                NHYDRO,
+                &p.bufs_in[bi * bl..(bi + 1) * bl],
+            );
+        }
     }
 }
 
-impl StageExecutor for DeviceState {
-    fn begin_cycle(&mut self, sim: &mut HydroSim) -> Result<()> {
-        sim.mesh_data.validate(&sim.mesh)?;
-        let (_descs, staging) = sim.mesh_data.parts_mut();
-        for p in staging.iter_mut() {
-            p.u0.copy_from_slice(&p.u);
-        }
-        Ok(())
-    }
+/// One pack's device-stage context: shared read view of the device state
+/// + disjoint `&mut` slices of everything the pack writes. `Send`, so its
+/// list can be swept by any worker of the merged region.
+pub(crate) struct DevPackCtx<'a> {
+    pub dev: &'a DeviceState,
+    pub d: &'a PackDesc,
+    pub p: &'a mut PackStaging,
+    pub dts: &'a mut [Real],
+    pub secs: &'a mut [f64],
+    pub tmp: &'a mut Vec<Real>,
+    pub pending: Vec<(usize, usize)>,
+    /// Pack index (slot in the merged region's f64 `minima`).
+    pub pi: usize,
+    /// Stage comm for this pack's sends/polls: the driver's shared CONS
+    /// comm under hybrid (host and device packs interoperate — the route
+    /// tags are bit-identical to the host's same-level exchange tags on a
+    /// uniform mesh), the device's own comm in a pure device run.
+    pub comm: &'a Comm,
+    pub minima: &'a [AtomicU64],
+    pub dt_result: &'a AtomicU64,
+    pub coll: &'a DtColl<'a>,
+    pub scal: ScalArgs,
+    /// Package CFL: the per-pack dt partial is published CFL-scaled in
+    /// f64, so the merged fold compares finished local dts across spaces.
+    pub cfl: Real,
+    pub compute_dt: bool,
+    pub error: Option<Error>,
+    /// Shared across packs: first error drains every list fast.
+    pub abort: &'a AtomicBool,
+}
 
-    fn stage(
-        &mut self,
-        sim: &mut HydroSim,
-        co: StageCoeffs,
-        si: usize,
-        dt: Real,
-    ) -> Result<()> {
-        sim.mesh_data.validate(&sim.mesh)?;
-        if self.strategy == PackStrategy::Native {
-            return Err(Error::Runtime("strategy=native is the Host path".into()));
+/// Produce the device-space task list for one pack into `list` (part of
+/// the driver's merged region): launch → send → poll, plus the per-pack
+/// dt partial on the final RK stage. Tasks unwrap [`SpaceCtx::Dev`]; the
+/// returned id is the dt task (the regional fold's mark), `None` on
+/// non-final stages.
+///
+/// The published dt partial is `cfl · min(pack dts)` as f64 — f32→f64 is
+/// exact and multiplying by a positive CFL commutes with `min` bit-wise,
+/// so the merged cross-pack fold equals the legacy fold-then-scale of the
+/// pure device executor.
+pub(crate) fn add_dev_pack_list(
+    list: &mut TaskList<SpaceCtx<'_>>,
+    final_stage: bool,
+) -> Option<TaskId> {
+    let t_launch = list.add(NONE, |ctx: &mut SpaceCtx| {
+        let SpaceCtx::Dev(c) = ctx else { return TaskStatus::Complete };
+        if c.abort.load(Ordering::SeqCst) {
+            return TaskStatus::Complete;
         }
-        let scal = self.scal(co, dt, &sim.mesh);
-        if sim.sp.overlap == OverlapMode::Fused {
-            // per-pack task lists on the worker pool: launch → send →
-            // poll (+ the dt reduction on the final stage), interleaved
-            let pack_costs = sim.mesh_data.pack_costs(&sim.mesh);
-            let nworkers = self.stage_workers(sim.mesh_data.npacks());
-            let coll = if sim.sp.coll == CollMode::Tree {
-                Some(&sim.comm_coll)
-            } else {
-                None
-            };
-            let cfl = sim.pkg.cfl;
-            self.stage_fused(
-                &mut sim.mesh_data,
-                &pack_costs,
-                scal,
-                si,
-                nworkers,
-                coll,
-                cfl,
-            )
-        } else {
-            // phased oracle: all launches, then the whole-rank routing
-            self.stage_phased(&mut sim.mesh_data, scal, si)
+        let DevPackCtx { dev, d, p, dts, secs, tmp, scal, compute_dt, error, abort, .. } =
+            c;
+        if let Err(e) = dev.launch_pack_parts(d, p, dts, secs, tmp, *scal, *compute_dt)
+        {
+            *error = Some(e);
+            abort.store(true, Ordering::SeqCst);
         }
-    }
-
-    /// Raw min CFL dt across local blocks, scaled by the package CFL. In
-    /// fused mode this returns the regional reduction cached by the final
-    /// RK stage's task lists; the fold over `last_dts` only runs when that
-    /// cache was invalidated outside the fused region (phased oracle,
-    /// bootstrap, rebalance).
-    fn local_dt(&self, sim: &HydroSim) -> f64 {
-        let m = match self.fused_dt_min {
-            Some(m) => m,
-            None => self
-                .last_dts
-                .iter()
-                .fold(Real::INFINITY, |a, &b| a.min(b)),
-        };
-        sim.pkg.cfl as f64 * m as f64
+        TaskStatus::Complete
+    });
+    let t_send = list.add(&[t_launch], |ctx: &mut SpaceCtx| {
+        let SpaceCtx::Dev(c) = ctx else { return TaskStatus::Complete };
+        if c.abort.load(Ordering::SeqCst) {
+            return TaskStatus::Complete;
+        }
+        c.dev.send_one(c.d, c.p, c.comm);
+        TaskStatus::Complete
+    });
+    let _t_poll = list.add(&[t_send], |ctx: &mut SpaceCtx| {
+        let SpaceCtx::Dev(c) = ctx else { return TaskStatus::Complete };
+        if c.abort.load(Ordering::SeqCst) {
+            return TaskStatus::Complete;
+        }
+        let DevPackCtx { dev, d, p, comm, pending, error, abort, .. } = c;
+        match dev.poll_one(d, p, comm, pending) {
+            Ok(true) => TaskStatus::Complete,
+            Ok(false) => TaskStatus::Incomplete,
+            Err(e) => {
+                *error = Some(e);
+                abort.store(true, Ordering::SeqCst);
+                TaskStatus::Complete
+            }
+        }
+    });
+    if final_stage {
+        // partial min of the launch-computed per-block dts — the per-pack
+        // half of the merged dt reduction, published CFL-scaled in f64
+        let t_dt = list.add(&[t_launch], |ctx: &mut SpaceCtx| {
+            let SpaceCtx::Dev(c) = ctx else { return TaskStatus::Complete };
+            if c.abort.load(Ordering::SeqCst) {
+                return TaskStatus::Complete;
+            }
+            let m = c.dts.iter().fold(f32::INFINITY, |a, &b| a.min(b));
+            let local = c.cfl as f64 * m as f64;
+            c.minima[c.pi].store(local.to_bits(), Ordering::SeqCst);
+            c.coll.dt_done.fetch_add(1, Ordering::SeqCst);
+            TaskStatus::Complete
+        });
+        Some(t_dt)
+    } else {
+        None
     }
 }
 

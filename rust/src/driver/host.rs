@@ -1,52 +1,52 @@
-//! Host execution space: the native Rust solver run pack-parallel.
+//! Host execution space: the native Rust solver as a TASK-LIST PRODUCER.
 //!
 //! The stage operates per MeshBlockPack ([`crate::mesh_data::MeshData`]):
-//! packs are the work items of a cost-aware work-stealing pool
-//! ([`crate::util::stealing::StealPool`]). Worker deques are seeded by the
-//! cost-weighted contiguous partition (per-pack costs = summed
-//! `MeshBlock::cost` EWMAs), and a worker whose deque drains steals packs
-//! from the heaviest victim — closing the tail that static range-dealing
-//! leaves on multilevel meshes with uneven per-block cost. With
+//! [`add_host_pack_list`] emits one task list per pack — fluxes →
+//! flux-correction send/poll → stage combine → boundary sends → receive
+//! polls (+ the per-pack dt partial on the final RK stage) — and the
+//! driver's single merged [`crate::tasks::TaskRegion`]
+//! ([`super::run_stage`]) executes those lists on the shared cost-aware
+//! work-stealing pool, next to whatever lists the Device space produced
+//! for ITS packs. Worker deques are seeded by the cost-weighted contiguous
+//! partition (per-pack costs = summed `MeshBlock::cost` EWMAs), and a
+//! worker whose deque drains steals from the heaviest victim — including
+//! across the execution-space boundary under `space=hybrid`. With
 //! `parthenon/exec sched = static` the pool never steals and degenerates
-//! to the cost-weighted static schedule.
+//! to the cost-weighted static schedule; with `overlap = phased` the same
+//! lists run serially on one worker (the bitwise oracle over the same task
+//! units — every per-block kernel reads exactly the same inputs, pinned by
+//! `rust/tests/overlap_fused.rs`).
 //!
 //! Every pack owns a disjoint `&mut` chunk of the per-block work arrays
 //! (fluxes, u0, u_new), and reconstruction scratch is bounded by the
 //! worker count, so no locking happens inside the kernels and results are
 //! bitwise independent of worker count and steal order. Per-block kernel
 //! seconds are measured here and folded into `MeshBlock::cost` by
-//! `HydroSim::update_block_costs` (EWMA) — the measured costs feed both
-//! the next cycle's seed partition and the load balancer.
+//! `HydroSim::update_block_costs` (EWMA) — the measured costs feed the
+//! next cycle's seed partition, the load balancer, and (hybrid) the
+//! per-space cost model of [`super::hybrid::HybridPartition`].
 //!
-//! Two stage schedules share the kernels (`parthenon/exec overlap`):
-//!
-//! * **`fused`** (default) — phases 1–4 are ONE per-pack task list run by
-//!   [`crate::tasks::TaskRegion::execute_parallel`] on the steal pool:
-//!   fluxes → flux-correction send/poll → stage combine → post boundary
-//!   sends, then receives are polled as `Incomplete` tasks. Pack A's
-//!   boundary exchange overlaps pack B's compute instead of waiting at a
-//!   phase barrier — the paper's comm/compute overlap at task granularity.
-//! * **`phased`** — the barrier-phased loop (all fluxes, then flux
-//!   correction on the driver thread, then all combines, then the
-//!   exchange). Kept as the bitwise-identity oracle; both schedules
-//!   produce identical results because every per-block computation reads
-//!   exactly the same inputs (pinned by `rust/tests/overlap_fused.rs`).
+//! Multilevel lists split the combine speculatively: blocks with no
+//! pending fine-neighbor flux corrections combine right after their fluxes
+//! (their face fluxes can never be overwritten by the correction poll),
+//! while the rest stay gated on the poll — shaving the flux-correction
+//! tail without changing any block's inputs.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use super::{run_stage_exchange, OverlapMode, StageExecutor};
-use crate::bvals::{self, ExchTopo, PackExchange};
-use crate::comm::{CollHandle, CollMode, Comm, ReduceOp};
-use crate::error::{Error, Result};
+use super::{DtColl, SpaceCtx};
+use crate::bvals::PackExchange;
+use crate::comm::Comm;
+use crate::error::Error;
 use crate::hydro::native::{self, FluxArrays, Scratch, StageCoeffs};
 use crate::hydro::{HydroPackage, CONS};
 use crate::mesh::{IndexShape, MeshBlock};
-use crate::tasks::{TaskRegion, TaskStatus, NONE};
-use crate::util::stealing::{run_stealing, StealPolicy, StealPool};
-use crate::vars::Package;
-use crate::{Real, NHYDRO};
+use crate::tasks::{TaskId, TaskList, TaskStatus, NONE};
+use crate::util::stealing::StealPolicy;
+use crate::Real;
+use crate::NHYDRO;
 
 /// Instrumentation counters for the fused overlap pipeline (cumulative
 /// over stages/cycles). `early_poll_violations` pins the overlap contract:
@@ -68,14 +68,13 @@ pub struct OverlapStats {
 
 /// Bounded scratch store for the fused pipeline: at most `nworkers` flux
 /// tasks run concurrently, so a stack of `nworkers` scratches serves every
-/// pack without per-pack allocations (the fused analog of the phased
-/// path's one-scratch-per-worker array).
-struct ScratchPool {
+/// pack without per-pack allocations.
+pub(crate) struct ScratchPool {
     stack: Mutex<Vec<Scratch>>,
 }
 
 impl ScratchPool {
-    fn new(scratches: Vec<Scratch>) -> ScratchPool {
+    pub(crate) fn new(scratches: Vec<Scratch>) -> ScratchPool {
         ScratchPool { stack: Mutex::new(scratches) }
     }
 
@@ -86,43 +85,32 @@ impl ScratchPool {
         r
     }
 
-    fn into_inner(self) -> Vec<Scratch> {
+    pub(crate) fn into_inner(self) -> Vec<Scratch> {
         self.stack.into_inner().unwrap()
     }
 }
 
 /// Per-rank host executor state: per-block work arrays (same order as
-/// `mesh.blocks`) plus one scratch per worker thread.
+/// `mesh.blocks`) plus one scratch per worker thread. Fields are crate
+/// visible so [`super::run_stage`] can split them into disjoint per-pack
+/// chunks for the contexts of the merged region.
 pub struct HostExec {
-    flux: Vec<FluxArrays>,
-    u0: Vec<Vec<Real>>,
-    unew: Vec<Vec<Real>>,
-    scratch: Vec<Scratch>,
+    pub(crate) flux: Vec<FluxArrays>,
+    pub(crate) u0: Vec<Vec<Real>>,
+    pub(crate) unew: Vec<Vec<Real>>,
+    pub(crate) scratch: Vec<Scratch>,
     /// Measured kernel seconds per block, accumulated over the cycle's
     /// stages and drained by `HydroSim::update_block_costs`.
-    block_secs: Vec<f64>,
-    nworkers: usize,
+    pub(crate) block_secs: Vec<f64>,
+    pub(crate) nworkers: usize,
     /// Requested worker count (`parthenon/exec nworkers`, 0 = auto) —
     /// kept so [`HostExec::resize`] re-resolves `nworkers` against a new
     /// pack count exactly like a fresh build.
     nworkers_req: usize,
     /// Ranks sharing this machine's cores (auto worker sizing).
     nranks: usize,
-    policy: StealPolicy,
-    overlap_stats: OverlapStats,
-    /// Local raw CFL dt cached by the fused pipeline's regional reduction
-    /// on the final RK stage (the per-pack partial minima folded
-    /// cross-list inside the stage region) — so `local_dt` needs no
-    /// separate sweep over the blocks in fused mode. `None` until the
-    /// first fused cycle completes (and after every rebuild: regrid /
-    /// rebalance / restart recreate the executor).
-    fused_dt: Option<f64>,
-    /// GLOBAL (cross-rank) dt produced by the overlapped collective the
-    /// fused final stage posted from inside its task region (tree
-    /// collectives only). Taken — consumed once — by
-    /// `HydroSim::reduce_dt`, which then skips its blocking allreduce
-    /// entirely.
-    fused_dt_global: Option<f64>,
+    pub(crate) policy: StealPolicy,
+    pub(crate) overlap_stats: OverlapStats,
 }
 
 impl HostExec {
@@ -152,18 +140,16 @@ impl HostExec {
             nranks: ranks_sharing,
             policy,
             overlap_stats: OverlapStats::default(),
-            fused_dt: None,
-            fused_dt_global: None,
         }
     }
 
     /// Resize the per-block work arrays in place after an incremental
-    /// rebalance: allocations for surviving blocks are reused (the arrays
-    /// are per-cycle scratch, so contents never carry over anyway), the
-    /// worker count is re-resolved against the new pack count exactly like
-    /// [`HostExec::new`] would, timing accumulators are zeroed and the
-    /// cached fused dt is dropped — leaving the executor in the same state
-    /// a fresh build produces, minus the allocations.
+    /// rebalance (or a device re-plan under hybrid): allocations for
+    /// surviving blocks are reused (the arrays are per-cycle scratch, so
+    /// contents never carry over anyway), the worker count is re-resolved
+    /// against the new pack count exactly like [`HostExec::new`] would,
+    /// and timing accumulators are zeroed — leaving the executor in the
+    /// same state a fresh build produces, minus the allocations.
     pub fn resize(&mut self, shape: &IndexShape, nblocks: usize, npacks: usize) {
         let nelem = NHYDRO * shape.ncells_total();
         let cap = npacks.max(1);
@@ -182,14 +168,6 @@ impl HostExec {
         self.block_secs.clear();
         self.block_secs.resize(nblocks, 0.0);
         self.overlap_stats = OverlapStats::default();
-        self.fused_dt = None;
-        self.fused_dt_global = None;
-    }
-
-    /// Consume the overlapped global dt (fused final stage, tree
-    /// collectives). `None` when the blocking reduction must run instead.
-    pub fn take_global_dt(&mut self) -> Option<f64> {
-        self.fused_dt_global.take()
     }
 
     pub fn nworkers(&self) -> usize {
@@ -223,7 +201,7 @@ impl HostExec {
 
 /// Split a per-block slice into per-pack chunks matching `ranges`
 /// (contiguous ascending block ranges covering the slice).
-fn split_chunks<'a, T>(
+pub(crate) fn split_chunks<'a, T>(
     mut rest: &'a mut [T],
     ranges: &[std::ops::Range<usize>],
 ) -> Vec<&'a mut [T]> {
@@ -236,675 +214,248 @@ fn split_chunks<'a, T>(
     parts
 }
 
-/// Shared slot of the overlapped dt collective (fused final stage, tree
-/// collectives): the posting task folds the per-pack minima, posts the
-/// `iallreduce(Min)` on the driver's collective communicator, and parks
-/// the handle here; the draining task polls it to completion while other
-/// lists' boundary polls keep running on the same worker pool.
-struct DtCollSlot<'a> {
-    /// `Some` only when the overlapped reduction is active this stage.
-    comm: Option<&'a Comm>,
-    handle: Mutex<Option<CollHandle>>,
-    /// Global dt bits, stored when the handle completes.
-    global: AtomicU64,
-}
-
-/// Per-pack context of the fused stage pipeline: one task list per pack
+/// Per-pack context of the host stage pipeline: one task list per pack
 /// runs fluxes → flux-correction → combine → boundary sends → receive
 /// polls against this context, which owns a disjoint `&mut` slice of every
 /// per-block structure (blocks, fluxes, u_new, timings) plus shared
 /// read-only views (topology, u0, scratch pool) — the whole context is
-/// `Send`, so its list can be swept by any worker while other packs' lists
-/// run concurrently.
-struct FusedPackCtx<'a> {
+/// `Send`, so its list can be swept by any worker while other packs'
+/// (host OR device) lists run concurrently.
+pub(crate) struct HostPackCtx<'a> {
     /// Global index of the pack's first block (u0 is indexed globally).
-    start: usize,
+    pub start: usize,
     /// Pack index (slot in the regional dt reduction's `minima`).
-    pi: usize,
-    blocks: &'a mut [MeshBlock],
-    flux: &'a mut [FluxArrays],
-    unew: &'a mut [Vec<Real>],
-    secs: &'a mut [f64],
-    u0: &'a [Vec<Real>],
+    pub pi: usize,
+    pub blocks: &'a mut [MeshBlock],
+    pub flux: &'a mut [FluxArrays],
+    pub unew: &'a mut [Vec<Real>],
+    pub secs: &'a mut [f64],
+    pub u0: &'a [Vec<Real>],
     /// Flux corrections this pack's coarse blocks expect (indices are
     /// global; polled against the pack's flux slice via `start`).
-    fpending: Vec<super::FluxRecv>,
+    pub fpending: Vec<super::FluxRecv>,
+    /// Per-block speculation flags: `spec[off]` = the block expects NO
+    /// fine-neighbor flux correction, so its combine may run before the
+    /// correction poll (the poll only ever writes blocks with pending
+    /// corrections, so a speculative block's inputs are already final).
+    pub spec: Vec<bool>,
     /// Send/receive halves of the pack's ghost exchange; also the single
     /// owner of the shared topology (`PackExchange::topo`).
-    exch: PackExchange<'a>,
-    fcomm: &'a Comm,
-    scratch: &'a ScratchPool,
-    stats: &'a OverlapStats,
+    pub exch: PackExchange<'a>,
+    pub fcomm: &'a Comm,
+    pub scratch: &'a ScratchPool,
+    pub stats: &'a OverlapStats,
     /// Package view for the fused dt reduction (`estimate_dt` reads
     /// interior cells only, so it can run right after the combine).
-    pkg: &'a HydroPackage,
-    /// Per-pack partial CFL minima of the fused dt reduction (one slot
-    /// per pack, f64 bit patterns; min is exact, so the regional fold is
-    /// bitwise equal to the phased path's block-order sweep).
-    minima: &'a [AtomicU64],
-    /// Result slot written by the regional cross-list fold.
-    dt_result: &'a AtomicU64,
-    /// Count of per-pack dt tasks that have stored their minimum — the
-    /// overlapped collective posts once this reaches the pack count.
-    dt_done: &'a AtomicUsize,
-    /// The in-flight global dt collective (see [`DtCollSlot`]).
-    coll: &'a DtCollSlot<'a>,
-    shape: IndexShape,
-    gamma: Real,
-    co: StageCoeffs,
-    dt: Real,
-    error: Option<Error>,
+    pub pkg: &'a HydroPackage,
+    /// Per-pack partial CFL minima of the merged dt reduction (one f64
+    /// bit-pattern slot per pack across BOTH spaces; min is exact, so the
+    /// cross-list fold is bitwise order-independent).
+    pub minima: &'a [AtomicU64],
+    /// Result slot written by the cross-list fold.
+    pub dt_result: &'a AtomicU64,
+    /// The shared dt collective state (post counter + in-flight handle).
+    pub coll: &'a DtColl<'a>,
+    pub shape: IndexShape,
+    pub gamma: Real,
+    pub co: StageCoeffs,
+    pub dt: Real,
+    pub error: Option<Error>,
     /// Shared across packs: first error drains every list fast.
-    abort: &'a AtomicBool,
+    pub abort: &'a AtomicBool,
 }
 
-impl HostExec {
-    /// The fused stage: phases 1–4 as ONE per-pack task list executed on
-    /// the work-stealing pool, so boundary exchange of one pack overlaps
-    /// compute of the others. Bitwise identical to the phased path: every
-    /// per-block kernel reads exactly the inputs it reads there (fluxes
-    /// from its own block, corrections complete before its combine,
-    /// ghost segments written to disjoint slabs), and physical BCs are
-    /// applied at the same point, after every receive has landed.
-    fn stage_fused(
-        &mut self,
-        sim: &mut super::HydroSim,
-        co: StageCoeffs,
-        si: usize,
-        dt: Real,
-    ) -> Result<()> {
-        sim.mesh_data.validate(&sim.mesh)?;
-        let shape = sim.mesh.cfg.index_shape();
-        let gamma = sim.pkg.gamma;
-        let stall = sim.world.stall_limit();
-        let multilevel = sim.is_multilevel();
-        let pack_ranges = sim.mesh_data.block_ranges();
-        let mut pack_costs = sim.mesh_data.pack_costs(&sim.mesh);
-        let npacks = pack_ranges.len();
-        let nworkers = self.nworkers;
-        let policy = self.policy;
-        // The fused dt reduction runs on the final RK stage only: t_dt
-        // partial minima per pack + one regional cross-list fold.
-        let final_stage = si + 1 == native::RK2_STAGES.len();
-        // With tree collectives the GLOBAL dt reduction also runs inside
-        // the region: an extra task list folds the per-pack minima as soon
-        // as the last t_dt lands, posts the iallreduce(Min), and polls the
-        // handle — overlapping the cross-rank exchange with the tail
-        // packs' boundary-receive polls. Flat mode keeps the blocking
-        // post-region allreduce as the oracle.
-        let overlap_coll = final_stage && sim.sp.coll == CollMode::Tree;
-        // Reduction slots exist only on the final stage (empty slice
-        // otherwise — no t_dt task ever reads it).
-        let minima: Vec<AtomicU64> = if final_stage {
-            (0..npacks).map(|_| AtomicU64::new(f64::INFINITY.to_bits())).collect()
-        } else {
-            Vec::new()
-        };
-        let dt_result = AtomicU64::new(f64::INFINITY.to_bits());
-        let dt_done = AtomicUsize::new(0);
-        let coll_slot = DtCollSlot {
-            comm: if overlap_coll && npacks > 0 { Some(&sim.comm_coll) } else { None },
-            handle: Mutex::new(None),
-            global: AtomicU64::new(f64::INFINITY.to_bits()),
-        };
-
-        // Scratch moves into a bounded pool (≤ nworkers concurrent flux
-        // tasks) and is restored below, also on error paths.
-        let scratch_pool = ScratchPool::new(std::mem::take(&mut self.scratch));
-        let mut first_error: Option<Error> = None;
-        {
-            let stats = &self.overlap_stats;
-            let flux_parts = split_chunks(&mut self.flux, &pack_ranges);
-            let unew_parts = split_chunks(&mut self.unew, &pack_ranges);
-            let secs_parts = split_chunks(&mut self.block_secs, &pack_ranges);
-            let u0_all: &[Vec<Real>] = &self.u0;
-
-            let mesh = &mut sim.mesh;
-            let topo = ExchTopo {
-                shape,
-                dim: mesh.cfg.dim,
-                tree: &mesh.tree,
-                ranks: &mesh.ranks,
-            };
-            // Flux corrections are registered per pack up front (reads the
-            // immutable topology), before the blocks split into disjoint
-            // per-pack slices.
-            let fpend: Vec<Vec<super::FluxRecv>> = if multilevel {
-                pack_ranges
-                    .iter()
-                    .map(|r| {
-                        super::flux_corr_pending_blocks(
-                            &topo,
-                            &mesh.blocks[r.clone()],
-                            r.start,
-                        )
-                    })
-                    .collect()
-            } else {
-                (0..npacks).map(|_| Vec::new()).collect()
-            };
-            let block_parts = split_chunks(&mut mesh.blocks, &pack_ranges);
-            let comm = &sim.comm_cons;
-            let fcomm = &sim.comm_flux;
-            let abort = AtomicBool::new(false);
-
-            let mut ctxs: Vec<FusedPackCtx> = Vec::with_capacity(npacks);
-            for (pi, ((((range, blocks), flux), (unew, secs)), fpending)) in pack_ranges
-                .iter()
-                .zip(block_parts)
-                .zip(flux_parts)
-                .zip(unew_parts.into_iter().zip(secs_parts))
-                .zip(fpend)
-                .enumerate()
-            {
-                ctxs.push(FusedPackCtx {
-                    start: range.start,
-                    pi,
-                    blocks,
-                    flux,
-                    unew,
-                    secs,
-                    u0: u0_all,
-                    fpending,
-                    exch: PackExchange::new(topo, comm, CONS),
-                    fcomm,
-                    scratch: &scratch_pool,
-                    stats,
-                    pkg: &sim.pkg,
-                    minima: &minima,
-                    dt_result: &dt_result,
-                    dt_done: &dt_done,
-                    coll: &coll_slot,
-                    shape,
-                    gamma,
-                    co,
-                    dt,
-                    error: None,
-                    abort: &abort,
-                });
-            }
-
-            // The overlapped dt collective gets its own (cheap) task list
-            // so its Incomplete polls interleave with every pack's
-            // boundary polls on the worker pool — regional tasks only run
-            // AFTER the pool drains, which would forfeit the overlap.
-            let nlists = npacks + usize::from(overlap_coll && npacks > 0);
-            let mut region: TaskRegion<FusedPackCtx> = TaskRegion::new(nlists);
-            let mut dt_marks = Vec::new();
-            for pi in 0..npacks {
-                let list = region.list(pi);
-                // 1. prim recovery + fluxes for the pack's blocks
-                let t_flux = list.add(NONE, |c: &mut FusedPackCtx| {
-                    if c.abort.load(Ordering::SeqCst) {
-                        return TaskStatus::Complete;
-                    }
-                    let FusedPackCtx { blocks, flux, secs, scratch, shape, gamma, .. } =
-                        c;
-                    scratch.with(|scr| {
-                        for (off, fx) in flux.iter_mut().enumerate() {
-                            let t0 = Instant::now();
-                            let arr = blocks[off].data.get(CONS).expect("cons");
-                            native::compute_fluxes(
-                                arr.as_slice(),
-                                shape,
-                                *gamma,
-                                fx,
-                                scr,
-                            );
-                            secs[off] += t0.elapsed().as_secs_f64();
-                        }
-                    });
-                    TaskStatus::Complete
-                });
-                // 2. flux correction (multilevel): fine-side sends read the
-                // computed fluxes; the coarse-side poll overwrites disjoint
-                // face entries and gates the combine.
-                let dep_apply = if multilevel {
-                    let _t_fcsend = list.add(&[t_flux], |c: &mut FusedPackCtx| {
-                        if c.abort.load(Ordering::SeqCst) {
-                            return TaskStatus::Complete;
-                        }
-                        let FusedPackCtx { blocks, flux, exch, fcomm, .. } = c;
-                        let topo = exch.topo();
-                        for (off, b) in blocks.iter().enumerate() {
-                            super::flux_corr_send_block(&topo, fcomm, &b.loc, &flux[off]);
-                        }
-                        TaskStatus::Complete
-                    });
-                    list.add(&[t_flux], |c: &mut FusedPackCtx| {
-                        if c.abort.load(Ordering::SeqCst) {
-                            return TaskStatus::Complete;
-                        }
-                        let FusedPackCtx {
-                            flux, fpending, fcomm, start, exch, error, abort, ..
-                        } = c;
-                        match super::flux_corr_poll_pending(
-                            fcomm,
-                            exch.topo().dim,
-                            fpending,
-                            flux,
-                            *start,
-                        ) {
-                            Ok(true) => TaskStatus::Complete,
-                            Ok(false) => TaskStatus::Incomplete,
-                            Err(e) => {
-                                *error = Some(e);
-                                abort.store(true, Ordering::SeqCst);
-                                TaskStatus::Complete
-                            }
-                        }
-                    })
-                } else {
-                    t_flux
-                };
-                // 3. stage combine (reads u0 globally, writes own blocks)
-                let t_apply = list.add(&[dep_apply], |c: &mut FusedPackCtx| {
-                    if c.abort.load(Ordering::SeqCst) {
-                        return TaskStatus::Complete;
-                    }
-                    let FusedPackCtx {
-                        blocks, flux, unew, secs, u0, start, shape, co, dt, ..
-                    } = c;
-                    for (off, b) in blocks.iter_mut().enumerate() {
-                        let t0 = Instant::now();
-                        let dx = [
-                            b.coords.dx[0] as Real,
-                            b.coords.dx[1] as Real,
-                            b.coords.dx[2] as Real,
-                        ];
-                        let arr = b.data.get_mut(CONS).expect("cons");
-                        native::apply_stage(
-                            arr.as_slice(),
-                            &u0[*start + off],
-                            &flux[off],
-                            shape,
-                            *co,
-                            *dt,
-                            dx,
-                            &mut unew[off],
-                        );
-                        arr.as_mut_slice().copy_from_slice(&unew[off]);
-                        secs[off] += t0.elapsed().as_secs_f64();
-                    }
-                    TaskStatus::Complete
-                });
-                // 4a. post the pack's boundary sends + register receives
-                let t_send = list.add(&[t_apply], |c: &mut FusedPackCtx| {
-                    if c.abort.load(Ordering::SeqCst) {
-                        return TaskStatus::Complete;
-                    }
-                    let FusedPackCtx { blocks, exch, stats, error, abort, .. } = c;
-                    match exch.post_sends(blocks) {
-                        Ok(()) => {
-                            exch.register_receives(blocks);
-                            stats.packs_posted.fetch_add(1, Ordering::Relaxed);
-                            stats
-                                .segments_sent
-                                .fetch_add(exch.segments_sent() as u64, Ordering::Relaxed);
-                        }
-                        Err(e) => {
-                            if error.is_none() {
-                                *error = Some(e);
-                            }
-                            abort.store(true, Ordering::SeqCst);
-                        }
-                    }
-                    TaskStatus::Complete
-                });
-                // 4b. poll receives; Incomplete hands the worker to other
-                // packs' lists — this is where the overlap happens.
-                let _t_poll = list.add(&[t_send], |c: &mut FusedPackCtx| {
-                    if c.error.is_some() || c.abort.load(Ordering::SeqCst) {
-                        return TaskStatus::Complete;
-                    }
-                    let FusedPackCtx { blocks, exch, stats, error, abort, .. } = c;
-                    match exch.poll(blocks) {
-                        Ok(true) => TaskStatus::Complete,
-                        Ok(false) => {
-                            stats.incomplete_polls.fetch_add(1, Ordering::Relaxed);
-                            if !exch.sends_posted() {
-                                stats
-                                    .early_poll_violations
-                                    .fetch_add(1, Ordering::Relaxed);
-                            }
-                            TaskStatus::Incomplete
-                        }
-                        Err(e) => {
-                            *error = Some(e);
-                            abort.store(true, Ordering::SeqCst);
-                            TaskStatus::Complete
-                        }
-                    }
-                });
-                // 5. (final stage) per-pack partial CFL min — reads the
-                // combined interior state written by t_apply, so it rides
-                // the same list without waiting on the ghost exchange.
-                if final_stage {
-                    let t_dt = list.add(&[t_apply], |c: &mut FusedPackCtx| {
-                        if c.abort.load(Ordering::SeqCst) {
-                            return TaskStatus::Complete;
-                        }
-                        let mut m = f64::INFINITY;
-                        for b in c.blocks.iter() {
-                            m = m.min(c.pkg.estimate_dt(&b.data, &b.coords));
-                        }
-                        c.minima[c.pi].store(m.to_bits(), Ordering::SeqCst);
-                        c.dt_done.fetch_add(1, Ordering::SeqCst);
-                        TaskStatus::Complete
-                    });
-                    dt_marks.push((pi, t_dt));
-                }
-            }
-            if overlap_coll && npacks > 0 {
-                // Extra task list: fold the per-pack minima the moment the
-                // last t_dt lands, post the global iallreduce(Min), then
-                // poll the tree handle to completion. Both tasks return
-                // Incomplete while waiting, so workers sweep back to the
-                // packs' boundary polls in between — the global dt
-                // reduction rides the same overlap the ghost exchange
-                // uses.
-                let list = region.list(npacks);
-                let t_post = list.add(NONE, move |c: &mut FusedPackCtx| {
-                    if c.abort.load(Ordering::SeqCst) {
-                        return TaskStatus::Complete;
-                    }
-                    if c.dt_done.load(Ordering::SeqCst) < npacks {
-                        return TaskStatus::Incomplete;
-                    }
-                    let mut m = f64::INFINITY;
-                    for a in c.minima {
-                        m = m.min(f64::from_bits(a.load(Ordering::SeqCst)));
-                    }
-                    c.dt_result.store(m.to_bits(), Ordering::SeqCst);
-                    let comm = c.coll.comm.expect("overlap collective comm");
-                    *c.coll.handle.lock().unwrap() =
-                        Some(comm.iallreduce(m, ReduceOp::Min));
-                    TaskStatus::Complete
-                });
-                let _t_drain = list.add(&[t_post], |c: &mut FusedPackCtx| {
-                    if c.abort.load(Ordering::SeqCst) {
-                        return TaskStatus::Complete;
-                    }
-                    let mut slot = c.coll.handle.lock().unwrap();
-                    match slot.as_mut().map(CollHandle::test) {
-                        Some(Ok(true)) => {
-                            match slot.take().expect("handle present").into_f64() {
-                                Ok(g) => {
-                                    c.coll.global.store(g.to_bits(), Ordering::SeqCst);
-                                }
-                                Err(e) => {
-                                    drop(slot);
-                                    if c.error.is_none() {
-                                        c.error = Some(e);
-                                    }
-                                    c.abort.store(true, Ordering::SeqCst);
-                                }
-                            }
-                            TaskStatus::Complete
-                        }
-                        Some(Ok(false)) => TaskStatus::Incomplete,
-                        Some(Err(e)) => {
-                            *slot = None; // poisoned handle: drop it
-                            drop(slot);
-                            if c.error.is_none() {
-                                c.error = Some(e);
-                            }
-                            c.abort.store(true, Ordering::SeqCst);
-                            TaskStatus::Complete
-                        }
-                        // aborted before the post ran
-                        None => TaskStatus::Complete,
-                    }
-                });
-            } else if final_stage && npacks > 0 {
-                // Flat oracle: regional cross-list fold under the same
-                // abort-aware region (replaces the whole-rank local_dt
-                // sweep that used to run after the cycle); the blocking
-                // global allreduce stays in `reduce_dt`.
-                region.add_regional(dt_marks, |c: &mut FusedPackCtx| {
-                    let mut m = f64::INFINITY;
-                    for a in c.minima {
-                        m = m.min(f64::from_bits(a.load(Ordering::SeqCst)));
-                    }
-                    c.dt_result.store(m.to_bits(), Ordering::SeqCst);
-                    TaskStatus::Complete
-                });
-            }
-            if overlap_coll && npacks > 0 {
-                // one context (and one seed-cost slot) per task list
-                ctxs.push(FusedPackCtx {
-                    start: 0,
-                    pi: npacks,
-                    blocks: &mut [],
-                    flux: &mut [],
-                    unew: &mut [],
-                    secs: &mut [],
-                    u0: u0_all,
-                    fpending: Vec::new(),
-                    exch: PackExchange::new(topo, comm, CONS),
-                    fcomm,
-                    scratch: &scratch_pool,
-                    stats,
-                    pkg: &sim.pkg,
-                    minima: &minima,
-                    dt_result: &dt_result,
-                    dt_done: &dt_done,
-                    coll: &coll_slot,
-                    shape,
-                    gamma,
-                    co,
-                    dt,
-                    error: None,
-                    abort: &abort,
-                });
-                pack_costs.push(0.0);
-            }
-
-            let res = region.execute_parallel_weighted(
-                ctxs,
-                Some(&pack_costs),
-                nworkers,
-                policy,
-                stall,
-            );
-            match res {
-                Ok(done) => {
-                    for c in done {
-                        if let Some(e) = c.error {
-                            first_error = Some(e);
-                            break;
-                        }
-                    }
-                }
-                Err(e) => first_error = Some(e),
-            }
+/// Stage-combine the context's blocks whose `spec` flag equals
+/// `speculative` (both halves together cover the pack exactly once; the
+/// per-block arithmetic is identical either way, so the split is bitwise
+/// neutral).
+fn combine_blocks(c: &mut HostPackCtx, speculative: bool) {
+    let HostPackCtx { blocks, flux, unew, secs, u0, start, spec, shape, co, dt, .. } =
+        c;
+    for (off, b) in blocks.iter_mut().enumerate() {
+        if spec[off] != speculative {
+            continue;
         }
-        self.scratch = scratch_pool.into_inner();
-        if let Some(e) = first_error {
-            // A stalled task region is this rank's first sight of the
-            // failure: escalate so every peer's waits drain with `Aborted`
-            // instead of idling out their own watchdogs one by one.
-            sim.world.escalate(sim.mesh.my_rank, &e);
-            return Err(e);
-        }
-        if final_stage {
-            // Local dt for this cycle, produced inside the region — the
-            // post-cycle `local_dt` consults this instead of re-sweeping.
-            self.fused_dt = Some(f64::from_bits(dt_result.load(Ordering::SeqCst)));
-            if overlap_coll {
-                // Every rank posts exactly one dt collective per cycle, so
-                // a rank with zero packs (no task region to overlap with)
-                // still joins the exchange — here, blocking, with an
-                // identity contribution.
-                let g = if npacks > 0 {
-                    f64::from_bits(coll_slot.global.load(Ordering::SeqCst))
-                } else {
-                    sim.comm_coll
-                        .iallreduce(f64::INFINITY, ReduceOp::Min)
-                        .into_f64()?
-                };
-                self.fused_dt_global = Some(g);
-            }
-        }
-        // Physical BCs once every receive has landed — the same point the
-        // phased path applies them.
-        bvals::apply_block_physical_bcs(
-            &mut sim.mesh,
-            CONS,
-            Some([native::IM1, native::IM2, native::IM3]),
-        )
+        let t0 = Instant::now();
+        let dx =
+            [b.coords.dx[0] as Real, b.coords.dx[1] as Real, b.coords.dx[2] as Real];
+        let arr = b.data.get_mut(CONS).expect("cons");
+        native::apply_stage(
+            arr.as_slice(),
+            &u0[*start + off],
+            &flux[off],
+            shape,
+            *co,
+            *dt,
+            dx,
+            &mut unew[off],
+        );
+        arr.as_mut_slice().copy_from_slice(&unew[off]);
+        secs[off] += t0.elapsed().as_secs_f64();
     }
 }
 
-impl StageExecutor for HostExec {
-    fn begin_cycle(&mut self, sim: &mut super::HydroSim) -> Result<()> {
-        sim.mesh_data.validate(&sim.mesh)?;
-        for (bi, b) in sim.mesh.blocks.iter().enumerate() {
-            self.u0[bi].copy_from_slice(b.data.get(CONS)?.as_slice());
+/// Produce the host-space task list for one pack into `list` (part of the
+/// driver's merged region). Tasks unwrap [`SpaceCtx::Host`]; the returned
+/// id is the final-stage dt task (the regional fold's mark), `None` on
+/// non-final stages.
+///
+/// Task graph: `t_flux` → {`t_fcsend`, `t_fcpoll`}(multilevel) with the
+/// combine split into a speculative half (gated on fluxes only — blocks
+/// with no pending corrections) and a patch-back half (gated on the
+/// correction poll); sends/dt wait for both halves.
+pub(crate) fn add_host_pack_list(
+    list: &mut TaskList<SpaceCtx<'_>>,
+    multilevel: bool,
+    final_stage: bool,
+) -> Option<TaskId> {
+    // 1. prim recovery + fluxes for the pack's blocks
+    let t_flux = list.add(NONE, |ctx: &mut SpaceCtx| {
+        let SpaceCtx::Host(c) = ctx else { return TaskStatus::Complete };
+        if c.abort.load(Ordering::SeqCst) {
+            return TaskStatus::Complete;
         }
-        Ok(())
-    }
-
-    fn stage(
-        &mut self,
-        sim: &mut super::HydroSim,
-        co: StageCoeffs,
-        si: usize,
-        dt: Real,
-    ) -> Result<()> {
-        if sim.sp.overlap == OverlapMode::Fused {
-            return self.stage_fused(sim, co, si, dt);
-        }
-        sim.mesh_data.validate(&sim.mesh)?;
-        let shape = sim.mesh.cfg.index_shape();
-        let gamma = sim.pkg.gamma;
-        let multilevel = sim.is_multilevel();
-        if multilevel {
-            sim.flux_corr_post_recvs();
-        }
-        // Packs are the unit of stealing; the seed partition is weighted
-        // by the measured per-block costs.
-        let pack_ranges = sim.mesh_data.block_ranges();
-        let pack_costs = sim.mesh_data.pack_costs(&sim.mesh);
-
-        // Phase 1 — fluxes, pack-stealing (reads block state, writes
-        // disjoint per-pack flux chunks; each worker owns a scratch).
-        {
-            let blocks = &sim.mesh.blocks;
-            let flux_parts = split_chunks(&mut self.flux, &pack_ranges);
-            let secs_parts = split_chunks(&mut self.block_secs, &pack_ranges);
-            let items: Vec<(usize, &mut [FluxArrays], &mut [f64])> = pack_ranges
-                .iter()
-                .zip(flux_parts.into_iter().zip(secs_parts))
-                .map(|(r, (fx, sc))| (r.start, fx, sc))
-                .collect();
-            let pool = StealPool::seed(&pack_costs, self.nworkers, self.policy);
-            run_stealing(
-                &pool,
-                items,
-                &mut self.scratch,
-                |scr: &mut Scratch, _pi, (start, flux_part, secs_part)| {
-                    for (off, fx) in flux_part.iter_mut().enumerate() {
-                        let t0 = Instant::now();
-                        let arr = blocks[start + off].data.get(CONS).expect("cons");
-                        native::compute_fluxes(arr.as_slice(), &shape, gamma, fx, scr);
-                        secs_part[off] += t0.elapsed().as_secs_f64();
-                    }
-                },
-            );
-        }
-
-        // Phase 2 — flux correction across fine/coarse faces (multilevel
-        // only): communication-bound, driver thread, backoff while waiting.
-        if multilevel {
-            for bi in 0..sim.mesh.blocks.len() {
-                sim.flux_corr_send(&self.flux[bi], bi);
-            }
-            sim.flux_corr_wait(&mut self.flux)?;
-        }
-
-        // Phase 3 — stage combine, pack-stealing (disjoint &mut blocks;
-        // fluxes and u0 are read by global block index).
-        {
-            let flux = &self.flux;
-            let u0 = &self.u0;
-            let block_parts = split_chunks(&mut sim.mesh.blocks, &pack_ranges);
-            let unew_parts = split_chunks(&mut self.unew, &pack_ranges);
-            let secs_parts = split_chunks(&mut self.block_secs, &pack_ranges);
-            let items: Vec<_> = pack_ranges
-                .iter()
-                .zip(block_parts)
-                .zip(unew_parts.into_iter().zip(secs_parts))
-                .map(|((r, bp), (up, sp))| (r.start, bp, up, sp))
-                .collect();
-            let pool = StealPool::seed(&pack_costs, self.nworkers, self.policy);
-            run_stealing(
-                &pool,
-                items,
-                &mut self.scratch,
-                |_scr: &mut Scratch, _pi, (start, blocks_part, unew_part, secs_part)| {
-                    for (off, b) in blocks_part.iter_mut().enumerate() {
-                        let t0 = Instant::now();
-                        let dx = [
-                            b.coords.dx[0] as Real,
-                            b.coords.dx[1] as Real,
-                            b.coords.dx[2] as Real,
-                        ];
-                        let arr = b.data.get_mut(CONS).expect("cons");
-                        native::apply_stage(
-                            arr.as_slice(),
-                            &u0[start + off],
-                            &flux[start + off],
-                            &shape,
-                            co,
-                            dt,
-                            dx,
-                            &mut unew_part[off],
-                        );
-                        arr.as_mut_slice().copy_from_slice(&unew_part[off]);
-                        secs_part[off] += t0.elapsed().as_secs_f64();
-                    }
-                },
-            );
-        }
-
-        // Phase 4 — ghost exchange as per-pack task lists, run on the same
-        // worker-pool shape (parallel polling; serial under sched=static).
-        run_stage_exchange(sim, self.nworkers, self.policy)
-    }
-
-    /// Local CFL dt. In fused mode this returns the value the stage
-    /// region's regional dt reduction already produced (no extra sweep
-    /// over the blocks); otherwise it's a parallel min-reduction of the
-    /// per-block CFL estimates over the pack items, folded on the driver
-    /// thread (f64 min is associative and commutative, so the result is
-    /// order-independent — and bitwise equal to the fused reduction).
-    fn local_dt(&self, sim: &super::HydroSim) -> f64 {
-        let blocks = &sim.mesh.blocks;
-        if blocks.is_empty() {
-            return f64::INFINITY;
-        }
-        if sim.sp.overlap == OverlapMode::Fused {
-            if let Some(v) = self.fused_dt {
-                return v;
-            }
-        }
-        let pkg = &sim.pkg;
-        if !sim.mesh_data.is_current(&sim.mesh) || self.nworkers <= 1 {
-            return blocks
-                .iter()
-                .map(|b| pkg.estimate_dt(&b.data, &b.coords))
-                .fold(f64::INFINITY, f64::min);
-        }
-        let pack_ranges = sim.mesh_data.block_ranges();
-        let pack_costs = sim.mesh_data.pack_costs(&sim.mesh);
-        let pool = StealPool::seed(&pack_costs, self.nworkers, self.policy);
-        let mut mins = vec![f64::INFINITY; pool.nworkers()];
-        run_stealing(&pool, pack_ranges, &mut mins, |m, _pi, r| {
-            for b in &blocks[r] {
-                *m = m.min(pkg.estimate_dt(&b.data, &b.coords));
+        let HostPackCtx { blocks, flux, secs, scratch, shape, gamma, .. } = c;
+        scratch.with(|scr| {
+            for (off, fx) in flux.iter_mut().enumerate() {
+                let t0 = Instant::now();
+                let arr = blocks[off].data.get(CONS).expect("cons");
+                native::compute_fluxes(arr.as_slice(), shape, *gamma, fx, scr);
+                secs[off] += t0.elapsed().as_secs_f64();
             }
         });
-        mins.into_iter().fold(f64::INFINITY, f64::min)
+        TaskStatus::Complete
+    });
+    // 2. speculative stage combine: blocks that expect no correction read
+    // only their own (final) fluxes, so they need not wait for the poll.
+    let t_apply_spec = list.add(&[t_flux], |ctx: &mut SpaceCtx| {
+        let SpaceCtx::Host(c) = ctx else { return TaskStatus::Complete };
+        if c.abort.load(Ordering::SeqCst) {
+            return TaskStatus::Complete;
+        }
+        combine_blocks(c, true);
+        TaskStatus::Complete
+    });
+    // 3. flux correction (multilevel): fine-side sends read the computed
+    // fluxes; the coarse-side poll overwrites disjoint face entries of the
+    // PENDING blocks only and gates their (patch-back) combine.
+    let apply_deps: Vec<TaskId> = if multilevel {
+        let _t_fcsend = list.add(&[t_flux], |ctx: &mut SpaceCtx| {
+            let SpaceCtx::Host(c) = ctx else { return TaskStatus::Complete };
+            if c.abort.load(Ordering::SeqCst) {
+                return TaskStatus::Complete;
+            }
+            let HostPackCtx { blocks, flux, exch, fcomm, .. } = c;
+            let topo = exch.topo();
+            for (off, b) in blocks.iter().enumerate() {
+                super::flux_corr_send_block(&topo, fcomm, &b.loc, &flux[off]);
+            }
+            TaskStatus::Complete
+        });
+        let t_fcpoll = list.add(&[t_flux], |ctx: &mut SpaceCtx| {
+            let SpaceCtx::Host(c) = ctx else { return TaskStatus::Complete };
+            if c.abort.load(Ordering::SeqCst) {
+                return TaskStatus::Complete;
+            }
+            let HostPackCtx { flux, fpending, fcomm, start, exch, error, abort, .. } =
+                c;
+            match super::flux_corr_poll_pending(
+                fcomm,
+                exch.topo().dim,
+                fpending,
+                flux,
+                *start,
+            ) {
+                Ok(true) => TaskStatus::Complete,
+                Ok(false) => TaskStatus::Incomplete,
+                Err(e) => {
+                    *error = Some(e);
+                    abort.store(true, Ordering::SeqCst);
+                    TaskStatus::Complete
+                }
+            }
+        });
+        // patch-back combine for the blocks whose fluxes the poll patched
+        let t_apply_rest = list.add(&[t_fcpoll], |ctx: &mut SpaceCtx| {
+            let SpaceCtx::Host(c) = ctx else { return TaskStatus::Complete };
+            if c.abort.load(Ordering::SeqCst) {
+                return TaskStatus::Complete;
+            }
+            combine_blocks(c, false);
+            TaskStatus::Complete
+        });
+        vec![t_apply_spec, t_apply_rest]
+    } else {
+        vec![t_apply_spec]
+    };
+    // 4a. post the pack's boundary sends + register receives
+    let t_send = list.add(&apply_deps, |ctx: &mut SpaceCtx| {
+        let SpaceCtx::Host(c) = ctx else { return TaskStatus::Complete };
+        if c.abort.load(Ordering::SeqCst) {
+            return TaskStatus::Complete;
+        }
+        let HostPackCtx { blocks, exch, stats, error, abort, .. } = c;
+        match exch.post_sends(blocks) {
+            Ok(()) => {
+                exch.register_receives(blocks);
+                stats.packs_posted.fetch_add(1, Ordering::Relaxed);
+                stats
+                    .segments_sent
+                    .fetch_add(exch.segments_sent() as u64, Ordering::Relaxed);
+            }
+            Err(e) => {
+                if error.is_none() {
+                    *error = Some(e);
+                }
+                abort.store(true, Ordering::SeqCst);
+            }
+        }
+        TaskStatus::Complete
+    });
+    // 4b. poll receives; Incomplete hands the worker to other lists —
+    // this is where the overlap happens.
+    let _t_poll = list.add(&[t_send], |ctx: &mut SpaceCtx| {
+        let SpaceCtx::Host(c) = ctx else { return TaskStatus::Complete };
+        if c.error.is_some() || c.abort.load(Ordering::SeqCst) {
+            return TaskStatus::Complete;
+        }
+        let HostPackCtx { blocks, exch, stats, error, abort, .. } = c;
+        match exch.poll(blocks) {
+            Ok(true) => TaskStatus::Complete,
+            Ok(false) => {
+                stats.incomplete_polls.fetch_add(1, Ordering::Relaxed);
+                if !exch.sends_posted() {
+                    stats.early_poll_violations.fetch_add(1, Ordering::Relaxed);
+                }
+                TaskStatus::Incomplete
+            }
+            Err(e) => {
+                *error = Some(e);
+                abort.store(true, Ordering::SeqCst);
+                TaskStatus::Complete
+            }
+        }
+    });
+    // 5. (final stage) per-pack partial CFL min — reads the combined
+    // interior state written by the combine halves, so it rides the same
+    // list without waiting on the ghost exchange. `estimate_dt` already
+    // includes the CFL factor, so the slot holds a finished local dt.
+    if final_stage {
+        let t_dt = list.add(&apply_deps, |ctx: &mut SpaceCtx| {
+            let SpaceCtx::Host(c) = ctx else { return TaskStatus::Complete };
+            if c.abort.load(Ordering::SeqCst) {
+                return TaskStatus::Complete;
+            }
+            let mut m = f64::INFINITY;
+            for b in c.blocks.iter() {
+                m = m.min(c.pkg.estimate_dt(&b.data, &b.coords));
+            }
+            c.minima[c.pi].store(m.to_bits(), Ordering::SeqCst);
+            c.coll.dt_done.fetch_add(1, Ordering::SeqCst);
+            TaskStatus::Complete
+        });
+        Some(t_dt)
+    } else {
+        None
     }
 }

@@ -1,0 +1,201 @@
+//! Cost-partitioned hybrid scheduling across execution spaces
+//! (`parthenon/exec space=hybrid`).
+//!
+//! The partitioner keeps TWO per-pack cost models — measured host-seconds
+//! and device-seconds, folded as EWMAs — and assigns every pack to one of
+//! the two spaces. In automatic mode (`hybrid_split < 0`) the assignment
+//! is a greedy two-machine makespan schedule: packs are visited in index
+//! order (deterministic) and each goes to the space on which it would
+//! *finish* earlier given the load already assigned there. A pack that has
+//! not been measured on a space yet uses its nominal scheduler cost
+//! ([`crate::mesh_data::MeshData::pack_costs`], mean 1.0) as an optimistic
+//! estimate for that space, so both spaces receive work before any
+//! measurement exists and the model self-corrects as cycles land.
+//!
+//! A forced split (`hybrid_split` in `[0, 1]`) bypasses the cost model and
+//! assigns the device a prefix of `floor(split * npacks)` packs — `0.0`
+//! degenerates to a pure-host run and `1.0` to a pure-device run, which is
+//! what pins the hybrid scheduler bitwise against the single-space oracles
+//! in `hybrid_equivalence`.
+//!
+//! Re-partitioning happens at the `parthenon/loadbalance interval`
+//! cadence (driven from [`super::HydroSim::step`]); the driver re-stages a
+//! migrating pack exactly once per migration and counts it in
+//! [`crate::metrics::HybridStats`].
+
+use crate::mesh_data::PackSpace;
+
+/// Weight of the newest per-pack seconds sample.
+const EWMA_ALPHA: f64 = 0.3;
+
+/// Per-pack two-space cost model + assignment policy.
+#[derive(Debug, Clone)]
+pub(crate) struct HybridPartition {
+    /// Forced device share (`parthenon/exec hybrid_split`); negative means
+    /// automatic cost-based partitioning.
+    split: f64,
+    /// Measured seconds per pack on the Host space (0.0 = unmeasured).
+    host_secs: Vec<f64>,
+    /// Measured seconds per pack on the Device space (0.0 = unmeasured).
+    dev_secs: Vec<f64>,
+}
+
+impl HybridPartition {
+    pub fn new(split: f64) -> Self {
+        HybridPartition { split, host_secs: Vec::new(), dev_secs: Vec::new() }
+    }
+
+    /// Forget every measurement (pack identities changed: regrid,
+    /// rebalance, restore) and size the model for `npacks` packs.
+    pub fn reset(&mut self, npacks: usize) {
+        self.host_secs = vec![0.0; npacks];
+        self.dev_secs = vec![0.0; npacks];
+    }
+
+    /// Fold one measured cycle (`secs` summed over the pack's blocks) into
+    /// the EWMA of the space that executed the pack.
+    pub fn observe(&mut self, pi: usize, space: PackSpace, secs: f64) {
+        let model = match space {
+            PackSpace::Host => &mut self.host_secs,
+            PackSpace::Device => &mut self.dev_secs,
+        };
+        if pi >= model.len() || secs <= 0.0 {
+            return;
+        }
+        model[pi] = if model[pi] > 0.0 {
+            EWMA_ALPHA * secs + (1.0 - EWMA_ALPHA) * model[pi]
+        } else {
+            secs
+        };
+    }
+
+    /// Compute the pack → space assignment. Deterministic for fixed
+    /// inputs. `device_available` is false when no [`super::DeviceState`]
+    /// exists (non-capable mesh or no runtime) — everything stays on the
+    /// host. `nworkers` is the *requested* worker count: an automatic
+    /// split on a single worker degenerates to a pure-host run (there is
+    /// nobody to overlap with), while a forced split is always honored.
+    pub fn assign(
+        &self,
+        pack_costs: &[f64],
+        device_available: bool,
+        nworkers: usize,
+    ) -> Vec<PackSpace> {
+        let n = pack_costs.len();
+        if !device_available {
+            return vec![PackSpace::Host; n];
+        }
+        if self.split >= 0.0 {
+            let ndev = ((self.split.min(1.0) * n as f64).floor() as usize).min(n);
+            let mut out = vec![PackSpace::Host; n];
+            for s in out.iter_mut().take(ndev) {
+                *s = PackSpace::Device;
+            }
+            return out;
+        }
+        if nworkers == 1 {
+            return vec![PackSpace::Host; n];
+        }
+        // greedy 2-machine makespan over the per-space cost estimates
+        let mut load = [0.0f64; 2]; // [host, device]
+        let mut out = Vec::with_capacity(n);
+        for (pi, &nominal) in pack_costs.iter().enumerate() {
+            let est = |model: &[f64]| {
+                let m = model.get(pi).copied().unwrap_or(0.0);
+                if m > 0.0 {
+                    m
+                } else {
+                    nominal.max(f64::MIN_POSITIVE)
+                }
+            };
+            let (h, d) = (est(&self.host_secs), est(&self.dev_secs));
+            if load[0] + h <= load[1] + d {
+                load[0] += h;
+                out.push(PackSpace::Host);
+            } else {
+                load[1] += d;
+                out.push(PackSpace::Device);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forced_split_assigns_device_prefix() {
+        let hp = HybridPartition::new(0.5);
+        let a = hp.assign(&[1.0; 4], true, 8);
+        assert_eq!(
+            a,
+            vec![
+                PackSpace::Device,
+                PackSpace::Device,
+                PackSpace::Host,
+                PackSpace::Host
+            ]
+        );
+        let all_dev = HybridPartition::new(1.0).assign(&[1.0; 3], true, 8);
+        assert!(all_dev.iter().all(|s| *s == PackSpace::Device));
+        let all_host = HybridPartition::new(0.0).assign(&[1.0; 3], true, 8);
+        assert!(all_host.iter().all(|s| *s == PackSpace::Host));
+        // forced split honored even on one worker
+        let forced = HybridPartition::new(1.0).assign(&[1.0; 2], true, 1);
+        assert!(forced.iter().all(|s| *s == PackSpace::Device));
+    }
+
+    #[test]
+    fn no_device_or_single_worker_degenerates_to_host() {
+        let hp = HybridPartition::new(-1.0);
+        assert!(hp
+            .assign(&[1.0; 5], false, 8)
+            .iter()
+            .all(|s| *s == PackSpace::Host));
+        assert!(hp
+            .assign(&[1.0; 5], true, 1)
+            .iter()
+            .all(|s| *s == PackSpace::Host));
+    }
+
+    #[test]
+    fn auto_mode_gives_both_spaces_work_before_measurement() {
+        let hp = HybridPartition::new(-1.0);
+        let a = hp.assign(&[1.0; 6], true, 4);
+        assert!(a.iter().any(|s| *s == PackSpace::Host));
+        assert!(a.iter().any(|s| *s == PackSpace::Device));
+        // deterministic
+        assert_eq!(a, hp.assign(&[1.0; 6], true, 4));
+    }
+
+    #[test]
+    fn measurements_steer_the_greedy_schedule() {
+        let mut hp = HybridPartition::new(-1.0);
+        hp.reset(4);
+        // device runs every pack 10x faster than the host
+        for pi in 0..4 {
+            hp.observe(pi, PackSpace::Host, 1.0);
+            hp.observe(pi, PackSpace::Device, 0.1);
+        }
+        let a = hp.assign(&[1.0; 4], true, 4);
+        let ndev = a.iter().filter(|s| **s == PackSpace::Device).count();
+        assert!(ndev >= 3, "fast device should take most packs, got {ndev}");
+    }
+
+    #[test]
+    fn observe_folds_ewma() {
+        let mut hp = HybridPartition::new(-1.0);
+        hp.reset(1);
+        hp.observe(0, PackSpace::Host, 2.0);
+        assert_eq!(hp.host_secs[0], 2.0, "first sample taken verbatim");
+        hp.observe(0, PackSpace::Host, 4.0);
+        let expect = EWMA_ALPHA * 4.0 + (1.0 - EWMA_ALPHA) * 2.0;
+        assert!((hp.host_secs[0] - expect).abs() < 1e-12);
+        // out-of-range / non-positive samples ignored
+        hp.observe(9, PackSpace::Host, 1.0);
+        hp.observe(0, PackSpace::Device, 0.0);
+        assert_eq!(hp.dev_secs[0], 0.0);
+    }
+}

@@ -3,20 +3,33 @@
 //! package tasks into task collections, reduces the timestep, runs AMR and
 //! load balancing, and writes outputs.
 //!
-//! Both execution spaces run through the shared pack-centric layer: the
-//! cycle loop is generic over [`StageExecutor`], and both executors consume
-//! the same cached [`MeshData`] pack partition (built once, invalidated
-//! only on regrid / load balance / restart):
-//! * [`HostExec`] — native Rust solver on a scoped-thread worker pool over
-//!   packs; supports everything (AMR, multilevel meshes with flux
-//!   correction, all BCs).
-//! * [`DeviceState`] — artifact launches per pack through the runtime, with
-//!   the three buffer packing strategies of Fig. 8; uniform periodic meshes
-//!   (the configuration of every performance experiment in the paper).
+//! Both execution spaces are TASK-LIST PRODUCERS over the shared
+//! [`MeshData`] pack partition (built once, invalidated only on regrid /
+//! load balance / restart): [`run_stage`] asks each space for one task
+//! list per pack it owns, merges ALL of them — host lists, device lists,
+//! and the overlapped dt-reduction list — into ONE
+//! [`crate::tasks::TaskRegion`], and executes that region on the shared
+//! cost-aware work-stealing pool. An idle worker sweeps any ready task,
+//! including across the execution-space boundary (`space=hybrid`).
+//!
+//! * [`host::add_host_pack_list`] — native Rust solver kernels; supports
+//!   everything (AMR, multilevel meshes with flux correction, all BCs).
+//! * [`device::add_dev_pack_list`] — artifact launches through the
+//!   runtime, with the three buffer packing strategies of Fig. 8; uniform
+//!   periodic meshes (the configuration of every performance experiment
+//!   in the paper).
+//! * `space=hybrid` — both at once: packs are assigned to spaces by the
+//!   measured per-pack cost EWMAs of [`hybrid::HybridPartition`],
+//!   re-partitioned at the `parthenon/loadbalance interval` cadence with
+//!   exactly one staging re-stage per migrating pack.
+//!
+//! `overlap = phased` executes the very same produced lists serially on
+//! one worker — the bitwise oracle over the same task units.
 
 pub mod bench;
 mod device;
 mod host;
+mod hybrid;
 pub mod recover;
 pub mod regrid;
 
@@ -24,42 +37,58 @@ pub use device::DeviceState;
 pub use host::{HostExec, OverlapStats};
 pub use recover::{run_recoverable, RecoveryReport};
 
-use crate::bvals::{self, PackStrategy};
-use crate::comm::{tags, CollMode, Comm, FaultConfig, Payload, ReduceOp, World};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::bvals::{self, ExchTopo, PackExchange, PackStrategy};
+use crate::comm::{
+    tags, CollHandle, CollMode, Comm, FaultConfig, Payload, ReduceOp, World,
+};
 use crate::config::ParameterInput;
 use crate::error::{Error, Result};
 use crate::hydro::native::{self, FluxArrays, StageCoeffs, RK2_STAGES};
 use crate::hydro::problems::{self, Problem};
 use crate::hydro::{HydroPackage, CONS};
 use crate::mesh::{LogicalLocation, Mesh, MeshBlock, MeshConfig, NeighborKind};
-use crate::mesh_data::MeshData;
-use crate::metrics::{Ewma, RebalanceStats, Timers, ZoneCycles};
-use crate::util::backoff::ProgressWait;
+use crate::mesh_data::{MeshData, PackDesc, PackSpace, PackStaging};
+use crate::metrics::{Ewma, HybridStats, RebalanceStats, Timers, ZoneCycles};
+use crate::tasks::{RegionInstr, TaskId, TaskRegion, TaskStatus, NONE};
 use crate::util::stealing::StealPolicy;
 use crate::vars::{resolve_packages, Package};
 use crate::Real;
+use hybrid::HybridPartition;
 
 /// EWMA weight for folding measured per-block cycle seconds into
 /// [`crate::mesh::MeshBlock::cost`] (fast enough to track AMR-driven cost
 /// shifts, smooth enough to ignore one-cycle jitter).
 const COST_EWMA_ALPHA: f64 = 0.3;
 
-/// Where the hydro stage executes.
+/// Where the hydro stage executes (`parthenon/exec space`).
+///
+/// * `Host` — native Rust kernels only.
+/// * `Device` — runtime artifact launches only.
+/// * `Hybrid` — heterogeneous co-execution: every cycle, both spaces
+///   produce task lists into the same region and packs are split between
+///   them by measured cost ([`hybrid::HybridPartition`]). On a mesh the
+///   Device space cannot serve (multilevel / non-periodic) hybrid
+///   degenerates to an all-host assignment instead of erroring.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecSpace {
     Host,
     Device,
+    Hybrid,
 }
 
-/// How the stage phases are scheduled (`parthenon/exec overlap`).
+/// How the stage's task region is scheduled (`parthenon/exec overlap`).
 ///
-/// * `Fused` (default) — phases 1–4 run as ONE per-pack task list:
-///   prim-recovery/fluxes → flux-correction → stage combine → post sends,
-///   then receives are polled as `Incomplete` tasks, so pack A's boundary
-///   exchange overlaps pack B's compute (the paper's comm/compute overlap).
-/// * `Phased` — the barrier-phased loop (all fluxes, then all corrections,
-///   then all combines, then the exchange). Kept as the bitwise-identity
-///   oracle: both modes must produce identical results
+/// * `Fused` (default) — the merged per-pack task lists run on the worker
+///   pool: prim-recovery/fluxes → flux-correction → stage combine → post
+///   sends, then receives are polled as `Incomplete` tasks, so pack A's
+///   boundary exchange overlaps pack B's compute (the paper's
+///   comm/compute overlap).
+/// * `Phased` — the SAME produced lists executed serially on one worker
+///   (`nworkers = 1`, no stealing). Kept as the bitwise-identity oracle
+///   over the same task units: both modes must produce identical results
 ///   (`rust/tests/overlap_fused.rs`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OverlapMode {
@@ -126,55 +155,540 @@ pub trait MultiStageDriver: EvolutionDriver {
     fn num_stages(&self) -> usize;
 }
 
-/// One execution space's stage engine. Implementations consume the shared
-/// [`MeshData`] pack partition; the cycle loop ([`HydroSim::step`]) is
-/// generic over this trait, so Host and Device share one driver shape.
-pub trait StageExecutor {
-    /// Snapshot the cycle-start state u0 (per pack / per block).
-    fn begin_cycle(&mut self, sim: &mut HydroSim) -> Result<()>;
-    /// Run one RK stage (`si` = stage index) including its boundary
-    /// communication.
-    fn stage(&mut self, sim: &mut HydroSim, co: StageCoeffs, si: usize, dt: Real)
-        -> Result<()>;
-    /// This rank's raw CFL dt after the last cycle (already scaled by the
-    /// package CFL number).
-    fn local_dt(&self, sim: &HydroSim) -> f64;
+/// Shared slot of the overlapped dt collective (final RK stage, tree
+/// collectives): the posting task on the extra list folds the per-pack
+/// minima, posts the `iallreduce(Min)` on the driver's collective
+/// communicator, and parks the handle here; the draining task polls it to
+/// completion while other lists' boundary polls keep running on the same
+/// worker pool. The per-pack `t_dt` tasks of BOTH spaces publish finished
+/// f64 local dts (CFL included), so one fold serves host, device and
+/// mixed assignments alike.
+pub(crate) struct DtColl<'a> {
+    /// `Some` only when the overlapped reduction is active this stage.
+    pub comm: Option<&'a Comm>,
+    pub handle: Mutex<Option<CollHandle>>,
+    /// How many packs have published their partial min.
+    pub dt_done: AtomicUsize,
+    /// Global dt bits, stored when the handle completes.
+    pub global: AtomicU64,
 }
 
-/// One full cycle (all RK stages) through an executor — the single code
-/// path both execution spaces run.
-pub(crate) fn run_cycle<E: StageExecutor>(
+/// Context of the overlapped-dt task list (no pack attached — its tasks
+/// only touch the shared reduction slots).
+pub(crate) struct CollCtx<'a> {
+    pub minima: &'a [AtomicU64],
+    pub dt_result: &'a AtomicU64,
+    pub coll: &'a DtColl<'a>,
+    pub error: Option<Error>,
+    pub abort: &'a AtomicBool,
+}
+
+/// One task list's context in the merged stage region: each task body
+/// unwraps the variant its producer owns and completes as a no-op on any
+/// other (a list never mixes variants, so this never skips real work).
+pub(crate) enum SpaceCtx<'a> {
+    Host(host::HostPackCtx<'a>),
+    Dev(device::DevPackCtx<'a>),
+    Coll(CollCtx<'a>),
+}
+
+impl SpaceCtx<'_> {
+    /// The shared dt-reduction slots (same pointers in every variant).
+    fn dt_slots(&self) -> (&[AtomicU64], &AtomicU64) {
+        match self {
+            SpaceCtx::Host(c) => (c.minima, c.dt_result),
+            SpaceCtx::Dev(c) => (c.minima, c.dt_result),
+            SpaceCtx::Coll(c) => (c.minima, c.dt_result),
+        }
+    }
+
+    fn take_error(&mut self) -> Option<Error> {
+        match self {
+            SpaceCtx::Host(c) => c.error.take(),
+            SpaceCtx::Dev(c) => c.error.take(),
+            SpaceCtx::Coll(c) => c.error.take(),
+        }
+    }
+}
+
+/// One full cycle (all RK stages) through the merged task region — the
+/// single code path every execution space (and their hybrid) runs. The
+/// caller hands in whichever space engines exist; `run_stage` asks each
+/// for task lists covering exactly the packs assigned to it.
+pub(crate) fn run_cycle(
     sim: &mut HydroSim,
-    exec: &mut E,
+    mut host: Option<&mut HostExec>,
+    mut dev: Option<&mut DeviceState>,
     dt: Real,
 ) -> Result<()> {
     sim.mesh_data.validate(&sim.mesh)?;
-    exec.begin_cycle(sim)?;
+    // Cycle-start snapshots. Each present space snapshots ALL blocks /
+    // packs — for packs assigned to the other space the copy is of stale
+    // data and is never read, which keeps the snapshot independent of the
+    // assignment (and of mid-run migrations).
+    if let Some(h) = host.as_deref_mut() {
+        for (bi, b) in sim.mesh.blocks.iter().enumerate() {
+            h.u0[bi].copy_from_slice(b.data.get(CONS)?.as_slice());
+        }
+    }
+    if dev.is_some() {
+        let (_descs, staging) = sim.mesh_data.parts_mut();
+        for p in staging.iter_mut() {
+            p.u0.copy_from_slice(&p.u);
+        }
+    }
     for (si, co) in RK2_STAGES.iter().enumerate() {
-        exec.stage(sim, *co, si, dt)?;
+        run_stage(sim, host.as_deref_mut(), dev.as_deref_mut(), *co, si, dt)?;
     }
     Ok(())
 }
 
-/// The end-of-stage ghost exchange of the conserved state, expressed as
-/// per-pack task lists (one list per MeshBlockPack). Under a stealing
-/// schedule the lists run on the worker pool; under `sched = static` (or a
-/// single worker) they are polled serially on the driver thread.
-pub(crate) fn run_stage_exchange(
+/// One RK stage as ONE merged task region: every pack contributes the
+/// task list its assigned space produces ([`host::add_host_pack_list`] /
+/// [`device::add_dev_pack_list`]), the overlapped dt reduction rides an
+/// extra list on the final stage (tree collectives), and the whole region
+/// runs on the shared cost-weighted work-stealing pool. Under
+/// `space=hybrid` the pool is instrumented so cross-space steals land in
+/// [`HybridStats`]; under `overlap=phased` the same region executes
+/// serially on one worker (the bitwise oracle).
+pub(crate) fn run_stage(
     sim: &mut HydroSim,
-    nworkers: usize,
-    policy: StealPolicy,
+    mut host: Option<&mut HostExec>,
+    mut dev: Option<&mut DeviceState>,
+    co: StageCoeffs,
+    si: usize,
+    dt: Real,
 ) -> Result<()> {
-    let ranges = sim.mesh_data.block_ranges();
-    bvals::exchange_tasked_parallel(
-        &mut sim.mesh,
-        &sim.comm_cons,
-        CONS,
-        Some([native::IM1, native::IM2, native::IM3]),
-        &ranges,
-        nworkers,
-        policy,
-    )
+    sim.mesh_data.validate(&sim.mesh)?;
+    let shape = sim.mesh.cfg.index_shape();
+    let gamma = sim.pkg.gamma;
+    let cfl = sim.pkg.cfl;
+    let stall = sim.world.stall_limit();
+    let multilevel = sim.is_multilevel();
+    let hybrid_mode = sim.sp.exec == ExecSpace::Hybrid;
+    let npacks = sim.mesh_data.npacks();
+    let spaces: Vec<PackSpace> = sim.mesh_data.pack_spaces().to_vec();
+    let pack_ranges = sim.mesh_data.block_ranges();
+    let mut pack_costs = sim.mesh_data.pack_costs(&sim.mesh);
+    let any_dev = spaces.iter().any(|s| *s == PackSpace::Device);
+    let any_host = spaces.iter().any(|s| *s == PackSpace::Host);
+    if any_dev && dev.is_none() {
+        return Err(Error::Runtime(
+            "packs assigned to the Device space without a DeviceState".into(),
+        ));
+    }
+    if any_host && host.is_none() {
+        return Err(Error::Runtime(
+            "packs assigned to the Host space without a HostExec".into(),
+        ));
+    }
+    let scal = match dev.as_deref() {
+        Some(d) if any_dev => {
+            if d.strategy == PackStrategy::Native {
+                return Err(Error::Runtime("strategy=native is the Host path".into()));
+            }
+            Some(d.scal(co, dt, &sim.mesh))
+        }
+        _ => None,
+    };
+    // Worker pool shape: the host engine governs whenever it exists (its
+    // worker count was resolved against the final pack count); a pure
+    // device run sizes off the device engine. Phased = the serial oracle.
+    let (mut nworkers, mut policy) = if let Some(h) = host.as_deref() {
+        (h.nworkers, h.policy)
+    } else if let Some(d) = dev.as_deref() {
+        (d.stage_workers(npacks), d.policy)
+    } else {
+        (1, StealPolicy::NoSteal)
+    };
+    if sim.sp.overlap == OverlapMode::Phased {
+        nworkers = 1;
+        policy = StealPolicy::NoSteal;
+    }
+    // The merged dt reduction runs on the final RK stage only: per-pack
+    // partial minima (f64 bits — both spaces publish finished local dts)
+    // + one cross-list fold. With tree collectives the GLOBAL reduction
+    // also runs inside the region (posted/drained by an extra task list,
+    // overlapped with the tail packs' boundary polls); flat mode keeps
+    // the blocking post-region allreduce as the oracle.
+    let final_stage = si + 1 == RK2_STAGES.len();
+    let overlap_coll = final_stage && sim.sp.coll == CollMode::Tree;
+    let minima: Vec<AtomicU64> = if final_stage {
+        (0..npacks).map(|_| AtomicU64::new(f64::INFINITY.to_bits())).collect()
+    } else {
+        Vec::new()
+    };
+    let dt_result = AtomicU64::new(f64::INFINITY.to_bits());
+    let cross_steals = AtomicU64::new(0);
+    let mut first_error: Option<Error> = None;
+    let host_present = host.is_some();
+
+    // Host scratch moves into a bounded pool (≤ nworkers concurrent flux
+    // tasks) and is restored below, also on error paths.
+    let scratch_pool = host
+        .as_deref_mut()
+        .map(|h| host::ScratchPool::new(std::mem::take(&mut h.scratch)));
+    // Device per-pack buffers are taken out so the region's contexts can
+    // hold disjoint `&mut` slices while sharing `&DeviceState`.
+    let mut dev_taken = dev.as_deref_mut().map(|d| {
+        if d.tmps.len() != npacks {
+            d.tmps.resize_with(npacks, Vec::new);
+        }
+        (
+            std::mem::take(&mut d.last_dts),
+            std::mem::take(&mut d.block_secs),
+            std::mem::take(&mut d.tmps),
+        )
+    });
+    {
+        let HydroSim { mesh, mesh_data, pkg, comm_cons, comm_flux, comm_coll, .. } =
+            sim;
+        let coll_slot = DtColl {
+            comm: if overlap_coll && npacks > 0 { Some(&*comm_coll) } else { None },
+            handle: Mutex::new(None),
+            dt_done: AtomicUsize::new(0),
+            global: AtomicU64::new(f64::INFINITY.to_bits()),
+        };
+        let abort = AtomicBool::new(false);
+
+        // -- host-side per-pack parts (exist whenever the engine does) --
+        let (mut flux_parts, mut unew_parts, mut hsecs_parts, u0_all, stats) =
+            match host.as_deref_mut() {
+                Some(h) => {
+                    let HostExec { flux, unew, block_secs, u0, overlap_stats, .. } = h;
+                    (
+                        Some(host::split_chunks(flux, &pack_ranges).into_iter()),
+                        Some(host::split_chunks(unew, &pack_ranges).into_iter()),
+                        Some(host::split_chunks(block_secs, &pack_ranges).into_iter()),
+                        Some(&u0[..]),
+                        Some(&*overlap_stats),
+                    )
+                }
+                None => (None, None, None, None, None),
+            };
+        let topo = ExchTopo {
+            shape,
+            dim: mesh.cfg.dim,
+            tree: &mesh.tree,
+            ranks: &mesh.ranks,
+        };
+        // Flux corrections are registered per pack up front (reads the
+        // immutable topology), before the blocks split into disjoint
+        // per-pack slices. Multilevel implies an all-host assignment.
+        let fpend: Vec<Vec<FluxRecv>> = if multilevel && host_present {
+            pack_ranges
+                .iter()
+                .map(|r| {
+                    flux_corr_pending_blocks(&topo, &mesh.blocks[r.clone()], r.start)
+                })
+                .collect()
+        } else {
+            (0..npacks).map(|_| Vec::new()).collect()
+        };
+        let mut block_parts = host_present
+            .then(|| host::split_chunks(&mut mesh.blocks, &pack_ranges).into_iter());
+
+        // -- device-side per-pack parts --
+        let dev_ref: Option<&DeviceState> = dev.as_deref();
+        let (descs, staging): (&[PackDesc], &mut [PackStaging]) = if dev_ref.is_some() {
+            mesh_data.parts_mut()
+        } else {
+            (&[], &mut [])
+        };
+        let mut staging_it = staging.iter_mut();
+        let dev_present = dev_taken.is_some();
+        let (mut dts_rest, mut dsecs_rest, mut tmps_it) = match dev_taken.as_mut() {
+            Some((dts, secs, tmps)) => {
+                (&mut dts[..], &mut secs[..], Some(tmps.iter_mut()))
+            }
+            None => (&mut [] as &mut [Real], &mut [] as &mut [f64], None),
+        };
+        // Hybrid stage comm: device packs exchange on the shared CONS
+        // comm so both spaces interoperate (route tags are bit-identical
+        // to the host exchange tags on a uniform mesh); a pure device run
+        // keeps the device's own comm — the bitwise oracle channel.
+        let dev_comm: Option<&Comm> = if hybrid_mode {
+            Some(&*comm_cons)
+        } else {
+            dev_ref.map(|d| &d.comm)
+        };
+
+        // -- build one context + one task list per pack --
+        let nlists = npacks + usize::from(overlap_coll && npacks > 0);
+        let mut region: TaskRegion<SpaceCtx> = TaskRegion::new(nlists);
+        let mut ctxs: Vec<SpaceCtx> = Vec::with_capacity(nlists);
+        let mut dt_marks: Vec<(usize, TaskId)> = Vec::new();
+        for (pi, (range, fpending)) in
+            pack_ranges.iter().zip(fpend.into_iter()).enumerate()
+        {
+            // advance every per-pack resource iterator in lockstep so the
+            // parts stay aligned with the pack index; the side not chosen
+            // for this pack just drops its (disjoint) parts.
+            let blocks = block_parts.as_mut().map(|it| it.next().expect("pack part"));
+            let flux = flux_parts.as_mut().map(|it| it.next().expect("pack part"));
+            let unew = unew_parts.as_mut().map(|it| it.next().expect("pack part"));
+            let hsecs = hsecs_parts.as_mut().map(|it| it.next().expect("pack part"));
+            let stg = staging_it.next();
+            let tmp = tmps_it.as_mut().map(|it| it.next().expect("pack tmp"));
+            let nb = range.len();
+            // the taken device buffers cover every block when the engine
+            // exists; without one the placeholder slices stay empty
+            let take = if dev_present { nb } else { 0 };
+            let (dts, rest) = std::mem::take(&mut dts_rest).split_at_mut(take);
+            dts_rest = rest;
+            let (dsecs, rest) = std::mem::take(&mut dsecs_rest).split_at_mut(take);
+            dsecs_rest = rest;
+            match spaces[pi] {
+                PackSpace::Host => {
+                    let blocks = blocks.expect("host engine present");
+                    // speculative-combine flags: a block with no pending
+                    // fine-neighbor correction combines right after its
+                    // fluxes (uniform meshes: every block qualifies)
+                    let spec: Vec<bool> = if multilevel {
+                        (0..nb)
+                            .map(|off| {
+                                !fpending.iter().any(|f| f.block == range.start + off)
+                            })
+                            .collect()
+                    } else {
+                        vec![true; nb]
+                    };
+                    ctxs.push(SpaceCtx::Host(host::HostPackCtx {
+                        start: range.start,
+                        pi,
+                        blocks,
+                        flux: flux.expect("host engine present"),
+                        unew: unew.expect("host engine present"),
+                        secs: hsecs.expect("host engine present"),
+                        u0: u0_all.expect("host engine present"),
+                        fpending,
+                        spec,
+                        exch: PackExchange::new(topo, comm_cons, CONS),
+                        fcomm: comm_flux,
+                        scratch: scratch_pool.as_ref().expect("host engine present"),
+                        stats: stats.expect("host engine present"),
+                        pkg,
+                        minima: &minima,
+                        dt_result: &dt_result,
+                        coll: &coll_slot,
+                        shape,
+                        gamma,
+                        co,
+                        dt,
+                        error: None,
+                        abort: &abort,
+                    }));
+                    let t_dt =
+                        host::add_host_pack_list(region.list(pi), multilevel, final_stage);
+                    if let Some(t) = t_dt {
+                        dt_marks.push((pi, t));
+                    }
+                }
+                PackSpace::Device => {
+                    let dev_s = dev_ref.expect("device engine present");
+                    let d = &descs[pi];
+                    ctxs.push(SpaceCtx::Dev(device::DevPackCtx {
+                        dev: dev_s,
+                        d,
+                        p: stg.expect("device staging present"),
+                        dts,
+                        secs: dsecs,
+                        tmp: tmp.expect("device engine present"),
+                        pending: dev_s.pack_pending(d),
+                        pi,
+                        comm: dev_comm.expect("device engine present"),
+                        minima: &minima,
+                        dt_result: &dt_result,
+                        coll: &coll_slot,
+                        scal: scal.expect("device scal present"),
+                        cfl,
+                        compute_dt: final_stage,
+                        error: None,
+                        abort: &abort,
+                    }));
+                    let t_dt = device::add_dev_pack_list(region.list(pi), final_stage);
+                    if let Some(t) = t_dt {
+                        dt_marks.push((pi, t));
+                    }
+                }
+            }
+        }
+
+        if overlap_coll && npacks > 0 {
+            // Extra task list: fold the per-pack minima the moment the
+            // last t_dt lands, post the global iallreduce(Min), then poll
+            // the tree handle to completion. Both tasks return Incomplete
+            // while waiting, so workers sweep back to the packs' boundary
+            // polls in between — the global dt reduction rides the same
+            // overlap the ghost exchange uses.
+            let list = region.list(npacks);
+            let t_post = list.add(NONE, move |ctx: &mut SpaceCtx| {
+                let SpaceCtx::Coll(c) = ctx else { return TaskStatus::Complete };
+                if c.abort.load(Ordering::SeqCst) {
+                    return TaskStatus::Complete;
+                }
+                if c.coll.dt_done.load(Ordering::SeqCst) < npacks {
+                    return TaskStatus::Incomplete;
+                }
+                let mut m = f64::INFINITY;
+                for a in c.minima {
+                    m = m.min(f64::from_bits(a.load(Ordering::SeqCst)));
+                }
+                c.dt_result.store(m.to_bits(), Ordering::SeqCst);
+                let comm = c.coll.comm.expect("overlap collective comm");
+                *c.coll.handle.lock().unwrap() =
+                    Some(comm.iallreduce(m, ReduceOp::Min));
+                TaskStatus::Complete
+            });
+            let _t_drain = list.add(&[t_post], |ctx: &mut SpaceCtx| {
+                let SpaceCtx::Coll(c) = ctx else { return TaskStatus::Complete };
+                if c.abort.load(Ordering::SeqCst) {
+                    return TaskStatus::Complete;
+                }
+                let mut slot = c.coll.handle.lock().unwrap();
+                match slot.as_mut().map(CollHandle::test) {
+                    Some(Ok(true)) => {
+                        match slot.take().expect("handle present").into_f64() {
+                            Ok(g) => {
+                                c.coll.global.store(g.to_bits(), Ordering::SeqCst);
+                            }
+                            Err(e) => {
+                                drop(slot);
+                                if c.error.is_none() {
+                                    c.error = Some(e);
+                                }
+                                c.abort.store(true, Ordering::SeqCst);
+                            }
+                        }
+                        TaskStatus::Complete
+                    }
+                    Some(Ok(false)) => TaskStatus::Incomplete,
+                    Some(Err(e)) => {
+                        *slot = None; // poisoned handle: drop it
+                        drop(slot);
+                        if c.error.is_none() {
+                            c.error = Some(e);
+                        }
+                        c.abort.store(true, Ordering::SeqCst);
+                        TaskStatus::Complete
+                    }
+                    // aborted before the post ran
+                    None => TaskStatus::Complete,
+                }
+            });
+            ctxs.push(SpaceCtx::Coll(CollCtx {
+                minima: &minima,
+                dt_result: &dt_result,
+                coll: &coll_slot,
+                error: None,
+                abort: &abort,
+            }));
+            pack_costs.push(0.0);
+        } else if final_stage && npacks > 0 {
+            // Flat oracle: regional cross-list fold under the same
+            // abort-aware region; the blocking global allreduce stays in
+            // `reduce_dt`.
+            region.add_regional(dt_marks, |ctx: &mut SpaceCtx| {
+                let (minima, dt_result) = ctx.dt_slots();
+                let mut m = f64::INFINITY;
+                for a in minima {
+                    m = m.min(f64::from_bits(a.load(Ordering::SeqCst)));
+                }
+                dt_result.store(m.to_bits(), Ordering::SeqCst);
+                TaskStatus::Complete
+            });
+        }
+
+        // Cross-space steal instrumentation only runs under hybrid — the
+        // single-space paths stay exactly as instrumented before.
+        let spaces_u8: Vec<u8> = spaces
+            .iter()
+            .map(|s| match s {
+                PackSpace::Host => 0u8,
+                PackSpace::Device => 1u8,
+            })
+            .chain((npacks < nlists).then_some(255u8))
+            .collect();
+        let instr = hybrid_mode.then_some(RegionInstr {
+            spaces: &spaces_u8,
+            cross_steals: &cross_steals,
+        });
+        if nlists > 0 {
+            match region.execute_parallel_weighted_instr(
+                ctxs,
+                Some(&pack_costs),
+                nworkers,
+                policy,
+                stall,
+                instr,
+            ) {
+                Ok(done) => {
+                    for mut c in done {
+                        if let Some(e) = c.take_error() {
+                            first_error = Some(e);
+                            break;
+                        }
+                    }
+                }
+                Err(e) => first_error = Some(e),
+            }
+        }
+
+        if final_stage && first_error.is_none() {
+            // Local dt for this cycle, produced inside the region — the
+            // post-cycle `reduce_dt` consults this instead of re-sweeping.
+            sim.fused_dt_local = Some(f64::from_bits(dt_result.load(Ordering::SeqCst)));
+            if overlap_coll {
+                // Every rank posts exactly one dt collective per cycle,
+                // so a rank with zero packs (no task region to overlap
+                // with) still joins the exchange — here, blocking, with an
+                // identity contribution.
+                let g = if npacks > 0 {
+                    f64::from_bits(coll_slot.global.load(Ordering::SeqCst))
+                } else {
+                    comm_coll.iallreduce(f64::INFINITY, ReduceOp::Min).into_f64()?
+                };
+                sim.fused_dt_global = Some(g);
+            }
+        }
+    }
+    // Restore the taken engine state (also on error paths).
+    if let (Some(h), Some(pool)) = (host.as_deref_mut(), scratch_pool) {
+        h.scratch = pool.into_inner();
+    }
+    if let (Some(d), Some((dts, secs, tmps))) = (dev.as_deref_mut(), dev_taken) {
+        d.last_dts = dts;
+        d.block_secs = secs;
+        d.tmps = tmps;
+    }
+    if let Some(e) = first_error {
+        // A stalled task region is this rank's first sight of the
+        // failure: escalate so every peer's waits drain with `Aborted`
+        // instead of idling out their own watchdogs one by one.
+        sim.world.escalate(sim.mesh.my_rank, &e);
+        return Err(e);
+    }
+    if hybrid_mode && npacks > 0 {
+        let nh = spaces.iter().filter(|s| **s == PackSpace::Host).count() as u64;
+        sim.hybrid_stats.packs_host += nh;
+        sim.hybrid_stats.packs_device += npacks as u64 - nh;
+        sim.hybrid_stats.cross_space_steals += cross_steals.load(Ordering::SeqCst);
+    }
+    // Physical BCs once every receive has landed — the same point the
+    // pure-host path has always applied them. A mixed/hybrid assignment
+    // implies a fully periodic mesh (Device capability), where block
+    // physical BCs are a no-op — so they are skipped unless a host pack
+    // (or a packless host rank, which must still flip its ghost parity)
+    // participated, keeping the all-device assignment bitwise identical
+    // to the pure Device space.
+    if host.is_some() && (any_host || npacks == 0) {
+        bvals::apply_block_physical_bcs(
+            &mut sim.mesh,
+            CONS,
+            Some([native::IM1, native::IM2, native::IM3]),
+        )?;
+    }
+    Ok(())
 }
 
 /// Simulation parameters parsed from the input file + CLI.
@@ -190,6 +704,12 @@ pub struct SimParams {
     pub nworkers: usize,
     /// Host pack scheduler: work-stealing (default) or static ranges.
     pub sched: StealPolicy,
+    /// Forced device share of the hybrid partition (`parthenon/exec
+    /// hybrid_split`, default -1.0 = automatic cost-based partitioning).
+    /// `0.0` pins every pack to the Host space and `1.0` every pack to
+    /// the Device space — the bitwise equivalence anchors of
+    /// `rust/tests/hybrid_equivalence.rs`.
+    pub hybrid_split: f64,
     /// Stage scheduling: fused per-pack pipeline (default) or the
     /// barrier-phased oracle.
     pub overlap: OverlapMode,
@@ -228,12 +748,13 @@ impl SimParams {
         let exec = match pin.str_or("parthenon/exec", "space", "host").as_str() {
             "host" => ExecSpace::Host,
             "device" => ExecSpace::Device,
+            "hybrid" => ExecSpace::Hybrid,
             other => return Err(Error::config(format!("unknown exec space {other:?}"))),
         };
         let strategy_s = pin.str_or(
             "parthenon/exec",
             "strategy",
-            if exec == ExecSpace::Device { "perpack" } else { "native" },
+            if exec == ExecSpace::Host { "native" } else { "perpack" },
         );
         let strategy = PackStrategy::parse(&strategy_s)
             .ok_or_else(|| Error::config(format!("unknown strategy {strategy_s:?}")))?;
@@ -260,6 +781,7 @@ impl SimParams {
             pack_size: pin.int_or("parthenon/exec", "pack_size", 16) as usize,
             nworkers: pin.int_or("parthenon/exec", "nworkers", 0).max(0) as usize,
             sched,
+            hybrid_split: pin.real_or("parthenon/exec", "hybrid_split", -1.0),
             overlap,
             lb_interval: pin.int_or("parthenon/loadbalance", "interval", 0),
             lb_mode,
@@ -301,7 +823,20 @@ pub struct HydroSim {
     comm_coll: Comm,
     pub device: Option<DeviceState>,
     pub host: Option<HostExec>,
-    flux_pending: Vec<FluxRecv>,
+    /// Cost-partitioner of `space=hybrid` (None on single-space runs).
+    hybrid: Option<HybridPartition>,
+    /// Co-execution counters (`space=hybrid`): packs per space, steals
+    /// across the space boundary, staging re-stages, re-partitions.
+    pub hybrid_stats: HybridStats,
+    /// This rank's CFL dt, produced INSIDE the final stage's task region
+    /// (both spaces publish into the same fold). Taken by [`reduce_dt`];
+    /// invalidated whenever the mesh/staging changes under it.
+    ///
+    /// [`reduce_dt`]: HydroSim::reduce_dt
+    fused_dt_local: Option<f64>,
+    /// The finished GLOBAL dt when the final stage also drained the tree
+    /// `iallreduce(Min)` inside its region (overlapped collectives).
+    fused_dt_global: Option<f64>,
     pub time: f64,
     pub cycle: u64,
     pub dt: f64,
@@ -350,7 +885,10 @@ impl HydroSim {
             comm_coll,
             device: None,
             host: None,
-            flux_pending: Vec::new(),
+            hybrid: None,
+            hybrid_stats: HybridStats::default(),
+            fused_dt_local: None,
+            fused_dt_global: None,
             time: 0.0,
             cycle: 0,
             dt: 0.0,
@@ -372,9 +910,15 @@ impl HydroSim {
         )?;
         sim.fill_derived();
 
-        if sim.sp.exec == ExecSpace::Device {
-            let dev = DeviceState::new(&mut sim)?;
-            sim.device = Some(dev);
+        match sim.sp.exec {
+            ExecSpace::Host => {}
+            ExecSpace::Device => {
+                let dev = DeviceState::new(&mut sim)?;
+                sim.device = Some(dev);
+                let n = sim.mesh_data.npacks();
+                sim.mesh_data.set_pack_spaces(vec![PackSpace::Device; n]);
+            }
+            ExecSpace::Hybrid => sim.init_hybrid()?,
         }
 
         // Initial timestep.
@@ -403,6 +947,9 @@ impl HydroSim {
             self.mesh.cfg.dim,
         );
         self.device = None; // routes/staging are stale; rebuilt below
+        self.hybrid = None; // pack identities change; re-partitioned below
+        self.fused_dt_local = None;
+        self.fused_dt_global = None;
         self.mesh.ranks = balance::assign_blocks(&costs, self.mesh.nranks);
         self.mesh.tree = tree;
         self.mesh.rebuild_local_blocks();
@@ -421,9 +968,15 @@ impl HydroSim {
             Some([native::IM1, native::IM2, native::IM3]),
         )?;
         self.fill_derived();
-        if self.sp.exec == ExecSpace::Device {
-            let dev = DeviceState::new(self)?;
-            self.device = Some(dev);
+        match self.sp.exec {
+            ExecSpace::Host => {}
+            ExecSpace::Device => {
+                let dev = DeviceState::new(self)?;
+                self.device = Some(dev);
+                let n = self.mesh_data.npacks();
+                self.mesh_data.set_pack_spaces(vec![PackSpace::Device; n]);
+            }
+            ExecSpace::Hybrid => self.init_hybrid()?,
         }
         Ok(())
     }
@@ -442,11 +995,13 @@ impl HydroSim {
         )
     }
 
-    /// Scatter device staging back into the block containers (no-op on the
-    /// Host path, where the containers are authoritative).
+    /// Scatter device-RESIDENT staging back into the block containers
+    /// (no-op on the Host path, where the containers are authoritative).
+    /// Under hybrid, host-assigned packs are dirty — their containers are
+    /// already authoritative and must not be clobbered by stale staging.
     pub fn sync_device_to_blocks(&mut self) -> Result<()> {
         if self.device.is_some() {
-            self.mesh_data.scatter(&mut self.mesh, CONS)?;
+            self.mesh_data.scatter_resident(&mut self.mesh, CONS)?;
         }
         Ok(())
     }
@@ -468,11 +1023,13 @@ impl HydroSim {
              after so it re-plans the packs and re-gathers staging"
         );
         self.mesh_data.ensure_current(&self.mesh, None);
+        self.fused_dt_local = None;
+        self.fused_dt_global = None;
         // Host work arrays (fluxes, u0, u_new) are ~5x the conserved-state
-        // footprint; Device runs never touch them, so only the Host
-        // execution space pays for them.
+        // footprint; pure Device runs never touch them, so only the
+        // execution spaces with a host side pay for them (Host, Hybrid).
         let shape = self.mesh.cfg.index_shape();
-        self.host = if self.sp.exec == ExecSpace::Host {
+        self.host = if self.sp.exec != ExecSpace::Device {
             Some(HostExec::new(
                 &shape,
                 self.mesh.blocks.len(),
@@ -501,6 +1058,8 @@ impl HydroSim {
              routes/dts are refreshed by after_rebalance_incremental"
         );
         self.mesh_data.ensure_current(&self.mesh, None);
+        self.fused_dt_local = None;
+        self.fused_dt_global = None;
         if self.host.is_none() {
             // Device path (or first build): nothing to resize in place
             self.rebuild_work_buffers();
@@ -526,13 +1085,36 @@ impl HydroSim {
     /// pack's blocks — so `parthenon/loadbalance interval` rebalances on
     /// MEASURED costs in both execution spaces.
     pub(crate) fn update_block_costs(&mut self) {
-        let secs = if let Some(h) = self.host.as_mut() {
-            h.drain_block_secs()
-        } else if let Some(d) = self.device.as_mut() {
-            d.drain_block_secs()
-        } else {
-            return;
+        // Drain BOTH engines: under hybrid each holds the seconds of the
+        // packs its space executed (zeros elsewhere), so the element-wise
+        // sum is the complete per-block measurement. Single-space runs
+        // drain exactly one engine, as before.
+        let hsecs = self.host.as_mut().map(|h| h.drain_block_secs());
+        let dsecs = self.device.as_mut().map(|d| d.drain_block_secs());
+        let secs = match (hsecs, dsecs) {
+            (Some(mut h), Some(d)) => {
+                if h.len() == d.len() {
+                    for (a, b) in h.iter_mut().zip(&d) {
+                        *a += b;
+                    }
+                }
+                h
+            }
+            (Some(h), None) => h,
+            (None, Some(d)) => d,
+            (None, None) => return,
         };
+        // Feed the per-pack seconds into the hybrid cost model of the
+        // space that actually executed each pack this interval.
+        if let Some(hp) = self.hybrid.as_mut() {
+            if secs.len() == self.mesh.blocks.len() {
+                let spaces = self.mesh_data.pack_spaces();
+                for (pi, d) in self.mesh_data.packs().iter().enumerate() {
+                    let s: f64 = secs[d.block_range()].iter().sum();
+                    hp.observe(pi, spaces[pi], s);
+                }
+            }
+        }
         let local = [secs.iter().sum::<f64>(), secs.len() as f64];
         let glob = self.comm_coll.allreduce_vec(&local, ReduceOp::Sum);
         let (gtotal, gcount) = (glob[0], glob[1]);
@@ -580,80 +1162,169 @@ impl HydroSim {
     /// packs' boundary polls), so this just picks up the finished global
     /// value — no rank blocks here at all.
     pub fn reduce_dt(&mut self) -> f64 {
-        if let Some(g) = self
-            .device
-            .as_mut()
-            .and_then(|d| d.take_global_dt())
-            .or_else(|| self.host.as_mut().and_then(|h| h.take_global_dt()))
-        {
+        if let Some(g) = self.fused_dt_global.take() {
+            self.fused_dt_local = None;
             return g;
         }
-        let local = if let Some(dev) = &self.device {
-            dev.local_dt(self)
-        } else if let Some(h) = &self.host {
-            h.local_dt(self)
-        } else {
-            self.mesh
-                .blocks
+        let local = self
+            .fused_dt_local
+            .take()
+            .unwrap_or_else(|| self.bootstrap_local_dt());
+        self.comm_coll.allreduce(local, ReduceOp::Min)
+    }
+
+    /// This rank's CFL dt when no stage has produced one yet (startup,
+    /// restart, post-regrid): sweep whichever representation is currently
+    /// authoritative per pack. Bitwise-matches what the next stage's fused
+    /// fold would produce from the same state.
+    fn bootstrap_local_dt(&self) -> f64 {
+        let container_sweep = |blocks: &[MeshBlock]| {
+            blocks
                 .iter()
                 .map(|b| self.pkg.estimate_dt(&b.data, &b.coords))
                 .fold(f64::INFINITY, f64::min)
         };
-        self.comm_coll.allreduce(local, ReduceOp::Min)
+        let Some(dev) = self.device.as_ref() else {
+            return container_sweep(&self.mesh.blocks);
+        };
+        let spaces = self.mesh_data.pack_spaces();
+        if spaces.iter().all(|s| *s == PackSpace::Host) {
+            return container_sweep(&self.mesh.blocks);
+        }
+        // Per pack: device-assigned packs fold the staged per-block dts of
+        // the device bootstrap/launch (f32 min, then one CFL scale — the
+        // legacy device fold); host packs sweep their containers.
+        let mut m = f64::INFINITY;
+        for (pi, d) in self.mesh_data.packs().iter().enumerate() {
+            let r = d.block_range();
+            let pack_dt = match spaces[pi] {
+                PackSpace::Host => container_sweep(&self.mesh.blocks[r]),
+                PackSpace::Device => {
+                    let md = dev.last_dts[r]
+                        .iter()
+                        .fold(f32::INFINITY, |a, &b| a.min(b));
+                    self.pkg.cfl as f64 * md as f64
+                }
+            };
+            m = m.min(pack_dt);
+        }
+        m
     }
 
-    // -- flux correction (native, multilevel) --------------------------------
+    // -- heterogeneous co-execution (space=hybrid) ---------------------------
+
+    /// Bring up `space=hybrid`: build the Device engine when the mesh is
+    /// capable of it (uniform + fully periodic — the Device space's
+    /// coverage), keep the Host engine either way, and draw the initial
+    /// pack → space assignment. On a non-capable mesh hybrid degenerates
+    /// to an all-host assignment instead of erroring — `space=hybrid` is a
+    /// scheduling preference, not a capability assertion. A missing or
+    /// corrupt artifact runtime still surfaces as a structured error, like
+    /// `space=device`.
+    pub(crate) fn init_hybrid(&mut self) -> Result<()> {
+        let dim = self.mesh.cfg.dim;
+        let capable = self.mesh.tree.max_level() == 0
+            && self.mesh.cfg.periodic_flags()[..dim].iter().all(|p| *p);
+        if capable {
+            let dev = DeviceState::new(self)?;
+            self.device = Some(dev);
+            // DeviceState::new re-drew the pack plan (gathering staging);
+            // re-size the host work arrays against the final pack count so
+            // both engines cover the same partition.
+            let shape = self.mesh.cfg.index_shape();
+            let (nblocks, npacks) = (self.mesh.blocks.len(), self.mesh_data.npacks());
+            self.host
+                .as_mut()
+                .expect("hybrid keeps the host engine")
+                .resize(&shape, nblocks, npacks);
+        }
+        self.hybrid = Some(HybridPartition::new(self.sp.hybrid_split));
+        self.hybrid_assign();
+        Ok(())
+    }
+
+    /// (Re)draw the pack → space assignment from scratch (startup, regrid,
+    /// rebalance, restore — pack identities changed, measurements reset).
+    /// Host-assigned packs are marked dirty: their containers are
+    /// authoritative; the staging gathered for the device is stale for
+    /// them until they migrate back.
+    pub(crate) fn hybrid_assign(&mut self) {
+        let npacks = self.mesh_data.npacks();
+        let costs = self.mesh_data.pack_costs(&self.mesh);
+        let nworkers = self.host.as_ref().map_or(1, |h| h.nworkers());
+        let Some(hp) = self.hybrid.as_mut() else { return };
+        hp.reset(npacks);
+        let spaces = hp.assign(&costs, self.device.is_some(), nworkers);
+        let to_host: Vec<usize> = spaces
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| **s == PackSpace::Host)
+            .map(|(pi, _)| pi)
+            .collect();
+        self.mesh_data.set_pack_spaces(spaces);
+        self.mesh_data.mark_packs_dirty(&to_host);
+    }
+
+    /// Re-partition packs between the spaces from the measured cost EWMAs
+    /// (at the `parthenon/loadbalance interval` cadence). A migrating pack
+    /// is re-staged exactly ONCE, in the direction it moves:
+    ///
+    /// * host → device: gather its containers into staging, then pre-fill
+    ///   the staged ghost inbox from the (just-exchanged) container ghosts
+    ///   so the device's first unpack is a bitwise no-op;
+    /// * device → host: unpack the staged ghost inbox into the staged
+    ///   interior+ghosts, then scatter to the containers and mark dirty.
+    pub(crate) fn hybrid_repartition(&mut self) -> Result<()> {
+        if self.device.is_none() {
+            return Ok(());
+        }
+        let old = self.mesh_data.pack_spaces().to_vec();
+        let costs = self.mesh_data.pack_costs(&self.mesh);
+        let nworkers = self.host.as_ref().map_or(1, |h| h.nworkers());
+        let new = {
+            let Some(hp) = self.hybrid.as_ref() else { return Ok(()) };
+            hp.assign(&costs, true, nworkers)
+        };
+        if new == old {
+            return Ok(());
+        }
+        let to_dev: Vec<usize> = (0..old.len())
+            .filter(|&pi| old[pi] == PackSpace::Host && new[pi] == PackSpace::Device)
+            .collect();
+        let to_host: Vec<usize> = (0..old.len())
+            .filter(|&pi| old[pi] == PackSpace::Device && new[pi] == PackSpace::Host)
+            .collect();
+        let dev = self.device.as_ref().expect("checked above");
+        // device → host: staged ghosts land in the staged state first, so
+        // the subsequent scatter writes fully-exchanged blocks.
+        if !to_host.is_empty() {
+            let (descs, staging) = self.mesh_data.parts_mut();
+            for &pi in &to_host {
+                dev.stage_out_pack(&descs[pi], &mut staging[pi]);
+            }
+            self.mesh_data.scatter_packs(&mut self.mesh, CONS, &to_host)?;
+        }
+        // host → device: containers are authoritative; gather them and
+        // pre-fill the staged inbox from the container ghosts.
+        if !to_dev.is_empty() {
+            self.mesh_data.gather_packs(&self.mesh, CONS, &to_dev)?;
+            let dev = self.device.as_ref().expect("checked above");
+            let (descs, staging) = self.mesh_data.parts_mut();
+            for &pi in &to_dev {
+                dev.stage_in_pack(&descs[pi], &mut staging[pi]);
+            }
+        }
+        self.mesh_data.set_pack_spaces(new);
+        self.mesh_data.mark_packs_dirty(&to_host);
+        self.fused_dt_local = None;
+        self.fused_dt_global = None;
+        self.hybrid_stats.restagings += (to_dev.len() + to_host.len()) as u64;
+        self.hybrid_stats.repartitions += 1;
+        Ok(())
+    }
 
     pub(crate) fn is_multilevel(&self) -> bool {
         self.mesh.tree.max_level() > 0
-    }
-
-    /// Fine side: restrict boundary face fluxes and send to the coarse
-    /// neighbor (paper Sec. 3.7).
-    pub(crate) fn flux_corr_send(&self, fx: &FluxArrays, bi: usize) {
-        let t = bvals::ExchTopo::of(&self.mesh);
-        flux_corr_send_block(&t, &self.comm_flux, &self.mesh.blocks[bi].loc, fx);
-    }
-
-    /// Coarse side: register expected flux corrections for this stage.
-    pub(crate) fn flux_corr_post_recvs(&mut self) {
-        let t = bvals::ExchTopo::of(&self.mesh);
-        self.flux_pending = flux_corr_pending_blocks(&t, &self.mesh.blocks, 0);
-    }
-
-    /// Poll flux corrections; apply arrivals into `flux`. True when done.
-    pub(crate) fn flux_corr_poll(&mut self, flux: &mut [FluxArrays]) -> Result<bool> {
-        let dim = self.mesh.cfg.dim;
-        flux_corr_poll_pending(&self.comm_flux, dim, &mut self.flux_pending, flux, 0)
-    }
-
-    /// Wait (bounded spin-then-backoff, progress-aware watchdog) until
-    /// every registered flux correction has arrived and been applied.
-    pub(crate) fn flux_corr_wait(&mut self, flux: &mut [FluxArrays]) -> Result<()> {
-        let mut wait = ProgressWait::new(self.world.stall_limit());
-        let mut remaining = self.flux_pending.len();
-        loop {
-            if self.flux_corr_poll(flux)? {
-                return Ok(());
-            }
-            let now = self.flux_pending.len();
-            let progressed = now < remaining;
-            remaining = now;
-            if !wait.step(progressed) {
-                let e = Error::Timeout {
-                    what: format!(
-                        "flux correction ({} receives missing)",
-                        self.flux_pending.len()
-                    ),
-                    rank: Some(self.mesh.my_rank),
-                    peer: None,
-                    tag: None,
-                    elapsed: wait.idle_elapsed(),
-                };
-                self.world.escalate(self.mesh.my_rank, &e);
-                return Err(e);
-            }
-        }
     }
 
     // -- outputs --------------------------------------------------------------
@@ -978,17 +1649,14 @@ impl EvolutionDriver for HydroSim {
         self.world.check_kill(self.mesh.my_rank, self.cycle)?;
         let dt = self.dt as Real;
 
-        // One cycle through the shared executor layer (take-dance so the
-        // executor can borrow the rest of the sim).
-        if self.device.is_some() {
-            let mut dev = self.device.take().unwrap();
-            let r = run_cycle(self, &mut dev, dt);
-            self.device = Some(dev);
-            r?;
-        } else {
-            let mut h = self.host.take().expect("host executor");
-            let r = run_cycle(self, &mut h, dt);
-            self.host = Some(h);
+        // One cycle through the merged task region (take-dance so the
+        // producers can borrow the rest of the sim).
+        {
+            let mut h = self.host.take();
+            let mut d = self.device.take();
+            let r = run_cycle(self, h.as_mut(), d.as_mut(), dt);
+            self.host = h;
+            self.device = d;
             r?;
         }
 
@@ -1016,6 +1684,16 @@ impl EvolutionDriver for HydroSim {
             && !(self.mesh.cfg.adaptive && self.device.is_none())
         {
             regrid::check_and_rebalance(self)?;
+        }
+
+        // Hybrid re-partition between the spaces, at the same cadence as
+        // the inter-rank balancer (after it, so the assignment is drawn
+        // against the post-migration pack plan).
+        if self.sp.exec == ExecSpace::Hybrid
+            && self.sp.lb_interval > 0
+            && self.cycle % self.sp.lb_interval as u64 == 0
+        {
+            self.hybrid_repartition()?;
         }
 
         // Durable checkpoint (atomic tmp+rename) on the configured cadence:

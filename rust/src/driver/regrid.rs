@@ -13,6 +13,13 @@
 //! while [`rebalance_full`] tears every local container down and is kept
 //! as the bitwise-identity oracle. Migration and re-gather volumes are
 //! recorded in `HydroSim::lb_stats` ([`crate::metrics::RebalanceStats`]).
+//!
+//! Both rebalance modes carry particle swarms WITH their block: a leaving
+//! block's swarms are serialized onto the migration payload (the same
+//! per-particle wire format `particles/comm.rs` uses for neighbor
+//! transport) and reconstructed on the receiving rank; a staying block's
+//! swarms stay in place. Only the AMR regrid ([`apply_new_tree`]) still
+//! drops swarms — particle prolongation/restriction is not defined.
 
 use std::collections::HashMap;
 
@@ -23,7 +30,9 @@ use crate::comm::{tags, Payload};
 use crate::error::Result;
 use crate::hydro::native;
 use crate::hydro::CONS;
+use crate::error::Error;
 use crate::mesh::{AmrFlag, LogicalLocation};
+use crate::particles::{Swarm, SwarmField};
 use crate::vars::Package;
 use crate::{Real, NHYDRO};
 
@@ -256,6 +265,13 @@ pub fn apply_new_tree(sim: &mut HydroSim, new_tree: crate::mesh::BlockTree) -> R
         Some([native::IM1, native::IM2, native::IM3]),
     )?;
     sim.fill_derived();
+    // Pack identities changed with the tree: re-draw the pack -> space
+    // assignment (hybrid keeps every pack on the host while AMR is
+    // active — no DeviceState on a multilevel mesh — but the cost model
+    // must still be resized to the new pack count).
+    if sim.sp.exec == super::ExecSpace::Hybrid {
+        sim.hybrid_assign();
+    }
     Ok(())
 }
 
@@ -284,7 +300,10 @@ pub fn check_and_rebalance(sim: &mut HydroSim) -> Result<bool> {
 /// appended to its point-to-point payload (two f32 bit-halves of the f64,
 /// exact) — so a migrated-in block continues from the sender's measured
 /// weight instead of restarting at the derived nominal value and
-/// forgetting the very imbalance that triggered the migration.
+/// forgetting the very imbalance that triggered the migration. The block's
+/// particle swarms ride the same payload (serialized between the conserved
+/// state and the cost words, [`append_swarms`]), so a rebalance moves
+/// particles with their block instead of dropping them.
 pub fn rebalance(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Result<()> {
     match sim.sp.lb_mode {
         super::RebalanceMode::Full => rebalance_full(sim, new_ranks),
@@ -318,26 +337,33 @@ pub fn rebalance_full(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Result<()> {
 
     // Device: every container this oracle is about to stash must be
     // authoritative, and a migration can reshape pack boundaries so that a
-    // STAYING block lands in a dirty (re-gathered) pack — scatter the
-    // whole rank, not just the packs holding a leaving block. (Scattering
-    // only the leaving packs would re-gather stale containers into any
-    // reshaped pack; the incremental path scatters exactly the packs the
-    // plan delta marks as not surviving.)
+    // STAYING block lands in a dirty (re-gathered) pack — scatter every
+    // RESIDENT pack, not just the packs holding a leaving block.
+    // (Scattering only the leaving packs would re-gather stale containers
+    // into any reshaped pack; the incremental path scatters exactly the
+    // packs the plan delta marks as not surviving.) Dirty packs are
+    // skipped: under hybrid those are the host-assigned packs, whose
+    // containers are already authoritative and whose staging is stale.
     if dev.is_some() {
-        sim.mesh_data.scatter(&mut sim.mesh, CONS)?;
+        sim.mesh_data.scatter_resident(&mut sim.mesh, CONS)?;
     }
 
     // Stash every local block's conserved state AND measured cost by gid
-    // (gids are stable: the tree is unchanged); send the leaving ones with
-    // the cost appended to the payload.
+    // (gids are stable: the tree is unchanged), and lift its swarms out of
+    // the container before the teardown; send the leaving ones with the
+    // swarm blob and the cost appended to the payload.
     let mut stash: HashMap<usize, (Vec<Real>, f64)> = HashMap::new();
-    for b in &sim.mesh.blocks {
+    let mut swarm_stash: HashMap<usize, HashMap<String, Swarm>> = HashMap::new();
+    for b in &mut sim.mesh.blocks {
         stash.insert(b.gid, (b.data.get(CONS)?.as_slice().to_vec(), b.cost));
+        swarm_stash.insert(b.gid, std::mem::take(&mut b.swarms));
     }
     for (gid, (&o, &n)) in old_ranks.iter().zip(new_ranks.iter()).enumerate() {
         if o == me && n != me {
             let (data, cost) = stash.get(&gid).unwrap();
             let mut payload = data.clone();
+            let swarms = encode_swarms(swarm_stash.get_mut(&gid).unwrap());
+            append_swarms(&mut payload, &swarms);
             append_cost(&mut payload, *cost);
             comm.isend(n, tags::migrate_tag(gid, 0), Payload::F32(payload));
         }
@@ -356,18 +382,20 @@ pub fn rebalance_full(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Result<()> {
     sim.rebuild_work_buffers();
 
     // Fill phase: local restores + receives for migrated-in blocks. The
-    // cost EWMA rides the migration payload (or the local stash), so the
-    // measured weight survives the move.
+    // cost EWMA and the particle swarms ride the migration payload (or
+    // the local stashes), so both survive the move.
     for bi in 0..sim.mesh.blocks.len() {
         let gid = sim.mesh.blocks[bi].gid;
         let src_rank = old_ranks[gid];
-        let (data, cost) = if src_rank == me {
-            stash.get(&gid).unwrap().clone()
+        let (data, cost, swarms) = if src_rank == me {
+            let (data, cost) = stash.get(&gid).unwrap().clone();
+            (data, cost, swarm_stash.remove(&gid).unwrap_or_default())
         } else {
             let mut payload =
                 comm.recv(src_rank, tags::migrate_tag(gid, 0))?.into_f32()?;
             let cost = take_cost(&mut payload);
-            (payload, cost)
+            let blob = take_swarms(&mut payload);
+            (payload, cost, decode_swarms(&blob)?)
         };
         sim.mesh.blocks[bi]
             .data
@@ -375,6 +403,7 @@ pub fn rebalance_full(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Result<()> {
             .as_mut_slice()
             .copy_from_slice(&data);
         sim.mesh.blocks[bi].cost = cost;
+        sim.mesh.blocks[bi].swarms = swarms;
     }
 
     // Device: boundary-adjacent slabs of the preserved (clean) packs are
@@ -399,6 +428,11 @@ pub fn rebalance_full(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Result<()> {
     }
     sim.lb_stats.packs_regathered += sim.mesh_data.gathered_packs() - gathered0;
     sim.device = dev;
+    // Pack identities changed: re-draw the pack -> space assignment (and
+    // reset the per-space cost model to the new pack count).
+    if sim.sp.exec == super::ExecSpace::Hybrid {
+        sim.hybrid_assign();
+    }
     Ok(())
 }
 
@@ -407,7 +441,8 @@ pub fn rebalance_full(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Result<()> {
 /// says moved.
 ///
 /// * Leaving blocks are sent point-to-point straight from their
-///   containers (cost EWMA appended); nothing else is stashed or copied.
+///   containers (swarm blob + cost EWMA appended); nothing else is
+///   stashed or copied. Staying blocks keep their swarms in place.
 /// * [`crate::mesh::Mesh::apply_assignment_incremental`] keeps every
 ///   staying block's container (data + cost) in place — no teardown, no
 ///   restore pass.
@@ -463,11 +498,14 @@ pub fn rebalance_incremental(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Resul
     }
     let old_dts = dev.as_ref().map(|d| d.dts_by_gid(&sim.mesh));
 
-    // Send ONLY the leaving blocks, straight from their containers.
-    for b in &sim.mesh.blocks {
+    // Send ONLY the leaving blocks, straight from their containers
+    // (extracting their particles onto the wire as we go).
+    for b in &mut sim.mesh.blocks {
         let dst = new_ranks[b.gid];
         if dst != me {
             let mut payload = b.data.get(CONS)?.as_slice().to_vec();
+            let swarms = encode_swarms(&mut b.swarms);
+            append_swarms(&mut payload, &swarms);
             append_cost(&mut payload, b.cost);
             comm.isend(dst, tags::migrate_tag(b.gid, 0), Payload::F32(payload));
             sim.lb_stats.blocks_sent += 1;
@@ -495,12 +533,14 @@ pub fn rebalance_incremental(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Resul
         }
         let mut payload = comm.recv(src, tags::migrate_tag(gid, 0))?.into_f32()?;
         let cost = take_cost(&mut payload);
+        let blob = take_swarms(&mut payload);
         sim.mesh.blocks[bi]
             .data
             .get_mut(CONS)?
             .as_mut_slice()
             .copy_from_slice(&payload);
         sim.mesh.blocks[bi].cost = cost;
+        sim.mesh.blocks[bi].swarms = decode_swarms(&blob)?;
         sim.lb_stats.blocks_received += 1;
     }
 
@@ -562,6 +602,11 @@ pub fn rebalance_incremental(sim: &mut HydroSim, new_ranks: Vec<usize>) -> Resul
     }
     sim.lb_stats.packs_regathered += sim.mesh_data.gathered_packs() - gathered0;
     sim.device = dev;
+    // Pack identities changed: re-draw the pack -> space assignment (and
+    // reset the per-space cost model to the new pack count).
+    if sim.sp.exec == super::ExecSpace::Hybrid {
+        sim.hybrid_assign();
+    }
     Ok(())
 }
 
@@ -578,6 +623,155 @@ fn take_cost(payload: &mut Vec<Real>) -> f64 {
     let lo = payload.pop().expect("migration payload carries a cost").to_bits() as u64;
     let hi = payload.pop().expect("migration payload carries a cost").to_bits() as u64;
     f64::from_bits((hi << 32) | lo)
+}
+
+// -- swarm-carrying migration ----------------------------------------------
+//
+// A leaving block's swarms are flattened into one byte blob (all integers
+// little-endian u32, per-particle records in the `particles/comm.rs` wire
+// format, i.e. [`Swarm::extract`] field order = BTreeMap order):
+//
+//   u32 n_swarms
+//   per swarm, in sorted-name order:
+//     u32 name_len, name bytes
+//     u32 n_extra_fields            (beyond the implicit x/y/z)
+//     per extra field: u32 kind (0 = Real, 1 = Int), u32 name_len, bytes
+//     u32 particle_bytes_len, particle bytes
+//
+// The blob rides the f32 migration payload as bit-cast words followed by
+// one byte-length word ([`append_swarms`]/[`take_swarms`]), sitting
+// between the conserved state and the two cost words.
+
+/// Serialize (and drain the particles of) every swarm on a leaving block.
+fn encode_swarms(swarms: &mut HashMap<String, Swarm>) -> Vec<u8> {
+    let mut names: Vec<String> = swarms.keys().cloned().collect();
+    names.sort();
+    let mut out = Vec::new();
+    put_u32(&mut out, names.len() as u32);
+    for name in &names {
+        let sw = swarms.get_mut(name).unwrap();
+        put_bytes(&mut out, name.as_bytes());
+        let extras: Vec<(u32, String)> = sw
+            .field_names()
+            .filter(|n| !matches!(*n, "x" | "y" | "z"))
+            .map(|n| {
+                let kind = if sw.real_field(n).is_ok() { 0u32 } else { 1u32 };
+                (kind, n.to_string())
+            })
+            .collect();
+        put_u32(&mut out, extras.len() as u32);
+        for (kind, fname) in &extras {
+            put_u32(&mut out, *kind);
+            put_bytes(&mut out, fname.as_bytes());
+        }
+        let active = sw.active_indices();
+        let particles = sw.extract(&active);
+        put_bytes(&mut out, &particles);
+    }
+    out
+}
+
+/// Rebuild a block's swarms from the blob [`encode_swarms`] produced.
+fn decode_swarms(blob: &[u8]) -> Result<HashMap<String, Swarm>> {
+    let mut pos = 0usize;
+    let nsw = get_u32(blob, &mut pos)? as usize;
+    let mut out = HashMap::new();
+    for _ in 0..nsw {
+        let name = get_str(blob, &mut pos)?;
+        let nex = get_u32(blob, &mut pos)? as usize;
+        let mut extras = Vec::with_capacity(nex);
+        for _ in 0..nex {
+            let kind = get_u32(blob, &mut pos)?;
+            let fname = get_str(blob, &mut pos)?;
+            extras.push(match kind {
+                0 => SwarmField::Real(fname),
+                1 => SwarmField::Int(fname),
+                k => {
+                    return Err(Error::Comm(format!(
+                        "swarm migration: unknown field kind {k}"
+                    )))
+                }
+            });
+        }
+        let mut sw = Swarm::new(&name, &extras);
+        let particles = get_bytes(blob, &mut pos)?;
+        sw.insert_bytes(particles)?;
+        out.insert(name, sw);
+    }
+    if pos != blob.len() {
+        return Err(Error::Comm(format!(
+            "swarm migration: {} trailing bytes in blob",
+            blob.len() - pos
+        )));
+    }
+    Ok(out)
+}
+
+/// Append the swarm blob to an f32 migration payload: the bytes bit-cast
+/// into words (zero-padded tail), then one word holding the byte length.
+fn append_swarms(payload: &mut Vec<Real>, blob: &[u8]) {
+    let nwords = (blob.len() + 3) / 4;
+    for w in 0..nwords {
+        let mut buf = [0u8; 4];
+        let start = w * 4;
+        let end = (start + 4).min(blob.len());
+        buf[..end - start].copy_from_slice(&blob[start..end]);
+        payload.push(Real::from_bits(u32::from_le_bytes(buf)));
+    }
+    payload.push(Real::from_bits(blob.len() as u32));
+}
+
+/// Pop the swarm blob appended by [`append_swarms`] (call AFTER
+/// [`take_cost`] — the cost words sit on top).
+fn take_swarms(payload: &mut Vec<Real>) -> Vec<u8> {
+    let len = payload
+        .pop()
+        .expect("migration payload carries a swarm blob")
+        .to_bits() as usize;
+    let nwords = (len + 3) / 4;
+    assert!(payload.len() >= nwords, "migration payload carries a swarm blob");
+    let words = payload.split_off(payload.len() - nwords);
+    let mut blob = Vec::with_capacity(nwords * 4);
+    for w in &words {
+        blob.extend_from_slice(&w.to_bits().to_le_bytes());
+    }
+    blob.truncate(len);
+    blob
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    put_u32(out, b.len() as u32);
+    out.extend_from_slice(b);
+}
+
+fn get_u32(b: &[u8], pos: &mut usize) -> Result<u32> {
+    let end = *pos + 4;
+    if end > b.len() {
+        return Err(Error::Comm("swarm migration: truncated blob".into()));
+    }
+    let v = u32::from_le_bytes(b[*pos..end].try_into().unwrap());
+    *pos = end;
+    Ok(v)
+}
+
+fn get_bytes<'a>(b: &'a [u8], pos: &mut usize) -> Result<&'a [u8]> {
+    let len = get_u32(b, pos)? as usize;
+    let end = *pos + len;
+    if end > b.len() {
+        return Err(Error::Comm("swarm migration: truncated blob".into()));
+    }
+    let v = &b[*pos..end];
+    *pos = end;
+    Ok(v)
+}
+
+fn get_str(b: &[u8], pos: &mut usize) -> Result<String> {
+    String::from_utf8(get_bytes(b, pos)?.to_vec())
+        .map_err(|_| Error::Comm("swarm migration: non-utf8 name in blob".into()))
 }
 
 /// Place a restricted child interior (dense [nvar, nz/2, ny/2, nx/2] in
@@ -625,5 +819,85 @@ mod tests {
             assert_eq!(got.to_bits(), cost.to_bits(), "cost must survive bit-exactly");
             assert_eq!(payload, vec![1.5 as Real, -2.25]);
         }
+    }
+
+    fn sample_swarms() -> HashMap<String, Swarm> {
+        let mut tracers = Swarm::new("tracers", &[SwarmField::Int("id".into())]);
+        let slots = tracers.add_particles(3);
+        for (i, &s) in slots.iter().enumerate() {
+            tracers.real_field_mut("x").unwrap()[s] = 0.125 * i as Real;
+            tracers.real_field_mut("y").unwrap()[s] = -1.5 + i as Real;
+            tracers.real_field_mut("z").unwrap()[s] = 7.0;
+            tracers.int_field_mut("id").unwrap()[s] = 100 + i as i64;
+        }
+        let mut dust = Swarm::new(
+            "dust",
+            &[SwarmField::Real("mass".into()), SwarmField::Int("kind".into())],
+        );
+        let s = dust.add_particles(1)[0];
+        dust.real_field_mut("mass").unwrap()[s] = 1e-6;
+        dust.int_field_mut("kind").unwrap()[s] = -3;
+        let mut out = HashMap::new();
+        out.insert("tracers".to_string(), tracers);
+        out.insert("dust".to_string(), dust);
+        out
+    }
+
+    #[test]
+    fn swarms_round_trip_through_the_migration_payload() {
+        let mut swarms = sample_swarms();
+        let mut payload = vec![3.25 as Real, -0.5]; // stand-in conserved state
+        let blob = encode_swarms(&mut swarms);
+        // extraction drains the sender's particles (the block is leaving)
+        assert!(swarms.values().all(|s| s.num_active() == 0));
+        append_swarms(&mut payload, &blob);
+        append_cost(&mut payload, 0.625);
+
+        // receiver pops in reverse order: cost first, then the blob
+        assert_eq!(take_cost(&mut payload).to_bits(), 0.625f64.to_bits());
+        let got_blob = take_swarms(&mut payload);
+        assert_eq!(got_blob, blob);
+        assert_eq!(payload, vec![3.25 as Real, -0.5]);
+
+        let got = decode_swarms(&got_blob).unwrap();
+        assert_eq!(got.len(), 2);
+        let tracers = &got["tracers"];
+        assert_eq!(tracers.num_active(), 3);
+        let idx = tracers.active_indices();
+        for (i, &s) in idx.iter().enumerate() {
+            assert_eq!(tracers.real_field("x").unwrap()[s], 0.125 * i as Real);
+            assert_eq!(tracers.real_field("y").unwrap()[s], -1.5 + i as Real);
+            assert_eq!(tracers.real_field("z").unwrap()[s], 7.0);
+            assert_eq!(tracers.int_field("id").unwrap()[s], 100 + i as i64);
+        }
+        let dust = &got["dust"];
+        assert_eq!(dust.num_active(), 1);
+        let s = dust.active_indices()[0];
+        assert_eq!(dust.real_field("mass").unwrap()[s], 1e-6);
+        assert_eq!(dust.int_field("kind").unwrap()[s], -3);
+    }
+
+    #[test]
+    fn empty_swarm_map_rides_as_a_tiny_blob() {
+        let mut empty = HashMap::new();
+        let blob = encode_swarms(&mut empty);
+        assert_eq!(blob, vec![0, 0, 0, 0]);
+        let mut payload: Vec<Real> = vec![1.0];
+        append_swarms(&mut payload, &blob);
+        assert_eq!(payload.len(), 3); // state + 1 word + length word
+        let got = take_swarms(&mut payload);
+        assert!(decode_swarms(&got).unwrap().is_empty());
+        assert_eq!(payload, vec![1.0 as Real]);
+    }
+
+    #[test]
+    fn decode_rejects_corrupt_blobs() {
+        assert!(decode_swarms(&[1, 0, 0]).is_err(), "truncated count");
+        // n_swarms = 1 but nothing follows
+        assert!(decode_swarms(&[1, 0, 0, 0]).is_err());
+        let mut swarms = sample_swarms();
+        let mut blob = encode_swarms(&mut swarms);
+        blob.push(0); // trailing garbage
+        assert!(decode_swarms(&blob).is_err());
     }
 }

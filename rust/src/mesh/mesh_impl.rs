@@ -240,14 +240,11 @@ impl Mesh {
     }
 
     /// Apply a new rank assignment on the SAME tree incrementally: blocks
-    /// that stay on this rank keep their containers (data + cost EWMA)
-    /// verbatim, leaving blocks are dropped, and arriving blocks get
-    /// fresh containers for the caller to fill from the migration payload.
-    /// Particle swarms are cleared on staying blocks for parity with the
-    /// full-rebuild oracle, which drops every swarm (the migration payload
-    /// does not carry particles yet — swarm-carrying migration is a
-    /// ROADMAP item, and keeping only the staying blocks' particles would
-    /// be physically inconsistent anyway).
+    /// that stay on this rank keep their containers (data + cost EWMA +
+    /// particle swarms) verbatim, leaving blocks are dropped (the caller
+    /// has already serialized their swarms onto the migration payload),
+    /// and arriving blocks get fresh containers for the caller to fill
+    /// from the migration payload — including the swarms it carries.
     /// Bumps [`Mesh::version`] exactly like [`Mesh::rebuild_local_blocks`]
     /// so stale pack caches are still impossible. Returns the number of
     /// blocks whose containers survived in place.
@@ -271,8 +268,7 @@ impl Mesh {
                 continue;
             }
             blocks.push(match old.remove(&gid) {
-                Some(mut b) => {
-                    b.swarms.clear(); // oracle parity: no swarm survives
+                Some(b) => {
                     kept += 1;
                     b
                 }

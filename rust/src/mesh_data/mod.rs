@@ -32,6 +32,15 @@ use crate::mesh::{Mesh, LogicalLocation};
 use crate::runtime::plan_packs;
 use crate::{Real, NHYDRO};
 
+/// Which execution space currently owns a pack (hybrid co-execution).
+/// Host-owned packs keep their block containers authoritative (staging
+/// dirty); Device-owned packs keep their staging authoritative (clean).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PackSpace {
+    Host,
+    Device,
+}
+
 /// One MeshBlockPack: a contiguous run of local block indices.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PackDesc {
@@ -121,6 +130,10 @@ pub struct MeshData {
     /// Per-pack: staging does not reflect the block containers and must be
     /// re-gathered before use.
     dirty: Vec<bool>,
+    /// Per-pack owning execution space (hybrid co-execution). A rebuild
+    /// resets everything to Host; the hybrid partitioner re-assigns via
+    /// [`MeshData::set_pack_spaces`].
+    spaces: Vec<PackSpace>,
     /// Cumulative count of packs gathered (instrumentation: tests assert
     /// that clean packs are NOT re-gathered after a rebalance).
     gathered_packs: u64,
@@ -144,6 +157,7 @@ impl MeshData {
             staged: false,
             locs: Vec::new(),
             dirty: Vec::new(),
+            spaces: Vec::new(),
             gathered_packs: 0,
         };
         md.rebuild(mesh, avail);
@@ -182,6 +196,7 @@ impl MeshData {
             .map(|d| mesh.blocks[d.block_range()].iter().map(|b| b.loc).collect())
             .collect();
         self.dirty = vec![true; self.descs.len()];
+        self.spaces = vec![PackSpace::Host; self.descs.len()];
         self.mesh_version = mesh.version;
     }
 
@@ -452,6 +467,28 @@ impl MeshData {
         self.gathered_packs
     }
 
+    /// Per-pack owning execution space (all Host until the hybrid
+    /// partitioner assigns otherwise).
+    pub fn pack_spaces(&self) -> &[PackSpace] {
+        &self.spaces
+    }
+
+    /// Record the hybrid partitioner's pack→space assignment. Does NOT
+    /// touch dirty flags — migration restaging is the driver's job (a
+    /// migrating pack pays exactly one restage, counted in HybridStats).
+    pub fn set_pack_spaces(&mut self, spaces: Vec<PackSpace>) {
+        debug_assert_eq!(spaces.len(), self.descs.len());
+        self.spaces = spaces;
+    }
+
+    /// Mark the given packs' staging as out of sync with the block
+    /// containers (a host-space pack's cycle wrote the containers).
+    pub fn mark_packs_dirty(&mut self, packs: &[usize]) {
+        for &pi in packs {
+            self.dirty[pi] = true;
+        }
+    }
+
     /// Pack plan + staging, borrowed together (device stage loops).
     /// Requires [`MeshData::ensure_staging`] to have run.
     pub fn parts_mut(&mut self) -> (&[PackDesc], &mut [PackStaging]) {
@@ -523,6 +560,42 @@ impl MeshData {
                     .copy_from_slice(&p.u[bi * ne..(bi + 1) * ne]);
             }
         }
+        Ok(())
+    }
+
+    /// Scatter only the CLEAN packs' `u` slabs into the block containers —
+    /// the residency-aware full sync: dirty packs' containers are already
+    /// authoritative (that is what dirty MEANS), so copying staging over
+    /// them would clobber newer data. On a pure-device run mid-cycle every
+    /// pack is clean, so this is identical to [`MeshData::scatter`].
+    pub fn scatter_resident(&self, mesh: &mut Mesh, var: &str) -> Result<()> {
+        let clean: Vec<usize> = self
+            .dirty
+            .iter()
+            .enumerate()
+            .filter_map(|(i, d)| (!d).then_some(i))
+            .collect();
+        self.scatter_packs(mesh, var, &clean)
+    }
+
+    /// Gather only the GIVEN packs from their authoritative block
+    /// containers into staging `u`, clearing their dirty flags — the
+    /// host→device migration restage (one pack, one copy). Packs already
+    /// clean are gathered anyway (callers pass exactly the migrating set).
+    pub fn gather_packs(&mut self, mesh: &Mesh, var: &str, packs: &[usize]) -> Result<()> {
+        self.validate(mesh)?;
+        self.ensure_staging();
+        let ne = self.block_elems;
+        for &pi in packs {
+            let d = &self.descs[pi];
+            let p = &mut self.staging[pi];
+            for bi in 0..d.nb {
+                let arr = mesh.blocks[d.first + bi].data.get(var)?;
+                p.u[bi * ne..(bi + 1) * ne].copy_from_slice(arr.as_slice());
+            }
+            self.dirty[pi] = false;
+        }
+        self.gathered_packs += packs.len() as u64;
         Ok(())
     }
 
@@ -751,6 +824,49 @@ mod tests {
         mesh.rebuild_local_blocks();
         let kept = md.rebuild_preserving(&mesh, None);
         assert_eq!(kept, d1.preserved_new);
+    }
+
+    #[test]
+    fn residency_tracking_scatter_and_gather_subsets() {
+        use crate::hydro::CONS;
+        let mut mesh = mesh_2d_cons(2); // 4 blocks
+        let mut md = MeshData::build(&mesh, 1, None); // 4 packs of 1
+        assert_eq!(md.pack_spaces(), &[PackSpace::Host; 4]);
+        md.gather(&mesh, CONS).unwrap(); // everything staged + clean
+        let base = md.gathered_packs();
+
+        // Simulate: pack 1 ran on host (containers newer), rest on device.
+        md.set_pack_spaces(vec![
+            PackSpace::Device,
+            PackSpace::Host,
+            PackSpace::Device,
+            PackSpace::Device,
+        ]);
+        md.mark_packs_dirty(&[1]);
+        let ne = md.block_elems();
+        // Poison every staging slab; scatter_resident must push only the
+        // clean packs (0, 2, 3) back into containers.
+        for p in &mut md.staging {
+            for x in &mut p.u {
+                *x = 7.0;
+            }
+        }
+        md.scatter_resident(&mut mesh, CONS).unwrap();
+        for (bi, b) in mesh.blocks.iter().enumerate() {
+            let arr = b.data.get(CONS).unwrap();
+            let v = arr.as_slice()[0];
+            if bi == 1 {
+                assert_ne!(v, 7.0, "dirty pack's container must survive");
+            } else {
+                assert_eq!(v, 7.0, "clean packs scatter back");
+            }
+        }
+        // Migrate pack 1 host→device: one subset gather clears its dirty
+        // flag and costs exactly one gathered pack.
+        md.gather_packs(&mesh, CONS, &[1]).unwrap();
+        assert!(md.dirty_packs().is_empty());
+        assert_eq!(md.gathered_packs(), base + 1);
+        assert_eq!(md.staging()[1].u[0..ne].iter().position(|&x| x == 7.0), None);
     }
 
     #[test]

@@ -101,6 +101,45 @@ impl RebalanceStats {
     }
 }
 
+/// Heterogeneous co-execution accounting (`parthenon/exec space=hybrid`):
+/// how the cost partitioner split packs across the Host and Device
+/// execution spaces, how often idle workers crossed the space boundary,
+/// and how many staging re-stagings pack migrations paid. The hybrid perf
+/// lane asserts these are non-zero when both spaces are live.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HybridStats {
+    /// Pack-stage executions assigned to the Host space (summed over
+    /// cycles).
+    pub packs_host: u64,
+    /// Pack-stage executions assigned to the Device space.
+    pub packs_device: u64,
+    /// Task lists claimed by a worker whose seeded items belong to the
+    /// OTHER execution space (idle worker crossing the boundary).
+    pub cross_space_steals: u64,
+    /// Staging re-stagings paid when a pack migrated between spaces
+    /// (exactly one per migration).
+    pub restagings: u64,
+    /// Cost-EWMA repartitions performed (at the loadbalance cadence).
+    pub repartitions: u64,
+}
+
+impl HybridStats {
+    /// True when no hybrid scheduling work has been recorded at all —
+    /// what a pure single-space run must leave behind.
+    pub fn is_untouched(&self) -> bool {
+        *self == HybridStats::default()
+    }
+
+    /// Fold another rank's counters into this one (bench aggregation).
+    pub fn merge(&mut self, other: &HybridStats) {
+        self.packs_host += other.packs_host;
+        self.packs_device += other.packs_device;
+        self.cross_space_steals += other.cross_space_steals;
+        self.restagings += other.restagings;
+        self.repartitions += other.repartitions;
+    }
+}
+
 /// Snapshot of the comm fabric's fault-injection / escalation counters
 /// (`World::fault_stats`): what the seeded plan injected, what the framing
 /// layer absorbed or detected, and how failures escalated. The chaos suite
@@ -202,6 +241,14 @@ mod tests {
         let mut s = RebalanceStats::default();
         assert!(s.is_untouched());
         s.blocks_moved += 1;
+        assert!(!s.is_untouched());
+    }
+
+    #[test]
+    fn hybrid_stats_untouched() {
+        let mut s = HybridStats::default();
+        assert!(s.is_untouched());
+        s.cross_space_steals += 1;
         assert!(!s.is_untouched());
     }
 

@@ -117,6 +117,18 @@ impl<C> TaskList<C> {
     }
 }
 
+/// Scheduling instrumentation for a heterogeneous region: per-list space
+/// labels plus a shared counter the workers bump when a STOLEN list
+/// belongs to a different space than the stealing worker's seeded items.
+/// Space `255` is a wildcard (e.g. the dt-collective list) that never
+/// counts as a boundary crossing.
+pub struct RegionInstr<'a> {
+    /// One space label per task list (0 = Host, 1 = Device, 255 = any).
+    pub spaces: &'a [u8],
+    /// Incremented once per cross-space steal.
+    pub cross_steals: &'a std::sync::atomic::AtomicU64,
+}
+
 /// A regional (cross-list) task: runs once after every (list, task) mark
 /// completes. Used for task-based global reductions.
 struct RegionalTask<C> {
@@ -262,6 +274,28 @@ impl<C> TaskRegion<C> {
     where
         C: Send,
     {
+        self.execute_parallel_weighted_instr(ctxs, costs, nworkers, policy, stall, None)
+    }
+
+    /// [`TaskRegion::execute_parallel_weighted`] with optional
+    /// [`RegionInstr`] scheduling instrumentation: when present, each
+    /// worker's "home" space is the space of its first seeded list, and a
+    /// stolen list whose space differs bumps the shared cross-steal
+    /// counter. The instrumentation observes claims only — it never
+    /// changes which lists run or what they compute, so results stay
+    /// bitwise identical with or without it.
+    pub fn execute_parallel_weighted_instr(
+        &mut self,
+        ctxs: Vec<C>,
+        costs: Option<&[f64]>,
+        nworkers: usize,
+        policy: StealPolicy,
+        stall: std::time::Duration,
+        instr: Option<RegionInstr<'_>>,
+    ) -> Result<Vec<C>>
+    where
+        C: Send,
+    {
         use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
         use std::sync::Mutex;
 
@@ -292,11 +326,17 @@ impl<C> TaskRegion<C> {
         let remaining = AtomicUsize::new(n);
         let progress = AtomicU64::new(0);
         let abort = AtomicBool::new(false);
+        let instr = instr.as_ref();
 
         let worker = |w: usize| -> Result<()> {
             let mut backoff = Backoff::new();
             let mut watchdog = Deadline::new(stall);
             let mut seen = progress.load(Ordering::SeqCst);
+            // the worker's home space = space of its first non-wildcard
+            // seeded list (None when it was seeded nothing attributable)
+            let my_space = instr.and_then(|ins| {
+                pool.seeded(w).iter().map(|&li| ins.spaces[li]).find(|&s| s != 255)
+            });
             // idle bookkeeping shared by the None-claim and no-progress arms
             let idle = |backoff: &mut Backoff, watchdog: &mut Deadline, seen: &mut u64| {
                 let p = progress.load(Ordering::SeqCst);
@@ -326,11 +366,19 @@ impl<C> TaskRegion<C> {
                 if remaining.load(Ordering::SeqCst) == 0 || abort.load(Ordering::SeqCst) {
                     return Ok(());
                 }
-                let Some(li) = pool.claim(w) else {
+                let Some((li, stolen)) = pool.claim2(w) else {
                     // every incomplete list is momentarily held by another worker
                     idle(&mut backoff, &mut watchdog, &mut seen)?;
                     continue;
                 };
+                if stolen {
+                    if let (Some(ins), Some(ms)) = (instr, my_space) {
+                        let s = ins.spaces[li];
+                        if s != 255 && s != ms {
+                            ins.cross_steals.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                }
                 let taken = slots[li].lock().unwrap().take();
                 let Some((mut list, mut ctx)) = taken else { continue };
                 let progressed = list.sweep(&mut ctx);
@@ -722,6 +770,62 @@ mod tests {
                 )
                 .unwrap();
             assert!(sent.iter().all(|s| s.load(Ordering::SeqCst) == 1));
+        }
+    }
+
+    #[test]
+    fn region_instr_counts_cross_space_steals_only() {
+        use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+        use std::sync::Arc;
+        use std::time::Duration;
+        // The cost skew seeds worker 0 with ONLY the heavy list 0 and
+        // worker 1 with lists 1..8; worker 0 finishes first and steals
+        // from worker 1. With list 0 in space 0 and the rest in space 1,
+        // every such steal crosses the boundary; with uniform labels the
+        // same steals must count nothing.
+        for (spaces, expect_cross) in [
+            (
+                vec![0u8, 1, 1, 1, 1, 1, 1, 1],
+                true,
+            ),
+            (vec![0u8; 8], false),
+        ] {
+            let cross = AtomicU64::new(0);
+            let done = Arc::new(AtomicUsize::new(0));
+            let mut region: TaskRegion<Arc<AtomicUsize>> = TaskRegion::new(8);
+            for li in 0..8 {
+                region.list(li).add(NONE, |c: &mut Arc<AtomicUsize>| {
+                    std::thread::sleep(Duration::from_millis(2));
+                    c.fetch_add(1, Ordering::SeqCst);
+                    TaskStatus::Complete
+                });
+            }
+            let ctxs: Vec<_> = (0..8).map(|_| done.clone()).collect();
+            // cost skew: list 0 dominates, so worker 0's seed is just it
+            let costs = vec![1000.0, 0.001, 0.001, 0.001, 0.001, 0.001, 0.001, 0.001];
+            region
+                .execute_parallel_weighted_instr(
+                    ctxs,
+                    Some(&costs),
+                    2,
+                    StealPolicy::Heaviest,
+                    Duration::from_secs(30),
+                    Some(RegionInstr { spaces: &spaces, cross_steals: &cross }),
+                )
+                .unwrap();
+            assert_eq!(done.load(Ordering::SeqCst), 8);
+            if expect_cross {
+                assert!(
+                    cross.load(Ordering::SeqCst) > 0,
+                    "skewed seed must produce a cross-space steal"
+                );
+            } else {
+                assert_eq!(
+                    cross.load(Ordering::SeqCst),
+                    0,
+                    "uniform-space region must count no cross steals"
+                );
+            }
         }
     }
 

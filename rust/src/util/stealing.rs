@@ -58,6 +58,11 @@ pub struct StealPool {
     loads: Vec<AtomicU64>,
     /// Per-item fixed-point cost.
     costs: Vec<u64>,
+    /// The seed-time partition: which items each worker's deque started
+    /// with. Immutable after seeding — consumers use it to attribute a
+    /// worker to the "home" group of its seeded items (e.g. the hybrid
+    /// scheduler's cross-space steal accounting).
+    seeds: Vec<Vec<usize>>,
     policy: StealPolicy,
     steals: AtomicUsize,
 }
@@ -100,10 +105,13 @@ impl StealPool {
             remaining -= got;
         }
         debug_assert_eq!(i, n);
+        let seeds: Vec<Vec<usize>> =
+            queues.iter().map(|q| q.iter().copied().collect()).collect();
         StealPool {
             queues: queues.into_iter().map(Mutex::new).collect(),
             loads: loads.into_iter().map(AtomicU64::new).collect(),
             costs: fp,
+            seeds,
             policy,
             steals: AtomicUsize::new(0),
         }
@@ -123,6 +131,12 @@ impl StealPool {
         self.steals.load(Ordering::SeqCst)
     }
 
+    /// The items worker `w`'s deque was seeded with (seed-time snapshot;
+    /// stealing does not rewrite it).
+    pub fn seeded(&self, w: usize) -> &[usize] {
+        &self.seeds[w]
+    }
+
     /// Re-queue an item onto worker `w`'s own deque (task-region polling:
     /// an incomplete list goes back to the holder's queue, where idle
     /// workers may steal it).
@@ -136,9 +150,17 @@ impl StealPool {
     /// deque was empty at scan time (not necessarily global completion when
     /// items can be re-queued).
     pub fn claim(&self, w: usize) -> Option<usize> {
+        self.claim2(w).map(|(i, _stolen)| i)
+    }
+
+    /// [`StealPool::claim`] that also reports WHERE the item came from:
+    /// `(item, true)` when it was stolen from a victim's deque, `(item,
+    /// false)` when it came from worker `w`'s own deque. The flag feeds the
+    /// hybrid scheduler's cross-space steal counters.
+    pub fn claim2(&self, w: usize) -> Option<(usize, bool)> {
         if let Some(i) = self.queues[w].lock().unwrap().pop_front() {
             self.loads[w].fetch_sub(self.costs[i], Ordering::SeqCst);
-            return Some(i);
+            return Some((i, false));
         }
         if self.policy == StealPolicy::NoSteal {
             return None;
@@ -147,7 +169,7 @@ impl StealPool {
             if let Some(i) = self.queues[v].lock().unwrap().pop_back() {
                 self.loads[v].fetch_sub(self.costs[i], Ordering::SeqCst);
                 self.steals.fetch_add(1, Ordering::SeqCst);
-                return Some(i);
+                return Some((i, true));
             }
         }
         None
@@ -284,6 +306,25 @@ mod tests {
         let mut states = vec![(); 4];
         run_stealing(&pool, items, &mut states, |_s, _i, _t| {});
         assert_eq!(pool.steals(), 0);
+    }
+
+    #[test]
+    fn seeds_recorded_and_claim2_flags_steals() {
+        let pool = StealPool::seed(&vec![1.0; 6], 2, StealPolicy::RoundRobin);
+        assert_eq!(pool.seeded(0), &[0, 1, 2]);
+        assert_eq!(pool.seeded(1), &[3, 4, 5]);
+        // own-deque claims are not steals
+        let (i, stolen) = pool.claim2(0).unwrap();
+        assert_eq!((i, stolen), (0, false));
+        // drain worker 1's deque, then its next claim must steal from 0
+        for _ in 0..3 {
+            let (_, s) = pool.claim2(1).unwrap();
+            assert!(!s);
+        }
+        let (i, stolen) = pool.claim2(1).unwrap();
+        assert!(stolen, "victim-deque claim must be flagged");
+        assert_eq!(i, 2, "steals come from the back of the victim deque");
+        assert_eq!(pool.seeded(0), &[0, 1, 2], "seed snapshot is immutable");
     }
 
     #[test]

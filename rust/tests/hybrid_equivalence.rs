@@ -1,0 +1,310 @@
+//! Heterogeneous co-execution (`parthenon/exec space=hybrid`): the merged
+//! one-region scheduler must be bitwise identical to the single-space
+//! paths at the forced-split endpoints — `hybrid_split=0.0` against
+//! `space=host` and `hybrid_split=1.0` against `space=device` — across
+//! schedulers, worker counts, mesh levels, and rank counts, measured on
+//! the final interior state, the dt bits, AND the checkpoint bytes. A
+//! forced-skew run must actually exercise both spaces in one TaskRegion
+//! and steal across the space boundary; misconfigurations must surface as
+//! structured errors, never panics.
+
+mod common;
+
+use std::sync::{Arc, Mutex};
+
+use parthenon::comm::World;
+use parthenon::config::ParameterInput;
+use parthenon::driver::HydroSim;
+use parthenon::error::Error;
+
+/// Tests share process-global state (the `PARTHENON_ARTIFACTS` env var,
+/// worker pools) — serialize them; a poisoned lock is still a valid gate.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `deck` single-rank for `steps`; return (gid -> interior CONS,
+/// dt bits, restart-file bytes).
+fn run(
+    deck: &str,
+    overrides: &[String],
+    steps: usize,
+    tag: &str,
+) -> (Vec<(usize, Vec<f32>)>, u64, Vec<u8>) {
+    let ovs: Vec<&str> = overrides.iter().map(|s| s.as_str()).collect();
+    let mut sim = common::single_rank_sim(deck, &ovs);
+    for _ in 0..steps {
+        sim.step().unwrap();
+    }
+    let tmp = std::env::temp_dir().join(format!("parthenon_hybrid_eq_{tag}.pbin"));
+    let tmp_s = tmp.to_str().unwrap().to_string();
+    sim.write_restart(&tmp_s).unwrap(); // syncs device staging back first
+    let bytes = std::fs::read(&tmp).unwrap();
+    let _ = std::fs::remove_file(&tmp);
+    (common::cons_by_gid(&sim), sim.dt.to_bits(), bytes)
+}
+
+fn base_ovr(space: &str, sched: &str, nw: usize, pack: usize) -> Vec<String> {
+    vec![
+        format!("parthenon/exec/space={space}"),
+        format!("parthenon/exec/sched={sched}"),
+        format!("parthenon/exec/nworkers={nw}"),
+        format!("parthenon/exec/pack_size={pack}"),
+    ]
+}
+
+fn assert_identical(
+    tag: &str,
+    base: &(Vec<(usize, Vec<f32>)>, u64, Vec<u8>),
+    got: &(Vec<(usize, Vec<f32>)>, u64, Vec<u8>),
+) {
+    assert_eq!(
+        common::max_state_diff(&base.0, &got.0),
+        0.0,
+        "{tag}: final state must be bitwise identical"
+    );
+    assert_eq!(got.1, base.1, "{tag}: dt bits must be identical");
+    assert_eq!(got.2, base.2, "{tag}: checkpoint bytes must be identical");
+}
+
+#[test]
+fn hybrid_split_zero_matches_host_uniform() {
+    let _g = lock();
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    for sched in ["static", "stealing"] {
+        for nw in [1usize, 4, 8] {
+            let base = run(&deck, &base_ovr("host", sched, nw, 4), 4, "h0_base");
+            let mut ov = base_ovr("hybrid", sched, nw, 4);
+            ov.push("parthenon/exec/hybrid_split=0.0".into());
+            let got = run(&deck, &ov, 4, "h0_hyb");
+            assert_identical(
+                &format!("uniform split=0.0 vs host sched={sched} nw={nw}"),
+                &base,
+                &got,
+            );
+        }
+    }
+}
+
+#[test]
+fn hybrid_split_zero_matches_host_multilevel() {
+    let _g = lock();
+    // Multilevel: no DeviceState exists (AMR-capable mesh), so hybrid must
+    // degenerate to the host path — with flux correction live.
+    let deck = common::input_deck("blast", [16, 16, 1], [4, 4, 1], "");
+    let ml = [
+        "parthenon/mesh/refinement=static",
+        "parthenon/mesh/numlevel=2",
+        "parthenon/static_refinement0/level=1",
+        "parthenon/static_refinement0/x1min=0.3",
+        "parthenon/static_refinement0/x1max=0.7",
+        "parthenon/static_refinement0/x2min=0.3",
+        "parthenon/static_refinement0/x2max=0.7",
+    ];
+    for sched in ["static", "stealing"] {
+        for nw in [1usize, 4] {
+            let mut bo = base_ovr("host", sched, nw, 2);
+            bo.extend(ml.iter().map(|s| s.to_string()));
+            let base = run(&deck, &bo, 3, "ml_base");
+            let mut ho = base_ovr("hybrid", sched, nw, 2);
+            ho.extend(ml.iter().map(|s| s.to_string()));
+            ho.push("parthenon/exec/hybrid_split=0.0".into());
+            let got = run(&deck, &ho, 3, "ml_hyb");
+            assert_identical(
+                &format!("multilevel split=0.0 vs host sched={sched} nw={nw}"),
+                &base,
+                &got,
+            );
+        }
+    }
+}
+
+#[test]
+fn hybrid_split_one_matches_device_uniform() {
+    let _g = lock();
+    if !common::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    for sched in ["static", "stealing"] {
+        for nw in [1usize, 4, 8] {
+            let base = run(&deck, &base_ovr("device", sched, nw, 4), 4, "d1_base");
+            let mut ov = base_ovr("hybrid", sched, nw, 4);
+            ov.push("parthenon/exec/hybrid_split=1.0".into());
+            let got = run(&deck, &ov, 4, "d1_hyb");
+            assert_identical(
+                &format!("uniform split=1.0 vs device sched={sched} nw={nw}"),
+                &base,
+                &got,
+            );
+        }
+    }
+}
+
+/// Two-rank run; returns (sorted gid -> interior CONS, rank-0 dt bits,
+/// restart-file bytes).
+fn run_tworank(
+    deck: String,
+    overrides: Vec<String>,
+    steps: usize,
+    tag: &str,
+) -> (Vec<(usize, Vec<f32>)>, u64, Vec<u8>) {
+    let state: Arc<Mutex<Vec<(usize, Vec<f32>)>>> = Arc::new(Mutex::new(Vec::new()));
+    let dt_bits = Arc::new(Mutex::new(0u64));
+    let tmp = std::env::temp_dir().join(format!("parthenon_hybrid_eq_{tag}.pbin"));
+    let tmp_s = tmp.to_str().unwrap().to_string();
+    {
+        let (st, db) = (state.clone(), dt_bits.clone());
+        World::launch(2, move |rank, world| {
+            let mut pin = ParameterInput::from_str(&deck).unwrap();
+            for ov in &overrides {
+                pin.apply_override(ov).unwrap();
+            }
+            let mut sim = HydroSim::new(pin, rank, world).unwrap();
+            for _ in 0..steps {
+                sim.step().unwrap();
+            }
+            sim.write_restart(&tmp_s).unwrap(); // collective; rank 0 writes
+            let mut blocks = common::cons_by_gid(&sim);
+            st.lock().unwrap().append(&mut blocks);
+            if rank == 0 {
+                *db.lock().unwrap() = sim.dt.to_bits();
+            }
+        });
+    }
+    let mut s = Arc::try_unwrap(state).unwrap().into_inner().unwrap();
+    s.sort_by_key(|(g, _)| *g);
+    let dt = *dt_bits.lock().unwrap();
+    let bytes = std::fs::read(&tmp).unwrap();
+    let _ = std::fs::remove_file(&tmp);
+    (s, dt, bytes)
+}
+
+#[test]
+fn hybrid_endpoints_match_single_space_on_two_ranks() {
+    let _g = lock();
+    if !common::multi_rank_enabled() {
+        return; // multi-rank coverage runs in its own CI step
+    }
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    let base = run_tworank(deck.clone(), base_ovr("host", "stealing", 4, 4), 3, "r2_host");
+    let mut ov = base_ovr("hybrid", "stealing", 4, 4);
+    ov.push("parthenon/exec/hybrid_split=0.0".into());
+    let got = run_tworank(deck.clone(), ov, 3, "r2_hyb0");
+    assert_identical("2-rank split=0.0 vs host", &base, &got);
+
+    if common::artifacts_available() {
+        let base = run_tworank(deck.clone(), base_ovr("device", "stealing", 4, 4), 3, "r2_dev");
+        let mut ov = base_ovr("hybrid", "stealing", 4, 4);
+        ov.push("parthenon/exec/hybrid_split=1.0".into());
+        let got = run_tworank(deck, ov, 3, "r2_hyb1");
+        assert_identical("2-rank split=1.0 vs device", &base, &got);
+    }
+}
+
+#[test]
+fn exec_space_misconfiguration_is_a_structured_error() {
+    let _g = lock();
+    let deck = common::input_deck("kh", [16, 16, 1], [8, 8, 1], "");
+
+    // unknown space value -> Config error from parameter parsing
+    let mut pin = ParameterInput::from_str(&deck).unwrap();
+    pin.apply_override("parthenon/exec/space=warp").unwrap();
+    let err = HydroSim::new(pin, 0, World::new(1))
+        .err()
+        .expect("unknown exec space must be rejected");
+    assert!(
+        matches!(err, Error::Config(_)),
+        "unknown space must be a Config error, got {err:?}"
+    );
+
+    // device|hybrid with a corrupt runtime manifest -> structured error,
+    // not a panic (a MISSING manifest falls back to the native
+    // interpreter, so corruption is the reachable failure here)
+    let dir = std::env::temp_dir().join("parthenon_hybrid_eq_badmanifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), b"{ this is not json").unwrap();
+    std::env::set_var("PARTHENON_ARTIFACTS", &dir);
+    for space in ["device", "hybrid"] {
+        let mut pin = ParameterInput::from_str(&deck).unwrap();
+        pin.apply_override(&format!("parthenon/exec/space={space}"))
+            .unwrap();
+        let err = HydroSim::new(pin, 0, World::new(1))
+            .err()
+            .unwrap_or_else(|| panic!("space={space} with a corrupt manifest must error"));
+        assert!(
+            matches!(err, Error::Runtime(_) | Error::Artifact(_) | Error::Json(_)),
+            "space={space}: corrupt manifest must surface as a structured \
+             runtime/artifact error, got {err:?}"
+        );
+    }
+    std::env::remove_var("PARTHENON_ARTIFACTS");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn auto_hybrid_on_one_worker_degenerates_to_pure_host() {
+    let _g = lock();
+    // Automatic split with nobody to overlap with: every pack must land on
+    // the host, and the run must still be a valid hybrid-space run.
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    let mut sim = common::single_rank_sim(
+        &deck,
+        &[
+            "parthenon/exec/space=hybrid",
+            "parthenon/exec/nworkers=1",
+            "parthenon/exec/pack_size=4",
+        ],
+    );
+    for _ in 0..3 {
+        sim.step().unwrap();
+    }
+    assert_eq!(
+        sim.hybrid_stats.packs_device, 0,
+        "auto split on one worker must not schedule device packs"
+    );
+    assert!(sim.hybrid_stats.packs_host > 0);
+    assert_eq!(sim.hybrid_stats.cross_space_steals, 0);
+}
+
+#[test]
+fn forced_skew_runs_both_spaces_and_steals_across_the_boundary() {
+    let _g = lock();
+    if !common::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // 8 packs forcibly split 4/4 over 2 stealing workers: both spaces
+    // execute in the SAME TaskRegion every stage, and whichever worker
+    // drains its own space's lists first must steal across the boundary.
+    let deck = common::input_deck("kh", [32, 32, 1], [8, 8, 1], "");
+    let mut sim = common::single_rank_sim(
+        &deck,
+        &[
+            "parthenon/exec/space=hybrid",
+            "parthenon/exec/hybrid_split=0.5",
+            "parthenon/exec/sched=stealing",
+            "parthenon/exec/nworkers=2",
+            "parthenon/exec/pack_size=2",
+        ],
+    );
+    for _ in 0..12 {
+        sim.step().unwrap();
+    }
+    let hs = &sim.hybrid_stats;
+    assert!(
+        hs.packs_host > 0 && hs.packs_device > 0,
+        "both spaces must execute packs, got {hs:?}"
+    );
+    assert!(
+        hs.cross_space_steals >= 1,
+        "idle workers must steal across the space boundary, got {hs:?}"
+    );
+    // the single-space paths must leave these counters untouched
+    let mut host_sim = common::single_rank_sim(&deck, &["parthenon/exec/space=host"]);
+    host_sim.step().unwrap();
+    assert!(host_sim.hybrid_stats.is_untouched());
+}
