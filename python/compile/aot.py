@@ -62,6 +62,12 @@ PALLAS_VARIANTS = [
 ]
 PALLAS_QUICK = [("stage", 3, (16, 16, 16), 1)]
 
+# Multilevel boundary kernels (restrict / prolong / fluxcorr): per-neighbor
+# variants like pack1; prolong additionally varies with the fine block's
+# child-parity bits, packed as nbr_idx * 8 + child (model.pack_prolong_nbr).
+REFINE_SHAPES = [(2, (32, 32, 1)), (3, (16, 16, 16))]
+REFINE_QUICK = [(2, (32, 32, 1))]
+
 
 def variant_name(kind, dim, n, nb, impl, nbr_idx=None):
     nx, ny, nz = n
@@ -82,6 +88,15 @@ def variants(quick=False):
         for i in range(len(bufspec.neighbors(dim))):
             out.append(("pack1", dim, n, 1, "jnp", i))
             out.append(("unpack1", dim, n, 1, "jnp", i))
+    for dim, n in (REFINE_QUICK if quick else REFINE_SHAPES):
+        for i in range(len(bufspec.neighbors(dim))):
+            out.append(("restrict", dim, n, 1, "jnp", i))
+            for child in range(1 << dim):
+                out.append(
+                    ("prolong", dim, n, 1, "jnp", model.pack_prolong_nbr(i, child))
+                )
+        for d in range(dim):
+            out.append(("fluxcorr", dim, n, 1, "jnp", d))
     for kind, dim, n, nb in (PALLAS_QUICK if quick else PALLAS_VARIANTS):
         out.append((kind, dim, n, nb, "pallas", None))
     return out
@@ -116,6 +131,9 @@ def bufspec_tables(quick=False):
             "buflen": bufspec.buflen(n, dim),
             "opposite": bufspec.opposite_index(dim),
             "total_shape": list(bufspec.total_shape(n, dim)),
+            # fine->coarse restricted send lengths (multilevel exchange);
+            # the Rust parser tolerates and cross-checks this table too.
+            "restrict_seg_lens": bufspec.restrict_seg_lens(n, dim),
         }
     return list(seen.values())
 

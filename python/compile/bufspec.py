@@ -118,3 +118,113 @@ def total_shape(n, dim, g=NGHOST):
     yt = ny + 2 * g if dim >= 2 else 1
     xt = nx + 2 * g
     return (zt, yt, xt)
+
+
+# ---------------------------------------------------------------------------
+# Multilevel (fine <-> coarse) boundary geometry, mirrored by
+# rust/src/bvals/exchange.rs.  A fine block restricts its boundary data
+# before sending toward a coarser neighbor; a coarse block sends a
+# prolongation source box (its own cells plus one coarse cell of padding,
+# clamped to the block) toward each finer neighbor.  All index math uses
+# floor division, matching Rust's div_euclid on the non-negative logical
+# coordinates of a valid tree.
+# ---------------------------------------------------------------------------
+
+
+def _axis_fine_send_range(o, n, active, g=NGHOST):
+    """Send range toward a COARSER neighbor: 2g deep (restricts to g)."""
+    if not active:
+        return (0, 1)
+    if o == -1:
+        return (g, g + 2 * g)
+    if o == 1:
+        return (g + n - 2 * g, g + n)
+    return (g, g + n)
+
+
+def fine_send_slab(offset, n, dim, g=NGHOST):
+    """Slab a fine block restricts-and-sends toward a coarser neighbor."""
+    o1, o2, o3 = offset
+    nx, ny, nz = n
+    return (
+        _axis_fine_send_range(o1, nx, True, g),
+        _axis_fine_send_range(o2, ny, dim >= 2, g),
+        _axis_fine_send_range(o3, nz, dim >= 3, g),
+    )
+
+
+def restrict_seg_lens(n, dim, nvar=NVAR, g=NGHOST):
+    """Per-neighbor payload lengths of the restricted fine->coarse sends
+    (each active axis of the fine send slab halves: 2g -> g, n -> n//2)."""
+    nx, ny, nz = n
+    out = []
+    for o1, o2, o3 in neighbors(dim):
+        ln = nvar
+        for o, nd, active in ((o1, nx, True), (o2, ny, dim >= 2), (o3, nz, dim >= 3)):
+            if active:
+                ln *= g if o != 0 else nd // 2
+        out.append(ln)
+    return out
+
+
+def coarse_geom_lx(offset, lx):
+    """Logical location of the coarser neighbor at `offset` of a fine block
+    at `lx` (one level up): floor((lx + o) / 2) per axis."""
+    return [(lx[d] + offset[d]) // 2 for d in range(3)]
+
+
+def coarse_prolong_box(offset, flx, n, dim, g=NGHOST):
+    """Geometry of the prolongation source a coarse block sends toward the
+    fine block at `flx` across `offset` (the fine block's offset toward the
+    coarse neighbor).
+
+    Returns ``(local, clo, cdims)``: the slab in the coarse block's local
+    (ghosted) indices, the global coarse index of its origin, and its dims.
+    The box covers every coarse cell owning or adjacent to the fine ghost
+    region (one cell of slope padding), clamped to the coarse interior.
+    """
+    clx = coarse_geom_lx(offset, flx)
+    local = [(0, 1), (0, 1), (0, 1)]
+    clo = [0, 0, 0]
+    cdims = [1, 1, 1]
+    for d in range(dim):
+        nd = n[d]
+        b_lo = flx[d] * nd
+        b_hi = b_lo + nd
+        if offset[d] == -1:
+            flo, fhi = b_lo - g, b_lo
+        elif offset[d] == 1:
+            flo, fhi = b_hi, b_hi + g
+        else:
+            flo, fhi = b_lo, b_hi
+        c0 = flo // 2 - 1
+        c1 = (fhi - 1) // 2 + 2
+        cs = clx[d] * nd
+        ce = cs + nd
+        c0 = max(c0, cs)
+        c1 = min(c1, ce)
+        local[d] = (c0 - cs + g, c1 - cs + g)
+        clo[d] = c0
+        cdims[d] = c1 - c0
+    return tuple(local), clo, cdims
+
+
+def coarse_recv_restriction_box(offset, flx, n, dim, g=NGHOST):
+    """Slab (in the coarse block's local ghosted indices) where a coarse
+    block lands the restricted payload from the fine block at `flx` across
+    `offset` (the fine block's offset toward the coarse neighbor)."""
+    clx = coarse_geom_lx(offset, flx)
+    local = [(0, 1), (0, 1), (0, 1)]
+    for d in range(dim):
+        nd = n[d]
+        b_lo = flx[d] * nd
+        b_hi = b_lo + nd
+        if offset[d] == -1:
+            c0, c1 = b_lo // 2, b_lo // 2 + g
+        elif offset[d] == 1:
+            c0, c1 = b_hi // 2 - g, b_hi // 2
+        else:
+            c0, c1 = b_lo // 2, b_hi // 2
+        cs = clx[d] * nd
+        local[d] = (c0 - cs + g, c1 - cs + g)
+    return tuple(local)

@@ -264,3 +264,104 @@ def fused_step(u, u0, bufs_in, scal, dim, n):
     bufs_out = pack_buffers(u_new, dim, n)
     dt = min_dt(u_new, scal, dim)
     return u_new, bufs_out, dt
+
+
+# ---------------------------------------------------------------------------
+# Multilevel boundary kernels (paper Sec. 3.7/3.8): restriction of
+# fine->coarse boundary sends, slope-limited prolongation of coarse->fine
+# ghost receipts, and tangential face-flux restriction for flux correction.
+# Geometry comes from bufspec, which rust/src/bvals/exchange.rs mirrors.
+# ---------------------------------------------------------------------------
+
+
+def _halve(box, ax):
+    """Average adjacent index pairs along axis `ax` (factor-2 restriction)."""
+    shp = list(box.shape)
+    shp[ax] //= 2
+    shp.insert(ax + 1, 2)
+    return box.reshape(shp).mean(axis=ax + 1)
+
+
+def _minmod(a, b):
+    return jnp.where(a * b > 0.0, jnp.where(jnp.abs(a) < jnp.abs(b), a, b), 0.0)
+
+
+def restrict_send_segment(u, dim, n, nbr_idx):
+    """Restrict the fine-send slab toward coarser neighbor `nbr_idx` into a
+    flat [v, z, y, x] payload (conservative 2^dim averaging)."""
+    o = bufspec.neighbors(dim)[nbr_idx]
+    box = u[_slab_slices(bufspec.fine_send_slab(o, n, dim))]
+    box = _halve(box, 3)
+    if dim >= 2:
+        box = _halve(box, 2)
+    if dim >= 3:
+        box = _halve(box, 1)
+    return box.reshape(-1)
+
+
+def _axis_slopes(c, ax):
+    """Minmod-limited slopes along `ax`, zero at the array edges."""
+    d = jnp.diff(c, axis=ax)
+    zshape = list(c.shape)
+    zshape[ax] = 1
+    z = jnp.zeros(zshape, dtype=c.dtype)
+    dm = jnp.concatenate([z, d], axis=ax)  # c[i] - c[i-1], 0 at lo edge
+    dp = jnp.concatenate([d, z], axis=ax)  # c[i+1] - c[i], 0 at hi edge
+    return _minmod(dm, dp)
+
+
+def prolong_ghost_segment(u, seg, dim, n, nbr_idx, child, g=NGHOST):
+    """Fill the ghost region on side `nbr_idx` from a coarse neighbor's
+    prolongation payload `seg` (slope-limited linear interpolation at fine
+    cell centers, slopes clamped at payload edges).
+
+    `child` packs the fine block's per-axis logical-coordinate parity bits
+    (bit0 = x, bit1 = y, bit2 = z) — the only part of the location the
+    geometry depends on.  Returns the updated u.
+    """
+    o = bufspec.neighbors(dim)[nbr_idx]
+    flx = [(child >> d) & 1 for d in range(3)]
+    _, clo, cdims = bufspec.coarse_prolong_box(o, flx, n, dim, g)
+    cx, cy, cz = cdims
+    coarse = seg.reshape((NVAR, cz, cy, cx))
+    ghost = bufspec.recv_slab(o, n, dim, g)
+
+    # Static per-axis gather indices and fine-center offsets.
+    owner, tsign = [], []
+    for d in range(3):
+        (lo, hi) = ghost[d]
+        active = d == 0 or dim >= d + 1
+        fine_lo = flx[d] * n[d] if active else 0
+        gshift = g if active else 0
+        idx, ts = [], []
+        for i in range(lo, hi):
+            gf = fine_lo + i - gshift
+            idx.append(gf // 2 - clo[d] if active else 0)
+            ts.append(-0.25 if gf % 2 == 0 else 0.25)
+        owner.append(jnp.asarray(idx))
+        tsign.append(jnp.asarray(ts, dtype=u.dtype))
+
+    def gather(c):
+        b = jnp.take(c, owner[2], axis=1)
+        b = jnp.take(b, owner[1], axis=2)
+        return jnp.take(b, owner[0], axis=3)
+
+    val = gather(coarse)
+    fz, fy, fx = val.shape[1:]
+    val = val + tsign[0].reshape(1, 1, 1, fx) * gather(_axis_slopes(coarse, 3))
+    if dim >= 2:
+        val = val + tsign[1].reshape(1, 1, fy, 1) * gather(_axis_slopes(coarse, 2))
+    if dim >= 3:
+        val = val + tsign[2].reshape(1, fz, 1, 1) * gather(_axis_slopes(coarse, 1))
+    return u.at[_slab_slices(ghost)].set(val)
+
+
+def fluxcorr_face_restrict(face, dim):
+    """Restrict one fine boundary-face flux plane (NVAR, T2, T1) onto the
+    coarse face: mean of the 2x2 tangential fine faces (2 in 2D, identity
+    in 1D), flattened [v, t2, t1]."""
+    if dim >= 2:
+        face = _halve(face, 2)
+    if dim >= 3:
+        face = _halve(face, 1)
+    return face.reshape(-1)

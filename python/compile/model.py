@@ -119,6 +119,70 @@ def make_fused(nb, dim, n, impl="jnp"):
     return fn
 
 
+# ---------------------------------------------------------------------------
+# Multilevel boundary kernels (fine<->coarse exchange + flux correction).
+# The `prolong` variant index packs (neighbor, child parity) into one int —
+# `nbr_idx * 8 + child` — so the manifest keeps a single `nbr` field.
+# ---------------------------------------------------------------------------
+
+
+def pack_prolong_nbr(nbr_idx, child):
+    """Encode a prolong variant's (neighbor index, child-parity bits)."""
+    return nbr_idx * 8 + child
+
+
+def unpack_prolong_nbr(code):
+    return code // 8, code % 8
+
+
+def prolong_seg_len(dim, n, nbr_idx, child):
+    """Payload length of the coarse->fine prolongation source box."""
+    o = bufspec.neighbors(dim)[nbr_idx]
+    flx = [(child >> d) & 1 for d in range(3)]
+    _, _, cdims = bufspec.coarse_prolong_box(o, flx, n, dim)
+    return NVAR * cdims[0] * cdims[1] * cdims[2]
+
+
+def fluxcorr_face_shape(dim, n, d):
+    """(NVAR, T2, T1) fine-face plane shape for flux direction d."""
+    t = [a for a in range(dim) if a != d]
+    t1 = n[t[0]] if len(t) >= 1 else 1
+    t2 = n[t[1]] if len(t) >= 2 else 1
+    return (NVAR, t2, t1)
+
+
+def make_restrict(nb, dim, n, nbr_idx):
+    """(u) -> restricted fine->coarse boundary payload for one neighbor."""
+
+    def fn(u):
+        return (jax.vmap(lambda a: ref.restrict_send_segment(a, dim, n, nbr_idx))(u),)
+
+    return fn
+
+
+def make_prolong(nb, dim, n, code):
+    """(u, seg) -> u with one coarse neighbor's ghost region prolongated."""
+    nbr_idx, child = unpack_prolong_nbr(code)
+
+    def fn(u, seg):
+        return (
+            jax.vmap(
+                lambda a, s: ref.prolong_ghost_segment(a, s, dim, n, nbr_idx, child)
+            )(u, seg),
+        )
+
+    return fn
+
+
+def make_fluxcorr(nb, dim, n, d):
+    """(face plane) -> tangentially restricted coarse-face flux payload."""
+
+    def fn(face):
+        return (jax.vmap(lambda a: ref.fluxcorr_face_restrict(a, dim))(face),)
+
+    return fn
+
+
 def arg_specs(kind, nb, dim, n, nbr_idx=None):
     """ShapeDtypeStructs for jax.jit(...).lower of an artifact kind."""
     zyx = _shape_zyx(n, dim)
@@ -130,7 +194,7 @@ def arg_specs(kind, nb, dim, n, nbr_idx=None):
         return (u, u, scal)
     if kind == "dt":
         return (u, scal)
-    if kind == "pack" or kind == "pack1":
+    if kind == "pack" or kind == "pack1" or kind == "restrict":
         return (u,)
     if kind == "unpack":
         return (u, bufs)
@@ -138,6 +202,14 @@ def arg_specs(kind, nb, dim, n, nbr_idx=None):
         seg_len = bufspec.segment_lengths(n, dim)[nbr_idx]
         seg = jax.ShapeDtypeStruct((nb, seg_len), F32)
         return (u, seg)
+    if kind == "prolong":
+        ni, child = unpack_prolong_nbr(nbr_idx)
+        seg_len = prolong_seg_len(dim, n, ni, child)
+        seg = jax.ShapeDtypeStruct((nb, seg_len), F32)
+        return (u, seg)
+    if kind == "fluxcorr":
+        face = jax.ShapeDtypeStruct((nb,) + fluxcorr_face_shape(dim, n, nbr_idx), F32)
+        return (face,)
     if kind == "fused":
         return (u, u, bufs, scal)
     raise ValueError(f"unknown artifact kind {kind!r}")
@@ -157,6 +229,12 @@ def build(kind, nb, dim, n, impl="jnp", nbr_idx=None):
         return make_unpack(nb, dim, n)
     if kind == "unpack1":
         return make_unpack1(nb, dim, n, nbr_idx)
+    if kind == "restrict":
+        return make_restrict(nb, dim, n, nbr_idx)
+    if kind == "prolong":
+        return make_prolong(nb, dim, n, nbr_idx)
+    if kind == "fluxcorr":
+        return make_fluxcorr(nb, dim, n, nbr_idx)
     if kind == "fused":
         return make_fused(nb, dim, n, impl)
     raise ValueError(f"unknown artifact kind {kind!r}")

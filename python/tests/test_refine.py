@@ -1,0 +1,266 @@
+"""Multilevel boundary kernels (restrict / prolong / fluxcorr) vs numpy
+references, plus invariants of the fine<->coarse bufspec geometry that
+rust/src/bvals/exchange.rs mirrors."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import bufspec, model
+from compile.bufspec import NGHOST, NVAR
+from compile.kernels import ref
+
+G = NGHOST
+
+
+def random_u(rng, dim, n):
+    zyx = bufspec.total_shape(n, dim)
+    return rng.normal(0.0, 1.0, (NVAR,) + zyx).astype(np.float32)
+
+
+def children(dim):
+    return range(1 << dim)
+
+
+# ---------------------------------------------------------------------------
+# Geometry invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dim,n", [(1, (8, 1, 1)), (2, (8, 8, 1)), (3, (8, 8, 8))])
+def test_fine_send_slab_even_in_active_axes(dim, n):
+    for o in bufspec.neighbors(dim):
+        slab = bufspec.fine_send_slab(o, n, dim)
+        for d in range(dim):
+            lo, hi = slab[d]
+            assert (hi - lo) % 2 == 0, (o, d)
+
+
+@pytest.mark.parametrize("dim,n", [(2, (8, 8, 1)), (3, (8, 8, 8))])
+def test_restrict_seg_lens_match_recv_boxes(dim, n):
+    """The restricted fine->coarse payload must exactly fill the coarse
+    receive box, for every neighbor offset and child parity."""
+    lens = bufspec.restrict_seg_lens(n, dim)
+    for i, o in enumerate(bufspec.neighbors(dim)):
+        for child in children(dim):
+            flx = [(child >> d) & 1 for d in range(3)]
+            box = bufspec.coarse_recv_restriction_box(o, flx, n, dim)
+            assert NVAR * bufspec.slab_len(box) == lens[i], (o, child)
+
+
+@pytest.mark.parametrize("dim,n", [(2, (8, 8, 1)), (3, (8, 8, 8))])
+def test_prolong_box_consistency(dim, n):
+    """The coarse sender's local slab and the advertised (clo, cdims) agree,
+    the box stays inside the coarse block, and it covers every coarse cell
+    owning a fine ghost cell."""
+    for i, o in enumerate(bufspec.neighbors(dim)):
+        for child in children(dim):
+            flx = [(child >> d) & 1 for d in range(3)]
+            local, clo, cdims = bufspec.coarse_prolong_box(o, flx, n, dim)
+            assert NVAR * bufspec.slab_len(local) == model.prolong_seg_len(
+                dim, n, i, child
+            )
+            ghost = bufspec.recv_slab(o, n, dim)
+            for d in range(dim):
+                lo, hi = local[d]
+                assert hi - lo == cdims[d]
+                # within the coarse block's ghosted array
+                assert G <= lo and hi <= G + n[d]
+                # every fine ghost cell's owner is inside the box
+                for f in range(ghost[d][0], ghost[d][1]):
+                    gf = flx[d] * n[d] + f - G
+                    c = gf // 2 - clo[d]
+                    assert 0 <= c < cdims[d], (o, child, d, f)
+
+
+# ---------------------------------------------------------------------------
+# Restriction kernel
+# ---------------------------------------------------------------------------
+
+def np_restrict(u, dim, n, nbr_idx):
+    o = bufspec.neighbors(dim)[nbr_idx]
+    (x0, x1), (y0, y1), (z0, z1) = bufspec.fine_send_slab(o, n, dim)
+    box = u[:, z0:z1, y0:y1, x0:x1].astype(np.float64)
+    v, z, y, x = box.shape
+    box = box.reshape(v, z, y, x // 2, 2).mean(-1)
+    if dim >= 2:
+        box = box.reshape(v, z, y // 2, 2, x // 2).mean(3)
+    if dim >= 3:
+        box = box.reshape(v, z // 2, 2, box.shape[2], box.shape[3]).mean(2)
+    return box.reshape(-1)
+
+
+@pytest.mark.parametrize("dim,n", [(2, (8, 8, 1)), (3, (8, 8, 8))])
+def test_restrict_matches_numpy(dim, n):
+    rng = np.random.default_rng(7)
+    u = random_u(rng, dim, n)
+    lens = bufspec.restrict_seg_lens(n, dim)
+    for i in range(len(bufspec.neighbors(dim))):
+        got = np.asarray(ref.restrict_send_segment(u, dim, n, i))
+        assert got.shape == (lens[i],)
+        np.testing.assert_allclose(
+            got, np_restrict(u, dim, n, i), rtol=1e-5, atol=1e-6
+        )
+
+
+def test_restrict_constant_preserved():
+    dim, n = 2, (8, 8, 1)
+    zyx = bufspec.total_shape(n, dim)
+    u = np.full((NVAR,) + zyx, 3.25, np.float32)
+    for i in range(len(bufspec.neighbors(dim))):
+        got = np.asarray(ref.restrict_send_segment(u, dim, n, i))
+        np.testing.assert_allclose(got, 3.25, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Prolongation kernel
+# ---------------------------------------------------------------------------
+
+def np_prolong(u, seg, dim, n, nbr_idx, child):
+    """Scalar-loop reference of prolongate_ghost_slab (exchange.rs)."""
+    o = bufspec.neighbors(dim)[nbr_idx]
+    flx = [(child >> d) & 1 for d in range(3)]
+    _, clo, cdims = bufspec.coarse_prolong_box(o, flx, n, dim)
+    cx, cy, cz = cdims
+    coarse = np.asarray(seg, np.float64).reshape(NVAR, cz, cy, cx)
+    (x0, x1), (y0, y1), (z0, z1) = bufspec.recv_slab(o, n, dim)
+    out = u.astype(np.float64).copy()
+
+    def minmod(a, b):
+        if a * b > 0:
+            return a if abs(a) < abs(b) else b
+        return 0.0
+
+    for v in range(NVAR):
+        for k in range(z0, z1):
+            for j in range(y0, y1):
+                for i in range(x0, x1):
+                    gf = [
+                        flx[0] * n[0] + i - G,
+                        flx[1] * n[1] + j - (G if dim >= 2 else 0),
+                        flx[2] * n[2] + k - (G if dim >= 3 else 0),
+                    ]
+                    c = [
+                        gf[0] // 2 - clo[0],
+                        gf[1] // 2 - clo[1] if dim >= 2 else 0,
+                        gf[2] // 2 - clo[2] if dim >= 3 else 0,
+                    ]
+                    center = coarse[v, c[2], c[1], c[0]]
+                    val = center
+                    for d in range(dim):
+                        ext, cc = cdims[d], c[d]
+                        slope = 0.0
+                        if 0 < cc < ext - 1:
+                            idx_m = list(c)
+                            idx_p = list(c)
+                            idx_m[d] -= 1
+                            idx_p[d] += 1
+                            dm = center - coarse[v, idx_m[2], idx_m[1], idx_m[0]]
+                            dp = coarse[v, idx_p[2], idx_p[1], idx_p[0]] - center
+                            slope = minmod(dm, dp)
+                        t = -0.25 if gf[d] % 2 == 0 else 0.25
+                        val += slope * t
+                    out[v, k, j, i] = val
+    return out
+
+
+@pytest.mark.parametrize("dim,n", [(2, (8, 8, 1)), (3, (4, 4, 4))])
+def test_prolong_matches_numpy(dim, n):
+    rng = np.random.default_rng(11)
+    for i in range(len(bufspec.neighbors(dim))):
+        for child in children(dim):
+            u = random_u(rng, dim, n)
+            seg_len = model.prolong_seg_len(dim, n, i, child)
+            seg = rng.normal(0.0, 1.0, seg_len).astype(np.float32)
+            got = np.asarray(
+                ref.prolong_ghost_segment(jnp.asarray(u), seg, dim, n, i, child)
+            )
+            want = np_prolong(u, seg, dim, n, i, child)
+            np.testing.assert_allclose(got, want, rtol=3e-6, atol=1e-6)
+
+
+def test_prolong_constant_exact():
+    dim, n = 2, (8, 8, 1)
+    rng = np.random.default_rng(3)
+    for i in range(len(bufspec.neighbors(dim))):
+        u = random_u(rng, dim, n)
+        seg_len = model.prolong_seg_len(dim, n, i, 0)
+        seg = np.full(seg_len, 1.75, np.float32)
+        got = np.asarray(ref.prolong_ghost_segment(jnp.asarray(u), seg, dim, n, i, 0))
+        o = bufspec.neighbors(dim)[i]
+        (x0, x1), (y0, y1), (z0, z1) = bufspec.recv_slab(o, n, dim)
+        np.testing.assert_allclose(got[:, z0:z1, y0:y1, x0:x1], 1.75, rtol=1e-6)
+        # cells outside the ghost slab are untouched
+        mask = np.ones(got.shape, bool)
+        mask[:, z0:z1, y0:y1, x0:x1] = False
+        np.testing.assert_array_equal(got[mask], u[mask])
+
+
+# ---------------------------------------------------------------------------
+# Flux-correction face restriction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dim,n", [(1, (8, 1, 1)), (2, (8, 8, 1)), (3, (8, 8, 8))])
+def test_fluxcorr_matches_numpy(dim, n):
+    rng = np.random.default_rng(5)
+    for d in range(dim):
+        shape = model.fluxcorr_face_shape(dim, n, d)
+        face = rng.normal(0.0, 1.0, shape).astype(np.float32)
+        got = np.asarray(ref.fluxcorr_face_restrict(face, dim))
+        want = face.astype(np.float64)
+        v, t2, t1 = want.shape
+        if dim >= 2:
+            want = want.reshape(v, t2, t1 // 2, 2).mean(-1)
+        if dim >= 3:
+            want = want.reshape(v, t2 // 2, 2, want.shape[2]).mean(2)
+        np.testing.assert_allclose(got, want.reshape(-1), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# model-layer plumbing (batched builders + specs)
+# ---------------------------------------------------------------------------
+
+def test_model_builders_run_batched():
+    dim, n, nb = 2, (8, 8, 1), 3
+    rng = np.random.default_rng(13)
+    u = np.stack([random_u(rng, dim, n) for _ in range(nb)])
+
+    i = 0  # neighbor (-1, 0, 0)
+    restrict = model.build("restrict", nb, dim, n, nbr_idx=i)
+    (seg,) = restrict(u)
+    assert seg.shape == (nb, bufspec.restrict_seg_lens(n, dim)[i])
+
+    code = model.pack_prolong_nbr(i, 1)
+    prolong = model.build("prolong", nb, dim, n, nbr_idx=code)
+    seg_len = model.prolong_seg_len(dim, n, i, 1)
+    segs = rng.normal(0.0, 1.0, (nb, seg_len)).astype(np.float32)
+    (u2,) = prolong(u, segs)
+    assert u2.shape == u.shape
+
+    fluxcorr = model.build("fluxcorr", nb, dim, n, nbr_idx=0)
+    shape = model.fluxcorr_face_shape(dim, n, 0)
+    face = rng.normal(0.0, 1.0, (nb,) + shape).astype(np.float32)
+    (out,) = fluxcorr(face)
+    assert out.shape == (nb, NVAR * (n[1] // 2))
+
+
+def test_arg_specs_cover_new_kinds():
+    dim, n, nb = 2, (8, 8, 1), 2
+    assert len(model.arg_specs("restrict", nb, dim, n, nbr_idx=0)) == 1
+    code = model.pack_prolong_nbr(3, 2)
+    u, seg = model.arg_specs("prolong", nb, dim, n, nbr_idx=code)
+    assert seg.shape == (nb, model.prolong_seg_len(dim, n, 3, 2))
+    (face,) = model.arg_specs("fluxcorr", nb, dim, n, nbr_idx=1)
+    assert face.shape == (nb,) + model.fluxcorr_face_shape(dim, n, 1)
+
+
+def test_aot_variant_table_includes_refine_kinds():
+    from compile import aot
+
+    vs = aot.variants(quick=True)
+    kinds = {v[0] for v in vs}
+    assert {"restrict", "prolong", "fluxcorr"} <= kinds
+    tables = aot.bufspec_tables(quick=True)
+    for t in tables:
+        assert t["restrict_seg_lens"] == bufspec.restrict_seg_lens(
+            tuple(t["n"]), t["dim"]
+        )

@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from tools import check_test_registration as reg  # noqa: E402
 from tools import perf_compare  # noqa: E402
 from tools.pbin_reader import MAGIC, Snapshot  # noqa: E402
 
@@ -155,3 +156,92 @@ def test_perf_compare_writes_step_summary(tmp_path, monkeypatch):
     # no env -> no-op
     monkeypatch.delenv("GITHUB_STEP_SUMMARY")
     perf_compare.write_step_summary(rows, 0.15, regs, imps)
+
+
+# ---------------------------------------------------------------------------
+# check_test_registration: the CI guard for rust/tests registration
+# ---------------------------------------------------------------------------
+
+
+def make_repo(tmp_path, tests, cargo_entries, ci_tests):
+    """Build a fake repo tree.
+
+    ``tests``: {stem: source}; ``cargo_entries``: [(name, path)];
+    ``ci_tests``: stems listed in the multi-rank cargo test step.
+    """
+    root = tmp_path / "repo"
+    (root / "rust" / "tests").mkdir(parents=True)
+    (root / ".github" / "workflows").mkdir(parents=True)
+    for stem, src in tests.items():
+        (root / "rust" / "tests" / f"{stem}.rs").write_text(src)
+    cargo = "[package]\nname = \"x\"\n"
+    for name, path in cargo_entries:
+        cargo += f'\n[[test]]\nname = "{name}"\npath = "{path}"\n'
+    (root / "Cargo.toml").write_text(cargo)
+    run = " ".join(f"--test {s}" for s in ci_tests)
+    (root / ".github" / "workflows" / "ci.yml").write_text(
+        f"jobs:\n  rust:\n    steps:\n      - run: cargo test -q {run}\n"
+    )
+    return str(root)
+
+
+def test_registration_parses_cargo_and_ci():
+    entries = reg.cargo_test_entries(
+        '[package]\nname = "x"\n\n[[test]]\nname = "a"  # comment\n'
+        'path = "rust/tests/a.rs"\n\n[[bench]]\nname = "nope"\n'
+        'path = "b.rs"\n\n[[test]]\nname = "b"\npath = "rust/tests/b.rs"\n'
+    )
+    assert entries == {"a": "rust/tests/a.rs", "b": "rust/tests/b.rs"}
+    toks = reg.ci_test_tokens("run: cargo test --test a --test b_c\n")
+    assert toks == {"a", "b_c"}
+
+
+def test_registration_ok(tmp_path):
+    root = make_repo(
+        tmp_path,
+        {"a": "fn main() {}", "b": "use common::multi_rank_enabled;"},
+        [("a", "rust/tests/a.rs"), ("b", "rust/tests/b.rs")],
+        ["b"],
+    )
+    assert reg.check(root) == []
+
+
+def test_registration_flags_unregistered_file(tmp_path):
+    root = make_repo(tmp_path, {"new_test": "x"}, [], [])
+    problems = reg.check(root)
+    assert len(problems) == 1 and "no [[test]] entry" in problems[0]
+
+
+def test_registration_flags_guarded_test_missing_from_ci(tmp_path):
+    root = make_repo(
+        tmp_path,
+        {"ranked": "if multi_rank_enabled() {}"},
+        [("ranked", "rust/tests/ranked.rs")],
+        [],
+    )
+    problems = reg.check(root)
+    assert len(problems) == 1 and "multi-rank" in problems[0]
+
+
+def test_registration_flags_stale_entries(tmp_path):
+    root = make_repo(
+        tmp_path,
+        {"a": "x"},
+        [("a", "rust/tests/a.rs"), ("gone", "rust/tests/gone.rs")],
+        ["a", "ghost"],
+    )
+    problems = reg.check(root)
+    assert any("not found" in p for p in problems)
+    assert any("--test ghost" in p for p in problems)
+
+
+def test_registration_cli_on_real_repo():
+    """The actual repository must satisfy its own guard."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..")
+    r = subprocess.run(
+        [sys.executable, os.path.join("python", "tools",
+                                      "check_test_registration.py"), "."],
+        cwd=root,
+        capture_output=True,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr

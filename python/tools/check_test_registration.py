@@ -1,0 +1,126 @@
+#!/usr/bin/env python3
+"""CI guard: Rust integration tests must be fully registered.
+
+Because Cargo.toml uses explicit ``[[test]]`` sections (the test sources
+live under ``rust/tests/``, not the default ``tests/``), a new test file
+that is never registered silently never runs.  Likewise a rank-guarded
+test (one calling ``multi_rank_enabled``) that is missing from the
+ci.yml multi-rank ``cargo test`` step silently runs single-rank only.
+
+Rules enforced:
+
+1. every ``rust/tests/*.rs`` file has a ``[[test]]`` entry in Cargo.toml
+   whose ``name`` is the file stem and whose ``path`` points at the file;
+2. every ``[[test]]`` entry's path exists (no stale registrations);
+3. every test file whose source mentions ``multi_rank_enabled`` appears
+   as a ``--test <name>`` token in .github/workflows/ci.yml;
+4. every ``--test <name>`` token in ci.yml names a registered test.
+
+stdlib-only on purpose: the Rust CI job has no pip dependencies.
+"""
+
+import argparse
+import os
+import re
+import sys
+
+RANK_GUARD = "multi_rank_enabled"
+
+
+def cargo_test_entries(text):
+    """Parse ``[[test]]`` sections out of Cargo.toml -> {name: path}."""
+    entries = {}
+    section = None  # fields of the [[test]] section being read, else None
+    for raw in text.splitlines():
+        line = raw.split("#", 1)[0].strip()
+        if not line:
+            continue
+        if line.startswith("["):
+            if section is not None and "name" in section:
+                entries[section["name"]] = section.get("path", "")
+            section = {} if line == "[[test]]" else None
+            continue
+        if section is not None and "=" in line:
+            key, _, val = line.partition("=")
+            section[key.strip()] = val.strip().strip('"')
+    if section is not None and "name" in section:
+        entries[section["name"]] = section.get("path", "")
+    return entries
+
+
+def ci_test_tokens(text):
+    """Every ``--test <name>`` token appearing in the workflow file."""
+    return set(re.findall(r"--test\s+([A-Za-z0-9_-]+)", text))
+
+
+def is_rank_guarded(path):
+    with open(path) as f:
+        return RANK_GUARD in f.read()
+
+
+def check(repo_root):
+    """Return a list of violation messages (empty == all registered)."""
+    problems = []
+    cargo_path = os.path.join(repo_root, "Cargo.toml")
+    ci_path = os.path.join(repo_root, ".github", "workflows", "ci.yml")
+    tests_dir = os.path.join(repo_root, "rust", "tests")
+
+    with open(cargo_path) as f:
+        entries = cargo_test_entries(f.read())
+    with open(ci_path) as f:
+        ci_tokens = ci_test_tokens(f.read())
+
+    by_path = {p: n for n, p in entries.items()}
+    for fname in sorted(os.listdir(tests_dir)):
+        if not fname.endswith(".rs"):
+            continue
+        stem = fname[: -len(".rs")]
+        rel = f"rust/tests/{fname}"
+        if rel not in by_path:
+            problems.append(
+                f"{rel}: no [[test]] entry in Cargo.toml (add name = "
+                f'"{stem}", path = "{rel}")'
+            )
+            continue
+        if by_path[rel] != stem:
+            problems.append(
+                f"{rel}: [[test]] name {by_path[rel]!r} != file stem {stem!r}"
+            )
+        if is_rank_guarded(os.path.join(tests_dir, fname)) and stem not in ci_tokens:
+            problems.append(
+                f"{rel}: calls {RANK_GUARD} but is missing from the ci.yml "
+                f"multi-rank step (add --test {stem})"
+            )
+
+    for name, path in sorted(entries.items()):
+        if not os.path.exists(os.path.join(repo_root, path)):
+            problems.append(f"Cargo.toml [[test]] {name}: path {path!r} not found")
+
+    for tok in sorted(ci_tokens):
+        if tok not in entries:
+            problems.append(f"ci.yml: --test {tok} is not a registered [[test]]")
+
+    return problems
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "root",
+        nargs="?",
+        default=os.path.join(os.path.dirname(__file__), "..", ".."),
+        help="repository root (default: inferred from this file)",
+    )
+    args = ap.parse_args(argv)
+    problems = check(os.path.abspath(args.root))
+    if problems:
+        print("test registration check FAILED:", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    print("test registration check OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,7 +5,8 @@
 //! efficiency is lower than the uniform case (GPU ~59% for 16x on Summit).
 //!
 //! Here: 32^3 root grid, 8^3 blocks, a centrally refined cube (2 levels),
-//! Host path (multilevel; Device is uniform-only — DESIGN.md), ranks 1..8.
+//! ranks 1..8, then an execution-space sweep on the same multilevel deck
+//! (the Device general-mode path runs multilevel meshes — DESIGN.md §4).
 //! Compare the efficiency decline against fig10's uniform host column: the
 //! multilevel mesh pays extra for flux correction + prolong/restrict,
 //! reproducing the paper's uniform-vs-multilevel gap.
@@ -210,6 +211,60 @@ fn main() {
         eprintln!("  space {space}: {} zc/s", fmt_zcps(run.zcps));
     }
     table_sp.print();
+
+    // -- device-AMR perf lane: execution spaces on the MULTILEVEL deck -------
+    // Same static-refinement mesh as the strong-scaling sweep above, so the
+    // general-mode Device path (per-block launches, restrict/prolong ghost
+    // segments, flux correction across the level seam) is what gets timed.
+    // The hybrid row forces a 50/50 split for true co-execution, with the
+    // HybridStats counters asserted live. `mlspace/{host,device,hybrid}`
+    // rows feed the per-runner perf baseline: a regression on the device
+    // multilevel path fails CI.
+    let mut table_ml = Table::new(&["space", "zc/s", "vs host"]);
+    println!("\nExecution-space comparison (multilevel, 1 rank, pack_size 2, sched=stealing, w={hyb_nw}):");
+    let mut ml_host_zc = 0.0f64;
+    for space in ["host", "device", "hybrid"] {
+        let mut ovs = vec![
+            format!("parthenon/exec/space={space}"),
+            "parthenon/exec/sched=stealing".to_string(),
+            format!("parthenon/exec/nworkers={hyb_nw}"),
+            "parthenon/exec/pack_size=2".to_string(),
+        ];
+        if space == "hybrid" {
+            ovs.push("parthenon/exec/hybrid_split=0.5".to_string());
+        }
+        let ov_refs: Vec<&str> = ovs.iter().map(|s| s.as_str()).collect();
+        let run = measure(&deck, &ov_refs, 1, 2, meas.max(2));
+        if space == "host" {
+            ml_host_zc = run.zcps;
+        }
+        if space == "hybrid" {
+            eprintln!("  mlspace hybrid counters: {:?}", run.hybrid);
+            assert!(
+                run.hybrid.packs_host > 0 && run.hybrid.packs_device > 0,
+                "multilevel hybrid perf lane must execute packs on BOTH spaces: {:?}",
+                run.hybrid
+            );
+        } else {
+            assert!(
+                run.hybrid.is_untouched(),
+                "single-space multilevel {space} run must leave HybridStats untouched: {:?}",
+                run.hybrid
+            );
+        }
+        table_ml.row(vec![
+            space.to_string(),
+            fmt_zcps(run.zcps),
+            format!("{:.2}x", run.zcps / ml_host_zc.max(1e-30)),
+        ]);
+        samples.push(Sample {
+            label: format!("mlspace/{space}"),
+            secs: vec![run.wall / run.cycles as f64],
+            work: run.zcps * run.wall / run.cycles as f64,
+        });
+        eprintln!("  mlspace {space}: {} zc/s", fmt_zcps(run.zcps));
+    }
+    table_ml.print();
 
     write_results(
         "fig11_multilevel_scaling",

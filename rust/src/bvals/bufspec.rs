@@ -79,6 +79,27 @@ pub fn segment_lengths(shape: &IndexShape, nvar: usize) -> Vec<usize> {
         .collect()
 }
 
+/// Per-neighbor payload lengths of the restricted fine->coarse sends
+/// (mirror of python bufspec.restrict_seg_lens): each active axis of the
+/// 2g-deep fine send slab halves under restriction, so pinched axes carry
+/// g coarse cells and tangential axes n/2.
+pub fn restrict_segment_lengths(shape: &IndexShape, nvar: usize) -> Vec<usize> {
+    let g = NGHOST;
+    crate::mesh::tree::neighbor_offsets(shape.dim)
+        .into_iter()
+        .map(|o| {
+            let mut ln = nvar;
+            for d in 0..3 {
+                let active = d == 0 || shape.dim >= d + 1;
+                if active {
+                    ln *= if o[d] != 0 { g } else { shape.n[d] / 2 };
+                }
+            }
+            ln
+        })
+        .collect()
+}
+
 /// Offsets of each segment in the flat per-block buffer, plus total length.
 pub fn segment_offsets(shape: &IndexShape, nvar: usize) -> (Vec<usize>, usize) {
     let lens = segment_lengths(shape, nvar);
@@ -275,6 +296,26 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn restrict_lengths_known_values() {
+        // matches python/tests/test_refine.py geometry invariants
+        let s = IndexShape::new(2, [8, 8, 1]);
+        for (o, l) in neighbor_offsets(2)
+            .iter()
+            .zip(restrict_segment_lengths(&s, 5))
+        {
+            let ex = 5
+                * (if o[0] != 0 { 2 } else { 4 })
+                * (if o[1] != 0 { 2 } else { 4 });
+            assert_eq!(l, ex, "offset {o:?}");
+        }
+        let s3 = IndexShape::new(3, [16, 16, 16]);
+        let lens = restrict_segment_lengths(&s3, 5);
+        assert_eq!(lens.len(), 26);
+        // x-face: g * (n/2)^2
+        assert_eq!(lens[neighbor_offsets(3).iter().position(|o| *o == [-1, 0, 0]).unwrap()], 5 * 2 * 8 * 8);
     }
 
     #[test]

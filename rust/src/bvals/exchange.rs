@@ -238,20 +238,221 @@ fn insert_box(arr: &mut [Real], shape: &IndexShape, nvar: usize, slab: &Slab, sr
     debug_assert_eq!(r, src.len());
 }
 
-/// A receive we are waiting for.
-enum Pending {
-    /// Same-level slab into the ghost region.
-    Same { block: usize, slab: Slab },
-    /// Restricted data from a finer neighbor into a sub-box.
-    FromFine { block: usize, slab: Slab },
-    /// Coarse box to prolongate into a ghost slab.
-    FromCoarse {
-        block: usize,
+/// How to build the payload of one outbound boundary segment from a
+/// block's [nvar, Z, Y, X] array. Shared by the host send path and the
+/// Device boundary tasks so both produce byte-identical messages.
+pub(crate) enum SendOp {
+    /// Same-level slab copied verbatim.
+    Same(Slab),
+    /// Fine->coarse: restrict the 2g-deep boundary slab before sending.
+    Restrict(Slab),
+    /// Coarse->fine prolongation source box copied verbatim.
+    Prolong(Slab),
+}
+
+/// One outbound boundary segment: destination block, wire tag, payload op.
+pub(crate) struct SendSpec {
+    pub ngid: usize,
+    pub tag: u64,
+    pub op: SendOp,
+}
+
+/// Enumerate every outbound segment of the block at `loc` — the single
+/// source of truth for send geometry + tags (the host path iterates it
+/// inline; the Device path snapshots it per block into its routes).
+pub(crate) fn send_specs_for(t: &ExchTopo, loc: &LogicalLocation) -> Vec<SendSpec> {
+    let shape = t.shape;
+    let mut out = Vec::new();
+    let mut toward_finer = false;
+    for nb in t.tree.find_neighbors(loc) {
+        let opp = opposite_offset(nb.offset);
+        match &nb.kind {
+            NeighborKind::Physical => {}
+            NeighborKind::SameLevel(nloc) => {
+                let ngid = t.tree.gid_of(nloc).unwrap();
+                let slot = offset_index(t.dim, opp);
+                out.push(SendSpec {
+                    ngid,
+                    tag: tags::bval_tag(
+                        ngid,
+                        CLASS_SAME | (slot << 3) | child_code(loc),
+                    ),
+                    op: SendOp::Same(bufspec::send_slab(nb.offset, &shape)),
+                });
+            }
+            NeighborKind::Coarser(cloc) => {
+                // restrict and send; tagged by the direction we sent
+                // through (= -our offset) + our child code
+                let ngid = t.tree.gid_of(cloc).unwrap();
+                let slot = offset_index(t.dim, opp);
+                out.push(SendSpec {
+                    ngid,
+                    tag: tags::bval_tag(
+                        ngid,
+                        CLASS_RESTRICT | (slot << 3) | child_code(loc),
+                    ),
+                    op: SendOp::Restrict(fine_send_slab(nb.offset, &shape)),
+                });
+            }
+            NeighborKind::Finer(_) => {
+                toward_finer = true;
+            }
+        }
+    }
+    if toward_finer {
+        // prolongation boxes: one per (fine block, fine offset) pair
+        for (floc, off, fslot) in pairs_toward_coarse(t, loc) {
+            let ngid = t.tree.gid_of(&floc).unwrap();
+            let (local, _clo, _dims) = coarse_prolong_box(off, &floc, &shape);
+            out.push(SendSpec {
+                ngid,
+                tag: tags::bval_tag(
+                    ngid,
+                    CLASS_PROLONG | (fslot << 3) | child_code(loc),
+                ),
+                op: SendOp::Prolong(local),
+            });
+        }
+    }
+    out
+}
+
+/// Build the wire payload of one outbound segment from a block's array.
+pub(crate) fn send_payload(
+    data: &[Real],
+    shape: &IndexShape,
+    nvar: usize,
+    op: &SendOp,
+) -> Vec<Real> {
+    match op {
+        SendOp::Same(slab) | SendOp::Prolong(slab) => {
+            extract_box(data, shape, nvar, slab)
+        }
+        SendOp::Restrict(slab) => {
+            let mut payload = Vec::new();
+            prolong::restrict_slab(data, shape, nvar, slab, &mut payload);
+            payload
+        }
+    }
+}
+
+/// How to land one inbound boundary segment in a block's array.
+pub(crate) enum RecvOp {
+    /// Dense slab written verbatim (same-level ghost or restricted
+    /// fine->coarse sub-box).
+    Insert(Slab),
+    /// Coarse source box to prolongate into a ghost slab.
+    Prolong {
         ghost: Slab,
         clo: [i64; 3],
         cdims: [usize; 3],
         fine_lo: [i64; 3],
     },
+}
+
+/// One inbound segment: source rank, wire tag, landing op.
+pub(crate) struct RecvSpec {
+    pub src_rank: usize,
+    pub tag: u64,
+    pub op: RecvOp,
+}
+
+/// Enumerate every inbound segment the block `(gid, loc)` expects — the
+/// receive-side mirror of [`send_specs_for`].
+pub(crate) fn recv_specs_for(
+    t: &ExchTopo,
+    gid: usize,
+    loc: &LogicalLocation,
+) -> Vec<RecvSpec> {
+    let shape = t.shape;
+    let mut out = Vec::new();
+    let mut has_finer = false;
+    for nb in t.tree.find_neighbors(loc) {
+        let my_slot = nb.nbr_index;
+        match &nb.kind {
+            NeighborKind::Physical => {}
+            NeighborKind::SameLevel(nloc) => {
+                let ngid = t.tree.gid_of(nloc).unwrap();
+                out.push(RecvSpec {
+                    src_rank: t.rank_of(ngid),
+                    tag: tags::bval_tag(
+                        gid,
+                        CLASS_SAME | (my_slot << 3) | child_code(nloc),
+                    ),
+                    op: RecvOp::Insert(bufspec::recv_slab(nb.offset, &shape)),
+                });
+            }
+            NeighborKind::Coarser(cloc) => {
+                // we are the fine side: expect a prolongation box
+                let (_local, clo, cdims) = coarse_prolong_box(nb.offset, loc, &shape);
+                let fine_lo = [
+                    loc.lx[0] * shape.n[0] as i64,
+                    loc.lx[1] * shape.n[1] as i64,
+                    loc.lx[2] * shape.n[2] as i64,
+                ];
+                let ngid = t.tree.gid_of(cloc).unwrap();
+                out.push(RecvSpec {
+                    src_rank: t.rank_of(ngid),
+                    tag: tags::bval_tag(
+                        gid,
+                        CLASS_PROLONG | (my_slot << 3) | child_code(cloc),
+                    ),
+                    op: RecvOp::Prolong {
+                        ghost: bufspec::recv_slab(nb.offset, &shape),
+                        clo,
+                        cdims,
+                        fine_lo,
+                    },
+                });
+            }
+            NeighborKind::Finer(_) => {
+                has_finer = true;
+            }
+        }
+    }
+    if has_finer {
+        // we are the coarse side: expect one restricted box per
+        // (fine block, fine offset) pair pointing at us
+        for (floc, off, _fslot) in pairs_toward_coarse(t, loc) {
+            let slab = coarse_recv_restriction_box(off, &floc, &shape);
+            // sender tags with the direction it sent through = -off
+            let send_dir = offset_index(t.dim, opposite_offset(off));
+            let ngid = t.tree.gid_of(&floc).unwrap();
+            out.push(RecvSpec {
+                src_rank: t.rank_of(ngid),
+                tag: tags::bval_tag(
+                    gid,
+                    CLASS_RESTRICT | (send_dir << 3) | child_code(&floc),
+                ),
+                op: RecvOp::Insert(slab),
+            });
+        }
+    }
+    out
+}
+
+/// Land one received segment in a block's array.
+pub(crate) fn apply_recv_op(
+    arr: &mut [Real],
+    shape: &IndexShape,
+    nvar: usize,
+    op: &RecvOp,
+    data: &[Real],
+) {
+    match op {
+        RecvOp::Insert(slab) => insert_box(arr, shape, nvar, slab, data),
+        RecvOp::Prolong { ghost, clo, cdims, fine_lo } => {
+            prolong::prolongate_ghost_slab(
+                arr, shape, nvar, ghost, *fine_lo, data, *clo, *cdims,
+            );
+        }
+    }
+}
+
+/// A receive we are waiting for.
+struct Pending {
+    block: usize,
+    op: RecvOp,
 }
 
 /// Outstanding receives for one exchange phase of one variable.
@@ -353,65 +554,13 @@ fn post_sends_filtered(
         let arr = b.data.get(var)?;
         let nvar = arr.dims()[0];
         let data = arr.as_slice();
-        let mut sent_to_finer = false;
-        for nb in t.tree.find_neighbors(&b.loc) {
-            let opp = opposite_offset(nb.offset);
-            match &nb.kind {
-                NeighborKind::Physical => {}
-                NeighborKind::SameLevel(nloc) => {
-                    let ngid = t.tree.gid_of(nloc).unwrap();
-                    if !wanted(ngid) {
-                        continue;
-                    }
-                    let slab = bufspec::send_slab(nb.offset, &shape);
-                    let payload = extract_box(data, &shape, nvar, &slab);
-                    let slot = offset_index(t.dim, opp);
-                    let tag = tags::bval_tag(
-                        ngid,
-                        CLASS_SAME | (slot << 3) | child_code(&b.loc),
-                    );
-                    comm.isend(t.rank_of(ngid), tag, Payload::F32(payload));
-                    nsent += 1;
-                }
-                NeighborKind::Coarser(cloc) => {
-                    // restrict and send; tagged by the direction we sent
-                    // through (= -our offset) + our child code
-                    let ngid = t.tree.gid_of(cloc).unwrap();
-                    if !wanted(ngid) {
-                        continue;
-                    }
-                    let slab = fine_send_slab(nb.offset, &shape);
-                    let mut payload = Vec::new();
-                    prolong::restrict_slab(data, &shape, nvar, &slab, &mut payload);
-                    let slot = offset_index(t.dim, opp);
-                    let tag = tags::bval_tag(
-                        ngid,
-                        CLASS_RESTRICT | (slot << 3) | child_code(&b.loc),
-                    );
-                    comm.isend(t.rank_of(ngid), tag, Payload::F32(payload));
-                    nsent += 1;
-                }
-                NeighborKind::Finer(_) => {
-                    sent_to_finer = true;
-                }
+        for spec in send_specs_for(t, &b.loc) {
+            if !wanted(spec.ngid) {
+                continue;
             }
-        }
-        if sent_to_finer {
-            // prolongation boxes: one per (fine block, fine offset) pair
-            for (floc, off, fslot) in pairs_toward_coarse(t, &b.loc) {
-                let ngid = t.tree.gid_of(&floc).unwrap();
-                if !wanted(ngid) {
-                    continue;
-                }
-                let (local, _clo, _dims) = coarse_prolong_box(off, &floc, &shape);
-                let payload = extract_box(data, &shape, nvar, &local);
-                let tag = tags::bval_tag(
-                    ngid,
-                    CLASS_PROLONG | (fslot << 3) | child_code(&b.loc),
-                );
-                comm.isend(t.rank_of(ngid), tag, Payload::F32(payload));
-                nsent += 1;
-            }
+            let payload = send_payload(data, &shape, nvar, &spec.op);
+            comm.isend(t.rank_of(spec.ngid), spec.tag, Payload::F32(payload));
+            nsent += 1;
         }
     }
     Ok(nsent)
@@ -457,73 +606,15 @@ pub fn post_receives_blocks(
     blocks: &[MeshBlock],
     base: usize,
 ) -> ExchangeState {
-    let shape = t.shape;
     let mut items = Vec::new();
     for (i, b) in blocks.iter().enumerate() {
         let bi = base + i;
-        let mut has_finer = false;
-        for nb in t.tree.find_neighbors(&b.loc) {
-            let my_slot = nb.nbr_index;
-            match &nb.kind {
-                NeighborKind::Physical => {}
-                NeighborKind::SameLevel(nloc) => {
-                    let slab = bufspec::recv_slab(nb.offset, &shape);
-                    let tag = tags::bval_tag(
-                        b.gid,
-                        CLASS_SAME | (my_slot << 3) | child_code(nloc),
-                    );
-                    let ngid = t.tree.gid_of(nloc).unwrap();
-                    items.push((
-                        Pending::Same { block: bi, slab },
-                        t.rank_of(ngid),
-                        tag,
-                    ));
-                }
-                NeighborKind::Coarser(cloc) => {
-                    // we are the fine side: expect a prolongation box
-                    let (_local, clo, cdims) =
-                        coarse_prolong_box(nb.offset, &b.loc, &shape);
-                    let ghost = bufspec::recv_slab(nb.offset, &shape);
-                    let fine_lo = [
-                        b.loc.lx[0] * shape.n[0] as i64,
-                        b.loc.lx[1] * shape.n[1] as i64,
-                        b.loc.lx[2] * shape.n[2] as i64,
-                    ];
-                    let tag = tags::bval_tag(
-                        b.gid,
-                        CLASS_PROLONG | (my_slot << 3) | child_code(cloc),
-                    );
-                    let ngid = t.tree.gid_of(cloc).unwrap();
-                    items.push((
-                        Pending::FromCoarse { block: bi, ghost, clo, cdims, fine_lo },
-                        t.rank_of(ngid),
-                        tag,
-                    ));
-                }
-                NeighborKind::Finer(_) => {
-                    has_finer = true;
-                }
-            }
-        }
-        if has_finer {
-            // we are the coarse side: expect one restricted box per
-            // (fine block, fine offset) pair pointing at us
-            for (floc, off, fslot) in pairs_toward_coarse(t, &b.loc) {
-                let slab = coarse_recv_restriction_box(off, &floc, &shape);
-                // sender tags with the direction it sent through = -off
-                let send_dir = offset_index(t.dim, opposite_offset(off));
-                let _ = fslot;
-                let tag = tags::bval_tag(
-                    b.gid,
-                    CLASS_RESTRICT | (send_dir << 3) | child_code(&floc),
-                );
-                let ngid = t.tree.gid_of(&floc).unwrap();
-                items.push((
-                    Pending::FromFine { block: bi, slab },
-                    t.rank_of(ngid),
-                    tag,
-                ));
-            }
+        for spec in recv_specs_for(t, b.gid, &b.loc) {
+            items.push((
+                Pending { block: bi, op: spec.op },
+                spec.src_rank,
+                spec.tag,
+            ));
         }
     }
     let done = vec![false; items.len()];
@@ -563,30 +654,38 @@ pub fn poll_receives_blocks(
             continue;
         };
         let data = payload.into_f32()?;
-        match pending {
-            Pending::Same { block, slab } | Pending::FromFine { block, slab } => {
-                let arr = blocks[*block - base].data.get_mut(var)?;
-                let nvar = arr.dims()[0];
-                insert_box(arr.as_mut_slice(), shape, nvar, slab, &data);
-            }
-            Pending::FromCoarse { block, ghost, clo, cdims, fine_lo } => {
-                let arr = blocks[*block - base].data.get_mut(var)?;
-                let nvar = arr.dims()[0];
-                prolong::prolongate_ghost_slab(
-                    arr.as_mut_slice(),
-                    shape,
-                    nvar,
-                    ghost,
-                    *fine_lo,
-                    &data,
-                    *clo,
-                    *cdims,
-                );
-            }
-        }
+        let arr = blocks[pending.block - base].data.get_mut(var)?;
+        let nvar = arr.dims()[0];
+        apply_recv_op(arr.as_mut_slice(), shape, nvar, &pending.op, &data);
         state.done[idx] = true;
     }
     Ok(all)
+}
+
+/// The non-periodic physical boundaries touching the block at `loc`, as
+/// the per-side table [`physical::apply_physical_bcs`] consumes; `None`
+/// when the block touches no physical boundary. Shared by the host BC
+/// sweep and the Device routes so both fill the same ghost cells.
+pub(crate) fn block_bc_table(
+    cfg_bcs: [[BoundaryCondition; 2]; 3],
+    nrb: [i64; 3],
+    dim: usize,
+    loc: &LogicalLocation,
+) -> Option<[[Option<BoundaryCondition>; 2]; 3]> {
+    let mut bcs: [[Option<BoundaryCondition>; 2]; 3] = [[None; 2]; 3];
+    let mut any = false;
+    for d in 0..dim {
+        let w = nrb[d] << loc.level;
+        if loc.lx[d] == 0 && cfg_bcs[d][0] != BoundaryCondition::Periodic {
+            bcs[d][0] = Some(cfg_bcs[d][0]);
+            any = true;
+        }
+        if loc.lx[d] == w - 1 && cfg_bcs[d][1] != BoundaryCondition::Periodic {
+            bcs[d][1] = Some(cfg_bcs[d][1]);
+            any = true;
+        }
+    }
+    any.then_some(bcs)
 }
 
 /// Apply physical BCs on domain edges (after all receives landed).
@@ -602,22 +701,9 @@ pub fn apply_block_physical_bcs(
     let locs: Vec<(usize, LogicalLocation)> =
         mesh.blocks.iter().enumerate().map(|(i, b)| (i, b.loc)).collect();
     for (bi, loc) in locs {
-        let mut bcs: [[Option<BoundaryCondition>; 2]; 3] = [[None; 2]; 3];
-        let mut any = false;
-        for d in 0..dim {
-            let w = nrb[d] << loc.level;
-            if loc.lx[d] == 0 && cfg_bcs[d][0] != BoundaryCondition::Periodic {
-                bcs[d][0] = Some(cfg_bcs[d][0]);
-                any = true;
-            }
-            if loc.lx[d] == w - 1 && cfg_bcs[d][1] != BoundaryCondition::Periodic {
-                bcs[d][1] = Some(cfg_bcs[d][1]);
-                any = true;
-            }
-        }
-        if !any {
+        let Some(bcs) = block_bc_table(cfg_bcs, nrb, dim, &loc) else {
             continue;
-        }
+        };
         let arr = mesh.blocks[bi].data.get_mut(var)?;
         let nvar = arr.dims()[0];
         super::physical::apply_physical_bcs(

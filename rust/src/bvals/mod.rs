@@ -14,6 +14,13 @@ pub use exchange::{
     post_sends_blocks, post_sends_range, post_sends_toward, ExchTopo, ExchangeState,
     PackExchange, PackStrategy,
 };
+// Boundary-segment specs shared with the Device execution space (crate
+// internal: the Device routes snapshot them so its messages are
+// byte-identical to the host exchange by construction).
+pub(crate) use exchange::{
+    apply_recv_op, block_bc_table, recv_specs_for, send_payload, send_specs_for,
+    RecvOp, RecvSpec, SendOp, SendSpec,
+};
 pub use physical::apply_physical_bcs;
 pub use prolong::{
     prolongate_child_from_parent, prolongate_ghost_slab, restrict_block_into_parent,

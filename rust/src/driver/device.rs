@@ -22,10 +22,17 @@
 //! Device lists exactly like the Host lists, and `overlap = phased` runs
 //! the same lists serially (the bitwise oracle over the same task units).
 //!
-//! Requires a uniform, fully periodic mesh — the configuration of every
-//! performance experiment in the paper. AMR/multilevel runs use the Host
-//! path (see DESIGN.md §limitations); `space=hybrid` probes the same
-//! capability and degenerates to all-host when it fails.
+//! Uniform fully-periodic meshes run the FAST path above (flat per-slot
+//! routing tables + the Fig. 8 launch menu). Every other mesh —
+//! multilevel SMR/AMR, non-periodic physical boundaries — runs the
+//! GENERAL path: per-block `flux`/`combine` launches split at the flux
+//! seam so flux corrections from fine neighbors interleave exactly like
+//! the Host list, and boundary routing plays back a per-block snapshot of
+//! the shared `bvals::exchange` spec layer (same-level copies,
+//! fine→coarse restriction, coarse→fine prolongation, physical-BC
+//! tables), so every wire payload, tag and ghost fill is byte-identical
+//! to the Host exchange by construction. `space=device|hybrid` therefore
+//! runs every mesh the Host path runs.
 //!
 //! Per-pack launches are timed and spread over the pack's blocks into the
 //! cost EWMA (`drain_block_secs`), so the load balancer — and, under
@@ -35,13 +42,13 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Instant;
 
-use super::{DtColl, HydroSim, SpaceCtx};
-use crate::bvals::{bufspec, PackStrategy};
+use super::{DtColl, FluxRecv, HydroSim, SpaceCtx};
+use crate::bvals::{bufspec, ExchTopo, PackStrategy, RecvOp, SendOp};
 use crate::comm::{tags, Comm, Payload};
 use crate::error::{Error, Result};
-use crate::hydro::native::StageCoeffs;
+use crate::hydro::native::{FluxArrays, StageCoeffs};
 use crate::hydro::CONS;
-use crate::mesh::{IndexShape, Mesh, NeighborKind};
+use crate::mesh::{BoundaryCondition, IndexShape, LogicalLocation, Mesh, NeighborKind};
 use crate::mesh_data::{MeshData, PackDesc, PackStaging};
 use crate::runtime::{default_artifact_dir, ArtifactKey, Runtime, ScalArgs};
 use crate::tasks::{TaskId, TaskList, TaskStatus, NONE};
@@ -71,6 +78,83 @@ impl NbrEntry {
     }
 }
 
+/// One outbound boundary segment of the GENERAL routing snapshot
+/// (multilevel / non-periodic meshes): destination rank + wire tag + the
+/// payload op from the spec layer shared with the host exchange.
+#[derive(Debug, Clone)]
+struct GenSend {
+    rank: usize,
+    tag: u64,
+    op: SendOp,
+}
+
+/// One inbound boundary segment of the general snapshot.
+#[derive(Debug, Clone)]
+struct GenRecv {
+    src: usize,
+    tag: u64,
+    op: RecvOp,
+}
+
+/// Everything the general per-block task bodies need about ONE block,
+/// snapshotted at route-build time so stage tasks share `&DeviceState`
+/// without borrowing the mesh.
+#[derive(Debug, Clone)]
+struct GenBlock {
+    loc: LogicalLocation,
+    dx: [Real; 3],
+    /// Physical-BC table (`None` when every face of this block is interior
+    /// or periodic — the common case away from domain edges).
+    bcs: Option<[[Option<BoundaryCondition>; 2]; 3]>,
+    sends: Vec<GenSend>,
+    recvs: Vec<GenRecv>,
+}
+
+/// General-mode routing snapshot, indexed by flat local block id.
+#[derive(Debug, Clone)]
+struct GenRoutes {
+    blocks: Vec<GenBlock>,
+}
+
+/// Snapshot the general routing of every local block: outbound/inbound
+/// boundary specs from the shared `bvals::exchange` spec layer (ranks
+/// resolved now, so stage tasks never touch the mesh), the physical-BC
+/// table, and the block geometry the per-block launches need.
+fn build_gen_routes(mesh: &Mesh) -> GenRoutes {
+    let topo = ExchTopo::of(mesh);
+    let blocks = mesh
+        .blocks
+        .iter()
+        .map(|b| {
+            let sends = crate::bvals::send_specs_for(&topo, &b.loc)
+                .into_iter()
+                .map(|s| GenSend { rank: mesh.rank_of(s.ngid), tag: s.tag, op: s.op })
+                .collect();
+            let recvs = crate::bvals::recv_specs_for(&topo, b.gid, &b.loc)
+                .into_iter()
+                .map(|r| GenRecv { src: r.src_rank, tag: r.tag, op: r.op })
+                .collect();
+            GenBlock {
+                loc: b.loc,
+                dx: [
+                    b.coords.dx[0] as Real,
+                    b.coords.dx[1] as Real,
+                    b.coords.dx[2] as Real,
+                ],
+                bcs: crate::bvals::block_bc_table(
+                    mesh.cfg.bcs,
+                    mesh.cfg.nrb,
+                    mesh.cfg.dim,
+                    &b.loc,
+                ),
+                sends,
+                recvs,
+            }
+        })
+        .collect();
+    GenRoutes { blocks }
+}
+
 /// Per-rank device state: runtime + routing; staging lives in [`MeshData`].
 pub struct DeviceState {
     pub rt: Runtime,
@@ -79,8 +163,17 @@ pub struct DeviceState {
     impl_: String,
     /// Pack sizes the plan may use (fused artifact variants, ascending).
     plan_sizes: Vec<usize>,
-    /// Per local block (flat order): routing per neighbor slot.
+    /// Per local block (flat order): routing per neighbor slot. Empty in
+    /// general mode, which routes through `gen` instead.
     routes: Vec<Vec<NbrEntry>>,
+    /// General-mode routing snapshot (multilevel / non-periodic meshes):
+    /// per-block send/recv specs + physical-BC tables + geometry. `Some`
+    /// selects the general per-block task list; `None` the fast path.
+    gen: Option<GenRoutes>,
+    /// General-mode per-block flux arrays (flux corrections from finer
+    /// neighbors land here between the flux and combine launches). Empty
+    /// on the fast path, whose fused `stage` kernel never exposes fluxes.
+    pub(crate) gen_flux: Vec<FluxArrays>,
     seg_offs: Vec<usize>,
     seg_lens: Vec<usize>,
     buflen: usize,
@@ -115,16 +208,11 @@ impl DeviceState {
     /// pack sizes (the one pack partition both paths share).
     pub fn new(sim: &mut HydroSim) -> Result<DeviceState> {
         let mesh = &sim.mesh;
-        if mesh.tree.max_level() != 0 {
-            return Err(Error::Runtime(
-                "Device exec space requires a uniform mesh (use Host for AMR)".into(),
-            ));
-        }
-        if mesh.cfg.periodic_flags()[..mesh.cfg.dim].iter().any(|p| !p) {
-            return Err(Error::Runtime(
-                "Device exec space requires fully periodic boundaries".into(),
-            ));
-        }
+        // Uniform fully-periodic meshes take the fast path (flat routing
+        // tables + fused stage); everything else snapshots the general
+        // per-block spec layer shared with the host exchange.
+        let general = mesh.tree.max_level() != 0
+            || mesh.cfg.periodic_flags()[..mesh.cfg.dim].iter().any(|p| !p);
         let shape = mesh.cfg.index_shape();
         let rt = Runtime::new(default_artifact_dir())?;
 
@@ -157,7 +245,16 @@ impl DeviceState {
         let seg_lens = bufspec::segment_lengths(&shape, NHYDRO);
 
         let nlocal = mesh.blocks.len();
-        let routes = Self::build_routes(mesh)?;
+        let (routes, gen) = if general {
+            (Vec::new(), Some(build_gen_routes(mesh)))
+        } else {
+            (Self::build_routes(mesh)?, None)
+        };
+        let gen_flux = if general {
+            vec![FluxArrays::new(&shape); nlocal]
+        } else {
+            Vec::new()
+        };
 
         let comm = sim.world.comm(mesh.my_rank, tags::COMM_BVALS_BASE + 1);
         let mut dev = DeviceState {
@@ -167,6 +264,8 @@ impl DeviceState {
             impl_: sim.sp.impl_.clone(),
             plan_sizes,
             routes,
+            gen,
+            gen_flux,
             seg_offs,
             seg_lens,
             buflen,
@@ -186,10 +285,19 @@ impl DeviceState {
         sim.mesh_data
             .rebuild_preserving(&sim.mesh, Some(&dev.plan_sizes));
         sim.mesh_data.gather_dirty(&sim.mesh, CONS)?;
-        // Bootstrap: fill bufs_in once (pack + route) and compute dt.
-        let scal0 = dev.scal(StageCoeffs { g0: 0.0, g1: 1.0, beta: 1.0 }, 0.0, &sim.mesh);
         let all: Vec<usize> = (0..sim.mesh_data.npacks()).collect();
-        dev.bootstrap(&mut sim.mesh_data, scal0, &all)?;
+        if dev.gen.is_some() {
+            // General bootstrap: the staged arrays arrive ghost-current
+            // from the containers (every creation path runs the blocking
+            // exchange + BCs before gather), so no routing round is
+            // needed — only the per-block dt launches.
+            dev.refresh_dts_general(&mut sim.mesh_data, &all)?;
+        } else {
+            // Bootstrap: fill bufs_in once (pack + route) and compute dt.
+            let scal0 =
+                dev.scal(StageCoeffs { g0: 0.0, g1: 1.0, beta: 1.0 }, 0.0, &sim.mesh);
+            dev.bootstrap(&mut sim.mesh_data, scal0, &all)?;
+        }
         Ok(dev)
     }
 
@@ -201,7 +309,11 @@ impl DeviceState {
         let mut entries = Vec::new();
         for nb in mesh.tree.find_neighbors(&b.loc) {
             let NeighborKind::SameLevel(nloc) = &nb.kind else {
-                return Err(Error::Runtime("device mesh must be uniform".into()));
+                return Err(Error::Runtime(
+                    "device fast path requires a uniform mesh (general mode \
+                     routes multilevel meshes)"
+                        .into(),
+                ));
             };
             let ngid = mesh.tree.gid_of(nloc).unwrap();
             let my_child = child_code_of(&b.loc);
@@ -223,6 +335,42 @@ impl DeviceState {
         mesh.blocks.iter().map(|b| Self::block_routes(mesh, b)).collect()
     }
 
+    /// True when this engine runs the GENERAL per-block path (multilevel
+    /// or non-periodic mesh) instead of the uniform fast path.
+    pub(crate) fn is_general(&self) -> bool {
+        self.gen.is_some()
+    }
+
+    /// Recompute `last_dts` for the given packs with per-block dt launches
+    /// (general mode's analog of the fast path's bootstrap/repack rounds;
+    /// there are no resident boundary buffers to refill — general ghosts
+    /// live in the staged arrays and are current after every stage).
+    fn refresh_dts_general(&mut self, md: &mut MeshData, packs: &[usize]) -> Result<()> {
+        let kdt = self.key("dt", 1);
+        let ne = self.block_elems;
+        let co = StageCoeffs { g0: 0.0, g1: 1.0, beta: 1.0 };
+        let (descs, staging) = md.parts_mut();
+        for &pi in packs {
+            let d = &descs[pi];
+            let p = &staging[pi];
+            for bi in 0..d.nb {
+                let flat = d.first + bi;
+                let dx = self.gen.as_ref().expect("general routes").blocks[flat].dx;
+                let scal = self.scal_from_shape(co, 0.0, dx);
+                let dts = self.rt.dt(&kdt, &p.u[bi * ne..(bi + 1) * ne], scal)?;
+                self.last_dts[flat] = dts[0];
+            }
+        }
+        Ok(())
+    }
+
+    /// The pack-level scal with the BLOCK's own dx patched in (general
+    /// mode: blocks at different levels have different cell widths).
+    fn scal_for_block(&self, base: ScalArgs, flat: usize) -> ScalArgs {
+        let dx = self.gen.as_ref().expect("general routes").blocks[flat].dx;
+        ScalArgs { dx, ..base }
+    }
+
     /// The current routing tables keyed by gid — captured BEFORE an
     /// incremental rebalance rewrites the local block order, handed back
     /// to [`DeviceState::after_rebalance_incremental`] for re-pointing.
@@ -230,6 +378,11 @@ impl DeviceState {
         &self,
         mesh: &Mesh,
     ) -> std::collections::HashMap<usize, Vec<NbrEntry>> {
+        if self.gen.is_some() {
+            // General mode has no flat routes to carry across; the
+            // incremental rebalance rebuilds the spec snapshot wholesale.
+            return std::collections::HashMap::new();
+        }
         mesh.blocks
             .iter()
             .enumerate()
@@ -262,7 +415,14 @@ impl DeviceState {
         sim: &mut super::HydroSim,
         old_dts: &std::collections::HashMap<usize, Real>,
     ) -> Result<()> {
-        self.routes = Self::build_routes(&sim.mesh)?;
+        if self.gen.is_some() {
+            // General snapshot embeds ranks, so it rebuilds wholesale
+            // (cheap next to the migration itself).
+            self.gen = Some(build_gen_routes(&sim.mesh));
+            self.gen_flux = vec![FluxArrays::new(&self.shape); sim.mesh.blocks.len()];
+        } else {
+            self.routes = Self::build_routes(&sim.mesh)?;
+        }
         self.last_dts = vec![0.0; sim.mesh.blocks.len()];
         self.block_secs = vec![0.0; sim.mesh.blocks.len()];
         sim.fused_dt_local = None;
@@ -274,6 +434,11 @@ impl DeviceState {
         }
         let dirty = sim.mesh_data.dirty_packs();
         sim.mesh_data.gather_dirty(&sim.mesh, CONS)?;
+        if self.gen.is_some() {
+            // Ghosts ride the staged arrays in general mode — dirty packs
+            // only need their dt launches refreshed, no routing round.
+            return self.refresh_dts_general(&mut sim.mesh_data, &dirty);
+        }
         let scal0 =
             self.scal(StageCoeffs { g0: 0.0, g1: 1.0, beta: 1.0 }, 0.0, &sim.mesh);
         self.bootstrap(&mut sim.mesh_data, scal0, &dirty)
@@ -294,6 +459,13 @@ impl DeviceState {
         old_dts: &std::collections::HashMap<usize, Real>,
         old_routes: std::collections::HashMap<usize, Vec<NbrEntry>>,
     ) -> Result<(u64, u64)> {
+        if self.gen.is_some() {
+            // No flat routing tables to re-point in general mode — the
+            // spec snapshot rebuilds wholesale, and ghosts ride the staged
+            // arrays across the migration (no bufs_in refresh round).
+            self.after_rebalance(sim, old_dts)?;
+            return Ok((sim.mesh.blocks.len() as u64, 0));
+        }
         let mut old_routes = old_routes;
         let mut routes = Vec::with_capacity(sim.mesh.blocks.len());
         let mut rebuilt = 0u64;
@@ -503,9 +675,19 @@ impl DeviceState {
         self.scal_from_shape(co, dt, dx)
     }
 
-    /// The inbound `(block-in-pack, slot)` pairs one pack waits on.
+    /// The inbound `(block-in-pack, slot)` pairs one pack waits on — slot
+    /// indexes the fast path's routing table, or the general snapshot's
+    /// recv-spec list.
     pub(crate) fn pack_pending(&self, d: &PackDesc) -> Vec<(usize, usize)> {
         let mut v = Vec::new();
+        if let Some(gen) = &self.gen {
+            for bi in 0..d.nb {
+                for ri in 0..gen.blocks[d.first + bi].recvs.len() {
+                    v.push((bi, ri));
+                }
+            }
+            return v;
+        }
         for bi in 0..d.nb {
             for slot in 0..self.routes[d.first + bi].len() {
                 v.push((bi, slot));
@@ -743,6 +925,12 @@ impl DeviceState {
     /// gathered. The next launch's unpack then rewrites those ghost zones
     /// with identical values: a bitwise no-op.
     pub(crate) fn stage_in_pack(&self, d: &PackDesc, p: &mut PackStaging) {
+        if self.gen.is_some() {
+            // General mode keeps no resident boundary buffers: staged `u`
+            // is always fully current (interior + ghosts + physical BCs),
+            // so a migrated pack needs no restaging.
+            return;
+        }
         let ne = self.block_elems;
         let bl = self.buflen;
         let offsets = crate::mesh::tree::neighbor_offsets(self.shape.dim);
@@ -770,6 +958,11 @@ impl DeviceState {
     /// same unpack the next launch would have performed, so the scattered
     /// container is fully current, interior and ghosts.
     pub(crate) fn stage_out_pack(&self, d: &PackDesc, p: &mut PackStaging) {
+        if self.gen.is_some() {
+            // General staging is never ghost-stale (receives apply
+            // straight into `u` and BCs fill at poll-drain).
+            return;
+        }
         let ne = self.block_elems;
         let bl = self.buflen;
         for bi in 0..d.nb {
@@ -780,6 +973,155 @@ impl DeviceState {
                 &p.bufs_in[bi * bl..(bi + 1) * bl],
             );
         }
+    }
+
+    // ---- general (multilevel / non-periodic) launch bodies ----
+
+    /// Flux launches of ONE pack (general mode): one `flux` launch per
+    /// block into the pack's disjoint [`FluxArrays`] slice. Splitting the
+    /// fused stage at the flux seam is what lets corrections from finer
+    /// neighbors patch the fluxes before the combine — exactly the Host
+    /// list's shape. Launch seconds accrue per block (cost EWMA).
+    fn flux_pack_general(
+        &self,
+        d: &PackDesc,
+        p: &PackStaging,
+        flux: &mut [FluxArrays],
+        secs_out: &mut [f64],
+        scal: ScalArgs,
+    ) -> Result<()> {
+        let kfx = self.key("flux", 1);
+        let ne = self.block_elems;
+        for bi in 0..d.nb {
+            let sb = self.scal_for_block(scal, d.first + bi);
+            let t0 = Instant::now();
+            self.rt.flux(&kfx, &p.u[bi * ne..(bi + 1) * ne], sb, &mut flux[bi])?;
+            secs_out[bi] += t0.elapsed().as_secs_f64();
+        }
+        Ok(())
+    }
+
+    /// Combine launches of ONE pack (general mode): per block, apply the
+    /// (possibly corrected) fluxes. `flux` then `combine` on uncorrected
+    /// fluxes is bitwise the fast path's `stage`.
+    fn combine_pack_general(
+        &self,
+        d: &PackDesc,
+        p: &mut PackStaging,
+        flux: &[FluxArrays],
+        secs_out: &mut [f64],
+        scal: ScalArgs,
+    ) -> Result<()> {
+        let kcb = self.key("combine", 1);
+        let ne = self.block_elems;
+        for bi in 0..d.nb {
+            let sb = self.scal_for_block(scal, d.first + bi);
+            let t0 = Instant::now();
+            self.rt.combine(
+                &kcb,
+                &mut p.u[bi * ne..(bi + 1) * ne],
+                &p.u0[bi * ne..(bi + 1) * ne],
+                &flux[bi],
+                sb,
+            )?;
+            secs_out[bi] += t0.elapsed().as_secs_f64();
+        }
+        Ok(())
+    }
+
+    /// Send ONE pack's outbound boundary segments (general mode): one
+    /// `payload` launch per snapshotted [`SendOp`] — same-level slab,
+    /// restricted fine→coarse slab, or interior slab bound for a finer
+    /// neighbor's prolongation. Bytes and tags are the host exchange's by
+    /// construction (shared spec layer).
+    fn send_one_general(&self, d: &PackDesc, p: &PackStaging, comm: &Comm) -> Result<()> {
+        let gen = self.gen.as_ref().expect("general routes");
+        let kbp = self.key("payload", 1);
+        let ne = self.block_elems;
+        for bi in 0..d.nb {
+            let u = &p.u[bi * ne..(bi + 1) * ne];
+            for s in &gen.blocks[d.first + bi].sends {
+                let payload = self.rt.boundary_payload(&kbp, u, &s.op)?;
+                comm.isend(s.rank, s.tag, Payload::F32(payload));
+            }
+        }
+        Ok(())
+    }
+
+    /// Poll ONE pack's pending inbound segments (general mode) straight
+    /// into the staged arrays — ghost insert or coarse→fine prolongation
+    /// per the snapshotted [`RecvOp`] — and, once the pack has drained,
+    /// fill its blocks' physical boundary ghosts from the per-block BC
+    /// tables. That is the same point the host path applies BCs (after
+    /// every receive landed), and BC fills read only the block's own
+    /// cells, so per-pack application is bitwise the host's global sweep.
+    fn poll_one_general(
+        &self,
+        d: &PackDesc,
+        p: &mut PackStaging,
+        comm: &Comm,
+        pending: &mut Vec<(usize, usize)>,
+    ) -> Result<bool> {
+        let gen = self.gen.as_ref().expect("general routes");
+        let kab = self.key("apply", 1);
+        let ne = self.block_elems;
+        let mut i = 0usize;
+        while i < pending.len() {
+            let (bi, ri) = pending[i];
+            let r = &gen.blocks[d.first + bi].recvs[ri];
+            if let Some(payload) = comm.try_recv(r.src, r.tag)? {
+                let data = payload.into_f32()?;
+                self.rt.apply_boundary(
+                    &kab,
+                    &mut p.u[bi * ne..(bi + 1) * ne],
+                    &r.op,
+                    &data,
+                )?;
+                pending.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        if !pending.is_empty() {
+            return Ok(false);
+        }
+        for bi in 0..d.nb {
+            if let Some(bcs) = &gen.blocks[d.first + bi].bcs {
+                crate::bvals::apply_physical_bcs(
+                    &mut p.u[bi * ne..(bi + 1) * ne],
+                    &self.shape,
+                    bcs,
+                    NHYDRO,
+                    Some([
+                        crate::hydro::native::IM1,
+                        crate::hydro::native::IM2,
+                        crate::hydro::native::IM3,
+                    ]),
+                );
+            }
+        }
+        Ok(true)
+    }
+
+    /// Per-block dt launches of ONE pack (general mode): raw `min_dt` per
+    /// block with the block's own level dx (the caller CFL-scales each
+    /// block's value with the host formula before folding).
+    fn dt_pack_general(
+        &self,
+        d: &PackDesc,
+        p: &PackStaging,
+        dts_out: &mut [Real],
+    ) -> Result<()> {
+        let kdt = self.key("dt", 1);
+        let ne = self.block_elems;
+        let co = StageCoeffs { g0: 0.0, g1: 1.0, beta: 1.0 };
+        for bi in 0..d.nb {
+            let dx = self.gen.as_ref().expect("general routes").blocks[d.first + bi].dx;
+            let scal = self.scal_from_shape(co, 0.0, dx);
+            let dts = self.rt.dt(&kdt, &p.u[bi * ne..(bi + 1) * ne], scal)?;
+            dts_out[bi] = dts[0];
+        }
+        Ok(())
     }
 }
 
@@ -797,9 +1139,10 @@ pub(crate) struct DevPackCtx<'a> {
     /// Pack index (slot in the merged region's f64 `minima`).
     pub pi: usize,
     /// Stage comm for this pack's sends/polls: the driver's shared CONS
-    /// comm under hybrid (host and device packs interoperate — the route
-    /// tags are bit-identical to the host's same-level exchange tags on a
-    /// uniform mesh), the device's own comm in a pure device run.
+    /// comm under hybrid (host and device packs interoperate — fast-path
+    /// route tags match the host's same-level exchange tags, and general
+    /// mode shares the host's spec layer outright), the device's own comm
+    /// in a pure device run.
     pub comm: &'a Comm,
     pub minima: &'a [AtomicU64],
     pub dt_result: &'a AtomicU64,
@@ -809,25 +1152,44 @@ pub(crate) struct DevPackCtx<'a> {
     /// f64, so the merged fold compares finished local dts across spaces.
     pub cfl: Real,
     pub compute_dt: bool,
+    /// General-mode per-block flux arrays of this pack (disjoint slice of
+    /// `DeviceState::gen_flux`); empty on the fast path.
+    pub flux: &'a mut [FluxArrays],
+    /// Pending flux corrections from finer neighbors (general multilevel
+    /// lists; empty otherwise). `FluxRecv::block` is flat-local, rebased
+    /// by `d.first` at poll time like the host lists.
+    pub fpending: Vec<FluxRecv>,
+    /// Flux-correction comm — the driver's shared one, so corrections
+    /// cross execution spaces under hybrid.
+    pub fcomm: &'a Comm,
+    /// Shared exchange topology (general flux-correction sends walk the
+    /// tree for coarse face neighbors, exactly like the host list).
+    pub topo: ExchTopo<'a>,
     pub error: Option<Error>,
     /// Shared across packs: first error drains every list fast.
     pub abort: &'a AtomicBool,
 }
 
 /// Produce the device-space task list for one pack into `list` (part of
-/// the driver's merged region): launch → send → poll, plus the per-pack
-/// dt partial on the final RK stage. Tasks unwrap [`SpaceCtx::Dev`]; the
-/// returned id is the dt task (the regional fold's mark), `None` on
-/// non-final stages.
+/// the driver's merged region). Fast path (`general=false`): launch →
+/// send → poll, plus the per-pack dt partial on the final RK stage.
+/// General mode delegates to [`add_dev_pack_list_general`], which mirrors
+/// the Host list shape. Tasks unwrap [`SpaceCtx::Dev`]; the returned id
+/// is the dt task (the regional fold's mark), `None` on non-final stages.
 ///
-/// The published dt partial is `cfl · min(pack dts)` as f64 — f32→f64 is
-/// exact and multiplying by a positive CFL commutes with `min` bit-wise,
-/// so the merged cross-pack fold equals the legacy fold-then-scale of the
-/// pure device executor.
+/// The fast path's published dt partial is `cfl · min(pack dts)` as f64 —
+/// f32→f64 is exact and multiplying by a positive CFL commutes with `min`
+/// bit-wise, so the merged cross-pack fold equals the legacy
+/// fold-then-scale of the pure device executor.
 pub(crate) fn add_dev_pack_list(
     list: &mut TaskList<SpaceCtx<'_>>,
+    general: bool,
+    multilevel: bool,
     final_stage: bool,
 ) -> Option<TaskId> {
+    if general {
+        return add_dev_pack_list_general(list, multilevel, final_stage);
+    }
     let t_launch = list.add(NONE, |ctx: &mut SpaceCtx| {
         let SpaceCtx::Dev(c) = ctx else { return TaskStatus::Complete };
         if c.abort.load(Ordering::SeqCst) {
@@ -878,6 +1240,146 @@ pub(crate) fn add_dev_pack_list(
             let local = c.cfl as f64 * m as f64;
             c.minima[c.pi].store(local.to_bits(), Ordering::SeqCst);
             c.coll.dt_done.fetch_add(1, Ordering::SeqCst);
+            TaskStatus::Complete
+        });
+        Some(t_dt)
+    } else {
+        None
+    }
+}
+
+/// The GENERAL device task list for one pack (multilevel / non-periodic
+/// meshes): the exact Host list shape on device launches — flux →
+/// (flux-corr send ‖ flux-corr poll) → combine → boundary send → poll
+/// (+ BC fill at drain), with the per-pack dt partial on the final RK
+/// stage. Per-block `flux`/`combine` launches split at the flux seam so
+/// corrections from fine neighbors patch the flux arrays before the
+/// combine, and the boundary tasks play back the snapshotted spec ops —
+/// every payload, tag and ghost fill is byte-identical to the host path
+/// by construction.
+///
+/// The dt partial uses the HOST formula — per block `(cfl · min_dt) as
+/// f64`, folded with `f64::min` — so the merged fold is bit-identical to
+/// an all-host run of the same mesh (the host widens AFTER the f32
+/// multiply; see `HydroPackage::estimate_dt`).
+fn add_dev_pack_list_general(
+    list: &mut TaskList<SpaceCtx<'_>>,
+    multilevel: bool,
+    final_stage: bool,
+) -> Option<TaskId> {
+    let t_flux = list.add(NONE, |ctx: &mut SpaceCtx| {
+        let SpaceCtx::Dev(c) = ctx else { return TaskStatus::Complete };
+        if c.abort.load(Ordering::SeqCst) {
+            return TaskStatus::Complete;
+        }
+        let DevPackCtx { dev, d, p, flux, secs, scal, error, abort, .. } = c;
+        if let Err(e) = dev.flux_pack_general(d, p, flux, secs, *scal) {
+            *error = Some(e);
+            abort.store(true, Ordering::SeqCst);
+        }
+        TaskStatus::Complete
+    });
+    let combine_dep = if multilevel {
+        // fine side: restrict + send face fluxes toward coarser neighbors
+        let _t_fcsend = list.add(&[t_flux], |ctx: &mut SpaceCtx| {
+            let SpaceCtx::Dev(c) = ctx else { return TaskStatus::Complete };
+            if c.abort.load(Ordering::SeqCst) {
+                return TaskStatus::Complete;
+            }
+            let gen = c.dev.gen.as_ref().expect("general routes");
+            for bi in 0..c.d.nb {
+                super::flux_corr_send_block(
+                    &c.topo,
+                    c.fcomm,
+                    &gen.blocks[c.d.first + bi].loc,
+                    &c.flux[bi],
+                );
+            }
+            TaskStatus::Complete
+        });
+        // coarse side: poll pending corrections into the flux slice; the
+        // combine must wait for them (not for the sends — those only gate
+        // OTHER packs' polls, via message arrival)
+        list.add(&[t_flux], |ctx: &mut SpaceCtx| {
+            let SpaceCtx::Dev(c) = ctx else { return TaskStatus::Complete };
+            if c.abort.load(Ordering::SeqCst) {
+                return TaskStatus::Complete;
+            }
+            let DevPackCtx { d, flux, fpending, fcomm, topo, error, abort, .. } = c;
+            match super::flux_corr_poll_pending(fcomm, topo.dim, fpending, flux, d.first)
+            {
+                Ok(true) => TaskStatus::Complete,
+                Ok(false) => TaskStatus::Incomplete,
+                Err(e) => {
+                    *error = Some(e);
+                    abort.store(true, Ordering::SeqCst);
+                    TaskStatus::Complete
+                }
+            }
+        })
+    } else {
+        t_flux
+    };
+    let t_combine = list.add(&[combine_dep], |ctx: &mut SpaceCtx| {
+        let SpaceCtx::Dev(c) = ctx else { return TaskStatus::Complete };
+        if c.abort.load(Ordering::SeqCst) {
+            return TaskStatus::Complete;
+        }
+        let DevPackCtx { dev, d, p, flux, secs, scal, error, abort, .. } = c;
+        if let Err(e) = dev.combine_pack_general(d, p, flux, secs, *scal) {
+            *error = Some(e);
+            abort.store(true, Ordering::SeqCst);
+        }
+        TaskStatus::Complete
+    });
+    let t_send = list.add(&[t_combine], |ctx: &mut SpaceCtx| {
+        let SpaceCtx::Dev(c) = ctx else { return TaskStatus::Complete };
+        if c.abort.load(Ordering::SeqCst) {
+            return TaskStatus::Complete;
+        }
+        let DevPackCtx { dev, d, p, comm, error, abort, .. } = c;
+        if let Err(e) = dev.send_one_general(d, p, comm) {
+            *error = Some(e);
+            abort.store(true, Ordering::SeqCst);
+        }
+        TaskStatus::Complete
+    });
+    let _t_poll = list.add(&[t_send], |ctx: &mut SpaceCtx| {
+        let SpaceCtx::Dev(c) = ctx else { return TaskStatus::Complete };
+        if c.abort.load(Ordering::SeqCst) {
+            return TaskStatus::Complete;
+        }
+        let DevPackCtx { dev, d, p, comm, pending, error, abort, .. } = c;
+        match dev.poll_one_general(d, p, comm, pending) {
+            Ok(true) => TaskStatus::Complete,
+            Ok(false) => TaskStatus::Incomplete,
+            Err(e) => {
+                *error = Some(e);
+                abort.store(true, Ordering::SeqCst);
+                TaskStatus::Complete
+            }
+        }
+    });
+    if final_stage {
+        // per-pack half of the merged dt reduction, host formula
+        let t_dt = list.add(&[t_combine], |ctx: &mut SpaceCtx| {
+            let SpaceCtx::Dev(c) = ctx else { return TaskStatus::Complete };
+            if c.abort.load(Ordering::SeqCst) {
+                return TaskStatus::Complete;
+            }
+            let DevPackCtx { dev, d, p, dts, pi, minima, coll, cfl, error, abort, .. } =
+                c;
+            if let Err(e) = dev.dt_pack_general(d, p, dts) {
+                *error = Some(e);
+                abort.store(true, Ordering::SeqCst);
+                return TaskStatus::Complete;
+            }
+            let mut m = f64::INFINITY;
+            for &v in dts.iter() {
+                m = m.min((*cfl * v) as f64);
+            }
+            minima[*pi].store(m.to_bits(), Ordering::SeqCst);
+            coll.dt_done.fetch_add(1, Ordering::SeqCst);
             TaskStatus::Complete
         });
         Some(t_dt)

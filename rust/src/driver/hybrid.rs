@@ -71,8 +71,8 @@ impl HybridPartition {
 
     /// Compute the pack → space assignment. Deterministic for fixed
     /// inputs. `device_available` is false when no [`super::DeviceState`]
-    /// exists (non-capable mesh or no runtime) — everything stays on the
-    /// host. `nworkers` is the *requested* worker count: an automatic
+    /// exists (no runtime, or mid-regrid with the engine torn down) —
+    /// everything stays on the host. `nworkers` is the *requested* worker count: an automatic
     /// split on a single worker degenerates to a pure-host run (there is
     /// nobody to overlap with), while a forced split is always honored.
     pub fn assign(

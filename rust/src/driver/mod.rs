@@ -15,9 +15,11 @@
 //! * [`host::add_host_pack_list`] — native Rust solver kernels; supports
 //!   everything (AMR, multilevel meshes with flux correction, all BCs).
 //! * [`device::add_dev_pack_list`] — artifact launches through the
-//!   runtime, with the three buffer packing strategies of Fig. 8; uniform
-//!   periodic meshes (the configuration of every performance experiment
-//!   in the paper).
+//!   runtime: uniform periodic meshes take the fast path with the three
+//!   buffer packing strategies of Fig. 8, every other mesh (multilevel
+//!   SMR/AMR, non-periodic BCs) the general per-block list that mirrors
+//!   the Host shape — flux correction, restriction/prolongation and
+//!   physical BCs on device launches, bitwise-identical to Host.
 //! * `space=hybrid` — both at once: packs are assigned to spaces by the
 //!   measured per-pack cost EWMAs of [`hybrid::HybridPartition`],
 //!   re-partitioned at the `parthenon/loadbalance interval` cadence with
@@ -69,9 +71,9 @@ const COST_EWMA_ALPHA: f64 = 0.3;
 /// * `Device` — runtime artifact launches only.
 /// * `Hybrid` — heterogeneous co-execution: every cycle, both spaces
 ///   produce task lists into the same region and packs are split between
-///   them by measured cost ([`hybrid::HybridPartition`]). On a mesh the
-///   Device space cannot serve (multilevel / non-periodic) hybrid
-///   degenerates to an all-host assignment instead of erroring.
+///   them by measured cost ([`hybrid::HybridPartition`]). The Device
+///   space serves every mesh (general mode covers multilevel and
+///   non-periodic), so the split never degenerates on capability.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecSpace {
     Host,
@@ -338,6 +340,7 @@ pub(crate) fn run_stage(
             std::mem::take(&mut d.last_dts),
             std::mem::take(&mut d.block_secs),
             std::mem::take(&mut d.tmps),
+            std::mem::take(&mut d.gen_flux),
         )
     });
     {
@@ -374,8 +377,9 @@ pub(crate) fn run_stage(
         };
         // Flux corrections are registered per pack up front (reads the
         // immutable topology), before the blocks split into disjoint
-        // per-pack slices. Multilevel implies an all-host assignment.
-        let fpend: Vec<Vec<FluxRecv>> = if multilevel && host_present {
+        // per-pack slices — for every pack, whichever space runs it (the
+        // general device list polls the same comm with the same tags).
+        let fpend: Vec<Vec<FluxRecv>> = if multilevel {
             pack_ranges
                 .iter()
                 .map(|r| {
@@ -397,16 +401,24 @@ pub(crate) fn run_stage(
         };
         let mut staging_it = staging.iter_mut();
         let dev_present = dev_taken.is_some();
-        let (mut dts_rest, mut dsecs_rest, mut tmps_it) = match dev_taken.as_mut() {
-            Some((dts, secs, tmps)) => {
-                (&mut dts[..], &mut secs[..], Some(tmps.iter_mut()))
-            }
-            None => (&mut [] as &mut [Real], &mut [] as &mut [f64], None),
-        };
+        let dev_general = dev_ref.map_or(false, |d| d.is_general());
+        let (mut dts_rest, mut dsecs_rest, mut tmps_it, mut gflux_rest) =
+            match dev_taken.as_mut() {
+                Some((dts, secs, tmps, gfx)) => {
+                    (&mut dts[..], &mut secs[..], Some(tmps.iter_mut()), &mut gfx[..])
+                }
+                None => (
+                    &mut [] as &mut [Real],
+                    &mut [] as &mut [f64],
+                    None,
+                    &mut [] as &mut [FluxArrays],
+                ),
+            };
         // Hybrid stage comm: device packs exchange on the shared CONS
-        // comm so both spaces interoperate (route tags are bit-identical
-        // to the host exchange tags on a uniform mesh); a pure device run
-        // keeps the device's own comm — the bitwise oracle channel.
+        // comm so both spaces interoperate (fast-path route tags match
+        // the host exchange tags, and general mode shares the host's spec
+        // layer outright); a pure device run keeps the device's own comm
+        // — the bitwise oracle channel.
         let dev_comm: Option<&Comm> = if hybrid_mode {
             Some(&*comm_cons)
         } else {
@@ -438,6 +450,9 @@ pub(crate) fn run_stage(
             dts_rest = rest;
             let (dsecs, rest) = std::mem::take(&mut dsecs_rest).split_at_mut(take);
             dsecs_rest = rest;
+            let gtake = if dev_general { nb } else { 0 };
+            let (gfx, rest) = std::mem::take(&mut gflux_rest).split_at_mut(gtake);
+            gflux_rest = rest;
             match spaces[pi] {
                 PackSpace::Host => {
                     let blocks = blocks.expect("host engine present");
@@ -503,10 +518,19 @@ pub(crate) fn run_stage(
                         scal: scal.expect("device scal present"),
                         cfl,
                         compute_dt: final_stage,
+                        flux: gfx,
+                        fpending,
+                        fcomm: comm_flux,
+                        topo,
                         error: None,
                         abort: &abort,
                     }));
-                    let t_dt = device::add_dev_pack_list(region.list(pi), final_stage);
+                    let t_dt = device::add_dev_pack_list(
+                        region.list(pi),
+                        dev_general,
+                        multilevel,
+                        final_stage,
+                    );
                     if let Some(t) = t_dt {
                         dt_marks.push((pi, t));
                     }
@@ -656,10 +680,11 @@ pub(crate) fn run_stage(
     if let (Some(h), Some(pool)) = (host.as_deref_mut(), scratch_pool) {
         h.scratch = pool.into_inner();
     }
-    if let (Some(d), Some((dts, secs, tmps))) = (dev.as_deref_mut(), dev_taken) {
+    if let (Some(d), Some((dts, secs, tmps, gfx))) = (dev.as_deref_mut(), dev_taken) {
         d.last_dts = dts;
         d.block_secs = secs;
         d.tmps = tmps;
+        d.gen_flux = gfx;
     }
     if let Some(e) = first_error {
         // A stalled task region is this rank's first sight of the
@@ -675,12 +700,12 @@ pub(crate) fn run_stage(
         sim.hybrid_stats.cross_space_steals += cross_steals.load(Ordering::SeqCst);
     }
     // Physical BCs once every receive has landed — the same point the
-    // pure-host path has always applied them. A mixed/hybrid assignment
-    // implies a fully periodic mesh (Device capability), where block
-    // physical BCs are a no-op — so they are skipped unless a host pack
-    // (or a packless host rank, which must still flip its ghost parity)
-    // participated, keeping the all-device assignment bitwise identical
-    // to the pure Device space.
+    // pure-host path has always applied them. Device packs fill their own
+    // physical ghosts in the staged arrays at poll-drain, so this sweep
+    // runs only when a host pack (or a packless host rank, which must
+    // still flip its ghost parity) participated; its writes into device
+    // packs' stale containers are harmless — staging is authoritative
+    // there, and the pre-regrid sync rewrites the containers wholesale.
     if host.is_some() && (any_host || npacks == 0) {
         bvals::apply_block_physical_bcs(
             &mut sim.mesh,
@@ -799,7 +824,7 @@ impl SimParams {
 }
 
 /// Pending flux-correction receive on a coarse block.
-struct FluxRecv {
+pub(crate) struct FluxRecv {
     block: usize,
     src: usize,
     tag: u64,
@@ -1006,6 +1031,48 @@ impl HydroSim {
         Ok(())
     }
 
+    /// Scatter a fully-current image of every device-resident pack into
+    /// the containers, GHOSTS included: fast-path packs first fold their
+    /// resident ghost inbox into the staged arrays (`stage_out_pack`; a
+    /// no-op in general mode, whose staged ghosts are always current),
+    /// then the resident staging scatters down. Used before a regrid,
+    /// whose refinement criteria and restrict/prolong kernels read the
+    /// containers.
+    fn sync_device_full(&mut self) -> Result<()> {
+        let Some(dev) = self.device.as_ref() else { return Ok(()) };
+        let spaces = self.mesh_data.pack_spaces().to_vec();
+        {
+            let (descs, staging) = self.mesh_data.parts_mut();
+            for (pi, s) in spaces.iter().enumerate() {
+                if *s == PackSpace::Device {
+                    dev.stage_out_pack(&descs[pi], &mut staging[pi]);
+                }
+            }
+        }
+        self.mesh_data.scatter_resident(&mut self.mesh, CONS)?;
+        Ok(())
+    }
+
+    /// (Re)create the Device engine after a regrid changed the tree —
+    /// `space=device` rebuilds the engine + the all-device assignment,
+    /// `space=hybrid` re-runs its bring-up (fresh partition + assignment
+    /// against the new packs). The caller must have torn the old engine
+    /// down (and synced its staging) first.
+    fn rebuild_device_engine(&mut self) -> Result<()> {
+        debug_assert!(self.device.is_none());
+        match self.sp.exec {
+            ExecSpace::Device => {
+                let dev = DeviceState::new(self)?;
+                self.device = Some(dev);
+                let n = self.mesh_data.npacks();
+                self.mesh_data.set_pack_spaces(vec![PackSpace::Device; n]);
+            }
+            ExecSpace::Hybrid => self.init_hybrid()?,
+            ExecSpace::Host => {}
+        }
+        Ok(())
+    }
+
     /// Rebuild the pack cache + per-block work buffers after mesh changes
     /// (regrid, load balance, restart). The single invalidation point: the
     /// pack plan is re-planned against the mesh's new version and the host
@@ -1192,13 +1259,19 @@ impl HydroSim {
             return container_sweep(&self.mesh.blocks);
         }
         // Per pack: device-assigned packs fold the staged per-block dts of
-        // the device bootstrap/launch (f32 min, then one CFL scale — the
-        // legacy device fold); host packs sweep their containers.
+        // the device bootstrap/launch — fast path with the legacy fold
+        // (f32 min, then one CFL scale), general mode with the host
+        // formula (per-block `(cfl · raw) as f64`, f64 min — exactly
+        // `estimate_dt`, so multilevel bootstraps match the host bitwise);
+        // host packs sweep their containers.
         let mut m = f64::INFINITY;
         for (pi, d) in self.mesh_data.packs().iter().enumerate() {
             let r = d.block_range();
             let pack_dt = match spaces[pi] {
                 PackSpace::Host => container_sweep(&self.mesh.blocks[r]),
+                PackSpace::Device if dev.is_general() => dev.last_dts[r]
+                    .iter()
+                    .fold(f64::INFINITY, |a, &v| a.min((self.pkg.cfl * v) as f64)),
                 PackSpace::Device => {
                     let md = dev.last_dts[r]
                         .iter()
@@ -1213,31 +1286,23 @@ impl HydroSim {
 
     // -- heterogeneous co-execution (space=hybrid) ---------------------------
 
-    /// Bring up `space=hybrid`: build the Device engine when the mesh is
-    /// capable of it (uniform + fully periodic — the Device space's
-    /// coverage), keep the Host engine either way, and draw the initial
-    /// pack → space assignment. On a non-capable mesh hybrid degenerates
-    /// to an all-host assignment instead of erroring — `space=hybrid` is a
-    /// scheduling preference, not a capability assertion. A missing or
-    /// corrupt artifact runtime still surfaces as a structured error, like
-    /// `space=device`.
+    /// Bring up `space=hybrid`: build the Device engine (the general mode
+    /// covers multilevel and non-periodic meshes, so every mesh is
+    /// device-capable now), keep the Host engine, and draw the initial
+    /// pack → space assignment. A missing or corrupt artifact runtime
+    /// surfaces as a structured error, like `space=device`.
     pub(crate) fn init_hybrid(&mut self) -> Result<()> {
-        let dim = self.mesh.cfg.dim;
-        let capable = self.mesh.tree.max_level() == 0
-            && self.mesh.cfg.periodic_flags()[..dim].iter().all(|p| *p);
-        if capable {
-            let dev = DeviceState::new(self)?;
-            self.device = Some(dev);
-            // DeviceState::new re-drew the pack plan (gathering staging);
-            // re-size the host work arrays against the final pack count so
-            // both engines cover the same partition.
-            let shape = self.mesh.cfg.index_shape();
-            let (nblocks, npacks) = (self.mesh.blocks.len(), self.mesh_data.npacks());
-            self.host
-                .as_mut()
-                .expect("hybrid keeps the host engine")
-                .resize(&shape, nblocks, npacks);
-        }
+        let dev = DeviceState::new(self)?;
+        self.device = Some(dev);
+        // DeviceState::new re-drew the pack plan (gathering staging);
+        // re-size the host work arrays against the final pack count so
+        // both engines cover the same partition.
+        let shape = self.mesh.cfg.index_shape();
+        let (nblocks, npacks) = (self.mesh.blocks.len(), self.mesh_data.npacks());
+        self.host
+            .as_mut()
+            .expect("hybrid keeps the host engine")
+            .resize(&shape, nblocks, npacks);
         self.hybrid = Some(HybridPartition::new(self.sp.hybrid_split));
         self.hybrid_assign();
         Ok(())
@@ -1668,12 +1733,29 @@ impl EvolutionDriver for HydroSim {
         // so this cycle's measurements inform this cycle's distribution).
         self.update_block_costs();
 
-        // AMR
+        // AMR — in every exec space. With a Device engine up, staging is
+        // authoritative: sync it into the containers first (refinement
+        // criteria and the regrid restrict/prolong read containers), tear
+        // the engine down across the tree change (the rebuild invariant),
+        // and bring it back up on the new mesh. An unchanged tree restores
+        // the engine untouched — `check_and_regrid` returns before
+        // mutating anything in that case.
         if self.mesh.cfg.adaptive
-            && self.device.is_none()
             && self.cycle % self.mesh.cfg.check_interval as u64 == 0
         {
-            regrid::check_and_regrid(self)?;
+            if self.device.is_some() {
+                self.sync_device_full()?;
+                let dev = self.device.take();
+                let changed = regrid::check_and_regrid(self)?;
+                if changed {
+                    drop(dev);
+                    self.rebuild_device_engine()?;
+                } else {
+                    self.device = dev;
+                }
+            } else {
+                regrid::check_and_regrid(self)?;
+            }
         }
 
         // Cost-driven load balance on a fixed tree (opt-in; AMR regrids
@@ -1681,7 +1763,7 @@ impl EvolutionDriver for HydroSim {
         // cost allgather is a collective.
         if self.sp.lb_interval > 0
             && self.cycle % self.sp.lb_interval as u64 == 0
-            && !(self.mesh.cfg.adaptive && self.device.is_none())
+            && !self.mesh.cfg.adaptive
         {
             regrid::check_and_rebalance(self)?;
         }

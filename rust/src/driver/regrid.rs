@@ -266,9 +266,10 @@ pub fn apply_new_tree(sim: &mut HydroSim, new_tree: crate::mesh::BlockTree) -> R
     )?;
     sim.fill_derived();
     // Pack identities changed with the tree: re-draw the pack -> space
-    // assignment (hybrid keeps every pack on the host while AMR is
-    // active — no DeviceState on a multilevel mesh — but the cost model
-    // must still be resized to the new pack count).
+    // assignment against the new pack count. The regrid runs with the
+    // Device engine torn down (see `HydroSim::step`), so this interim
+    // draw lands all-host; the caller's `rebuild_device_engine` brings
+    // the device back up and re-draws with it available.
     if sim.sp.exec == super::ExecSpace::Hybrid {
         sim.hybrid_assign();
     }

@@ -161,6 +161,19 @@ impl Manifest {
                     "opposite-index mismatch for dim={dim}"
                 )));
             }
+            // Optional (manifests predating the multilevel Device path
+            // lack it): restricted fine->coarse payload lengths.
+            if let Some(arr) = t.get("restrict_seg_lens").and_then(|v| v.as_arr()) {
+                let theirs: Vec<usize> =
+                    arr.iter().map(|v| v.as_usize().unwrap_or(0)).collect();
+                let ours = bufspec::restrict_segment_lengths(&shape, self.nvar);
+                if ours != theirs {
+                    return Err(Error::Artifact(format!(
+                        "restrict_seg_lens mismatch for dim={dim} n={n:?}: \
+                         rust {ours:?} vs python {theirs:?}"
+                    )));
+                }
+            }
         }
         Ok(())
     }

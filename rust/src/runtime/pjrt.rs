@@ -367,6 +367,98 @@ impl Runtime {
         Ok(())
     }
 
+    /// `flux`: u -> face fluxes of ONE block (the caller owns the
+    /// [`native::FluxArrays`] so the raw fluxes survive the launch — the
+    /// multilevel Device path patches them with flux corrections before
+    /// the combine launch).
+    pub(crate) fn flux(
+        &self,
+        key: &ArtifactKey,
+        u: &[Real],
+        scal: ScalArgs,
+        fx: &mut native::FluxArrays,
+    ) -> Result<()> {
+        self.count_launch();
+        let shape = IndexShape::new(key.dim, key.n);
+        Self::check_len(key, "flux state", u.len(), Self::block_elems(key))?;
+        let exe = self.exe(key);
+        exe.with_scratch(|c| {
+            native::compute_fluxes(u, &shape, scal.gamma, fx, &mut c.sc);
+        });
+        Ok(())
+    }
+
+    /// `combine`: (u, u0, fluxes, scal) -> u updated in place for ONE
+    /// block. Together with [`Runtime::flux`] this splits the `stage`
+    /// artifact at the flux/update seam (identical arithmetic, so
+    /// flux-then-combine is bitwise `stage`) — the split the multilevel
+    /// Device task list needs to interleave flux correction.
+    pub(crate) fn combine(
+        &self,
+        key: &ArtifactKey,
+        u: &mut [Real],
+        u0: &[Real],
+        fx: &native::FluxArrays,
+        scal: ScalArgs,
+    ) -> Result<()> {
+        self.count_launch();
+        let shape = IndexShape::new(key.dim, key.n);
+        let ne = Self::block_elems(key);
+        Self::check_len(key, "combine state", u.len(), ne)?;
+        Self::check_len(key, "combine u0", u0.len(), ne)?;
+        let exe = self.exe(key);
+        exe.with_scratch(|c| {
+            native::apply_stage(
+                &u[..ne],
+                &u0[..ne],
+                fx,
+                &shape,
+                scal.coeffs(),
+                scal.dt,
+                scal.dx,
+                &mut c.tmp,
+            );
+            u[..ne].copy_from_slice(&c.tmp[..ne]);
+        });
+        Ok(())
+    }
+
+    /// `payload`: extract ONE outbound boundary segment from a block's
+    /// state — same-level slab copy, fine→coarse restriction, or the
+    /// coarse→fine prolongation source box, selected by the
+    /// [`crate::bvals::SendOp`] the routing snapshot carries. Shares the
+    /// spec layer with the host exchange, so the bytes on the wire are
+    /// identical by construction.
+    pub(crate) fn boundary_payload(
+        &self,
+        key: &ArtifactKey,
+        u: &[Real],
+        op: &crate::bvals::SendOp,
+    ) -> Result<Vec<Real>> {
+        self.count_launch();
+        let shape = IndexShape::new(key.dim, key.n);
+        Self::check_len(key, "payload state", u.len(), Self::block_elems(key))?;
+        Ok(crate::bvals::send_payload(u, &shape, NHYDRO, op))
+    }
+
+    /// Apply ONE inbound boundary segment to a block's state — dense ghost
+    /// insert or coarse→fine prolongation, selected by the
+    /// [`crate::bvals::RecvOp`] the routing snapshot carries (the
+    /// receive-side mirror of [`Runtime::boundary_payload`]).
+    pub(crate) fn apply_boundary(
+        &self,
+        key: &ArtifactKey,
+        u: &mut [Real],
+        op: &crate::bvals::RecvOp,
+        data: &[Real],
+    ) -> Result<()> {
+        self.count_launch();
+        let shape = IndexShape::new(key.dim, key.n);
+        Self::check_len(key, "apply state", u.len(), Self::block_elems(key))?;
+        crate::bvals::apply_recv_op(u, &shape, NHYDRO, op, data);
+        Ok(())
+    }
+
     /// `fused`: (u, u0, bufs_in, scal) -> (u_new, bufs_out, dt[nb]).
     /// u is updated in place; bufs_out overwritten; returns per-block dts.
     /// Semantics: unpack -> stage -> pack -> dt, one launch per pack
@@ -594,6 +686,103 @@ mod tests {
             let k1 = ArtifactKey::new("pack1", 2, [8, 8, 1], 1).with_nbr(slot);
             let seg = rt.pack1(&k1, &u).unwrap();
             assert_eq!(seg, full[offs[slot]..offs[slot] + lens[slot]].to_vec());
+        }
+    }
+
+    #[test]
+    fn flux_then_combine_is_bitwise_stage() {
+        // the general (multilevel) Device list splits the stage launch at
+        // the flux/update seam; the split must be bitwise neutral
+        let rt = runtime();
+        use crate::util::rng::XorShift;
+        let key = ArtifactKey::new("flux", 2, [8, 8, 1], 1);
+        let kst = ArtifactKey::new("stage", 2, [8, 8, 1], 1);
+        let ne = Runtime::block_elems(&key);
+        let ncell = ne / NHYDRO;
+        let mut rng = XorShift::new(11);
+        let mut u = vec![0.0f32; ne];
+        for c in 0..ncell {
+            u[c] = 1.0 + 0.1 * (rng.next_f32() - 0.5);
+            u[ncell + c] = 0.1 * (rng.next_f32() - 0.5);
+            u[4 * ncell + c] = 2.5 + 0.1 * rng.next_f32();
+        }
+        let u0 = u.clone();
+        let scal = ScalArgs {
+            g0: 0.5,
+            g1: 0.5,
+            beta: 0.5,
+            dt: 1e-3,
+            dx: [0.1; 3],
+            gamma: 1.4,
+        };
+        let mut expect = vec![0.0f32; ne];
+        rt.stage(&kst, &u, &u0, scal, &mut expect).unwrap();
+
+        let shape = IndexShape::new(2, [8, 8, 1]);
+        let mut fx = native::FluxArrays::new(&shape);
+        rt.flux(&key, &u, scal, &mut fx).unwrap();
+        let mut got = u.clone();
+        rt.combine(&key, &mut got, &u0, &fx, scal).unwrap();
+        assert_eq!(got, expect, "flux+combine must equal the fused stage bitwise");
+    }
+
+    #[test]
+    fn boundary_payload_same_matches_pack1() {
+        let rt = runtime();
+        let shape = IndexShape::new(2, [8, 8, 1]);
+        let key = ArtifactKey::new("payload", 2, [8, 8, 1], 1);
+        let ne = Runtime::block_elems(&key);
+        let u: Vec<f32> = (0..ne).map(|i| (i % 613) as f32).collect();
+        for (slot, o) in crate::mesh::tree::neighbor_offsets(2).iter().enumerate() {
+            let op = crate::bvals::SendOp::Same(bufspec::send_slab(*o, &shape));
+            let seg = rt.boundary_payload(&key, &u, &op).unwrap();
+            let k1 = ArtifactKey::new("pack1", 2, [8, 8, 1], 1).with_nbr(slot);
+            assert_eq!(seg, rt.pack1(&k1, &u).unwrap(), "offset {o:?}");
+        }
+    }
+
+    #[test]
+    fn boundary_restrict_payload_lengths_and_values() {
+        let rt = runtime();
+        let shape = IndexShape::new(2, [8, 8, 1]);
+        let key = ArtifactKey::new("payload", 2, [8, 8, 1], 1);
+        let ne = Runtime::block_elems(&key);
+        let u: Vec<f32> = (0..ne).map(|i| (i % 769) as f32 * 0.5).collect();
+        // 2g-deep fine send slab toward -x: pinched axis (g, 3g), full
+        // interior tangentially — the fine→coarse restriction source
+        let g = crate::NGHOST;
+        let slab = bufspec::Slab { x: (g, 3 * g), y: (g, g + 8), z: (0, 1) };
+        let op = crate::bvals::SendOp::Restrict(slab);
+        let seg = rt.boundary_payload(&key, &u, &op).unwrap();
+        let lens = bufspec::restrict_segment_lengths(&shape, NHYDRO);
+        let slot = crate::mesh::tree::neighbor_offsets(2)
+            .iter()
+            .position(|o| *o == [-1, 0, 0])
+            .unwrap();
+        assert_eq!(seg.len(), lens[slot]);
+        let mut expect = Vec::new();
+        crate::bvals::restrict_slab(&u, &shape, NHYDRO, &slab, &mut expect);
+        assert_eq!(seg, expect);
+    }
+
+    #[test]
+    fn apply_boundary_insert_matches_unpack1() {
+        let rt = runtime();
+        let shape = IndexShape::new(2, [8, 8, 1]);
+        let key = ArtifactKey::new("apply", 2, [8, 8, 1], 1);
+        let ne = Runtime::block_elems(&key);
+        let u: Vec<f32> = vec![3.0; ne];
+        for (slot, o) in crate::mesh::tree::neighbor_offsets(2).iter().enumerate() {
+            let slab = bufspec::recv_slab(*o, &shape);
+            let data: Vec<f32> =
+                (0..NHYDRO * slab.ncells()).map(|i| (i % 89) as f32).collect();
+            let op = crate::bvals::RecvOp::Insert(slab);
+            let mut got = u.clone();
+            rt.apply_boundary(&key, &mut got, &op, &data).unwrap();
+            let k1 = ArtifactKey::new("unpack1", 2, [8, 8, 1], 1).with_nbr(slot);
+            let mut expect = vec![0.0f32; ne];
+            rt.unpack1(&k1, &u, &data, &mut expect).unwrap();
+            assert_eq!(got, expect, "offset {o:?}");
         }
     }
 

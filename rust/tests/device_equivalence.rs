@@ -1,6 +1,13 @@
 //! Host (native Rust) vs Device (PJRT artifacts) equivalence: the same
 //! problem advanced N cycles on both execution spaces must agree to f32
 //! tolerance — the cross-layer correctness pin of the whole stack.
+//!
+//! The uniform fast-path comparisons are tolerance-based (the fused
+//! artifact stages ghosts differently, so limiter switching amplifies f32
+//! noise). The general-mode tests at the bottom are BITWISE: on a
+//! multilevel or non-periodic mesh the Device path launches the same
+//! per-block kernels on the same bytes as the host sweep, so the final
+//! state, the dt bits, and the checkpoint bytes must be identical.
 
 mod common;
 
@@ -137,6 +144,143 @@ fn host_vs_device_3d_multirank() {
     }
 }
 
+
+/// Run single-rank for `steps`; return (gid -> interior CONS, dt bits,
+/// restart-file bytes) — the bitwise-comparison triple for the
+/// general-mode tests below.
+fn run_bitwise(
+    deck: &str,
+    overrides: &[String],
+    steps: usize,
+    tag: &str,
+) -> (Vec<(usize, Vec<f32>)>, u64, Vec<u8>) {
+    let ovs: Vec<&str> = overrides.iter().map(|s| s.as_str()).collect();
+    let mut sim = common::single_rank_sim(deck, &ovs);
+    for _ in 0..steps {
+        sim.step().unwrap();
+    }
+    let tmp = std::env::temp_dir().join(format!("parthenon_dev_eq_{tag}.pbin"));
+    let tmp_s = tmp.to_str().unwrap().to_string();
+    sim.write_restart(&tmp_s).unwrap(); // syncs device staging back first
+    let bytes = std::fs::read(&tmp).unwrap();
+    let _ = std::fs::remove_file(&tmp);
+    (common::cons_by_gid(&sim), sim.dt.to_bits(), bytes)
+}
+
+fn assert_bitwise(
+    tag: &str,
+    base: &(Vec<(usize, Vec<f32>)>, u64, Vec<u8>),
+    got: &(Vec<(usize, Vec<f32>)>, u64, Vec<u8>),
+) {
+    assert_eq!(
+        common::max_state_diff(&base.0, &got.0),
+        0.0,
+        "{tag}: final state must be bitwise identical"
+    );
+    assert_eq!(got.1, base.1, "{tag}: dt bits must be identical");
+    assert_eq!(got.2, base.2, "{tag}: checkpoint bytes must be identical");
+}
+
+/// Static-refinement overrides: a level-1 cube over the domain center, the
+/// same SMR shape as `hybrid_equivalence` and the fig11 perf lane.
+fn ml_overrides() -> Vec<String> {
+    [
+        "parthenon/mesh/refinement=static",
+        "parthenon/mesh/numlevel=2",
+        "parthenon/static_refinement0/level=1",
+        "parthenon/static_refinement0/x1min=0.3",
+        "parthenon/static_refinement0/x1max=0.7",
+        "parthenon/static_refinement0/x2min=0.3",
+        "parthenon/static_refinement0/x2max=0.7",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect()
+}
+
+#[test]
+fn host_vs_device_multilevel_bitwise() {
+    if !common::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // Multilevel SMR: the general-mode Device path (per-block launches,
+    // restrict/prolong ghost segments, flux correction at the level seam)
+    // must be bitwise the host path — same kernels, same bytes.
+    let deck = common::input_deck("blast", [16, 16, 1], [4, 4, 1], "");
+    let ml = ml_overrides();
+    for sched in ["static", "stealing"] {
+        for nw in [1usize, 4] {
+            let mut bo = vec![
+                format!("parthenon/exec/sched={sched}"),
+                format!("parthenon/exec/nworkers={nw}"),
+                "parthenon/exec/pack_size=2".to_string(),
+            ];
+            bo.extend(ml.iter().cloned());
+            let base = run_bitwise(&deck, &bo, 3, "mldev_base");
+            let mut dvo = bo.clone();
+            dvo.push("parthenon/exec/space=device".into());
+            let dev = run_bitwise(&deck, &dvo, 3, "mldev_dev");
+            assert_bitwise(
+                &format!("multilevel device vs host sched={sched} nw={nw}"),
+                &base,
+                &dev,
+            );
+        }
+    }
+}
+
+#[test]
+fn host_vs_hybrid_multilevel_bitwise() {
+    if !common::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // True co-execution on the multilevel mesh: a forced 50/50 split runs
+    // half the packs on each space in ONE TaskRegion, and the result must
+    // still be bitwise the host run — the general-mode parity claim, not
+    // just the degenerate split=0 endpoint.
+    let deck = common::input_deck("blast", [16, 16, 1], [4, 4, 1], "");
+    let ml = ml_overrides();
+    for nw in [1usize, 4] {
+        let mut bo = vec![
+            format!("parthenon/exec/nworkers={nw}"),
+            "parthenon/exec/sched=stealing".to_string(),
+            "parthenon/exec/pack_size=2".to_string(),
+        ];
+        bo.extend(ml.iter().cloned());
+        let base = run_bitwise(&deck, &bo, 3, "mlhyb_base");
+        let mut ho = bo.clone();
+        ho.push("parthenon/exec/space=hybrid".into());
+        ho.push("parthenon/exec/hybrid_split=0.5".into());
+        let hyb = run_bitwise(&deck, &ho, 3, "mlhyb_hyb");
+        assert_bitwise(&format!("multilevel hybrid 0.5 vs host nw={nw}"), &base, &hyb);
+    }
+}
+
+#[test]
+fn host_vs_device_nonperiodic_bitwise() {
+    if !common::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // Non-periodic physical boundaries on a uniform mesh also route
+    // through general mode (the fast path is periodic-only): the per-pack
+    // BC fill at poll-drain must be bitwise the host's global sweep.
+    let deck = common::input_deck("blast", [16, 16, 1], [8, 8, 1], "");
+    let bo = vec![
+        "parthenon/exec/pack_size=2".to_string(),
+        "parthenon/mesh/ix1_bc=outflow".to_string(),
+        "parthenon/mesh/ox1_bc=reflecting".to_string(),
+        "parthenon/mesh/ix2_bc=outflow".to_string(),
+        "parthenon/mesh/ox2_bc=outflow".to_string(),
+    ];
+    let base = run_bitwise(&deck, &bo, 3, "npdev_base");
+    let mut dvo = bo.clone();
+    dvo.push("parthenon/exec/space=device".into());
+    let dev = run_bitwise(&deck, &dvo, 3, "npdev_dev");
+    assert_bitwise("non-periodic device vs host", &base, &dev);
+}
 
 /// (mean |a-b|, count of cells with |a-b| > thresh).
 fn l1_and_count(a: &[(usize, Vec<f32>)], b: &[(usize, Vec<f32>)], thresh: f32) -> (f64, usize) {

@@ -91,8 +91,9 @@ fn hybrid_split_zero_matches_host_uniform() {
 #[test]
 fn hybrid_split_zero_matches_host_multilevel() {
     let _g = lock();
-    // Multilevel: no DeviceState exists (AMR-capable mesh), so hybrid must
-    // degenerate to the host path — with flux correction live.
+    // Multilevel: a general-mode DeviceState exists now, but split=0.0
+    // pins every pack to the Host space — the run must still be bitwise
+    // the host path, with flux correction live.
     let deck = common::input_deck("blast", [16, 16, 1], [4, 4, 1], "");
     let ml = [
         "parthenon/mesh/refinement=static",
