@@ -10,7 +10,7 @@
 
 use parthenon::comm::{ReduceOp, World};
 use parthenon::config::ParameterInput;
-use parthenon::driver::{EvolutionDriver, HydroSim};
+use parthenon::driver::{EvolutionDriver, SimBuilder};
 
 fn deck(extra: &str) -> String {
     format!(
@@ -31,7 +31,11 @@ fn run_leg(name: &str, input: String, nranks: usize) {
     let t0 = std::time::Instant::now();
     World::launch(nranks, move |rank, world| {
         let pin = ParameterInput::from_str(&input).expect("parse");
-        let mut sim = HydroSim::new(pin, rank, world.clone()).expect("construct");
+        let mut sim = SimBuilder::new(pin)
+            .rank(rank)
+            .world(world.clone())
+            .build()
+            .expect("construct");
         let coll = world.comm(rank, 0);
         let before = coll.allreduce_vec(&sim.history_sums(), ReduceOp::Sum);
         while sim.cycle < 200 {

@@ -5,7 +5,7 @@
 
 use parthenon::comm::World;
 use parthenon::config::ParameterInput;
-use parthenon::driver::{EvolutionDriver, HydroSim};
+use parthenon::driver::{EvolutionDriver, SimBuilder};
 
 const INPUT: &str = r#"
 <parthenon/job>
@@ -48,7 +48,11 @@ fn main() {
     let t0 = std::time::Instant::now();
     World::launch(4, |rank, world| {
         let pin = ParameterInput::from_str(INPUT).expect("parse");
-        let mut sim = HydroSim::new(pin, rank, world).expect("construct");
+        let mut sim = SimBuilder::new(pin)
+            .rank(rank)
+            .world(world)
+            .build()
+            .expect("construct");
         let mut history = Vec::new();
         while sim.time < 1.0 && sim.cycle < 400 {
             sim.step().expect("step");

@@ -5,7 +5,7 @@
 
 use parthenon::comm::World;
 use parthenon::config::ParameterInput;
-use parthenon::driver::{EvolutionDriver, HydroSim};
+use parthenon::driver::{EvolutionDriver, SimBuilder};
 use parthenon::hydro::problems::linear_wave_exact;
 use parthenon::hydro::CONS;
 
@@ -21,7 +21,8 @@ fn l1_error(nx: usize) -> f64 {
     let e2 = err.clone();
     World::launch(1, move |rank, world| {
         let pin = ParameterInput::from_str(&input).unwrap();
-        let mut sim = HydroSim::new(pin, rank, world).unwrap();
+        let mut sim =
+            SimBuilder::new(pin).rank(rank).world(world).build().unwrap();
         let t_end = 1.0;
         while sim.time < t_end {
             if sim.time + sim.dt > t_end {

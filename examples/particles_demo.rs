@@ -4,7 +4,7 @@
 
 use parthenon::comm::{tags, ReduceOp, World};
 use parthenon::config::ParameterInput;
-use parthenon::driver::HydroSim;
+use parthenon::driver::SimBuilder;
 use parthenon::particles::{transport_until_done, Swarm, SwarmField};
 use parthenon::Real;
 
@@ -17,7 +17,8 @@ fn main() {
              <parthenon/time>\ntlim = 1\n<hydro>\ngamma = 1.4\n",
         )
         .unwrap();
-        let mut sim = HydroSim::new(pin, rank, world.clone()).unwrap();
+        let mut sim =
+            SimBuilder::new(pin).rank(rank).world(world.clone()).build().unwrap();
 
         // seed tracers on a ring
         let mut seeded = 0usize;

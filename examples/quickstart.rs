@@ -7,7 +7,7 @@
 //! ```
 
 use parthenon::config::ParameterInput;
-use parthenon::driver::{Driver, HydroSim};
+use parthenon::driver::{Driver, SimBuilder};
 
 const INPUT: &str = r#"
 <parthenon/job>
@@ -64,7 +64,11 @@ fn main() {
             pin.apply_override("parthenon/output0/dt=-1.0").expect("override");
             pin.apply_override("parthenon/history/dt=-1.0").expect("override");
         }
-        let mut sim = HydroSim::new(pin, rank, world).expect("construct");
+        let mut sim = SimBuilder::new(pin)
+            .rank(rank)
+            .world(world)
+            .build()
+            .expect("construct");
         sim.execute().expect("run");
         if rank == 0 {
             println!(

@@ -5,7 +5,7 @@
 
 use parthenon::comm::{ReduceOp, World};
 use parthenon::config::ParameterInput;
-use parthenon::driver::{EvolutionDriver, HydroSim};
+use parthenon::driver::{EvolutionDriver, SimBuilder};
 
 const INPUT: &str = r#"
 <parthenon/job>
@@ -53,7 +53,11 @@ fn main() {
     let ncycles: u64 = if parthenon::util::benchkit::quick_mode() { 5 } else { 60 };
     World::launch(4, move |rank, world| {
         let pin = ParameterInput::from_str(INPUT).expect("parse");
-        let mut sim = HydroSim::new(pin, rank, world.clone()).expect("construct");
+        let mut sim = SimBuilder::new(pin)
+            .rank(rank)
+            .world(world.clone())
+            .build()
+            .expect("construct");
         let coll = world.comm(rank, 0);
         let before = coll.allreduce_vec(&sim.history_sums(), ReduceOp::Sum);
         while sim.time < 0.05 && sim.cycle < ncycles {

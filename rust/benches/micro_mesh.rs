@@ -10,7 +10,7 @@ use std::sync::{Arc, Mutex};
 use parthenon::balance;
 use parthenon::comm::World;
 use parthenon::config::ParameterInput;
-use parthenon::driver::{regrid, EvolutionDriver, HydroSim};
+use parthenon::driver::{regrid, EvolutionDriver, SimBuilder};
 use parthenon::mesh::{AmrFlag, BlockTree};
 use parthenon::util::benchkit::{quick_mode, run, write_results, Sample, Table};
 
@@ -34,7 +34,8 @@ fn bench_churn_rebalance(mode: &str, nx: usize, reps: usize, churns: usize) -> S
     let (s2, m2) = (secs.clone(), moved.clone());
     World::launch(2, move |rank, world| {
         let pin = ParameterInput::from_str(&deck).unwrap();
-        let mut sim = HydroSim::new(pin, rank, world).unwrap();
+        let mut sim =
+            SimBuilder::new(pin).rank(rank).world(world).build().unwrap();
         sim.step().unwrap(); // warm the caches and the cost EWMA
         // shuttle the boundary between the ranks: alternate two cuts a
         // few blocks apart so every churn migrates the same delta

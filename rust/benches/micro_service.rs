@@ -1,0 +1,165 @@
+//! Service-lane micro-benchmark: many small concurrent simulations in one
+//! process (the regime where per-launch overhead, not FLOPs, bounds
+//! throughput — the cross-tenant generalization of the paper's pack-size
+//! amortization, Sec. 3.6/Fig. 8). Three rows over the SAME tenant fleet:
+//! one-at-a-time sequential runs, the service engine with cross-sim pack
+//! batching off, and with batching on — each reporting aggregate
+//! zone-cycles/s and the p99 per-cycle latency.
+
+use parthenon::config::ParameterInput;
+use parthenon::driver::{EvolutionDriver, SimBuilder};
+use parthenon::service::{Engine, EngineConfig};
+use parthenon::util::benchkit::{quick_mode, write_results, Sample, Table};
+use parthenon::util::stealing::StealPolicy;
+
+/// One tiny device tenant: 2 packs of 2 blocks each, so a 64-tenant fleet
+/// is 128 same-key launches per stage for batching to fuse.
+const NX: usize = 16;
+
+fn tenant_pin() -> ParameterInput {
+    let deck = format!(
+        "<parthenon/job>\nproblem = kh\nquiet = true\n\n\
+         <parthenon/mesh>\nnx1 = {NX}\nnx2 = {NX}\n\n\
+         <parthenon/meshblock>\nnx1 = 8\nnx2 = 8\n\n\
+         <parthenon/time>\ntlim = 100.0\nnlim = -1\n\n\
+         <parthenon/exec>\nspace = device\nstrategy = perpack\npack_size = 2\n\n\
+         <hydro>\ngamma = 1.4\ncfl = 0.3\n"
+    );
+    ParameterInput::from_str(&deck).unwrap()
+}
+
+fn p99_ms(lat: &mut Vec<f64>) -> f64 {
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((lat.len() as f64 * 0.99).ceil() as usize).saturating_sub(1);
+    lat.get(idx).copied().unwrap_or(0.0) * 1e3
+}
+
+/// Sequential oracle: each tenant steps to completion alone. A "cycle" is
+/// one tenant advancing once (the fleet needs nsims of them per sweep).
+fn bench_sequential(nsims: usize, cycles: usize, reps: usize) -> (Sample, f64) {
+    let mut secs = Vec::new();
+    let mut lat = Vec::new();
+    for rep in 0..reps + 1 {
+        let mut sims: Vec<_> = (0..nsims)
+            .map(|_| SimBuilder::new(tenant_pin()).build().unwrap())
+            .collect();
+        let t0 = std::time::Instant::now();
+        for _ in 0..cycles {
+            for sim in sims.iter_mut() {
+                let tc = std::time::Instant::now();
+                sim.step().unwrap();
+                if rep > 0 {
+                    lat.push(tc.elapsed().as_secs_f64());
+                }
+            }
+        }
+        if rep > 0 {
+            secs.push(t0.elapsed().as_secs_f64());
+        }
+    }
+    let work = (NX * NX * nsims * cycles) as f64;
+    (Sample { label: "sequential".into(), secs, work }, p99_ms(&mut lat))
+}
+
+/// The service engine: all tenants live at once, one merged region per
+/// cycle. A "cycle" is one engine step advancing the WHOLE fleet (its
+/// latency is the fleet-wide cycle time).
+fn bench_service(
+    nsims: usize,
+    cycles: usize,
+    reps: usize,
+    batching: bool,
+) -> (Sample, f64, parthenon::metrics::ServiceStats) {
+    let label = if batching { "service+batch" } else { "service" };
+    let mut secs = Vec::new();
+    let mut lat = Vec::new();
+    let mut stats = parthenon::metrics::ServiceStats::default();
+    for rep in 0..reps + 1 {
+        let cfg = EngineConfig {
+            nworkers: 0, // auto, like a solo run
+            sched: StealPolicy::Heaviest,
+            multiplex: true,
+            batching,
+            artifact_dir: None,
+        };
+        let mut engine = Engine::new(cfg).unwrap();
+        for _ in 0..nsims {
+            engine.add_session(tenant_pin()).unwrap();
+        }
+        let t0 = std::time::Instant::now();
+        for _ in 0..cycles {
+            let tc = std::time::Instant::now();
+            engine.step().unwrap();
+            if rep > 0 {
+                lat.push(tc.elapsed().as_secs_f64());
+            }
+        }
+        if rep > 0 {
+            secs.push(t0.elapsed().as_secs_f64());
+        }
+        stats = engine.stats();
+    }
+    let work = (NX * NX * nsims * cycles) as f64;
+    (Sample { label: label.into(), secs, work }, p99_ms(&mut lat), stats)
+}
+
+fn main() {
+    let quick = quick_mode();
+    let (nsims, cycles, reps) = if quick { (8, 4, 2) } else { (64, 8, 3) };
+
+    let mut samples = Vec::new();
+    let mut table = Table::new(&["service lane", "median", "zcps", "p99 cycle"]);
+
+    let (s, p99) = bench_sequential(nsims, cycles, reps);
+    table.row(vec![
+        format!("{nsims} sims, one at a time"),
+        format!("{:.1} ms", s.median_secs() * 1e3),
+        format!("{:.3e}", s.throughput()),
+        format!("{p99:.2} ms/sim-cycle"),
+    ]);
+    let p99_seq = p99;
+    samples.push(s);
+
+    let (s, p99_nb, stats_nb) = bench_service(nsims, cycles, reps, false);
+    table.row(vec![
+        format!("{nsims} concurrent (no batching)"),
+        format!("{:.1} ms", s.median_secs() * 1e3),
+        format!("{:.3e}", s.throughput()),
+        format!("{p99_nb:.2} ms/fleet-cycle"),
+    ]);
+    samples.push(s);
+
+    let (s, p99_b, stats_b) = bench_service(nsims, cycles, reps, true);
+    table.row(vec![
+        format!("{nsims} concurrent (batched)"),
+        format!("{:.1} ms", s.median_secs() * 1e3),
+        format!("{:.3e}", s.throughput()),
+        format!("{p99_b:.2} ms/fleet-cycle"),
+    ]);
+    samples.push(s);
+
+    println!();
+    table.print();
+    println!(
+        "batched: {} fused launches saved {} solo launches; {} cross-sim steals",
+        stats_b.batched_launches, stats_b.launches_saved, stats_b.cross_sim_steals
+    );
+    assert_eq!(
+        stats_nb.batched_launches, 0,
+        "batching off must never fuse launches"
+    );
+    write_results(
+        "micro_service",
+        &samples,
+        vec![
+            ("quick", quick.into()),
+            ("nsims", nsims.into()),
+            ("p99_ms_sequential", p99_seq.into()),
+            ("p99_ms_service", p99_nb.into()),
+            ("p99_ms_service_batched", p99_b.into()),
+            ("batched_launches", (stats_b.batched_launches as i64).into()),
+            ("launches_saved", (stats_b.launches_saved as i64).into()),
+            ("cross_sim_steals", (stats_b.cross_sim_steals as i64).into()),
+        ],
+    );
+}

@@ -15,4 +15,4 @@
 
 mod parameter_input;
 
-pub use parameter_input::ParameterInput;
+pub use parameter_input::{Override, ParameterInput};

@@ -5,6 +5,56 @@ use std::path::Path;
 
 use crate::error::{Error, Result};
 
+/// A typed configuration override: one `<block>` key set to a value.
+///
+/// The CLI spelling `block/key=value` parses via [`std::str::FromStr`]
+/// (parse once, at the program edge — a malformed spec is an
+/// [`Error::Config`] before any rank thread launches, never a panic inside
+/// one), and [`std::fmt::Display`] round-trips it for logs and decks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Override {
+    pub block: String,
+    pub key: String,
+    pub value: String,
+}
+
+impl Override {
+    pub fn new(
+        block: impl Into<String>,
+        key: impl Into<String>,
+        value: impl ToString,
+    ) -> Self {
+        Override {
+            block: block.into(),
+            key: key.into(),
+            value: value.to_string(),
+        }
+    }
+}
+
+impl std::str::FromStr for Override {
+    type Err = Error;
+
+    fn from_str(spec: &str) -> Result<Self> {
+        let (path, value) = spec
+            .split_once('=')
+            .ok_or_else(|| Error::config(format!("bad override {spec:?}")))?;
+        let (block, key) = path
+            .rsplit_once('/')
+            .ok_or_else(|| Error::config(format!("bad override path {path:?}")))?;
+        if block.is_empty() || key.is_empty() {
+            return Err(Error::config(format!("bad override path {path:?}")));
+        }
+        Ok(Override::new(block, key, value))
+    }
+}
+
+impl std::fmt::Display for Override {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}={}", self.block, self.key, self.value)
+    }
+}
+
 /// Parsed input file: `<block>` sections of `key = value` pairs.
 ///
 /// Getter methods with an `_or` suffix record the default into the store so
@@ -62,16 +112,18 @@ impl ParameterInput {
         Ok(pin)
     }
 
-    /// Apply a CLI override of the form `block/key=value`.
+    /// Apply a CLI override of the form `block/key=value` (parse + apply in
+    /// one step; prefer parsing to [`Override`] once at the program edge and
+    /// [`ParameterInput::apply`] thereafter).
     pub fn apply_override(&mut self, spec: &str) -> Result<()> {
-        let (path, value) = spec
-            .split_once('=')
-            .ok_or_else(|| Error::config(format!("bad override {spec:?}")))?;
-        let (block, key) = path
-            .rsplit_once('/')
-            .ok_or_else(|| Error::config(format!("bad override path {path:?}")))?;
-        self.set(block, key, value);
+        self.apply(&spec.parse::<Override>()?);
         Ok(())
+    }
+
+    /// Apply an already-parsed [`Override`]. Infallible: a well-formed
+    /// override always lands (unknown keys are simply never read).
+    pub fn apply(&mut self, ov: &Override) {
+        self.set(&ov.block, &ov.key, &ov.value);
     }
 
     pub fn set(&mut self, block: &str, key: &str, value: impl ToString) {
@@ -229,6 +281,24 @@ eos = adiabatic
         assert_eq!(pin.get_int("parthenon/mesh", "nx1").unwrap(), Some(128));
         assert!(pin.apply_override("garbage").is_err());
         assert!(pin.apply_override("noslash=3").is_err());
+    }
+
+    #[test]
+    fn typed_override_roundtrip() {
+        let ov: Override = "parthenon/mesh/nx1=128".parse().unwrap();
+        assert_eq!(ov, Override::new("parthenon/mesh", "nx1", 128));
+        assert_eq!(ov.to_string(), "parthenon/mesh/nx1=128");
+        let mut pin = ParameterInput::from_str(SAMPLE).unwrap();
+        pin.apply(&ov);
+        assert_eq!(pin.get_int("parthenon/mesh", "nx1").unwrap(), Some(128));
+        // malformed specs are Error::Config at parse time, never a panic
+        assert!("garbage".parse::<Override>().is_err());
+        assert!("noslash=3".parse::<Override>().is_err());
+        assert!("/key=3".parse::<Override>().is_err());
+        assert!(matches!(
+            "garbage".parse::<Override>().unwrap_err(),
+            Error::Config(_)
+        ));
     }
 
     #[test]

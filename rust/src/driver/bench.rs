@@ -3,9 +3,9 @@
 
 use std::sync::{Arc, Mutex};
 
-use super::HydroSim;
+use super::SimBuilder;
 use crate::comm::World;
-use crate::config::ParameterInput;
+use crate::config::{Override, ParameterInput};
 use crate::driver::EvolutionDriver;
 use crate::metrics::HybridStats;
 
@@ -36,16 +36,24 @@ pub fn measure(deck: &str, overrides: &[&str], nranks: usize, warm: u64, meas: u
         Arc::new(Mutex::new(vec![(0.0, 0, 0, 0.0, HybridStats::default()); nranks]));
     let o2 = out.clone();
     let deck = deck.to_string();
-    let overrides: Vec<String> = overrides.iter().map(|s| s.to_string()).collect();
+    // parse once at the edge; rank closures apply the typed overrides
+    let overrides: Vec<Override> = overrides
+        .iter()
+        .map(|s| s.parse().expect("bench override"))
+        .collect();
     World::launch(nranks, move |rank, world| {
         let mut pin = ParameterInput::from_str(&deck).expect("bench deck parses");
         for ov in &overrides {
-            pin.apply_override(ov).expect("bench override");
+            pin.apply(ov);
         }
         // never stop early
         pin.set("parthenon/time", "tlim", 1e30);
         pin.set("parthenon/time", "nlim", -1);
-        let mut sim = HydroSim::new(pin, rank, world).expect("bench sim");
+        let mut sim = SimBuilder::new(pin)
+            .rank(rank)
+            .world(world)
+            .build()
+            .expect("bench sim");
         for _ in 0..warm {
             sim.step().expect("warm step");
         }

@@ -40,6 +40,7 @@
 //! [`super::hybrid::HybridPartition`] — sees measured Device costs.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::{DtColl, FluxRecv, HydroSim, SpaceCtx};
@@ -50,7 +51,8 @@ use crate::hydro::native::{FluxArrays, StageCoeffs};
 use crate::hydro::CONS;
 use crate::mesh::{BoundaryCondition, IndexShape, LogicalLocation, Mesh, NeighborKind};
 use crate::mesh_data::{MeshData, PackDesc, PackStaging};
-use crate::runtime::{default_artifact_dir, ArtifactKey, Runtime, ScalArgs};
+use crate::runtime::{ArtifactKey, Runtime, ScalArgs};
+use crate::service::{BatchTicket, FusedParcel};
 use crate::tasks::{TaskId, TaskList, TaskStatus, NONE};
 use crate::util::backoff::ProgressWait;
 use crate::util::stealing::StealPolicy;
@@ -156,8 +158,11 @@ fn build_gen_routes(mesh: &Mesh) -> GenRoutes {
 }
 
 /// Per-rank device state: runtime + routing; staging lives in [`MeshData`].
+/// The runtime is INJECTED (shared `Arc`), never constructed here — one
+/// process constructs exactly one [`Runtime`], whether it drives one sim
+/// or a whole [`crate::service::Engine`] of them.
 pub struct DeviceState {
-    pub rt: Runtime,
+    pub rt: Arc<Runtime>,
     shape: IndexShape,
     pub(crate) strategy: PackStrategy,
     impl_: String,
@@ -204,9 +209,10 @@ pub struct DeviceState {
 }
 
 impl DeviceState {
-    /// Build the device state and re-plan `sim.mesh_data` onto the artifact
-    /// pack sizes (the one pack partition both paths share).
-    pub fn new(sim: &mut HydroSim) -> Result<DeviceState> {
+    /// Build the device state against an injected shared runtime and
+    /// re-plan `sim.mesh_data` onto the artifact pack sizes (the one pack
+    /// partition both paths share).
+    pub fn new(sim: &mut HydroSim, rt: Arc<Runtime>) -> Result<DeviceState> {
         let mesh = &sim.mesh;
         // Uniform fully-periodic meshes take the fast path (flat routing
         // tables + fused stage); everything else snapshots the general
@@ -214,7 +220,6 @@ impl DeviceState {
         let general = mesh.tree.max_level() != 0
             || mesh.cfg.periodic_flags()[..mesh.cfg.dim].iter().any(|p| !p);
         let shape = mesh.cfg.index_shape();
-        let rt = Runtime::new(default_artifact_dir())?;
 
         let strategy = sim.sp.strategy;
         let dim = mesh.cfg.dim;
@@ -589,7 +594,7 @@ impl DeviceState {
         }
     }
 
-    fn key(&self, kind: &str, nb: usize) -> ArtifactKey {
+    pub(crate) fn key(&self, kind: &str, nb: usize) -> ArtifactKey {
         let mut k = ArtifactKey::new(kind, self.shape.dim, self.shape_n(), nb);
         // pallas impl only exists for some variants; fall back to jnp
         if self.impl_ == "pallas" {
@@ -1146,7 +1151,7 @@ pub(crate) struct DevPackCtx<'a> {
     pub comm: &'a Comm,
     pub minima: &'a [AtomicU64],
     pub dt_result: &'a AtomicU64,
-    pub coll: &'a DtColl<'a>,
+    pub coll: &'a DtColl,
     pub scal: ScalArgs,
     /// Package CFL: the per-pack dt partial is published CFL-scaled in
     /// f64, so the merged fold compares finished local dts across spaces.
@@ -1165,9 +1170,60 @@ pub(crate) struct DevPackCtx<'a> {
     /// Shared exchange topology (general flux-correction sends walk the
     /// tree for coarse face neighbors, exactly like the host list).
     pub topo: ExchTopo<'a>,
+    /// Cross-simulation batch membership (service engine, fast path only):
+    /// `Some` routes this pack's launch through the batch rendezvous —
+    /// post staging, wait for the co-batched packs of OTHER sims, one
+    /// fused launch, per-sim scatter. `None` (solo runs, general mode,
+    /// dissolved single-sim groups) launches directly.
+    pub batch: Option<BatchTicket>,
     pub error: Option<Error>,
     /// Shared across packs: first error drains every list fast.
     pub abort: &'a AtomicBool,
+}
+
+impl DevPackCtx<'_> {
+    /// One poll of the batched-launch rendezvous (PerPack fast path).
+    ///
+    /// First poll donates the pack's staging buffers (`mem::take`) to the
+    /// group; every poll then asks the group to launch — the poller that
+    /// finds all parcels posted runs ONE [`Runtime::fused_batch`] over the
+    /// whole group and scatters per-part results; everyone else returns
+    /// `Incomplete` until the results land, then reclaims its buffers.
+    /// The per-part dts/seconds land exactly where the solo launch puts
+    /// them, so cost EWMAs and dt bits stay per-tenant.
+    fn launch_batched(&mut self) -> Result<TaskStatus> {
+        let ticket = self.batch.as_mut().expect("batched launch has a ticket");
+        if !ticket.posted {
+            ticket.group.post(
+                ticket.slot,
+                FusedParcel {
+                    u: std::mem::take(&mut self.p.u),
+                    u0: std::mem::take(&mut self.p.u0),
+                    bufs_in: std::mem::take(&mut self.p.bufs_in),
+                    bufs_out: std::mem::take(&mut self.p.bufs_out),
+                    scal: self.scal,
+                },
+            );
+            ticket.posted = true;
+        }
+        let Some((parcel, dts, secs)) = ticket.group.try_collect(&self.dev.rt, ticket.slot)?
+        else {
+            return Ok(TaskStatus::Incomplete);
+        };
+        self.p.u = parcel.u;
+        self.p.u0 = parcel.u0;
+        self.p.bufs_in = parcel.bufs_in;
+        self.p.bufs_out = parcel.bufs_out;
+        if self.compute_dt {
+            self.dts.copy_from_slice(&dts);
+        }
+        // same spread the solo launch applies (launch seconds per block)
+        let per_block = secs / self.d.nb.max(1) as f64;
+        for s in self.secs.iter_mut() {
+            *s += per_block;
+        }
+        Ok(TaskStatus::Complete)
+    }
 }
 
 /// Produce the device-space task list for one pack into `list` (part of
@@ -1194,6 +1250,20 @@ pub(crate) fn add_dev_pack_list(
         let SpaceCtx::Dev(c) = ctx else { return TaskStatus::Complete };
         if c.abort.load(Ordering::SeqCst) {
             return TaskStatus::Complete;
+        }
+        if c.batch.as_ref().is_some_and(|t| t.group.is_active()) {
+            // cross-sim batched launch: rendezvous with the co-batched
+            // packs of other sessions instead of launching solo
+            return match c.launch_batched() {
+                Ok(st) => st,
+                Err(e) => {
+                    if c.error.is_none() {
+                        c.error = Some(e);
+                    }
+                    c.abort.store(true, Ordering::SeqCst);
+                    TaskStatus::Complete
+                }
+            };
         }
         let DevPackCtx { dev, d, p, dts, secs, tmp, scal, compute_dt, error, abort, .. } =
             c;

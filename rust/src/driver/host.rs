@@ -255,7 +255,7 @@ pub(crate) struct HostPackCtx<'a> {
     /// Result slot written by the cross-list fold.
     pub dt_result: &'a AtomicU64,
     /// The shared dt collective state (post counter + in-flight handle).
-    pub coll: &'a DtColl<'a>,
+    pub coll: &'a DtColl,
     pub shape: IndexShape,
     pub gamma: Real,
     pub co: StageCoeffs,

@@ -40,13 +40,13 @@ pub use host::{HostExec, OverlapStats};
 pub use recover::{run_recoverable, RecoveryReport};
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::bvals::{self, ExchTopo, PackExchange, PackStrategy};
 use crate::comm::{
     tags, CollHandle, CollMode, Comm, FaultConfig, Payload, ReduceOp, World,
 };
-use crate::config::ParameterInput;
+use crate::config::{Override, ParameterInput};
 use crate::error::{Error, Result};
 use crate::hydro::native::{self, FluxArrays, StageCoeffs, RK2_STAGES};
 use crate::hydro::problems::{self, Problem};
@@ -165,9 +165,11 @@ pub trait MultiStageDriver: EvolutionDriver {
 /// worker pool. The per-pack `t_dt` tasks of BOTH spaces publish finished
 /// f64 local dts (CFL included), so one fold serves host, device and
 /// mixed assignments alike.
-pub(crate) struct DtColl<'a> {
-    /// `Some` only when the overlapped reduction is active this stage.
-    pub comm: Option<&'a Comm>,
+pub(crate) struct DtColl {
+    /// `Some` only when the overlapped reduction is active this stage
+    /// (owned clone of the sim's collective comm, so a multi-sim region
+    /// can hold one `DtColl` per tenant without borrowing the sims).
+    pub comm: Option<Comm>,
     pub handle: Mutex<Option<CollHandle>>,
     /// How many packs have published their partial min.
     pub dt_done: AtomicUsize,
@@ -180,7 +182,7 @@ pub(crate) struct DtColl<'a> {
 pub(crate) struct CollCtx<'a> {
     pub minima: &'a [AtomicU64],
     pub dt_result: &'a AtomicU64,
-    pub coll: &'a DtColl<'a>,
+    pub coll: &'a DtColl,
     pub error: Option<Error>,
     pub abort: &'a AtomicBool,
 }
@@ -195,15 +197,6 @@ pub(crate) enum SpaceCtx<'a> {
 }
 
 impl SpaceCtx<'_> {
-    /// The shared dt-reduction slots (same pointers in every variant).
-    fn dt_slots(&self) -> (&[AtomicU64], &AtomicU64) {
-        match self {
-            SpaceCtx::Host(c) => (c.minima, c.dt_result),
-            SpaceCtx::Dev(c) => (c.minima, c.dt_result),
-            SpaceCtx::Coll(c) => (c.minima, c.dt_result),
-        }
-    }
-
     fn take_error(&mut self) -> Option<Error> {
         match self {
             SpaceCtx::Host(c) => c.error.take(),
@@ -213,36 +206,102 @@ impl SpaceCtx<'_> {
     }
 }
 
+/// One tenant's contribution to a (possibly multi-simulation) stage
+/// region: the sim, its taken-out space engines, and this cycle's dt.
+/// [`run_cycle`] builds one for the classic solo path; the service engine
+/// ([`crate::service::Engine`]) builds one per live session and hands the
+/// whole slice to [`run_cycle_multi`].
+pub(crate) struct SimSlot<'s> {
+    pub sim: &'s mut HydroSim,
+    pub host: Option<&'s mut HostExec>,
+    pub dev: Option<&'s mut DeviceState>,
+    pub dt: Real,
+}
+
+/// Cross-slot stage configuration — the service engine's knobs.
+/// [`StageShared::solo`] reproduces the single-sim behavior exactly:
+/// worker shape derived from the slot's own engines, no batching, no
+/// service counters.
+pub(crate) struct StageShared<'e> {
+    /// Worker-pool override (the engine's shared pool); `None` derives
+    /// the shape from the FIRST slot's engines, as solo runs always did.
+    pub workers: Option<(usize, StealPolicy)>,
+    /// Fuse same-[`crate::runtime::ArtifactKey`] device packs of
+    /// DIFFERENT slots into one batched launch.
+    pub batching: bool,
+    /// Harvest target for the cross-sim counters
+    /// ([`crate::metrics::ServiceStats`]).
+    pub svc: Option<&'e crate::service::ServiceCounters>,
+}
+
+impl StageShared<'_> {
+    pub(crate) fn solo() -> Self {
+        StageShared { workers: None, batching: false, svc: None }
+    }
+}
+
 /// One full cycle (all RK stages) through the merged task region — the
 /// single code path every execution space (and their hybrid) runs. The
 /// caller hands in whichever space engines exist; `run_stage` asks each
 /// for task lists covering exactly the packs assigned to it.
 pub(crate) fn run_cycle(
     sim: &mut HydroSim,
-    mut host: Option<&mut HostExec>,
-    mut dev: Option<&mut DeviceState>,
+    host: Option<&mut HostExec>,
+    dev: Option<&mut DeviceState>,
     dt: Real,
 ) -> Result<()> {
-    sim.mesh_data.validate(&sim.mesh)?;
-    // Cycle-start snapshots. Each present space snapshots ALL blocks /
-    // packs — for packs assigned to the other space the copy is of stale
-    // data and is never read, which keeps the snapshot independent of the
-    // assignment (and of mid-run migrations).
-    if let Some(h) = host.as_deref_mut() {
-        for (bi, b) in sim.mesh.blocks.iter().enumerate() {
-            h.u0[bi].copy_from_slice(b.data.get(CONS)?.as_slice());
+    let mut slots = [SimSlot { sim, host, dev, dt }];
+    run_cycle_multi(&mut slots, &StageShared::solo())
+}
+
+/// N tenants' cycles through SHARED per-stage task regions: every slot
+/// snapshots its cycle-start state, then each RK stage runs as ONE merged
+/// region over every slot's packs ([`run_stage_multi`]) so idle workers
+/// drain whichever tenant has work.
+pub(crate) fn run_cycle_multi(
+    slots: &mut [SimSlot<'_>],
+    shared: &StageShared<'_>,
+) -> Result<()> {
+    for slot in slots.iter_mut() {
+        slot.sim.mesh_data.validate(&slot.sim.mesh)?;
+        // Cycle-start snapshots. Each present space snapshots ALL blocks /
+        // packs — for packs assigned to the other space the copy is of
+        // stale data and is never read, which keeps the snapshot
+        // independent of the assignment (and of mid-run migrations).
+        if let Some(h) = slot.host.as_deref_mut() {
+            for (bi, b) in slot.sim.mesh.blocks.iter().enumerate() {
+                h.u0[bi].copy_from_slice(b.data.get(CONS)?.as_slice());
+            }
         }
-    }
-    if dev.is_some() {
-        let (_descs, staging) = sim.mesh_data.parts_mut();
-        for p in staging.iter_mut() {
-            p.u0.copy_from_slice(&p.u);
+        if slot.dev.is_some() {
+            let (_descs, staging) = slot.sim.mesh_data.parts_mut();
+            for p in staging.iter_mut() {
+                p.u0.copy_from_slice(&p.u);
+            }
         }
     }
     for (si, co) in RK2_STAGES.iter().enumerate() {
-        run_stage(sim, host.as_deref_mut(), dev.as_deref_mut(), *co, si, dt)?;
+        run_stage_multi(slots, *co, si, shared)?;
     }
     Ok(())
+}
+
+/// Per-slot stage state that must outlive the region's borrows: the dt
+/// fold slots, the overlapped-collective slot, and the pass-1 computed
+/// pack layout that the pass-2 context builder and the epilogue both
+/// read.
+struct StageAux {
+    npacks: usize,
+    spaces: Vec<PackSpace>,
+    pack_costs: Vec<f64>,
+    scal: Option<crate::runtime::ScalArgs>,
+    overlap_coll: bool,
+    hybrid_mode: bool,
+    /// Global index of this slot's first task list in the merged region.
+    list_base: usize,
+    minima: Vec<AtomicU64>,
+    dt_result: AtomicU64,
+    coll: DtColl,
 }
 
 /// One RK stage as ONE merged task region: every pack contributes the
@@ -255,392 +314,513 @@ pub(crate) fn run_cycle(
 /// serially on one worker (the bitwise oracle).
 pub(crate) fn run_stage(
     sim: &mut HydroSim,
-    mut host: Option<&mut HostExec>,
-    mut dev: Option<&mut DeviceState>,
+    host: Option<&mut HostExec>,
+    dev: Option<&mut DeviceState>,
     co: StageCoeffs,
     si: usize,
     dt: Real,
 ) -> Result<()> {
-    sim.mesh_data.validate(&sim.mesh)?;
-    let shape = sim.mesh.cfg.index_shape();
-    let gamma = sim.pkg.gamma;
-    let cfl = sim.pkg.cfl;
-    let stall = sim.world.stall_limit();
-    let multilevel = sim.is_multilevel();
-    let hybrid_mode = sim.sp.exec == ExecSpace::Hybrid;
-    let npacks = sim.mesh_data.npacks();
-    let spaces: Vec<PackSpace> = sim.mesh_data.pack_spaces().to_vec();
-    let pack_ranges = sim.mesh_data.block_ranges();
-    let mut pack_costs = sim.mesh_data.pack_costs(&sim.mesh);
-    let any_dev = spaces.iter().any(|s| *s == PackSpace::Device);
-    let any_host = spaces.iter().any(|s| *s == PackSpace::Host);
-    if any_dev && dev.is_none() {
-        return Err(Error::Runtime(
-            "packs assigned to the Device space without a DeviceState".into(),
-        ));
-    }
-    if any_host && host.is_none() {
-        return Err(Error::Runtime(
-            "packs assigned to the Host space without a HostExec".into(),
-        ));
-    }
-    let scal = match dev.as_deref() {
-        Some(d) if any_dev => {
-            if d.strategy == PackStrategy::Native {
-                return Err(Error::Runtime("strategy=native is the Host path".into()));
-            }
-            Some(d.scal(co, dt, &sim.mesh))
-        }
-        _ => None,
-    };
-    // Worker pool shape: the host engine governs whenever it exists (its
-    // worker count was resolved against the final pack count); a pure
-    // device run sizes off the device engine. Phased = the serial oracle.
-    let (mut nworkers, mut policy) = if let Some(h) = host.as_deref() {
-        (h.nworkers, h.policy)
-    } else if let Some(d) = dev.as_deref() {
-        (d.stage_workers(npacks), d.policy)
-    } else {
-        (1, StealPolicy::NoSteal)
-    };
-    if sim.sp.overlap == OverlapMode::Phased {
-        nworkers = 1;
-        policy = StealPolicy::NoSteal;
-    }
-    // The merged dt reduction runs on the final RK stage only: per-pack
-    // partial minima (f64 bits — both spaces publish finished local dts)
-    // + one cross-list fold. With tree collectives the GLOBAL reduction
-    // also runs inside the region (posted/drained by an extra task list,
-    // overlapped with the tail packs' boundary polls); flat mode keeps
-    // the blocking post-region allreduce as the oracle.
-    let final_stage = si + 1 == RK2_STAGES.len();
-    let overlap_coll = final_stage && sim.sp.coll == CollMode::Tree;
-    let minima: Vec<AtomicU64> = if final_stage {
-        (0..npacks).map(|_| AtomicU64::new(f64::INFINITY.to_bits())).collect()
-    } else {
-        Vec::new()
-    };
-    let dt_result = AtomicU64::new(f64::INFINITY.to_bits());
-    let cross_steals = AtomicU64::new(0);
-    let mut first_error: Option<Error> = None;
-    let host_present = host.is_some();
+    let mut slots = [SimSlot { sim, host, dev, dt }];
+    run_stage_multi(&mut slots, co, si, &StageShared::solo())
+}
 
-    // Host scratch moves into a bounded pool (≤ nworkers concurrent flux
-    // tasks) and is restored below, also on error paths.
-    let scratch_pool = host
-        .as_deref_mut()
-        .map(|h| host::ScratchPool::new(std::mem::take(&mut h.scratch)));
-    // Device per-pack buffers are taken out so the region's contexts can
-    // hold disjoint `&mut` slices while sharing `&DeviceState`.
-    let mut dev_taken = dev.as_deref_mut().map(|d| {
-        if d.tmps.len() != npacks {
-            d.tmps.resize_with(npacks, Vec::new);
+/// One RK stage of EVERY slot as ONE merged task region. Pass 1 walks the
+/// slots sequentially — validation, pack layout, per-slot dt/collective
+/// state, and (service engine) batch enlistment of same-key device packs.
+/// Pass 2 builds one context + one task list per pack of every slot into
+/// the shared region and executes it on the shared pool. The epilogue
+/// restores the taken engine state, folds each slot's dt, and applies the
+/// physical BCs — all per slot, exactly as the solo stage always did.
+pub(crate) fn run_stage_multi(
+    slots: &mut [SimSlot<'_>],
+    co: StageCoeffs,
+    si: usize,
+    shared: &StageShared<'_>,
+) -> Result<()> {
+    if slots.is_empty() {
+        return Ok(());
+    }
+    let final_stage = si + 1 == RK2_STAGES.len();
+    let multi = slots.len() > 1;
+
+    // ---- pass 1: per-slot validation, pack layout, batch enlistment ----
+    let mut registry = crate::service::BatchRegistry::new();
+    let mut auxes: Vec<StageAux> = Vec::with_capacity(slots.len());
+    let mut tickets: Vec<Vec<Option<crate::service::BatchTicket>>> =
+        Vec::with_capacity(slots.len());
+    let mut nlists_total = 0usize;
+    let mut stall = std::time::Duration::ZERO;
+    let mut any_phased = false;
+    let mut hybrid_any = false;
+    for (sid, slot) in slots.iter_mut().enumerate() {
+        let sim = &mut *slot.sim;
+        sim.mesh_data.validate(&sim.mesh)?;
+        stall = stall.max(sim.world.stall_limit());
+        let hybrid_mode = sim.sp.exec == ExecSpace::Hybrid;
+        hybrid_any |= hybrid_mode;
+        any_phased |= sim.sp.overlap == OverlapMode::Phased;
+        let npacks = sim.mesh_data.npacks();
+        let spaces: Vec<PackSpace> = sim.mesh_data.pack_spaces().to_vec();
+        let pack_costs = sim.mesh_data.pack_costs(&sim.mesh);
+        let any_dev = spaces.iter().any(|s| *s == PackSpace::Device);
+        let any_host = spaces.iter().any(|s| *s == PackSpace::Host);
+        if any_dev && slot.dev.is_none() {
+            return Err(Error::Runtime(
+                "packs assigned to the Device space without a DeviceState".into(),
+            ));
         }
-        (
-            std::mem::take(&mut d.last_dts),
-            std::mem::take(&mut d.block_secs),
-            std::mem::take(&mut d.tmps),
-            std::mem::take(&mut d.gen_flux),
-        )
-    });
-    {
-        let HydroSim { mesh, mesh_data, pkg, comm_cons, comm_flux, comm_coll, .. } =
-            sim;
-        let coll_slot = DtColl {
-            comm: if overlap_coll && npacks > 0 { Some(&*comm_coll) } else { None },
+        if any_host && slot.host.is_none() {
+            return Err(Error::Runtime(
+                "packs assigned to the Host space without a HostExec".into(),
+            ));
+        }
+        let scal = match slot.dev.as_deref() {
+            Some(d) if any_dev => {
+                if d.strategy == PackStrategy::Native {
+                    return Err(Error::Runtime(
+                        "strategy=native is the Host path".into(),
+                    ));
+                }
+                Some(d.scal(co, slot.dt, &sim.mesh))
+            }
+            _ => None,
+        };
+        // Cross-sim batching (service engine): fast-path PerPack device
+        // packs enlist by artifact key; a group that ends up single-sim
+        // is dissolved at seal (solo launch), so every surviving batch is
+        // genuinely cross-tenant.
+        let mut tks: Vec<Option<crate::service::BatchTicket>> =
+            (0..npacks).map(|_| None).collect();
+        if shared.batching && multi {
+            if let Some(d) = slot.dev.as_deref() {
+                if !d.is_general() && d.strategy == PackStrategy::PerPack {
+                    let ranges = sim.mesh_data.block_ranges();
+                    for (pi, tk) in tks.iter_mut().enumerate() {
+                        if spaces[pi] == PackSpace::Device {
+                            let key = d.key("fused", ranges[pi].len());
+                            *tk = Some(registry.enlist(key, sid as u32));
+                        }
+                    }
+                }
+            }
+        }
+        // The merged dt reduction runs on the final RK stage only:
+        // per-pack partial minima (f64 bits — both spaces publish
+        // finished local dts) + one cross-list fold. With tree
+        // collectives the GLOBAL reduction also runs inside the region
+        // (posted/drained by an extra task list, overlapped with the tail
+        // packs' boundary polls); flat mode keeps the blocking
+        // post-region allreduce as the oracle.
+        let overlap_coll = final_stage && sim.sp.coll == CollMode::Tree;
+        let minima: Vec<AtomicU64> = if final_stage {
+            (0..npacks).map(|_| AtomicU64::new(f64::INFINITY.to_bits())).collect()
+        } else {
+            Vec::new()
+        };
+        let coll = DtColl {
+            comm: (overlap_coll && npacks > 0).then(|| sim.comm_coll.clone()),
             handle: Mutex::new(None),
             dt_done: AtomicUsize::new(0),
             global: AtomicU64::new(f64::INFINITY.to_bits()),
         };
-        let abort = AtomicBool::new(false);
-
-        // -- host-side per-pack parts (exist whenever the engine does) --
-        let (mut flux_parts, mut unew_parts, mut hsecs_parts, u0_all, stats) =
-            match host.as_deref_mut() {
-                Some(h) => {
-                    let HostExec { flux, unew, block_secs, u0, overlap_stats, .. } = h;
-                    (
-                        Some(host::split_chunks(flux, &pack_ranges).into_iter()),
-                        Some(host::split_chunks(unew, &pack_ranges).into_iter()),
-                        Some(host::split_chunks(block_secs, &pack_ranges).into_iter()),
-                        Some(&u0[..]),
-                        Some(&*overlap_stats),
-                    )
-                }
-                None => (None, None, None, None, None),
-            };
-        let topo = ExchTopo {
-            shape,
-            dim: mesh.cfg.dim,
-            tree: &mesh.tree,
-            ranks: &mesh.ranks,
-        };
-        // Flux corrections are registered per pack up front (reads the
-        // immutable topology), before the blocks split into disjoint
-        // per-pack slices — for every pack, whichever space runs it (the
-        // general device list polls the same comm with the same tags).
-        let fpend: Vec<Vec<FluxRecv>> = if multilevel {
-            pack_ranges
-                .iter()
-                .map(|r| {
-                    flux_corr_pending_blocks(&topo, &mesh.blocks[r.clone()], r.start)
-                })
-                .collect()
-        } else {
-            (0..npacks).map(|_| Vec::new()).collect()
-        };
-        let mut block_parts = host_present
-            .then(|| host::split_chunks(&mut mesh.blocks, &pack_ranges).into_iter());
-
-        // -- device-side per-pack parts --
-        let dev_ref: Option<&DeviceState> = dev.as_deref();
-        let (descs, staging): (&[PackDesc], &mut [PackStaging]) = if dev_ref.is_some() {
-            mesh_data.parts_mut()
-        } else {
-            (&[], &mut [])
-        };
-        let mut staging_it = staging.iter_mut();
-        let dev_present = dev_taken.is_some();
-        let dev_general = dev_ref.map_or(false, |d| d.is_general());
-        let (mut dts_rest, mut dsecs_rest, mut tmps_it, mut gflux_rest) =
-            match dev_taken.as_mut() {
-                Some((dts, secs, tmps, gfx)) => {
-                    (&mut dts[..], &mut secs[..], Some(tmps.iter_mut()), &mut gfx[..])
-                }
-                None => (
-                    &mut [] as &mut [Real],
-                    &mut [] as &mut [f64],
-                    None,
-                    &mut [] as &mut [FluxArrays],
-                ),
-            };
-        // Hybrid stage comm: device packs exchange on the shared CONS
-        // comm so both spaces interoperate (fast-path route tags match
-        // the host exchange tags, and general mode shares the host's spec
-        // layer outright); a pure device run keeps the device's own comm
-        // — the bitwise oracle channel.
-        let dev_comm: Option<&Comm> = if hybrid_mode {
-            Some(&*comm_cons)
-        } else {
-            dev_ref.map(|d| &d.comm)
-        };
-
-        // -- build one context + one task list per pack --
         let nlists = npacks + usize::from(overlap_coll && npacks > 0);
-        let mut region: TaskRegion<SpaceCtx> = TaskRegion::new(nlists);
-        let mut ctxs: Vec<SpaceCtx> = Vec::with_capacity(nlists);
-        let mut dt_marks: Vec<(usize, TaskId)> = Vec::new();
-        for (pi, (range, fpending)) in
-            pack_ranges.iter().zip(fpend.into_iter()).enumerate()
-        {
-            // advance every per-pack resource iterator in lockstep so the
-            // parts stay aligned with the pack index; the side not chosen
-            // for this pack just drops its (disjoint) parts.
-            let blocks = block_parts.as_mut().map(|it| it.next().expect("pack part"));
-            let flux = flux_parts.as_mut().map(|it| it.next().expect("pack part"));
-            let unew = unew_parts.as_mut().map(|it| it.next().expect("pack part"));
-            let hsecs = hsecs_parts.as_mut().map(|it| it.next().expect("pack part"));
-            let stg = staging_it.next();
-            let tmp = tmps_it.as_mut().map(|it| it.next().expect("pack tmp"));
-            let nb = range.len();
-            // the taken device buffers cover every block when the engine
-            // exists; without one the placeholder slices stay empty
-            let take = if dev_present { nb } else { 0 };
-            let (dts, rest) = std::mem::take(&mut dts_rest).split_at_mut(take);
-            dts_rest = rest;
-            let (dsecs, rest) = std::mem::take(&mut dsecs_rest).split_at_mut(take);
-            dsecs_rest = rest;
-            let gtake = if dev_general { nb } else { 0 };
-            let (gfx, rest) = std::mem::take(&mut gflux_rest).split_at_mut(gtake);
-            gflux_rest = rest;
-            match spaces[pi] {
-                PackSpace::Host => {
-                    let blocks = blocks.expect("host engine present");
-                    // speculative-combine flags: a block with no pending
-                    // fine-neighbor correction combines right after its
-                    // fluxes (uniform meshes: every block qualifies)
-                    let spec: Vec<bool> = if multilevel {
-                        (0..nb)
-                            .map(|off| {
-                                !fpending.iter().any(|f| f.block == range.start + off)
-                            })
-                            .collect()
-                    } else {
-                        vec![true; nb]
-                    };
-                    ctxs.push(SpaceCtx::Host(host::HostPackCtx {
-                        start: range.start,
-                        pi,
-                        blocks,
-                        flux: flux.expect("host engine present"),
-                        unew: unew.expect("host engine present"),
-                        secs: hsecs.expect("host engine present"),
-                        u0: u0_all.expect("host engine present"),
-                        fpending,
-                        spec,
-                        exch: PackExchange::new(topo, comm_cons, CONS),
-                        fcomm: comm_flux,
-                        scratch: scratch_pool.as_ref().expect("host engine present"),
-                        stats: stats.expect("host engine present"),
-                        pkg,
-                        minima: &minima,
-                        dt_result: &dt_result,
-                        coll: &coll_slot,
-                        shape,
-                        gamma,
-                        co,
-                        dt,
-                        error: None,
-                        abort: &abort,
-                    }));
-                    let t_dt =
-                        host::add_host_pack_list(region.list(pi), multilevel, final_stage);
-                    if let Some(t) = t_dt {
-                        dt_marks.push((pi, t));
+        auxes.push(StageAux {
+            npacks,
+            spaces,
+            pack_costs,
+            scal,
+            overlap_coll,
+            hybrid_mode,
+            list_base: nlists_total,
+            minima,
+            dt_result: AtomicU64::new(f64::INFINITY.to_bits()),
+            coll,
+        });
+        tickets.push(tks);
+        nlists_total += nlists;
+    }
+    registry.seal();
+
+    // Worker pool shape: an engine override wins; otherwise the FIRST
+    // slot derives it exactly as solo runs always did (the host engine
+    // governs whenever it exists, a pure device run sizes off the device
+    // engine). Any phased slot forces the serial oracle for the whole
+    // region.
+    let (mut nworkers, mut policy) = match shared.workers {
+        Some(w) => w,
+        None => {
+            let slot0 = &slots[0];
+            if let Some(h) = slot0.host.as_deref() {
+                (h.nworkers, h.policy)
+            } else if let Some(d) = slot0.dev.as_deref() {
+                (d.stage_workers(auxes[0].npacks), d.policy)
+            } else {
+                (1, StealPolicy::NoSteal)
+            }
+        }
+    };
+    if any_phased {
+        nworkers = 1;
+        policy = StealPolicy::NoSteal;
+    }
+
+    // Concatenated per-list seed costs + scheduling labels (coll lists
+    // ride free: zero cost, wildcard space, their slot's sim id).
+    let mut all_costs: Vec<f64> = Vec::with_capacity(nlists_total);
+    let mut spaces_u8: Vec<u8> = Vec::with_capacity(nlists_total);
+    let mut sims_u32: Vec<u32> = Vec::with_capacity(nlists_total);
+    for (sid, aux) in auxes.iter().enumerate() {
+        all_costs.extend_from_slice(&aux.pack_costs);
+        spaces_u8.extend(aux.spaces.iter().map(|s| match s {
+            PackSpace::Host => 0u8,
+            PackSpace::Device => 1u8,
+        }));
+        sims_u32.extend(std::iter::repeat(sid as u32).take(aux.npacks));
+        if aux.overlap_coll && aux.npacks > 0 {
+            all_costs.push(0.0);
+            spaces_u8.push(255);
+            sims_u32.push(sid as u32);
+        }
+    }
+
+    let cross_steals = AtomicU64::new(0);
+    let cross_sim_steals = AtomicU64::new(0);
+    let mut first_error: Option<Error> = None;
+
+    // Host scratch moves into a bounded pool (≤ nworkers concurrent flux
+    // tasks) and is restored below, also on error paths. Device per-pack
+    // buffers are taken out so the region's contexts can hold disjoint
+    // `&mut` slices while sharing `&DeviceState`.
+    let pools: Vec<Option<host::ScratchPool>> = slots
+        .iter_mut()
+        .map(|s| {
+            s.host
+                .as_deref_mut()
+                .map(|h| host::ScratchPool::new(std::mem::take(&mut h.scratch)))
+        })
+        .collect();
+    type DevTaken = (Vec<Real>, Vec<f64>, Vec<Vec<Real>>, Vec<FluxArrays>);
+    let mut dev_takens: Vec<Option<DevTaken>> = Vec::with_capacity(slots.len());
+    for (slot, aux) in slots.iter_mut().zip(&auxes) {
+        dev_takens.push(slot.dev.as_deref_mut().map(|d| {
+            if d.tmps.len() != aux.npacks {
+                d.tmps.resize_with(aux.npacks, Vec::new);
+            }
+            (
+                std::mem::take(&mut d.last_dts),
+                std::mem::take(&mut d.block_secs),
+                std::mem::take(&mut d.tmps),
+                std::mem::take(&mut d.gen_flux),
+            )
+        }));
+    }
+    // ---- pass 2: one context + one task list per pack of every slot ----
+    {
+        let mut region: TaskRegion<SpaceCtx> = TaskRegion::new(nlists_total);
+        let mut ctxs: Vec<SpaceCtx> = Vec::with_capacity(nlists_total);
+        let abort = AtomicBool::new(false);
+        let mut pool_it = pools.iter();
+        let mut dtk_it = dev_takens.iter_mut();
+        let mut tks_it = tickets.iter_mut();
+        for (slot, aux) in slots.iter_mut().zip(auxes.iter()) {
+            let scratch_pool = pool_it.next().expect("pool slot");
+            let dev_taken = dtk_it.next().expect("taken slot");
+            let tks = tks_it.next().expect("ticket row");
+            let host_present = slot.host.is_some();
+            let sim = &mut *slot.sim;
+            let shape = sim.mesh.cfg.index_shape();
+            let gamma = sim.pkg.gamma;
+            let cfl = sim.pkg.cfl;
+            let multilevel = sim.is_multilevel();
+            let hybrid_mode = aux.hybrid_mode;
+            let overlap_coll = aux.overlap_coll;
+            let npacks = aux.npacks;
+            let spaces = &aux.spaces;
+            let pack_ranges = sim.mesh_data.block_ranges();
+            let dt = slot.dt;
+            let scal = aux.scal;
+            let minima: &[AtomicU64] = &aux.minima;
+            let dt_result = &aux.dt_result;
+            let coll_slot = &aux.coll;
+            let HydroSim { mesh, mesh_data, pkg, comm_cons, comm_flux, .. } = sim;
+
+            // -- host-side per-pack parts (exist whenever the engine does)
+            let (mut flux_parts, mut unew_parts, mut hsecs_parts, u0_all, stats) =
+                match slot.host.as_deref_mut() {
+                    Some(h) => {
+                        let HostExec { flux, unew, block_secs, u0, overlap_stats, .. } =
+                            h;
+                        (
+                            Some(host::split_chunks(flux, &pack_ranges).into_iter()),
+                            Some(host::split_chunks(unew, &pack_ranges).into_iter()),
+                            Some(
+                                host::split_chunks(block_secs, &pack_ranges)
+                                    .into_iter(),
+                            ),
+                            Some(&u0[..]),
+                            Some(&*overlap_stats),
+                        )
                     }
-                }
-                PackSpace::Device => {
-                    let dev_s = dev_ref.expect("device engine present");
-                    let d = &descs[pi];
-                    ctxs.push(SpaceCtx::Dev(device::DevPackCtx {
-                        dev: dev_s,
-                        d,
-                        p: stg.expect("device staging present"),
-                        dts,
-                        secs: dsecs,
-                        tmp: tmp.expect("device engine present"),
-                        pending: dev_s.pack_pending(d),
-                        pi,
-                        comm: dev_comm.expect("device engine present"),
-                        minima: &minima,
-                        dt_result: &dt_result,
-                        coll: &coll_slot,
-                        scal: scal.expect("device scal present"),
-                        cfl,
-                        compute_dt: final_stage,
-                        flux: gfx,
-                        fpending,
-                        fcomm: comm_flux,
-                        topo,
-                        error: None,
-                        abort: &abort,
-                    }));
-                    let t_dt = device::add_dev_pack_list(
-                        region.list(pi),
-                        dev_general,
-                        multilevel,
-                        final_stage,
-                    );
-                    if let Some(t) = t_dt {
-                        dt_marks.push((pi, t));
+                    None => (None, None, None, None, None),
+                };
+            let topo = ExchTopo {
+                shape,
+                dim: mesh.cfg.dim,
+                tree: &mesh.tree,
+                ranks: &mesh.ranks,
+            };
+            // Flux corrections are registered per pack up front (reads the
+            // immutable topology), before the blocks split into disjoint
+            // per-pack slices — for every pack, whichever space runs it (the
+            // general device list polls the same comm with the same tags).
+            let fpend: Vec<Vec<FluxRecv>> = if multilevel {
+                pack_ranges
+                    .iter()
+                    .map(|r| {
+                        flux_corr_pending_blocks(
+                            &topo,
+                            &mesh.blocks[r.clone()],
+                            r.start,
+                        )
+                    })
+                    .collect()
+            } else {
+                (0..npacks).map(|_| Vec::new()).collect()
+            };
+            let mut block_parts = host_present
+                .then(|| host::split_chunks(&mut mesh.blocks, &pack_ranges).into_iter());
+
+            // -- device-side per-pack parts --
+            let dev_ref: Option<&DeviceState> = slot.dev.as_deref();
+            let (descs, staging): (&[PackDesc], &mut [PackStaging]) =
+                if dev_ref.is_some() {
+                    mesh_data.parts_mut()
+                } else {
+                    (&[], &mut [])
+                };
+            let mut staging_it = staging.iter_mut();
+            let dev_present = dev_taken.is_some();
+            let dev_general = dev_ref.map_or(false, |d| d.is_general());
+            let (mut dts_rest, mut dsecs_rest, mut tmps_it, mut gflux_rest) =
+                match dev_taken.as_mut() {
+                    Some((dts, secs, tmps, gfx)) => {
+                        (&mut dts[..], &mut secs[..], Some(tmps.iter_mut()), &mut gfx[..])
+                    }
+                    None => (
+                        &mut [] as &mut [Real],
+                        &mut [] as &mut [f64],
+                        None,
+                        &mut [] as &mut [FluxArrays],
+                    ),
+                };
+            // Hybrid stage comm: device packs exchange on the shared CONS
+            // comm so both spaces interoperate (fast-path route tags match
+            // the host exchange tags, and general mode shares the host's spec
+            // layer outright); a pure device run keeps the device's own comm
+            // — the bitwise oracle channel.
+            let dev_comm: Option<&Comm> = if hybrid_mode {
+                Some(&*comm_cons)
+            } else {
+                dev_ref.map(|d| &d.comm)
+            };
+
+            // -- build one context + one task list per pack --
+            for (pi, (range, fpending)) in
+                pack_ranges.iter().zip(fpend.into_iter()).enumerate()
+            {
+                // advance every per-pack resource iterator in lockstep so the
+                // parts stay aligned with the pack index; the side not chosen
+                // for this pack just drops its (disjoint) parts.
+                let blocks =
+                    block_parts.as_mut().map(|it| it.next().expect("pack part"));
+                let flux = flux_parts.as_mut().map(|it| it.next().expect("pack part"));
+                let unew = unew_parts.as_mut().map(|it| it.next().expect("pack part"));
+                let hsecs =
+                    hsecs_parts.as_mut().map(|it| it.next().expect("pack part"));
+                let stg = staging_it.next();
+                let tmp = tmps_it.as_mut().map(|it| it.next().expect("pack tmp"));
+                let nb = range.len();
+                // the taken device buffers cover every block when the engine
+                // exists; without one the placeholder slices stay empty
+                let take = if dev_present { nb } else { 0 };
+                let (dts, rest) = std::mem::take(&mut dts_rest).split_at_mut(take);
+                dts_rest = rest;
+                let (dsecs, rest) = std::mem::take(&mut dsecs_rest).split_at_mut(take);
+                dsecs_rest = rest;
+                let gtake = if dev_general { nb } else { 0 };
+                let (gfx, rest) = std::mem::take(&mut gflux_rest).split_at_mut(gtake);
+                gflux_rest = rest;
+                match spaces[pi] {
+                    PackSpace::Host => {
+                        let blocks = blocks.expect("host engine present");
+                        // speculative-combine flags: a block with no pending
+                        // fine-neighbor correction combines right after its
+                        // fluxes (uniform meshes: every block qualifies)
+                        let spec: Vec<bool> = if multilevel {
+                            (0..nb)
+                                .map(|off| {
+                                    !fpending
+                                        .iter()
+                                        .any(|f| f.block == range.start + off)
+                                })
+                                .collect()
+                        } else {
+                            vec![true; nb]
+                        };
+                        ctxs.push(SpaceCtx::Host(host::HostPackCtx {
+                            start: range.start,
+                            pi,
+                            blocks,
+                            flux: flux.expect("host engine present"),
+                            unew: unew.expect("host engine present"),
+                            secs: hsecs.expect("host engine present"),
+                            u0: u0_all.expect("host engine present"),
+                            fpending,
+                            spec,
+                            exch: PackExchange::new(topo, comm_cons, CONS),
+                            fcomm: comm_flux,
+                            scratch: scratch_pool.as_ref().expect("host engine present"),
+                            stats: stats.expect("host engine present"),
+                            pkg,
+                            minima,
+                            dt_result,
+                            coll: coll_slot,
+                            shape,
+                            gamma,
+                            co,
+                            dt,
+                            error: None,
+                            abort: &abort,
+                        }));
+                        let _ = host::add_host_pack_list(
+                            region.list(aux.list_base + pi),
+                            multilevel,
+                            final_stage,
+                        );
+                    }
+                    PackSpace::Device => {
+                        let dev_s = dev_ref.expect("device engine present");
+                        let d = &descs[pi];
+                        ctxs.push(SpaceCtx::Dev(device::DevPackCtx {
+                            dev: dev_s,
+                            d,
+                            p: stg.expect("device staging present"),
+                            dts,
+                            secs: dsecs,
+                            tmp: tmp.expect("device engine present"),
+                            pending: dev_s.pack_pending(d),
+                            pi,
+                            comm: dev_comm.expect("device engine present"),
+                            minima,
+                            dt_result,
+                            coll: coll_slot,
+                            scal: scal.expect("device scal present"),
+                            cfl,
+                            compute_dt: final_stage,
+                            flux: gfx,
+                            fpending,
+                            fcomm: comm_flux,
+                            topo,
+                            batch: tks[pi].take(),
+                            error: None,
+                            abort: &abort,
+                        }));
+                        let _ = device::add_dev_pack_list(
+                            region.list(aux.list_base + pi),
+                            dev_general,
+                            multilevel,
+                            final_stage,
+                        );
                     }
                 }
             }
-        }
 
-        if overlap_coll && npacks > 0 {
-            // Extra task list: fold the per-pack minima the moment the
-            // last t_dt lands, post the global iallreduce(Min), then poll
-            // the tree handle to completion. Both tasks return Incomplete
-            // while waiting, so workers sweep back to the packs' boundary
-            // polls in between — the global dt reduction rides the same
-            // overlap the ghost exchange uses.
-            let list = region.list(npacks);
-            let t_post = list.add(NONE, move |ctx: &mut SpaceCtx| {
-                let SpaceCtx::Coll(c) = ctx else { return TaskStatus::Complete };
-                if c.abort.load(Ordering::SeqCst) {
-                    return TaskStatus::Complete;
-                }
-                if c.coll.dt_done.load(Ordering::SeqCst) < npacks {
-                    return TaskStatus::Incomplete;
-                }
-                let mut m = f64::INFINITY;
-                for a in c.minima {
-                    m = m.min(f64::from_bits(a.load(Ordering::SeqCst)));
-                }
-                c.dt_result.store(m.to_bits(), Ordering::SeqCst);
-                let comm = c.coll.comm.expect("overlap collective comm");
-                *c.coll.handle.lock().unwrap() =
-                    Some(comm.iallreduce(m, ReduceOp::Min));
-                TaskStatus::Complete
-            });
-            let _t_drain = list.add(&[t_post], |ctx: &mut SpaceCtx| {
-                let SpaceCtx::Coll(c) = ctx else { return TaskStatus::Complete };
-                if c.abort.load(Ordering::SeqCst) {
-                    return TaskStatus::Complete;
-                }
-                let mut slot = c.coll.handle.lock().unwrap();
-                match slot.as_mut().map(CollHandle::test) {
-                    Some(Ok(true)) => {
-                        match slot.take().expect("handle present").into_f64() {
-                            Ok(g) => {
-                                c.coll.global.store(g.to_bits(), Ordering::SeqCst);
-                            }
-                            Err(e) => {
-                                drop(slot);
-                                if c.error.is_none() {
-                                    c.error = Some(e);
+            if overlap_coll && npacks > 0 {
+                // Extra task list: fold the per-pack minima the moment the
+                // last t_dt lands, post the global iallreduce(Min), then poll
+                // the tree handle to completion. Both tasks return Incomplete
+                // while waiting, so workers sweep back to the packs' boundary
+                // polls in between — the global dt reduction rides the same
+                // overlap the ghost exchange uses.
+                let list = region.list(aux.list_base + npacks);
+                let t_post = list.add(NONE, move |ctx: &mut SpaceCtx| {
+                    let SpaceCtx::Coll(c) = ctx else { return TaskStatus::Complete };
+                    if c.abort.load(Ordering::SeqCst) {
+                        return TaskStatus::Complete;
+                    }
+                    if c.coll.dt_done.load(Ordering::SeqCst) < npacks {
+                        return TaskStatus::Incomplete;
+                    }
+                    let mut m = f64::INFINITY;
+                    for a in c.minima {
+                        m = m.min(f64::from_bits(a.load(Ordering::SeqCst)));
+                    }
+                    c.dt_result.store(m.to_bits(), Ordering::SeqCst);
+                    let comm = c.coll.comm.as_ref().expect("overlap collective comm");
+                    *c.coll.handle.lock().unwrap() =
+                        Some(comm.iallreduce(m, ReduceOp::Min));
+                    TaskStatus::Complete
+                });
+                let _t_drain = list.add(&[t_post], |ctx: &mut SpaceCtx| {
+                    let SpaceCtx::Coll(c) = ctx else { return TaskStatus::Complete };
+                    if c.abort.load(Ordering::SeqCst) {
+                        return TaskStatus::Complete;
+                    }
+                    let mut slot = c.coll.handle.lock().unwrap();
+                    match slot.as_mut().map(CollHandle::test) {
+                        Some(Ok(true)) => {
+                            match slot.take().expect("handle present").into_f64() {
+                                Ok(g) => {
+                                    c.coll.global.store(g.to_bits(), Ordering::SeqCst);
                                 }
-                                c.abort.store(true, Ordering::SeqCst);
+                                Err(e) => {
+                                    drop(slot);
+                                    if c.error.is_none() {
+                                        c.error = Some(e);
+                                    }
+                                    c.abort.store(true, Ordering::SeqCst);
+                                }
                             }
+                            TaskStatus::Complete
                         }
-                        TaskStatus::Complete
-                    }
-                    Some(Ok(false)) => TaskStatus::Incomplete,
-                    Some(Err(e)) => {
-                        *slot = None; // poisoned handle: drop it
-                        drop(slot);
-                        if c.error.is_none() {
-                            c.error = Some(e);
+                        Some(Ok(false)) => TaskStatus::Incomplete,
+                        Some(Err(e)) => {
+                            *slot = None; // poisoned handle: drop it
+                            drop(slot);
+                            if c.error.is_none() {
+                                c.error = Some(e);
+                            }
+                            c.abort.store(true, Ordering::SeqCst);
+                            TaskStatus::Complete
                         }
-                        c.abort.store(true, Ordering::SeqCst);
-                        TaskStatus::Complete
+                        // aborted before the post ran
+                        None => TaskStatus::Complete,
                     }
-                    // aborted before the post ran
-                    None => TaskStatus::Complete,
-                }
-            });
-            ctxs.push(SpaceCtx::Coll(CollCtx {
-                minima: &minima,
-                dt_result: &dt_result,
-                coll: &coll_slot,
-                error: None,
-                abort: &abort,
-            }));
-            pack_costs.push(0.0);
-        } else if final_stage && npacks > 0 {
-            // Flat oracle: regional cross-list fold under the same
-            // abort-aware region; the blocking global allreduce stays in
-            // `reduce_dt`.
-            region.add_regional(dt_marks, |ctx: &mut SpaceCtx| {
-                let (minima, dt_result) = ctx.dt_slots();
-                let mut m = f64::INFINITY;
-                for a in minima {
-                    m = m.min(f64::from_bits(a.load(Ordering::SeqCst)));
-                }
-                dt_result.store(m.to_bits(), Ordering::SeqCst);
-                TaskStatus::Complete
-            });
+                });
+                ctxs.push(SpaceCtx::Coll(CollCtx {
+                    minima,
+                    dt_result,
+                    coll: coll_slot,
+                    error: None,
+                    abort: &abort,
+                }));
+            }
         }
 
-        // Cross-space steal instrumentation only runs under hybrid — the
-        // single-space paths stay exactly as instrumented before.
-        let spaces_u8: Vec<u8> = spaces
-            .iter()
-            .map(|s| match s {
-                PackSpace::Host => 0u8,
-                PackSpace::Device => 1u8,
-            })
-            .chain((npacks < nlists).then_some(255u8))
-            .collect();
-        let instr = hybrid_mode.then_some(RegionInstr {
+        // Cross-space steal instrumentation runs under hybrid exactly as
+        // before; the sim labels + cross-sim counter join only when the
+        // region actually multiplexes tenants, so solo runs keep their
+        // original instrumentation bit-for-bit.
+        let instr = (hybrid_any || multi).then(|| RegionInstr {
             spaces: &spaces_u8,
             cross_steals: &cross_steals,
+            sims: multi.then_some(&sims_u32[..]),
+            cross_sim_steals: multi.then_some(&cross_sim_steals),
         });
-        if nlists > 0 {
+        if nlists_total > 0 {
             match region.execute_parallel_weighted_instr(
                 ctxs,
-                Some(&pack_costs),
+                Some(&all_costs),
                 nworkers,
                 policy,
                 stall,
@@ -657,61 +837,99 @@ pub(crate) fn run_stage(
                 Err(e) => first_error = Some(e),
             }
         }
+    }
 
-        if final_stage && first_error.is_none() {
-            // Local dt for this cycle, produced inside the region — the
-            // post-cycle `reduce_dt` consults this instead of re-sweeping.
-            sim.fused_dt_local = Some(f64::from_bits(dt_result.load(Ordering::SeqCst)));
-            if overlap_coll {
-                // Every rank posts exactly one dt collective per cycle,
-                // so a rank with zero packs (no task region to overlap
-                // with) still joins the exchange — here, blocking, with an
-                // identity contribution.
-                let g = if npacks > 0 {
-                    f64::from_bits(coll_slot.global.load(Ordering::SeqCst))
-                } else {
-                    comm_coll.iallreduce(f64::INFINITY, ReduceOp::Min).into_f64()?
-                };
-                sim.fused_dt_global = Some(g);
-            }
-        }
-    }
     // Restore the taken engine state (also on error paths).
-    if let (Some(h), Some(pool)) = (host.as_deref_mut(), scratch_pool) {
-        h.scratch = pool.into_inner();
-    }
-    if let (Some(d), Some((dts, secs, tmps, gfx))) = (dev.as_deref_mut(), dev_taken) {
-        d.last_dts = dts;
-        d.block_secs = secs;
-        d.tmps = tmps;
-        d.gen_flux = gfx;
+    for (slot, (pool, taken)) in
+        slots.iter_mut().zip(pools.into_iter().zip(dev_takens))
+    {
+        if let (Some(h), Some(pool)) = (slot.host.as_deref_mut(), pool) {
+            h.scratch = pool.into_inner();
+        }
+        if let (Some(d), Some((dts, secs, tmps, gfx))) =
+            (slot.dev.as_deref_mut(), taken)
+        {
+            d.last_dts = dts;
+            d.block_secs = secs;
+            d.tmps = tmps;
+            d.gen_flux = gfx;
+        }
     }
     if let Some(e) = first_error {
         // A stalled task region is this rank's first sight of the
         // failure: escalate so every peer's waits drain with `Aborted`
-        // instead of idling out their own watchdogs one by one.
-        sim.world.escalate(sim.mesh.my_rank, &e);
+        // instead of idling out their own watchdogs one by one (every
+        // tenant's world — the shared region took them all down).
+        for slot in slots.iter() {
+            slot.sim.world.escalate(slot.sim.mesh.my_rank, &e);
+        }
         return Err(e);
     }
-    if hybrid_mode && npacks > 0 {
-        let nh = spaces.iter().filter(|s| **s == PackSpace::Host).count() as u64;
-        sim.hybrid_stats.packs_host += nh;
-        sim.hybrid_stats.packs_device += npacks as u64 - nh;
-        sim.hybrid_stats.cross_space_steals += cross_steals.load(Ordering::SeqCst);
+    for (slot, aux) in slots.iter_mut().zip(auxes.iter()) {
+        let sim = &mut *slot.sim;
+        if final_stage {
+            if !aux.overlap_coll && aux.npacks > 0 {
+                // Flat oracle: fold the per-pack minima once the region has
+                // drained (the blocking global allreduce stays in
+                // `reduce_dt`).
+                let mut m = f64::INFINITY;
+                for a in &aux.minima {
+                    m = m.min(f64::from_bits(a.load(Ordering::SeqCst)));
+                }
+                aux.dt_result.store(m.to_bits(), Ordering::SeqCst);
+            }
+            // Local dt for this cycle, produced inside the region — the
+            // post-cycle `reduce_dt` consults this instead of re-sweeping.
+            sim.fused_dt_local =
+                Some(f64::from_bits(aux.dt_result.load(Ordering::SeqCst)));
+            if aux.overlap_coll {
+                // Every rank posts exactly one dt collective per cycle,
+                // so a rank with zero packs (no task region to overlap
+                // with) still joins the exchange — here, blocking, with an
+                // identity contribution.
+                let g = if aux.npacks > 0 {
+                    f64::from_bits(aux.coll.global.load(Ordering::SeqCst))
+                } else {
+                    sim.comm_coll.iallreduce(f64::INFINITY, ReduceOp::Min).into_f64()?
+                };
+                sim.fused_dt_global = Some(g);
+            }
+        }
+        if aux.hybrid_mode && aux.npacks > 0 {
+            let nh =
+                aux.spaces.iter().filter(|s| **s == PackSpace::Host).count() as u64;
+            sim.hybrid_stats.packs_host += nh;
+            sim.hybrid_stats.packs_device += aux.npacks as u64 - nh;
+            // The shared counter can't attribute a steal to one tenant's
+            // hybrid stats when several share the region — the engine's
+            // ServiceStats carries it instead.
+            if !multi {
+                sim.hybrid_stats.cross_space_steals +=
+                    cross_steals.load(Ordering::SeqCst);
+            }
+        }
+        // Physical BCs once every receive has landed — the same point the
+        // pure-host path has always applied them. Device packs fill their own
+        // physical ghosts in the staged arrays at poll-drain, so this sweep
+        // runs only when a host pack (or a packless host rank, which must
+        // still flip its ghost parity) participated; its writes into device
+        // packs' stale containers are harmless — staging is authoritative
+        // there, and the pre-regrid sync rewrites the containers wholesale.
+        let any_host = aux.spaces.iter().any(|s| *s == PackSpace::Host);
+        if slot.host.is_some() && (any_host || aux.npacks == 0) {
+            bvals::apply_block_physical_bcs(
+                &mut sim.mesh,
+                CONS,
+                Some([native::IM1, native::IM2, native::IM3]),
+            )?;
+        }
     }
-    // Physical BCs once every receive has landed — the same point the
-    // pure-host path has always applied them. Device packs fill their own
-    // physical ghosts in the staged arrays at poll-drain, so this sweep
-    // runs only when a host pack (or a packless host rank, which must
-    // still flip its ghost parity) participated; its writes into device
-    // packs' stale containers are harmless — staging is authoritative
-    // there, and the pre-regrid sync rewrites the containers wholesale.
-    if host.is_some() && (any_host || npacks == 0) {
-        bvals::apply_block_physical_bcs(
-            &mut sim.mesh,
-            CONS,
-            Some([native::IM1, native::IM2, native::IM3]),
-        )?;
+    if let Some(svc) = shared.svc {
+        let (batched, saved) = registry.harvest();
+        svc.batched_launches.fetch_add(batched, Ordering::SeqCst);
+        svc.launches_saved.fetch_add(saved, Ordering::SeqCst);
+        svc.cross_sim_steals
+            .fetch_add(cross_sim_steals.load(Ordering::SeqCst), Ordering::SeqCst);
     }
     Ok(())
 }
@@ -848,6 +1066,12 @@ pub struct HydroSim {
     comm_coll: Comm,
     pub device: Option<DeviceState>,
     pub host: Option<HostExec>,
+    /// The process's compiled-artifact runtime, shared by every engine this
+    /// sim ever builds (regrids reuse it — the executable cache and launch
+    /// counters persist) and, under [`crate::service::Engine`], by every
+    /// OTHER sim in the process. Lazily constructed on the first device
+    /// engine unless injected via [`SimBuilder::runtime`].
+    rt: Option<Arc<crate::runtime::Runtime>>,
     /// Cost-partitioner of `space=hybrid` (None on single-space runs).
     hybrid: Option<HybridPartition>,
     /// Co-execution counters (`space=hybrid`): packs per space, steals
@@ -876,11 +1100,62 @@ pub struct HydroSim {
     next_history: f64,
 }
 
-impl HydroSim {
-    pub fn new(mut pin: ParameterInput, rank: usize, world: World) -> Result<HydroSim> {
+/// Builder for [`HydroSim`] — the one construction path. Injection points
+/// the bare constructor never had: a shared [`crate::runtime::Runtime`]
+/// (the service engine passes ONE `Arc` to every session, so exactly one
+/// runtime exists per process) and a shared worker-pool shape (overrides
+/// the deck's `parthenon/exec nworkers`/`sched` so every tenant seeds the
+/// same pool). `HydroSim::new` remains as a thin shim over
+/// `SimBuilder::new(pin).rank(r).world(w).build()`.
+pub struct SimBuilder {
+    pin: ParameterInput,
+    rank: usize,
+    world: Option<World>,
+    runtime: Option<Arc<crate::runtime::Runtime>>,
+    pool: Option<(usize, StealPolicy)>,
+}
+
+impl SimBuilder {
+    pub fn new(pin: ParameterInput) -> SimBuilder {
+        SimBuilder { pin, rank: 0, world: None, runtime: None, pool: None }
+    }
+
+    /// This rank's index in the world (default 0).
+    pub fn rank(mut self, rank: usize) -> SimBuilder {
+        self.rank = rank;
+        self
+    }
+
+    /// The comm world (default: a fresh single-rank world).
+    pub fn world(mut self, world: World) -> SimBuilder {
+        self.world = Some(world);
+        self
+    }
+
+    /// Share an existing runtime instead of lazily constructing one on the
+    /// first device engine.
+    pub fn runtime(mut self, rt: Arc<crate::runtime::Runtime>) -> SimBuilder {
+        self.runtime = Some(rt);
+        self
+    }
+
+    /// Adopt a shared worker-pool shape (overrides the deck's
+    /// `parthenon/exec nworkers` / `sched`).
+    pub fn pool(mut self, pool: &crate::service::SharedPool) -> SimBuilder {
+        self.pool = Some((pool.nworkers, pool.policy));
+        self
+    }
+
+    pub fn build(self) -> Result<HydroSim> {
+        let SimBuilder { mut pin, rank, world, runtime, pool } = self;
+        let world = world.unwrap_or_else(|| World::new(1));
         let cfg = MeshConfig::from_params(&mut pin)?;
         let pkg = HydroPackage::initialize(&mut pin);
-        let sp = SimParams::from_input(&mut pin)?;
+        let mut sp = SimParams::from_input(&mut pin)?;
+        if let Some((nworkers, sched)) = pool {
+            sp.nworkers = nworkers;
+            sp.sched = sched;
+        }
         let fields = resolve_packages(&[pkg.descriptor()])?;
         // Install the fault plan before this rank's first send/recv: the
         // checksum-framing decision must be uniform across every message a
@@ -910,6 +1185,7 @@ impl HydroSim {
             comm_coll,
             device: None,
             host: None,
+            rt: runtime,
             hybrid: None,
             hybrid_stats: HybridStats::default(),
             fused_dt_local: None,
@@ -938,7 +1214,8 @@ impl HydroSim {
         match sim.sp.exec {
             ExecSpace::Host => {}
             ExecSpace::Device => {
-                let dev = DeviceState::new(&mut sim)?;
+                let rt = sim.runtime_handle()?;
+                let dev = DeviceState::new(&mut sim, rt)?;
                 sim.device = Some(dev);
                 let n = sim.mesh_data.npacks();
                 sim.mesh_data.set_pack_spaces(vec![PackSpace::Device; n]);
@@ -949,6 +1226,29 @@ impl HydroSim {
         // Initial timestep.
         sim.dt = sim.reduce_dt();
         Ok(sim)
+    }
+}
+
+impl HydroSim {
+    /// Thin shim over [`SimBuilder`] — the historical constructor shape.
+    pub fn new(pin: ParameterInput, rank: usize, world: World) -> Result<HydroSim> {
+        SimBuilder::new(pin).rank(rank).world(world).build()
+    }
+
+    /// The sim's shared runtime handle, constructing it on first use when
+    /// none was injected. The ONLY `Runtime` construction site in the
+    /// driver: every engine (re)build clones this `Arc`, so regrids,
+    /// restarts and hybrid re-inits reuse the compiled-executable cache,
+    /// and a corrupt artifact dir surfaces exactly once.
+    pub(crate) fn runtime_handle(&mut self) -> Result<Arc<crate::runtime::Runtime>> {
+        if let Some(rt) = &self.rt {
+            return Ok(Arc::clone(rt));
+        }
+        let rt = Arc::new(crate::runtime::Runtime::new(
+            crate::runtime::default_artifact_dir(),
+        )?);
+        self.rt = Some(Arc::clone(&rt));
+        Ok(rt)
     }
 
     /// Restore state from a snapshot (restart; paper Sec. 3.9). The mesh is
@@ -996,7 +1296,8 @@ impl HydroSim {
         match self.sp.exec {
             ExecSpace::Host => {}
             ExecSpace::Device => {
-                let dev = DeviceState::new(self)?;
+                let rt = self.runtime_handle()?;
+                let dev = DeviceState::new(self, rt)?;
                 self.device = Some(dev);
                 let n = self.mesh_data.npacks();
                 self.mesh_data.set_pack_spaces(vec![PackSpace::Device; n]);
@@ -1062,7 +1363,8 @@ impl HydroSim {
         debug_assert!(self.device.is_none());
         match self.sp.exec {
             ExecSpace::Device => {
-                let dev = DeviceState::new(self)?;
+                let rt = self.runtime_handle()?;
+                let dev = DeviceState::new(self, rt)?;
                 self.device = Some(dev);
                 let n = self.mesh_data.npacks();
                 self.mesh_data.set_pack_spaces(vec![PackSpace::Device; n]);
@@ -1292,7 +1594,8 @@ impl HydroSim {
     /// pack → space assignment. A missing or corrupt artifact runtime
     /// surfaces as a structured error, like `space=device`.
     pub(crate) fn init_hybrid(&mut self) -> Result<()> {
-        let dev = DeviceState::new(self)?;
+        let rt = self.runtime_handle()?;
+        let dev = DeviceState::new(self, rt)?;
         self.device = Some(dev);
         // DeviceState::new re-drew the pack plan (gathering staging);
         // re-size the host work arrays against the final pack count so
@@ -1394,7 +1697,7 @@ impl HydroSim {
 
     // -- outputs --------------------------------------------------------------
 
-    fn maybe_output(&mut self, force: bool) -> Result<()> {
+    pub(crate) fn maybe_output(&mut self, force: bool) -> Result<()> {
         let fire_output =
             self.sp.output_dt > 0.0 && (force || self.time + 1e-12 >= self.next_output);
         let fire_history =
@@ -1674,57 +1977,32 @@ fn apply_flux_correction(fx: &mut FluxArrays, p: &FluxRecv, dim: usize, data: &[
     debug_assert_eq!(r, data.len());
 }
 
-impl Driver for HydroSim {
-    fn execute(&mut self) -> Result<()> {
-        self.maybe_output(true)?;
-        while self.time < self.sp.tlim
+impl HydroSim {
+    /// Whether the time loop has more cycles to run (the [`Driver::execute`]
+    /// loop condition, also polled per session by
+    /// [`crate::service::Engine::step`]).
+    pub fn running(&self) -> bool {
+        self.time < self.sp.tlim
             && (self.sp.nlim < 0 || (self.cycle as i64) < self.sp.nlim)
-        {
-            self.step()?;
-            self.maybe_output(false)?;
-            if !self.sp.quiet && self.mesh.my_rank == 0 && self.cycle % 50 == 0 {
-                eprintln!(
-                    "cycle {:6}  time {:.5e}  dt {:.5e}  blocks {}",
-                    self.cycle,
-                    self.time,
-                    self.dt,
-                    self.mesh.tree.nblocks()
-                );
-            }
-        }
-        self.maybe_output(true)?;
-        Ok(())
-    }
-}
-
-impl EvolutionDriver for HydroSim {
-    fn time(&self) -> f64 {
-        self.time
     }
 
-    fn cycle(&self) -> u64 {
-        self.cycle
-    }
-
-    fn step(&mut self) -> Result<()> {
-        let t0 = std::time::Instant::now();
-        // Simulated rank death fires at the top of the scheduled cycle,
-        // BEFORE this cycle's checkpoint could be written — so recovery
-        // must resume from an earlier durable snapshot.
+    /// Top-of-cycle bookkeeping, split out of [`EvolutionDriver::step`] so
+    /// the multiplexed [`crate::service::Engine`] can run it per session
+    /// before merging every tenant's cycle into one region. Simulated rank
+    /// death fires here, BEFORE this cycle's checkpoint could be written —
+    /// so recovery must resume from an earlier durable snapshot. Returns
+    /// the dt this cycle advances by.
+    pub(crate) fn pre_step(&mut self) -> Result<Real> {
         self.world.check_kill(self.mesh.my_rank, self.cycle)?;
-        let dt = self.dt as Real;
+        Ok(self.dt as Real)
+    }
 
-        // One cycle through the merged task region (take-dance so the
-        // producers can borrow the rest of the sim).
-        {
-            let mut h = self.host.take();
-            let mut d = self.device.take();
-            let r = run_cycle(self, h.as_mut(), d.as_mut(), dt);
-            self.host = h;
-            self.device = d;
-            r?;
-        }
-
+    /// Everything after the cycle's task region: advance clocks, fold the
+    /// dt reduction, cost EWMAs, AMR / balance / hybrid repartition
+    /// cadences, durable checkpoints, and throughput accounting. `elapsed`
+    /// is the wall time of the cycle (under the service engine: of the
+    /// whole merged cycle).
+    pub(crate) fn post_step(&mut self, elapsed: f64) -> Result<()> {
         self.time += self.dt;
         self.cycle += 1;
         self.dt = self.reduce_dt();
@@ -1787,9 +2065,57 @@ impl EvolutionDriver for HydroSim {
             self.write_restart(&path)?;
         }
 
-        self.zc
-            .record_cycle(self.global_zones(), t0.elapsed().as_secs_f64());
+        self.zc.record_cycle(self.global_zones(), elapsed);
         Ok(())
+    }
+}
+
+impl Driver for HydroSim {
+    fn execute(&mut self) -> Result<()> {
+        self.maybe_output(true)?;
+        while self.running() {
+            self.step()?;
+            self.maybe_output(false)?;
+            if !self.sp.quiet && self.mesh.my_rank == 0 && self.cycle % 50 == 0 {
+                eprintln!(
+                    "cycle {:6}  time {:.5e}  dt {:.5e}  blocks {}",
+                    self.cycle,
+                    self.time,
+                    self.dt,
+                    self.mesh.tree.nblocks()
+                );
+            }
+        }
+        self.maybe_output(true)?;
+        Ok(())
+    }
+}
+
+impl EvolutionDriver for HydroSim {
+    fn time(&self) -> f64 {
+        self.time
+    }
+
+    fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    fn step(&mut self) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        let dt = self.pre_step()?;
+
+        // One cycle through the merged task region (take-dance so the
+        // producers can borrow the rest of the sim).
+        {
+            let mut h = self.host.take();
+            let mut d = self.device.take();
+            let r = run_cycle(self, h.as_mut(), d.as_mut(), dt);
+            self.host = h;
+            self.device = d;
+            r?;
+        }
+
+        self.post_step(t0.elapsed().as_secs_f64())
     }
 }
 
@@ -1801,9 +2127,11 @@ impl MultiStageDriver for HydroSim {
 
 /// Launch an N-rank simulation of `input`, returning per-rank zone-cycles/s
 /// (joined). The standard entry point for the CLI, examples and benches.
+/// Overrides arrive already parsed ([`Override`]) — a malformed CLI spec is
+/// an [`Error::Config`] at the program edge, before any rank launches.
 pub fn run_simulation(
     input: &str,
-    overrides: &[String],
+    overrides: &[Override],
     nranks: usize,
 ) -> Result<Vec<f64>> {
     use std::sync::Mutex;
@@ -1815,7 +2143,7 @@ pub fn run_simulation(
     World::launch(nranks, move |rank, world| {
         let mut pin = ParameterInput::from_str(&input).expect("parse input");
         for ov in &overrides {
-            pin.apply_override(ov).expect("override");
+            pin.apply(ov);
         }
         let mut sim = HydroSim::new(pin, rank, world).expect("build sim");
         sim.execute().expect("run sim");

@@ -25,8 +25,8 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::comm::World;
-use crate::config::ParameterInput;
-use crate::driver::{Driver, HydroSim};
+use crate::config::{Override, ParameterInput};
+use crate::driver::{Driver, SimBuilder};
 use crate::error::{Error, Result};
 use crate::io::Snapshot;
 
@@ -61,13 +61,13 @@ fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
 /// (never resume_unwind — a dead rank must not take down the harness).
 fn attempt(
     input: &str,
-    overrides: &[String],
+    overrides: &[Override],
     nranks: usize,
     restore_from: Option<&str>,
 ) -> Vec<std::result::Result<(f64, u64), String>> {
     let world = World::new(nranks);
     let input: Arc<str> = input.into();
-    let overrides: Arc<[String]> = overrides.into();
+    let overrides: Arc<[Override]> = overrides.into();
     let restore: Option<Arc<str>> = restore_from.map(Into::into);
     let mut handles = Vec::new();
     for rank in 0..nranks {
@@ -82,9 +82,10 @@ fn attempt(
                 .spawn(move || -> Result<(f64, u64)> {
                     let mut pin = ParameterInput::from_str(&input)?;
                     for ov in overrides.iter() {
-                        pin.apply_override(ov)?;
+                        pin.apply(ov);
                     }
-                    let mut sim = HydroSim::new(pin, rank, w)?;
+                    let mut sim =
+                        SimBuilder::new(pin).rank(rank).world(w).build()?;
                     if let Some(path) = restore.as_deref() {
                         let snap = Snapshot::read(path)?;
                         sim.restore_snapshot(&snap)?;
@@ -111,7 +112,7 @@ fn attempt(
 /// first error once the restart budget is exhausted.
 pub fn run_recoverable(
     input: &str,
-    overrides: &[String],
+    overrides: &[Override],
     nranks: usize,
     max_restarts: usize,
 ) -> Result<RecoveryReport> {
@@ -119,7 +120,7 @@ pub fn run_recoverable(
     // the harness looks where the sim writes.
     let mut pin = ParameterInput::from_str(input)?;
     for ov in overrides {
-        pin.apply_override(ov)?;
+        pin.apply(ov);
     }
     let out_dir = pin.str_or("parthenon/job", "out_dir", ".");
     let default_chk = format!("{out_dir}/parthenon.chk.pbin");
@@ -154,7 +155,7 @@ pub fn run_recoverable(
                     )));
                 }
                 // Disarm the one-shot kill; leave stochastic faults armed.
-                let disarm = "parthenon/fault/kill_cycle=-1".to_string();
+                let disarm = Override::new("parthenon/fault", "kill_cycle", -1);
                 if !ovr.contains(&disarm) {
                     ovr.push(disarm);
                 }

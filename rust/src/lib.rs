@@ -43,6 +43,7 @@ pub mod mesh_data;
 pub mod metrics;
 pub mod particles;
 pub mod runtime;
+pub mod service;
 pub mod tasks;
 pub mod util;
 pub mod vars;

@@ -15,8 +15,8 @@
     clippy::type_complexity
 )]
 
-use parthenon::config::ParameterInput;
-use parthenon::driver::{Driver, HydroSim};
+use parthenon::config::{Override, ParameterInput};
+use parthenon::driver::{Driver, SimBuilder};
 use parthenon::runtime::{default_artifact_dir, Manifest};
 
 fn usage() -> ! {
@@ -42,7 +42,7 @@ fn main() {
 fn cmd_run(args: &[String]) {
     let mut input: Option<String> = None;
     let mut nranks = 1usize;
-    let mut overrides = Vec::new();
+    let mut overrides: Vec<Override> = Vec::new();
     let mut it = args.iter();
     while let Some(a) = it.next() {
         match a.as_str() {
@@ -53,7 +53,14 @@ fn cmd_run(args: &[String]) {
                     .and_then(|s| s.parse().ok())
                     .unwrap_or_else(|| usage())
             }
-            ov if ov.contains('=') && ov.contains('/') => overrides.push(ov.to_string()),
+            // Parse overrides at the program edge: a malformed spec is a
+            // config error here, before any rank thread launches.
+            ov if ov.contains('=') && ov.contains('/') => {
+                overrides.push(ov.parse::<Override>().unwrap_or_else(|e| {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                }))
+            }
             _ => usage(),
         }
     }
@@ -72,9 +79,13 @@ fn cmd_run(args: &[String]) {
     parthenon::comm::World::launch(nranks, move |rank, world| {
         let mut pin = ParameterInput::from_str(&text).expect("parse input");
         for ov in &overrides2 {
-            pin.apply_override(ov).expect("apply override");
+            pin.apply(ov);
         }
-        let mut sim = HydroSim::new(pin, rank, world).expect("construct sim");
+        let mut sim = SimBuilder::new(pin)
+            .rank(rank)
+            .world(world)
+            .build()
+            .expect("construct sim");
         sim.execute().expect("execute");
         let launches = sim.device.as_ref().map(|d| d.rt.launches()).unwrap_or(0);
         stats2.lock().unwrap()[rank] = (sim.cycle, sim.zc.zcps(), launches);

@@ -140,6 +140,43 @@ impl HybridStats {
     }
 }
 
+/// Multi-tenant service accounting ([`crate::service::Engine`]): how many
+/// sessions share the process, how often same-shape device packs from
+/// DIFFERENT sessions were fused into one launch, and how often idle
+/// workers drained another tenant's task lists. The service equivalence
+/// suite asserts these are non-zero under forced skew — and untouched when
+/// batching / multiplexing are toggled off (the sequential oracle).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Sessions currently attached to the engine.
+    pub sessions_live: u64,
+    /// Fused launches that combined packs from >= 2 sessions.
+    pub batched_launches: u64,
+    /// Kernel launches avoided by batching (sum over batched launches of
+    /// participants - 1).
+    pub launches_saved: u64,
+    /// Task lists claimed by a worker whose seeded items belong to a
+    /// DIFFERENT session (idle worker crossing the tenant boundary).
+    pub cross_sim_steals: u64,
+}
+
+impl ServiceStats {
+    /// True when no cross-tenant work has been recorded at all — what a
+    /// solo run (or a multiplex/batching-disabled engine) must leave
+    /// behind in the batching/steal counters.
+    pub fn is_untouched(&self) -> bool {
+        *self == ServiceStats::default()
+    }
+
+    /// Fold another engine's counters into this one (bench aggregation).
+    pub fn merge(&mut self, other: &ServiceStats) {
+        self.sessions_live = self.sessions_live.max(other.sessions_live);
+        self.batched_launches += other.batched_launches;
+        self.launches_saved += other.launches_saved;
+        self.cross_sim_steals += other.cross_sim_steals;
+    }
+}
+
 /// Snapshot of the comm fabric's fault-injection / escalation counters
 /// (`World::fault_stats`): what the seeded plan injected, what the framing
 /// layer absorbed or detected, and how failures escalated. The chaos suite
@@ -250,6 +287,19 @@ mod tests {
         assert!(s.is_untouched());
         s.cross_space_steals += 1;
         assert!(!s.is_untouched());
+    }
+
+    #[test]
+    fn service_stats_untouched_and_merge() {
+        let mut s = ServiceStats::default();
+        assert!(s.is_untouched());
+        s.batched_launches += 1;
+        s.launches_saved += 3;
+        assert!(!s.is_untouched());
+        let mut t = ServiceStats { sessions_live: 2, ..Default::default() };
+        t.merge(&s);
+        assert_eq!(t.sessions_live, 2);
+        assert_eq!(t.launches_saved, 3);
     }
 
     #[test]

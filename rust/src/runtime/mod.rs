@@ -10,7 +10,7 @@ mod manifest;
 mod pjrt;
 
 pub use manifest::{default_artifact_dir, ArtifactKey, Manifest};
-pub use pjrt::{plan_packs, Runtime, ScalArgs};
+pub use pjrt::{plan_packs, FusedPart, Runtime, ScalArgs};
 
 /// Whether the Device execution space can run at all. With the native
 /// artifact interpreter this is always true; real AOT artifacts (when

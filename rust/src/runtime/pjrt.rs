@@ -116,6 +116,23 @@ pub struct Runtime {
     launches: AtomicU64,
 }
 
+/// Process-global count of [`Runtime`] constructions. The service layer's
+/// one-runtime-per-process invariant is asserted against the delta of this
+/// counter: an `Engine` serving N sessions must construct exactly one.
+static RUNTIMES_CONSTRUCTED: AtomicU64 = AtomicU64::new(0);
+
+/// One tenant's contribution to a batched `fused` launch: the same buffers
+/// [`Runtime::fused`] takes, with a per-part [`ScalArgs`] (each simulation
+/// carries its own dt/dx/gamma). All parts of one batch share an
+/// [`ArtifactKey`], so their buffer geometry is identical.
+pub struct FusedPart<'a> {
+    pub u: &'a mut [Real],
+    pub u0: &'a [Real],
+    pub bufs_in: &'a [Real],
+    pub scal: ScalArgs,
+    pub bufs_out: &'a mut [Real],
+}
+
 impl Runtime {
     /// Open the runtime for an artifact directory. A *missing* manifest
     /// falls back to the native interpreter's synthetic manifest (every
@@ -133,11 +150,18 @@ impl Runtime {
     }
 
     pub fn with_manifest(manifest: Arc<Manifest>) -> Result<Runtime> {
+        RUNTIMES_CONSTRUCTED.fetch_add(1, Ordering::SeqCst);
         Ok(Runtime {
             manifest,
             cache: RwLock::new(HashMap::new()),
             launches: AtomicU64::new(0),
         })
+    }
+
+    /// Process-global number of `Runtime` constructions so far (see
+    /// [`RUNTIMES_CONSTRUCTED`]).
+    pub fn constructed_count() -> u64 {
+        RUNTIMES_CONSTRUCTED.load(Ordering::SeqCst)
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -462,7 +486,9 @@ impl Runtime {
     /// `fused`: (u, u0, bufs_in, scal) -> (u_new, bufs_out, dt[nb]).
     /// u is updated in place; bufs_out overwritten; returns per-block dts.
     /// Semantics: unpack -> stage -> pack -> dt, one launch per pack
-    /// (`ref.py::fused_step`).
+    /// (`ref.py::fused_step`). Implemented as a one-part
+    /// [`Runtime::fused_batch`] so batched and solo launches run literally
+    /// the same per-block code (bitwise-identical results by construction).
     pub fn fused(
         &self,
         key: &ArtifactKey,
@@ -472,37 +498,67 @@ impl Runtime {
         scal: ScalArgs,
         bufs_out: &mut [Real],
     ) -> Result<Vec<Real>> {
+        let mut parts = [FusedPart { u, u0, bufs_in, scal, bufs_out }];
+        let mut out = self.fused_batch(key, &mut parts)?;
+        Ok(out.pop().expect("one part in, one result out").0)
+    }
+
+    /// Cross-simulation batched `fused`: run every part's
+    /// unpack→stage→pack→dt sweep under ONE launch (one `count_launch`, one
+    /// pooled scratch). Parts are independent — each touches only its own
+    /// buffers with its own `scal` — so the batch order never changes any
+    /// part's bits, only how many launches the work costs. Returns, per
+    /// part in order, (per-block dts, wall seconds of that part's sweep);
+    /// the per-part seconds keep the cost EWMAs attributable per tenant.
+    pub fn fused_batch(
+        &self,
+        key: &ArtifactKey,
+        parts: &mut [FusedPart<'_>],
+    ) -> Result<Vec<(Vec<Real>, f64)>> {
         self.count_launch();
         let shape = IndexShape::new(key.dim, key.n);
         let ne = Self::block_elems(key);
         let bl = Self::buflen(key);
-        Self::check_len(key, "fused state", u.len(), key.nb * ne)?;
-        Self::check_len(key, "fused u0", u0.len(), key.nb * ne)?;
-        Self::check_len(key, "fused boundary-in", bufs_in.len(), key.nb * bl)?;
-        Self::check_len(key, "fused boundary-out", bufs_out.len(), key.nb * bl)?;
+        for p in parts.iter() {
+            Self::check_len(key, "fused state", p.u.len(), key.nb * ne)?;
+            Self::check_len(key, "fused u0", p.u0.len(), key.nb * ne)?;
+            Self::check_len(key, "fused boundary-in", p.bufs_in.len(), key.nb * bl)?;
+            Self::check_len(key, "fused boundary-out", p.bufs_out.len(), key.nb * bl)?;
+        }
         let exe = self.exe(key);
         exe.with_scratch(|c| {
-            let mut dts = Vec::with_capacity(key.nb);
-            for b in 0..key.nb {
-                let ub = &mut u[b * ne..(b + 1) * ne];
-                bufspec::unpack_all(ub, &shape, NHYDRO, &bufs_in[b * bl..(b + 1) * bl]);
-                native::stage(
-                    ub,
-                    &u0[b * ne..(b + 1) * ne],
-                    &shape,
-                    scal.coeffs(),
-                    scal.dt,
-                    scal.dx,
-                    scal.gamma,
-                    &mut c.fx,
-                    &mut c.sc,
-                    &mut c.tmp,
-                );
-                ub.copy_from_slice(&c.tmp);
-                bufspec::pack_all(ub, &shape, NHYDRO, &mut bufs_out[b * bl..(b + 1) * bl]);
-                dts.push(native::min_dt(ub, &shape, scal.dx, scal.gamma));
+            let mut out = Vec::with_capacity(parts.len());
+            for p in parts.iter_mut() {
+                let t0 = std::time::Instant::now();
+                let scal = p.scal;
+                let mut dts = Vec::with_capacity(key.nb);
+                for b in 0..key.nb {
+                    let ub = &mut p.u[b * ne..(b + 1) * ne];
+                    bufspec::unpack_all(ub, &shape, NHYDRO, &p.bufs_in[b * bl..(b + 1) * bl]);
+                    native::stage(
+                        ub,
+                        &p.u0[b * ne..(b + 1) * ne],
+                        &shape,
+                        scal.coeffs(),
+                        scal.dt,
+                        scal.dx,
+                        scal.gamma,
+                        &mut c.fx,
+                        &mut c.sc,
+                        &mut c.tmp,
+                    );
+                    ub.copy_from_slice(&c.tmp);
+                    bufspec::pack_all(
+                        ub,
+                        &shape,
+                        NHYDRO,
+                        &mut p.bufs_out[b * bl..(b + 1) * bl],
+                    );
+                    dts.push(native::min_dt(ub, &shape, scal.dx, scal.gamma));
+                }
+                out.push((dts, t0.elapsed().as_secs_f64()));
             }
-            Ok(dts)
+            Ok(out)
         })
     }
 }
@@ -546,6 +602,82 @@ mod tests {
         assert_eq!(plan_packs(3, &avail, 1), vec![1, 1, 1]);
         assert!(plan_packs(0, &avail, 4).is_empty());
         assert_eq!(plan_packs(5, &avail, 16).iter().sum::<usize>(), 5);
+    }
+
+    #[test]
+    fn fused_batch_bitwise_matches_solo_with_one_launch() {
+        use crate::util::rng::XorShift;
+        let rt = runtime();
+        let key = ArtifactKey::new("fused", 2, [8, 8, 1], 2);
+        let ne = Runtime::block_elems(&key);
+        let bl = Runtime::buflen(&key);
+        // three tenants, each with its own state, ghosts, and scal
+        let mut rng = XorShift::new(7);
+        let mk = |rng: &mut XorShift, dt: f32| {
+            let ncell = ne / NHYDRO;
+            let mut u = vec![0.0f32; key.nb * ne];
+            for b in 0..key.nb {
+                for c in 0..ncell {
+                    u[b * ne + c] = 1.0 + 0.1 * (rng.next_f32() - 0.5);
+                    u[b * ne + 4 * ncell + c] = 2.5 + 0.1 * rng.next_f32();
+                }
+            }
+            let bufs_in: Vec<f32> =
+                (0..key.nb * bl).map(|_| 1.0 + 0.01 * rng.next_f32()).collect();
+            let scal = ScalArgs {
+                g0: 0.5,
+                g1: 0.5,
+                beta: 0.5,
+                dt,
+                dx: [0.05; 3],
+                gamma: 1.4,
+            };
+            (u.clone(), u, bufs_in, scal)
+        };
+        let tenants: Vec<_> =
+            (0..3).map(|i| mk(&mut rng, 1e-3 * (i + 1) as f32)).collect();
+
+        // solo: one fused launch per tenant
+        let mut solo = Vec::new();
+        for (u, u0, bufs_in, scal) in &tenants {
+            let mut u = u.clone();
+            let mut bufs_out = vec![0.0f32; key.nb * bl];
+            let dts = rt.fused(&key, &mut u, u0, bufs_in, *scal, &mut bufs_out).unwrap();
+            solo.push((u, bufs_out, dts));
+        }
+
+        // batched: all three under one launch
+        let l0 = rt.launches();
+        let mut us: Vec<Vec<f32>> = tenants.iter().map(|t| t.0.clone()).collect();
+        let mut outs: Vec<Vec<f32>> = (0..3).map(|_| vec![0.0f32; key.nb * bl]).collect();
+        let mut parts: Vec<FusedPart<'_>> = us
+            .iter_mut()
+            .zip(outs.iter_mut())
+            .zip(tenants.iter())
+            .map(|((u, bufs_out), (_, u0, bufs_in, scal))| FusedPart {
+                u,
+                u0,
+                bufs_in,
+                scal: *scal,
+                bufs_out,
+            })
+            .collect();
+        let batched = rt.fused_batch(&key, &mut parts).unwrap();
+        drop(parts);
+        assert_eq!(rt.launches() - l0, 1, "one launch for the whole batch");
+        for i in 0..3 {
+            assert_eq!(us[i], solo[i].0, "tenant {i} state bits");
+            assert_eq!(outs[i], solo[i].1, "tenant {i} boundary bits");
+            assert_eq!(batched[i].0, solo[i].2, "tenant {i} dt bits");
+        }
+    }
+
+    #[test]
+    fn constructed_count_monotonic() {
+        let c0 = Runtime::constructed_count();
+        let _rt = runtime();
+        let _rt2 = runtime();
+        assert!(Runtime::constructed_count() >= c0 + 2);
     }
 
     #[test]

@@ -1,0 +1,629 @@
+//! Simulation-as-a-service: N independent [`HydroSim`] tenants in ONE
+//! process, sharing ONE compiled-artifact [`Runtime`] and ONE worker pool.
+//!
+//! The paper's central throughput lever is packing — batching blocks into
+//! one kernel launch so the launch overhead amortizes (Sec. 3.6 / Fig. 8).
+//! This module generalizes that across *tenants*: many small concurrent
+//! simulations are exactly the regime where launch overhead, not FLOPs,
+//! bounds throughput, so the [`Engine`]
+//!
+//! * constructs the process's single [`Runtime`] once (the `&self`
+//!   compile-once executable cache is already thread-shareable) and
+//!   injects it into every session via [`SimBuilder::runtime`] — a corrupt
+//!   artifact dir surfaces once, at engine build, not once per session;
+//! * multiplexes every live session's per-pack task lists into ONE merged
+//!   [`TaskRegion`] per RK stage ([`run_cycle_multi`]), executed on one
+//!   shared cost-weighted stealing pool, so idle workers drain whichever
+//!   tenant has work (cross-tenant steals are counted);
+//! * fuses same-shape device packs of DIFFERENT sessions into one batched
+//!   launch ([`BatchRegistry`] → [`Runtime::fused_batch`]) with per-tenant
+//!   result scatter.
+//!
+//! Every optimization is pinned: N concurrent sessions are bitwise
+//! identical (state, dt bits, checkpoint bytes) to the same N sims run
+//! sequentially, with multiplexing ([`EngineConfig::multiplex`]) and
+//! batching ([`EngineConfig::batching`]) each independently toggleable as
+//! oracles (`rust/tests/service_equivalence.rs`).
+//!
+//! [`TaskRegion`]: crate::tasks::TaskRegion
+//! [`run_cycle_multi`]: crate::driver::run_cycle_multi
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::ParameterInput;
+use crate::driver::{EvolutionDriver, HydroSim, SimBuilder};
+use crate::error::{Error, Result};
+use crate::metrics::ServiceStats;
+use crate::runtime::{ArtifactKey, FusedPart, Runtime, ScalArgs};
+use crate::util::stealing::StealPolicy;
+use crate::Real;
+
+// ---------------------------------------------------------------------------
+// Cross-simulation pack batching
+// ---------------------------------------------------------------------------
+
+/// One tenant's donated staging buffers for a batched `fused` launch: the
+/// exact per-pack arrays the solo launch would hand to
+/// [`Runtime::fused`], moved (not copied) into the rendezvous and moved
+/// back with the results.
+pub(crate) struct FusedParcel {
+    pub u: Vec<Real>,
+    pub u0: Vec<Real>,
+    pub bufs_in: Vec<Real>,
+    pub bufs_out: Vec<Real>,
+    pub scal: ScalArgs,
+}
+
+/// Per-slot rendezvous state of one [`BatchGroup`].
+#[derive(Default)]
+struct GroupState {
+    /// Enlisting sim (slot-indexed) — a group must span ≥ 2 distinct sims
+    /// to stay active past [`BatchRegistry::seal`].
+    sims: Vec<u32>,
+    parcels: Vec<Option<FusedParcel>>,
+    results: Vec<Option<(FusedParcel, Vec<Real>, f64)>>,
+    arrived: usize,
+    launched: bool,
+    /// Launcher-observed failure, re-surfaced to every other participant
+    /// (the stage aborts; nobody waits on a launch that never completed).
+    error: Option<String>,
+}
+
+/// Rendezvous for ONE batched launch: every same-[`ArtifactKey`] device
+/// pack enlisted this stage posts its staging parcel, and whichever
+/// participant polls last runs ONE [`Runtime::fused_batch`] over the whole
+/// group, scattering per-slot results.
+pub(crate) struct BatchGroup {
+    key: ArtifactKey,
+    /// Number of enlisted slots, fixed at [`BatchRegistry::seal`].
+    need: AtomicUsize,
+    /// False until sealed, and forever for groups that did not span ≥ 2
+    /// distinct sims (their tickets are inert — the pack launches solo, so
+    /// a single-session engine is bitwise the plain run by construction).
+    active: AtomicBool,
+    state: Mutex<GroupState>,
+}
+
+impl BatchGroup {
+    /// Whether tickets into this group route through the rendezvous at
+    /// all. Checked per launch task; false before seal and for dissolved
+    /// (single-sim) groups.
+    pub(crate) fn is_active(&self) -> bool {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Donate one slot's staging buffers. Called exactly once per ticket
+    /// (the launch task tracks `posted`).
+    pub(crate) fn post(&self, slot: usize, parcel: FusedParcel) {
+        let mut st = self.state.lock().unwrap();
+        debug_assert!(st.parcels[slot].is_none(), "double post on batch slot");
+        st.parcels[slot] = Some(parcel);
+        st.arrived += 1;
+    }
+
+    /// One poll of the rendezvous: `Ok(None)` while co-batched packs are
+    /// still arriving (the task returns `Incomplete` and the worker sweeps
+    /// on), the poll that finds everyone arrived runs the single fused
+    /// launch, and every participant then reclaims its own
+    /// (parcel, per-block dts, per-part seconds).
+    pub(crate) fn try_collect(
+        &self,
+        rt: &Runtime,
+        slot: usize,
+    ) -> Result<Option<(FusedParcel, Vec<Real>, f64)>> {
+        let mut st = self.state.lock().unwrap();
+        if let Some(msg) = &st.error {
+            return Err(Error::Runtime(format!("batched launch failed: {msg}")));
+        }
+        if !st.launched {
+            if st.arrived < self.need.load(Ordering::SeqCst) {
+                return Ok(None);
+            }
+            // Everyone arrived: take the parcels in slot order and run the
+            // whole group under ONE launch. Holding the group lock briefly
+            // blocks the other participants' polls — they would only spin
+            // Incomplete anyway until the results land.
+            let mut parcels: Vec<FusedParcel> = st
+                .parcels
+                .iter_mut()
+                .map(|p| p.take().expect("all slots posted"))
+                .collect();
+            let mut parts: Vec<FusedPart<'_>> = parcels
+                .iter_mut()
+                .map(|p| FusedPart {
+                    u: &mut p.u,
+                    u0: &p.u0,
+                    bufs_in: &p.bufs_in,
+                    scal: p.scal,
+                    bufs_out: &mut p.bufs_out,
+                })
+                .collect();
+            match rt.fused_batch(&self.key, &mut parts) {
+                Ok(out) => {
+                    drop(parts);
+                    for (res, (parcel, (dts, secs))) in
+                        st.results.iter_mut().zip(parcels.into_iter().zip(out))
+                    {
+                        *res = Some((parcel, dts, secs));
+                    }
+                    st.launched = true;
+                }
+                Err(e) => {
+                    st.error = Some(e.to_string());
+                    return Err(e);
+                }
+            }
+        }
+        Ok(st.results[slot].take())
+    }
+}
+
+/// One pack's membership in a [`BatchGroup`], handed to the device launch
+/// task via `DevPackCtx::batch`.
+pub(crate) struct BatchTicket {
+    pub(crate) group: Arc<BatchGroup>,
+    pub(crate) slot: usize,
+    /// Whether this ticket's parcel was already donated (the launch task
+    /// polls repeatedly; the donation happens on the first poll only).
+    pub(crate) posted: bool,
+}
+
+/// Per-stage registry of batch groups, keyed by [`ArtifactKey`] (kind +
+/// block geometry + pack size + kernel impl — parts of one batch are
+/// buffer-layout identical by construction, and `pallas`/`jnp` tenants
+/// never mix). Built during stage pass 1, sealed before any task runs.
+pub(crate) struct BatchRegistry {
+    groups: HashMap<ArtifactKey, Arc<BatchGroup>>,
+}
+
+impl BatchRegistry {
+    pub(crate) fn new() -> BatchRegistry {
+        BatchRegistry { groups: HashMap::new() }
+    }
+
+    /// Enlist one device pack of simulation `sim` into the group for
+    /// `key`, creating the group on first sight. The returned ticket is
+    /// inert until [`BatchRegistry::seal`] activates its group.
+    pub(crate) fn enlist(&mut self, key: ArtifactKey, sim: u32) -> BatchTicket {
+        let group = self
+            .groups
+            .entry(key.clone())
+            .or_insert_with(|| {
+                Arc::new(BatchGroup {
+                    key,
+                    need: AtomicUsize::new(0),
+                    active: AtomicBool::new(false),
+                    state: Mutex::new(GroupState::default()),
+                })
+            });
+        let mut st = group.state.lock().unwrap();
+        let slot = st.sims.len();
+        st.sims.push(sim);
+        st.parcels.push(None);
+        st.results.push(None);
+        drop(st);
+        BatchTicket { group: Arc::clone(group), slot, posted: false }
+    }
+
+    /// Fix every group's membership: `need` = enlisted slots, and only
+    /// groups spanning ≥ 2 DISTINCT sims activate — a single-sim group
+    /// dissolves (tickets stay inert, packs launch solo), so every
+    /// surviving batch is genuinely cross-tenant and a one-session engine
+    /// runs bit-for-bit like a plain sim.
+    pub(crate) fn seal(&mut self) {
+        for g in self.groups.values() {
+            let st = g.state.lock().unwrap();
+            let n = st.sims.len();
+            let mut distinct = st.sims.clone();
+            distinct.sort_unstable();
+            distinct.dedup();
+            g.need.store(n, Ordering::SeqCst);
+            g.active.store(n >= 2 && distinct.len() >= 2, Ordering::SeqCst);
+        }
+    }
+
+    /// (batched launches, launches saved) across every group that actually
+    /// ran: each batch of `need` packs cost ONE launch instead of `need`.
+    pub(crate) fn harvest(&self) -> (u64, u64) {
+        let (mut batched, mut saved) = (0u64, 0u64);
+        for g in self.groups.values() {
+            if !g.is_active() {
+                continue;
+            }
+            let st = g.state.lock().unwrap();
+            if st.launched {
+                batched += 1;
+                saved += (g.need.load(Ordering::SeqCst) as u64).saturating_sub(1);
+            }
+        }
+        (batched, saved)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine / Session
+// ---------------------------------------------------------------------------
+
+/// Cross-tenant counters harvested by the stage multiplexer
+/// ([`crate::driver::run_stage_multi`]) and folded into
+/// [`ServiceStats`] by [`Engine::stats`].
+#[derive(Default)]
+pub struct ServiceCounters {
+    pub batched_launches: AtomicU64,
+    pub launches_saved: AtomicU64,
+    pub cross_sim_steals: AtomicU64,
+}
+
+/// The engine's global worker-pool shape, injected into every session via
+/// [`SimBuilder::pool`] (so solo-stepped sessions schedule identically)
+/// and passed to the merged stage region as the worker override.
+pub struct SharedPool {
+    pub nworkers: usize,
+    pub policy: StealPolicy,
+}
+
+impl SharedPool {
+    /// `nworkers = 0` resolves to the machine's parallelism exactly like
+    /// `parthenon/exec nworkers = 0` does for a solo run.
+    pub fn new(nworkers: usize, policy: StealPolicy) -> SharedPool {
+        let nworkers = if nworkers > 0 {
+            nworkers
+        } else {
+            crate::util::num_workers(usize::MAX, 1)
+        };
+        SharedPool { nworkers, policy }
+    }
+}
+
+/// Engine construction knobs. The two `bool`s are the oracle toggles of
+/// the service equivalence suite: with both off, [`Engine::run`] is
+/// N sequential solo runs that merely share the runtime.
+pub struct EngineConfig {
+    /// Shared pool width (0 = auto, like `parthenon/exec nworkers`).
+    pub nworkers: usize,
+    /// Shared pool schedule (overrides every session's deck).
+    pub sched: StealPolicy,
+    /// Run every live session's cycle through ONE merged task region
+    /// (false = step sessions one at a time, the sequential oracle).
+    pub multiplex: bool,
+    /// Fuse same-shape device packs of different sessions into one launch
+    /// (requires `multiplex`; false = every pack launches solo).
+    pub batching: bool,
+    /// Artifact directory for the single shared [`Runtime`] (`None` =
+    /// [`crate::runtime::default_artifact_dir`]).
+    pub artifact_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        EngineConfig {
+            nworkers: 0,
+            sched: StealPolicy::Heaviest,
+            multiplex: true,
+            batching: true,
+            artifact_dir: None,
+        }
+    }
+}
+
+/// One tenant: a [`HydroSim`] built against the engine's shared runtime
+/// and pool. Public so tests and benches can inspect the final state.
+pub struct Session {
+    pub sim: HydroSim,
+}
+
+/// The multi-tenant simulation service: one process, one [`Runtime`], one
+/// worker pool, N sessions. See the module docs for the ownership story.
+pub struct Engine {
+    rt: Arc<Runtime>,
+    pool: SharedPool,
+    counters: ServiceCounters,
+    sessions: Vec<Session>,
+    multiplex: bool,
+    batching: bool,
+}
+
+/// Per-session engine take-out for one multiplexed cycle (the same
+/// host/device take-dance `HydroSim::step` performs, held across all
+/// sessions at once so the merged region can borrow every sim).
+struct TakenEngines {
+    host: Option<crate::driver::HostExec>,
+    dev: Option<crate::driver::DeviceState>,
+    dt: Real,
+    live: bool,
+}
+
+impl Engine {
+    /// Build the engine — and with it the process's ONE [`Runtime`]. A
+    /// corrupt artifact dir fails here, once, before any session exists.
+    pub fn new(cfg: EngineConfig) -> Result<Engine> {
+        let dir = cfg
+            .artifact_dir
+            .clone()
+            .unwrap_or_else(crate::runtime::default_artifact_dir);
+        let rt = Arc::new(Runtime::new(dir)?);
+        Ok(Engine {
+            rt,
+            pool: SharedPool::new(cfg.nworkers, cfg.sched),
+            counters: ServiceCounters::default(),
+            sessions: Vec::new(),
+            multiplex: cfg.multiplex,
+            batching: cfg.batching,
+        })
+    }
+
+    /// Attach a tenant: build its sim with the shared runtime and pool
+    /// injected ([`SimBuilder`]); returns the session index.
+    pub fn add_session(&mut self, pin: ParameterInput) -> Result<usize> {
+        let sim = SimBuilder::new(pin)
+            .runtime(Arc::clone(&self.rt))
+            .pool(&self.pool)
+            .build()?;
+        self.sessions.push(Session { sim });
+        Ok(self.sessions.len() - 1)
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.rt
+    }
+
+    pub fn pool(&self) -> &SharedPool {
+        &self.pool
+    }
+
+    pub fn sessions(&self) -> &[Session] {
+        &self.sessions
+    }
+
+    pub fn sessions_mut(&mut self) -> &mut [Session] {
+        &mut self.sessions
+    }
+
+    pub fn session(&self, i: usize) -> &Session {
+        &self.sessions[i]
+    }
+
+    /// Cross-tenant accounting so far (sessions attached, batched
+    /// launches, launches saved, cross-sim steals).
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            sessions_live: self.sessions.len() as u64,
+            batched_launches: self.counters.batched_launches.load(Ordering::SeqCst),
+            launches_saved: self.counters.launches_saved.load(Ordering::SeqCst),
+            cross_sim_steals: self.counters.cross_sim_steals.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Advance every still-running session by one cycle. Multiplexed mode
+    /// runs them all through ONE merged region ([`run_cycle_multi`]);
+    /// otherwise each steps solo (the sequential oracle — identical code
+    /// path to a plain `sim.step()`). Returns false once every session
+    /// has finished.
+    ///
+    /// [`run_cycle_multi`]: crate::driver::run_cycle_multi
+    pub fn step(&mut self) -> Result<bool> {
+        if !self.sessions.iter().any(|s| s.sim.running()) {
+            return Ok(false);
+        }
+        if !self.multiplex {
+            for sess in &mut self.sessions {
+                if sess.sim.running() {
+                    sess.sim.step()?;
+                    sess.sim.maybe_output(false)?;
+                }
+            }
+            return Ok(true);
+        }
+        let t0 = std::time::Instant::now();
+        // Take every live session's engines out (exactly the solo step's
+        // take-dance, across all sessions) so the merged region's contexts
+        // can borrow each sim alongside its engines.
+        let mut first_err: Option<Error> = None;
+        let mut taken: Vec<TakenEngines> = Vec::with_capacity(self.sessions.len());
+        for sess in &mut self.sessions {
+            let mut live = first_err.is_none() && sess.sim.running();
+            let mut dt: Real = 0.0;
+            if live {
+                match sess.sim.pre_step() {
+                    Ok(v) => dt = v,
+                    Err(e) => {
+                        first_err = Some(e);
+                        live = false;
+                    }
+                }
+            }
+            taken.push(TakenEngines {
+                host: if live { sess.sim.host.take() } else { None },
+                dev: if live { sess.sim.device.take() } else { None },
+                dt,
+                live,
+            });
+        }
+        let result = if first_err.is_none() {
+            let shared = crate::driver::StageShared {
+                workers: Some((self.pool.nworkers, self.pool.policy)),
+                batching: self.batching,
+                svc: Some(&self.counters),
+            };
+            let mut slots: Vec<crate::driver::SimSlot<'_>> =
+                Vec::with_capacity(taken.len());
+            for (sess, tk) in self.sessions.iter_mut().zip(taken.iter_mut()) {
+                if tk.live {
+                    slots.push(crate::driver::SimSlot {
+                        sim: &mut sess.sim,
+                        host: tk.host.as_mut(),
+                        dev: tk.dev.as_mut(),
+                        dt: tk.dt,
+                    });
+                }
+            }
+            crate::driver::run_cycle_multi(&mut slots, &shared)
+        } else {
+            Ok(())
+        };
+        // Restore engines on every path, including errors.
+        for (sess, tk) in self.sessions.iter_mut().zip(taken.iter_mut()) {
+            if tk.live {
+                sess.sim.host = tk.host.take();
+                sess.sim.device = tk.dev.take();
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        result?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        for (sess, tk) in self.sessions.iter_mut().zip(taken.iter()) {
+            if tk.live {
+                sess.sim.post_step(elapsed)?;
+                sess.sim.maybe_output(false)?;
+            }
+        }
+        Ok(true)
+    }
+
+    /// Run every session to completion (the service analog of
+    /// [`crate::driver::Driver::execute`], outputs included).
+    pub fn run(&mut self) -> Result<()> {
+        for sess in &mut self.sessions {
+            sess.sim.maybe_output(true)?;
+        }
+        while self.step()? {}
+        for sess in &mut self.sessions {
+            sess.sim.maybe_output(true)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifact_dir;
+    use crate::NHYDRO;
+
+    fn key() -> ArtifactKey {
+        ArtifactKey::new("fused", 2, [8, 8, 1], 2)
+    }
+
+    #[test]
+    fn single_sim_group_dissolves_at_seal() {
+        let mut reg = BatchRegistry::new();
+        let t0 = reg.enlist(key(), 0);
+        let t1 = reg.enlist(key(), 0);
+        assert!(!t0.group.is_active(), "inert before seal");
+        reg.seal();
+        assert!(!t0.group.is_active(), "one sim, two packs: dissolved");
+        assert!(!t1.group.is_active());
+        assert_eq!(reg.harvest(), (0, 0));
+    }
+
+    #[test]
+    fn cross_sim_group_activates_and_slots_are_ordered() {
+        let mut reg = BatchRegistry::new();
+        let t0 = reg.enlist(key(), 0);
+        let t1 = reg.enlist(key(), 1);
+        let t2 = reg.enlist(key(), 1);
+        assert_eq!((t0.slot, t1.slot, t2.slot), (0, 1, 2));
+        assert!(Arc::ptr_eq(&t0.group, &t1.group), "same key, same group");
+        reg.seal();
+        assert!(t0.group.is_active(), "two sims: active");
+        // not launched yet: nothing harvested
+        assert_eq!(reg.harvest(), (0, 0));
+    }
+
+    #[test]
+    fn distinct_keys_never_share_a_group() {
+        let mut reg = BatchRegistry::new();
+        let other = ArtifactKey::new("fused", 2, [8, 8, 1], 4); // nb differs
+        let t0 = reg.enlist(key(), 0);
+        let t1 = reg.enlist(other, 1);
+        assert!(!Arc::ptr_eq(&t0.group, &t1.group));
+        reg.seal();
+        assert!(!t0.group.is_active(), "each group is single-sim");
+        assert!(!t1.group.is_active());
+    }
+
+    #[test]
+    fn rendezvous_launches_once_and_matches_solo_bits() {
+        let rt = Runtime::new(default_artifact_dir()).unwrap();
+        let k = key();
+        let ne = Runtime::block_elems(&k);
+        let bl = Runtime::buflen(&k);
+        let mk = |seed: f32| {
+            let ncell = ne / NHYDRO;
+            let mut u = vec![0.0f32; k.nb * ne];
+            for b in 0..k.nb {
+                for c in 0..ncell {
+                    u[b * ne + c] = 1.0 + 0.01 * seed * (c % 7) as f32;
+                    u[b * ne + 4 * ncell + c] = 2.5 + 0.001 * seed;
+                }
+            }
+            let bufs_in = vec![1.0f32; k.nb * bl];
+            let scal = ScalArgs {
+                g0: 0.5,
+                g1: 0.5,
+                beta: 0.5,
+                dt: 1e-3 * seed,
+                dx: [0.05; 3],
+                gamma: 1.4,
+            };
+            FusedParcel {
+                u: u.clone(),
+                u0: u,
+                bufs_in,
+                bufs_out: vec![0.0f32; k.nb * bl],
+                scal,
+            }
+        };
+
+        // solo reference for both tenants
+        let solo: Vec<_> = [1.0f32, 2.0]
+            .iter()
+            .map(|&s| {
+                let mut p = mk(s);
+                let dts = rt
+                    .fused(&k, &mut p.u, &p.u0, &p.bufs_in, p.scal, &mut p.bufs_out)
+                    .unwrap();
+                (p, dts)
+            })
+            .collect();
+
+        let mut reg = BatchRegistry::new();
+        let mut t0 = reg.enlist(k.clone(), 0);
+        let mut t1 = reg.enlist(k.clone(), 1);
+        reg.seal();
+        assert!(t0.group.is_active());
+
+        t0.group.post(t0.slot, mk(1.0));
+        assert!(
+            t0.group.try_collect(&rt, t0.slot).unwrap().is_none(),
+            "waits for the co-batched tenant"
+        );
+        t1.group.post(t1.slot, mk(2.0));
+        let l0 = rt.launches();
+        let (p0, d0, _) = t0.group.try_collect(&rt, t0.slot).unwrap().unwrap();
+        assert_eq!(rt.launches() - l0, 1, "one launch for the whole batch");
+        let (p1, d1, _) = t1.group.try_collect(&rt, t1.slot).unwrap().unwrap();
+        assert_eq!(rt.launches() - l0, 1, "collect does not relaunch");
+        t0.posted = true;
+        t1.posted = true;
+
+        assert_eq!(p0.u, solo[0].0.u, "tenant 0 state bits");
+        assert_eq!(p0.bufs_out, solo[0].0.bufs_out, "tenant 0 boundary bits");
+        assert_eq!(d0, solo[0].1, "tenant 0 dt bits");
+        assert_eq!(p1.u, solo[1].0.u, "tenant 1 state bits");
+        assert_eq!(d1, solo[1].1, "tenant 1 dt bits");
+        assert_eq!(reg.harvest(), (1, 1), "one batch of two: one launch saved");
+    }
+
+    #[test]
+    fn shared_pool_resolves_auto_width() {
+        let p = SharedPool::new(0, StealPolicy::Heaviest);
+        assert!(p.nworkers >= 1);
+        let p4 = SharedPool::new(4, StealPolicy::NoSteal);
+        assert_eq!(p4.nworkers, 4);
+    }
+}

@@ -127,6 +127,12 @@ pub struct RegionInstr<'a> {
     pub spaces: &'a [u8],
     /// Incremented once per cross-space steal.
     pub cross_steals: &'a std::sync::atomic::AtomicU64,
+    /// One tenant (simulation) label per task list, for multi-session
+    /// regions. `None` disables cross-sim attribution entirely.
+    pub sims: Option<&'a [u32]>,
+    /// Incremented once per steal of a list whose sim label differs from
+    /// the stealing worker's home sim (the sim of its first seeded list).
+    pub cross_sim_steals: Option<&'a std::sync::atomic::AtomicU64>,
 }
 
 /// A regional (cross-list) task: runs once after every (list, task) mark
@@ -337,6 +343,11 @@ impl<C> TaskRegion<C> {
             let my_space = instr.and_then(|ins| {
                 pool.seeded(w).iter().map(|&li| ins.spaces[li]).find(|&s| s != 255)
             });
+            // home tenant = sim label of the first seeded list (sim labels
+            // have no wildcard: every list belongs to exactly one session)
+            let my_sim = instr
+                .and_then(|ins| ins.sims)
+                .and_then(|sims| pool.seeded(w).first().map(|&li| sims[li]));
             // idle bookkeeping shared by the None-claim and no-progress arms
             let idle = |backoff: &mut Backoff, watchdog: &mut Deadline, seen: &mut u64| {
                 let p = progress.load(Ordering::SeqCst);
@@ -376,6 +387,15 @@ impl<C> TaskRegion<C> {
                         let s = ins.spaces[li];
                         if s != 255 && s != ms {
                             ins.cross_steals.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                    if let (Some(ins), Some(msim)) = (instr, my_sim) {
+                        if let (Some(sims), Some(ctr)) =
+                            (ins.sims, ins.cross_sim_steals)
+                        {
+                            if sims[li] != msim {
+                                ctr.fetch_add(1, Ordering::SeqCst);
+                            }
                         }
                     }
                 }
@@ -810,7 +830,12 @@ mod tests {
                     2,
                     StealPolicy::Heaviest,
                     Duration::from_secs(30),
-                    Some(RegionInstr { spaces: &spaces, cross_steals: &cross }),
+                    Some(RegionInstr {
+                        spaces: &spaces,
+                        cross_steals: &cross,
+                        sims: None,
+                        cross_sim_steals: None,
+                    }),
                 )
                 .unwrap();
             assert_eq!(done.load(Ordering::SeqCst), 8);

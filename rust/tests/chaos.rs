@@ -16,7 +16,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use parthenon::comm::{ReduceOp, World};
-use parthenon::config::ParameterInput;
+use parthenon::config::{Override, ParameterInput};
 use parthenon::driver::{run_recoverable, Driver, HydroSim};
 use parthenon::error::Error;
 use parthenon::metrics::FaultStats;
@@ -153,19 +153,19 @@ fn kill_and_recover_is_bitwise_identical() {
     let _ = std::fs::remove_dir_all(&dir_faulty);
     let _ = std::fs::remove_dir_all(&dir_clean);
     let deck = deck();
-    let base = |dir: &std::path::Path| -> Vec<String> {
+    let base = |dir: &std::path::Path| -> Vec<Override> {
         vec![
-            "parthenon/time/nlim=20".to_string(),
-            "parthenon/job/checkpoint_interval=5".to_string(),
-            format!("parthenon/job/out_dir={}", dir.to_str().unwrap()),
+            Override::new("parthenon/time", "nlim", 20),
+            Override::new("parthenon/job", "checkpoint_interval", 5),
+            Override::new("parthenon/job", "out_dir", dir.to_str().unwrap()),
         ]
     };
 
     // killed at cycle 12: the durable checkpoint is cycle 10, so recovery
     // replays cycles 11..20 from restored state
     let mut faulty = base(&dir_faulty);
-    faulty.push("parthenon/fault/kill_rank=1".to_string());
-    faulty.push("parthenon/fault/kill_cycle=12".to_string());
+    faulty.push(Override::new("parthenon/fault", "kill_rank", 1));
+    faulty.push(Override::new("parthenon/fault", "kill_cycle", 12));
     let rep = run_recoverable(&deck, &faulty, p, 3).unwrap();
     assert_eq!(rep.attempts, 2, "exactly one relaunch: {:?}", rep.failures);
     assert_eq!(rep.restored, 1, "relaunch must restore from the checkpoint");

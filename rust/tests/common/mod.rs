@@ -6,7 +6,7 @@
 
 use parthenon::comm::World;
 use parthenon::config::ParameterInput;
-use parthenon::driver::HydroSim;
+use parthenon::driver::{HydroSim, SimBuilder};
 use parthenon::hydro::CONS;
 
 /// Build an input deck string.
@@ -30,7 +30,7 @@ pub fn single_rank_sim(deck: &str, overrides: &[&str]) -> HydroSim {
     for ov in overrides {
         pin.apply_override(ov).unwrap();
     }
-    HydroSim::new(pin, 0, world).unwrap()
+    SimBuilder::new(pin).rank(0).world(world).build().unwrap()
 }
 
 /// Gather every local block's CONS data (gid -> INTERIOR data).

@@ -9,6 +9,7 @@
 
 mod common;
 
+use parthenon::driver::EvolutionDriver;
 use parthenon::runtime::{default_artifact_dir, ArtifactKey, Runtime, ScalArgs};
 
 /// Run `deck` single-rank for `steps`; return (gid -> interior CONS, dt).

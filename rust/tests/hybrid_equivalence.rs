@@ -14,7 +14,7 @@ use std::sync::{Arc, Mutex};
 
 use parthenon::comm::World;
 use parthenon::config::ParameterInput;
-use parthenon::driver::HydroSim;
+use parthenon::driver::{EvolutionDriver, HydroSim};
 use parthenon::error::Error;
 
 /// Tests share process-global state (the `PARTHENON_ARTIFACTS` env var,

@@ -1,0 +1,323 @@
+//! Simulation-as-a-service (`parthenon::service::Engine`): N concurrent
+//! sessions multiplexed onto one shared runtime + worker pool must be
+//! bitwise identical to the same N sims run sequentially — final interior
+//! state, dt bits, AND checkpoint bytes — across schedulers, worker
+//! counts, batching on/off, and mixed uniform/multilevel tenants. A
+//! forced-skew run must actually fuse cross-sim launches and steal across
+//! the tenant boundary ([`ServiceStats`]), and exactly ONE [`Runtime`] may
+//! be constructed per engine, no matter how many sessions attach.
+//!
+//! [`ServiceStats`]: parthenon::metrics::ServiceStats
+//! [`Runtime`]: parthenon::runtime::Runtime
+
+mod common;
+
+use std::sync::Mutex;
+
+use parthenon::config::ParameterInput;
+use parthenon::driver::EvolutionDriver;
+use parthenon::error::Error;
+use parthenon::runtime::Runtime;
+use parthenon::service::{Engine, EngineConfig};
+use parthenon::util::stealing::StealPolicy;
+
+/// Tests share process-global state (the `PARTHENON_ARTIFACTS` env var,
+/// the process-wide Runtime construction counter) — serialize them; a
+/// poisoned lock is still a valid gate.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// (gid -> interior CONS, dt bits, checkpoint bytes) of one finished sim.
+type Fingerprint = (Vec<(usize, Vec<f32>)>, u64, Vec<u8>);
+
+fn fingerprint(sim: &mut parthenon::driver::HydroSim, tag: &str) -> Fingerprint {
+    let tmp = std::env::temp_dir().join(format!("parthenon_svc_eq_{tag}.pbin"));
+    let tmp_s = tmp.to_str().unwrap().to_string();
+    sim.write_restart(&tmp_s).unwrap(); // syncs device staging back first
+    let bytes = std::fs::read(&tmp).unwrap();
+    let _ = std::fs::remove_file(&tmp);
+    (common::cons_by_gid(sim), sim.dt.to_bits(), bytes)
+}
+
+fn assert_identical(tag: &str, solo: &Fingerprint, svc: &Fingerprint) {
+    assert_eq!(
+        common::max_state_diff(&solo.0, &svc.0),
+        0.0,
+        "{tag}: final state must be bitwise identical"
+    );
+    assert_eq!(svc.1, solo.1, "{tag}: dt bits must be identical");
+    assert_eq!(svc.2, solo.2, "{tag}: checkpoint bytes must be identical");
+}
+
+/// Tenant spec: a deck plus its overrides, applied to a fresh pin.
+fn pin_for(deck: &str, overrides: &[String]) -> ParameterInput {
+    let mut pin = ParameterInput::from_str(deck).unwrap();
+    for ov in overrides {
+        pin.apply_override(ov).unwrap();
+    }
+    pin
+}
+
+/// The sequential oracle: run each tenant alone for `steps` cycles.
+fn run_sequential(tenants: &[(String, Vec<String>)], steps: usize, tag: &str) -> Vec<Fingerprint> {
+    tenants
+        .iter()
+        .enumerate()
+        .map(|(i, (deck, ovr))| {
+            let ovs: Vec<&str> = ovr.iter().map(|s| s.as_str()).collect();
+            let mut sim = common::single_rank_sim(deck, &ovs);
+            for _ in 0..steps {
+                sim.step().unwrap();
+            }
+            fingerprint(&mut sim, &format!("{tag}_solo{i}"))
+        })
+        .collect()
+}
+
+/// The service engine: same tenants, one process, `steps` merged cycles.
+fn run_engine(
+    tenants: &[(String, Vec<String>)],
+    cfg: EngineConfig,
+    steps: usize,
+    tag: &str,
+) -> (Vec<Fingerprint>, parthenon::metrics::ServiceStats) {
+    let mut engine = Engine::new(cfg).unwrap();
+    for (deck, ovr) in tenants {
+        engine.add_session(pin_for(deck, ovr)).unwrap();
+    }
+    for _ in 0..steps {
+        assert!(engine.step().unwrap(), "sessions still running");
+    }
+    let fps = engine
+        .sessions_mut()
+        .iter_mut()
+        .enumerate()
+        .map(|(i, s)| fingerprint(&mut s.sim, &format!("{tag}_svc{i}")))
+        .collect();
+    (fps, engine.stats())
+}
+
+fn exec_ovr(space: &str, pack: usize) -> Vec<String> {
+    vec![
+        format!("parthenon/exec/space={space}"),
+        format!("parthenon/exec/strategy=perpack"),
+        format!("parthenon/exec/pack_size={pack}"),
+    ]
+}
+
+#[test]
+fn two_sessions_match_sequential_across_sched_workers_batching() {
+    let _g = lock();
+    // Two device tenants with the SAME block geometry and pack size (so
+    // same-key batching can fire) but different mesh sizes (so the merged
+    // region is genuinely skewed).
+    let tenants = vec![
+        (
+            common::input_deck("kh", [32, 32, 1], [8, 8, 1], ""),
+            exec_ovr("device", 2),
+        ),
+        (
+            common::input_deck("blast", [16, 16, 1], [8, 8, 1], ""),
+            exec_ovr("device", 2),
+        ),
+    ];
+    let solo = run_sequential(&tenants, 4, "two");
+    for (sname, sched) in [("static", StealPolicy::NoSteal), ("stealing", StealPolicy::Heaviest)] {
+        for nw in [1usize, 4] {
+            for batching in [false, true] {
+                let cfg = EngineConfig {
+                    nworkers: nw,
+                    sched,
+                    multiplex: true,
+                    batching,
+                    artifact_dir: None,
+                };
+                let (got, stats) =
+                    run_engine(&tenants, cfg, 4, &format!("two_{sname}_{nw}_{batching}"));
+                for (i, (s, g)) in solo.iter().zip(got.iter()).enumerate() {
+                    assert_identical(
+                        &format!("tenant {i} sched={sname} nw={nw} batching={batching}"),
+                        s,
+                        g,
+                    );
+                }
+                assert_eq!(stats.sessions_live, 2);
+                if !batching {
+                    assert_eq!(
+                        stats.batched_launches, 0,
+                        "batching off must never fuse launches"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn multiplex_off_is_the_sequential_oracle() {
+    let _g = lock();
+    let tenants = vec![
+        (
+            common::input_deck("kh", [32, 32, 1], [8, 8, 1], ""),
+            exec_ovr("host", 2),
+        ),
+        (
+            common::input_deck("blast", [16, 16, 1], [8, 8, 1], ""),
+            exec_ovr("device", 2),
+        ),
+    ];
+    let solo = run_sequential(&tenants, 4, "mux_off");
+    let cfg = EngineConfig {
+        multiplex: false,
+        batching: false,
+        ..EngineConfig::default()
+    };
+    let (got, stats) = run_engine(&tenants, cfg, 4, "mux_off");
+    for (i, (s, g)) in solo.iter().zip(got.iter()).enumerate() {
+        assert_identical(&format!("multiplex-off tenant {i}"), s, g);
+    }
+    assert_eq!(stats.batched_launches, 0);
+    assert_eq!(stats.cross_sim_steals, 0);
+}
+
+#[test]
+fn eight_mixed_sessions_match_sequential() {
+    let _g = lock();
+    if !common::multi_rank_enabled() {
+        return; // heavyweight lane runs in the multi-rank CI step
+    }
+    // 8 tenants mixing execution spaces, problems, and mesh hierarchies:
+    // six uniform (host and device alternating) plus one multilevel device
+    // tenant (general mode — excluded from batching by construction) and
+    // one multilevel host tenant.
+    let ml_extra = "\n<parthenon/mesh>\nrefinement = static\nnumlevel = 2\n\n\
+                    <parthenon/static_refinement0>\nlevel = 1\n\
+                    x1min = 0.3\nx1max = 0.7\nx2min = 0.3\nx2max = 0.7\n";
+    let mut tenants = Vec::new();
+    for i in 0..6 {
+        let space = if i % 2 == 0 { "device" } else { "host" };
+        let problem = if i % 3 == 0 { "kh" } else { "blast" };
+        tenants.push((
+            common::input_deck(problem, [16, 16, 1], [8, 8, 1], ""),
+            exec_ovr(space, 2),
+        ));
+    }
+    tenants.push((
+        common::input_deck("blast", [16, 16, 1], [4, 4, 1], ml_extra),
+        exec_ovr("device", 2),
+    ));
+    tenants.push((
+        common::input_deck("blast", [16, 16, 1], [4, 4, 1], ml_extra),
+        exec_ovr("host", 2),
+    ));
+    let solo = run_sequential(&tenants, 3, "eight");
+    let cfg = EngineConfig {
+        nworkers: 4,
+        sched: StealPolicy::Heaviest,
+        multiplex: true,
+        batching: true,
+        artifact_dir: None,
+    };
+    let (got, stats) = run_engine(&tenants, cfg, 3, "eight");
+    for (i, (s, g)) in solo.iter().zip(got.iter()).enumerate() {
+        assert_identical(&format!("8-tenant mix, tenant {i}"), s, g);
+    }
+    assert_eq!(stats.sessions_live, 8);
+    // the six same-shape uniform device tenants guarantee fused launches
+    assert!(stats.batched_launches >= 1, "{stats:?}");
+}
+
+#[test]
+fn forced_skew_batches_cross_sim_and_steals_cross_tenant() {
+    let _g = lock();
+    // One big and one small device tenant with identical block geometry:
+    // every stage, their same-key packs rendezvous into ONE fused launch
+    // (4x pack-count skew), and with stealing workers the tenant boundary
+    // must be crossed. Exactly ONE Runtime may be constructed for the
+    // whole engine, sessions included.
+    let tenants = vec![
+        (
+            common::input_deck("kh", [64, 64, 1], [8, 8, 1], ""),
+            exec_ovr("device", 2),
+        ),
+        (
+            common::input_deck("blast", [32, 32, 1], [8, 8, 1], ""),
+            exec_ovr("device", 2),
+        ),
+    ];
+    let cfg = EngineConfig {
+        nworkers: 2,
+        sched: StealPolicy::Heaviest,
+        multiplex: true,
+        batching: true,
+        artifact_dir: None,
+    };
+    let rt0 = Runtime::constructed_count();
+    let mut engine = Engine::new(cfg).unwrap();
+    for (deck, ovr) in &tenants {
+        engine.add_session(pin_for(deck, ovr)).unwrap();
+    }
+    assert_eq!(
+        Runtime::constructed_count() - rt0,
+        1,
+        "one engine, N sessions: exactly one Runtime"
+    );
+    for _ in 0..12 {
+        assert!(engine.step().unwrap());
+    }
+    let stats = engine.stats();
+    assert_eq!(stats.sessions_live, 2);
+    assert!(
+        stats.batched_launches >= 1,
+        "same-key cross-sim packs must fuse: {stats:?}"
+    );
+    assert!(
+        stats.launches_saved >= 1,
+        "every fused batch of n packs saves n-1 launches: {stats:?}"
+    );
+    assert!(
+        stats.cross_sim_steals >= 1,
+        "idle workers must steal across the tenant boundary: {stats:?}"
+    );
+    // A single-session engine must never fuse: its same-key packs form a
+    // single-sim group, which dissolves at seal (solo launches only).
+    let cfg1 = EngineConfig {
+        nworkers: 2,
+        sched: StealPolicy::Heaviest,
+        multiplex: true,
+        batching: true,
+        artifact_dir: None,
+    };
+    let mut one = Engine::new(cfg1).unwrap();
+    one.add_session(pin_for(&tenants[1].0, &tenants[1].1)).unwrap();
+    for _ in 0..3 {
+        assert!(one.step().unwrap());
+    }
+    let s1 = one.stats();
+    assert_eq!(s1.batched_launches, 0, "single-sim groups must dissolve: {s1:?}");
+    assert_eq!(s1.cross_sim_steals, 0, "one tenant: nothing to steal across");
+}
+
+#[test]
+fn corrupt_artifact_dir_fails_once_at_engine_build() {
+    let _g = lock();
+    // The bugfix satellite: the shared Runtime is constructed ONCE by the
+    // engine, so a corrupt artifact dir surfaces there — a structured
+    // error before any session exists, not N panics inside rank threads.
+    let dir = std::env::temp_dir().join("parthenon_svc_eq_badmanifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), b"{ this is not json").unwrap();
+    let cfg = EngineConfig {
+        artifact_dir: Some(dir.clone()),
+        ..EngineConfig::default()
+    };
+    let err = Engine::new(cfg).err().expect("corrupt manifest must fail the build");
+    assert!(
+        matches!(err, Error::Runtime(_) | Error::Artifact(_) | Error::Json(_)),
+        "corrupt manifest must surface as a structured error, got {err:?}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
